@@ -1,0 +1,193 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts + manifest.json.
+
+Python runs ONCE (`make artifacts`); the Rust coordinator loads the HLO
+text through the PJRT C API and never touches Python again.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Dynamic meshes vs static AOT shapes: every kernel is lowered at a ladder of
+element-count BUCKETS; the Rust Map stage pads element batches with
+degenerate (zero-volume) elements up to the next bucket — zero contribution
+by construction (tested in test_kernels.py and rust/tests/).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels import local_assembly as ker
+
+#: Element-count buckets for the Map-stage artifacts.
+BUCKETS = [256, 2048, 16384, 131072]
+
+#: 3D isotropic elasticity at E=1, ν=0.3 (paper §B.1.1).
+LAM_3D = 0.3 / (1.3 * 0.4)  # ν E /((1+ν)(1−2ν)) = 0.576923
+MU_3D = 1.0 / (2.0 * 1.3)  # E /(2(1+ν))        = 0.384615
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def kernel_specs(buckets):
+    """(name, fn, arg_specs, meta) for every Map-stage artifact."""
+    specs = []
+    for e in buckets:
+        specs += [
+            (
+                f"poisson2d_local_E{e}",
+                lambda c, r: (ker.poisson2d(c, r),),
+                [("coords", f32(e, 3, 2)), ("rho", f32(e, 3))],
+                {"kind": "poisson2d_local", "bucket": e, "k": 3, "dim": 2, "kl": 3},
+            ),
+            (
+                f"poisson3d_local_E{e}",
+                lambda c, r: (ker.poisson3d(c, r),),
+                [("coords", f32(e, 4, 3)), ("rho", f32(e, 4))],
+                {"kind": "poisson3d_local", "bucket": e, "k": 4, "dim": 3, "kl": 4},
+            ),
+            (
+                f"load2d_local_E{e}",
+                lambda c, f: (ker.load2d(c, f),),
+                [("coords", f32(e, 3, 2)), ("f", f32(e, 3))],
+                {"kind": "load2d_local", "bucket": e, "k": 3, "dim": 2, "kl": 3},
+            ),
+            (
+                f"load3d_local_E{e}",
+                lambda c, f: (ker.load3d(c, f),),
+                [("coords", f32(e, 4, 3)), ("f", f32(e, 4))],
+                {"kind": "load3d_local", "bucket": e, "k": 4, "dim": 3, "kl": 4},
+            ),
+            (
+                f"mass2d_local_E{e}",
+                lambda c, r: (ker.mass2d(c, r),),
+                [("coords", f32(e, 3, 2)), ("rho", f32(e, 3))],
+                {"kind": "mass2d_local", "bucket": e, "k": 3, "dim": 2, "kl": 3},
+            ),
+            (
+                f"mass3d_local_E{e}",
+                lambda c, r: (ker.mass3d(c, r),),
+                [("coords", f32(e, 4, 3)), ("rho", f32(e, 4))],
+                {"kind": "mass3d_local", "bucket": e, "k": 4, "dim": 3, "kl": 4},
+            ),
+            (
+                f"elasticity3d_local_E{e}",
+                lambda c, m: (ker.elasticity3d(c, m, LAM_3D, MU_3D),),
+                [("coords", f32(e, 4, 3)), ("emod", f32(e, 4))],
+                {
+                    "kind": "elasticity3d_local",
+                    "bucket": e,
+                    "k": 4,
+                    "dim": 3,
+                    "kl": 12,
+                    "lambda": LAM_3D,
+                    "mu": MU_3D,
+                },
+            ),
+            (
+                f"elasticity2d_q4_local_E{e}",
+                lambda c, m: (ker.elasticity2d_q4(c, m, LAM_3D, MU_3D),),
+                [("coords", f32(e, 4, 2)), ("emod", f32(e, 4))],
+                {
+                    "kind": "elasticity2d_q4_local",
+                    "bucket": e,
+                    "k": 4,
+                    "dim": 2,
+                    "kl": 8,
+                    "lambda": LAM_3D,
+                    "mu": MU_3D,
+                },
+            ),
+        ]
+    return specs
+
+
+def lower_one(name, fn, args, meta, out_dir):
+    arg_structs = [spec for (_, spec) in args]
+    lowered = jax.jit(fn).lower(*arg_structs)
+    text = to_hlo_text(lowered)
+    path = out_dir / f"{name}.hlo.txt"
+    path.write_text(text)
+    entry = {
+        "file": path.name,
+        "inputs": [
+            {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)} for (n, s) in args
+        ],
+        "outputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)}
+            for s in jax.eval_shape(fn, *arg_structs)
+        ],
+        **meta,
+    }
+    return entry
+
+
+def build_kernel_artifacts(out_dir: pathlib.Path, buckets) -> dict:
+    manifest = {}
+    for name, fn, args, meta in kernel_specs(buckets):
+        manifest[name] = lower_one(name, fn, args, meta, out_dir)
+        print(f"  lowered {name}", file=sys.stderr)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--only",
+        default="all",
+        choices=["all", "kernels", "models", "oplearn"],
+        help="subset of artifacts to build",
+    )
+    ap.add_argument(
+        "--buckets",
+        default=",".join(str(b) for b in BUCKETS),
+        help="comma-separated element buckets",
+    )
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    buckets = [int(b) for b in args.buckets.split(",") if b]
+
+    manifest_path = out_dir / "manifest.json"
+    manifest = {}
+    if manifest_path.exists():
+        manifest = json.loads(manifest_path.read_text())
+
+    artifacts = manifest.get("artifacts", {})
+    if args.only in ("all", "kernels"):
+        artifacts.update(build_kernel_artifacts(out_dir, buckets))
+    if args.only in ("all", "models"):
+        from . import models_aot
+
+        artifacts.update(models_aot.build_model_artifacts(out_dir))
+    if args.only in ("all", "oplearn"):
+        from . import oplearn_aot
+
+        artifacts.update(oplearn_aot.build_oplearn_artifacts(out_dir))
+
+    manifest = {"buckets": buckets, "artifacts": artifacts}
+    manifest_path.write_text(json.dumps(manifest, indent=1, sort_keys=True))
+    print(f"wrote {len(artifacts)} artifacts + manifest to {out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

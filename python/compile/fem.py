@@ -1,0 +1,94 @@
+"""Build-time FEM tables shared by the Pallas kernels, the jnp oracle and
+the AOT lowering: reference-element gradients and quadrature rules.
+
+These mirror `rust/src/fem/{reference,quadrature}.rs` exactly (same
+reference cells, same rules); pytest cross-checks the invariants and the
+Rust integration tests check the executed artifacts against the native Map
+stage, closing the loop.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# --- Reference P1 gradients (constant over the simplex) -------------------
+
+#: ∇φ̂ on the reference triangle {x,y≥0, x+y≤1}, shape (3, 2).
+GRAD_TRI = np.array([[-1.0, -1.0], [1.0, 0.0], [0.0, 1.0]])
+
+#: ∇φ̂ on the reference tetrahedron, shape (4, 3).
+GRAD_TET = np.array(
+    [[-1.0, -1.0, -1.0], [1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]]
+)
+
+# --- Quadrature (weights sum to the reference measure) ---------------------
+
+#: Degree-2 rule on the reference triangle: 3 points, weights 1/6.
+TRI_QPOINTS = np.array([[1 / 6, 1 / 6], [2 / 3, 1 / 6], [1 / 6, 2 / 3]])
+TRI_QWEIGHTS = np.full(3, 1 / 6)
+
+#: Degree-2 rule on the reference tetrahedron: 4 points, weights 1/24.
+_a = (5.0 - np.sqrt(5.0)) / 20.0
+_b = (5.0 + 3.0 * np.sqrt(5.0)) / 20.0
+TET_QPOINTS = np.array(
+    [[_b, _a, _a], [_a, _b, _a], [_a, _a, _b], [_a, _a, _a]]
+)
+TET_QWEIGHTS = np.full(4, 1 / 24)
+
+#: 2×2 Gauss rule on [0,1]² (Q4 elements).
+_g = 0.5 - 0.5 / np.sqrt(3.0)
+QUAD_QPOINTS = np.array(
+    [[_g, _g], [1 - _g, _g], [_g, 1 - _g], [1 - _g, 1 - _g]]
+)
+QUAD_QWEIGHTS = np.full(4, 0.25)
+
+
+def p1_basis_tri(points: np.ndarray) -> np.ndarray:
+    """P1 triangle basis values at reference points, shape (Q, 3)."""
+    x, y = points[:, 0], points[:, 1]
+    return np.stack([1.0 - x - y, x, y], axis=1)
+
+
+def p1_basis_tet(points: np.ndarray) -> np.ndarray:
+    """P1 tetrahedron basis values at reference points, shape (Q, 4)."""
+    x, y, z = points[:, 0], points[:, 1], points[:, 2]
+    return np.stack([1.0 - x - y - z, x, y, z], axis=1)
+
+
+def q1_basis(points: np.ndarray) -> np.ndarray:
+    """Q1 quadrilateral basis values at reference points, shape (Q, 4).
+
+    CCW node ordering (0,0),(1,0),(1,1),(0,1) — matches Rust's Q1Quad.
+    """
+    x, y = points[:, 0], points[:, 1]
+    return np.stack([(1 - x) * (1 - y), x * (1 - y), x * y, (1 - x) * y], axis=1)
+
+
+def q1_grads(points: np.ndarray) -> np.ndarray:
+    """Q1 basis gradients at reference points, shape (Q, 4, 2)."""
+    x, y = points[:, 0], points[:, 1]
+    gx = np.stack([-(1 - y), (1 - y), y, -y], axis=1)
+    gy = np.stack([-(1 - x), -x, x, (1 - x)], axis=1)
+    return np.stack([gx, gy], axis=2)
+
+
+def element_tables(kind: str):
+    """Return (ref_grads_or_none, qpoints, qweights, basis_vals, k, d).
+
+    `kind` ∈ {tri, tet, quad}. For simplices ref grads are constant (k, d);
+    for quads they vary per quadrature point (Q, 4, 2).
+    """
+    if kind == "tri":
+        return GRAD_TRI, TRI_QPOINTS, TRI_QWEIGHTS, p1_basis_tri(TRI_QPOINTS), 3, 2
+    if kind == "tet":
+        return GRAD_TET, TET_QPOINTS, TET_QWEIGHTS, p1_basis_tet(TET_QPOINTS), 4, 3
+    if kind == "quad":
+        return (
+            q1_grads(QUAD_QPOINTS),
+            QUAD_QPOINTS,
+            QUAD_QWEIGHTS,
+            q1_basis(QUAD_QPOINTS),
+            4,
+            2,
+        )
+    raise ValueError(f"unknown element kind {kind!r}")

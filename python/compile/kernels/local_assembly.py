@@ -1,0 +1,303 @@
+"""Layer-1 Pallas kernels: the Batch-Map stage of TensorGalerkin.
+
+Each kernel computes a block of local element matrices/vectors entirely in
+VMEM-resident tiles: the grid runs over blocks of the *element* axis (the
+TPU analogue of the paper's CUDA batched-einsum decomposition — see
+DESIGN.md §3 Hardware adaptation), and each grid step performs the full
+quadrature contraction of Eq. (7) for its block with small dense ops.
+
+Implementation notes:
+
+* `interpret=True` everywhere — the CPU PJRT plugin cannot execute Mosaic
+  custom-calls, so kernels are lowered through the interpreter to plain
+  HLO. This preserves the *structure* under test (O(1) graph nodes, block
+  schedule); real-TPU performance is estimated in DESIGN.md §Perf.
+* Pallas kernel bodies may not capture constant *arrays*; all reference
+  tables (quadrature weights, basis values, reference gradients) enter as
+  Python scalars unrolled at trace time — `Q, k ≤ 4`, so the unrolled
+  contraction is still one fused kernel.
+* All kernels are f32 on the artifact path; the Rust native Map stage is
+  f64 and the two are cross-checked in `rust/tests/`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .. import fem
+
+#: Elements per grid step. VMEM estimate per block (f32 words):
+#: coords BE·k·d + coeff BE·Q + out BE·kl² ≲ 128·(12+4+144) ≈ 82 KiB for the
+#: heaviest (elasticity3d) kernel — comfortably under a TPU core's ~16 MiB.
+DEFAULT_BLOCK = 128
+
+
+# --- In-kernel geometry helpers (no captured constant arrays!) --------------
+
+
+def _tri_geometry(x):
+    """P1 triangle geometry for a coords block (BE,3,2).
+
+    Returns (g, adet): physical gradients as a list of 3 tensors (BE,2),
+    and |det J| (BE,). Uses G₀ = −(J⁻ᵀe₁ + J⁻ᵀe₂), G₁, G₂ = rows of J⁻¹.
+    """
+    e1 = x[:, 1, :] - x[:, 0, :]
+    e2 = x[:, 2, :] - x[:, 0, :]
+    det = e1[:, 0] * e2[:, 1] - e1[:, 1] * e2[:, 0]
+    adet = jnp.abs(det)
+    bad = adet < 1e-30
+    invd = jnp.where(bad, 0.0, 1.0 / jnp.where(bad, 1.0, det))
+    # J = [e1 | e2] columns; rows of J⁻¹ (= reciprocal basis):
+    r1 = jnp.stack([e2[:, 1], -e2[:, 0]], axis=-1) * invd[:, None]
+    r2 = jnp.stack([-e1[:, 1], e1[:, 0]], axis=-1) * invd[:, None]
+    g = [-(r1 + r2), r1, r2]
+    return g, adet
+
+
+def _tet_geometry(x):
+    """P1 tetrahedron geometry for (BE,4,3): list of 4 gradients + |det|."""
+    e1 = x[:, 1, :] - x[:, 0, :]
+    e2 = x[:, 2, :] - x[:, 0, :]
+    e3 = x[:, 3, :] - x[:, 0, :]
+
+    def cross(a, b):
+        return jnp.stack(
+            [
+                a[:, 1] * b[:, 2] - a[:, 2] * b[:, 1],
+                a[:, 2] * b[:, 0] - a[:, 0] * b[:, 2],
+                a[:, 0] * b[:, 1] - a[:, 1] * b[:, 0],
+            ],
+            axis=-1,
+        )
+
+    c23 = cross(e2, e3)
+    det = jnp.sum(e1 * c23, axis=-1)
+    adet = jnp.abs(det)
+    bad = adet < 1e-30
+    invd = jnp.where(bad, 0.0, 1.0 / jnp.where(bad, 1.0, det))
+    r1 = c23 * invd[:, None]
+    r2 = cross(e3, e1) * invd[:, None]
+    r3 = cross(e1, e2) * invd[:, None]
+    g = [-(r1 + r2 + r3), r1, r2, r3]
+    return g, adet
+
+
+def _stack_local(rows, k):
+    """Stack k lists of k (BE,) tensors into (BE,k,k)."""
+    return jnp.stack([jnp.stack(r, axis=-1) for r in rows], axis=-2)
+
+
+def _stiffness_body(geometry, weights, coords_ref, rho_ref, out_ref):
+    """Poisson stiffness: K_ab = (Σq ŵq ρq)·|det|·G_a·G_b."""
+    g, adet = geometry(coords_ref[...])
+    rho = rho_ref[...]
+    c = adet * sum(float(w) * rho[:, q] for q, w in enumerate(weights))
+    k = len(g)
+    rows = [[c * jnp.sum(g[a] * g[b], axis=-1) for b in range(k)] for a in range(k)]
+    out_ref[...] = _stack_local(rows, k)
+
+
+def _load_body(geometry, basis, weights, coords_ref, f_ref, out_ref):
+    """Load: F_a = |det| Σq ŵq f_q φ̂_a(q). basis is a (Q,k) numpy table."""
+    _, adet = geometry(coords_ref[...])
+    f = f_ref[...]
+    k = basis.shape[1]
+    cols = []
+    for a in range(k):
+        acc = sum(float(weights[q]) * float(basis[q, a]) * f[:, q] for q in range(len(weights)))
+        cols.append(adet * acc)
+    out_ref[...] = jnp.stack(cols, axis=-1)
+
+
+def _mass_body(geometry, basis, weights, coords_ref, rho_ref, out_ref):
+    """Mass: M_ab = |det| Σq ŵq ρq φ̂_a φ̂_b."""
+    _, adet = geometry(coords_ref[...])
+    rho = rho_ref[...]
+    k = basis.shape[1]
+    nq = len(weights)
+    rows = []
+    for a in range(k):
+        row = []
+        for b in range(k):
+            acc = sum(
+                float(weights[q]) * float(basis[q, a]) * float(basis[q, b]) * rho[:, q]
+                for q in range(nq)
+            )
+            row.append(adet * acc)
+        rows.append(row)
+    out_ref[...] = _stack_local(rows, k)
+
+
+def _elasticity_simplex_body(geometry, weights, lam, mu, d, coords_ref, emod_ref, out_ref):
+    """Vector P1 simplex elasticity:
+    K[(a,i),(b,j)] = scale · (λ G_ai G_bj + μ (G_aj G_bi + δ_ij G_a·G_b)).
+    """
+    g, adet = geometry(coords_ref[...])
+    emod = emod_ref[...]
+    scale = adet * sum(float(w) * emod[:, q] for q, w in enumerate(weights))
+    k = len(g)
+    rows = []
+    for a in range(k):
+        for i in range(d):
+            row = []
+            for b in range(k):
+                dots = jnp.sum(g[a] * g[b], axis=-1)
+                for j in range(d):
+                    v = lam * g[a][:, i] * g[b][:, j] + mu * g[a][:, j] * g[b][:, i]
+                    if i == j:
+                        v = v + mu * dots
+                    row.append(scale * v)
+            rows.append(row)
+    out_ref[...] = _stack_local(rows, k * d)
+
+
+def _elasticity_q4_body(lam, mu, grads_tab, weights, coords_ref, emod_ref, out_ref):
+    """Q4 plane elasticity with 2×2 Gauss; Jacobian varies per q.
+
+    `grads_tab` is the (Q,4,2) numpy table of reference gradients, unrolled
+    to scalars at trace time.
+    """
+    x = coords_ref[...]
+    emod = emod_ref[...]
+    nq = len(weights)
+    acc = None
+    for q in range(nq):
+        # J[r,c] = Σ_a x[:,a,r]·ĝ[q,a,c] with scalar ĝ entries.
+        j = [[None, None], [None, None]]
+        for r in range(2):
+            for c in range(2):
+                j[r][c] = sum(float(grads_tab[q, a, c]) * x[:, a, r] for a in range(4))
+        det = j[0][0] * j[1][1] - j[0][1] * j[1][0]
+        adet = jnp.abs(det)
+        bad = adet < 1e-30
+        invd = jnp.where(bad, 0.0, 1.0 / jnp.where(bad, 1.0, det))
+        # rows of J⁻¹: [[ j11, -j01], [-j10, j00]]·invd
+        jinv = [
+            [j[1][1] * invd, -j[0][1] * invd],
+            [-j[1][0] * invd, j[0][0] * invd],
+        ]
+        # G[a,r] = Σ_c ĝ[q,a,c]·J⁻¹[c][r]
+        g = []
+        for a in range(4):
+            g.append(
+                [
+                    sum(float(grads_tab[q, a, c]) * jinv[c][r] for c in range(2))
+                    for r in range(2)
+                ]
+            )
+        scale = adet * emod[:, q] * float(weights[q])
+        rows = []
+        for a in range(4):
+            for i in range(2):
+                row = []
+                for b in range(4):
+                    dots = g[a][0] * g[b][0] + g[a][1] * g[b][1]
+                    for jj in range(2):
+                        v = lam * g[a][i] * g[b][jj] + mu * g[a][jj] * g[b][i]
+                        if i == jj:
+                            v = v + mu * dots
+                        row.append(scale * v)
+                rows.append(row)
+        kq = _stack_local(rows, 8)
+        acc = kq if acc is None else acc + kq
+    out_ref[...] = acc
+
+
+# --- pallas_call wrappers ---------------------------------------------------
+
+
+def _call(body, coords, coeff, k, d, out_local, block):
+    """Grid over element blocks; all operands tiled on the element axis.
+
+    `out_local` is the trailing local size: 0 → vector output (E, k),
+    else matrix output (E, out_local, out_local).
+    """
+    e = coords.shape[0]
+    assert e % block == 0, f"element count {e} not divisible by block {block}"
+    q = coeff.shape[1]
+    if out_local:
+        out_shape = (e, out_local, out_local)
+        out_spec = pl.BlockSpec((block, out_local, out_local), lambda i: (i, 0, 0))
+    else:
+        out_shape = (e, k)
+        out_spec = pl.BlockSpec((block, k), lambda i: (i, 0))
+    return pl.pallas_call(
+        body,
+        grid=(e // block,),
+        in_specs=[
+            pl.BlockSpec((block, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, q), lambda i: (i, 0)),
+        ],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(out_shape, coords.dtype),
+        interpret=True,
+    )(coords, coeff)
+
+
+def poisson2d(coords, rho, block=DEFAULT_BLOCK):
+    """coords (E,3,2), rho (E,3) → K_local (E,3,3)."""
+    body = functools.partial(_stiffness_body, _tri_geometry, fem.TRI_QWEIGHTS)
+    return _call(body, coords, rho, 3, 2, 3, block)
+
+
+def poisson3d(coords, rho, block=DEFAULT_BLOCK):
+    """coords (E,4,3), rho (E,4) → K_local (E,4,4)."""
+    body = functools.partial(_stiffness_body, _tet_geometry, fem.TET_QWEIGHTS)
+    return _call(body, coords, rho, 4, 3, 4, block)
+
+
+def load2d(coords, f, block=DEFAULT_BLOCK):
+    """coords (E,3,2), f (E,3) → F_local (E,3)."""
+    body = functools.partial(
+        _load_body, _tri_geometry, fem.p1_basis_tri(fem.TRI_QPOINTS), fem.TRI_QWEIGHTS
+    )
+    return _call(body, coords, f, 3, 2, 0, block)
+
+
+def load3d(coords, f, block=DEFAULT_BLOCK):
+    """coords (E,4,3), f (E,4) → F_local (E,4)."""
+    body = functools.partial(
+        _load_body, _tet_geometry, fem.p1_basis_tet(fem.TET_QPOINTS), fem.TET_QWEIGHTS
+    )
+    return _call(body, coords, f, 4, 3, 0, block)
+
+
+def mass2d(coords, rho, block=DEFAULT_BLOCK):
+    """coords (E,3,2), rho (E,3) → M_local (E,3,3)."""
+    body = functools.partial(
+        _mass_body, _tri_geometry, fem.p1_basis_tri(fem.TRI_QPOINTS), fem.TRI_QWEIGHTS
+    )
+    return _call(body, coords, rho, 3, 2, 3, block)
+
+
+def mass3d(coords, rho, block=DEFAULT_BLOCK):
+    """coords (E,4,3), rho (E,4) → M_local (E,4,4)."""
+    body = functools.partial(
+        _mass_body, _tet_geometry, fem.p1_basis_tet(fem.TET_QPOINTS), fem.TET_QWEIGHTS
+    )
+    return _call(body, coords, rho, 4, 3, 4, block)
+
+
+def elasticity3d(coords, emod, lam, mu, block=DEFAULT_BLOCK):
+    """coords (E,4,3), emod (E,4) → K_local (E,12,12). λ, μ static."""
+    body = functools.partial(
+        _elasticity_simplex_body, _tet_geometry, fem.TET_QWEIGHTS, float(lam), float(mu), 3
+    )
+    return _call(body, coords, emod, 4, 3, 12, block)
+
+
+def elasticity2d_q4(coords, emod, lam, mu, block=DEFAULT_BLOCK):
+    """coords (E,4,2), emod (E,4) → K_local (E,8,8). λ, μ static."""
+    body = functools.partial(
+        _elasticity_q4_body,
+        float(lam),
+        float(mu),
+        np.asarray(fem.q1_grads(fem.QUAD_QPOINTS)),
+        fem.QUAD_QWEIGHTS,
+    )
+    return _call(body, coords, emod, 4, 2, 8, block)

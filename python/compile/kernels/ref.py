@@ -1,0 +1,196 @@
+"""Pure-jnp correctness oracle for the Batch-Map kernels.
+
+Implements Eq. (7)/(A.12) as literal batched einsum contractions with no
+Pallas, no tiling and no cleverness — the ground truth the Pallas kernels
+(and, transitively, the PJRT artifacts executed from Rust) are validated
+against in pytest.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .. import fem
+
+
+def det2(j):
+    """Batched 2×2 determinant (…, 2, 2) → (…)."""
+    return j[..., 0, 0] * j[..., 1, 1] - j[..., 0, 1] * j[..., 1, 0]
+
+
+def inv2(j, det):
+    """Closed-form batched 2×2 inverse (no LAPACK custom-calls — the
+    xla_extension 0.5.1 runtime rejects typed-FFI custom-call HLO)."""
+    invd = 1.0 / det
+    row0 = jnp.stack([j[..., 1, 1], -j[..., 0, 1]], axis=-1)
+    row1 = jnp.stack([-j[..., 1, 0], j[..., 0, 0]], axis=-1)
+    return jnp.stack([row0, row1], axis=-2) * invd[..., None, None]
+
+
+def det3(j):
+    """Batched 3×3 determinant."""
+    return (
+        j[..., 0, 0] * (j[..., 1, 1] * j[..., 2, 2] - j[..., 1, 2] * j[..., 2, 1])
+        - j[..., 0, 1] * (j[..., 1, 0] * j[..., 2, 2] - j[..., 1, 2] * j[..., 2, 0])
+        + j[..., 0, 2] * (j[..., 1, 0] * j[..., 2, 1] - j[..., 1, 1] * j[..., 2, 0])
+    )
+
+
+def inv3(j, det):
+    """Closed-form batched 3×3 inverse via the adjugate."""
+    c = lambda a, b, p, q: j[..., a, p] * j[..., b, q] - j[..., a, q] * j[..., b, p]
+    adj = jnp.stack(
+        [
+            jnp.stack([c(1, 2, 1, 2), -c(0, 2, 1, 2), c(0, 1, 1, 2)], axis=-1),
+            jnp.stack([-c(1, 2, 0, 2), c(0, 2, 0, 2), -c(0, 1, 0, 2)], axis=-1),
+            jnp.stack([c(1, 2, 0, 1), -c(0, 2, 0, 1), c(0, 1, 0, 1)], axis=-1),
+        ],
+        axis=-2,
+    )
+    return adj / det[..., None, None]
+
+
+def _batched_det_inv(jac):
+    """Dispatch closed-form det/inv on the trailing square dimension."""
+    d = jac.shape[-1]
+    if d == 2:
+        det = det2(jac)
+        return det, inv2(jac, jnp.where(jnp.abs(det) < 1e-30, 1.0, det))
+    if d == 3:
+        det = det3(jac)
+        return det, inv3(jac, jnp.where(jnp.abs(det) < 1e-30, 1.0, det))
+    raise ValueError(f"unsupported dimension {d}")
+
+
+def _simplex_geometry(coords, grad_ref):
+    """Batched P1 simplex geometry.
+
+    coords: (E, k, d); grad_ref: (k, d) constant reference gradients.
+    Returns (G, adet) with G (E, k, d) physical gradients, adet (E,) |det J|.
+    """
+    grad_ref = jnp.asarray(grad_ref, coords.dtype)
+    # J[e, r, c] = Σ_a coords[e, a, r] · grad_ref[a, c]
+    jac = jnp.einsum("ear,ac->erc", coords, grad_ref)
+    det, inv = _batched_det_inv(jac)
+    adet = jnp.abs(det)
+    # G_a = J^{-T} ĝ_a  ⇔  G[e,a,r] = Σ_c inv[e,c,r] ĝ[a,c]
+    g = jnp.einsum("ecr,ac->ear", inv, grad_ref)
+    g = jnp.where(adet[:, None, None] < 1e-30, 0.0, g)
+    return g, adet
+
+
+def local_stiffness_simplex(coords, rho_q, grad_ref, weights):
+    """Local Poisson stiffness (Eq. A.12): K_eab = Σ_q ŵ_q ρ_eq |detJ| G_a·G_b.
+
+    coords (E,k,d), rho_q (E,Q) → (E,k,k).
+    """
+    g, adet = _simplex_geometry(coords, grad_ref)
+    w = jnp.asarray(weights, coords.dtype)
+    c = adet * jnp.einsum("eq,q->e", rho_q, w)  # (E,)
+    return c[:, None, None] * jnp.einsum("ead,ebd->eab", g, g)
+
+
+def local_load_simplex(coords, f_q, basis, weights):
+    """Local load vector (Eq. A.12): F_ea = Σ_q ŵ_q f_eq |detJ| φ̂_a(x̂_q)."""
+    grad_ref = fem.GRAD_TRI if coords.shape[1] == 3 else fem.GRAD_TET
+    _, adet = _simplex_geometry(coords, grad_ref)
+    w = jnp.asarray(weights, coords.dtype)
+    phi = jnp.asarray(basis, coords.dtype)  # (Q, k)
+    return adet[:, None] * jnp.einsum("eq,q,qa->ea", f_q, w, phi)
+
+
+def local_mass_simplex(coords, rho_q, basis, weights):
+    """Local mass matrix: M_eab = Σ_q ŵ_q ρ_eq |detJ| φ̂_a φ̂_b."""
+    grad_ref = fem.GRAD_TRI if coords.shape[1] == 3 else fem.GRAD_TET
+    _, adet = _simplex_geometry(coords, grad_ref)
+    w = jnp.asarray(weights, coords.dtype)
+    phi = jnp.asarray(basis, coords.dtype)
+    return adet[:, None, None] * jnp.einsum("eq,q,qa,qb->eab", rho_q, w, phi, phi)
+
+
+def local_elasticity_simplex(coords, emod_q, lam, mu, grad_ref, weights):
+    """Local isotropic elasticity stiffness, vector P1 on simplices.
+
+    K[(a,i),(b,j)] = scale · (λ G_ai G_bj + μ (G_aj G_bi + δ_ij G_a·G_b))
+    with scale = Σ_q ŵ_q E_eq |detJ|. Returns (E, k·d, k·d).
+    """
+    g, adet = _simplex_geometry(coords, grad_ref)
+    e, k, d = g.shape
+    w = jnp.asarray(weights, coords.dtype)
+    scale = adet * jnp.einsum("eq,q->e", emod_q, w)
+    t_lam = lam * jnp.einsum("eai,ebj->eaibj", g, g)
+    t_mu1 = mu * jnp.einsum("eaj,ebi->eaibj", g, g)
+    dots = jnp.einsum("ead,ebd->eab", g, g)
+    eye = jnp.eye(d, dtype=coords.dtype)
+    t_mu2 = mu * jnp.einsum("eab,ij->eaibj", dots, eye)
+    full = (t_lam + t_mu1 + t_mu2) * scale[:, None, None, None, None]
+    return full.reshape(e, k * d, k * d)
+
+
+def local_elasticity_q4(coords, emod_q, lam, mu):
+    """Local Q4 elasticity stiffness with 2×2 Gauss (non-constant Jacobian).
+
+    coords (E,4,2), emod_q (E,4) → (E,8,8).
+    """
+    grads = jnp.asarray(fem.q1_grads(fem.QUAD_QPOINTS), coords.dtype)  # (Q,4,2)
+    w = jnp.asarray(fem.QUAD_QWEIGHTS, coords.dtype)
+    # J[e,q,r,c] = Σ_a coords[e,a,r] grads[q,a,c]
+    jac = jnp.einsum("ear,qac->eqrc", coords, grads)
+    det, inv = _batched_det_inv(jac)
+    adet = jnp.abs(det)
+    # G[e,q,a,r] = Σ_c inv[e,q,c,r] grads[q,a,c]
+    g = jnp.einsum("eqcr,qac->eqar", inv, grads)
+    scale = adet * emod_q * w[None, :]  # (E,Q)
+    t_lam = lam * jnp.einsum("eqai,eqbj->eqaibj", g, g)
+    t_mu1 = mu * jnp.einsum("eqaj,eqbi->eqaibj", g, g)
+    dots = jnp.einsum("eqad,eqbd->eqab", g, g)
+    eye = jnp.eye(2, dtype=coords.dtype)
+    t_mu2 = mu * jnp.einsum("eqab,ij->eqaibj", dots, eye)
+    full = jnp.einsum("eqaibj,eq->eaibj", t_lam + t_mu1 + t_mu2, scale)
+    ne = coords.shape[0]
+    return full.reshape(ne, 8, 8)
+
+
+# --- Convenience wrappers matching the artifact signatures -----------------
+
+
+def poisson2d(coords, rho_q):
+    return local_stiffness_simplex(coords, rho_q, fem.GRAD_TRI, fem.TRI_QWEIGHTS)
+
+
+def poisson3d(coords, rho_q):
+    return local_stiffness_simplex(coords, rho_q, fem.GRAD_TET, fem.TET_QWEIGHTS)
+
+
+def load2d(coords, f_q):
+    return local_load_simplex(coords, f_q, fem.p1_basis_tri(fem.TRI_QPOINTS), fem.TRI_QWEIGHTS)
+
+
+def load3d(coords, f_q):
+    return local_load_simplex(coords, f_q, fem.p1_basis_tet(fem.TET_QPOINTS), fem.TET_QWEIGHTS)
+
+
+def mass2d(coords, rho_q):
+    return local_mass_simplex(coords, rho_q, fem.p1_basis_tri(fem.TRI_QPOINTS), fem.TRI_QWEIGHTS)
+
+
+def mass3d(coords, rho_q):
+    return local_mass_simplex(coords, rho_q, fem.p1_basis_tet(fem.TET_QPOINTS), fem.TET_QWEIGHTS)
+
+
+def elasticity3d(coords, emod_q, lam, mu):
+    return local_elasticity_simplex(coords, emod_q, lam, mu, fem.GRAD_TET, fem.TET_QWEIGHTS)
+
+
+def elasticity2d_q4(coords, emod_q, lam, mu):
+    return local_elasticity_q4(coords, emod_q, lam, mu)
+
+
+def random_valid_simplices(rng: np.random.Generator, n: int, k: int, d: int, dtype=np.float32):
+    """Random non-degenerate simplices: identity simplex + bounded jitter."""
+    base = np.zeros((k, d))
+    base[1:] = np.eye(d)[: k - 1] if k - 1 <= d else None
+    coords = base[None, :, :] + 0.15 * rng.standard_normal((n, k, d))
+    shift = 2.0 * rng.standard_normal((n, 1, d))
+    return (coords + shift).astype(dtype)

@@ -1,0 +1,101 @@
+"""Python mirror of the Rust mesh generators.
+
+The model/operator-learning artifacts bake mesh *shapes* (node counts,
+element counts, CSR nnz) at lowering time, so python must generate the
+exact same topology as `rust/src/mesh/structured.rs` — same node ordering
+(row-major `j·(nx+1)+i`), same alternating-diagonal split, same L-shape
+filtering, same circle mapping. `python/tests/test_meshes.py` checks the
+invariants; the Rust integration tests validate shape agreement through the
+manifest.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def rect_tri(nx: int, ny: int, lx: float = 1.0, ly: float = 1.0):
+    """Triangulated rectangle — mirrors `structured::rect_tri`."""
+    xs = np.linspace(0.0, lx, nx + 1)
+    ys = np.linspace(0.0, ly, ny + 1)
+    pts = np.stack(np.meshgrid(xs, ys, indexing="xy"), axis=-1).reshape(-1, 2)
+
+    def nid(i, j):
+        return j * (nx + 1) + i
+
+    cells = []
+    for j in range(ny):
+        for i in range(nx):
+            a, b = nid(i, j), nid(i + 1, j)
+            c, d = nid(i + 1, j + 1), nid(i, j + 1)
+            if (i + j) % 2 == 0:
+                cells += [[a, b, c], [a, c, d]]
+            else:
+                cells += [[a, b, d], [b, c, d]]
+    return pts.astype(np.float64), np.array(cells, dtype=np.int64)
+
+
+def unit_square_tri(n: int):
+    return rect_tri(n, n, 1.0, 1.0)
+
+
+def boundary_nodes(points: np.ndarray, cells: np.ndarray) -> np.ndarray:
+    """Nodes on boundary edges (edges incident to exactly one cell)."""
+    from collections import Counter
+
+    edges = Counter()
+    for tri in cells:
+        for a, b in ((0, 1), (1, 2), (2, 0)):
+            key = tuple(sorted((int(tri[a]), int(tri[b]))))
+            edges[key] += 1
+    nodes = set()
+    for (a, b), count in edges.items():
+        if count == 1:
+            nodes.add(a)
+            nodes.add(b)
+    return np.array(sorted(nodes), dtype=np.int64)
+
+
+def lshape_tri(n: int):
+    """L-shape [0,1]² \\ (0.5,1]² — mirrors `structured::lshape_tri`
+    including the remove-unused-nodes compaction order."""
+    pts, cells = unit_square_tri(n)
+    keep = []
+    for tri in cells:
+        c = pts[tri].mean(axis=0)
+        if not (c[0] > 0.5 and c[1] > 0.5):
+            keep.append(tri)
+    cells = np.array(keep, dtype=np.int64)
+    used = np.zeros(len(pts), dtype=bool)
+    used[cells.reshape(-1)] = True
+    remap = -np.ones(len(pts), dtype=np.int64)
+    remap[used] = np.arange(used.sum())
+    return pts[used], remap[cells]
+
+
+def circle_tri(n: int, cx: float = 0.5, cy: float = 0.5, r: float = 0.5):
+    """Disk via the elliptical square→disk map — mirrors `curved::circle_tri`."""
+    pts, cells = unit_square_tri(n)
+    x = 2.0 * pts[:, 0] - 1.0
+    y = 2.0 * pts[:, 1] - 1.0
+    u = x * np.sqrt(1.0 - 0.5 * y * y)
+    v = y * np.sqrt(1.0 - 0.5 * x * x)
+    mapped = np.stack([cx + r * u, cy + r * v], axis=1)
+    return mapped, cells
+
+
+def csr_pattern(n_nodes: int, cells: np.ndarray):
+    """Symbolic CSR pattern of the Galerkin matrix (sorted unique columns
+    per row) — mirrors `Routing::build`'s pattern. Returns (rows, cols) COO
+    arrays sorted row-major, suitable for jnp segment_sum."""
+    adj = [set() for _ in range(n_nodes)]
+    for tri in cells:
+        for a in tri:
+            for b in tri:
+                adj[int(a)].add(int(b))
+    rows, cols = [], []
+    for i in range(n_nodes):
+        for j in sorted(adj[i]):
+            rows.append(i)
+            cols.append(j)
+    return np.array(rows, dtype=np.int32), np.array(cols, dtype=np.int32)

@@ -1,0 +1,210 @@
+"""Layer-2 neural models in pure JAX (SIREN, MLP, GraphSAGE-style GNN,
+DeepONet) with flat-parameter-vector calling conventions.
+
+All models take a single flat f32 parameter vector so Rust optimizers
+(Adam / L-BFGS / MMA live in `rust/src/pils/`) can treat the AOT artifact
+as a black-box `params → (loss, grad)` function. `param_spec` functions
+return the static layout used to unflatten inside the traced function.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+# --- Flat parameter utilities ------------------------------------------------
+
+
+def spec_size(spec) -> int:
+    return int(sum(int(np.prod(shape)) for shape in spec))
+
+
+def unflatten(flat, spec):
+    """Split a flat vector into arrays with the shapes listed in `spec`."""
+    out = []
+    off = 0
+    for shape in spec:
+        n = int(np.prod(shape))
+        out.append(flat[off : off + n].reshape(shape))
+        off += n
+    return out
+
+
+# --- SIREN (Sitzmann et al. 2020) --------------------------------------------
+
+
+def siren_spec(layers):
+    """Parameter spec for a SIREN MLP with the given layer widths."""
+    spec = []
+    for din, dout in zip(layers[:-1], layers[1:]):
+        spec.append((din, dout))
+        spec.append((dout,))
+    return spec
+
+
+def siren_init(rng: np.random.Generator, layers, w0: float = 30.0) -> np.ndarray:
+    """Flat f32 init following the SIREN scheme: first layer U(−1/d, 1/d),
+    later layers U(−√(6/d)/w0, √(6/d)/w0)."""
+    flats = []
+    for li, (din, dout) in enumerate(zip(layers[:-1], layers[1:])):
+        if li == 0:
+            bound = 1.0 / din
+        else:
+            bound = np.sqrt(6.0 / din) / w0
+        w = rng.uniform(-bound, bound, (din, dout))
+        b = rng.uniform(-bound, bound, (dout,))
+        flats += [w.reshape(-1), b]
+    return np.concatenate(flats).astype(np.float32)
+
+
+def siren_apply(flat, x, layers, w0: float = 30.0):
+    """SIREN forward: x (..., din) → (..., dout). Sine activations with the
+    ω0 frequency on every hidden layer (Eq. B.11-13)."""
+    params = unflatten(flat, siren_spec(layers))
+    h = x
+    n_layers = len(layers) - 1
+    for li in range(n_layers):
+        w, b = params[2 * li], params[2 * li + 1]
+        h = h @ w + b
+        if li < n_layers - 1:
+            h = jnp.sin(w0 * h)
+    return h
+
+
+# --- Plain MLP (tanh) — PI-DeepONet branch/trunk -----------------------------
+
+
+def mlp_spec(layers):
+    return siren_spec(layers)
+
+
+def mlp_init(rng: np.random.Generator, layers) -> np.ndarray:
+    """Glorot-uniform init."""
+    flats = []
+    for din, dout in zip(layers[:-1], layers[1:]):
+        bound = np.sqrt(6.0 / (din + dout))
+        flats += [rng.uniform(-bound, bound, (din, dout)).reshape(-1), np.zeros(dout)]
+    return np.concatenate(flats).astype(np.float32)
+
+
+def mlp_apply(flat, x, layers):
+    params = unflatten(flat, mlp_spec(layers))
+    h = x
+    n_layers = len(layers) - 1
+    for li in range(n_layers):
+        w, b = params[2 * li], params[2 * li + 1]
+        h = h @ w + b
+        if li < n_layers - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+# --- AGN: encoder / GraphSAGE processor / decoder (§B.3.2) --------------------
+
+
+def agn_spec(in_dim, hidden, out_dim, n_mp, kfreq):
+    """Spec: frequency-enhanced encoder MLP, `n_mp` GraphSAGE layers
+    (self + neighbor weights), decoder MLP."""
+    enc_in = (in_dim) * (1 + 2 * kfreq) + 2  # features ⊕ sin/cos ladder ⊕ xy
+    spec = []
+    spec += [(enc_in, hidden), (hidden,)]
+    for _ in range(n_mp):
+        spec += [(hidden, hidden), (hidden, hidden), (hidden,)]  # W_self, W_neigh, b
+    spec += [(hidden, hidden), (hidden,), (hidden, out_dim), (out_dim,)]
+    return spec
+
+
+def agn_init(rng: np.random.Generator, in_dim, hidden, out_dim, n_mp, kfreq) -> np.ndarray:
+    flats = []
+    for shape in agn_spec(in_dim, hidden, out_dim, n_mp, kfreq):
+        if len(shape) == 2:
+            bound = np.sqrt(6.0 / (shape[0] + shape[1]))
+            flats.append(rng.uniform(-bound, bound, shape).reshape(-1))
+        else:
+            flats.append(np.zeros(shape))
+    return np.concatenate(flats).astype(np.float32)
+
+
+def frequency_features(x, kfreq):
+    """Eq. (B.20): X ⊕ sin(X/K)…sin(KX) ⊕ cos ladder."""
+    feats = [x]
+    for k in range(1, kfreq + 1):
+        feats += [jnp.sin(k * x), jnp.cos(k * x)]
+    return jnp.concatenate(feats, axis=-1)
+
+
+def agn_apply(flat, node_feats, coords, edge_src, edge_dst, deg_inv, cfg):
+    """AGN forward.
+
+    node_feats (N, in_dim) — the window of previous states;
+    coords (N, 2); edge_src/edge_dst (Eg,) int32 directed edges;
+    deg_inv (N,) 1/in-degree. Returns (N, out_dim) bundled updates.
+    """
+    in_dim, hidden, out_dim, n_mp, kfreq = (
+        cfg["in_dim"],
+        cfg["hidden"],
+        cfg["out_dim"],
+        cfg["n_mp"],
+        cfg["kfreq"],
+    )
+    params = unflatten(flat, agn_spec(in_dim, hidden, out_dim, n_mp, kfreq))
+    i = 0
+
+    def take(n):
+        nonlocal i
+        out = params[i : i + n]
+        i += n
+        return out
+
+    (w_enc, b_enc) = take(2)
+    h = jnp.concatenate([frequency_features(node_feats, kfreq), coords], axis=-1)
+    h = jnp.tanh(h @ w_enc + b_enc)
+    n = h.shape[0]
+    for _ in range(n_mp):
+        (w_self, w_neigh, b) = take(3)
+        gathered = h[edge_src]  # (Eg, hidden)
+        agg = jax.ops.segment_sum(gathered, edge_dst, num_segments=n) * deg_inv[:, None]
+        h = jnp.tanh(h @ w_self + agg @ w_neigh + b)
+    (w_d1, b_d1, w_d2, b_d2) = take(4)
+    h = jnp.tanh(h @ w_d1 + b_d1)
+    return h @ w_d2 + b_d2
+
+
+# --- DeepONet ------------------------------------------------------------------
+
+
+def deeponet_spec(n_sensors, coord_dim, hidden, n_layers, latent):
+    branch_layers = [n_sensors] + [hidden] * (n_layers - 1) + [latent]
+    trunk_layers = [coord_dim] + [hidden] * (n_layers - 1) + [latent]
+    return mlp_spec(branch_layers) + mlp_spec(trunk_layers) + [(1,)]
+
+
+def deeponet_init(rng, n_sensors, coord_dim, hidden, n_layers, latent):
+    branch_layers = [n_sensors] + [hidden] * (n_layers - 1) + [latent]
+    trunk_layers = [coord_dim] + [hidden] * (n_layers - 1) + [latent]
+    return np.concatenate(
+        [mlp_init(rng, branch_layers), mlp_init(rng, trunk_layers), np.zeros(1, np.float32)]
+    ).astype(np.float32)
+
+
+def deeponet_apply(flat, sensors, coords, cfg):
+    """u(y) = Σ_l branch_l(sensors)·trunk_l(y) + bias.
+
+    sensors (n_sensors,) — IC samples; coords (M, coord_dim) — query points.
+    """
+    n_sensors, coord_dim, hidden, n_layers, latent = (
+        cfg["n_sensors"],
+        cfg["coord_dim"],
+        cfg["hidden"],
+        cfg["n_layers"],
+        cfg["latent"],
+    )
+    branch_layers = [n_sensors] + [hidden] * (n_layers - 1) + [latent]
+    trunk_layers = [coord_dim] + [hidden] * (n_layers - 1) + [latent]
+    nb = spec_size(mlp_spec(branch_layers))
+    nt = spec_size(mlp_spec(trunk_layers))
+    b_flat, t_flat, bias = flat[:nb], flat[nb : nb + nt], flat[nb + nt]
+    branch = mlp_apply(b_flat, sensors[None, :], branch_layers)[0]  # (latent,)
+    trunk = mlp_apply(t_flat, coords, trunk_layers)  # (M, latent)
+    return trunk @ branch + bias

@@ -1,0 +1,265 @@
+"""AOT lowering of the neural-solver artifacts (Table 1, Fig 4, Fig B.12).
+
+Every artifact is a single fused HLO program `params (+ static mesh data as
+runtime inputs) → (loss, grad)` — AD happens at *trace* time, so the
+runtime graph has O(1) nodes per optimizer step regardless of mesh size or
+network depth, which is exactly the property Table 1 / Fig 4 measure.
+
+Shapes baked at lowering: mesh node/element counts and the Galerkin CSR
+nnz, all mirrored from the Rust generators via `meshes.py`.
+"""
+
+from __future__ import annotations
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import losses, meshes, models
+
+#: SIREN backbone shared by all Table-1 methods (§B.2.2): 4 hidden × 64.
+LAYERS = [2, 64, 64, 64, 64, 1]
+W0 = 30.0
+
+#: Table-1 mesh: structured unit square (paper: 3,017-node unstructured
+#: mesh; scaled for the 1-core CPU testbed — all methods share it).
+TABLE1_N = 32
+
+#: Fig-4 DoF sweep grids ((n+1)² DoFs each).
+FIG4_SIZES = [8, 16, 32, 64]
+
+#: Eval bucket for `siren_eval` (points padded to this count).
+EVAL_M = 4096
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _lower(out_dir, name, fn, args, meta):
+    from .aot import to_hlo_text
+
+    arg_structs = [s for (_, s) in args]
+    lowered = jax.jit(fn).lower(*arg_structs)
+    (out_dir / f"{name}.hlo.txt").write_text(to_hlo_text(lowered))
+    print(f"  lowered {name}", flush=True)
+    return {
+        "file": f"{name}.hlo.txt",
+        "inputs": [
+            {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)} for (n, s) in args
+        ],
+        "outputs": [
+            {"shape": list(s.shape), "dtype": str(s.dtype)}
+            for s in jax.tree.leaves(jax.eval_shape(fn, *arg_structs))
+        ],
+        **meta,
+    }
+
+
+def _mesh_tables(n):
+    pts, cells = meshes.unit_square_tri(n)
+    bnodes = meshes.boundary_nodes(pts, cells)
+    mask = np.ones(len(pts), np.float32)
+    mask[bnodes] = 0.0
+    rows, cols = meshes.csr_pattern(len(pts), cells)
+    return pts, cells, mask, rows, cols
+
+
+def build_model_artifacts(out_dir: pathlib.Path) -> dict:
+    artifacts = {}
+    p = models.spec_size(models.siren_spec(LAYERS))
+
+    # --- Initial parameter blobs (4 seeds) ---------------------------------
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        flat = models.siren_init(rng, LAYERS, W0)
+        fname = f"siren_init_s{seed}.bin"
+        (out_dir / fname).write_bytes(flat.tobytes())
+        artifacts[f"siren_init_s{seed}"] = {
+            "file": fname,
+            "inputs": [],
+            "outputs": [],
+            "kind": "siren_init",
+            "param_count": p,
+            "seed": seed,
+        }
+
+    # --- Table 1: loss_and_grad per method ---------------------------------
+    pts, cells, mask, rows, cols = _mesh_tables(TABLE1_N)
+    n = len(pts)
+    e = len(cells)
+    nnz = len(rows)
+    mesh_meta = {"mesh_n": TABLE1_N, "n_nodes": n, "n_elems": e, "nnz": nnz, "param_count": p}
+
+    def pinn_lg(params, coords, msk, kfreq):
+        return jax.value_and_grad(
+            lambda q: losses.pinn_loss(q, coords, msk, kfreq, LAYERS, W0)
+        )(params)
+
+    artifacts["table1_pinn"] = _lower(
+        out_dir,
+        "table1_pinn",
+        pinn_lg,
+        [("params", f32(p)), ("coords", f32(n, 2)), ("mask", f32(n)), ("kfreq", f32())],
+        {"kind": "table1_loss_grad", "method": "pinn", **mesh_meta},
+    )
+
+    def vpinn_lg(params, cell_coords, cell_idx, node_coords, msk, kfreq):
+        return jax.value_and_grad(
+            lambda q: losses.vpinn_loss_with_bc(
+                q, cell_coords, cell_idx, node_coords, msk, kfreq, LAYERS, W0
+            )
+        )(params)
+
+    artifacts["table1_vpinn"] = _lower(
+        out_dir,
+        "table1_vpinn",
+        vpinn_lg,
+        [
+            ("params", f32(p)),
+            ("cell_coords", f32(e, 3, 2)),
+            ("cells", i32(e, 3)),
+            ("node_coords", f32(n, 2)),
+            ("mask", f32(n)),
+            ("kfreq", f32()),
+        ],
+        {"kind": "table1_loss_grad", "method": "vpinn", **mesh_meta},
+    )
+
+    def ritz_lg(params, cell_coords, node_coords, msk, kfreq):
+        return jax.value_and_grad(
+            lambda q: losses.deep_ritz_loss(q, cell_coords, node_coords, msk, kfreq, LAYERS, W0)
+        )(params)
+
+    artifacts["table1_deepritz"] = _lower(
+        out_dir,
+        "table1_deepritz",
+        ritz_lg,
+        [
+            ("params", f32(p)),
+            ("cell_coords", f32(e, 3, 2)),
+            ("node_coords", f32(n, 2)),
+            ("mask", f32(n)),
+            ("kfreq", f32()),
+        ],
+        {"kind": "table1_loss_grad", "method": "deepritz", **mesh_meta},
+    )
+
+    def pils_lg(params, node_coords, msk, kvals, r_idx, c_idx, fvec):
+        return jax.value_and_grad(
+            lambda q: losses.pils_loss(q, node_coords, msk, kvals, r_idx, c_idx, fvec, LAYERS, W0)
+        )(params)
+
+    artifacts["table1_pils"] = _lower(
+        out_dir,
+        "table1_pils",
+        pils_lg,
+        [
+            ("params", f32(p)),
+            ("node_coords", f32(n, 2)),
+            ("mask", f32(n)),
+            ("kvals", f32(nnz)),
+            ("rows", i32(nnz)),
+            ("cols", i32(nnz)),
+            ("fvec", f32(n)),
+        ],
+        {"kind": "table1_loss_grad", "method": "pils", **mesh_meta},
+    )
+
+    # --- SIREN forward evaluation (error metrics, field dumps) --------------
+    def eval_fn(params, points):
+        return (models.siren_apply(params, points, LAYERS, W0)[:, 0],)
+
+    artifacts["siren_eval"] = _lower(
+        out_dir,
+        "siren_eval",
+        eval_fn,
+        [("params", f32(p)), ("points", f32(EVAL_M, 2))],
+        {"kind": "siren_eval", "bucket": EVAL_M, "param_count": p},
+    )
+
+    # --- Fig 4 / B.12: loss-eval cost vs DoF --------------------------------
+    for gn in FIG4_SIZES:
+        pts_g, cells_g, mask_g, rows_g, cols_g = _mesh_tables(gn)
+        ng, eg, nnzg = len(pts_g), len(cells_g), len(rows_g)
+        meta = {"mesh_n": gn, "n_nodes": ng, "n_elems": eg, "nnz": nnzg, "param_count": p}
+
+        def pinn_fwd(params, coords, msk, kfreq):
+            return (losses.pinn_loss(params, coords, msk, kfreq, LAYERS, W0),)
+
+        def pinn_grad(params, coords, msk, kfreq):
+            return jax.value_and_grad(
+                lambda q: losses.pinn_loss(q, coords, msk, kfreq, LAYERS, W0)
+            )(params)
+
+        for tag, fn in [("fwd", pinn_fwd), ("grad", pinn_grad)]:
+            artifacts[f"fig4_pinn_{tag}_n{gn}"] = _lower(
+                out_dir,
+                f"fig4_pinn_{tag}_n{gn}",
+                fn,
+                [("params", f32(p)), ("coords", f32(ng, 2)), ("mask", f32(ng)), ("kfreq", f32())],
+                {"kind": f"fig4_pinn_{tag}", **meta},
+            )
+
+        def pils_fwd(params, node_coords, msk, kvals, r_idx, c_idx, fvec):
+            return (
+                losses.pils_loss(params, node_coords, msk, kvals, r_idx, c_idx, fvec, LAYERS, W0),
+            )
+
+        def pils_grad(params, node_coords, msk, kvals, r_idx, c_idx, fvec):
+            return jax.value_and_grad(
+                lambda q: losses.pils_loss(
+                    q, node_coords, msk, kvals, r_idx, c_idx, fvec, LAYERS, W0
+                )
+            )(params)
+
+        pils_args = [
+            ("params", f32(p)),
+            ("node_coords", f32(ng, 2)),
+            ("mask", f32(ng)),
+            ("kvals", f32(nnzg)),
+            ("rows", i32(nnzg)),
+            ("cols", i32(nnzg)),
+            ("fvec", f32(ng)),
+        ]
+        for tag, fn in [("fwd", pils_fwd), ("grad", pils_grad)]:
+            artifacts[f"fig4_pils_{tag}_n{gn}"] = _lower(
+                out_dir, f"fig4_pils_{tag}_n{gn}", fn, pils_args, {"kind": f"fig4_pils_{tag}", **meta}
+            )
+
+        def sup_fwd(params, node_coords, u_ref):
+            return (losses.supervised_loss(params, node_coords, u_ref, LAYERS, W0),)
+
+        def sup_grad(params, node_coords, u_ref):
+            return jax.value_and_grad(
+                lambda q: losses.supervised_loss(q, node_coords, u_ref, LAYERS, W0)
+            )(params)
+
+        sup_args = [("params", f32(p)), ("node_coords", f32(ng, 2)), ("u_ref", f32(ng))]
+        for tag, fn in [("fwd", sup_fwd), ("grad", sup_grad)]:
+            artifacts[f"fig4_supervised_{tag}_n{gn}"] = _lower(
+                out_dir,
+                f"fig4_supervised_{tag}_n{gn}",
+                fn,
+                sup_args,
+                {"kind": f"fig4_supervised_{tag}", **meta},
+            )
+
+        def fd_fwd(params, node_coords, kfreq, _gn=gn):
+            return (losses.fd_loss(params, node_coords, _gn, kfreq, LAYERS, W0),)
+
+        artifacts[f"fig4_fd_fwd_n{gn}"] = _lower(
+            out_dir,
+            f"fig4_fd_fwd_n{gn}",
+            fd_fwd,
+            [("params", f32(p)), ("node_coords", f32(ng, 2)), ("kfreq", f32())],
+            {"kind": "fig4_fd_fwd", **meta},
+        )
+
+    return artifacts

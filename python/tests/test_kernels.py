@@ -1,0 +1,171 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps element counts / geometry jitter / dtypes; every kernel
+must match `ref.py` to float tolerance. This is the CORE correctness signal
+for the Map stage (the Rust integration tests then validate the PJRT
+round-trip against the Rust native implementation).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import local_assembly as ker
+from compile.kernels import ref
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def assert_close(a, b, rtol=2e-5, atol=2e-6):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol, atol=atol)
+
+
+BLOCK = 16  # small block → several grid steps even for small E
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_poisson2d_matches_ref(blocks, seed):
+    n = blocks * BLOCK
+    r = rng(seed)
+    coords = ref.random_valid_simplices(r, n, 3, 2)
+    rho = r.uniform(0.5, 2.0, (n, 3)).astype(np.float32)
+    out = ker.poisson2d(coords, rho, block=BLOCK)
+    expect = ref.poisson2d(coords, rho)
+    assert_close(out, expect)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    blocks=st.integers(min_value=1, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_poisson3d_matches_ref(blocks, seed):
+    n = blocks * BLOCK
+    r = rng(seed)
+    coords = ref.random_valid_simplices(r, n, 4, 3)
+    rho = r.uniform(0.5, 2.0, (n, 4)).astype(np.float32)
+    out = ker.poisson3d(coords, rho, block=BLOCK)
+    expect = ref.poisson3d(coords, rho)
+    assert_close(out, expect)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_loads_match_ref(seed):
+    r = rng(seed)
+    n = 2 * BLOCK
+    c2 = ref.random_valid_simplices(r, n, 3, 2)
+    f2 = r.standard_normal((n, 3)).astype(np.float32)
+    assert_close(ker.load2d(c2, f2, block=BLOCK), ref.load2d(c2, f2))
+    c3 = ref.random_valid_simplices(r, n, 4, 3)
+    f3 = r.standard_normal((n, 4)).astype(np.float32)
+    assert_close(ker.load3d(c3, f3, block=BLOCK), ref.load3d(c3, f3))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_masses_match_ref(seed):
+    r = rng(seed)
+    n = 2 * BLOCK
+    c2 = ref.random_valid_simplices(r, n, 3, 2)
+    rho2 = r.uniform(0.5, 2.0, (n, 3)).astype(np.float32)
+    assert_close(ker.mass2d(c2, rho2, block=BLOCK), ref.mass2d(c2, rho2))
+    c3 = ref.random_valid_simplices(r, n, 4, 3)
+    rho3 = r.uniform(0.5, 2.0, (n, 4)).astype(np.float32)
+    assert_close(ker.mass3d(c3, rho3, block=BLOCK), ref.mass3d(c3, rho3))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31),
+    lam=st.floats(min_value=0.1, max_value=2.0),
+    mu=st.floats(min_value=0.1, max_value=2.0),
+)
+def test_elasticity3d_matches_ref(seed, lam, mu):
+    r = rng(seed)
+    n = 2 * BLOCK
+    coords = ref.random_valid_simplices(r, n, 4, 3)
+    emod = r.uniform(0.5, 2.0, (n, 4)).astype(np.float32)
+    out = ker.elasticity3d(coords, emod, lam, mu, block=BLOCK)
+    expect = ref.elasticity3d(coords, emod, lam, mu)
+    assert_close(out, expect, rtol=5e-5, atol=5e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_elasticity_q4_matches_ref(seed):
+    r = rng(seed)
+    n = 2 * BLOCK
+    # Valid quads: unit squares + small jitter, CCW ordering.
+    base = np.array([[0, 0], [1, 0], [1, 1], [0, 1]], dtype=np.float64)
+    coords = base[None] + 0.1 * r.standard_normal((n, 4, 2))
+    coords = coords.astype(np.float32)
+    emod = r.uniform(0.5, 2.0, (n, 4)).astype(np.float32)
+    lam, mu = 0.577, 0.385
+    out = ker.elasticity2d_q4(coords, emod, lam, mu, block=BLOCK)
+    expect = ref.elasticity2d_q4(coords, emod, lam, mu)
+    assert_close(out, expect, rtol=5e-5, atol=5e-6)
+
+
+def test_degenerate_padding_elements_contribute_zero():
+    """Bucket padding: zero-volume elements must produce exactly zero."""
+    n = BLOCK
+    r = rng(0)
+    coords = ref.random_valid_simplices(r, n, 3, 2)
+    coords[n // 2 :] = coords[n // 2 :, :1, :]  # collapse to a point
+    rho = np.ones((n, 3), np.float32)
+    out = np.asarray(ker.poisson2d(coords, rho, block=BLOCK))
+    assert np.all(out[n // 2 :] == 0.0)
+    f_out = np.asarray(ker.load2d(coords, rho, block=BLOCK))
+    assert np.all(f_out[n // 2 :] == 0.0)
+
+
+def test_stiffness_rows_sum_to_zero():
+    """∇(Σφ)=0 ⇒ local stiffness row sums vanish (both layers agree)."""
+    r = rng(3)
+    coords = ref.random_valid_simplices(r, BLOCK, 4, 3)
+    rho = np.ones((BLOCK, 4), np.float32)
+    out = np.asarray(ker.poisson3d(coords, rho, block=BLOCK))
+    np.testing.assert_allclose(out.sum(axis=2), 0.0, atol=1e-4)
+
+
+def test_mass_total_equals_volume():
+    """Σ_ab M_ab = |e| for ρ=1 (partition of unity, both axes)."""
+    r = rng(4)
+    coords = ref.random_valid_simplices(r, BLOCK, 3, 2)
+    rho = np.ones((BLOCK, 3), np.float32)
+    out = np.asarray(ker.mass2d(coords, rho, block=BLOCK))
+    # Triangle area from the cross product.
+    e1 = coords[:, 1] - coords[:, 0]
+    e2 = coords[:, 2] - coords[:, 0]
+    area = 0.5 * np.abs(e1[:, 0] * e2[:, 1] - e1[:, 1] * e2[:, 0])
+    np.testing.assert_allclose(out.sum(axis=(1, 2)), area, rtol=1e-5)
+
+
+def test_float64_path():
+    """Kernels are dtype-generic (x64 used by build-time validation)."""
+    import jax
+
+    with jax.experimental.enable_x64():
+        r = rng(9)
+        coords = ref.random_valid_simplices(r, BLOCK, 3, 2, dtype=np.float64)
+        rho = np.ones((BLOCK, 3), np.float64)
+        out = ker.poisson2d(coords, rho, block=BLOCK)
+        expect = ref.poisson2d(coords, rho)
+        assert out.dtype == jnp.float64
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=1e-12)
+
+
+def test_block_size_must_divide():
+    r = rng(1)
+    coords = ref.random_valid_simplices(r, BLOCK + 1, 3, 2)
+    rho = np.ones((BLOCK + 1, 3), np.float32)
+    with pytest.raises(AssertionError):
+        ker.poisson2d(coords, rho, block=BLOCK)

@@ -1,0 +1,57 @@
+"""Python mesh mirrors: invariants + shape agreement with the generators'
+contracts (the Rust side asserts the same counts through the manifest)."""
+
+import numpy as np
+
+from compile import meshes
+
+
+def tri_area(pts, tri):
+    a, b, c = pts[tri[0]], pts[tri[1]], pts[tri[2]]
+    return 0.5 * ((b[0] - a[0]) * (c[1] - a[1]) - (c[0] - a[0]) * (b[1] - a[1]))
+
+
+def test_unit_square_counts_and_orientation():
+    pts, cells = meshes.unit_square_tri(4)
+    assert len(pts) == 25
+    assert len(cells) == 32
+    areas = [tri_area(pts, t) for t in cells]
+    assert all(a > 0 for a in areas)
+    assert abs(sum(areas) - 1.0) < 1e-12
+
+
+def test_boundary_nodes_square():
+    pts, cells = meshes.unit_square_tri(4)
+    b = meshes.boundary_nodes(pts, cells)
+    assert len(b) == 16
+    for i in b:
+        x, y = pts[i]
+        assert min(x, y, 1 - x, 1 - y) < 1e-12
+
+
+def test_lshape_area_and_compaction():
+    pts, cells = meshes.lshape_tri(8)
+    areas = [tri_area(pts, t) for t in cells]
+    assert abs(sum(areas) - 0.75) < 1e-12
+    assert cells.max() == len(pts) - 1  # compacted indices
+
+
+def test_circle_inside_radius():
+    pts, cells = meshes.circle_tri(12, 0.5, 0.5, 0.5)
+    r = np.sqrt((pts[:, 0] - 0.5) ** 2 + (pts[:, 1] - 0.5) ** 2)
+    assert r.max() <= 0.5 + 1e-9
+    areas = [tri_area(pts, t) for t in cells]
+    assert all(a > 0 for a in areas)
+
+
+def test_csr_pattern_is_symmetric_with_diagonal():
+    pts, cells = meshes.unit_square_tri(3)
+    rows, cols = meshes.csr_pattern(len(pts), cells)
+    pairs = set(zip(rows.tolist(), cols.tolist()))
+    for i, j in list(pairs):
+        assert (j, i) in pairs
+    for i in range(len(pts)):
+        assert (i, i) in pairs
+    # Row-major sorted.
+    order = np.lexsort((cols, rows))
+    assert np.all(order == np.arange(len(rows)))

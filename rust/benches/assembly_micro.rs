@@ -1,0 +1,67 @@
+//! Microbenchmarks of the assembly pipeline stages (the §Perf tool):
+//! Batch-Map (native), Sparse-Reduce (routing), scatter-add baseline,
+//! routing construction, SpMV — per problem size. Used to locate the hot
+//! path before and after each optimization iteration.
+
+use tensor_galerkin::assembly::routing::Routing;
+use tensor_galerkin::assembly::{scatter, AssemblyContext, BilinearForm, Coefficient};
+use tensor_galerkin::fem::dofmap::DofMap;
+use tensor_galerkin::mesh::structured::{unit_cube_tet, unit_square_tri};
+use tensor_galerkin::util::bench::Bench;
+use tensor_galerkin::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let sizes_2d = args.get_usize_list("sizes2d", &[32, 64, 128]);
+    let sizes_3d = args.get_usize_list("sizes3d", &[8, 16, 24]);
+    let mut bench = Bench::new("assembly_micro");
+
+    for &n in &sizes_2d {
+        let mesh = unit_square_tri(n);
+        let ctx = AssemblyContext::new(&mesh, 1);
+        let form = BilinearForm::Diffusion { rho: Coefficient::Const(1.0) };
+        let ne = mesh.n_cells() as f64;
+        bench.bench(&format!("2d/map/e{}", mesh.n_cells()), &[("n_elems", ne)], || {
+            ctx.map_matrix(&form)
+        });
+        let local = ctx.map_matrix(&form);
+        let mut data = vec![0.0; ctx.routing.nnz()];
+        bench.bench(&format!("2d/reduce/e{}", mesh.n_cells()), &[("n_elems", ne)], || {
+            ctx.routing.reduce_matrix_into(&local, &mut data);
+            data[0]
+        });
+        bench.bench(&format!("2d/scatter_add/e{}", mesh.n_cells()), &[("n_elems", ne)], || {
+            scatter::assemble_matrix(&mesh, &ctx.dofmap, &form, &ctx.tab, &ctx.geo)
+        });
+        bench.bench(&format!("2d/routing_build/e{}", mesh.n_cells()), &[("n_elems", ne)], || {
+            Routing::build(&DofMap::scalar(&mesh))
+        });
+        let k = ctx.assemble_matrix(&form);
+        let x = vec![1.0; k.ncols];
+        let mut y = vec![0.0; k.nrows];
+        bench.bench(&format!("2d/spmv/n{}", k.nrows), &[("n_dofs", k.nrows as f64)], || {
+            k.spmv(&x, &mut y);
+            y[0]
+        });
+    }
+
+    for &n in &sizes_3d {
+        let mesh = unit_cube_tet(n);
+        let ctx = AssemblyContext::new(&mesh, 1);
+        let form = BilinearForm::Diffusion { rho: Coefficient::Const(1.0) };
+        let ne = mesh.n_cells() as f64;
+        bench.bench(&format!("3d/map/e{}", mesh.n_cells()), &[("n_elems", ne)], || {
+            ctx.map_matrix(&form)
+        });
+        let local = ctx.map_matrix(&form);
+        let mut data = vec![0.0; ctx.routing.nnz()];
+        bench.bench(&format!("3d/reduce/e{}", mesh.n_cells()), &[("n_elems", ne)], || {
+            ctx.routing.reduce_matrix_into(&local, &mut data);
+            data[0]
+        });
+        bench.bench(&format!("3d/scatter_add/e{}", mesh.n_cells()), &[("n_elems", ne)], || {
+            scatter::assemble_matrix(&mesh, &ctx.dofmap, &form, &ctx.tab, &ctx.geo)
+        });
+    }
+    bench.finish();
+}

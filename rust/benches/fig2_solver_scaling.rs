@@ -1,0 +1,40 @@
+//! Bench: Fig 2 (a,b) — assemble+solve scaling with DoFs on 3D Poisson and
+//! 3D elasticity, across assembly strategies (scatter-add baseline,
+//! TensorGalerkin native, PJRT-artifact Map, recompile-per-solve).
+//!
+//! `cargo bench --bench fig2_solver_scaling [-- --sizes 4,8,12,16]`
+
+use tensor_galerkin::experiments::fig2;
+use tensor_galerkin::runtime::Runtime;
+use tensor_galerkin::util::bench::Bench;
+use tensor_galerkin::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let sizes = args.get_usize_list("sizes", &[4, 8, 12, 16]);
+    let runtime = Runtime::new().ok();
+    if runtime.is_none() {
+        eprintln!("(artifacts missing: pjrt/recompile variants skipped)");
+    }
+    let mut bench = Bench::new("fig2_solver_scaling");
+    for problem in ["poisson3d", "elasticity3d"] {
+        for &n in &sizes {
+            let pts = fig2::scale_point(problem, n, runtime.as_ref()).expect("scale point");
+            for p in pts {
+                bench.record(
+                    &format!("{problem}/{}/assemble/dofs{}", p.variant, p.n_dofs),
+                    &[("n_dofs", p.n_dofs as f64), ("n_elems", p.n_elems as f64)],
+                    p.assemble_s,
+                );
+                if p.solve_s > 0.0 {
+                    bench.record(
+                        &format!("{problem}/{}/solve/dofs{}", p.variant, p.n_dofs),
+                        &[("n_dofs", p.n_dofs as f64), ("rel_res", p.rel_residual)],
+                        p.solve_s,
+                    );
+                }
+            }
+        }
+    }
+    bench.finish();
+}

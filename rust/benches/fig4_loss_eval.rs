@@ -1,0 +1,131 @@
+//! Bench: Fig 4 / Fig B.12 — wall-clock of one loss evaluation (forward,
+//! and forward+backward) vs DoF for the supervised / FD / PINN / TensorPILS
+//! objectives, all through the AOT artifacts on the PJRT CPU client.
+//!
+//! The paper's claim under test: PINN cost blows up with DoF count while
+//! TensorPILS tracks the supervised/FD baselines.
+
+use tensor_galerkin::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
+use tensor_galerkin::mesh::structured::unit_square_tri;
+use tensor_galerkin::pils::trainer::{ArtifactLoss, LossFn, Operand};
+use tensor_galerkin::runtime::Runtime;
+use tensor_galerkin::util::bench::Bench;
+
+fn main() {
+    let Ok(rt) = Runtime::new() else {
+        eprintln!("fig4_loss_eval: artifacts missing (run `make artifacts`); skipping");
+        return;
+    };
+    let mut bench = Bench::new("fig4_loss_eval");
+    let sizes: Vec<usize> = rt
+        .manifest
+        .artifacts
+        .values()
+        .filter(|a| a.kind == "fig4_pinn_fwd")
+        .map(|a| a.meta["mesh_n"] as usize)
+        .collect::<std::collections::BTreeSet<_>>()
+        .into_iter()
+        .collect();
+
+    for &n in &sizes {
+        let mesh = unit_square_tri(n);
+        let dofs = mesh.n_nodes();
+        let coords = mesh.points.clone();
+        let mut mask = vec![1.0f64; dofs];
+        for b in mesh.boundary_nodes() {
+            mask[b] = 0.0;
+        }
+        let ctx = AssemblyContext::new(&mesh, 1);
+        let kmat = ctx.assemble_matrix(&BilinearForm::Diffusion {
+            rho: Coefficient::Const(1.0),
+        });
+        let mut rows_idx = Vec::with_capacity(kmat.nnz());
+        for r in 0..kmat.nrows {
+            for _ in kmat.indptr[r]..kmat.indptr[r + 1] {
+                rows_idx.push(r);
+            }
+        }
+        let fvec = ctx.assemble_vector(&LinearForm::Source {
+            f: ctx.coeff_fn(|p| tensor_galerkin::analysis::mms::checkerboard(4, p)),
+        });
+        let u_ref = vec![0.0f64; dofs];
+        let params = tensor_galerkin::pils::siren::load_init(&rt, 0).expect("init");
+
+        let kf = Operand::F32(vec![4.0f32]);
+        let cases: Vec<(String, Vec<Operand>)> = vec![
+            (
+                format!("fig4_pinn_fwd_n{n}"),
+                vec![Operand::from_f64(&coords), Operand::from_f64(&mask), kf.clone()],
+            ),
+            (
+                format!("fig4_pinn_grad_n{n}"),
+                vec![Operand::from_f64(&coords), Operand::from_f64(&mask), kf.clone()],
+            ),
+            (
+                format!("fig4_pils_fwd_n{n}"),
+                vec![
+                    Operand::from_f64(&coords),
+                    Operand::from_f64(&mask),
+                    Operand::from_f64(&kmat.data),
+                    Operand::from_usize(&rows_idx),
+                    Operand::from_usize(&kmat.indices),
+                    Operand::from_f64(&fvec),
+                ],
+            ),
+            (
+                format!("fig4_pils_grad_n{n}"),
+                vec![
+                    Operand::from_f64(&coords),
+                    Operand::from_f64(&mask),
+                    Operand::from_f64(&kmat.data),
+                    Operand::from_usize(&rows_idx),
+                    Operand::from_usize(&kmat.indices),
+                    Operand::from_f64(&fvec),
+                ],
+            ),
+            (
+                format!("fig4_supervised_fwd_n{n}"),
+                vec![Operand::from_f64(&coords), Operand::from_f64(&u_ref)],
+            ),
+            (
+                format!("fig4_supervised_grad_n{n}"),
+                vec![Operand::from_f64(&coords), Operand::from_f64(&u_ref)],
+            ),
+            (
+                format!("fig4_fd_fwd_n{n}"),
+                vec![Operand::from_f64(&coords), kf.clone()],
+            ),
+        ];
+        for (name, fixed) in cases {
+            if rt.manifest.get(&name).is_err() {
+                continue;
+            }
+            // fwd-only artifacts return (loss,), grad return (loss, grad):
+            // both run through execute; use ArtifactLoss for grad ones and
+            // raw execute for fwd ones.
+            if name.contains("_grad_") {
+                let mut loss = ArtifactLoss::new(&rt, &name, fixed);
+                let _ = loss.eval(&params).expect("warmup");
+                bench.bench(&name, &[("dofs", dofs as f64)], || {
+                    loss.eval(&params).unwrap().0
+                });
+            } else {
+                let p32: Vec<f32> = params.iter().map(|&x| x as f32).collect();
+                let owned = fixed;
+                let run = || {
+                    let mut inputs = vec![tensor_galerkin::runtime::exec::Operand::F32(&p32)];
+                    for op in &owned {
+                        inputs.push(match op {
+                            Operand::F32(v) => tensor_galerkin::runtime::exec::Operand::F32(v),
+                            Operand::I32(v) => tensor_galerkin::runtime::exec::Operand::I32(v),
+                        });
+                    }
+                    rt.execute(&name, &inputs).unwrap()[0][0]
+                };
+                let _ = run(); // compile+warm
+                bench.bench(&name, &[("dofs", dofs as f64)], run);
+            }
+        }
+    }
+    bench.finish();
+}

@@ -1,0 +1,44 @@
+//! Bench: Fig B.4 — batched data generation (fixed 3D Poisson operator,
+//! varying RHS) vs the naive per-sample pipeline.
+
+use tensor_galerkin::coordinator::batcher::{solve_unbatched, BatchSolver};
+use tensor_galerkin::coordinator::SolveRequest;
+use tensor_galerkin::mesh::structured::unit_cube_tet;
+use tensor_galerkin::solver::SolverConfig;
+use tensor_galerkin::util::bench::Bench;
+use tensor_galerkin::util::cli::Args;
+use tensor_galerkin::util::rng::Rng;
+
+fn main() {
+    let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let n = args.get_usize("n", 12);
+    let batches = args.get_usize_list("batches", &[1, 4, 16, 64]);
+    let mesh = unit_cube_tet(n);
+    let cfg = SolverConfig {
+        rel_tol: 1e-8,
+        ..SolverConfig::default()
+    };
+    let mut rng = Rng::new(42);
+    let mut bench = Bench::new("figb4_batch_generation");
+    let solver = BatchSolver::new(&mesh, cfg);
+    for &b in &batches {
+        let reqs: Vec<SolveRequest> = (0..b)
+            .map(|id| SolveRequest {
+                id: id as u64,
+                f_nodal: (0..mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            })
+            .collect();
+        bench.bench(
+            &format!("batched/b{b}"),
+            &[("batch", b as f64), ("n_dofs", mesh.n_nodes() as f64)],
+            || solver.solve_batch(&reqs).unwrap().len(),
+        );
+        let naive_n = b.min(4);
+        bench.bench(
+            &format!("naive/b{naive_n}"),
+            &[("batch", naive_n as f64)],
+            || solve_unbatched(&mesh, &reqs[..naive_n], cfg).unwrap().len(),
+        );
+    }
+    bench.finish();
+}

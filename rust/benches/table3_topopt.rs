@@ -1,0 +1,29 @@
+//! Bench: Table 3 — SIMP cantilever timing, TensorOpt vs the
+//! rebuild-per-iteration archetype.
+
+use tensor_galerkin::opt::topopt::{run_topopt, TopOptConfig};
+use tensor_galerkin::util::bench::Bench;
+use tensor_galerkin::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
+    let iters = args.get_usize("iters", 51);
+    let mut bench = Bench::new("table3_topopt");
+    let mut cfg = TopOptConfig {
+        iters,
+        ..TopOptConfig::default()
+    };
+    let ours = run_topopt(&cfg).expect("topopt");
+    bench.record("tensoropt/setup", &[("iters", iters as f64)], ours.setup_s);
+    bench.record("tensoropt/loop", &[("iters", iters as f64)], ours.loop_s);
+    cfg.rebuild_setup_each_iter = true;
+    let base = run_topopt(&cfg).expect("baseline");
+    bench.record("rebuild_baseline/setup", &[], base.setup_s);
+    bench.record("rebuild_baseline/loop", &[], base.loop_s);
+    println!(
+        "final compliance: ours {:.4} vs baseline {:.4}",
+        ours.final_compliance(),
+        base.final_compliance()
+    );
+    bench.finish();
+}

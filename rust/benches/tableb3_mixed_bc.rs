@@ -1,0 +1,17 @@
+//! Bench: Table B.3 — mixed Dirichlet+Neumann+Robin assembly+solve on the
+//! circle and boomerang domains (TensorMesh Map-Reduce vs the scatter-add
+//! archetype). Timing is end-to-end through the experiment driver.
+
+use tensor_galerkin::experiments::tableb3;
+use tensor_galerkin::util::bench::Bench;
+use tensor_galerkin::util::cli::Args;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw);
+    let mut bench = Bench::new("tableb3_mixed_bc");
+    // The driver prints the table and appends experiment records; wrap the
+    // whole run so the bench log carries the end-to-end number as well.
+    bench.bench("mixed_bc_full_run", &[], || tableb3::run(&args).expect("tableb3"));
+    bench.finish();
+}

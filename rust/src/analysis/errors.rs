@@ -1,0 +1,70 @@
+//! Error norms over FEM fields.
+//!
+//! `rel_l2_nodal` is the discrete vector norm used in the paper's tables;
+//! `l2_norm_field` integrates `(u_h − u)²` with quadrature — the continuous
+//! `L²(Ω)` norm used for convergence studies.
+
+use crate::assembly::AssemblyContext;
+
+/// Relative discrete l2 error `‖u−v‖₂/‖v‖₂` on nodal vectors.
+pub fn rel_l2_nodal(u: &[f64], v: &[f64]) -> f64 {
+    crate::util::rel_l2(u, v)
+}
+
+/// Continuous `L²(Ω)` norm of the P1 interpolant of nodal field `u` minus a
+/// reference function `exact(x)`, via the context's quadrature.
+pub fn l2_error_vs_exact(
+    ctx: &AssemblyContext,
+    u: &[f64],
+    exact: impl Fn(&[f64]) -> f64,
+) -> f64 {
+    let geo = &ctx.geo;
+    let tab = &ctx.tab;
+    let mesh = &ctx.mesh;
+
+    let mut acc = 0.0;
+    for e in 0..mesh.n_cells() {
+        let cell = mesh.cell(e);
+        for q in 0..geo.q {
+            let w = geo.detj[e * geo.q + q] * tab.weights[q];
+            let mut uh = 0.0;
+            for (a, &v) in cell.iter().enumerate() {
+                uh += u[v] * tab.val(q, a);
+            }
+            let d = uh - exact(geo.qpoint(e, q));
+            acc += w * d * d;
+        }
+    }
+    acc.sqrt()
+}
+
+/// `L²(Ω)` norm of a nodal field (through its P1 interpolant).
+pub fn l2_norm_field(ctx: &AssemblyContext, u: &[f64]) -> f64 {
+    l2_error_vs_exact(ctx, u, |_| 0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::structured::unit_square_tri;
+
+    #[test]
+    fn l2_norm_of_constant_field() {
+        let m = unit_square_tri(4);
+        let ctx = AssemblyContext::new(&m, 1);
+        let u = vec![2.0; m.n_nodes()];
+        // ‖2‖_{L²([0,1]²)} = 2.
+        assert!((l2_norm_field(&ctx, &u) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn l2_error_zero_for_exact_interpolant() {
+        let m = unit_square_tri(4);
+        let ctx = AssemblyContext::new(&m, 1);
+        let u: Vec<f64> = (0..m.n_nodes())
+            .map(|i| 1.0 + 3.0 * m.point(i)[0] - m.point(i)[1])
+            .collect();
+        let err = l2_error_vs_exact(&ctx, &u, |p| 1.0 + 3.0 * p[0] - p[1]);
+        assert!(err < 1e-13);
+    }
+}

@@ -1,0 +1,89 @@
+//! Manufactured solutions used across tests and experiments.
+
+/// `u = sin(πx)sin(πy)`, `−Δu = 2π² sin(πx)sin(πy)` on `[0,1]²`.
+pub fn sine2d_u(p: &[f64]) -> f64 {
+    let pi = std::f64::consts::PI;
+    (pi * p[0]).sin() * (pi * p[1]).sin()
+}
+
+/// Forcing for [`sine2d_u`].
+pub fn sine2d_f(p: &[f64]) -> f64 {
+    let pi = std::f64::consts::PI;
+    2.0 * pi * pi * sine2d_u(p)
+}
+
+/// `u = sin(πx)sin(πy)sin(πz)` on `[0,1]³`.
+pub fn sine3d_u(p: &[f64]) -> f64 {
+    let pi = std::f64::consts::PI;
+    (pi * p[0]).sin() * (pi * p[1]).sin() * (pi * p[2]).sin()
+}
+
+/// Forcing for [`sine3d_u`].
+pub fn sine3d_f(p: &[f64]) -> f64 {
+    let pi = std::f64::consts::PI;
+    3.0 * pi * pi * sine3d_u(p)
+}
+
+/// Checkerboard forcing `f_K(x,y) = (−1)^{⌊Kx⌋+⌊Ky⌋}` (Eq. B.10) — the
+/// Table 1 benchmark. Discontinuous, multi-scale as `K` grows.
+pub fn checkerboard(k: usize, p: &[f64]) -> f64 {
+    let ix = (k as f64 * p[0]).floor() as i64;
+    let iy = (k as f64 * p[1]).floor() as i64;
+    if (ix + iy) % 2 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Multi-frequency sine expansion initial condition of Eq. (B.15):
+/// `u0 = (π/K²) Σ_ij a_ij (i²+j²)^{-r} sin(πix)sin(πjy)` with
+/// `a ~ U[-1,1]` from the given RNG.
+pub fn sine_expansion_ic(
+    kmax: usize,
+    r: f64,
+    rng: &mut crate::util::rng::Rng,
+) -> impl Fn(&[f64]) -> f64 {
+    let pi = std::f64::consts::PI;
+    let mut coeffs = Vec::with_capacity(kmax * kmax);
+    for _ in 0..kmax * kmax {
+        coeffs.push(rng.uniform_in(-1.0, 1.0));
+    }
+    move |p: &[f64]| {
+        let mut s = 0.0;
+        for i in 1..=kmax {
+            for j in 1..=kmax {
+                let a = coeffs[(i - 1) * kmax + (j - 1)];
+                let decay = ((i * i + j * j) as f64).powf(-r);
+                s += a * decay * (pi * i as f64 * p[0]).sin() * (pi * j as f64 * p[1]).sin();
+            }
+        }
+        pi / (kmax * kmax) as f64 * s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkerboard_alternates() {
+        assert_eq!(checkerboard(2, &[0.1, 0.1]), 1.0);
+        assert_eq!(checkerboard(2, &[0.6, 0.1]), -1.0);
+        assert_eq!(checkerboard(2, &[0.6, 0.6]), 1.0);
+        assert_eq!(checkerboard(8, &[0.0, 0.1374]), -1.0);
+    }
+
+    #[test]
+    fn ic_vanishes_on_unit_square_boundary() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let ic = sine_expansion_ic(6, 0.5, &mut rng);
+        for t in [0.0, 0.25, 0.7, 1.0] {
+            assert!(ic(&[0.0, t]).abs() < 1e-12);
+            assert!(ic(&[1.0, t]).abs() < 1e-12);
+            assert!(ic(&[t, 0.0]).abs() < 1e-12);
+            assert!(ic(&[t, 1.0]).abs() < 1e-12);
+        }
+        assert!(ic(&[0.4, 0.6]).abs() > 0.0);
+    }
+}

@@ -1,0 +1,6 @@
+//! Error analysis and manufactured solutions.
+
+pub mod errors;
+pub mod mms;
+
+pub use errors::{l2_norm_field, rel_l2_nodal};

@@ -1,0 +1,186 @@
+//! Weak-form descriptions and coefficient fields.
+//!
+//! A [`BilinearForm`] (resp. [`LinearForm`]) describes the physics `ℱ` of
+//! Eq. (7); the Map stage contracts it against batched geometry. Spatially
+//! varying inputs `ρ` enter as [`Coefficient`]s evaluated at physical
+//! quadrature points — precisely the paper's batched tensor
+//! `𝒞 ∈ R^{E×Q×…}`.
+
+use crate::fem::geometry::ElementGeometry;
+use crate::fem::reference::Tabulation;
+
+/// A scalar coefficient field.
+#[derive(Clone, Debug)]
+pub enum Coefficient {
+    /// Constant in space.
+    Const(f64),
+    /// Values at physical quadrature points, `E × Q` row-major
+    /// (the batched coefficient tensor `𝒞_eq`).
+    Quad(Vec<f64>),
+}
+
+impl Coefficient {
+    /// Evaluate a spatial function at the batched quadrature points.
+    pub fn from_fn(geo: &ElementGeometry, f: impl Fn(&[f64]) -> f64) -> Coefficient {
+        let mut vals = Vec::with_capacity(geo.n_elems * geo.q);
+        for e in 0..geo.n_elems {
+            for q in 0..geo.q {
+                vals.push(f(geo.qpoint(e, q)));
+            }
+        }
+        Coefficient::Quad(vals)
+    }
+
+    /// Interpolate a nodal field `u` (one value per global scalar DoF of
+    /// `entries`, `E × k` local map) to quadrature points:
+    /// `u_eq = Σ_a u[g_e(a)] φ̂_a(x̂_q)` — TensorPILS's analytic
+    /// "shape-function interpolation" with zero autodiff.
+    pub fn from_nodal(u: &[f64], entries: &[usize], tab: &Tabulation) -> Coefficient {
+        let k = tab.k;
+        assert_eq!(entries.len() % k, 0);
+        let n_elems = entries.len() / k;
+        let mut vals = Vec::with_capacity(n_elems * tab.q);
+        for e in 0..n_elems {
+            let dofs = &entries[e * k..(e + 1) * k];
+            for q in 0..tab.q {
+                let mut s = 0.0;
+                for (a, &d) in dofs.iter().enumerate() {
+                    s += u[d] * tab.val(q, a);
+                }
+                vals.push(s);
+            }
+        }
+        Coefficient::Quad(vals)
+    }
+
+    /// Value at element `e`, quadrature point `q`.
+    #[inline]
+    pub fn at(&self, e: usize, q: usize, nq: usize) -> f64 {
+        match self {
+            Coefficient::Const(c) => *c,
+            Coefficient::Quad(v) => v[e * nq + q],
+        }
+    }
+
+    /// Apply `f` pointwise (for nonlinear reaction terms like
+    /// `-ε²u(u²-1)` in Allen-Cahn).
+    pub fn map(self, f: impl Fn(f64) -> f64) -> Coefficient {
+        match self {
+            Coefficient::Const(c) => Coefficient::Const(f(c)),
+            Coefficient::Quad(v) => Coefficient::Quad(v.into_iter().map(f).collect()),
+        }
+    }
+}
+
+/// Bilinear forms `a(u, v)` supported by the Map stage.
+#[derive(Clone, Debug)]
+pub enum BilinearForm {
+    /// `∫ ρ ∇u·∇v` — scalar diffusion/stiffness (Poisson, wave, AC).
+    Diffusion { rho: Coefficient },
+    /// `∫ ρ u v` — scalar mass (time-dependent problems).
+    Mass { rho: Coefficient },
+    /// `∫ λ (div u)(div v) + 2μ ε(u):ε(v)` — isotropic linear elasticity.
+    /// Vector-valued with `ncomp = dim`; `e_mod` scales the whole tensor
+    /// per element (SIMP density interpolation uses `Quad` here).
+    Elasticity {
+        lambda: f64,
+        mu: f64,
+        e_mod: Coefficient,
+    },
+    /// `∫_Γ α u v` — Robin boundary mass (assembled over facets).
+    FacetMass { alpha: Coefficient },
+}
+
+impl BilinearForm {
+    /// Vector components of the trial/test space.
+    pub fn ncomp(&self, dim: usize) -> usize {
+        match self {
+            BilinearForm::Elasticity { .. } => dim,
+            _ => 1,
+        }
+    }
+
+    /// Does this form integrate over boundary facets rather than cells?
+    pub fn is_facet(&self) -> bool {
+        matches!(self, BilinearForm::FacetMass { .. })
+    }
+}
+
+/// Linear functionals `ℓ(v)`.
+#[derive(Clone, Debug)]
+pub enum LinearForm {
+    /// `∫ f v` — scalar source.
+    Source { f: Coefficient },
+    /// `∫ f·v` — constant vector body force (elasticity).
+    VectorSource { f: Vec<f64> },
+    /// `∫_Γ g v` — Neumann flux (or the Robin inhomogeneity αg).
+    FacetFlux { g: Coefficient },
+    /// `∫_Γ t·v` — vector surface traction (topology optimization load).
+    FacetTraction { t: Vec<f64> },
+}
+
+impl LinearForm {
+    pub fn ncomp(&self, dim: usize) -> usize {
+        match self {
+            LinearForm::VectorSource { .. } | LinearForm::FacetTraction { .. } => dim,
+            _ => 1,
+        }
+    }
+
+    pub fn is_facet(&self) -> bool {
+        matches!(self, LinearForm::FacetFlux { .. } | LinearForm::FacetTraction { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fem::quadrature::tri_deg2;
+    use crate::fem::reference::RefElement;
+    use crate::fem::geometry;
+    use crate::mesh::structured::unit_square_tri;
+
+    #[test]
+    fn coefficient_from_fn_matches_points() {
+        let m = unit_square_tri(2);
+        let quad = tri_deg2();
+        let tab = RefElement::P1Tri.tabulate(&quad);
+        let geo = geometry::compute(&m, &tab, &quad);
+        let c = Coefficient::from_fn(&geo, |p| p[0] + 10.0 * p[1]);
+        for e in 0..geo.n_elems {
+            for q in 0..geo.q {
+                let p = geo.qpoint(e, q);
+                assert!((c.at(e, q, geo.q) - (p[0] + 10.0 * p[1])).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn nodal_interpolation_reproduces_linears() {
+        // P1 interpolation of a linear function is exact at quad points.
+        let m = unit_square_tri(3);
+        let quad = tri_deg2();
+        let tab = RefElement::P1Tri.tabulate(&quad);
+        let geo = geometry::compute(&m, &tab, &quad);
+        let u: Vec<f64> = (0..m.n_nodes())
+            .map(|i| 2.0 * m.point(i)[0] - 3.0 * m.point(i)[1] + 0.5)
+            .collect();
+        let c = Coefficient::from_nodal(&u, &m.cells, &tab);
+        for e in 0..geo.n_elems {
+            for q in 0..geo.q {
+                let p = geo.qpoint(e, q);
+                let expect = 2.0 * p[0] - 3.0 * p[1] + 0.5;
+                assert!((c.at(e, q, geo.q) - expect).abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn coefficient_map_applies_nonlinearity() {
+        let c = Coefficient::Quad(vec![1.0, 2.0, -1.0]).map(|u| u * (u * u - 1.0));
+        match c {
+            Coefficient::Quad(v) => assert_eq!(v, vec![0.0, 6.0, 0.0]),
+            _ => unreachable!(),
+        }
+    }
+}

@@ -1,0 +1,400 @@
+//! Stage I — Batch-Map: batched local element matrices and vectors.
+//!
+//! Computes the full local stiffness tensor `𝒦_local ∈ R^{E×kl×kl}`
+//! (resp. `ℱ_local ∈ R^{E×kl}`) in one pass over a flat buffer — the native
+//! reference implementation of Eq. (7)/(A.12). The AOT Pallas kernel
+//! (`python/compile/kernels/local_assembly.py`) computes the identical
+//! contraction; pytest checks them against the same pure-jnp oracle, and the
+//! Rust integration tests check the PJRT-executed artifact against this
+//! implementation.
+//!
+//! Parallelism: elements are partitioned across threads into disjoint
+//! output slices — no atomics, deterministic for any thread count.
+
+use crate::fem::geometry::ElementGeometry;
+use crate::fem::reference::Tabulation;
+use crate::util::threadpool;
+
+use super::forms::{BilinearForm, LinearForm};
+
+/// Batched local matrices for a bilinear form: returns `E × kl × kl`
+/// (row-major) with `kl = k·ncomp`.
+pub fn local_matrices(
+    form: &BilinearForm,
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+    dim: usize,
+) -> Vec<f64> {
+    let k = tab.k;
+    let nq = geo.q;
+    let ncomp = form.ncomp(dim);
+    let kl = k * ncomp;
+    let mut out = vec![0.0; geo.n_elems * kl * kl];
+    let threads = threadpool::default_threads();
+
+    // §Perf: P1 simplices have quadrature-constant physical gradients, so
+    // the basis contraction can be hoisted out of the q-loop (the weights ×
+    // coefficient sum collapses to one scalar per element). Measured ~2.5×
+    // on the 2D/3D diffusion Map stage (see EXPERIMENTS.md §Perf).
+    let const_grad = matches!(
+        tab.element,
+        crate::fem::reference::RefElement::P1Tri | crate::fem::reference::RefElement::P1Tet
+    );
+
+    match form {
+        BilinearForm::Diffusion { rho } if const_grad => {
+            threadpool::for_each_row_mut(&mut out, kl * kl, threads, |e, ke| {
+                let mut c = 0.0;
+                for q in 0..nq {
+                    c += geo.detj[e * nq + q] * quad_weight(tab, q) * rho.at(e, q, nq);
+                }
+                if c == 0.0 {
+                    return;
+                }
+                for a in 0..k {
+                    let ga = geo.grad(e, 0, a);
+                    for b in a..k {
+                        let gb = geo.grad(e, 0, b);
+                        let mut dotg = 0.0;
+                        for d in 0..dim {
+                            dotg += ga[d] * gb[d];
+                        }
+                        let v = c * dotg;
+                        ke[a * k + b] = v;
+                        ke[b * k + a] = v;
+                    }
+                }
+            });
+        }
+        BilinearForm::Diffusion { rho } => {
+            threadpool::for_each_row_mut(&mut out, kl * kl, threads, |e, ke| {
+                for q in 0..nq {
+                    let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let c = w * rho.at(e, q, nq);
+                    for a in 0..k {
+                        let ga = geo.grad(e, q, a);
+                        for b in 0..k {
+                            let gb = geo.grad(e, q, b);
+                            let mut dotg = 0.0;
+                            for d in 0..dim {
+                                dotg += ga[d] * gb[d];
+                            }
+                            ke[a * k + b] += c * dotg;
+                        }
+                    }
+                }
+            });
+        }
+        BilinearForm::Mass { rho } => {
+            threadpool::for_each_row_mut(&mut out, kl * kl, threads, |e, ke| {
+                for q in 0..nq {
+                    let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let c = w * rho.at(e, q, nq);
+                    for a in 0..k {
+                        let pa = tab.val(q, a);
+                        for b in 0..k {
+                            ke[a * k + b] += c * pa * tab.val(q, b);
+                        }
+                    }
+                }
+            });
+        }
+        BilinearForm::Elasticity { lambda, mu, e_mod } if const_grad => {
+            // Same hoisting for the (much heavier) elasticity contraction.
+            let (lambda, mu) = (*lambda, *mu);
+            threadpool::for_each_row_mut(&mut out, kl * kl, threads, |e, ke| {
+                let mut scale = 0.0;
+                for q in 0..nq {
+                    scale += geo.detj[e * nq + q] * quad_weight(tab, q) * e_mod.at(e, q, nq);
+                }
+                if scale == 0.0 {
+                    return;
+                }
+                for a in 0..k {
+                    let ga = geo.grad(e, 0, a);
+                    for b in 0..k {
+                        let gb = geo.grad(e, 0, b);
+                        let mut dotg = 0.0;
+                        for d in 0..dim {
+                            dotg += ga[d] * gb[d];
+                        }
+                        for i in 0..ncomp {
+                            for j in 0..ncomp {
+                                let mut v = lambda * ga[i] * gb[j] + mu * ga[j] * gb[i];
+                                if i == j {
+                                    v += mu * dotg;
+                                }
+                                ke[(a * ncomp + i) * kl + (b * ncomp + j)] = scale * v;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        BilinearForm::Elasticity { lambda, mu, e_mod } => {
+            let (lambda, mu) = (*lambda, *mu);
+            threadpool::for_each_row_mut(&mut out, kl * kl, threads, |e, ke| {
+                for q in 0..nq {
+                    let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let scale = w * e_mod.at(e, q, nq);
+                    for a in 0..k {
+                        let ga = geo.grad(e, q, a);
+                        for b in 0..k {
+                            let gb = geo.grad(e, q, b);
+                            let mut dotg = 0.0;
+                            for d in 0..dim {
+                                dotg += ga[d] * gb[d];
+                            }
+                            // K[(a,i),(b,j)] += λ Ga[i] Gb[j]
+                            //                 + μ (Ga[j] Gb[i] + δ_ij Ga·Gb)
+                            for i in 0..ncomp {
+                                for j in 0..ncomp {
+                                    let mut v =
+                                        lambda * ga[i] * gb[j] + mu * ga[j] * gb[i];
+                                    if i == j {
+                                        v += mu * dotg;
+                                    }
+                                    ke[(a * ncomp + i) * kl + (b * ncomp + j)] += scale * v;
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        BilinearForm::FacetMass { alpha } => {
+            // Identical to Mass but `geo` is facet geometry (metric in detj).
+            threadpool::for_each_row_mut(&mut out, kl * kl, threads, |e, ke| {
+                for q in 0..nq {
+                    let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let c = w * alpha.at(e, q, nq);
+                    for a in 0..k {
+                        let pa = tab.val(q, a);
+                        for b in 0..k {
+                            ke[a * k + b] += c * pa * tab.val(q, b);
+                        }
+                    }
+                }
+            });
+        }
+    }
+    out
+}
+
+/// Batched local load vectors for a linear form: returns `E × kl`.
+pub fn local_vectors(
+    form: &LinearForm,
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+    dim: usize,
+) -> Vec<f64> {
+    let k = tab.k;
+    let nq = geo.q;
+    let ncomp = form.ncomp(dim);
+    let kl = k * ncomp;
+    let mut out = vec![0.0; geo.n_elems * kl];
+    let threads = threadpool::default_threads();
+
+    match form {
+        LinearForm::Source { f } | LinearForm::FacetFlux { g: f } => {
+            threadpool::for_each_row_mut(&mut out, kl, threads, |e, fe| {
+                for q in 0..nq {
+                    let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let c = w * f.at(e, q, nq);
+                    for a in 0..k {
+                        fe[a] += c * tab.val(q, a);
+                    }
+                }
+            });
+        }
+        LinearForm::VectorSource { f } | LinearForm::FacetTraction { t: f } => {
+            assert_eq!(f.len(), ncomp);
+            let f = f.clone();
+            threadpool::for_each_row_mut(&mut out, kl, threads, |e, fe| {
+                for q in 0..nq {
+                    let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+                    if w == 0.0 {
+                        continue;
+                    }
+                    for a in 0..k {
+                        let pa = w * tab.val(q, a);
+                        for (i, fi) in f.iter().enumerate() {
+                            fe[a * ncomp + i] += pa * fi;
+                        }
+                    }
+                }
+            });
+        }
+    }
+    out
+}
+
+#[inline]
+fn quad_weight(tab: &Tabulation, q: usize) -> f64 {
+    tab.weights[q]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembly::forms::Coefficient;
+    use crate::fem::geometry;
+    use crate::fem::quadrature::{tet_deg2, tri_deg2};
+    use crate::fem::reference::RefElement;
+    use crate::mesh::structured::{unit_cube_tet, unit_square_tri};
+
+    #[test]
+    fn diffusion_local_matrix_reference_triangle() {
+        // Unit right triangle (0,0),(1,0),(0,1):
+        // K = 1/2 [[2,-1,-1],[-1,1,0],[-1,0,1]].
+        let coords = vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0];
+        let quad = tri_deg2();
+        let tab = RefElement::P1Tri.tabulate(&quad);
+        let geo = geometry::compute_from_coords(&coords, &tab, &quad, 2);
+        let ke = local_matrices(
+            &BilinearForm::Diffusion { rho: Coefficient::Const(1.0) },
+            &geo,
+            &tab,
+            2,
+        );
+        let expect = [1.0, -0.5, -0.5, -0.5, 0.5, 0.0, -0.5, 0.0, 0.5];
+        for (v, e) in ke.iter().zip(expect.iter()) {
+            assert!((v - e).abs() < 1e-14, "{ke:?}");
+        }
+    }
+
+    #[test]
+    fn mass_matrix_row_sums_equal_area_third() {
+        // Row sums of the P1 mass matrix equal |e|/3 (partition of unity).
+        let m = unit_square_tri(2);
+        let quad = tri_deg2();
+        let tab = RefElement::P1Tri.tabulate(&quad);
+        let geo = geometry::compute(&m, &tab, &quad);
+        let me = local_matrices(
+            &BilinearForm::Mass { rho: Coefficient::Const(1.0) },
+            &geo,
+            &tab,
+            2,
+        );
+        let area = 0.125 / 2.0 * 2.0; // each cell area = 1/8
+        for e in 0..m.n_cells() {
+            for a in 0..3 {
+                let s: f64 = (0..3).map(|b| me[e * 9 + a * 3 + b]).sum();
+                assert!((s - area / 3.0 * 0.5 * 2.0).abs() < 1e-14, "s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn stiffness_rows_sum_to_zero() {
+        // ∇(Σφ)=0 ⇒ every row of any diffusion local matrix sums to 0.
+        let m = unit_cube_tet(2);
+        let quad = tet_deg2();
+        let tab = RefElement::P1Tet.tabulate(&quad);
+        let geo = geometry::compute(&m, &tab, &quad);
+        let ke = local_matrices(
+            &BilinearForm::Diffusion { rho: Coefficient::Const(3.0) },
+            &geo,
+            &tab,
+            3,
+        );
+        for e in 0..m.n_cells() {
+            for a in 0..4 {
+                let s: f64 = (0..4).map(|b| ke[e * 16 + a * 4 + b]).sum();
+                assert!(s.abs() < 1e-13);
+            }
+        }
+    }
+
+    #[test]
+    fn elasticity_local_is_symmetric_and_psd_diag() {
+        let m = unit_cube_tet(1);
+        let quad = tet_deg2();
+        let tab = RefElement::P1Tet.tabulate(&quad);
+        let geo = geometry::compute(&m, &tab, &quad);
+        let (lambda, mu) = (0.5769, 0.3846);
+        let ke = local_matrices(
+            &BilinearForm::Elasticity {
+                lambda,
+                mu,
+                e_mod: Coefficient::Const(1.0),
+            },
+            &geo,
+            &tab,
+            3,
+        );
+        let kl = 12;
+        for e in 0..m.n_cells() {
+            let k = &ke[e * kl * kl..(e + 1) * kl * kl];
+            for i in 0..kl {
+                assert!(k[i * kl + i] >= 0.0, "negative diagonal");
+                for j in 0..kl {
+                    assert!((k[i * kl + j] - k[j * kl + i]).abs() < 1e-13, "asymmetry");
+                }
+            }
+            // Rigid translation in x must be in the kernel.
+            let mut ux = vec![0.0; kl];
+            for a in 0..4 {
+                ux[a * 3] = 1.0;
+            }
+            for i in 0..kl {
+                let r: f64 = (0..kl).map(|j| k[i * kl + j] * ux[j]).sum();
+                assert!(r.abs() < 1e-12, "translation not in kernel");
+            }
+        }
+    }
+
+    #[test]
+    fn source_vector_total_equals_integral() {
+        // Σ_ea (F_local)_ea = ∫ f over the domain (partition of unity).
+        let m = unit_square_tri(4);
+        let quad = tri_deg2();
+        let tab = RefElement::P1Tri.tabulate(&quad);
+        let geo = geometry::compute(&m, &tab, &quad);
+        let fe = local_vectors(
+            &LinearForm::Source { f: Coefficient::Const(2.0) },
+            &geo,
+            &tab,
+            2,
+        );
+        let total: f64 = fe.iter().sum();
+        assert!((total - 2.0).abs() < 1e-13);
+    }
+
+    #[test]
+    fn vector_source_components() {
+        let m = unit_cube_tet(2);
+        let quad = tet_deg2();
+        let tab = RefElement::P1Tet.tabulate(&quad);
+        let geo = geometry::compute(&m, &tab, &quad);
+        let fe = local_vectors(
+            &LinearForm::VectorSource { f: vec![1.0, 2.0, 3.0] },
+            &geo,
+            &tab,
+            3,
+        );
+        // Per-component totals = component × volume(=1).
+        let mut totals = [0.0f64; 3];
+        for (idx, v) in fe.iter().enumerate() {
+            totals[idx % 3] += v;
+        }
+        assert!((totals[0] - 1.0).abs() < 1e-12);
+        assert!((totals[1] - 2.0).abs() < 1e-12);
+        assert!((totals[2] - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,326 @@
+//! The TensorGalerkin engine: Batch-Map + Sparse-Reduce with cached
+//! topology.
+//!
+//! [`AssemblyContext`] plays the role of the paper's "setup" phase
+//! (Table 3): it tabulates the reference basis, computes batched geometry
+//! and builds the routing matrices once. Every subsequent assembly — with
+//! new coefficients, densities or time-step combinations — is two monolithic
+//! operations: one batched local contraction (Map) and one routing product
+//! (Reduce). When the PJRT runtime is attached (phase 2), the Map stage can
+//! be executed by the AOT-compiled Pallas kernel instead of the native code;
+//! the Reduce stage is identical for both backends.
+
+use crate::fem::dofmap::DofMap;
+use crate::fem::geometry::{self, ElementGeometry};
+use crate::fem::quadrature::{self, Quadrature};
+use crate::fem::reference::{RefElement, Tabulation};
+use crate::mesh::{CellType, Mesh};
+use crate::sparse::Csr;
+
+use super::forms::{BilinearForm, Coefficient, LinearForm};
+use super::local;
+use super::routing::Routing;
+
+/// Default volumetric quadrature for a cell type (exact for the P1/Q1
+/// forms used in the paper's benchmarks).
+pub fn default_quadrature(ct: CellType) -> Quadrature {
+    match ct {
+        CellType::Tri3 => quadrature::tri_deg2(),
+        CellType::Tet4 => quadrature::tet_deg2(),
+        CellType::Quad4 => quadrature::quad_gauss(2),
+    }
+}
+
+/// Default facet quadrature.
+pub fn default_facet_quadrature(ct: CellType) -> Quadrature {
+    match ct {
+        CellType::Tri3 | CellType::Quad4 => quadrature::edge_gauss(2),
+        CellType::Tet4 => quadrature::tri_deg2(),
+    }
+}
+
+/// Cached volumetric assembly state for one (mesh, ncomp) pair.
+pub struct AssemblyContext {
+    pub mesh: Mesh,
+    pub ncomp: usize,
+    pub dofmap: DofMap,
+    pub quad: Quadrature,
+    pub tab: Tabulation,
+    pub geo: ElementGeometry,
+    pub routing: Routing,
+}
+
+impl AssemblyContext {
+    /// Build the context (the paper's setup phase). `ncomp = 1` for scalar
+    /// problems, `= dim` for elasticity.
+    pub fn new(mesh: &Mesh, ncomp: usize) -> AssemblyContext {
+        let quad = default_quadrature(mesh.cell_type);
+        Self::with_quadrature(mesh, ncomp, quad)
+    }
+
+    /// Build with an explicit quadrature rule.
+    pub fn with_quadrature(mesh: &Mesh, ncomp: usize, quad: Quadrature) -> AssemblyContext {
+        let element = RefElement::for_cell(mesh.cell_type);
+        let tab = element.tabulate(&quad);
+        let geo = geometry::compute(mesh, &tab, &quad);
+        let dofmap = if ncomp == 1 {
+            DofMap::scalar(mesh)
+        } else {
+            DofMap::vector(mesh, ncomp)
+        };
+        let routing = Routing::build(&dofmap);
+        AssemblyContext {
+            mesh: mesh.clone(),
+            ncomp,
+            dofmap,
+            quad,
+            tab,
+            geo,
+            routing,
+        }
+    }
+
+    pub fn n_dofs(&self) -> usize {
+        self.dofmap.n_dofs
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.mesh.n_cells()
+    }
+
+    /// Stage I only: batched local matrices (`E × kl × kl` flat).
+    pub fn map_matrix(&self, form: &BilinearForm) -> Vec<f64> {
+        assert!(!form.is_facet(), "facet form passed to volumetric context");
+        assert_eq!(form.ncomp(self.mesh.dim), self.ncomp, "form/context ncomp mismatch");
+        local::local_matrices(form, &self.geo, &self.tab, self.mesh.dim)
+    }
+
+    /// Stage I only: batched local vectors (`E × kl` flat).
+    pub fn map_vector(&self, form: &LinearForm) -> Vec<f64> {
+        assert!(!form.is_facet());
+        assert_eq!(form.ncomp(self.mesh.dim), self.ncomp);
+        local::local_vectors(form, &self.geo, &self.tab, self.mesh.dim)
+    }
+
+    /// Map + Reduce: assemble the global matrix.
+    pub fn assemble_matrix(&self, form: &BilinearForm) -> Csr {
+        self.routing.reduce_matrix(&self.map_matrix(form))
+    }
+
+    /// Map + Reduce into preallocated CSR values (hot loop: zero alloc for
+    /// the global matrix).
+    pub fn assemble_matrix_into(&self, form: &BilinearForm, data: &mut [f64]) {
+        self.routing.reduce_matrix_into(&self.map_matrix(form), data);
+    }
+
+    /// Map + Reduce: assemble the global load vector.
+    pub fn assemble_vector(&self, form: &LinearForm) -> Vec<f64> {
+        self.routing.reduce_vector(&self.map_vector(form))
+    }
+
+    /// Reduce externally produced local matrices (the PJRT-artifact Map
+    /// path feeds this).
+    pub fn reduce_matrix(&self, local: &[f64]) -> Csr {
+        self.routing.reduce_matrix(local)
+    }
+
+    /// Reduce externally produced local vectors.
+    pub fn reduce_vector(&self, local: &[f64]) -> Vec<f64> {
+        self.routing.reduce_vector(local)
+    }
+
+    /// An empty global matrix sharing the cached pattern.
+    pub fn pattern_matrix(&self) -> Csr {
+        Csr {
+            nrows: self.n_dofs(),
+            ncols: self.n_dofs(),
+            indptr: self.routing.pattern_indptr.clone(),
+            indices: self.routing.pattern_indices.clone(),
+            data: vec![0.0; self.routing.nnz()],
+        }
+    }
+
+    /// Coefficient from a spatial function, evaluated at the cached
+    /// physical quadrature points.
+    pub fn coeff_fn(&self, f: impl Fn(&[f64]) -> f64) -> Coefficient {
+        Coefficient::from_fn(&self.geo, f)
+    }
+
+    /// Coefficient interpolated from a nodal (scalar) field.
+    pub fn coeff_nodal(&self, u: &[f64]) -> Coefficient {
+        Coefficient::from_nodal(u, &self.mesh.cells, &self.tab)
+    }
+}
+
+/// Cached boundary-facet assembly state (Neumann/Robin contributions are
+/// routed through the *same* Map-Reduce pipeline — batched facet einsum +
+/// sparse boundary routing; no special-case code path, §B.1.5).
+pub struct FacetContext {
+    /// The facet ids (into `mesh.facets`) covered by this context.
+    pub facet_ids: Vec<usize>,
+    pub ncomp: usize,
+    pub dofmap: DofMap,
+    pub quad: Quadrature,
+    pub tab: Tabulation,
+    pub geo: ElementGeometry,
+    pub routing: Routing,
+    dim: usize,
+}
+
+impl FacetContext {
+    /// Build over all boundary facets carrying one of `markers`.
+    pub fn new(mesh: &Mesh, markers: &[u32], ncomp: usize) -> FacetContext {
+        let facet_ids: Vec<usize> = (0..mesh.n_facets())
+            .filter(|&f| markers.contains(&mesh.facet_markers[f]))
+            .collect();
+        let quad = default_facet_quadrature(mesh.cell_type);
+        let element = RefElement::for_facet(mesh.cell_type);
+        let tab = element.tabulate(&quad);
+        let coords = geometry::gather_facet_coords(mesh, &facet_ids);
+        let geo = geometry::compute_facets(&coords, &tab, &quad, mesh.dim);
+        let dofmap = if ncomp == 1 {
+            DofMap::facet_scalar(mesh, &facet_ids)
+        } else {
+            DofMap::facet_vector(mesh, &facet_ids, ncomp)
+        };
+        let routing = Routing::build(&dofmap);
+        FacetContext {
+            facet_ids,
+            ncomp,
+            dofmap,
+            quad,
+            tab,
+            geo,
+            routing,
+            dim: mesh.dim,
+        }
+    }
+
+    /// Assemble a facet bilinear form (Robin mass) into a global-size CSR.
+    pub fn assemble_matrix(&self, form: &BilinearForm) -> Csr {
+        assert!(form.is_facet());
+        let local = local::local_matrices(form, &self.geo, &self.tab, self.dim);
+        self.routing.reduce_matrix(&local)
+    }
+
+    /// Assemble a facet linear form (Neumann flux / traction) into a
+    /// global-size vector.
+    pub fn assemble_vector(&self, form: &LinearForm) -> Vec<f64> {
+        assert!(form.is_facet());
+        let local = local::local_vectors(form, &self.geo, &self.tab, self.dim);
+        self.routing.reduce_vector(&local)
+    }
+
+    /// Coefficient from a spatial function at facet quadrature points.
+    pub fn coeff_fn(&self, f: impl Fn(&[f64]) -> f64) -> Coefficient {
+        Coefficient::from_fn(&self.geo, f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembly::scatter;
+    use crate::mesh::structured::{hollow_cube_tet, jitter, unit_cube_tet, unit_square_tri};
+    use crate::mesh::marker;
+
+    /// The central equivalence: Map-Reduce == scatter-add, to rounding.
+    #[test]
+    fn map_reduce_equals_scatter_add_poisson() {
+        let mut m = unit_square_tri(6);
+        jitter(&mut m, 0.2, 3);
+        let ctx = AssemblyContext::new(&m, 1);
+        let rho = ctx.coeff_fn(|p| 1.0 + p[0] * p[1]);
+        let form = BilinearForm::Diffusion { rho };
+        let k_mr = ctx.assemble_matrix(&form);
+        let k_sc = scatter::assemble_matrix(&m, &ctx.dofmap, &form, &ctx.tab, &ctx.geo);
+        assert_eq!(k_mr.indices, k_sc.indices);
+        assert!(k_mr.frob_distance(&k_sc) < 1e-12);
+    }
+
+    #[test]
+    fn map_reduce_equals_scatter_add_elasticity_3d() {
+        let m = hollow_cube_tet(4);
+        let ctx = AssemblyContext::new(&m, 3);
+        let form = BilinearForm::Elasticity {
+            lambda: 0.5769,
+            mu: 0.3846,
+            e_mod: Coefficient::Const(1.0),
+        };
+        let k_mr = ctx.assemble_matrix(&form);
+        let k_sc = scatter::assemble_matrix(&m, &ctx.dofmap, &form, &ctx.tab, &ctx.geo);
+        assert!(k_mr.frob_distance(&k_sc) < 1e-10);
+    }
+
+    #[test]
+    fn vector_assembly_matches_scatter() {
+        let m = unit_cube_tet(3);
+        let ctx = AssemblyContext::new(&m, 1);
+        let f = ctx.coeff_fn(|p| p[0] + 2.0 * p[1] + 3.0 * p[2]);
+        let form = LinearForm::Source { f };
+        let f_mr = ctx.assemble_vector(&form);
+        let f_sc = scatter::assemble_vector(&m, &ctx.dofmap, &form, &ctx.tab, &ctx.geo);
+        for (a, b) in f_mr.iter().zip(&f_sc) {
+            assert!((a - b).abs() < 1e-13);
+        }
+    }
+
+    #[test]
+    fn assemble_into_reuses_pattern() {
+        let m = unit_square_tri(4);
+        let ctx = AssemblyContext::new(&m, 1);
+        let mut k = ctx.pattern_matrix();
+        let form = BilinearForm::Diffusion { rho: Coefficient::Const(2.0) };
+        ctx.assemble_matrix_into(&form, &mut k.data);
+        let fresh = ctx.assemble_matrix(&form);
+        assert!(k.frob_distance(&fresh) < 1e-14);
+    }
+
+    #[test]
+    fn facet_mass_measures_boundary_length() {
+        // Σ_ij (facet mass)_ij = ∫_∂Ω 1 = perimeter = 4.
+        let m = unit_square_tri(8);
+        let fc = FacetContext::new(&m, &[marker::BOUNDARY], 1);
+        let robin = fc.assemble_matrix(&BilinearForm::FacetMass {
+            alpha: Coefficient::Const(1.0),
+        });
+        let total: f64 = robin.data.iter().sum();
+        assert!((total - 4.0).abs() < 1e-12, "perimeter {total}");
+    }
+
+    #[test]
+    fn facet_flux_measures_marked_portion() {
+        let mut m = unit_square_tri(8);
+        m.mark_boundary(|c| if c[1] < 1e-12 { marker::NEUMANN } else { marker::DIRICHLET });
+        let fc = FacetContext::new(&m, &[marker::NEUMANN], 1);
+        let g = fc.assemble_vector(&LinearForm::FacetFlux {
+            g: Coefficient::Const(5.0),
+        });
+        let total: f64 = g.iter().sum();
+        assert!((total - 5.0).abs() < 1e-12, "bottom edge flux {total}");
+        // Only bottom-edge nodes receive contributions.
+        for (i, &v) in g.iter().enumerate() {
+            if v != 0.0 {
+                assert!(m.point(i)[1].abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn facet_traction_vector_components() {
+        let m = crate::mesh::structured::rect_quad(6, 3, 60.0, 30.0);
+        let mut m = m;
+        m.mark_boundary(|c| {
+            if (c[0] - 60.0).abs() < 1e-9 && c[1] < 10.0 {
+                marker::NEUMANN
+            } else {
+                marker::DIRICHLET
+            }
+        });
+        let fc = FacetContext::new(&m, &[marker::NEUMANN], 2);
+        let t = fc.assemble_vector(&LinearForm::FacetTraction { t: vec![0.0, -100.0] });
+        let total_y: f64 = t.iter().skip(1).step_by(2).sum();
+        // One edge of length 10 under ty=-100 → total -1000.
+        assert!((total_y + 1000.0).abs() < 1e-9, "total_y={total_y}");
+    }
+}

@@ -1,0 +1,25 @@
+//! The TensorGalerkin assembly engine (the paper's core contribution).
+//!
+//! * [`forms`] — weak-form descriptions (diffusion, mass, elasticity,
+//!   boundary Neumann/Robin, sources) and coefficient evaluation.
+//! * [`local`] — **Stage I, Batch-Map**: batched local element matrices /
+//!   vectors as flat tensors `K_local ∈ R^{E×kl×kl}` (native reference
+//!   implementation of the Pallas kernel; bit-comparable to the AOT path).
+//! * [`routing`] — **Stage II, Sparse-Reduce**: precomputed routing
+//!   "matrices" `S_mat`, `S_vec` (stored as gather lists — a binary CSR ×
+//!   vector product is exactly a gather-sum) and their deterministic
+//!   application.
+//! * [`scatter`] — the classical per-element **scatter-add baseline**
+//!   (what FEniCS/SKFEM-style assembly does), kept for benchmarking.
+//! * [`map_reduce`] — the user-facing engine combining Map and Reduce with
+//!   cached topology (and, in phase 2, a PJRT artifact Map backend).
+
+pub mod forms;
+pub mod local;
+pub mod map_reduce;
+pub mod routing;
+pub mod scatter;
+
+pub use forms::{BilinearForm, Coefficient, LinearForm};
+pub use map_reduce::AssemblyContext;
+pub use routing::Routing;

@@ -1,0 +1,311 @@
+//! Stage II — Sparse-Reduce: topology-aware routing (Algorithm 2).
+//!
+//! Assembly is linear in the local contributions, so global aggregation can
+//! be precomputed from topology alone: the binary routing matrices
+//! `S_mat ∈ {0,1}^{nnz×Ekl²}` and `S_vec ∈ {0,1}^{N×Ekl}` of Eq. (8). A
+//! binary-CSR × vector product is exactly a *gather-sum*, which is how we
+//! store and execute it: for each global target (a CSR nonzero or a global
+//! DoF) the sorted list of flat local-tensor source indices. Application is
+//! deterministic (fixed summation order), parallel over disjoint targets —
+//! the paper's replacement for nondeterministic atomic scatter-add.
+
+use anyhow::Result;
+
+use crate::fem::dofmap::DofMap;
+use crate::sparse::Csr;
+use crate::util::threadpool;
+
+/// Precomputed routing from local tensors to the global CSR matrix and
+/// global vector. Built once per (mesh topology, DoF map); reused across
+/// coefficient changes, optimization iterations and time steps.
+#[derive(Clone, Debug)]
+pub struct Routing {
+    /// Number of global DoFs `N`.
+    pub n_dofs: usize,
+    /// Local DoFs per element `kl`.
+    pub n_local: usize,
+    /// Symbolic CSR pattern of the global matrix (values all zero).
+    pub pattern_indptr: Vec<usize>,
+    pub pattern_indices: Vec<usize>,
+    /// `S_mat` as gather lists: `mat_ptr[p]..mat_ptr[p+1]` indexes
+    /// `mat_src`, whose entries are flat positions into `vec(K_local)`.
+    pub mat_ptr: Vec<usize>,
+    pub mat_src: Vec<u32>,
+    /// `S_vec` gather lists over flat positions into `vec(F_local)`.
+    pub vec_ptr: Vec<usize>,
+    pub vec_src: Vec<u32>,
+}
+
+impl Routing {
+    /// Build routing from a DoF map (Algorithm 2's precomputation).
+    pub fn build(dofmap: &DofMap) -> Routing {
+        let n = dofmap.n_dofs;
+        let kl = dofmap.n_local;
+        let ne = dofmap.n_cells();
+
+        // --- Symbolic pattern: unique (row, col) pairs.
+        // Count row degrees with duplicates first, then sort+dedup per row.
+        let mut row_lists: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for e in 0..ne {
+            let dofs = dofmap.cell_dofs(e);
+            for &i in dofs {
+                for &j in dofs {
+                    row_lists[i].push(j);
+                }
+            }
+        }
+        let mut pattern_indptr = Vec::with_capacity(n + 1);
+        pattern_indptr.push(0);
+        let mut pattern_indices = Vec::new();
+        for list in row_lists.iter_mut() {
+            list.sort_unstable();
+            list.dedup();
+            pattern_indices.extend_from_slice(list);
+            pattern_indptr.push(pattern_indices.len());
+        }
+        let nnz = pattern_indices.len();
+
+        // --- S_mat gather lists (counting sort by target position).
+        let find_pos = |i: usize, j: usize| -> usize {
+            let lo = pattern_indptr[i];
+            let hi = pattern_indptr[i + 1];
+            lo + pattern_indices[lo..hi].binary_search(&j).expect("pattern miss")
+        };
+        let total_mat = ne * kl * kl;
+        assert!(total_mat < u32::MAX as usize, "local tensor too large for u32 routing");
+        let mut mat_count = vec![0usize; nnz + 1];
+        // First pass: count.
+        for e in 0..ne {
+            let dofs = dofmap.cell_dofs(e);
+            for &i in dofs {
+                for &j in dofs {
+                    mat_count[find_pos(i, j) + 1] += 1;
+                }
+            }
+        }
+        for p in 0..nnz {
+            mat_count[p + 1] += mat_count[p];
+        }
+        let mat_ptr = mat_count.clone();
+        let mut mat_src = vec![0u32; total_mat];
+        let mut next = mat_count;
+        for e in 0..ne {
+            let dofs = dofmap.cell_dofs(e);
+            for (a, &i) in dofs.iter().enumerate() {
+                for (b, &j) in dofs.iter().enumerate() {
+                    let p = find_pos(i, j);
+                    mat_src[next[p]] = (e * kl * kl + a * kl + b) as u32;
+                    next[p] += 1;
+                }
+            }
+        }
+
+        // --- S_vec gather lists.
+        let total_vec = ne * kl;
+        let mut vec_count = vec![0usize; n + 1];
+        for e in 0..ne {
+            for &i in dofmap.cell_dofs(e) {
+                vec_count[i + 1] += 1;
+            }
+        }
+        for i in 0..n {
+            vec_count[i + 1] += vec_count[i];
+        }
+        let vec_ptr = vec_count.clone();
+        let mut vec_src = vec![0u32; total_vec];
+        let mut nextv = vec_count;
+        for e in 0..ne {
+            for (a, &i) in dofmap.cell_dofs(e).iter().enumerate() {
+                vec_src[nextv[i]] = (e * kl + a) as u32;
+                nextv[i] += 1;
+            }
+        }
+
+        Routing {
+            n_dofs: n,
+            n_local: kl,
+            pattern_indptr,
+            pattern_indices,
+            mat_ptr,
+            mat_src,
+            vec_ptr,
+            vec_src,
+        }
+    }
+
+    /// Number of global nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.pattern_indices.len()
+    }
+
+    /// Reduce local matrices into preallocated CSR values:
+    /// `K = CSR(ℐ, S_mat · vec(K_local))`.
+    pub fn reduce_matrix_into(&self, local: &[f64], data: &mut [f64]) {
+        assert_eq!(data.len(), self.nnz());
+        let threads = threadpool::default_threads();
+        threadpool::for_each_row_mut(data, 1, threads, |p, out| {
+            let mut acc = 0.0;
+            for &s in &self.mat_src[self.mat_ptr[p]..self.mat_ptr[p + 1]] {
+                acc += local[s as usize];
+            }
+            out[0] = acc;
+        });
+    }
+
+    /// Reduce local matrices into a fresh CSR matrix.
+    pub fn reduce_matrix(&self, local: &[f64]) -> Csr {
+        assert_eq!(local.len(), self.mat_src.len(), "local tensor size mismatch");
+        let mut data = vec![0.0; self.nnz()];
+        self.reduce_matrix_into(local, &mut data);
+        Csr {
+            nrows: self.n_dofs,
+            ncols: self.n_dofs,
+            indptr: self.pattern_indptr.clone(),
+            indices: self.pattern_indices.clone(),
+            data,
+        }
+    }
+
+    /// Reduce local vectors into a global vector: `F = S_vec · vec(F_local)`.
+    pub fn reduce_vector_into(&self, local: &[f64], out: &mut [f64]) {
+        assert_eq!(local.len(), self.vec_src.len());
+        assert_eq!(out.len(), self.n_dofs);
+        let threads = threadpool::default_threads();
+        threadpool::for_each_row_mut(out, 1, threads, |i, o| {
+            let mut acc = 0.0;
+            for &s in &self.vec_src[self.vec_ptr[i]..self.vec_ptr[i + 1]] {
+                acc += local[s as usize];
+            }
+            o[0] = acc;
+        });
+    }
+
+    /// Allocating vector reduce.
+    pub fn reduce_vector(&self, local: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.n_dofs];
+        self.reduce_vector_into(local, &mut out);
+        out
+    }
+
+    /// The *transpose* action of `S_mat`: scatter global CSR values back to
+    /// local positions (`vec(K_local) = S_matᵀ v`). This is the backward
+    /// pass of Sparse-Reduce — a pure gather, used by TensorOpt's adjoint
+    /// to push `∂Γ/∂K` back to per-element contributions.
+    pub fn scatter_matrix_adjoint(&self, data: &[f64]) -> Vec<f64> {
+        assert_eq!(data.len(), self.nnz());
+        let mut local = vec![0.0; self.mat_src.len()];
+        for p in 0..self.nnz() {
+            let v = data[p];
+            for &s in &self.mat_src[self.mat_ptr[p]..self.mat_ptr[p + 1]] {
+                local[s as usize] = v;
+            }
+        }
+        local
+    }
+
+    /// Invariants for property tests: every flat local index routed exactly
+    /// once; gather lists sorted (deterministic order).
+    pub fn check_invariants(&self) -> Result<()> {
+        let mut seen = vec![false; self.mat_src.len()];
+        for &s in &self.mat_src {
+            anyhow::ensure!(!seen[s as usize], "matrix source {s} routed twice");
+            seen[s as usize] = true;
+        }
+        anyhow::ensure!(seen.iter().all(|&b| b), "matrix source not covered");
+        let mut seenv = vec![false; self.vec_src.len()];
+        for &s in &self.vec_src {
+            anyhow::ensure!(!seenv[s as usize], "vector source {s} routed twice");
+            seenv[s as usize] = true;
+        }
+        anyhow::ensure!(seenv.iter().all(|&b| b), "vector source not covered");
+        anyhow::ensure!(*self.mat_ptr.last().unwrap() == self.mat_src.len());
+        anyhow::ensure!(*self.vec_ptr.last().unwrap() == self.vec_src.len());
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::structured::{unit_cube_tet, unit_square_tri};
+
+    #[test]
+    fn routing_covers_all_sources_once() {
+        let m = unit_square_tri(4);
+        let dm = DofMap::scalar(&m);
+        let r = Routing::build(&dm);
+        r.check_invariants().unwrap();
+        assert_eq!(r.mat_src.len(), m.n_cells() * 9);
+        assert_eq!(r.vec_src.len(), m.n_cells() * 3);
+    }
+
+    #[test]
+    fn vector_routing_reduces_ones_to_valence() {
+        // Reducing all-ones local vectors gives each node its cell valence.
+        let m = unit_square_tri(2);
+        let dm = DofMap::scalar(&m);
+        let r = Routing::build(&dm);
+        let local = vec![1.0; m.n_cells() * 3];
+        let out = r.reduce_vector(&local);
+        // Corner node 0 belongs to 1 or 2 cells depending on the diagonal;
+        // total must equal total local entries.
+        let total: f64 = out.iter().sum();
+        assert_eq!(total, (m.n_cells() * 3) as f64);
+        for (i, &v) in out.iter().enumerate() {
+            assert!(v >= 1.0, "node {i} uncovered");
+        }
+    }
+
+    #[test]
+    fn matrix_reduce_matches_manual_sum() {
+        let m = unit_square_tri(2);
+        let dm = DofMap::scalar(&m);
+        let r = Routing::build(&dm);
+        // Local "matrices" = all ones: global entry (i,j) counts shared cells.
+        let local = vec![1.0; m.n_cells() * 9];
+        let k = r.reduce_matrix(&local);
+        k.check_invariants().unwrap();
+        // Diagonal of node i = number of incident cells.
+        let valence = {
+            let mut v = vec![0.0; m.n_nodes()];
+            for e in 0..m.n_cells() {
+                for &n in m.cell(e) {
+                    v[n] += 1.0;
+                }
+            }
+            v
+        };
+        for i in 0..m.n_nodes() {
+            assert_eq!(k.get(i, i), Some(valence[i]));
+        }
+    }
+
+    #[test]
+    fn vector_dofmap_routing() {
+        let m = unit_cube_tet(2);
+        let dm = DofMap::vector(&m, 3);
+        let r = Routing::build(&dm);
+        r.check_invariants().unwrap();
+        assert_eq!(r.n_dofs, 3 * m.n_nodes());
+        assert_eq!(r.mat_src.len(), m.n_cells() * 144);
+    }
+
+    #[test]
+    fn adjoint_scatter_is_right_inverse_on_sums() {
+        // scatter(reduce(x)) sums within routing groups: reducing again is
+        // idempotent in the sense reduce(scatter(y)) = valence ⊙ y for the
+        // vector case analog; check matrix adjoint shape/coverage instead.
+        let m = unit_square_tri(2);
+        let dm = DofMap::scalar(&m);
+        let r = Routing::build(&dm);
+        let data: Vec<f64> = (0..r.nnz()).map(|p| p as f64).collect();
+        let local = r.scatter_matrix_adjoint(&data);
+        assert_eq!(local.len(), m.n_cells() * 9);
+        // Re-reducing the scattered field reproduces data ⊙ multiplicity.
+        let reduced = r.reduce_matrix(&local);
+        for p in 0..r.nnz() {
+            let mult = (r.mat_ptr[p + 1] - r.mat_ptr[p]) as f64;
+            assert!((reduced.data[p] - data[p] * mult).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,222 @@
+//! Hard Dirichlet constraints via condensation.
+//!
+//! Given `K U = F` with prescribed values `U_d = g` on constrained DoFs,
+//! the reduced (condensed) system over free DoFs is
+//! `K_ff U_f = F_f − K_fd g`. TensorPILS imposes Dirichlet BCs the same way
+//! (reducing the linear system — "hard constraints", §B.2.2), so this
+//! module is shared by the solver, the neural-solver residual and the
+//! topology-optimization pipeline.
+
+use crate::sparse::Csr;
+
+/// A set of Dirichlet constraints: `dofs[i] ↦ values[i]`.
+#[derive(Clone, Debug, Default)]
+pub struct DirichletBc {
+    pub dofs: Vec<usize>,
+    pub values: Vec<f64>,
+}
+
+impl DirichletBc {
+    /// Homogeneous (zero) constraints.
+    pub fn homogeneous(dofs: Vec<usize>) -> DirichletBc {
+        let values = vec![0.0; dofs.len()];
+        DirichletBc { dofs, values }
+    }
+
+    /// Constraints from a boundary-value function evaluated at nodes.
+    /// `dofs` must be scalar node DoFs.
+    pub fn from_fn(
+        mesh: &crate::mesh::Mesh,
+        nodes: &[usize],
+        g: impl Fn(&[f64]) -> f64,
+    ) -> DirichletBc {
+        DirichletBc {
+            dofs: nodes.to_vec(),
+            values: nodes.iter().map(|&n| g(mesh.point(n))).collect(),
+        }
+    }
+
+    /// Sorted + deduplicated copy (required by [`condense`]).
+    pub fn normalized(&self) -> DirichletBc {
+        let mut pairs: Vec<(usize, f64)> =
+            self.dofs.iter().copied().zip(self.values.iter().copied()).collect();
+        pairs.sort_by_key(|&(d, _)| d);
+        pairs.dedup_by_key(|&mut (d, _)| d);
+        DirichletBc {
+            dofs: pairs.iter().map(|&(d, _)| d).collect(),
+            values: pairs.iter().map(|&(_, v)| v).collect(),
+        }
+    }
+}
+
+/// A condensed linear system plus the bookkeeping to expand solutions back
+/// to the full DoF set.
+#[derive(Clone, Debug)]
+pub struct ReducedSystem {
+    /// Sorted free (unconstrained) DoF indices.
+    pub free: Vec<usize>,
+    /// `K_ff` over free DoFs.
+    pub k: Csr,
+    /// `F_f − K_fd·g`.
+    pub rhs: Vec<f64>,
+    /// Constraints used for expansion.
+    pub bc: DirichletBc,
+    n_full: usize,
+}
+
+impl ReducedSystem {
+    /// Expand a free-DoF solution to the full DoF vector (inserting the
+    /// prescribed boundary values).
+    pub fn expand(&self, u_free: &[f64]) -> Vec<f64> {
+        assert_eq!(u_free.len(), self.free.len());
+        let mut full = vec![0.0; self.n_full];
+        for (&d, &v) in self.bc.dofs.iter().zip(&self.bc.values) {
+            full[d] = v;
+        }
+        for (&f, &v) in self.free.iter().zip(u_free) {
+            full[f] = v;
+        }
+        full
+    }
+
+    /// Restrict a full vector to free DoFs.
+    pub fn restrict(&self, full: &[f64]) -> Vec<f64> {
+        self.free.iter().map(|&f| full[f]).collect()
+    }
+}
+
+/// Condense `K U = F` with the given Dirichlet constraints.
+pub fn condense(k: &Csr, f: &[f64], bc: &DirichletBc) -> ReducedSystem {
+    let n = k.nrows;
+    assert_eq!(f.len(), n);
+    let bc = bc.normalized();
+    let mut constrained = vec![false; n];
+    let mut gvals = vec![0.0; n];
+    for (&d, &v) in bc.dofs.iter().zip(&bc.values) {
+        assert!(d < n, "constraint DoF out of range");
+        constrained[d] = true;
+        gvals[d] = v;
+    }
+    let free: Vec<usize> = (0..n).filter(|&i| !constrained[i]).collect();
+    let mut free_index = vec![usize::MAX; n];
+    for (new, &old) in free.iter().enumerate() {
+        free_index[old] = new;
+    }
+
+    // Build K_ff and rhs = F_f − K_fd g in one pass over rows.
+    let mut indptr = Vec::with_capacity(free.len() + 1);
+    indptr.push(0);
+    let mut indices = Vec::new();
+    let mut data = Vec::new();
+    let mut rhs = Vec::with_capacity(free.len());
+    for &r in &free {
+        let (cols, vals) = k.row(r);
+        let mut b = f[r];
+        for (c, v) in cols.iter().zip(vals) {
+            if constrained[*c] {
+                b -= v * gvals[*c];
+            } else {
+                indices.push(free_index[*c]);
+                data.push(*v);
+            }
+        }
+        indptr.push(indices.len());
+        rhs.push(b);
+    }
+    ReducedSystem {
+        k: Csr {
+            nrows: free.len(),
+            ncols: free.len(),
+            indptr,
+            indices,
+            data,
+        },
+        free,
+        rhs,
+        bc,
+        n_full: n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
+    use crate::mesh::structured::unit_square_tri;
+    use crate::sparse::Dense;
+
+    #[test]
+    fn condensed_poisson_solves_manufactured_solution() {
+        // -Δu = 0 with u = x on the boundary ⇒ u = x everywhere.
+        let m = unit_square_tri(6);
+        let ctx = AssemblyContext::new(&m, 1);
+        let k = ctx.assemble_matrix(&BilinearForm::Diffusion {
+            rho: Coefficient::Const(1.0),
+        });
+        let f = ctx.assemble_vector(&LinearForm::Source { f: Coefficient::Const(0.0) });
+        let bc = DirichletBc::from_fn(&m, &m.boundary_nodes(), |p| p[0]);
+        let sys = condense(&k, &f, &bc);
+        // Solve densely (small system) and compare to u = x.
+        let kd = sys.k.to_dense();
+        let dense = Dense {
+            nrows: sys.k.nrows,
+            ncols: sys.k.ncols,
+            data: kd,
+        };
+        let u_free = dense.solve(&sys.rhs).unwrap();
+        let u = sys.expand(&u_free);
+        for i in 0..m.n_nodes() {
+            assert!((u[i] - m.point(i)[0]).abs() < 1e-10, "node {i}");
+        }
+    }
+
+    #[test]
+    fn expand_restrict_roundtrip() {
+        let m = unit_square_tri(3);
+        let ctx = AssemblyContext::new(&m, 1);
+        let k = ctx.assemble_matrix(&BilinearForm::Diffusion {
+            rho: Coefficient::Const(1.0),
+        });
+        let f = vec![0.0; ctx.n_dofs()];
+        let bc = DirichletBc::homogeneous(m.boundary_nodes());
+        let sys = condense(&k, &f, &bc);
+        let u_free: Vec<f64> = (0..sys.free.len()).map(|i| i as f64).collect();
+        let full = sys.expand(&u_free);
+        assert_eq!(sys.restrict(&full), u_free);
+        for &d in &sys.bc.dofs {
+            assert_eq!(full[d], 0.0);
+        }
+    }
+
+    #[test]
+    fn duplicate_constraints_are_deduped() {
+        let bc = DirichletBc {
+            dofs: vec![3, 1, 3, 2],
+            values: vec![30.0, 10.0, 30.0, 20.0],
+        };
+        let n = bc.normalized();
+        assert_eq!(n.dofs, vec![1, 2, 3]);
+        assert_eq!(n.values, vec![10.0, 20.0, 30.0]);
+    }
+
+    #[test]
+    fn inhomogeneous_rhs_lift() {
+        // 1D-like check on a tiny matrix: K = [[2,-1,0],[-1,2,-1],[0,-1,2]],
+        // constrain u2 = 5 ⇒ reduced rhs gains +5 at row of u1.
+        let k = Csr {
+            nrows: 3,
+            ncols: 3,
+            indptr: vec![0, 2, 5, 7],
+            indices: vec![0, 1, 0, 1, 2, 1, 2],
+            data: vec![2.0, -1.0, -1.0, 2.0, -1.0, -1.0, 2.0],
+        };
+        let f = vec![0.0; 3];
+        let bc = DirichletBc {
+            dofs: vec![2],
+            values: vec![5.0],
+        };
+        let sys = condense(&k, &f, &bc);
+        assert_eq!(sys.free, vec![0, 1]);
+        assert_eq!(sys.rhs, vec![0.0, 5.0]);
+    }
+}

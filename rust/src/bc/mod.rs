@@ -1,0 +1,11 @@
+//! Boundary conditions.
+//!
+//! * [`dirichlet`] — hard Dirichlet constraints by condensation (the paper's
+//!   "condensed stiffness matrix", §B.1.2/B.2.2).
+//! * Neumann and Robin conditions need no dedicated module: they are
+//!   assembled by [`crate::assembly::map_reduce::FacetContext`] through the
+//!   same Map-Reduce pipeline and simply added to `K`/`F`.
+
+pub mod dirichlet;
+
+pub use dirichlet::{condense, DirichletBc, ReducedSystem};

@@ -1,0 +1,19 @@
+//! Request/response types of the batch-solve service.
+
+/// A single solve request: right-hand side nodal values for the shared
+/// operator (the Fig B.4 regime — fixed mesh/K, varying `f`).
+#[derive(Clone, Debug)]
+pub struct SolveRequest {
+    pub id: u64,
+    /// Nodal source values, interpolated to quadrature by the solver.
+    pub f_nodal: Vec<f64>,
+}
+
+/// The answer.
+#[derive(Clone, Debug)]
+pub struct SolveResponse {
+    pub id: u64,
+    pub u: Vec<f64>,
+    pub iterations: usize,
+    pub rel_residual: f64,
+}

@@ -1,0 +1,137 @@
+//! The batched solver: amortizes per-problem state across a group of
+//! right-hand sides.
+//!
+//! Naive pipeline per sample: assemble K → assemble F → condense → build
+//! preconditioner → solve. Batched pipeline: K, condensation bookkeeping
+//! and the preconditioner are built ONCE; each sample costs one load
+//! assembly + one iterative solve. This is exactly the amortization
+//! Fig B.4 measures (flat runtime until the per-sample cost dominates).
+
+use anyhow::Result;
+
+use crate::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
+use crate::bc::{condense, DirichletBc, ReducedSystem};
+use crate::mesh::Mesh;
+use crate::solver::{cg, JacobiPrecond, SolverConfig};
+
+use super::api::{SolveRequest, SolveResponse};
+
+/// Shared state for a fixed-operator batch workload.
+pub struct BatchSolver {
+    pub ctx: AssemblyContext,
+    sys: ReducedSystem,
+    precond: JacobiPrecond,
+    config: SolverConfig,
+}
+
+impl BatchSolver {
+    /// Build the amortized state (assemble K once, condense, precondition).
+    pub fn new(mesh: &Mesh, config: SolverConfig) -> BatchSolver {
+        let ctx = AssemblyContext::new(mesh, 1);
+        let k = ctx.assemble_matrix(&BilinearForm::Diffusion {
+            rho: Coefficient::Const(1.0),
+        });
+        let zero = vec![0.0; ctx.n_dofs()];
+        let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
+        let sys = condense(&k, &zero, &bc);
+        let precond = JacobiPrecond::new(&sys.k);
+        BatchSolver {
+            ctx,
+            sys,
+            precond,
+            config,
+        }
+    }
+
+    /// Solve one request against the amortized operator.
+    pub fn solve_one(&self, req: &SolveRequest) -> Result<SolveResponse> {
+        let f = self.ctx.assemble_vector(&LinearForm::Source {
+            f: self.ctx.coeff_nodal(&req.f_nodal),
+        });
+        let rhs = self.sys.restrict(&f);
+        let (u_free, stats) = cg(&self.sys.k, &rhs, &self.precond, &self.config);
+        anyhow::ensure!(stats.converged, "batch solve {} failed: {stats:?}", req.id);
+        Ok(SolveResponse {
+            id: req.id,
+            u: self.sys.expand(&u_free),
+            iterations: stats.iterations,
+            rel_residual: stats.rel_residual,
+        })
+    }
+
+    /// Solve a whole batch; per-sample state sharing is the point.
+    pub fn solve_batch(&self, reqs: &[SolveRequest]) -> Result<Vec<SolveResponse>> {
+        reqs.iter().map(|r| self.solve_one(r)).collect()
+    }
+
+    pub fn n_dofs(&self) -> usize {
+        self.ctx.n_dofs()
+    }
+}
+
+/// The naive per-sample pipeline (baseline in Fig B.4): everything rebuilt
+/// for every sample.
+pub fn solve_unbatched(
+    mesh: &Mesh,
+    reqs: &[SolveRequest],
+    config: SolverConfig,
+) -> Result<Vec<SolveResponse>> {
+    reqs.iter()
+        .map(|r| {
+            let solver = BatchSolver::new(mesh, config);
+            solver.solve_one(r)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::structured::unit_cube_tet;
+    use crate::util::rng::Rng;
+
+    fn requests(n_nodes: usize, count: usize, seed: u64) -> Vec<SolveRequest> {
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|id| SolveRequest {
+                id: id as u64,
+                f_nodal: (0..n_nodes).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batched_equals_unbatched() {
+        let mesh = unit_cube_tet(4);
+        let cfg = SolverConfig::default();
+        let reqs = requests(mesh.n_nodes(), 3, 5);
+        let batch = BatchSolver::new(&mesh, cfg);
+        let a = batch.solve_batch(&reqs).unwrap();
+        let b = solve_unbatched(&mesh, &reqs, cfg).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.id, y.id);
+            assert!(crate::util::rel_l2(&x.u, &y.u) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn linearity_of_the_solve() {
+        // u(f1 + f2) = u(f1) + u(f2) — catches state leakage across batch.
+        let mesh = unit_cube_tet(3);
+        let batch = BatchSolver::new(&mesh, SolverConfig::default());
+        let reqs = requests(mesh.n_nodes(), 2, 9);
+        let sum_req = SolveRequest {
+            id: 99,
+            f_nodal: reqs[0]
+                .f_nodal
+                .iter()
+                .zip(&reqs[1].f_nodal)
+                .map(|(a, b)| a + b)
+                .collect(),
+        };
+        let r = batch.solve_batch(&reqs).unwrap();
+        let rs = batch.solve_one(&sum_req).unwrap();
+        let sum_u: Vec<f64> = r[0].u.iter().zip(&r[1].u).map(|(a, b)| a + b).collect();
+        assert!(crate::util::rel_l2(&rs.u, &sum_u) < 1e-7);
+    }
+}

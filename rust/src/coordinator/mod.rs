@@ -1,0 +1,18 @@
+//! Batch-solve coordinator: the serving layer for many-query workloads
+//! (batched dataset generation, Fig B.4; uncertainty quantification;
+//! operator-learning data pipelines).
+//!
+//! Architecture (vLLM-router-style, scaled to this problem): callers submit
+//! [`SolveRequest`]s to a [`BatchServer`]; a batcher thread drains the
+//! queue, groups requests sharing a problem signature, amortizes the
+//! per-problem state (assembly context, routing, condensation pattern,
+//! preconditioner) across the group, and answers через response channels.
+//! Everything is std::sync::mpsc — no external runtime.
+
+pub mod api;
+pub mod batcher;
+pub mod server;
+
+pub use api::{SolveRequest, SolveResponse};
+pub use batcher::BatchSolver;
+pub use server::BatchServer;

@@ -1,0 +1,133 @@
+//! The leader/worker batch server: a request queue drained by a worker
+//! thread that groups pending requests into batches (vLLM-style continuous
+//! batching, degenerate single-queue form appropriate to one shared
+//! operator) and answers over per-request channels.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::mesh::Mesh;
+use crate::solver::SolverConfig;
+
+use super::api::{SolveRequest, SolveResponse};
+use super::batcher::BatchSolver;
+
+enum Msg {
+    Request(SolveRequest, Sender<Result<SolveResponse>>),
+    Shutdown,
+}
+
+/// Handle to the running server.
+pub struct BatchServer {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    /// Max requests drained into one batch.
+    pub max_batch: usize,
+}
+
+impl BatchServer {
+    /// Spawn the worker; `max_batch` bounds the drain per cycle.
+    pub fn start(mesh: Mesh, config: SolverConfig, max_batch: usize) -> BatchServer {
+        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let worker = std::thread::spawn(move || {
+            let solver = BatchSolver::new(&mesh, config);
+            let mut pending: Vec<(SolveRequest, Sender<Result<SolveResponse>>)> = Vec::new();
+            loop {
+                // Block for the first message, then drain without blocking.
+                match rx.recv() {
+                    Err(_) | Ok(Msg::Shutdown) => break,
+                    Ok(Msg::Request(r, reply)) => pending.push((r, reply)),
+                }
+                while pending.len() < max_batch {
+                    match rx.try_recv() {
+                        Ok(Msg::Request(r, reply)) => pending.push((r, reply)),
+                        Ok(Msg::Shutdown) => {
+                            for (req, reply) in pending.drain(..) {
+                                let _ = reply.send(solver.solve_one(&req));
+                            }
+                            return;
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for (req, reply) in pending.drain(..) {
+                    let _ = reply.send(solver.solve_one(&req));
+                }
+            }
+        });
+        BatchServer {
+            tx,
+            worker: Some(worker),
+            max_batch,
+        }
+    }
+
+    /// Submit a request; returns the receiver for the response.
+    pub fn submit(&self, req: SolveRequest) -> Receiver<Result<SolveResponse>> {
+        let (reply_tx, reply_rx) = channel();
+        let _ = self.tx.send(Msg::Request(req, reply_tx));
+        reply_rx
+    }
+
+    /// Submit many and wait for all.
+    pub fn solve_all(&self, reqs: Vec<SolveRequest>) -> Result<Vec<SolveResponse>> {
+        let receivers: Vec<_> = reqs.into_iter().map(|r| self.submit(r)).collect();
+        let mut out = Vec::with_capacity(receivers.len());
+        for rx in receivers {
+            out.push(rx.recv()??);
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for BatchServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::structured::unit_cube_tet;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn server_answers_all_requests() {
+        let mesh = unit_cube_tet(3);
+        let n = mesh.n_nodes();
+        let server = BatchServer::start(mesh, SolverConfig::default(), 8);
+        let mut rng = Rng::new(2);
+        let reqs: Vec<_> = (0..10)
+            .map(|id| crate::coordinator::SolveRequest {
+                id,
+                f_nodal: (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            })
+            .collect();
+        let out = server.solve_all(reqs).unwrap();
+        assert_eq!(out.len(), 10);
+        let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        assert!(out.iter().all(|r| r.rel_residual < 1e-8));
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let mesh = unit_cube_tet(2);
+        let n = mesh.n_nodes();
+        let server = BatchServer::start(mesh, SolverConfig::default(), 4);
+        let rx = server.submit(crate::coordinator::SolveRequest {
+            id: 7,
+            f_nodal: vec![1.0; n],
+        });
+        drop(server); // shutdown must still answer
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, 7);
+    }
+}

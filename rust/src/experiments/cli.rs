@@ -1,0 +1,61 @@
+//! CLI dispatcher: `tensor-galerkin <command> [options]`.
+
+use crate::util::cli::Args;
+
+const HELP: &str = "\
+tensor-galerkin — TensorGalerkin reproduction CLI
+
+USAGE:
+    tensor-galerkin <COMMAND> [OPTIONS]
+
+COMMANDS (one per paper experiment, DESIGN.md §5):
+    solve       solve a built-in PDE benchmark (Fig 2 instances)
+                  --problem poisson3d|elasticity3d  --n <cells>  --vtk <path>
+    fig2        solver scaling sweep (Fig 2a-b)
+                  --sizes 4,8,12,16  --problem both|poisson3d|elasticity3d
+    table1      neural PDE solver comparison (Table 1)
+                  --adam N --lbfgs N --freqs 2,4,8 --seed S [--vtk]
+    table2      physics-informed operator learning (Table 2)
+                  --pde wave|ac|both --epochs N --samples N
+    table3      topology-optimization timing (Table 3)
+                  --iters 51 [--vtk]
+    figb4       batched data-generation scaling (Fig B.4)
+    figb18      data-efficiency sweep (Fig B.18)
+    tableb2     PINN error/residual under refinement (Table B.2)
+    tableb3     mixed-BC benchmark, circle + boomerang (Table B.3)
+    help        show this message
+
+Artifacts must exist (run `make artifacts`) for commands touching the
+PJRT path; native-only commands run without them.
+";
+
+pub fn run(raw: Vec<String>) -> i32 {
+    let args = Args::parse(&raw);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "help" | "--help" | "-h" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "solve" => crate::experiments::fig2::run(&args),
+        "fig2" => crate::experiments::fig2::run(&args),
+        "table1" => crate::experiments::table1::run(&args),
+        "table2" => crate::experiments::table2::run(&args),
+        "table3" => crate::experiments::table3::run(&args),
+        "figb4" => crate::experiments::figb4::run(&args),
+        "figb18" => crate::experiments::table2::run_figb18(&args),
+        "tableb2" => crate::experiments::tableb2::run(&args),
+        "tableb3" => crate::experiments::tableb3::run(&args),
+        other => {
+            eprintln!("unknown command {other:?}\n\n{HELP}");
+            return 2;
+        }
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

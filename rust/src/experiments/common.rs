@@ -1,0 +1,79 @@
+//! Shared experiment plumbing: result records written as JSON (so
+//! EXPERIMENTS.md tables regenerate from raw data) + markdown helpers.
+
+use std::io::Write as _;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// A tagged experiment record appended to `target/experiments.jsonl`.
+#[derive(Debug)]
+pub struct ExperimentRecord {
+    pub experiment: String,
+    pub fields: Vec<(String, Json)>,
+}
+
+impl ExperimentRecord {
+    pub fn new(experiment: &str) -> Self {
+        ExperimentRecord {
+            experiment: experiment.to_string(),
+            fields: Vec::new(),
+        }
+    }
+
+    pub fn num(mut self, key: &str, value: f64) -> Self {
+        self.fields.push((key.to_string(), Json::Num(value)));
+        self
+    }
+
+    pub fn str(mut self, key: &str, value: &str) -> Self {
+        self.fields.push((key.to_string(), Json::Str(value.to_string())));
+        self
+    }
+
+    /// Append to the experiments log.
+    pub fn write(self) -> Result<()> {
+        std::fs::create_dir_all("target")?;
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open("target/experiments.jsonl")?;
+        let mut pairs = vec![("experiment", Json::Str(self.experiment.clone()))];
+        for (k, v) in &self.fields {
+            pairs.push((k.as_str(), v.clone()));
+        }
+        writeln!(file, "{}", crate::util::json::obj(pairs).to_string_compact())?;
+        Ok(())
+    }
+}
+
+/// Render a markdown table.
+pub fn markdown_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push_str("| ");
+    s.push_str(&headers.join(" | "));
+    s.push_str(" |\n|");
+    for _ in headers {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for row in rows {
+        s.push_str("| ");
+        s.push_str(&row.join(" | "));
+        s.push_str(" |\n");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let t = markdown_table(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("| a | b |"));
+        assert!(t.contains("| 1 | 2 |"));
+    }
+}

@@ -1,0 +1,71 @@
+//! Fig B.4 — efficient batch data generation: wall-clock of generating a
+//! batch of (f, u) pairs on a fixed 3D Poisson operator (~7.3k DoFs in the
+//! paper), batched (amortized operator state) vs the naive per-sample
+//! pipeline. The shape under test: near-flat scaling at small batches and
+//! a sub-linear slope at large ones.
+
+use anyhow::Result;
+
+use crate::coordinator::batcher::{solve_unbatched, BatchSolver};
+use crate::coordinator::SolveRequest;
+use crate::experiments::common::{markdown_table, ExperimentRecord};
+use crate::mesh::structured::unit_cube_tet;
+use crate::solver::SolverConfig;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+use crate::util::timer::time_it;
+
+pub fn run(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 18); // 19³ = 6,859 nodes ≈ paper's 7,315 DoFs
+    let batches = args.get_usize_list("batches", &[1, 4, 16, 64, 256]);
+    let mesh = unit_cube_tet(n);
+    let cfg = SolverConfig {
+        rel_tol: 1e-8,
+        ..SolverConfig::default()
+    };
+    let mut rng = Rng::new(42);
+    let gen = |count: usize, rng: &mut Rng| -> Vec<SolveRequest> {
+        (0..count)
+            .map(|id| SolveRequest {
+                id: id as u64,
+                f_nodal: (0..mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            })
+            .collect()
+    };
+
+    let (solver, setup_s) = time_it(|| BatchSolver::new(&mesh, cfg));
+    println!(
+        "figb4: mesh {} nodes ({} DoFs condensed), setup {:.3}s",
+        mesh.n_nodes(),
+        solver.n_dofs(),
+        setup_s
+    );
+
+    let mut rows = Vec::new();
+    for &b in &batches {
+        let reqs = gen(b, &mut rng);
+        let (out, batched_s) = time_it(|| solver.solve_batch(&reqs).unwrap());
+        assert_eq!(out.len(), b);
+        // Naive baseline gets expensive fast; cap the measured set and
+        // extrapolate linearly (it is embarrassingly per-sample).
+        let measured = b.min(8);
+        let (_, naive_part) = time_it(|| solve_unbatched(&mesh, &reqs[..measured], cfg).unwrap());
+        let naive_s = naive_part * b as f64 / measured as f64;
+        rows.push(vec![
+            format!("{b}"),
+            format!("{:.3} s", setup_s + batched_s),
+            format!("{:.3} s", naive_s),
+            format!("{:.1}×", naive_s / (setup_s + batched_s)),
+        ]);
+        ExperimentRecord::new("figb4")
+            .num("batch", b as f64)
+            .num("batched_s", setup_s + batched_s)
+            .num("naive_s", naive_s)
+            .write()?;
+    }
+    println!(
+        "\nFig B.4 (batched data generation):\n\n{}",
+        markdown_table(&["Batch", "Batched (ours)", "Per-sample naive", "Speedup"], &rows)
+    );
+    Ok(())
+}

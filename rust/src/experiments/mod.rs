@@ -1,0 +1,14 @@
+//! Experiment drivers — one module per paper table/figure (DESIGN.md §5) —
+//! and the CLI dispatcher.
+
+pub mod cli;
+pub mod common;
+pub mod fig2;
+pub mod figb4;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod tableb2;
+pub mod tableb3;
+
+pub use common::ExperimentRecord;

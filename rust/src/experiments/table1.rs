@@ -1,0 +1,233 @@
+//! Table 1 — neural PDE solver comparison on the 2D checkerboard Poisson
+//! problem: PINN vs VPINN vs Deep Ritz vs TensorPILS, shared SIREN
+//! backbone, shared mesh, Adam + L-BFGS schedule. Reports relative L2
+//! error (%) per frequency K and training throughput (it/s).
+//!
+//! Schedule defaults are scaled for the 1-core CI box (paper: 10k Adam +
+//! 200 L-BFGS on an RTX 3090); pass `--adam/--lbfgs` to run the full
+//! schedule. All methods share the schedule, so rankings are comparable.
+
+use anyhow::Result;
+
+use crate::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
+use crate::analysis::mms::checkerboard;
+use crate::bc::DirichletBc;
+use crate::experiments::common::{markdown_table, ExperimentRecord};
+use crate::fem::geometry::gather_coords;
+use crate::mesh::structured::unit_square_tri;
+use crate::pils::trainer::{train_schedule, ArtifactLoss, Operand};
+use crate::pils::siren;
+use crate::runtime::Runtime;
+use crate::solver::{Method, SolverConfig};
+use crate::tensormesh::{self, Problem};
+use crate::util::cli::Args;
+
+/// The four Table-1 methods.
+pub const METHODS: [&str; 4] = ["pinn", "vpinn", "deepritz", "pils"];
+
+pub struct MethodResult {
+    pub method: String,
+    pub kfreq: usize,
+    pub rel_l2_pct: f64,
+    pub adam_its: f64,
+    pub lbfgs_its: f64,
+    pub final_loss: f64,
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let adam_iters = args.get_usize("adam", 400);
+    let lbfgs_iters = args.get_usize("lbfgs", 25);
+    let lr = args.get_f64("lr", 1e-3);
+    let seed = args.get_usize("seed", 0);
+    let freqs = args.get_usize_list("freqs", &[2, 4, 8]);
+    let methods: Vec<String> = match args.positional.get(1) {
+        Some(m) => vec![m.clone()],
+        None => METHODS.iter().map(|s| s.to_string()).collect(),
+    };
+
+    let rt = Runtime::new()?;
+    let results = run_with(&rt, &methods, &freqs, adam_iters, lbfgs_iters, lr, seed, args.flag("vtk"))?;
+
+    // Render Table 1.
+    let mut rows = Vec::new();
+    for m in &methods {
+        let mut row = vec![m.to_string()];
+        for &k in &freqs {
+            let r = results
+                .iter()
+                .find(|r| &r.method == m && r.kfreq == k)
+                .expect("missing result");
+            row.push(format!("{:.2}", r.rel_l2_pct));
+        }
+        let r0 = results.iter().find(|r| &r.method == m).unwrap();
+        row.push(format!("{:.1}", r0.adam_its));
+        row.push(format!("{:.1}", r0.lbfgs_its));
+        rows.push(row);
+    }
+    let mut headers = vec!["Method".to_string()];
+    headers.extend(freqs.iter().map(|k| format!("K={k} relL2%")));
+    headers.push("Adam it/s".into());
+    headers.push("LBFGS it/s".into());
+    let headers_ref: Vec<&str> = headers.iter().map(String::as_str).collect();
+    println!("\nTable 1 (adam={adam_iters}, lbfgs={lbfgs_iters}, seed={seed}):\n");
+    println!("{}", markdown_table(&headers_ref, &rows));
+    Ok(())
+}
+
+/// Core Table-1 runner, reusable from examples and tests.
+#[allow(clippy::too_many_arguments)]
+pub fn run_with(
+    rt: &Runtime,
+    methods: &[String],
+    freqs: &[usize],
+    adam_iters: usize,
+    lbfgs_iters: usize,
+    lr: f64,
+    seed: usize,
+    dump_vtk: bool,
+) -> Result<Vec<MethodResult>> {
+    // Mesh must match the artifact shapes (mirrored generators).
+    let info = rt.manifest.get("table1_pils")?;
+    let mesh_n = info.meta["mesh_n"] as usize;
+    let n_nodes = info.meta["n_nodes"] as usize;
+    let nnz_expect = info.meta["nnz"] as usize;
+    let mesh = unit_square_tri(mesh_n);
+    anyhow::ensure!(mesh.n_nodes() == n_nodes, "mesh/artifact node mismatch");
+    let ctx = AssemblyContext::new(&mesh, 1);
+    anyhow::ensure!(ctx.routing.nnz() == nnz_expect, "mesh/artifact nnz mismatch");
+
+    // Shared buffers.
+    let coords: Vec<f64> = mesh.points.clone();
+    let mut mask = vec![1.0f64; mesh.n_nodes()];
+    for b in mesh.boundary_nodes() {
+        mask[b] = 0.0;
+    }
+    let cell_coords = gather_coords(&mesh);
+    let cells: Vec<usize> = mesh.cells.clone();
+
+    // K (frequency-independent) in routing-pattern order + COO indices.
+    let kmat = ctx.assemble_matrix(&BilinearForm::Diffusion {
+        rho: Coefficient::Const(1.0),
+    });
+    let mut rows_idx = Vec::with_capacity(kmat.nnz());
+    for r in 0..kmat.nrows {
+        for _ in kmat.indptr[r]..kmat.indptr[r + 1] {
+            rows_idx.push(r);
+        }
+    }
+
+    let mut results = Vec::new();
+    for &kfreq in freqs {
+        // Ground truth: FEM on a 4× finer structured mesh, restricted to
+        // the coarse nodes (exact node embedding).
+        let u_ref = fem_reference(mesh_n, 4, kfreq)?;
+
+        // Load vector for the PILS residual.
+        let fvec = ctx.assemble_vector(&LinearForm::Source {
+            f: ctx.coeff_fn(|p| checkerboard(kfreq, p)),
+        });
+
+        for method in methods {
+            let fixed: Vec<Operand> = match method.as_str() {
+                "pinn" => vec![
+                    Operand::from_f64(&coords),
+                    Operand::from_f64(&mask),
+                    Operand::F32(vec![kfreq as f32]),
+                ],
+                "vpinn" => vec![
+                    Operand::from_f64(&cell_coords),
+                    Operand::from_usize(&cells),
+                    Operand::from_f64(&coords),
+                    Operand::from_f64(&mask),
+                    Operand::F32(vec![kfreq as f32]),
+                ],
+                "deepritz" => vec![
+                    Operand::from_f64(&cell_coords),
+                    Operand::from_f64(&coords),
+                    Operand::from_f64(&mask),
+                    Operand::F32(vec![kfreq as f32]),
+                ],
+                "pils" => vec![
+                    Operand::from_f64(&coords),
+                    Operand::from_f64(&mask),
+                    Operand::from_f64(&kmat.data),
+                    Operand::from_usize(&rows_idx),
+                    Operand::from_usize(&kmat.indices),
+                    Operand::from_f64(&fvec),
+                ],
+                other => anyhow::bail!("unknown method {other}"),
+            };
+            let mut loss = ArtifactLoss::new(rt, &format!("table1_{method}"), fixed);
+            let params0 = siren::load_init(rt, seed)?;
+            let (params, log) = train_schedule(&mut loss, params0, adam_iters, lbfgs_iters, lr)?;
+
+            // Evaluate at mesh nodes; hard-BC methods mask the output.
+            let mut u = siren::eval(rt, &params, &coords)?;
+            if method == "pils" {
+                for (ui, mi) in u.iter_mut().zip(&mask) {
+                    *ui *= mi;
+                }
+            }
+            let rel = crate::util::rel_l2(&u, &u_ref) * 100.0;
+            crate::tg_info!(
+                "table1 {method} K={kfreq}: relL2 {rel:.2}% loss {:.3e} adam {:.1} it/s lbfgs {:.1} it/s",
+                log.final_loss,
+                log.adam_its_per_sec(),
+                log.lbfgs_its_per_sec()
+            );
+            ExperimentRecord::new("table1")
+                .str("method", method)
+                .num("kfreq", kfreq as f64)
+                .num("rel_l2_pct", rel)
+                .num("adam_its_per_sec", log.adam_its_per_sec())
+                .num("lbfgs_its_per_sec", log.lbfgs_its_per_sec())
+                .num("final_loss", log.final_loss)
+                .num("adam_iters", adam_iters as f64)
+                .num("lbfgs_iters", lbfgs_iters as f64)
+                .write()?;
+            if dump_vtk {
+                crate::mesh::io::write_vtk(
+                    format!("target/fields/table1_{method}_K{kfreq}.vtk"),
+                    &mesh,
+                    &[("u", &u), ("u_ref", &u_ref)],
+                    &[],
+                )?;
+            }
+            results.push(MethodResult {
+                method: method.clone(),
+                kfreq,
+                rel_l2_pct: rel,
+                adam_its: log.adam_its_per_sec(),
+                lbfgs_its: log.lbfgs_its_per_sec(),
+                final_loss: log.final_loss,
+            });
+        }
+    }
+    Ok(results)
+}
+
+/// FEM ground truth: solve on a `refine×` finer structured mesh, restrict
+/// to coarse nodes (structured meshes nest exactly).
+pub fn fem_reference(mesh_n: usize, refine: usize, kfreq: usize) -> Result<Vec<f64>> {
+    let fine_n = mesh_n * refine;
+    let fine = unit_square_tri(fine_n);
+    let mut p = Problem::scalar();
+    p.bilinear.push(BilinearForm::Diffusion {
+        rho: Coefficient::Const(1.0),
+    });
+    let ctx = AssemblyContext::new(&fine, 1);
+    p.linear.push(LinearForm::Source {
+        f: ctx.coeff_fn(|x| checkerboard(kfreq, x)),
+    });
+    p.dirichlet = DirichletBc::homogeneous(fine.boundary_nodes());
+    let sol = tensormesh::solve(&fine, &p, Method::Cg, &SolverConfig::default())?;
+    anyhow::ensure!(sol.stats.converged, "reference solve failed");
+    // Coarse node (i,j) ↦ fine node (refine·i, refine·j).
+    let mut out = Vec::with_capacity((mesh_n + 1) * (mesh_n + 1));
+    for j in 0..=mesh_n {
+        for i in 0..=mesh_n {
+            out.push(sol.u[(j * refine) * (fine_n + 1) + i * refine]);
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,14 @@
+//! Table 2 / Figs B.17-B.18 — physics-informed operator learning
+//! (wave + Allen-Cahn). Wired up in phase 5 (see `crate::oplearn`).
+
+use anyhow::Result;
+
+use crate::util::cli::Args;
+
+pub fn run(args: &Args) -> Result<()> {
+    crate::oplearn::experiment::run(args)
+}
+
+pub fn run_figb18(args: &Args) -> Result<()> {
+    crate::oplearn::experiment::run_figb18(args)
+}

@@ -1,0 +1,101 @@
+//! Table 3 — topology-optimization timing on the 2D cantilever
+//! (60×30 Q4, SIMP p=3, 51 iterations): setup / optimization-loop / total,
+//! TensorOpt (cached TensorGalerkin setup) vs the rebuild-per-iteration
+//! archetype standing in for JAX-FEM's JIT pipeline (DESIGN.md §7).
+//! Also dumps the Fig 5 / B.19-20 artifacts (density evolution +
+//! convergence history).
+
+use anyhow::Result;
+
+use crate::experiments::common::{markdown_table, ExperimentRecord};
+use crate::opt::topopt::{run_topopt, TopOptConfig};
+use crate::util::cli::Args;
+
+pub fn run(args: &Args) -> Result<()> {
+    let iters = args.get_usize("iters", 51);
+    let nx = args.get_usize("nx", 60);
+    let ny = args.get_usize("ny", 30);
+    let optimizer = args.get_str("optimizer", "mma");
+
+    let mut cfg = TopOptConfig {
+        iters,
+        optimizer: optimizer.clone(),
+        ..TopOptConfig::default()
+    };
+    cfg.simp.nx = nx;
+    cfg.simp.ny = ny;
+    cfg.simp.lx = nx as f64;
+    cfg.simp.ly = ny as f64;
+
+    // TensorOpt: cached setup.
+    let ours = run_topopt(&cfg)?;
+    // Baseline: rebuild-everything-per-iteration (JAX-FEM archetype).
+    let mut base_cfg = cfg.clone();
+    base_cfg.rebuild_setup_each_iter = true;
+    let baseline = run_topopt(&base_cfg)?;
+
+    let total_ours = ours.setup_s + ours.loop_s;
+    let total_base = baseline.setup_s + baseline.loop_s;
+    let rows = vec![
+        vec![
+            "Setup Time".to_string(),
+            format!("{:.2} s", baseline.setup_s),
+            format!("{:.2} s", ours.setup_s),
+            format!("{:.1}×", baseline.setup_s / ours.setup_s.max(1e-9)),
+        ],
+        vec![
+            "Optimization Loop".to_string(),
+            format!("{:.2} s", baseline.loop_s),
+            format!("{:.2} s", ours.loop_s),
+            format!("{:.1}×", baseline.loop_s / ours.loop_s.max(1e-9)),
+        ],
+        vec![
+            "Total Time".to_string(),
+            format!("{:.2} s", total_base),
+            format!("{:.2} s", total_ours),
+            format!("{:.1}×", total_base / total_ours.max(1e-9)),
+        ],
+    ];
+    println!("\nTable 3 ({nx}×{ny} cantilever, {iters} iterations, {optimizer}):\n");
+    println!(
+        "{}",
+        markdown_table(&["Stage", "Rebuild-baseline", "TensorOpt (ours)", "Speedup"], &rows)
+    );
+    let dc = (ours.final_compliance() - baseline.final_compliance()).abs()
+        / baseline.final_compliance();
+    println!(
+        "final compliance: ours {:.4}, baseline {:.4} (diff {:.3}%)",
+        ours.final_compliance(),
+        baseline.final_compliance(),
+        dc * 100.0
+    );
+    println!(
+        "compliance drop from initial: {:.1}%",
+        100.0 * (1.0 - ours.final_compliance() / ours.compliance_history[0])
+    );
+
+    ExperimentRecord::new("table3")
+        .str("optimizer", &optimizer)
+        .num("iters", iters as f64)
+        .num("setup_s_ours", ours.setup_s)
+        .num("loop_s_ours", ours.loop_s)
+        .num("setup_s_baseline", baseline.setup_s)
+        .num("loop_s_baseline", baseline.loop_s)
+        .num("final_compliance", ours.final_compliance())
+        .num("compliance_rel_diff", dc)
+        .write()?;
+
+    if args.flag("vtk") {
+        let mesh = crate::mesh::structured::rect_quad(nx, ny, nx as f64, ny as f64);
+        for (it, rho) in &ours.snapshots {
+            crate::mesh::io::write_vtk(
+                format!("target/fields/topopt_iter{it:03}.vtk"),
+                &mesh,
+                &[],
+                &[("rho", rho)],
+            )?;
+        }
+        println!("density snapshots written to target/fields/ (Fig 5 / B.20)");
+    }
+    Ok(())
+}

@@ -1,0 +1,221 @@
+//! Table B.3 — mixed Dirichlet+Neumann+Robin Poisson on a circular and a
+//! non-convex boomerang domain (§B.1.5): TensorMesh assembles the boundary
+//! terms through the same Map-Reduce pipeline, the scatter-add baseline
+//! stands in for FEniCSx, and correctness is checked against a manufactured
+//! solution with all three BC types active.
+
+use anyhow::Result;
+
+use crate::assembly::map_reduce::FacetContext;
+use crate::assembly::{scatter, AssemblyContext, BilinearForm, Coefficient, LinearForm};
+use crate::bc::{condense, DirichletBc};
+use crate::experiments::common::{markdown_table, ExperimentRecord};
+use crate::mesh::curved::{boomerang_tri, circle_tri};
+use crate::mesh::{marker, Mesh};
+use crate::solver::{self, Method, SolverConfig};
+use crate::util::cli::Args;
+use crate::util::timer::time_it;
+
+/// Manufactured solution u = x² + y² ⇒ −Δu = −4, ∂u/∂n = 2(x·n), plus a
+/// Robin combination α u + ∂u/∂n = g_R — all computable exactly.
+struct Mms;
+
+impl Mms {
+    fn u(p: &[f64]) -> f64 {
+        p[0] * p[0] + p[1] * p[1]
+    }
+
+    fn f() -> f64 {
+        -4.0
+    }
+}
+
+/// Split the boundary into three sectors by polar angle around the domain
+/// centroid: Dirichlet / Neumann / Robin.
+fn mark_thirds(mesh: &mut Mesh) {
+    let n = mesh.n_nodes() as f64;
+    let (mut cx, mut cy) = (0.0, 0.0);
+    for i in 0..mesh.n_nodes() {
+        cx += mesh.point(i)[0] / n;
+        cy += mesh.point(i)[1] / n;
+    }
+    mesh.mark_boundary(|c| {
+        let theta = (c[1] - cy).atan2(c[0] - cx);
+        let t = (theta + std::f64::consts::PI) / (2.0 * std::f64::consts::PI);
+        if t < 1.0 / 3.0 {
+            marker::DIRICHLET
+        } else if t < 2.0 / 3.0 {
+            marker::NEUMANN
+        } else {
+            marker::ROBIN
+        }
+    });
+}
+
+struct BenchOut {
+    dofs: usize,
+    ours_ms: f64,
+    baseline_ms: f64,
+    rel_err: f64,
+}
+
+fn run_domain(mesh: &mut Mesh, alpha: f64) -> Result<BenchOut> {
+    mark_thirds(mesh);
+    let n = mesh.n_nodes() as f64;
+    let (mut cx, mut cy) = (0.0, 0.0);
+    for i in 0..mesh.n_nodes() {
+        cx += mesh.point(i)[0] / n;
+        cy += mesh.point(i)[1] / n;
+    }
+
+    let _ = (cx, cy);
+    // True outward normals via the owning cell (valid on non-convex domains).
+    let normals = mesh.facet_outward_normals_2d();
+    let facet_ids_neumann: Vec<usize> = (0..mesh.n_facets())
+        .filter(|&f| mesh.facet_markers[f] == marker::NEUMANN)
+        .collect();
+    let facet_ids_robin: Vec<usize> = (0..mesh.n_facets())
+        .filter(|&f| mesh.facet_markers[f] == marker::ROBIN)
+        .collect();
+
+    // --- TensorMesh (Map-Reduce everywhere) -----------------------------
+    let mesh_c = mesh.clone();
+    let ((k, fvec, bc), ours_s) = time_it(|| {
+        let ctx = AssemblyContext::new(&mesh_c, 1);
+        let mut k = ctx.assemble_matrix(&BilinearForm::Diffusion {
+            rho: Coefficient::Const(1.0),
+        });
+        let mut f = ctx.assemble_vector(&LinearForm::Source {
+            f: Coefficient::Const(Mms::f()),
+        });
+        // Neumann: ∫ g v with g = ∂u/∂n = 2 x·n.
+        let fc_n = FacetContext::new(&mesh_c, &[marker::NEUMANN], 1);
+        let g_n = neumann_coeff(&fc_n, &mesh_c, &facet_ids_neumann, &normals);
+        let fn_vec = fc_n.assemble_vector(&LinearForm::FacetFlux { g: g_n });
+        for (a, b) in f.iter_mut().zip(&fn_vec) {
+            *a += b;
+        }
+        // Robin: ∫ α u v added to K; ∫ (α u_exact + ∂u/∂n) v added to F.
+        let fc_r = FacetContext::new(&mesh_c, &[marker::ROBIN], 1);
+        let kr = fc_r.assemble_matrix(&BilinearForm::FacetMass {
+            alpha: Coefficient::Const(alpha),
+        });
+        k = k.add_scaled(&kr, 1.0).unwrap();
+        let g_r = robin_coeff(&fc_r, &mesh_c, &facet_ids_robin, &normals, alpha);
+        let fr_vec = fc_r.assemble_vector(&LinearForm::FacetFlux { g: g_r });
+        for (a, b) in f.iter_mut().zip(&fr_vec) {
+            *a += b;
+        }
+        let dn = mesh_c.boundary_nodes_with(&[marker::DIRICHLET]);
+        let bc = DirichletBc::from_fn(&mesh_c, &dn, Mms::u);
+        (k, f, bc)
+    });
+    let (sol, solve_s) = time_it(|| {
+        let sys = condense(&k, &fvec, &bc);
+        let (u_free, stats) = solver::solve(&sys.k, &sys.rhs, Method::BiCgStab, &SolverConfig::default());
+        (sys.expand(&u_free), stats)
+    });
+    anyhow::ensure!(sol.1.converged, "mixed-BC solve failed");
+    let exact: Vec<f64> = (0..mesh.n_nodes()).map(|i| Mms::u(mesh.point(i))).collect();
+    let rel_err = crate::util::rel_l2(&sol.0, &exact);
+
+    // --- Scatter-add baseline (volume part; boundary assembly shared) ---
+    let ctx2 = AssemblyContext::new(mesh, 1);
+    let (_k_b, base_s) = time_it(|| {
+        scatter::assemble_matrix_from_scratch(
+            mesh,
+            &ctx2.dofmap,
+            &BilinearForm::Diffusion { rho: Coefficient::Const(1.0) },
+            &ctx2.tab,
+            &ctx2.quad,
+        )
+    });
+    // Baseline end-to-end = scatter assembly + the same solve time.
+    Ok(BenchOut {
+        dofs: mesh.n_nodes(),
+        ours_ms: (ours_s + solve_s) * 1e3,
+        baseline_ms: (base_s + solve_s) * 1e3,
+        rel_err,
+    })
+}
+
+fn neumann_coeff(
+    fc: &FacetContext,
+    mesh: &Mesh,
+    facet_ids: &[usize],
+    normals: &[[f64; 2]],
+) -> Coefficient {
+    let mut vals = Vec::with_capacity(fc.geo.n_elems * fc.geo.q);
+    for (idx, &f) in facet_ids.iter().enumerate() {
+        let n = normals[f];
+        for q in 0..fc.geo.q {
+            let p = fc.geo.qpoint(idx, q);
+            vals.push(2.0 * (p[0] * n[0] + p[1] * n[1]));
+        }
+    }
+    let _ = mesh;
+    Coefficient::Quad(vals)
+}
+
+fn robin_coeff(
+    fc: &FacetContext,
+    mesh: &Mesh,
+    facet_ids: &[usize],
+    normals: &[[f64; 2]],
+    alpha: f64,
+) -> Coefficient {
+    let mut vals = Vec::with_capacity(fc.geo.n_elems * fc.geo.q);
+    for (idx, &f) in facet_ids.iter().enumerate() {
+        let n = normals[f];
+        for q in 0..fc.geo.q {
+            let p = fc.geo.qpoint(idx, q);
+            vals.push(alpha * Mms::u(p) + 2.0 * (p[0] * n[0] + p[1] * n[1]));
+        }
+    }
+    let _ = mesh;
+    Coefficient::Quad(vals)
+}
+
+pub fn run(args: &Args) -> Result<()> {
+    let n_circle = args.get_usize("ncircle", 54); // ~6k nodes per the paper
+    let nr = args.get_usize("nr", 24);
+    let nt = args.get_usize("nt", 240); // ~15k nodes
+    let alpha = args.get_f64("alpha", 1.0);
+
+    let mut rows = Vec::new();
+    let mut circle = circle_tri(n_circle, 0.0, 0.0, 1.0);
+    let c = run_domain(&mut circle, alpha)?;
+    let mut boomerang = boomerang_tri(nr, nt, 0.35, 1.0);
+    let b = run_domain(&mut boomerang, alpha)?;
+
+    for (name, r) in [("Poisson circle (D+N+R)", &c), ("Poisson boomerang (D+N+R)", &b)] {
+        rows.push(vec![
+            name.to_string(),
+            format!("{}", r.dofs),
+            format!("{:.0} ms", r.baseline_ms),
+            format!("{:.0} ms", r.ours_ms),
+            format!("~{:.1}×", r.baseline_ms / r.ours_ms.max(1e-9)),
+            format!("{:.2e}", r.rel_err),
+        ]);
+        ExperimentRecord::new("tableb3")
+            .str("domain", name)
+            .num("dofs", r.dofs as f64)
+            .num("baseline_ms", r.baseline_ms)
+            .num("ours_ms", r.ours_ms)
+            .num("rel_err", r.rel_err)
+            .write()?;
+    }
+    println!(
+        "\nTable B.3 (mixed D+N+Robin; scatter-add stands in for FEniCSx):\n\n{}",
+        markdown_table(
+            &["Dataset", "Nodes", "Baseline", "TensorMesh", "Speedup", "relErr"],
+            &rows
+        )
+    );
+    // The paper reports relErr < 1e-4 vs analytic at its resolutions; on
+    // the polygonal boundary approximation the bound is O(h²) — enforce a
+    // conservative bar that still catches sign/BC errors outright.
+    anyhow::ensure!(c.rel_err < 2e-3, "circle accuracy bar failed: {}", c.rel_err);
+    anyhow::ensure!(b.rel_err < 2e-3, "boomerang accuracy bar failed: {}", b.rel_err);
+    Ok(())
+}

@@ -1,0 +1,145 @@
+//! Degree-of-freedom maps: the local→global index maps `g_e` of Eq. (6).
+//!
+//! Scalar problems attach one DoF per node; vector problems (elasticity)
+//! interleave components (`dof = node·ncomp + c`). Local DoF ordering is
+//! node-major, component-minor, matching the batched local matrices the Map
+//! stage emits.
+
+use crate::mesh::Mesh;
+
+/// A DoF map over a set of cells (or boundary facets).
+#[derive(Clone, Debug)]
+pub struct DofMap {
+    /// Total number of global DoFs.
+    pub n_dofs: usize,
+    /// Local DoFs per cell (`k · ncomp`).
+    pub n_local: usize,
+    /// Number of vector components.
+    pub ncomp: usize,
+    /// `E × n_local` global indices, row-major.
+    pub entries: Vec<usize>,
+}
+
+impl DofMap {
+    /// Scalar P1/Q1 map: DoFs are mesh nodes.
+    pub fn scalar(mesh: &Mesh) -> DofMap {
+        let k = mesh.cell_type.nodes();
+        DofMap {
+            n_dofs: mesh.n_nodes(),
+            n_local: k,
+            ncomp: 1,
+            entries: mesh.cells.clone(),
+        }
+    }
+
+    /// Vector map with `ncomp` interleaved components per node.
+    pub fn vector(mesh: &Mesh, ncomp: usize) -> DofMap {
+        assert!(ncomp >= 1);
+        let k = mesh.cell_type.nodes();
+        let mut entries = Vec::with_capacity(mesh.n_cells() * k * ncomp);
+        for e in 0..mesh.n_cells() {
+            for &v in mesh.cell(e) {
+                for c in 0..ncomp {
+                    entries.push(v * ncomp + c);
+                }
+            }
+        }
+        DofMap {
+            n_dofs: mesh.n_nodes() * ncomp,
+            n_local: k * ncomp,
+            ncomp,
+            entries,
+        }
+    }
+
+    /// Scalar map over a subset of boundary facets (for Neumann/Robin
+    /// integrals): row `i` maps the facet's nodes into global node DoFs.
+    pub fn facet_scalar(mesh: &Mesh, facet_ids: &[usize]) -> DofMap {
+        let fk = mesh.cell_type.facet_nodes();
+        let mut entries = Vec::with_capacity(facet_ids.len() * fk);
+        for &f in facet_ids {
+            entries.extend_from_slice(mesh.facet(f));
+        }
+        DofMap {
+            n_dofs: mesh.n_nodes(),
+            n_local: fk,
+            ncomp: 1,
+            entries,
+        }
+    }
+
+    /// Vector map over boundary facets (e.g. surface tractions): facet
+    /// nodes × interleaved components.
+    pub fn facet_vector(mesh: &Mesh, facet_ids: &[usize], ncomp: usize) -> DofMap {
+        let fk = mesh.cell_type.facet_nodes();
+        let mut entries = Vec::with_capacity(facet_ids.len() * fk * ncomp);
+        for &f in facet_ids {
+            for &v in mesh.facet(f) {
+                for c in 0..ncomp {
+                    entries.push(v * ncomp + c);
+                }
+            }
+        }
+        DofMap {
+            n_dofs: mesh.n_nodes() * ncomp,
+            n_local: fk * ncomp,
+            ncomp,
+            entries,
+        }
+    }
+
+    /// Number of cells covered by this map.
+    pub fn n_cells(&self) -> usize {
+        if self.n_local == 0 {
+            0
+        } else {
+            self.entries.len() / self.n_local
+        }
+    }
+
+    /// The global DoFs of cell `e`.
+    pub fn cell_dofs(&self, e: usize) -> &[usize] {
+        &self.entries[e * self.n_local..(e + 1) * self.n_local]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::structured::unit_square_tri;
+
+    #[test]
+    fn scalar_map_is_cells() {
+        let m = unit_square_tri(2);
+        let dm = DofMap::scalar(&m);
+        assert_eq!(dm.n_dofs, m.n_nodes());
+        assert_eq!(dm.n_cells(), m.n_cells());
+        assert_eq!(dm.cell_dofs(0), m.cell(0));
+    }
+
+    #[test]
+    fn vector_map_interleaves() {
+        let m = unit_square_tri(1);
+        let dm = DofMap::vector(&m, 2);
+        assert_eq!(dm.n_dofs, 2 * m.n_nodes());
+        assert_eq!(dm.n_local, 6);
+        let cell = m.cell(0);
+        let dofs = dm.cell_dofs(0);
+        for (a, &v) in cell.iter().enumerate() {
+            assert_eq!(dofs[2 * a], 2 * v);
+            assert_eq!(dofs[2 * a + 1], 2 * v + 1);
+        }
+    }
+
+    #[test]
+    fn facet_map_covers_boundary_nodes() {
+        let m = unit_square_tri(2);
+        let ids: Vec<usize> = (0..m.n_facets()).collect();
+        let dm = DofMap::facet_scalar(&m, &ids);
+        assert_eq!(dm.n_cells(), m.n_facets());
+        let mut nodes: Vec<usize> = dm.entries.clone();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes, m.boundary_nodes());
+    }
+}

@@ -1,0 +1,358 @@
+//! Batched element geometry — the geometric half of Stage I (Batch-Map).
+//!
+//! For every element `e` and quadrature point `q` we compute the Jacobian
+//! `J_eq = Σ_a X_ea ⊗ ∇φ̂_a(x̂_q)` of the reference→physical map, its
+//! absolute determinant and the push-forward gradients `G = J^{-T}∇φ̂`
+//! (Algorithm 1, lines 1-2). The layout mirrors the paper's batched tensors
+//! `𝒳 ∈ R^{E×k×d}`, `𝒥 ∈ R^{E×Q×d×d}`, `𝒢 ∈ R^{E×Q×k×d}`.
+//!
+//! Degenerate (zero-volume) elements — used to pad element batches up to an
+//! AOT bucket size — produce `|det J| = 0` and zeroed gradients, i.e. they
+//! contribute nothing to assembly by construction.
+
+use super::quadrature::Quadrature;
+use super::reference::Tabulation;
+use crate::mesh::Mesh;
+
+/// Batched geometry for a (sub)set of elements.
+#[derive(Clone, Debug)]
+pub struct ElementGeometry {
+    pub n_elems: usize,
+    pub q: usize,
+    pub k: usize,
+    pub dim: usize,
+    /// `E × Q` absolute Jacobian determinants (× facet metric for facets).
+    pub detj: Vec<f64>,
+    /// `E × Q × k × dim` physical basis gradients `J^{-T}∇φ̂`.
+    pub phys_grads: Vec<f64>,
+    /// `E × Q × dim` physical quadrature point coordinates.
+    pub qpoints: Vec<f64>,
+}
+
+impl ElementGeometry {
+    pub fn det(&self, e: usize, q: usize) -> f64 {
+        self.detj[e * self.q + q]
+    }
+
+    pub fn grad(&self, e: usize, q: usize, a: usize) -> &[f64] {
+        let base = (((e * self.q) + q) * self.k + a) * self.dim;
+        &self.phys_grads[base..base + self.dim]
+    }
+
+    pub fn qpoint(&self, e: usize, q: usize) -> &[f64] {
+        let base = (e * self.q + q) * self.dim;
+        &self.qpoints[base..base + self.dim]
+    }
+}
+
+/// Gather per-element node coordinates `𝒳 ∈ R^{E×k×d}` (row-major).
+pub fn gather_coords(mesh: &Mesh) -> Vec<f64> {
+    let k = mesh.cell_type.nodes();
+    let d = mesh.dim;
+    let mut x = Vec::with_capacity(mesh.n_cells() * k * d);
+    for e in 0..mesh.n_cells() {
+        for &v in mesh.cell(e) {
+            x.extend_from_slice(mesh.point(v));
+        }
+    }
+    x
+}
+
+/// Gather boundary-facet node coordinates `𝒳_f ∈ R^{F×fk×d}`.
+pub fn gather_facet_coords(mesh: &Mesh, facet_ids: &[usize]) -> Vec<f64> {
+    let fk = mesh.cell_type.facet_nodes();
+    let d = mesh.dim;
+    let mut x = Vec::with_capacity(facet_ids.len() * fk * d);
+    for &f in facet_ids {
+        for &v in mesh.facet(f) {
+            x.extend_from_slice(mesh.point(v));
+        }
+    }
+    x
+}
+
+/// Compute batched geometry from raw element coordinates
+/// (`coords` is `E × k × d`). This is the entry point both the native Map
+/// stage and the test oracle share; meshes go through [`compute`].
+pub fn compute_from_coords(
+    coords: &[f64],
+    tab: &Tabulation,
+    quad: &Quadrature,
+    dim: usize,
+) -> ElementGeometry {
+    let k = tab.k;
+    let q = quad.len();
+    assert_eq!(tab.q, q);
+    assert_eq!(tab.dim, dim, "volumetric geometry needs ref dim == ambient dim");
+    assert_eq!(coords.len() % (k * dim), 0);
+    let n_elems = coords.len() / (k * dim);
+
+    let mut detj = vec![0.0; n_elems * q];
+    let mut phys_grads = vec![0.0; n_elems * q * k * dim];
+    let mut qpoints = vec![0.0; n_elems * q * dim];
+
+    let mut jac = vec![0.0; dim * dim];
+    let mut inv_t = vec![0.0; dim * dim];
+
+    for e in 0..n_elems {
+        let x = &coords[e * k * dim..(e + 1) * k * dim];
+        for qi in 0..q {
+            // J[r][c] = Σ_a x[a][r] * dφ̂_a/dx̂_c ; also x_q = Σ_a φ̂_a x_a.
+            jac.iter_mut().for_each(|v| *v = 0.0);
+            for a in 0..k {
+                let g = tab.grad(qi, a);
+                let xa = &x[a * dim..(a + 1) * dim];
+                for r in 0..dim {
+                    for c in 0..dim {
+                        jac[r * dim + c] += xa[r] * g[c];
+                    }
+                }
+                let phi = tab.val(qi, a);
+                for r in 0..dim {
+                    qpoints[(e * q + qi) * dim + r] += phi * xa[r];
+                }
+            }
+            let det = det_n(&jac, dim);
+            detj[e * q + qi] = det.abs();
+            if det.abs() < 1e-300 {
+                // Degenerate padding element: leave gradients zero.
+                continue;
+            }
+            inv_transpose_n(&jac, det, dim, &mut inv_t);
+            for a in 0..k {
+                let g = tab.grad(qi, a);
+                let out = &mut phys_grads[(((e * q) + qi) * k + a) * dim..][..dim];
+                for r in 0..dim {
+                    let mut s = 0.0;
+                    for c in 0..dim {
+                        // (J^{-T})[r][c] g[c]
+                        s += inv_t[r * dim + c] * g[c];
+                    }
+                    out[r] = s;
+                }
+            }
+        }
+    }
+    ElementGeometry {
+        n_elems,
+        q,
+        k,
+        dim,
+        detj,
+        phys_grads,
+        qpoints,
+    }
+}
+
+/// Batched geometry for all cells of a mesh.
+pub fn compute(mesh: &Mesh, tab: &Tabulation, quad: &Quadrature) -> ElementGeometry {
+    compute_from_coords(&gather_coords(mesh), tab, quad, mesh.dim)
+}
+
+/// Batched *facet* geometry: the reference facet (dim `d-1`) is mapped into
+/// ambient dimension `d`; `detj` holds the facet surface metric
+/// `sqrt(det(JᵀJ))` and `phys_grads` is unused (boundary forms in this crate
+/// only need basis values). `qpoints` are physical facet quadrature points.
+pub fn compute_facets(
+    coords: &[f64],
+    tab: &Tabulation,
+    quad: &Quadrature,
+    ambient: usize,
+) -> ElementGeometry {
+    let k = tab.k;
+    let q = quad.len();
+    let rdim = tab.dim;
+    assert_eq!(rdim + 1, ambient, "facet must have codimension 1");
+    assert_eq!(coords.len() % (k * ambient), 0);
+    let n = coords.len() / (k * ambient);
+
+    let mut detj = vec![0.0; n * q];
+    let mut qpoints = vec![0.0; n * q * ambient];
+
+    for e in 0..n {
+        let x = &coords[e * k * ambient..(e + 1) * k * ambient];
+        for qi in 0..q {
+            // J (ambient × rdim)
+            let mut jac = vec![0.0; ambient * rdim];
+            for a in 0..k {
+                let g = tab.grad(qi, a);
+                let xa = &x[a * ambient..(a + 1) * ambient];
+                for r in 0..ambient {
+                    for c in 0..rdim {
+                        jac[r * rdim + c] += xa[r] * g[c];
+                    }
+                }
+                let phi = tab.val(qi, a);
+                for r in 0..ambient {
+                    qpoints[(e * q + qi) * ambient + r] += phi * xa[r];
+                }
+            }
+            // Gram matrix JᵀJ (rdim × rdim), metric = sqrt(det).
+            let mut gram = vec![0.0; rdim * rdim];
+            for i in 0..rdim {
+                for j in 0..rdim {
+                    let mut s = 0.0;
+                    for r in 0..ambient {
+                        s += jac[r * rdim + i] * jac[r * rdim + j];
+                    }
+                    gram[i * rdim + j] = s;
+                }
+            }
+            detj[e * q + qi] = det_n(&gram, rdim).max(0.0).sqrt();
+        }
+    }
+    ElementGeometry {
+        n_elems: n,
+        q,
+        k,
+        dim: ambient,
+        detj,
+        phys_grads: Vec::new(),
+        qpoints,
+    }
+}
+
+fn det_n(m: &[f64], n: usize) -> f64 {
+    match n {
+        1 => m[0],
+        2 => m[0] * m[3] - m[1] * m[2],
+        3 => {
+            m[0] * (m[4] * m[8] - m[5] * m[7]) - m[1] * (m[3] * m[8] - m[5] * m[6])
+                + m[2] * (m[3] * m[7] - m[4] * m[6])
+        }
+        _ => panic!("det_n: unsupported dimension {n}"),
+    }
+}
+
+/// `out = (M^{-1})ᵀ` for `n ∈ {1,2,3}` given `det(M)`.
+fn inv_transpose_n(m: &[f64], det: f64, n: usize, out: &mut [f64]) {
+    let inv_det = 1.0 / det;
+    match n {
+        1 => out[0] = inv_det,
+        2 => {
+            // M^{-1} = 1/det [d -b; -c a]; transpose it.
+            out[0] = m[3] * inv_det;
+            out[1] = -m[2] * inv_det;
+            out[2] = -m[1] * inv_det;
+            out[3] = m[0] * inv_det;
+        }
+        3 => {
+            // Cofactor matrix / det == (M^{-1})ᵀ.
+            out[0] = (m[4] * m[8] - m[5] * m[7]) * inv_det;
+            out[1] = (m[5] * m[6] - m[3] * m[8]) * inv_det;
+            out[2] = (m[3] * m[7] - m[4] * m[6]) * inv_det;
+            out[3] = (m[2] * m[7] - m[1] * m[8]) * inv_det;
+            out[4] = (m[0] * m[8] - m[2] * m[6]) * inv_det;
+            out[5] = (m[1] * m[6] - m[0] * m[7]) * inv_det;
+            out[6] = (m[1] * m[5] - m[2] * m[4]) * inv_det;
+            out[7] = (m[2] * m[3] - m[0] * m[5]) * inv_det;
+            out[8] = (m[0] * m[4] - m[1] * m[3]) * inv_det;
+        }
+        _ => panic!("inv_transpose_n: unsupported dimension {n}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fem::quadrature::{edge_gauss, tet_deg1, tri_deg1, tri_deg2};
+    use crate::fem::reference::RefElement;
+    use crate::mesh::structured::{unit_cube_tet, unit_square_tri};
+
+    #[test]
+    fn triangle_det_equals_twice_area() {
+        let m = unit_square_tri(2);
+        let quad = tri_deg1();
+        let tab = RefElement::P1Tri.tabulate(&quad);
+        let geo = compute(&m, &tab, &quad);
+        // Each structured triangle has area (1/2)(1/2)² = 1/8; det = 2·area.
+        for e in 0..m.n_cells() {
+            assert!((geo.det(e, 0) - 0.25).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn tet_det_equals_six_volumes() {
+        let m = unit_cube_tet(2);
+        let quad = tet_deg1();
+        let tab = RefElement::P1Tet.tabulate(&quad);
+        let geo = compute(&m, &tab, &quad);
+        let total: f64 = (0..m.n_cells()).map(|e| geo.det(e, 0) / 6.0).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn physical_gradients_reproduce_linear_functions() {
+        // For u(x,y)=3x+2y on any P1 triangle: Σ_a u(x_a) G_a = (3,2).
+        let m = unit_square_tri(3);
+        let quad = tri_deg2();
+        let tab = RefElement::P1Tri.tabulate(&quad);
+        let geo = compute(&m, &tab, &quad);
+        for e in 0..m.n_cells() {
+            let cell = m.cell(e);
+            for q in 0..quad.len() {
+                let mut gx = 0.0;
+                let mut gy = 0.0;
+                for (a, &v) in cell.iter().enumerate() {
+                    let p = m.point(v);
+                    let u = 3.0 * p[0] + 2.0 * p[1];
+                    let g = geo.grad(e, q, a);
+                    gx += u * g[0];
+                    gy += u * g[1];
+                }
+                assert!((gx - 3.0).abs() < 1e-12 && (gy - 2.0).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn qpoints_lie_inside_elements() {
+        let m = unit_square_tri(2);
+        let quad = tri_deg2();
+        let tab = RefElement::P1Tri.tabulate(&quad);
+        let geo = compute(&m, &tab, &quad);
+        for e in 0..m.n_cells() {
+            for q in 0..quad.len() {
+                let p = geo.qpoint(e, q);
+                assert!(p[0] >= 0.0 && p[0] <= 1.0 && p[1] >= 0.0 && p[1] <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_padding_element_contributes_zero() {
+        // A zero-area triangle (all nodes identical).
+        let coords = vec![0.5, 0.5, 0.5, 0.5, 0.5, 0.5];
+        let quad = tri_deg1();
+        let tab = RefElement::P1Tri.tabulate(&quad);
+        let geo = compute_from_coords(&coords, &tab, &quad, 2);
+        assert_eq!(geo.det(0, 0), 0.0);
+        assert!(geo.phys_grads.iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn facet_metric_edge_length() {
+        // Edge from (0,0) to (3,4): length 5, metric must be 5.
+        let coords = vec![0.0, 0.0, 3.0, 4.0];
+        let quad = edge_gauss(2);
+        let tab = RefElement::P1Edge.tabulate(&quad);
+        let geo = compute_facets(&coords, &tab, &quad, 2);
+        for q in 0..quad.len() {
+            assert!((geo.det(0, q) - 5.0).abs() < 1e-12);
+        }
+        // Integral of 1 over the edge = Σ w_q · metric = 5.
+        let total: f64 = (0..quad.len()).map(|q| quad.weights[q] * geo.det(0, q)).sum();
+        assert!((total - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn facet_metric_triangle_area_3d() {
+        // Triangle (0,0,0),(1,0,0),(0,1,0): area 1/2 → ∫1 = Σ w detj = 1/2.
+        let coords = vec![0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0, 0.0];
+        let quad = tri_deg2();
+        let tab = RefElement::P1TriFacet.tabulate(&quad);
+        let geo = compute_facets(&coords, &tab, &quad, 3);
+        let total: f64 = (0..quad.len()).map(|q| quad.weights[q] * geo.det(0, q)).sum();
+        assert!((total - 0.5).abs() < 1e-12);
+    }
+}

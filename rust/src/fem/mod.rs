@@ -1,0 +1,12 @@
+//! FEM core: reference elements, quadrature rules, DoF maps and batched
+//! geometry — everything Stage I (Batch-Map) of TensorGalerkin consumes.
+
+pub mod dofmap;
+pub mod geometry;
+pub mod quadrature;
+pub mod reference;
+
+pub use dofmap::DofMap;
+pub use geometry::ElementGeometry;
+pub use quadrature::Quadrature;
+pub use reference::{RefElement, Tabulation};

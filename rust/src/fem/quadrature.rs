@@ -1,0 +1,196 @@
+//! Quadrature rules on reference cells.
+//!
+//! Conventions: the reference triangle is `{x,y ≥ 0, x+y ≤ 1}` (area 1/2),
+//! the reference tetrahedron `{x,y,z ≥ 0, x+y+z ≤ 1}` (volume 1/6), the
+//! reference quadrilateral and edge are `[0,1]²` and `[0,1]`. Weights sum to
+//! the reference measure so `∫_ê f ≈ Σ_q w_q f(x̂_q)` directly.
+
+/// A quadrature rule: `Q` points in `dim` reference coordinates.
+#[derive(Clone, Debug)]
+pub struct Quadrature {
+    pub dim: usize,
+    /// `Q × dim`, row-major.
+    pub points: Vec<f64>,
+    pub weights: Vec<f64>,
+}
+
+impl Quadrature {
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    pub fn point(&self, q: usize) -> &[f64] {
+        &self.points[q * self.dim..(q + 1) * self.dim]
+    }
+}
+
+/// Midpoint rule on the reference triangle (degree 1).
+pub fn tri_deg1() -> Quadrature {
+    Quadrature {
+        dim: 2,
+        points: vec![1.0 / 3.0, 1.0 / 3.0],
+        weights: vec![0.5],
+    }
+}
+
+/// Three-point rule, exact to degree 2 on the reference triangle.
+pub fn tri_deg2() -> Quadrature {
+    Quadrature {
+        dim: 2,
+        points: vec![1.0 / 6.0, 1.0 / 6.0, 2.0 / 3.0, 1.0 / 6.0, 1.0 / 6.0, 2.0 / 3.0],
+        weights: vec![1.0 / 6.0; 3],
+    }
+}
+
+/// Dunavant 7-point rule, exact to degree 5 on the reference triangle.
+pub fn tri_deg5() -> Quadrature {
+    let s15 = 15f64.sqrt();
+    let a1 = (6.0 + s15) / 21.0;
+    let a2 = (6.0 - s15) / 21.0;
+    let w0 = 9.0 / 80.0;
+    let w1 = (155.0 + s15) / 2400.0;
+    let w2 = (155.0 - s15) / 2400.0;
+    let mut points = vec![1.0 / 3.0, 1.0 / 3.0];
+    let mut weights = vec![w0];
+    for &(a, w) in &[(a1, w1), (a2, w2)] {
+        let b = 1.0 - 2.0 * a;
+        points.extend_from_slice(&[a, a, b, a, a, b]);
+        weights.extend_from_slice(&[w, w, w]);
+    }
+    Quadrature { dim: 2, points, weights }
+}
+
+/// Midpoint rule on the reference tetrahedron (degree 1).
+pub fn tet_deg1() -> Quadrature {
+    Quadrature {
+        dim: 3,
+        points: vec![0.25, 0.25, 0.25],
+        weights: vec![1.0 / 6.0],
+    }
+}
+
+/// Four-point rule, exact to degree 2 on the reference tetrahedron.
+pub fn tet_deg2() -> Quadrature {
+    let a = (5.0 - 5f64.sqrt()) / 20.0;
+    let b = (5.0 + 3.0 * 5f64.sqrt()) / 20.0;
+    let mut points = Vec::with_capacity(12);
+    for i in 0..4 {
+        let mut p = [a, a, a];
+        if i < 3 {
+            p[i] = b;
+        }
+        points.extend_from_slice(&p);
+    }
+    Quadrature {
+        dim: 3,
+        points,
+        weights: vec![1.0 / 24.0; 4],
+    }
+}
+
+/// Tensor-product Gauss rule on `[0,1]²` with `n × n` points (n = 2 or 3).
+pub fn quad_gauss(n: usize) -> Quadrature {
+    let (nodes, weights) = gauss_01(n);
+    let mut points = Vec::with_capacity(n * n * 2);
+    let mut w = Vec::with_capacity(n * n);
+    for j in 0..n {
+        for i in 0..n {
+            points.push(nodes[i]);
+            points.push(nodes[j]);
+            w.push(weights[i] * weights[j]);
+        }
+    }
+    Quadrature { dim: 2, points, weights: w }
+}
+
+/// Gauss rule on the reference edge `[0,1]` with `n` points (1..=3).
+pub fn edge_gauss(n: usize) -> Quadrature {
+    let (nodes, weights) = gauss_01(n);
+    Quadrature {
+        dim: 1,
+        points: nodes,
+        weights,
+    }
+}
+
+/// Gauss-Legendre nodes/weights mapped from `[-1,1]` to `[0,1]`.
+fn gauss_01(n: usize) -> (Vec<f64>, Vec<f64>) {
+    let (x, w): (Vec<f64>, Vec<f64>) = match n {
+        1 => (vec![0.0], vec![2.0]),
+        2 => {
+            let a = 1.0 / 3f64.sqrt();
+            (vec![-a, a], vec![1.0, 1.0])
+        }
+        3 => {
+            let a = (3.0 / 5.0f64).sqrt();
+            (vec![-a, 0.0, a], vec![5.0 / 9.0, 8.0 / 9.0, 5.0 / 9.0])
+        }
+        _ => panic!("gauss_01: unsupported order {n}"),
+    };
+    (
+        x.iter().map(|t| 0.5 * (t + 1.0)).collect(),
+        w.iter().map(|t| 0.5 * t).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn integrate_tri(q: &Quadrature, f: impl Fn(f64, f64) -> f64) -> f64 {
+        (0..q.len()).map(|i| q.weights[i] * f(q.point(i)[0], q.point(i)[1])).sum()
+    }
+
+    #[test]
+    fn tri_rules_integrate_polynomials_exactly() {
+        // ∫_T 1 = 1/2; ∫_T x = 1/6; ∫_T x² = 1/12; ∫_T x²y = 1/60; ∫_T x⁴y = ?
+        for q in [tri_deg1(), tri_deg2(), tri_deg5()] {
+            assert!((integrate_tri(&q, |_, _| 1.0) - 0.5).abs() < 1e-14);
+        }
+        for q in [tri_deg2(), tri_deg5()] {
+            assert!((integrate_tri(&q, |x, _| x) - 1.0 / 6.0).abs() < 1e-14);
+            assert!((integrate_tri(&q, |x, y| x * y) - 1.0 / 24.0).abs() < 1e-14);
+        }
+        let q5 = tri_deg5();
+        assert!((integrate_tri(&q5, |x, y| x * x * y) - 1.0 / 60.0).abs() < 1e-14);
+        assert!(
+            (integrate_tri(&q5, |x, y| x.powi(3) * y * y) - 1.0 / 420.0).abs() < 1e-14,
+            "degree-5 exactness"
+        );
+    }
+
+    #[test]
+    fn tet_rules() {
+        let q1 = tet_deg1();
+        let q2 = tet_deg2();
+        let int = |q: &Quadrature, f: &dyn Fn(&[f64]) -> f64| -> f64 {
+            (0..q.len()).map(|i| q.weights[i] * f(q.point(i))).sum()
+        };
+        assert!((int(&q1, &|_| 1.0) - 1.0 / 6.0).abs() < 1e-14);
+        assert!((int(&q2, &|_| 1.0) - 1.0 / 6.0).abs() < 1e-14);
+        // ∫ x = 1/24, ∫ x y = 1/120.
+        assert!((int(&q2, &|p| p[0]) - 1.0 / 24.0).abs() < 1e-14);
+        assert!((int(&q2, &|p| p[0] * p[1]) - 1.0 / 120.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn quad_and_edge_rules() {
+        let q = quad_gauss(2);
+        let int: f64 = (0..q.len())
+            .map(|i| q.weights[i] * q.point(i)[0].powi(3) * q.point(i)[1])
+            .sum();
+        assert!((int - 0.25 * 0.5).abs() < 1e-14, "2x2 Gauss exact to degree 3");
+
+        let e = edge_gauss(2);
+        let int_e: f64 = (0..e.len()).map(|i| e.weights[i] * e.point(i)[0].powi(3)).sum();
+        assert!((int_e - 0.25).abs() < 1e-14);
+
+        let e3 = edge_gauss(3);
+        let int_e5: f64 = (0..e3.len()).map(|i| e3.weights[i] * e3.point(i)[0].powi(5)).sum();
+        assert!((int_e5 - 1.0 / 6.0).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,238 @@
+//! Reference elements: basis values and gradients on the reference cell.
+//!
+//! First-order Lagrange bases on the simplicial / tensor-product reference
+//! cells used throughout the paper (P1 triangles and tetrahedra, Q1
+//! quadrilaterals for the SIMP benchmark, plus a P1 edge element for
+//! Neumann/Robin boundary integrals).
+
+use super::quadrature::Quadrature;
+use crate::mesh::CellType;
+
+/// A reference finite element.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefElement {
+    /// P1 Lagrange on the reference triangle `{x,y≥0, x+y≤1}`.
+    P1Tri,
+    /// P1 Lagrange on the reference tetrahedron.
+    P1Tet,
+    /// Q1 (bilinear) Lagrange on `[0,1]²`, CCW node order.
+    Q1Quad,
+    /// P1 Lagrange on the reference edge `[0,1]` (boundary integrals, 2D).
+    P1Edge,
+    /// P1 Lagrange triangle used as a 3D boundary facet element.
+    P1TriFacet,
+}
+
+impl RefElement {
+    /// The volumetric element matching a mesh cell type.
+    pub fn for_cell(ct: CellType) -> RefElement {
+        match ct {
+            CellType::Tri3 => RefElement::P1Tri,
+            CellType::Tet4 => RefElement::P1Tet,
+            CellType::Quad4 => RefElement::Q1Quad,
+        }
+    }
+
+    /// The boundary facet element matching a mesh cell type.
+    pub fn for_facet(ct: CellType) -> RefElement {
+        match ct {
+            CellType::Tri3 | CellType::Quad4 => RefElement::P1Edge,
+            CellType::Tet4 => RefElement::P1TriFacet,
+        }
+    }
+
+    /// Number of local basis functions.
+    pub fn k(self) -> usize {
+        match self {
+            RefElement::P1Tri | RefElement::P1TriFacet => 3,
+            RefElement::P1Tet => 4,
+            RefElement::Q1Quad => 4,
+            RefElement::P1Edge => 2,
+        }
+    }
+
+    /// Reference-cell dimension (the parametric dimension, not the ambient).
+    pub fn dim(self) -> usize {
+        match self {
+            RefElement::P1Tri | RefElement::Q1Quad | RefElement::P1TriFacet => 2,
+            RefElement::P1Tet => 3,
+            RefElement::P1Edge => 1,
+        }
+    }
+
+    /// Basis values at a reference point (length `k`).
+    pub fn basis(self, p: &[f64]) -> Vec<f64> {
+        match self {
+            RefElement::P1Tri | RefElement::P1TriFacet => {
+                vec![1.0 - p[0] - p[1], p[0], p[1]]
+            }
+            RefElement::P1Tet => vec![1.0 - p[0] - p[1] - p[2], p[0], p[1], p[2]],
+            RefElement::Q1Quad => {
+                let (x, y) = (p[0], p[1]);
+                vec![(1.0 - x) * (1.0 - y), x * (1.0 - y), x * y, (1.0 - x) * y]
+            }
+            RefElement::P1Edge => vec![1.0 - p[0], p[0]],
+        }
+    }
+
+    /// Basis gradients at a reference point (`k × dim`, row-major).
+    pub fn grads(self, p: &[f64]) -> Vec<f64> {
+        match self {
+            RefElement::P1Tri | RefElement::P1TriFacet => {
+                vec![-1.0, -1.0, 1.0, 0.0, 0.0, 1.0]
+            }
+            RefElement::P1Tet => vec![
+                -1.0, -1.0, -1.0, //
+                1.0, 0.0, 0.0, //
+                0.0, 1.0, 0.0, //
+                0.0, 0.0, 1.0,
+            ],
+            RefElement::Q1Quad => {
+                let (x, y) = (p[0], p[1]);
+                vec![
+                    -(1.0 - y),
+                    -(1.0 - x),
+                    1.0 - y,
+                    -x,
+                    y,
+                    x,
+                    -y,
+                    1.0 - x,
+                ]
+            }
+            RefElement::P1Edge => vec![-1.0, 1.0],
+        }
+    }
+
+    /// Tabulate values and gradients at all quadrature points.
+    pub fn tabulate(self, quad: &Quadrature) -> Tabulation {
+        assert_eq!(quad.dim, self.dim(), "quadrature/element dimension mismatch");
+        let k = self.k();
+        let d = self.dim();
+        let q = quad.len();
+        let mut vals = Vec::with_capacity(q * k);
+        let mut grads = Vec::with_capacity(q * k * d);
+        for qi in 0..q {
+            let p = quad.point(qi);
+            vals.extend(self.basis(p));
+            grads.extend(self.grads(p));
+        }
+        Tabulation {
+            element: self,
+            q,
+            k,
+            dim: d,
+            vals,
+            grads,
+            weights: quad.weights.clone(),
+        }
+    }
+}
+
+/// Basis values/gradients tabulated at quadrature points.
+#[derive(Clone, Debug)]
+pub struct Tabulation {
+    pub element: RefElement,
+    pub q: usize,
+    pub k: usize,
+    pub dim: usize,
+    /// `Q × k`.
+    pub vals: Vec<f64>,
+    /// `Q × k × dim`.
+    pub grads: Vec<f64>,
+    /// Quadrature weights (copied from the rule used to tabulate), so the
+    /// Map stage needs only the tabulation + geometry.
+    pub weights: Vec<f64>,
+}
+
+impl Tabulation {
+    /// Value of basis `a` at quadrature point `q`.
+    pub fn val(&self, q: usize, a: usize) -> f64 {
+        self.vals[q * self.k + a]
+    }
+
+    /// Gradient (reference coords) of basis `a` at quadrature point `q`.
+    pub fn grad(&self, q: usize, a: usize) -> &[f64] {
+        let base = (q * self.k + a) * self.dim;
+        &self.grads[base..base + self.dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fem::quadrature::{quad_gauss, tet_deg2, tri_deg2};
+
+    #[test]
+    fn partition_of_unity() {
+        for el in [
+            RefElement::P1Tri,
+            RefElement::P1Tet,
+            RefElement::Q1Quad,
+            RefElement::P1Edge,
+        ] {
+            let p = vec![0.21; el.dim()];
+            let sum: f64 = el.basis(&p).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-14, "{el:?} not a partition of unity");
+            // Gradients of a partition of unity sum to zero.
+            let g = el.grads(&p);
+            for d in 0..el.dim() {
+                let gsum: f64 = (0..el.k()).map(|a| g[a * el.dim() + d]).sum();
+                assert!(gsum.abs() < 1e-14, "{el:?} grad sum nonzero");
+            }
+        }
+    }
+
+    #[test]
+    fn kronecker_delta_at_nodes() {
+        let nodes: Vec<Vec<f64>> = vec![vec![0.0, 0.0], vec![1.0, 0.0], vec![0.0, 1.0]];
+        for (i, n) in nodes.iter().enumerate() {
+            let vals = RefElement::P1Tri.basis(n);
+            for (j, v) in vals.iter().enumerate() {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((v - expect).abs() < 1e-14);
+            }
+        }
+        let qnodes: Vec<Vec<f64>> =
+            vec![vec![0.0, 0.0], vec![1.0, 0.0], vec![1.0, 1.0], vec![0.0, 1.0]];
+        for (i, n) in qnodes.iter().enumerate() {
+            let vals = RefElement::Q1Quad.basis(n);
+            for (j, v) in vals.iter().enumerate() {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((v - expect).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn q1_grads_match_finite_differences() {
+        let el = RefElement::Q1Quad;
+        let p = [0.3, 0.7];
+        let g = el.grads(&p);
+        let h = 1e-7;
+        for a in 0..4 {
+            for d in 0..2 {
+                let mut pp = p;
+                pp[d] += h;
+                let mut pm = p;
+                pm[d] -= h;
+                let fd = (el.basis(&pp)[a] - el.basis(&pm)[a]) / (2.0 * h);
+                assert!((g[a * 2 + d] - fd).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn tabulation_shapes() {
+        for (el, quad) in [
+            (RefElement::P1Tri, tri_deg2()),
+            (RefElement::P1Tet, tet_deg2()),
+            (RefElement::Q1Quad, quad_gauss(2)),
+        ] {
+            let t = el.tabulate(&quad);
+            assert_eq!(t.vals.len(), t.q * t.k);
+            assert_eq!(t.grads.len(), t.q * t.k * t.dim);
+            assert_eq!(t.val(0, 0), el.basis(quad.point(0))[0]);
+        }
+    }
+}

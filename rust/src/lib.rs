@@ -1,0 +1,47 @@
+//! # TensorGalerkin
+//!
+//! A Rust + JAX + Pallas reproduction of *"Learning, Solving and Optimizing
+//! PDEs with TensorGalerkin: an efficient high-performance Galerkin assembly
+//! algorithm"* (ICML 2026).
+//!
+//! The library reformulates Galerkin (FEM) assembly as a two-stage
+//! **Map-Reduce**:
+//!
+//! * **Stage I — Batch-Map**: all `E` local element matrices
+//!   `K_local ∈ R^{E×k×k}` are produced by one batched tensor contraction
+//!   (natively in [`assembly::local`], or by an AOT-compiled Pallas kernel
+//!   executed through the PJRT runtime in [`runtime`]).
+//! * **Stage II — Sparse-Reduce**: local contributions are aggregated into
+//!   the global CSR matrix with precomputed binary *routing matrices*
+//!   applied as one deterministic sparse product ([`assembly::routing`]).
+//!
+//! On top of the assembly engine sit the paper's three downstream systems:
+//!
+//! * **TensorMesh** — a numerical PDE solver ([`tensormesh`]),
+//! * **TensorPILS** — physics-informed neural solvers & operator learning
+//!   ([`pils`], [`oplearn`]),
+//! * **TensorOpt** — end-to-end differentiable PDE-constrained optimization
+//!   ([`opt`]).
+//!
+//! Python/JAX/Pallas run only at *build time* (`make artifacts`); the request
+//! path is pure Rust + PJRT-compiled HLO artifacts.
+
+pub mod analysis;
+pub mod assembly;
+pub mod bc;
+pub mod coordinator;
+pub mod experiments;
+pub mod fem;
+pub mod mesh;
+pub mod oplearn;
+pub mod opt;
+pub mod pils;
+pub mod runtime;
+pub mod solver;
+pub mod sparse;
+pub mod tensormesh;
+pub mod timestep;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,8 @@
+//! `tensor-galerkin` — leader entrypoint / CLI.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §5).
+
+fn main() {
+    let code = tensor_galerkin::experiments::cli::run(std::env::args().skip(1).collect());
+    std::process::exit(code);
+}

@@ -1,0 +1,112 @@
+//! Mesh + field output in legacy VTK format (readable by ParaView), used by
+//! the `--vtk` flags of the experiment drivers for the paper's qualitative
+//! figures (Fig 2c-d, Fig 3, Fig 5, B.2, B.5, B.15-16, B.20).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::{CellType, Mesh};
+
+/// VTK cell type ids.
+fn vtk_cell_id(ct: CellType) -> usize {
+    match ct {
+        CellType::Tri3 => 5,
+        CellType::Quad4 => 9,
+        CellType::Tet4 => 10,
+    }
+}
+
+/// Serialize the mesh plus named point/cell scalar fields as legacy VTK.
+pub fn to_vtk(
+    mesh: &Mesh,
+    point_fields: &[(&str, &[f64])],
+    cell_fields: &[(&str, &[f64])],
+) -> String {
+    let mut s = String::new();
+    s.push_str("# vtk DataFile Version 3.0\ntensor-galerkin\nASCII\nDATASET UNSTRUCTURED_GRID\n");
+    let n = mesh.n_nodes();
+    let _ = writeln!(s, "POINTS {n} double");
+    for i in 0..n {
+        let p = mesh.point(i);
+        let z = if mesh.dim == 3 { p[2] } else { 0.0 };
+        let _ = writeln!(s, "{} {} {}", p[0], p[1], z);
+    }
+    let e = mesh.n_cells();
+    let k = mesh.cell_type.nodes();
+    let _ = writeln!(s, "CELLS {e} {}", e * (k + 1));
+    for c in 0..e {
+        let _ = write!(s, "{k}");
+        for &v in mesh.cell(c) {
+            let _ = write!(s, " {v}");
+        }
+        s.push('\n');
+    }
+    let _ = writeln!(s, "CELL_TYPES {e}");
+    let id = vtk_cell_id(mesh.cell_type);
+    for _ in 0..e {
+        let _ = writeln!(s, "{id}");
+    }
+    if !point_fields.is_empty() {
+        let _ = writeln!(s, "POINT_DATA {n}");
+        for (name, values) in point_fields {
+            assert_eq!(values.len(), n, "point field {name} wrong length");
+            let _ = writeln!(s, "SCALARS {name} double 1\nLOOKUP_TABLE default");
+            for v in *values {
+                let _ = writeln!(s, "{v}");
+            }
+        }
+    }
+    if !cell_fields.is_empty() {
+        let _ = writeln!(s, "CELL_DATA {e}");
+        for (name, values) in cell_fields {
+            assert_eq!(values.len(), e, "cell field {name} wrong length");
+            let _ = writeln!(s, "SCALARS {name} double 1\nLOOKUP_TABLE default");
+            for v in *values {
+                let _ = writeln!(s, "{v}");
+            }
+        }
+    }
+    s
+}
+
+/// Write VTK to disk, creating parent directories.
+pub fn write_vtk(
+    path: impl AsRef<Path>,
+    mesh: &Mesh,
+    point_fields: &[(&str, &[f64])],
+    cell_fields: &[(&str, &[f64])],
+) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, to_vtk(mesh, point_fields, cell_fields))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::structured::unit_square_tri;
+
+    #[test]
+    fn vtk_contains_sections() {
+        let m = unit_square_tri(2);
+        let u = vec![1.0; m.n_nodes()];
+        let rho = vec![0.5; m.n_cells()];
+        let s = to_vtk(&m, &[("u", &u)], &[("rho", &rho)]);
+        for section in ["POINTS 9 double", "CELLS 8 32", "CELL_TYPES 8", "POINT_DATA 9", "CELL_DATA 8"] {
+            assert!(s.contains(section), "missing {section}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_field_length_panics() {
+        let m = unit_square_tri(2);
+        let bad = vec![0.0; 3];
+        to_vtk(&m, &[("u", &bad)], &[]);
+    }
+}

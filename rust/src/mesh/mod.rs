@@ -1,0 +1,377 @@
+//! Mesh substrate: generation, topology, refinement, quality and I/O.
+//!
+//! The paper relies on Gmsh for unstructured meshes; offline we generate all
+//! benchmark geometries ourselves (DESIGN.md §7): structured triangulations,
+//! quad grids, Kuhn tetrahedralizations, plus curved domains (circle via a
+//! square→disk mapping, L-shape, non-convex "boomerang" annulus sector) and
+//! an interior-node jitter pass that produces genuinely unstructured
+//! geometry while preserving validity.
+
+pub mod curved;
+pub mod io;
+pub mod quality;
+pub mod refine;
+pub mod structured;
+
+use std::collections::HashMap;
+
+/// Element topology supported by the assembly engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CellType {
+    /// Linear triangle (3 nodes, 2D).
+    Tri3,
+    /// Bilinear quadrilateral (4 nodes, 2D).
+    Quad4,
+    /// Linear tetrahedron (4 nodes, 3D).
+    Tet4,
+}
+
+impl CellType {
+    /// Nodes per cell.
+    pub fn nodes(self) -> usize {
+        match self {
+            CellType::Tri3 => 3,
+            CellType::Quad4 => 4,
+            CellType::Tet4 => 4,
+        }
+    }
+
+    /// Spatial dimension.
+    pub fn dim(self) -> usize {
+        match self {
+            CellType::Tri3 | CellType::Quad4 => 2,
+            CellType::Tet4 => 3,
+        }
+    }
+
+    /// Nodes per boundary facet (edge in 2D, triangle face in 3D).
+    pub fn facet_nodes(self) -> usize {
+        match self {
+            CellType::Tri3 | CellType::Quad4 => 2,
+            CellType::Tet4 => 3,
+        }
+    }
+
+    /// Local facet → local node indices.
+    pub fn facets(self) -> &'static [&'static [usize]] {
+        match self {
+            CellType::Tri3 => &[&[0, 1], &[1, 2], &[2, 0]],
+            CellType::Quad4 => &[&[0, 1], &[1, 2], &[2, 3], &[3, 0]],
+            // Faces opposite each vertex, outward-consistent for the
+            // positively oriented reference tet.
+            CellType::Tet4 => &[&[1, 2, 3], &[0, 3, 2], &[0, 1, 3], &[0, 2, 1]],
+        }
+    }
+}
+
+/// Boundary facet marker values used by the benchmark geometries.
+pub mod marker {
+    /// Default marker for all boundary facets.
+    pub const BOUNDARY: u32 = 1;
+    /// Dirichlet portion in mixed-BC benchmarks.
+    pub const DIRICHLET: u32 = 1;
+    /// Neumann portion.
+    pub const NEUMANN: u32 = 2;
+    /// Robin portion.
+    pub const ROBIN: u32 = 3;
+}
+
+/// An unstructured conforming mesh.
+///
+/// `points` is `N × dim` row-major; `cells` is `E × k` row-major with `k =
+/// cell_type.nodes()`. Boundary facets are extracted from topology (facets
+/// incident to exactly one cell) and carry integer markers used to split the
+/// boundary into Dirichlet/Neumann/Robin parts.
+#[derive(Clone, Debug)]
+pub struct Mesh {
+    pub dim: usize,
+    pub points: Vec<f64>,
+    pub cells: Vec<usize>,
+    pub cell_type: CellType,
+    /// Boundary facets, `F × facet_nodes` row-major.
+    pub facets: Vec<usize>,
+    /// One marker per boundary facet.
+    pub facet_markers: Vec<u32>,
+}
+
+impl Mesh {
+    /// Build a mesh from raw points/cells, extracting boundary facets.
+    pub fn new(dim: usize, points: Vec<f64>, cells: Vec<usize>, cell_type: CellType) -> Mesh {
+        assert_eq!(dim, cell_type.dim());
+        assert_eq!(points.len() % dim, 0);
+        assert_eq!(cells.len() % cell_type.nodes(), 0);
+        let mut mesh = Mesh {
+            dim,
+            points,
+            cells,
+            cell_type,
+            facets: Vec::new(),
+            facet_markers: Vec::new(),
+        };
+        mesh.extract_boundary();
+        mesh
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.points.len() / self.dim
+    }
+
+    pub fn n_cells(&self) -> usize {
+        self.cells.len() / self.cell_type.nodes()
+    }
+
+    pub fn n_facets(&self) -> usize {
+        self.facet_markers.len()
+    }
+
+    /// Coordinates of node `i`.
+    pub fn point(&self, i: usize) -> &[f64] {
+        &self.points[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Node indices of cell `e`.
+    pub fn cell(&self, e: usize) -> &[usize] {
+        let k = self.cell_type.nodes();
+        &self.cells[e * k..(e + 1) * k]
+    }
+
+    /// Node indices of boundary facet `f`.
+    pub fn facet(&self, f: usize) -> &[usize] {
+        let k = self.cell_type.facet_nodes();
+        &self.facets[f * k..(f + 1) * k]
+    }
+
+    /// Recompute `facets`/`facet_markers` from cell topology. Every facet
+    /// incident to exactly one cell is a boundary facet (marker 1).
+    pub fn extract_boundary(&mut self) {
+        let fk = self.cell_type.facet_nodes();
+        let mut seen: HashMap<Vec<usize>, (usize, Vec<usize>)> = HashMap::new();
+        for e in 0..self.n_cells() {
+            let cell = self.cell(e);
+            for loc in self.cell_type.facets() {
+                let facet: Vec<usize> = loc.iter().map(|&a| cell[a]).collect();
+                let mut key = facet.clone();
+                key.sort_unstable();
+                seen.entry(key)
+                    .and_modify(|(c, _)| *c += 1)
+                    .or_insert((1, facet));
+            }
+        }
+        let mut boundary: Vec<Vec<usize>> = seen
+            .into_values()
+            .filter(|(count, _)| *count == 1)
+            .map(|(_, facet)| facet)
+            .collect();
+        // Deterministic order regardless of HashMap iteration.
+        boundary.sort();
+        self.facets = Vec::with_capacity(boundary.len() * fk);
+        for f in &boundary {
+            self.facets.extend_from_slice(f);
+        }
+        self.facet_markers = vec![marker::BOUNDARY; boundary.len()];
+    }
+
+    /// Set of node indices lying on boundary facets with any of `markers`
+    /// (sorted, deduplicated).
+    pub fn boundary_nodes_with(&self, markers: &[u32]) -> Vec<usize> {
+        let mut nodes: Vec<usize> = (0..self.n_facets())
+            .filter(|&f| markers.contains(&self.facet_markers[f]))
+            .flat_map(|f| self.facet(f).to_vec())
+            .collect();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes
+    }
+
+    /// All boundary node indices.
+    pub fn boundary_nodes(&self) -> Vec<usize> {
+        let mut nodes: Vec<usize> = self.facets.clone();
+        nodes.sort_unstable();
+        nodes.dedup();
+        nodes
+    }
+
+    /// Re-mark boundary facets with a classifier on the facet centroid.
+    pub fn mark_boundary(&mut self, classify: impl Fn(&[f64]) -> u32) {
+        let fk = self.cell_type.facet_nodes();
+        for f in 0..self.n_facets() {
+            let mut c = vec![0.0; self.dim];
+            let facet: Vec<usize> = self.facet(f).to_vec();
+            for n in facet {
+                for d in 0..self.dim {
+                    c[d] += self.point(n)[d] / fk as f64;
+                }
+            }
+            self.facet_markers[f] = classify(&c);
+        }
+    }
+
+    /// For each boundary facet, the index of its (unique) owning cell.
+    pub fn facet_owners(&self) -> Vec<usize> {
+        let mut owner: HashMap<Vec<usize>, usize> = HashMap::new();
+        for e in 0..self.n_cells() {
+            let cell = self.cell(e);
+            for loc in self.cell_type.facets() {
+                let mut key: Vec<usize> = loc.iter().map(|&a| cell[a]).collect();
+                key.sort_unstable();
+                owner.insert(key, e);
+            }
+        }
+        (0..self.n_facets())
+            .map(|f| {
+                let mut key = self.facet(f).to_vec();
+                key.sort_unstable();
+                owner[&key]
+            })
+            .collect()
+    }
+
+    /// Outward unit normals of all boundary facets (2D meshes): the edge
+    /// tangent rotated by 90°, oriented away from the owning cell's
+    /// centroid — correct for non-convex domains (boomerang, L-shape,
+    /// hollow interiors), unlike domain-centroid heuristics.
+    pub fn facet_outward_normals_2d(&self) -> Vec<[f64; 2]> {
+        assert_eq!(self.dim, 2);
+        let owners = self.facet_owners();
+        let k = self.cell_type.nodes();
+        (0..self.n_facets())
+            .map(|f| {
+                let fac = self.facet(f);
+                let (a, b) = (self.point(fac[0]), self.point(fac[1]));
+                let tx = b[0] - a[0];
+                let ty = b[1] - a[1];
+                let len = (tx * tx + ty * ty).sqrt();
+                let mut n = [ty / len, -tx / len];
+                // Owning cell centroid.
+                let cell = self.cell(owners[f]);
+                let mut cx = 0.0;
+                let mut cy = 0.0;
+                for &v in cell {
+                    cx += self.point(v)[0] / k as f64;
+                    cy += self.point(v)[1] / k as f64;
+                }
+                let mx = 0.5 * (a[0] + b[0]) - cx;
+                let my = 0.5 * (a[1] + b[1]) - cy;
+                if n[0] * mx + n[1] * my < 0.0 {
+                    n = [-n[0], -n[1]];
+                }
+                n
+            })
+            .collect()
+    }
+
+    /// Bounding box `(min, max)` of all nodes.
+    pub fn bbox(&self) -> (Vec<f64>, Vec<f64>) {
+        let mut lo = vec![f64::INFINITY; self.dim];
+        let mut hi = vec![f64::NEG_INFINITY; self.dim];
+        for i in 0..self.n_nodes() {
+            for (d, &x) in self.point(i).iter().enumerate() {
+                lo[d] = lo[d].min(x);
+                hi[d] = hi[d].max(x);
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Characteristic mesh size: max edge length over all cells.
+    pub fn h_max(&self) -> f64 {
+        let mut h: f64 = 0.0;
+        for e in 0..self.n_cells() {
+            let cell = self.cell(e);
+            for i in 0..cell.len() {
+                for j in (i + 1)..cell.len() {
+                    let (a, b) = (self.point(cell[i]), self.point(cell[j]));
+                    let d2: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+                    h = h.max(d2.sqrt());
+                }
+            }
+        }
+        h
+    }
+
+    /// Apply a smooth coordinate mapping to all nodes (used by curved
+    /// domain generators).
+    pub fn map_points(&mut self, f: impl Fn(&[f64]) -> Vec<f64>) {
+        let dim = self.dim;
+        let n = self.n_nodes();
+        for i in 0..n {
+            let original = self.points[i * dim..(i + 1) * dim].to_vec();
+            let mapped = f(&original);
+            assert_eq!(mapped.len(), dim);
+            self.points[i * dim..(i + 1) * dim].copy_from_slice(&mapped);
+        }
+    }
+
+    /// Drop nodes not referenced by any cell, compacting indices.
+    pub fn remove_unused_nodes(&mut self) {
+        let n = self.n_nodes();
+        let mut used = vec![false; n];
+        for &c in &self.cells {
+            used[c] = true;
+        }
+        let mut remap = vec![usize::MAX; n];
+        let mut new_points = Vec::new();
+        let mut next = 0;
+        for i in 0..n {
+            if used[i] {
+                remap[i] = next;
+                new_points.extend_from_slice(&self.points[i * self.dim..(i + 1) * self.dim]);
+                next += 1;
+            }
+        }
+        self.points = new_points;
+        for c in self.cells.iter_mut() {
+            *c = remap[*c];
+        }
+        self.extract_boundary();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::structured::unit_square_tri;
+    use super::*;
+
+    #[test]
+    fn boundary_extraction_unit_square() {
+        let m = unit_square_tri(4);
+        assert_eq!(m.n_nodes(), 25);
+        assert_eq!(m.n_cells(), 32);
+        // 4 sides × 4 edges each.
+        assert_eq!(m.n_facets(), 16);
+        assert_eq!(m.boundary_nodes().len(), 16);
+    }
+
+    #[test]
+    fn mark_boundary_by_side() {
+        let mut m = unit_square_tri(4);
+        m.mark_boundary(|c| if c[0] < 1e-12 { marker::NEUMANN } else { marker::DIRICHLET });
+        let neumann = m.boundary_nodes_with(&[marker::NEUMANN]);
+        assert_eq!(neumann.len(), 5); // left edge nodes
+        for &n in &neumann {
+            assert!(m.point(n)[0].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn bbox_and_hmax() {
+        let m = unit_square_tri(8);
+        let (lo, hi) = m.bbox();
+        assert_eq!(lo, vec![0.0, 0.0]);
+        assert_eq!(hi, vec![1.0, 1.0]);
+        let h = m.h_max();
+        assert!((h - (2.0f64).sqrt() / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn remove_unused_nodes_compacts() {
+        let mut m = unit_square_tri(2);
+        // Keep only the first two cells.
+        m.cells.truncate(2 * 3);
+        m.remove_unused_nodes();
+        assert!(m.n_nodes() <= 6);
+        for &c in &m.cells {
+            assert!(c < m.n_nodes());
+        }
+    }
+}

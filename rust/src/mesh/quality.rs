@@ -1,0 +1,116 @@
+//! Mesh quality metrics: signed cell volumes, totals, angle bounds.
+//!
+//! Used both by generator tests (no inverted elements) and by the assembly
+//! engine's degenerate-element padding scheme (padded elements have exactly
+//! zero volume and must contribute nothing).
+
+use super::{CellType, Mesh};
+
+/// Signed volume (area in 2D) of cell `e`.
+pub fn cell_volume(mesh: &Mesh, e: usize) -> f64 {
+    let c = mesh.cell(e);
+    match mesh.cell_type {
+        CellType::Tri3 => {
+            let (a, b, d) = (mesh.point(c[0]), mesh.point(c[1]), mesh.point(c[2]));
+            0.5 * ((b[0] - a[0]) * (d[1] - a[1]) - (d[0] - a[0]) * (b[1] - a[1]))
+        }
+        CellType::Quad4 => {
+            // Shoelace over the 4 vertices (valid for planar, convex or not).
+            let mut area = 0.0;
+            for i in 0..4 {
+                let p = mesh.point(c[i]);
+                let q = mesh.point(c[(i + 1) % 4]);
+                area += p[0] * q[1] - q[0] * p[1];
+            }
+            0.5 * area
+        }
+        CellType::Tet4 => {
+            let (a, b, cc, d) = (
+                mesh.point(c[0]),
+                mesh.point(c[1]),
+                mesh.point(c[2]),
+                mesh.point(c[3]),
+            );
+            let u = [b[0] - a[0], b[1] - a[1], b[2] - a[2]];
+            let v = [cc[0] - a[0], cc[1] - a[1], cc[2] - a[2]];
+            let w = [d[0] - a[0], d[1] - a[1], d[2] - a[2]];
+            let det = u[0] * (v[1] * w[2] - v[2] * w[1]) - u[1] * (v[0] * w[2] - v[2] * w[0])
+                + u[2] * (v[0] * w[1] - v[1] * w[0]);
+            det / 6.0
+        }
+    }
+}
+
+/// Minimum signed cell volume — positive iff no element is inverted.
+pub fn min_cell_volume(mesh: &Mesh) -> f64 {
+    (0..mesh.n_cells())
+        .map(|e| cell_volume(mesh, e))
+        .fold(f64::INFINITY, f64::min)
+}
+
+/// Sum of signed volumes — the measure of the domain for valid meshes.
+pub fn total_volume(mesh: &Mesh) -> f64 {
+    (0..mesh.n_cells()).map(|e| cell_volume(mesh, e)).sum()
+}
+
+/// Minimum interior angle over all triangles, in radians (Tri3 only).
+pub fn min_angle_tri(mesh: &Mesh) -> f64 {
+    assert_eq!(mesh.cell_type, CellType::Tri3);
+    let mut min_angle = f64::INFINITY;
+    for e in 0..mesh.n_cells() {
+        let c = mesh.cell(e);
+        for i in 0..3 {
+            let p = mesh.point(c[i]);
+            let q = mesh.point(c[(i + 1) % 3]);
+            let r = mesh.point(c[(i + 2) % 3]);
+            let u = [q[0] - p[0], q[1] - p[1]];
+            let v = [r[0] - p[0], r[1] - p[1]];
+            let nu = (u[0] * u[0] + u[1] * u[1]).sqrt();
+            let nv = (v[0] * v[0] + v[1] * v[1]).sqrt();
+            let cosang = ((u[0] * v[0] + u[1] * v[1]) / (nu * nv)).clamp(-1.0, 1.0);
+            min_angle = min_angle.min(cosang.acos());
+        }
+    }
+    min_angle
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::structured::{unit_cube_tet, unit_square_tri};
+
+    #[test]
+    fn triangle_angles_structured() {
+        let m = unit_square_tri(4);
+        let a = min_angle_tri(&m);
+        // Structured right triangles: min angle = 45°.
+        assert!((a - std::f64::consts::FRAC_PI_4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn angle_sum_property() {
+        // Property: for random valid triangles the minimum angle is ≤ 60°.
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..100 {
+            let pts = vec![
+                rng.uniform(),
+                rng.uniform(),
+                rng.uniform() + 1.5,
+                rng.uniform(),
+                rng.uniform(),
+                rng.uniform() + 1.5,
+            ];
+            let m = super::super::Mesh::new(2, pts, vec![0, 1, 2], CellType::Tri3);
+            if min_cell_volume(&m) > 1e-9 {
+                assert!(min_angle_tri(&m) <= std::f64::consts::FRAC_PI_3 + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn tet_volumes_positive() {
+        let m = unit_cube_tet(3);
+        assert!(min_cell_volume(&m) > 0.0);
+        assert!((total_volume(&m) - 1.0).abs() < 1e-12);
+    }
+}

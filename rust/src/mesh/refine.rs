@@ -1,0 +1,88 @@
+//! Uniform mesh refinement.
+//!
+//! Red refinement for triangles (each parent → 4 similar children) —
+//! used by convergence studies and by the "dynamic mesh" agility benchmark
+//! (the paper's adaptive-refinement motivation for zero-compilation
+//! assembly: topology changes every refinement, so routing matrices are
+//! rebuilt while PJRT artifacts stay valid thanks to bucket padding).
+
+use std::collections::HashMap;
+
+use super::{CellType, Mesh};
+
+/// Uniformly refine a triangle mesh once: every edge is bisected and each
+/// triangle is split into 4. Node ordering keeps children positively
+/// oriented when parents are.
+pub fn refine_tri(mesh: &Mesh) -> Mesh {
+    assert_eq!(mesh.cell_type, CellType::Tri3);
+    let mut points = mesh.points.clone();
+    let mut midpoint: HashMap<(usize, usize), usize> = HashMap::new();
+    let mut mid = |a: usize, b: usize, points: &mut Vec<f64>| -> usize {
+        let key = (a.min(b), a.max(b));
+        if let Some(&m) = midpoint.get(&key) {
+            return m;
+        }
+        let pa = [points[a * 2], points[a * 2 + 1]];
+        let pb = [points[b * 2], points[b * 2 + 1]];
+        let idx = points.len() / 2;
+        points.push(0.5 * (pa[0] + pb[0]));
+        points.push(0.5 * (pa[1] + pb[1]));
+        midpoint.insert(key, idx);
+        idx
+    };
+
+    let mut cells = Vec::with_capacity(mesh.cells.len() * 4);
+    for e in 0..mesh.n_cells() {
+        let c = mesh.cell(e);
+        let (v0, v1, v2) = (c[0], c[1], c[2]);
+        let m01 = mid(v0, v1, &mut points);
+        let m12 = mid(v1, v2, &mut points);
+        let m20 = mid(v2, v0, &mut points);
+        cells.extend_from_slice(&[v0, m01, m20]);
+        cells.extend_from_slice(&[m01, v1, m12]);
+        cells.extend_from_slice(&[m20, m12, v2]);
+        cells.extend_from_slice(&[m01, m12, m20]);
+    }
+    Mesh::new(2, points, cells, CellType::Tri3)
+}
+
+/// Refine `levels` times.
+pub fn refine_tri_n(mesh: &Mesh, levels: usize) -> Mesh {
+    let mut m = mesh.clone();
+    for _ in 0..levels {
+        m = refine_tri(&m);
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::quality::{min_cell_volume, total_volume};
+    use crate::mesh::structured::unit_square_tri;
+
+    #[test]
+    fn refine_quadruples_cells_preserves_area() {
+        let m = unit_square_tri(2);
+        let r = refine_tri(&m);
+        assert_eq!(r.n_cells(), 4 * m.n_cells());
+        assert!((total_volume(&r) - 1.0).abs() < 1e-12);
+        assert!(min_cell_volume(&r) > 0.0);
+    }
+
+    #[test]
+    fn refine_shares_edge_midpoints() {
+        let m = unit_square_tri(2);
+        let r = refine_tri(&m);
+        // Euler: refined structured square with n=2 → grid n=4: 25 nodes.
+        assert_eq!(r.n_nodes(), 25);
+    }
+
+    #[test]
+    fn multi_level() {
+        let m = unit_square_tri(1);
+        let r = refine_tri_n(&m, 3);
+        assert_eq!(r.n_cells(), 2 * 64);
+        assert!((total_volume(&r) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,267 @@
+//! Structured mesh generators for the benchmark domains.
+//!
+//! All generators produce positively oriented elements (checked in
+//! [`crate::mesh::quality`] tests). "Unstructured" variants are obtained by
+//! applying [`jitter`] to interior nodes — this exercises exactly the same
+//! code paths as a Gmsh mesh (arbitrary local→global maps, element-dependent
+//! Jacobians) while remaining reproducible offline.
+
+use super::{CellType, Mesh};
+use crate::util::rng::Rng;
+
+/// Triangulated rectangle `[0,Lx]×[0,Ly]` with `nx × ny` cells split into 2
+/// triangles each (`2·nx·ny` elements, `(nx+1)(ny+1)` nodes).
+pub fn rect_tri(nx: usize, ny: usize, lx: f64, ly: f64) -> Mesh {
+    assert!(nx > 0 && ny > 0);
+    let mut points = Vec::with_capacity((nx + 1) * (ny + 1) * 2);
+    for j in 0..=ny {
+        for i in 0..=nx {
+            points.push(lx * i as f64 / nx as f64);
+            points.push(ly * j as f64 / ny as f64);
+        }
+    }
+    let id = |i: usize, j: usize| j * (nx + 1) + i;
+    let mut cells = Vec::with_capacity(nx * ny * 6);
+    for j in 0..ny {
+        for i in 0..nx {
+            let (a, b, c, d) = (id(i, j), id(i + 1, j), id(i + 1, j + 1), id(i, j + 1));
+            // Alternate the diagonal to avoid a globally biased mesh.
+            if (i + j) % 2 == 0 {
+                cells.extend_from_slice(&[a, b, c]);
+                cells.extend_from_slice(&[a, c, d]);
+            } else {
+                cells.extend_from_slice(&[a, b, d]);
+                cells.extend_from_slice(&[b, c, d]);
+            }
+        }
+    }
+    Mesh::new(2, points, cells, CellType::Tri3)
+}
+
+/// Unit square `[0,1]²` triangulation with `n × n × 2` elements.
+pub fn unit_square_tri(n: usize) -> Mesh {
+    rect_tri(n, n, 1.0, 1.0)
+}
+
+/// Quadrilateral (Q4) rectangle mesh `[0,Lx]×[0,Ly]`, `nx × ny` cells.
+/// Node ordering per cell is counter-clockwise — the standard Q4 convention
+/// used by the SIMP topology-optimization benchmark.
+pub fn rect_quad(nx: usize, ny: usize, lx: f64, ly: f64) -> Mesh {
+    assert!(nx > 0 && ny > 0);
+    let mut points = Vec::with_capacity((nx + 1) * (ny + 1) * 2);
+    for j in 0..=ny {
+        for i in 0..=nx {
+            points.push(lx * i as f64 / nx as f64);
+            points.push(ly * j as f64 / ny as f64);
+        }
+    }
+    let id = |i: usize, j: usize| j * (nx + 1) + i;
+    let mut cells = Vec::with_capacity(nx * ny * 4);
+    for j in 0..ny {
+        for i in 0..nx {
+            cells.extend_from_slice(&[id(i, j), id(i + 1, j), id(i + 1, j + 1), id(i, j + 1)]);
+        }
+    }
+    Mesh::new(2, points, cells, CellType::Quad4)
+}
+
+/// L-shaped domain: `[0,1]² \ (0.5,1]×(0.5,1]`, triangulated. Used by the
+/// Allen-Cahn operator-learning benchmark (paper §B.3).
+pub fn lshape_tri(n: usize) -> Mesh {
+    assert!(n >= 2 && n % 2 == 0, "lshape_tri needs even n");
+    let full = rect_tri(n, n, 1.0, 1.0);
+    // Keep cells whose centroid is outside the removed quadrant.
+    let mut cells = Vec::new();
+    for e in 0..full.n_cells() {
+        let cell = full.cell(e);
+        let cx: f64 = cell.iter().map(|&v| full.point(v)[0]).sum::<f64>() / 3.0;
+        let cy: f64 = cell.iter().map(|&v| full.point(v)[1]).sum::<f64>() / 3.0;
+        if !(cx > 0.5 && cy > 0.5) {
+            cells.extend_from_slice(cell);
+        }
+    }
+    let mut m = Mesh {
+        dim: 2,
+        points: full.points,
+        cells,
+        cell_type: CellType::Tri3,
+        facets: Vec::new(),
+        facet_markers: Vec::new(),
+    };
+    m.remove_unused_nodes();
+    m
+}
+
+/// Kuhn (6-tet) tetrahedralization of the box `[0,Lx]×[0,Ly]×[0,Lz]` with
+/// `nx × ny × nz` cubes. All tets positively oriented.
+pub fn box_tet(nx: usize, ny: usize, nz: usize, l: [f64; 3]) -> Mesh {
+    assert!(nx > 0 && ny > 0 && nz > 0);
+    let mut points = Vec::with_capacity((nx + 1) * (ny + 1) * (nz + 1) * 3);
+    for k in 0..=nz {
+        for j in 0..=ny {
+            for i in 0..=nx {
+                points.push(l[0] * i as f64 / nx as f64);
+                points.push(l[1] * j as f64 / ny as f64);
+                points.push(l[2] * k as f64 / nz as f64);
+            }
+        }
+    }
+    let id = |i: usize, j: usize, k: usize| (k * (ny + 1) + j) * (nx + 1) + i;
+    // Kuhn triangulation of the unit cube: 6 tets around the main diagonal
+    // v0→v6, each positively oriented.
+    const TETS: [[usize; 4]; 6] = [
+        [0, 1, 3, 7],
+        [0, 1, 7, 5],
+        [0, 5, 7, 4],
+        [0, 3, 2, 7],
+        [0, 2, 6, 7],
+        [0, 6, 4, 7],
+    ];
+    let mut cells = Vec::with_capacity(nx * ny * nz * 24);
+    for k in 0..nz {
+        for j in 0..ny {
+            for i in 0..nx {
+                let v = [
+                    id(i, j, k),
+                    id(i + 1, j, k),
+                    id(i, j + 1, k),
+                    id(i + 1, j + 1, k),
+                    id(i, j, k + 1),
+                    id(i + 1, j, k + 1),
+                    id(i, j + 1, k + 1),
+                    id(i + 1, j + 1, k + 1),
+                ];
+                for t in TETS {
+                    cells.extend_from_slice(&[v[t[0]], v[t[1]], v[t[2]], v[t[3]]]);
+                }
+            }
+        }
+    }
+    Mesh::new(3, points, cells, CellType::Tet4)
+}
+
+/// Unit cube `[0,1]³` tetrahedralization with `n³·6` elements
+/// (Fig 2 Poisson benchmark).
+pub fn unit_cube_tet(n: usize) -> Mesh {
+    box_tet(n, n, n, [1.0, 1.0, 1.0])
+}
+
+/// Hollow cube `[0,1]³ \ (0.25,0.75)³` (Fig 2 elasticity benchmark,
+/// Eq. B.5). `n` must be divisible by 4 so the cavity is resolved exactly.
+pub fn hollow_cube_tet(n: usize) -> Mesh {
+    assert!(n >= 4 && n % 4 == 0, "hollow_cube_tet needs n divisible by 4");
+    let full = box_tet(n, n, n, [1.0, 1.0, 1.0]);
+    let mut cells = Vec::new();
+    for e in 0..full.n_cells() {
+        let cell = full.cell(e);
+        let mut c = [0.0f64; 3];
+        for &v in cell {
+            let p = full.point(v);
+            for d in 0..3 {
+                c[d] += p[d] / 4.0;
+            }
+        }
+        let inside = c.iter().all(|&x| x > 0.25 && x < 0.75);
+        if !inside {
+            cells.extend_from_slice(cell);
+        }
+    }
+    let mut m = Mesh {
+        dim: 3,
+        points: full.points,
+        cells,
+        cell_type: CellType::Tet4,
+        facets: Vec::new(),
+        facet_markers: Vec::new(),
+    };
+    m.remove_unused_nodes();
+    m
+}
+
+/// Perturb interior nodes by `amount · h` in each coordinate
+/// (`amount ≤ 0.25` keeps structured simplicial meshes valid). Boundary
+/// nodes are left untouched so the geometry is preserved.
+pub fn jitter(mesh: &mut Mesh, amount: f64, seed: u64) {
+    assert!(amount >= 0.0 && amount < 0.5);
+    let mut rng = Rng::new(seed);
+    let h = mesh.h_max() / (2.0f64).sqrt(); // roughly the grid spacing
+    let boundary = mesh.boundary_nodes();
+    let mut is_boundary = vec![false; mesh.n_nodes()];
+    for b in boundary {
+        is_boundary[b] = true;
+    }
+    let dim = mesh.dim;
+    for i in 0..mesh.n_nodes() {
+        if is_boundary[i] {
+            continue;
+        }
+        for d in 0..dim {
+            mesh.points[i * dim + d] += rng.uniform_in(-amount * h, amount * h);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::quality;
+
+    #[test]
+    fn rect_tri_counts_and_orientation() {
+        let m = rect_tri(3, 5, 2.0, 1.0);
+        assert_eq!(m.n_nodes(), 4 * 6);
+        assert_eq!(m.n_cells(), 30);
+        assert!(quality::min_cell_volume(&m) > 0.0);
+        // Total area = 2.0 × 1.0.
+        assert!((quality::total_volume(&m) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quad_mesh_counts() {
+        let m = rect_quad(60, 30, 60.0, 30.0);
+        assert_eq!(m.n_nodes(), 61 * 31); // 1,891 nodes — paper's §B.4 mesh
+        assert_eq!(m.n_cells(), 1800);
+        assert!((quality::total_volume(&m) - 1800.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cube_tet_volume_and_orientation() {
+        let m = unit_cube_tet(4);
+        assert_eq!(m.n_cells(), 4 * 4 * 4 * 6);
+        assert!(quality::min_cell_volume(&m) > 0.0, "inverted tets");
+        assert!((quality::total_volume(&m) - 1.0).abs() < 1e-12);
+        // Boundary of a cube with n=4: 6 faces × 16 squares × 2 tris.
+        assert_eq!(m.n_facets(), 6 * 16 * 2);
+    }
+
+    #[test]
+    fn hollow_cube_removes_cavity() {
+        let m = hollow_cube_tet(4);
+        assert!((quality::total_volume(&m) - (1.0 - 0.125)).abs() < 1e-12);
+        assert!(quality::min_cell_volume(&m) > 0.0);
+    }
+
+    #[test]
+    fn lshape_area() {
+        let m = lshape_tri(8);
+        assert!((quality::total_volume(&m) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jitter_keeps_mesh_valid_and_boundary_fixed() {
+        let mut m = unit_square_tri(8);
+        let before = m.boundary_nodes();
+        let coords_before: Vec<f64> = before.iter().flat_map(|&b| m.point(b).to_vec()).collect();
+        jitter(&mut m, 0.2, 42);
+        let coords_after: Vec<f64> = before.iter().flat_map(|&b| m.point(b).to_vec()).collect();
+        assert_eq!(coords_before, coords_after);
+        assert!(quality::min_cell_volume(&m) > 0.0, "jitter inverted an element");
+    }
+
+    #[test]
+    fn jitter_3d_valid() {
+        let mut m = unit_cube_tet(4);
+        jitter(&mut m, 0.15, 7);
+        assert!(quality::min_cell_volume(&m) > 0.0);
+    }
+}

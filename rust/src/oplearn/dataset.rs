@@ -1,0 +1,207 @@
+//! Problem setups, initial-condition sampling and FEM reference
+//! trajectories for the operator-learning experiments.
+
+use anyhow::Result;
+
+use crate::assembly::{AssemblyContext, BilinearForm, Coefficient};
+use crate::analysis::mms::sine_expansion_ic;
+use crate::mesh::curved::wave_circle;
+use crate::mesh::structured::lshape_tri;
+use crate::mesh::Mesh;
+use crate::runtime::Runtime;
+use crate::timestep::{AllenCahnIntegrator, WaveIntegrator};
+use crate::util::rng::Rng;
+
+/// Which PDE family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PdeKind {
+    Wave,
+    AllenCahn,
+}
+
+impl PdeKind {
+    pub fn tag(self) -> &'static str {
+        match self {
+            PdeKind::Wave => "wave",
+            PdeKind::AllenCahn => "ac",
+        }
+    }
+}
+
+/// Shared, artifact-shape-validated problem state.
+pub struct PdeSetup {
+    pub kind: PdeKind,
+    pub mesh: Mesh,
+    pub ctx: AssemblyContext,
+    /// Mass/stiffness values in routing-pattern order + COO indices.
+    pub mvals: Vec<f64>,
+    pub kvals: Vec<f64>,
+    pub rows_idx: Vec<usize>,
+    pub cols_idx: Vec<usize>,
+    /// Interior mask (0 on Dirichlet nodes).
+    pub mask: Vec<f64>,
+    /// Directed element-graph edges.
+    pub edge_src: Vec<usize>,
+    pub edge_dst: Vec<usize>,
+    pub deg_inv: Vec<f64>,
+    pub dt: f64,
+    pub rollout_t: usize,
+    pub param_count: usize,
+}
+
+impl PdeSetup {
+    /// Build and validate against the artifact manifest shapes.
+    pub fn new(rt: &Runtime, kind: PdeKind) -> Result<PdeSetup> {
+        let name = format!("oplearn_{}_rollout", kind.tag());
+        let info = rt.manifest.get(&name)?;
+        let mesh_n = info.meta["mesh_n"] as usize;
+        let mesh = match kind {
+            PdeKind::Wave => wave_circle(mesh_n),
+            PdeKind::AllenCahn => lshape_tri(mesh_n),
+        };
+        anyhow::ensure!(
+            mesh.n_nodes() == info.meta["n_nodes"] as usize,
+            "mesh/artifact node mismatch for {name}"
+        );
+        let ctx = AssemblyContext::new(&mesh, 1);
+        anyhow::ensure!(
+            ctx.routing.nnz() == info.meta["nnz"] as usize,
+            "mesh/artifact nnz mismatch"
+        );
+        let kmat = ctx.assemble_matrix(&BilinearForm::Diffusion {
+            rho: Coefficient::Const(1.0),
+        });
+        let mmat = ctx.assemble_matrix(&BilinearForm::Mass {
+            rho: Coefficient::Const(1.0),
+        });
+        let mut rows_idx = Vec::with_capacity(kmat.nnz());
+        for r in 0..kmat.nrows {
+            for _ in kmat.indptr[r]..kmat.indptr[r + 1] {
+                rows_idx.push(r);
+            }
+        }
+        let mut mask = vec![1.0; mesh.n_nodes()];
+        for b in mesh.boundary_nodes() {
+            mask[b] = 0.0;
+        }
+        let (edge_src, edge_dst) = element_edges(&mesh);
+        anyhow::ensure!(
+            edge_src.len() == info.meta["n_edges"] as usize,
+            "mesh/artifact edge-count mismatch"
+        );
+        let mut deg = vec![0.0f64; mesh.n_nodes()];
+        for &d in &edge_dst {
+            deg[d] += 1.0;
+        }
+        let deg_inv: Vec<f64> = deg.iter().map(|&d| 1.0 / d.max(1.0)).collect();
+        Ok(PdeSetup {
+            kind,
+            ctx,
+            mvals: mmat.data,
+            kvals: kmat.data,
+            rows_idx,
+            cols_idx: kmat.indices,
+            mask,
+            edge_src,
+            edge_dst,
+            deg_inv,
+            dt: info.meta["dt"],
+            rollout_t: info.meta["rollout_t"] as usize,
+            param_count: info.meta["param_count"] as usize,
+            mesh,
+        })
+    }
+
+    /// FEM reference trajectory (full nodal states) of length `steps+1`.
+    pub fn reference_trajectory(&self, u0_full: &[f64], steps: usize) -> Vec<Vec<f64>> {
+        match self.kind {
+            PdeKind::Wave => {
+                let integ = WaveIntegrator::new(&self.mesh, 4.0, self.dt);
+                integ
+                    .rollout(u0_full, steps)
+                    .into_iter()
+                    .map(|free| integ.expand(&free))
+                    .collect()
+            }
+            PdeKind::AllenCahn => {
+                let integ = AllenCahnIntegrator::new(&self.mesh, 1e-2, 1.0, self.dt);
+                integ
+                    .rollout(u0_full, steps)
+                    .into_iter()
+                    .map(|free| integ.expand(&free))
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Directed element-graph edges (mirrors python `element_edges`): every
+/// ordered pair of distinct nodes within a cell, deduplicated, sorted.
+pub fn element_edges(mesh: &Mesh) -> (Vec<usize>, Vec<usize>) {
+    let mut pairs: Vec<(usize, usize)> = Vec::new();
+    for e in 0..mesh.n_cells() {
+        let cell = mesh.cell(e);
+        for &a in cell {
+            for &b in cell {
+                if a != b {
+                    pairs.push((a, b));
+                }
+            }
+        }
+    }
+    pairs.sort_unstable();
+    pairs.dedup();
+    (
+        pairs.iter().map(|&(a, _)| a).collect(),
+        pairs.iter().map(|&(_, b)| b).collect(),
+    )
+}
+
+/// Sample `count` initial conditions from the Eq. (B.15) distribution
+/// (K=6, r=0.5), clamped to zero on the boundary.
+pub fn sample_ics(mesh: &Mesh, count: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    let boundary = {
+        let mut b = vec![false; mesh.n_nodes()];
+        for n in mesh.boundary_nodes() {
+            b[n] = true;
+        }
+        b
+    };
+    (0..count)
+        .map(|_| {
+            let ic = sine_expansion_ic(6, 0.5, &mut rng);
+            (0..mesh.n_nodes())
+                .map(|i| if boundary[i] { 0.0 } else { ic(mesh.point(i)) })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mesh::structured::unit_square_tri;
+
+    #[test]
+    fn element_edges_counts() {
+        let m = unit_square_tri(2);
+        let (src, dst) = element_edges(&m);
+        assert_eq!(src.len(), dst.len());
+        // Every undirected mesh edge appears twice (both directions).
+        assert_eq!(src.len() % 2, 0);
+        // No self loops.
+        assert!(src.iter().zip(&dst).all(|(a, b)| a != b));
+    }
+
+    #[test]
+    fn ics_are_distinct_and_clamped() {
+        let m = unit_square_tri(6);
+        let ics = sample_ics(&m, 3, 11);
+        assert_eq!(ics.len(), 3);
+        for b in m.boundary_nodes() {
+            assert_eq!(ics[0][b], 0.0);
+        }
+        assert!(crate::util::rel_l2(&ics[0], &ics[1]) > 1e-3);
+    }
+}

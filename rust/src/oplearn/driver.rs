@@ -1,0 +1,161 @@
+//! Training/evaluation drivers over the operator-learning artifacts.
+
+use anyhow::Result;
+
+use crate::pils::trainer::{ArtifactLoss, LossFn, Operand};
+use crate::pils::Adam;
+use crate::runtime::exec::Operand as ExecOperand;
+use crate::runtime::Runtime;
+use crate::util::rng::Rng;
+
+use super::dataset::{PdeKind, PdeSetup};
+
+/// Load a binary f32 init blob by artifact name.
+pub fn load_init_blob(rt: &Runtime, name: &str) -> Result<Vec<f64>> {
+    let info = rt.manifest.get(name)?;
+    let bytes = std::fs::read(&info.file)?;
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    for c in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64);
+    }
+    Ok(out)
+}
+
+/// The common AGN fixed inputs (everything after `params` and the
+/// per-sample leading inputs).
+fn agn_graph_inputs(setup: &PdeSetup) -> Vec<Operand> {
+    vec![
+        Operand::from_f64(&setup.mesh.points),
+        Operand::from_usize(&setup.edge_src),
+        Operand::from_usize(&setup.edge_dst),
+        Operand::from_f64(&setup.deg_inv),
+        Operand::from_f64(&setup.mask),
+    ]
+}
+
+/// Train an AGN with the Galerkin-residual (TensorPILS) loss on a set of
+/// initial conditions. Returns trained parameters.
+pub fn train_pils(
+    rt: &Runtime,
+    setup: &PdeSetup,
+    ics: &[Vec<f64>],
+    epochs: usize,
+    lr: f64,
+    seed: usize,
+) -> Result<Vec<f64>> {
+    let name = format!("oplearn_{}_pils", setup.kind.tag());
+    // Per-IC fixed input sets (u0 leads; graph + sparse follow).
+    let mut per_ic: Vec<ArtifactLoss<'_>> = Vec::new();
+    for ic in ics {
+        let mut fixed = vec![Operand::from_f64(ic)];
+        fixed.extend(agn_graph_inputs(setup));
+        fixed.push(Operand::from_f64(&setup.mvals));
+        fixed.push(Operand::from_f64(&setup.kvals));
+        fixed.push(Operand::from_usize(&setup.rows_idx));
+        fixed.push(Operand::from_usize(&setup.cols_idx));
+        if setup.kind == PdeKind::AllenCahn {
+            let coords = crate::fem::geometry::gather_coords(&setup.mesh);
+            fixed.push(Operand::from_f64(&coords));
+            fixed.push(Operand::from_usize(&setup.mesh.cells));
+        }
+        per_ic.push(ArtifactLoss::new(rt, &name, fixed));
+    }
+    train_sgd(rt, setup, &mut per_ic, epochs, lr, seed)
+}
+
+/// Train the same AGN supervised on FEM trajectories.
+pub fn train_datadriven(
+    rt: &Runtime,
+    setup: &PdeSetup,
+    ics: &[Vec<f64>],
+    epochs: usize,
+    lr: f64,
+    seed: usize,
+) -> Result<Vec<f64>> {
+    let name = format!("oplearn_{}_datadriven", setup.kind.tag());
+    let mut per_ic: Vec<ArtifactLoss<'_>> = Vec::new();
+    for ic in ics {
+        let traj = setup.reference_trajectory(ic, setup.rollout_t);
+        let flat: Vec<f64> = traj.iter().flatten().copied().collect();
+        let mut fixed = vec![Operand::from_f64(ic), Operand::from_f64(&flat)];
+        fixed.extend(agn_graph_inputs(setup));
+        per_ic.push(ArtifactLoss::new(rt, &name, fixed));
+    }
+    train_sgd(rt, setup, &mut per_ic, epochs, lr, seed)
+}
+
+fn train_sgd(
+    rt: &Runtime,
+    setup: &PdeSetup,
+    per_ic: &mut [ArtifactLoss<'_>],
+    epochs: usize,
+    lr: f64,
+    seed: usize,
+) -> Result<Vec<f64>> {
+    let mut params = load_init_blob(rt, &format!("agn_init_{}_s{seed}", setup.kind.tag()))?;
+    let mut adam = Adam::new(params.len(), lr);
+    let mut order: Vec<usize> = (0..per_ic.len()).collect();
+    let mut rng = Rng::new(7 + seed as u64);
+    for ep in 0..epochs {
+        rng.shuffle(&mut order);
+        let mut ep_loss = 0.0;
+        for &i in &order {
+            let (loss, mut grad) = per_ic[i].eval(&params)?;
+            crate::pils::trainer::clip_grad(&mut grad, 1.0);
+            adam.step(&mut params, &grad);
+            ep_loss += loss;
+        }
+        if ep % (epochs / 10).max(1) == 0 {
+            crate::tg_debug!(
+                "{} epoch {ep}: mean loss {:.4e}",
+                setup.kind.tag(),
+                ep_loss / per_ic.len() as f64
+            );
+        }
+    }
+    Ok(params)
+}
+
+/// Roll out the trained AGN at the 2× horizon; returns `(2T+1) × N` states.
+pub fn rollout(rt: &Runtime, setup: &PdeSetup, params: &[f64], ic: &[f64]) -> Result<Vec<Vec<f64>>> {
+    let name = format!("oplearn_{}_rollout", setup.kind.tag());
+    let p32: Vec<f32> = params.iter().map(|&x| x as f32).collect();
+    let mut fixed = vec![Operand::from_f64(ic)];
+    fixed.extend(agn_graph_inputs(setup));
+    let mut inputs: Vec<ExecOperand<'_>> = vec![ExecOperand::F32(&p32)];
+    let owned: Vec<Operand> = fixed;
+    for op in &owned {
+        inputs.push(match op {
+            Operand::F32(v) => ExecOperand::F32(v),
+            Operand::I32(v) => ExecOperand::I32(v),
+        });
+    }
+    let out = rt.execute(&name, &inputs)?;
+    let n = setup.mesh.n_nodes();
+    let steps = out[0].len() / n;
+    Ok((0..steps)
+        .map(|s| out[0][s * n..(s + 1) * n].iter().map(|&v| v as f64).collect())
+        .collect())
+}
+
+/// Segment errors: (ID, OOD) stacked relative L2 against the FEM reference
+/// (steps 1..T vs T+1..2T, §B.3.3).
+pub fn id_ood_errors(pred: &[Vec<f64>], reference: &[Vec<f64>], t: usize) -> (f64, f64) {
+    let seg = |lo: usize, hi: usize| -> f64 {
+        let p: Vec<f64> = pred[lo..hi].iter().flatten().copied().collect();
+        let r: Vec<f64> = reference[lo..hi].iter().flatten().copied().collect();
+        crate::util::rel_l2(&p, &r)
+    };
+    (seg(1, t + 1), seg(t + 1, 2 * t + 1))
+}
+
+/// Per-step RMSE curve (Fig B.17).
+pub fn per_step_rmse(pred: &[Vec<f64>], reference: &[Vec<f64>]) -> Vec<f64> {
+    pred.iter()
+        .zip(reference)
+        .map(|(p, r)| {
+            let n = p.len() as f64;
+            (p.iter().zip(r).map(|(a, b)| (a - b) * (a - b)).sum::<f64>() / n).sqrt()
+        })
+        .collect()
+}

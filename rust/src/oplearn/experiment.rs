@@ -1,0 +1,262 @@
+//! Table 2 / Fig B.17 / Fig B.18 drivers.
+
+use anyhow::Result;
+
+use crate::experiments::common::{markdown_table, ExperimentRecord};
+use crate::pils::trainer::{train_schedule, ArtifactLoss, Operand};
+use crate::runtime::Runtime;
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+
+use super::dataset::{sample_ics, PdeKind, PdeSetup};
+use super::driver;
+
+/// Table 2: rel-L2 (ID / OOD) for data-driven, PI-DeepONet and TensorPILS
+/// on wave + Allen-Cahn, averaged over held-out test ICs.
+pub fn run(args: &Args) -> Result<()> {
+    let epochs = args.get_usize("epochs", 60);
+    let n_train = args.get_usize("samples", 8);
+    let n_test = args.get_usize("test", 4);
+    let lr = args.get_f64("lr", 2e-3);
+    let pdes: Vec<PdeKind> = match args.get_str("pde", "both").as_str() {
+        "wave" => vec![PdeKind::Wave],
+        "ac" => vec![PdeKind::AllenCahn],
+        _ => vec![PdeKind::Wave, PdeKind::AllenCahn],
+    };
+    let with_deeponet = !args.flag("skip-deeponet");
+
+    let rt = Runtime::new()?;
+    let mut rows = Vec::new();
+    for kind in pdes {
+        let setup = PdeSetup::new(&rt, kind)?;
+        let train_ics = sample_ics(&setup.mesh, n_train, 1000);
+        let test_ics = sample_ics(&setup.mesh, n_test, 9000);
+        // Reference trajectories for the test set (2× horizon).
+        let refs: Vec<Vec<Vec<f64>>> = test_ics
+            .iter()
+            .map(|ic| setup.reference_trajectory(ic, 2 * setup.rollout_t))
+            .collect();
+
+        for method in ["datadriven", "pils"] {
+            let params = match method {
+                "pils" => driver::train_pils(&rt, &setup, &train_ics, epochs, lr, 0)?,
+                _ => driver::train_datadriven(&rt, &setup, &train_ics, epochs, lr, 0)?,
+            };
+            let (mut id_acc, mut ood_acc) = (Vec::new(), Vec::new());
+            for (ic, reference) in test_ics.iter().zip(&refs) {
+                let pred = driver::rollout(&rt, &setup, &params, ic)?;
+                let (id, ood) = driver::id_ood_errors(&pred, reference, setup.rollout_t);
+                id_acc.push(id);
+                ood_acc.push(ood);
+            }
+            let (id_m, id_s) = mean_std(&id_acc);
+            let (ood_m, ood_s) = mean_std(&ood_acc);
+            crate::tg_info!("table2 {} {method}: ID {id_m:.3}±{id_s:.3} OOD {ood_m:.3}±{ood_s:.3}", kind.tag());
+            rows.push(vec![
+                format!("{} / {method}", kind.tag()),
+                format!("{id_m:.3}±{id_s:.3}"),
+                format!("{ood_m:.3}±{ood_s:.3}"),
+            ]);
+            ExperimentRecord::new("table2")
+                .str("pde", kind.tag())
+                .str("method", method)
+                .num("id_mean", id_m)
+                .num("id_std", id_s)
+                .num("ood_mean", ood_m)
+                .num("ood_std", ood_s)
+                .num("epochs", epochs as f64)
+                .num("samples", n_train as f64)
+                .write()?;
+
+            // Fig B.17: per-step RMSE curves on the first test IC (wave).
+            if kind == PdeKind::Wave {
+                let pred = driver::rollout(&rt, &setup, &params, &test_ics[0])?;
+                let rmse = driver::per_step_rmse(&pred, &refs[0]);
+                let rec = ExperimentRecord::new("figb17").str("method", method).num(
+                    "final_rmse",
+                    *rmse.last().unwrap(),
+                );
+                rec.write()?;
+            }
+        }
+
+        // PI-DeepONet (wave only, as in our artifact set).
+        if kind == PdeKind::Wave && with_deeponet {
+            let (id_m, ood_m) = train_eval_deeponet(&rt, &setup, &train_ics, &test_ics, &refs, epochs, lr)?;
+            rows.push(vec![
+                "wave / pideeponet".to_string(),
+                format!("{id_m:.3}"),
+                format!("{ood_m:.3}"),
+            ]);
+            ExperimentRecord::new("table2")
+                .str("pde", "wave")
+                .str("method", "pideeponet")
+                .num("id_mean", id_m)
+                .num("ood_mean", ood_m)
+                .write()?;
+        }
+    }
+    println!(
+        "\nTable 2 (operator learning, rel-L2; epochs={epochs}, train ICs={n_train}):\n\n{}",
+        markdown_table(&["PDE / method", "ID", "OOD"], &rows)
+    );
+    Ok(())
+}
+
+/// Fig B.18: error vs number of training ICs for data-driven vs PILS.
+pub fn run_figb18(args: &Args) -> Result<()> {
+    let epochs = args.get_usize("epochs", 40);
+    let counts = args.get_usize_list("counts", &[1, 2, 4, 8]);
+    let n_test = args.get_usize("test", 4);
+    let lr = args.get_f64("lr", 2e-3);
+    let rt = Runtime::new()?;
+    let setup = PdeSetup::new(&rt, PdeKind::Wave)?;
+    let test_ics = sample_ics(&setup.mesh, n_test, 9000);
+    let refs: Vec<Vec<Vec<f64>>> = test_ics
+        .iter()
+        .map(|ic| setup.reference_trajectory(ic, 2 * setup.rollout_t))
+        .collect();
+    let mut rows = Vec::new();
+    for &c in &counts {
+        let train_ics = sample_ics(&setup.mesh, c, 1000);
+        let mut row = vec![format!("{c}")];
+        for method in ["datadriven", "pils"] {
+            let params = match method {
+                "pils" => driver::train_pils(&rt, &setup, &train_ics, epochs, lr, 0)?,
+                _ => driver::train_datadriven(&rt, &setup, &train_ics, epochs, lr, 0)?,
+            };
+            let errs: Vec<f64> = test_ics
+                .iter()
+                .zip(&refs)
+                .map(|(ic, reference)| {
+                    let pred = driver::rollout(&rt, &setup, &params, ic).unwrap();
+                    driver::id_ood_errors(&pred, reference, setup.rollout_t).0
+                })
+                .collect();
+            let (m, s) = mean_std(&errs);
+            row.push(format!("{m:.3}±{s:.3}"));
+            ExperimentRecord::new("figb18")
+                .str("method", method)
+                .num("n_train", c as f64)
+                .num("id_mean", m)
+                .num("id_std", s)
+                .write()?;
+        }
+        rows.push(row);
+    }
+    println!(
+        "\nFig B.18 (error vs #training ICs, wave):\n\n{}",
+        markdown_table(&["#ICs", "data-driven", "TensorPILS"], &rows)
+    );
+    Ok(())
+}
+
+fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len().max(1) as f64;
+    let m = xs.iter().sum::<f64>() / n;
+    let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n;
+    (m, v.sqrt())
+}
+
+/// PI-DeepONet: trained on the strong-form residual for the first training
+/// IC family, evaluated by querying (x, y, t) on the test ICs.
+fn train_eval_deeponet(
+    rt: &Runtime,
+    setup: &PdeSetup,
+    train_ics: &[Vec<f64>],
+    test_ics: &[Vec<f64>],
+    refs: &[Vec<Vec<f64>>],
+    epochs: usize,
+    lr: f64,
+) -> Result<(f64, f64)> {
+    let info = rt.manifest.get("oplearn_wave_pideeponet")?.clone();
+    let m_col = info.meta["m_col"] as usize;
+    let m_bc = info.meta["m_bc"] as usize;
+    let t_max = info.meta["t_max"];
+    let n = setup.mesh.n_nodes();
+    let mut rng = Rng::new(31);
+    let boundary = setup.mesh.boundary_nodes();
+
+    // Collocation/IC/BC point sets shared across ICs.
+    let mut colloc = Vec::with_capacity(m_col * 3);
+    let interior: Vec<usize> = (0..n).filter(|i| setup.mask[*i] > 0.5).collect();
+    for _ in 0..m_col {
+        let node = interior[rng.below(interior.len())];
+        let p = setup.mesh.point(node);
+        colloc.extend_from_slice(&[p[0], p[1], rng.uniform_in(0.0, t_max)]);
+    }
+    let mut ic_pts = Vec::with_capacity(n * 3);
+    for i in 0..n {
+        let p = setup.mesh.point(i);
+        ic_pts.extend_from_slice(&[p[0], p[1], 0.0]);
+    }
+    let mut bc_pts = Vec::with_capacity(m_bc * 3);
+    for _ in 0..m_bc {
+        let b = boundary[rng.below(boundary.len())];
+        let p = setup.mesh.point(b);
+        bc_pts.extend_from_slice(&[p[0], p[1], rng.uniform_in(0.0, t_max)]);
+    }
+
+    // Round-robin SGD over the training ICs.
+    let mut per_ic: Vec<ArtifactLoss<'_>> = train_ics
+        .iter()
+        .map(|ic| {
+            ArtifactLoss::new(
+                rt,
+                "oplearn_wave_pideeponet",
+                vec![
+                    Operand::from_f64(ic),
+                    Operand::from_f64(&colloc),
+                    Operand::from_f64(&ic_pts),
+                    Operand::from_f64(ic),
+                    Operand::from_f64(&bc_pts),
+                ],
+            )
+        })
+        .collect();
+    let mut params = driver::load_init_blob(rt, "deeponet_init_wave")?;
+    // Use the shared schedule runner for the first IC, then SGD rounds.
+    let (p_trained, _) = train_schedule(&mut per_ic[0], params.clone(), epochs, 0, lr)?;
+    params = p_trained;
+    let mut adam = crate::pils::Adam::new(params.len(), lr * 0.5);
+    for _ in 0..epochs {
+        for loss in per_ic.iter_mut().skip(1) {
+            let (_, grad) = crate::pils::trainer::LossFn::eval(loss, &params)?;
+            adam.step(&mut params, &grad);
+        }
+    }
+
+    // Evaluate: query each time slice.
+    let (mut id_acc, mut ood_acc) = (Vec::new(), Vec::new());
+    let t_steps = 2 * setup.rollout_t;
+    for (ic, reference) in test_ics.iter().zip(refs) {
+        let s32: Vec<f32> = ic.iter().map(|&x| x as f32).collect();
+        let mut pred = Vec::with_capacity(t_steps + 1);
+        for s in 0..=t_steps {
+            let t = s as f64 * setup.dt;
+            let mut q = Vec::with_capacity(n * 3);
+            for i in 0..n {
+                let p = setup.mesh.point(i);
+                q.extend_from_slice(&[p[0] as f32, p[1] as f32, t as f32]);
+            }
+            let out = rt.execute(
+                "oplearn_wave_pideeponet_eval",
+                &[
+                    crate::runtime::exec::Operand::F32(
+                        &params.iter().map(|&x| x as f32).collect::<Vec<f32>>(),
+                    ),
+                    crate::runtime::exec::Operand::F32(&s32),
+                    crate::runtime::exec::Operand::F32(&q),
+                ],
+            )?;
+            pred.push(out[0].iter().map(|&v| v as f64).collect::<Vec<f64>>());
+        }
+        let (id, ood) = driver::id_ood_errors(&pred, reference, setup.rollout_t);
+        id_acc.push(id);
+        ood_acc.push(ood);
+    }
+    let (id_m, _) = mean_std(&id_acc);
+    let (ood_m, _) = mean_std(&ood_acc);
+    crate::tg_info!("table2 wave pideeponet: ID {id_m:.3} OOD {ood_m:.3}");
+    Ok((id_m, ood_m))
+}

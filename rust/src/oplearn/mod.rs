@@ -1,0 +1,11 @@
+//! Physics-informed operator learning (Table 2, Figs B.15-B.18): learn the
+//! map initial-condition → trajectory for the wave equation (circle) and
+//! Allen-Cahn (L-shape) with an AGN backbone, trained either data-free
+//! through the TensorGalerkin discrete residual (TensorPILS), supervised on
+//! FEM trajectories (data-driven), or as a PI-DeepONet baseline.
+
+pub mod dataset;
+pub mod driver;
+pub mod experiment;
+
+pub use dataset::{sample_ics, PdeKind, PdeSetup};

@@ -1,0 +1,242 @@
+//! Design-variable updates: the Method of Moving Asymptotes (Svanberg
+//! 1987) for a single inequality constraint, and the classical OC
+//! (optimality-criteria) update as a cross-check. Both enforce the move
+//! limit and box constraints of §B.4.1.
+
+/// MMA state for `min f(x) s.t. g(x) ≤ 0, xmin ≤ x ≤ xmax`.
+pub struct Mma {
+    n: usize,
+    pub move_limit: f64,
+    pub asy_init: f64,
+    pub asy_incr: f64,
+    pub asy_decr: f64,
+    low: Vec<f64>,
+    upp: Vec<f64>,
+    xold1: Vec<f64>,
+    xold2: Vec<f64>,
+    iter: usize,
+}
+
+impl Mma {
+    pub fn new(n: usize, move_limit: f64) -> Mma {
+        Mma {
+            n,
+            move_limit,
+            asy_init: 0.5,
+            asy_incr: 1.2,
+            asy_decr: 0.7,
+            low: vec![0.0; n],
+            upp: vec![0.0; n],
+            xold1: vec![0.0; n],
+            xold2: vec![0.0; n],
+            iter: 0,
+        }
+    }
+
+    /// One MMA update. `dfdx` is ∇f, `g` the constraint value (≤ 0
+    /// feasible), `dgdx` its gradient. Returns the new design.
+    pub fn update(
+        &mut self,
+        x: &[f64],
+        dfdx: &[f64],
+        g: f64,
+        dgdx: &[f64],
+        xmin: f64,
+        xmax: f64,
+    ) -> Vec<f64> {
+        assert_eq!(x.len(), self.n);
+        self.iter += 1;
+        let range = (xmax - xmin).max(1e-12);
+        // Asymptote update.
+        for j in 0..self.n {
+            if self.iter <= 2 {
+                self.low[j] = x[j] - self.asy_init * range;
+                self.upp[j] = x[j] + self.asy_init * range;
+            } else {
+                let osc = (x[j] - self.xold1[j]) * (self.xold1[j] - self.xold2[j]);
+                let factor = if osc > 0.0 {
+                    self.asy_incr
+                } else if osc < 0.0 {
+                    self.asy_decr
+                } else {
+                    1.0
+                };
+                let lold = self.xold1[j] - self.low[j];
+                let uold = self.upp[j] - self.xold1[j];
+                self.low[j] = x[j] - factor * lold;
+                self.upp[j] = x[j] + factor * uold;
+                // Svanberg's bounds.
+                self.low[j] = self.low[j].clamp(x[j] - 10.0 * range, x[j] - 0.01 * range);
+                self.upp[j] = self.upp[j].clamp(x[j] + 0.01 * range, x[j] + 10.0 * range);
+            }
+        }
+        // Bounds α, β.
+        let mut alpha = vec![0.0; self.n];
+        let mut beta = vec![0.0; self.n];
+        for j in 0..self.n {
+            alpha[j] = (self.low[j] + 0.1 * (x[j] - self.low[j]))
+                .max(x[j] - self.move_limit * range)
+                .max(xmin);
+            beta[j] = (self.upp[j] - 0.1 * (self.upp[j] - x[j]))
+                .min(x[j] + self.move_limit * range)
+                .min(xmax);
+            beta[j] = beta[j].max(alpha[j]);
+        }
+        // MMA approximation coefficients (objective p0/q0, constraint p1/q1).
+        let eps = 1e-9;
+        let mut p0 = vec![0.0; self.n];
+        let mut q0 = vec![0.0; self.n];
+        let mut p1 = vec![0.0; self.n];
+        let mut q1 = vec![0.0; self.n];
+        for j in 0..self.n {
+            let du = (self.upp[j] - x[j]).max(1e-9);
+            let dl = (x[j] - self.low[j]).max(1e-9);
+            p0[j] = du * du * (dfdx[j].max(0.0) + eps);
+            q0[j] = dl * dl * ((-dfdx[j]).max(0.0) + eps);
+            p1[j] = du * du * dgdx[j].max(0.0);
+            q1[j] = dl * dl * (-dgdx[j]).max(0.0);
+        }
+        // Constraint residual at x under the approximation:
+        // g̃(y) = g + Σ [p1/(upp−y) − p1/(upp−x)] + [q1/(y−low) − q1/(x−low)]
+        let base: f64 = g;
+        let x_of_lambda = |lambda: f64, out: &mut Vec<f64>| {
+            for j in 0..self.n {
+                let pj = p0[j] + lambda * p1[j];
+                let qj = q0[j] + lambda * q1[j];
+                let sp = pj.sqrt();
+                let sq = qj.sqrt();
+                let y = (self.low[j] * sp + self.upp[j] * sq) / (sp + sq).max(1e-300);
+                out[j] = y.clamp(alpha[j], beta[j]);
+            }
+        };
+        let gtilde = |y: &[f64]| -> f64 {
+            let mut acc = base;
+            for j in 0..self.n {
+                acc += p1[j] * (1.0 / (self.upp[j] - y[j]).max(1e-9) - 1.0 / (self.upp[j] - x[j]).max(1e-9));
+                acc += q1[j] * (1.0 / (y[j] - self.low[j]).max(1e-9) - 1.0 / (x[j] - self.low[j]).max(1e-9));
+            }
+            acc
+        };
+        // Dual bisection on λ ≥ 0.
+        let mut y = vec![0.0; self.n];
+        x_of_lambda(0.0, &mut y);
+        let xnew = if gtilde(&y) <= 0.0 {
+            y
+        } else {
+            let (mut l1, mut l2) = (0.0, 1.0);
+            x_of_lambda(l2, &mut y);
+            let mut guard = 0;
+            while gtilde(&y) > 0.0 && guard < 200 {
+                l2 *= 2.0;
+                x_of_lambda(l2, &mut y);
+                guard += 1;
+            }
+            for _ in 0..60 {
+                let lm = 0.5 * (l1 + l2);
+                x_of_lambda(lm, &mut y);
+                if gtilde(&y) > 0.0 {
+                    l1 = lm;
+                } else {
+                    l2 = lm;
+                }
+            }
+            x_of_lambda(l2, &mut y);
+            y
+        };
+        self.xold2 = std::mem::take(&mut self.xold1);
+        self.xold1 = x.to_vec();
+        xnew
+    }
+}
+
+/// Classical OC update for compliance + volume fraction (the 99-line
+/// topopt scheme) — used to cross-validate MMA.
+pub struct OcUpdate {
+    pub move_limit: f64,
+    pub damping: f64,
+}
+
+impl Default for OcUpdate {
+    fn default() -> Self {
+        OcUpdate {
+            move_limit: 0.2,
+            damping: 0.5,
+        }
+    }
+}
+
+impl OcUpdate {
+    /// `dc` must be ≤ 0 (compliance sensitivities); `vol_frac` the target
+    /// mean density.
+    pub fn update(&self, x: &[f64], dc: &[f64], vol_frac: f64, xmin: f64) -> Vec<f64> {
+        let (mut l1, mut l2) = (1e-9, 1e9);
+        let mut xnew = vec![0.0; x.len()];
+        while (l2 - l1) / (l1 + l2) > 1e-6 {
+            let lmid = 0.5 * (l1 + l2);
+            for j in 0..x.len() {
+                let b = (-dc[j] / lmid).max(0.0).powf(self.damping);
+                let cand = x[j] * b;
+                xnew[j] = cand
+                    .min(x[j] + self.move_limit)
+                    .max(x[j] - self.move_limit)
+                    .clamp(xmin, 1.0);
+            }
+            let mean: f64 = xnew.iter().sum::<f64>() / x.len() as f64;
+            if mean > vol_frac {
+                l1 = lmid;
+            } else {
+                l2 = lmid;
+            }
+        }
+        xnew
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// min Σ(x−2)² s.t. mean(x) ≤ 0.5 → all x at the constraint.
+    #[test]
+    fn mma_converges_on_constrained_quadratic() {
+        let n = 12;
+        let mut mma = Mma::new(n, 0.2);
+        let mut x = vec![0.4; n];
+        for _ in 0..60 {
+            let dfdx: Vec<f64> = x.iter().map(|&v| 2.0 * (v - 2.0)).collect();
+            let g = x.iter().sum::<f64>() / n as f64 - 0.5;
+            let dgdx = vec![1.0 / n as f64; n];
+            x = mma.update(&x, &dfdx, g, &dgdx, 0.0, 1.0);
+        }
+        let mean = x.iter().sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 1e-2, "mean {mean}");
+        for &v in &x {
+            assert!((v - 0.5).abs() < 5e-2, "x {v}");
+        }
+    }
+
+    #[test]
+    fn mma_respects_bounds_and_move_limit() {
+        let n = 5;
+        let mut mma = Mma::new(n, 0.1);
+        let x = vec![0.5; n];
+        let dfdx = vec![-100.0; n]; // push hard toward xmax
+        let xnew = mma.update(&x, &dfdx, -1.0, &vec![0.0; n], 0.0, 1.0);
+        for &v in &xnew {
+            assert!(v <= 0.6 + 1e-12, "move limit violated: {v}");
+            assert!(v >= 0.0 && v <= 1.0);
+        }
+    }
+
+    #[test]
+    fn oc_hits_volume_target() {
+        let n = 50;
+        let oc = OcUpdate::default();
+        let x = vec![0.5; n];
+        let dc: Vec<f64> = (0..n).map(|j| -1.0 - (j as f64) / 10.0).collect();
+        let xnew = oc.update(&x, &dc, 0.4, 1e-3);
+        let mean = xnew.iter().sum::<f64>() / n as f64;
+        assert!(mean <= 0.4 + 5e-2);
+        assert!(xnew.iter().all(|&v| (1e-3..=1.0).contains(&v)));
+    }
+}

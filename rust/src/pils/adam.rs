@@ -1,0 +1,75 @@
+//! Adam optimizer (Kingma & Ba) over flat f64 parameter vectors.
+
+/// Adam state.
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: usize,
+}
+
+impl Adam {
+    pub fn new(n: usize, lr: f64) -> Adam {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    /// One update in place.
+    pub fn step(&mut self, params: &mut [f64], grad: &[f64]) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    /// Cosine learning-rate schedule helper (paper §B.1.2 PINN setup).
+    pub fn set_cosine_lr(&mut self, step: usize, total: usize, lr0: f64, lr1: f64) {
+        let frac = (step as f64 / total.max(1) as f64).clamp(0.0, 1.0);
+        self.lr = lr1 + 0.5 * (lr0 - lr1) * (1.0 + (std::f64::consts::PI * frac).cos());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Adam minimizes a convex quadratic.
+    #[test]
+    fn minimizes_quadratic() {
+        let mut params = vec![5.0, -3.0];
+        let mut opt = Adam::new(2, 0.05);
+        for _ in 0..2000 {
+            let grad: Vec<f64> = params.iter().map(|&x| 2.0 * (x - 1.0)).collect();
+            opt.step(&mut params, &grad);
+        }
+        assert!((params[0] - 1.0).abs() < 1e-3);
+        assert!((params[1] - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn cosine_schedule_endpoints() {
+        let mut opt = Adam::new(1, 1.0);
+        opt.set_cosine_lr(0, 100, 1e-3, 1e-5);
+        assert!((opt.lr - 1e-3).abs() < 1e-12);
+        opt.set_cosine_lr(100, 100, 1e-3, 1e-5);
+        assert!((opt.lr - 1e-5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,191 @@
+//! L-BFGS with two-loop recursion and Armijo backtracking line search —
+//! the second stage of the paper's training schedule (10k Adam + 200
+//! L-BFGS, Table 1). Operates on a black-box `params → (loss, grad)`.
+
+use anyhow::Result;
+
+use crate::util::dot;
+
+use super::trainer::LossFn;
+
+/// L-BFGS optimizer state.
+pub struct Lbfgs {
+    /// History depth.
+    pub m: usize,
+    /// Armijo parameter.
+    pub c1: f64,
+    /// Backtracking shrink factor.
+    pub shrink: f64,
+    /// Max line-search trials per step.
+    pub max_ls: usize,
+    s_hist: Vec<Vec<f64>>,
+    y_hist: Vec<Vec<f64>>,
+}
+
+impl Lbfgs {
+    pub fn new(m: usize) -> Lbfgs {
+        Lbfgs {
+            m,
+            c1: 1e-4,
+            shrink: 0.5,
+            max_ls: 20,
+            s_hist: Vec::new(),
+            y_hist: Vec::new(),
+        }
+    }
+
+    /// Two-loop recursion: approximate `H·g`.
+    fn direction(&self, grad: &[f64]) -> Vec<f64> {
+        let mut q = grad.to_vec();
+        let k = self.s_hist.len();
+        let mut alphas = vec![0.0; k];
+        for i in (0..k).rev() {
+            let rho = 1.0 / dot(&self.y_hist[i], &self.s_hist[i]).max(1e-300);
+            alphas[i] = rho * dot(&self.s_hist[i], &q);
+            for (qj, yj) in q.iter_mut().zip(&self.y_hist[i]) {
+                *qj -= alphas[i] * yj;
+            }
+        }
+        // Initial Hessian scaling γ = sᵀy / yᵀy.
+        if k > 0 {
+            let s = &self.s_hist[k - 1];
+            let y = &self.y_hist[k - 1];
+            let gamma = dot(s, y) / dot(y, y).max(1e-300);
+            for qj in q.iter_mut() {
+                *qj *= gamma.max(1e-12);
+            }
+        }
+        for i in 0..k {
+            let rho = 1.0 / dot(&self.y_hist[i], &self.s_hist[i]).max(1e-300);
+            let beta = rho * dot(&self.y_hist[i], &q);
+            for (qj, sj) in q.iter_mut().zip(&self.s_hist[i]) {
+                *qj += (alphas[i] - beta) * sj;
+            }
+        }
+        q
+    }
+
+    /// One L-BFGS step with backtracking. Returns `false` only if even a
+    /// restarted steepest-descent line search cannot make progress.
+    pub fn step(
+        &mut self,
+        f: &mut dyn LossFn,
+        params: &mut Vec<f64>,
+        loss: &mut f64,
+        grad: &mut Vec<f64>,
+    ) -> Result<bool> {
+        let dir: Vec<f64> = self.direction(grad).iter().map(|&d| -d).collect();
+        let dg = dot(&dir, grad);
+        if dg < 0.0 && self.try_line_search(f, params, loss, grad, &dir, dg)? {
+            return Ok(true);
+        }
+        // Restart: drop the (stale) curvature history, take a gradient
+        // step scaled to unit step length.
+        self.s_hist.clear();
+        self.y_hist.clear();
+        let gnorm = dot(grad, grad).sqrt().max(1e-300);
+        let sd: Vec<f64> = grad.iter().map(|&g| -g / gnorm).collect();
+        let sdg = -gnorm;
+        self.try_line_search(f, params, loss, grad, &sd, sdg)
+    }
+
+    fn try_line_search(
+        &mut self,
+        f: &mut dyn LossFn,
+        params: &mut Vec<f64>,
+        loss: &mut f64,
+        grad: &mut Vec<f64>,
+        dir: &[f64],
+        dg: f64,
+    ) -> Result<bool> {
+        let mut t = 1.0;
+        for _ in 0..self.max_ls {
+            let trial: Vec<f64> = params.iter().zip(dir).map(|(&p, &d)| p + t * d).collect();
+            let (l_new, g_new) = f.eval(&trial)?;
+            if l_new.is_finite() && l_new <= *loss + self.c1 * t * dg {
+                // Accept; update history.
+                let s: Vec<f64> = trial.iter().zip(params.iter()).map(|(a, b)| a - b).collect();
+                let y: Vec<f64> = g_new.iter().zip(grad.iter()).map(|(a, b)| a - b).collect();
+                if dot(&s, &y) > 1e-12 {
+                    self.s_hist.push(s);
+                    self.y_hist.push(y);
+                    if self.s_hist.len() > self.m {
+                        self.s_hist.remove(0);
+                        self.y_hist.remove(0);
+                    }
+                }
+                *params = trial;
+                *loss = l_new;
+                *grad = g_new;
+                return Ok(true);
+            }
+            t *= self.shrink;
+        }
+        Ok(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pils::trainer::LossFn;
+
+    struct Rosenbrock;
+
+    impl LossFn for Rosenbrock {
+        fn eval(&mut self, p: &[f64]) -> Result<(f64, Vec<f64>)> {
+            let (x, y) = (p[0], p[1]);
+            let loss = (1.0 - x).powi(2) + 100.0 * (y - x * x).powi(2);
+            let gx = -2.0 * (1.0 - x) - 400.0 * x * (y - x * x);
+            let gy = 200.0 * (y - x * x);
+            Ok((loss, vec![gx, gy]))
+        }
+    }
+
+    #[test]
+    fn minimizes_rosenbrock() {
+        let mut f = Rosenbrock;
+        let mut params = vec![-1.2, 1.0];
+        let (mut loss, mut grad) = f.eval(&params).unwrap();
+        let mut opt = Lbfgs::new(10);
+        let mut stalls = 0;
+        for _ in 0..1000 {
+            if !opt.step(&mut f, &mut params, &mut loss, &mut grad).unwrap() {
+                stalls += 1;
+                if stalls > 3 {
+                    break;
+                }
+            }
+        }
+        assert!(loss < 1e-8, "loss {loss}, params {params:?}");
+        assert!((params[0] - 1.0).abs() < 1e-3);
+    }
+
+    struct Quadratic;
+
+    impl LossFn for Quadratic {
+        fn eval(&mut self, p: &[f64]) -> Result<(f64, Vec<f64>)> {
+            let loss: f64 = p.iter().enumerate().map(|(i, &x)| (i + 1) as f64 * x * x).sum();
+            let grad = p
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| 2.0 * (i + 1) as f64 * x)
+                .collect();
+            Ok((loss, grad))
+        }
+    }
+
+    #[test]
+    fn converges_faster_than_gd_on_illconditioned_quadratic() {
+        let mut f = Quadratic;
+        let mut params: Vec<f64> = (0..20).map(|i| 1.0 + i as f64 * 0.1).collect();
+        let (mut loss, mut grad) = f.eval(&params).unwrap();
+        let mut opt = Lbfgs::new(10);
+        for _ in 0..60 {
+            if !opt.step(&mut f, &mut params, &mut loss, &mut grad).unwrap() {
+                break;
+            }
+        }
+        assert!(loss < 1e-12, "loss {loss}");
+    }
+}

@@ -1,0 +1,18 @@
+//! TensorPILS — physics-informed neural solvers driven from Rust
+//! (downstream application *ii* of the paper).
+//!
+//! The AOT artifacts expose each method (PINN / VPINN / Deep Ritz /
+//! TensorPILS) as a black-box `params → (loss, ∇loss)` HLO program; this
+//! module supplies the optimizers ([`adam`], [`lbfgs`]) and the training
+//! loop ([`trainer`]), plus SIREN parameter I/O and evaluation ([`siren`]).
+//! Python never runs during training — the paper's schedule (Adam then
+//! L-BFGS) executes entirely in Rust against PJRT executables.
+
+pub mod adam;
+pub mod lbfgs;
+pub mod siren;
+pub mod trainer;
+
+pub use adam::Adam;
+pub use lbfgs::Lbfgs;
+pub use trainer::{ArtifactLoss, LossFn, Operand, TrainLog};

@@ -1,0 +1,44 @@
+//! SIREN parameter I/O and PJRT-based evaluation.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::Runtime;
+
+/// Load an initial parameter blob (`siren_init_s{seed}.bin`: raw
+/// little-endian f32) as f64.
+pub fn load_init(runtime: &Runtime, seed: usize) -> Result<Vec<f64>> {
+    let info = runtime.manifest.get(&format!("siren_init_s{seed}"))?;
+    let bytes = std::fs::read(&info.file)
+        .with_context(|| format!("reading init blob {}", info.file.display()))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "blob not f32-aligned");
+    let mut out = Vec::with_capacity(bytes.len() / 4);
+    for c in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f64);
+    }
+    let expect = info.meta.get("param_count").copied().unwrap_or(0.0) as usize;
+    anyhow::ensure!(out.len() == expect, "blob length {} != {}", out.len(), expect);
+    Ok(out)
+}
+
+/// Evaluate a trained SIREN at arbitrary points via the `siren_eval`
+/// artifact, padding to its point bucket.
+pub fn eval(runtime: &Runtime, params: &[f64], points: &[f64]) -> Result<Vec<f64>> {
+    let info = runtime.manifest.get("siren_eval")?.clone();
+    let bucket = info.inputs[1].shape[0];
+    assert_eq!(points.len() % 2, 0);
+    let n = points.len() / 2;
+    let p32: Vec<f32> = params.iter().map(|&x| x as f32).collect();
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    while start < n {
+        let chunk = (n - start).min(bucket);
+        let mut pts32 = vec![0.0f32; bucket * 2];
+        for (dst, src) in pts32.iter_mut().zip(&points[start * 2..(start + chunk) * 2]) {
+            *dst = *src as f32;
+        }
+        let result = runtime.execute_f32("siren_eval", &[&p32, &pts32])?;
+        out.extend(result[0][..chunk].iter().map(|&v| v as f64));
+        start += chunk;
+    }
+    Ok(out)
+}

@@ -1,0 +1,180 @@
+//! Training loop plumbing: black-box artifact losses + schedule execution.
+
+use anyhow::Result;
+
+use crate::runtime::exec::{Operand as ExecOperand, Runtime};
+use crate::util::timer::time_it;
+
+/// Owned operand buffer for the fixed (non-parameter) artifact inputs.
+#[derive(Clone, Debug)]
+pub enum Operand {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Operand {
+    pub fn from_f64(xs: &[f64]) -> Operand {
+        Operand::F32(xs.iter().map(|&x| x as f32).collect())
+    }
+
+    pub fn from_usize(xs: &[usize]) -> Operand {
+        Operand::I32(xs.iter().map(|&x| x as i32).collect())
+    }
+}
+
+/// A `params → (loss, grad)` function.
+pub trait LossFn {
+    fn eval(&mut self, params: &[f64]) -> Result<(f64, Vec<f64>)>;
+}
+
+/// An artifact-backed loss: input 0 is the flat parameter vector; the
+/// remaining inputs are fixed per problem instance (mesh data, sparse K,
+/// forcing, frequency...). Output 0 is the scalar loss, output 1 the
+/// parameter gradient.
+pub struct ArtifactLoss<'rt> {
+    pub runtime: &'rt Runtime,
+    pub name: String,
+    pub fixed: Vec<Operand>,
+    /// Count of `eval` calls (for it/s metrics).
+    pub calls: usize,
+}
+
+impl<'rt> ArtifactLoss<'rt> {
+    pub fn new(runtime: &'rt Runtime, name: &str, fixed: Vec<Operand>) -> ArtifactLoss<'rt> {
+        ArtifactLoss {
+            runtime,
+            name: name.to_string(),
+            fixed,
+            calls: 0,
+        }
+    }
+}
+
+impl LossFn for ArtifactLoss<'_> {
+    fn eval(&mut self, params: &[f64]) -> Result<(f64, Vec<f64>)> {
+        self.calls += 1;
+        let p32: Vec<f32> = params.iter().map(|&x| x as f32).collect();
+        let mut inputs: Vec<ExecOperand<'_>> = Vec::with_capacity(1 + self.fixed.len());
+        inputs.push(ExecOperand::F32(&p32));
+        for op in &self.fixed {
+            inputs.push(match op {
+                Operand::F32(v) => ExecOperand::F32(v),
+                Operand::I32(v) => ExecOperand::I32(v),
+            });
+        }
+        let out = self.runtime.execute(&self.name, &inputs)?;
+        anyhow::ensure!(out.len() >= 2, "loss artifact must return (loss, grad)");
+        let loss = out[0][0] as f64;
+        let grad = out[1].iter().map(|&g| g as f64).collect();
+        Ok((loss, grad))
+    }
+}
+
+/// Record of one training run (Fig B.11-style curves + it/s for Table 1).
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    /// (iteration, loss) samples.
+    pub curve: Vec<(usize, f64)>,
+    pub adam_iters: usize,
+    pub adam_secs: f64,
+    pub lbfgs_iters: usize,
+    pub lbfgs_secs: f64,
+    pub final_loss: f64,
+}
+
+impl TrainLog {
+    pub fn adam_its_per_sec(&self) -> f64 {
+        self.adam_iters as f64 / self.adam_secs.max(1e-12)
+    }
+
+    pub fn lbfgs_its_per_sec(&self) -> f64 {
+        self.lbfgs_iters as f64 / self.lbfgs_secs.max(1e-12)
+    }
+}
+
+/// Clip a gradient to a maximum global norm (rollout training through
+/// scan can produce exploding gradients early on).
+pub fn clip_grad(grad: &mut [f64], max_norm: f64) {
+    let norm = crate::util::norm2(grad);
+    if norm > max_norm {
+        let scale = max_norm / norm;
+        for g in grad.iter_mut() {
+            *g *= scale;
+        }
+    }
+}
+
+/// The paper's schedule: `adam_iters` of Adam (cosine LR) followed by
+/// `lbfgs_iters` of L-BFGS. Returns the trained parameters + log.
+pub fn train_schedule(
+    f: &mut dyn LossFn,
+    params0: Vec<f64>,
+    adam_iters: usize,
+    lbfgs_iters: usize,
+    lr: f64,
+) -> Result<(Vec<f64>, TrainLog)> {
+    let mut params = params0;
+    let mut log = TrainLog::default();
+    let log_every = (adam_iters / 50).max(1);
+
+    let mut adam = super::Adam::new(params.len(), lr);
+    let ((), secs) = time_it(|| ());
+    let _ = secs;
+    let t0 = std::time::Instant::now();
+    let mut last_loss = f64::NAN;
+    for it in 0..adam_iters {
+        adam.set_cosine_lr(it, adam_iters, lr, lr * 0.01);
+        let (loss, mut grad) = f.eval(&params)?;
+        clip_grad(&mut grad, 100.0);
+        adam.step(&mut params, &grad);
+        last_loss = loss;
+        if it % log_every == 0 {
+            log.curve.push((it, loss));
+        }
+    }
+    log.adam_iters = adam_iters;
+    log.adam_secs = t0.elapsed().as_secs_f64();
+
+    let t1 = std::time::Instant::now();
+    if lbfgs_iters > 0 {
+        let (mut loss, mut grad) = f.eval(&params)?;
+        let mut lbfgs = super::Lbfgs::new(10);
+        for it in 0..lbfgs_iters {
+            log.lbfgs_iters = it + 1;
+            if !lbfgs.step(f, &mut params, &mut loss, &mut grad)? {
+                break;
+            }
+            log.curve.push((adam_iters + it, loss));
+        }
+        last_loss = loss;
+    }
+    log.lbfgs_secs = t1.elapsed().as_secs_f64();
+    log.final_loss = last_loss;
+    Ok((params, log))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Sphere;
+
+    impl LossFn for Sphere {
+        fn eval(&mut self, p: &[f64]) -> Result<(f64, Vec<f64>)> {
+            Ok((
+                p.iter().map(|x| x * x).sum(),
+                p.iter().map(|x| 2.0 * x).collect(),
+            ))
+        }
+    }
+
+    #[test]
+    fn schedule_reduces_loss() {
+        let mut f = Sphere;
+        let (params, log) = train_schedule(&mut f, vec![3.0, -2.0, 1.0], 200, 20, 0.05).unwrap();
+        assert!(log.final_loss < 1e-6, "{log:?}");
+        assert!(params.iter().all(|x| x.abs() < 1e-3));
+        assert!(log.adam_its_per_sec() > 0.0);
+        assert!(!log.curve.is_empty());
+    }
+}

@@ -1,0 +1,168 @@
+//! The [`Runtime`]: PJRT CPU client + compiled-executable cache + typed
+//! execution helpers.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::manifest::Manifest;
+
+/// Owns the PJRT client and all compiled executables. Not `Send`/`Sync`
+/// (the underlying client is `Rc`-based) — construct once per coordinator
+/// thread.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Create a runtime over the default artifact directory.
+    pub fn new() -> Result<Runtime> {
+        Self::with_dir(super::artifact_dir())
+    }
+
+    /// Create a runtime over an explicit artifact directory.
+    pub fn with_dir(dir: PathBuf) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(&dir)?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Artifact directory this runtime reads from.
+    pub fn dir(&self) -> &PathBuf {
+        &self.dir
+    }
+
+    /// Load + compile an artifact (cached). This is the paper's JIT-free
+    /// agility point: compilation happens once per (kind, bucket), never
+    /// per mesh.
+    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let info = self.manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&info.file)
+            .with_context(|| format!("parsing HLO text {}", info.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    /// Drop all cached executables (used by the "recompile mode" baseline
+    /// that simulates per-mesh JIT frameworks).
+    pub fn clear_cache(&self) {
+        self.cache.borrow_mut().clear();
+    }
+
+    /// Execute an artifact on f32 inputs; returns all tuple outputs as f32
+    /// vectors. Input shapes are validated against the manifest.
+    pub fn execute_f32(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        let info = self.manifest.get(name)?.clone();
+        anyhow::ensure!(
+            inputs.len() == info.inputs.len(),
+            "artifact {name}: expected {} inputs, got {}",
+            info.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(&info.inputs) {
+            anyhow::ensure!(
+                data.len() == spec.numel(),
+                "artifact {name}: input {} expects {} elements, got {}",
+                spec.name,
+                spec.numel(),
+                data.len()
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// Execute with mixed f32/i32 inputs (index arrays for the model
+    /// artifacts). `inputs` supplies each operand as [`Operand`].
+    pub fn execute(&self, name: &str, inputs: &[Operand<'_>]) -> Result<Vec<Vec<f32>>> {
+        let info = self.manifest.get(name)?.clone();
+        anyhow::ensure!(
+            inputs.len() == info.inputs.len(),
+            "artifact {name}: expected {} inputs, got {}",
+            info.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (op, spec) in inputs.iter().zip(&info.inputs) {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match op {
+                Operand::F32(data) => {
+                    anyhow::ensure!(
+                        data.len() == spec.numel(),
+                        "artifact {name}: input {} wrong length",
+                        spec.name
+                    );
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+                Operand::I32(data) => {
+                    anyhow::ensure!(
+                        data.len() == spec.numel(),
+                        "artifact {name}: input {} wrong length",
+                        spec.name
+                    );
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            };
+            literals.push(lit);
+        }
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// A typed input operand.
+pub enum Operand<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// f64 → f32 narrowing for the artifact path.
+pub fn to_f32(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&x| x as f32).collect()
+}
+
+/// f32 → f64 widening back to the native path.
+pub fn to_f64(xs: &[f32]) -> Vec<f64> {
+    xs.iter().map(|&x| x as f64).collect()
+}

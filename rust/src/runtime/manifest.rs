@@ -1,0 +1,161 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Declared tensor signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Artifact family (e.g. `poisson3d_local`).
+    pub kind: String,
+    /// Element bucket for Map-stage artifacts (0 otherwise).
+    pub bucket: usize,
+    /// Local matrix size for Map-stage artifacts (0 otherwise).
+    pub kl: usize,
+    /// All remaining numeric metadata (param counts, λ, μ, mesh sizes...).
+    pub meta: BTreeMap<String, f64>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub buckets: Vec<usize>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        let mut buckets = Vec::new();
+        for b in v.get("buckets")?.as_arr()? {
+            buckets.push(b.as_usize()?);
+        }
+        buckets.sort_unstable();
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in v.get("artifacts")?.as_obj()? {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                let mut out = Vec::new();
+                for t in entry.get(key)?.as_arr()? {
+                    let shape = t
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|x| x.as_usize())
+                        .collect::<Result<Vec<_>>>()?;
+                    out.push(TensorSpec {
+                        name: t
+                            .get("name")
+                            .and_then(|n| n.as_str().map(str::to_string))
+                            .unwrap_or_default(),
+                        shape,
+                        dtype: t.get("dtype")?.as_str()?.to_string(),
+                    });
+                }
+                Ok(out)
+            };
+            let mut meta = BTreeMap::new();
+            for (k, val) in entry.as_obj()? {
+                if let Json::Num(x) = val {
+                    meta.insert(k.clone(), *x);
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file: dir.join(entry.get("file")?.as_str()?),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    kind: entry
+                        .get("kind")
+                        .and_then(|k| k.as_str().map(str::to_string))
+                        .unwrap_or_default(),
+                    bucket: entry.get("bucket").and_then(|b| b.as_usize()).unwrap_or(0),
+                    kl: entry.get("kl").and_then(|b| b.as_usize()).unwrap_or(0),
+                    meta,
+                },
+            );
+        }
+        Ok(Manifest { buckets, artifacts })
+    }
+
+    /// Artifact of `kind` at exactly `bucket`.
+    pub fn find(&self, kind: &str, bucket: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .values()
+            .find(|a| a.kind == kind && a.bucket == bucket)
+    }
+
+    /// Smallest bucket ≥ `n` available for `kind`, or the largest bucket
+    /// if `n` exceeds all (the mapper then chunks).
+    pub fn bucket_for(&self, kind: &str, n: usize) -> Option<usize> {
+        let mut available: Vec<usize> = self
+            .artifacts
+            .values()
+            .filter(|a| a.kind == kind)
+            .map(|a| a.bucket)
+            .collect();
+        available.sort_unstable();
+        available.iter().copied().find(|&b| b >= n).or(available.last().copied())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_synthetic_manifest() {
+        let dir = std::env::temp_dir().join("tg_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"buckets":[256,2048],"artifacts":{
+               "poisson2d_local_E256":{"file":"p.hlo.txt","kind":"poisson2d_local",
+                 "bucket":256,"kl":3,
+                 "inputs":[{"name":"coords","shape":[256,3,2],"dtype":"float32"}],
+                 "outputs":[{"shape":[256,3,3],"dtype":"float32"}]}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.buckets, vec![256, 2048]);
+        let a = m.get("poisson2d_local_E256").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![256, 3, 2]);
+        assert_eq!(a.inputs[0].numel(), 1536);
+        assert_eq!(m.bucket_for("poisson2d_local", 100), Some(256));
+        assert_eq!(m.bucket_for("poisson2d_local", 10_000), Some(256)); // largest
+        assert_eq!(m.bucket_for("missing", 1), None);
+    }
+}

@@ -1,0 +1,138 @@
+//! Artifact-backed Batch-Map: run the AOT Pallas kernel on the element
+//! batch, padding to the bucket ladder.
+//!
+//! Padding uses *degenerate elements* (all-zero coordinates ⇒ |det J| = 0 ⇒
+//! exactly zero contribution — validated in both pytest and the kernel unit
+//! tests), so a single compiled executable serves every mesh size up to its
+//! bucket: the paper's "zero-compilation agility" reproduced under AOT
+//! constraints. Batches larger than the top bucket are chunked.
+
+use anyhow::Result;
+
+use super::exec::Runtime;
+
+/// Map-stage artifact families.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MapKind {
+    Poisson2d,
+    Poisson3d,
+    Load2d,
+    Load3d,
+    Mass2d,
+    Mass3d,
+    Elasticity3d,
+    ElasticityQ4,
+}
+
+impl MapKind {
+    pub fn kind_str(self) -> &'static str {
+        match self {
+            MapKind::Poisson2d => "poisson2d_local",
+            MapKind::Poisson3d => "poisson3d_local",
+            MapKind::Load2d => "load2d_local",
+            MapKind::Load3d => "load3d_local",
+            MapKind::Mass2d => "mass2d_local",
+            MapKind::Mass3d => "mass3d_local",
+            MapKind::Elasticity3d => "elasticity3d_local",
+            MapKind::ElasticityQ4 => "elasticity2d_q4_local",
+        }
+    }
+
+    /// (nodes per element, spatial dim, quad points, local output size,
+    /// matrix-valued?)
+    pub fn dims(self) -> (usize, usize, usize, usize, bool) {
+        match self {
+            MapKind::Poisson2d => (3, 2, 3, 3, true),
+            MapKind::Poisson3d => (4, 3, 4, 4, true),
+            MapKind::Load2d => (3, 2, 3, 3, false),
+            MapKind::Load3d => (4, 3, 4, 4, false),
+            MapKind::Mass2d => (3, 2, 3, 3, true),
+            MapKind::Mass3d => (4, 3, 4, 4, true),
+            MapKind::Elasticity3d => (4, 3, 4, 12, true),
+            MapKind::ElasticityQ4 => (4, 2, 4, 8, true),
+        }
+    }
+}
+
+/// The artifact-backed Map stage.
+pub struct PjrtMapper<'rt> {
+    pub runtime: &'rt Runtime,
+}
+
+impl<'rt> PjrtMapper<'rt> {
+    pub fn new(runtime: &'rt Runtime) -> Self {
+        PjrtMapper { runtime }
+    }
+
+    /// Run the Map kernel: `coords` is `E×k×d` (f64, native layout),
+    /// `coeff` is `E×Q`. Returns the local tensor (`E×kl×kl` or `E×kl`)
+    /// as f64 for the native Reduce stage.
+    pub fn map(&self, kind: MapKind, coords: &[f64], coeff: &[f64]) -> Result<Vec<f64>> {
+        let (k, d, q, kl, is_matrix) = kind.dims();
+        let per_elem_coords = k * d;
+        anyhow::ensure!(coords.len() % per_elem_coords == 0, "coords shape");
+        let n_elems = coords.len() / per_elem_coords;
+        anyhow::ensure!(coeff.len() == n_elems * q, "coeff shape");
+        let out_per_elem = if is_matrix { kl * kl } else { kl };
+
+        let bucket = self
+            .runtime
+            .manifest
+            .bucket_for(kind.kind_str(), n_elems)
+            .ok_or_else(|| anyhow::anyhow!("no artifact for kind {:?}", kind))?;
+        let name = format!("{}_E{}", kind.kind_str(), bucket);
+
+        let mut out = Vec::with_capacity(n_elems * out_per_elem);
+        let mut start = 0;
+        while start < n_elems {
+            let chunk = (n_elems - start).min(bucket);
+            // Pad chunk to the bucket with zero (degenerate) elements.
+            let mut c32 = vec![0.0f32; bucket * per_elem_coords];
+            for (dst, src) in c32
+                .iter_mut()
+                .zip(&coords[start * per_elem_coords..(start + chunk) * per_elem_coords])
+            {
+                *dst = *src as f32;
+            }
+            let mut q32 = vec![0.0f32; bucket * q];
+            for (dst, src) in q32.iter_mut().zip(&coeff[start * q..(start + chunk) * q]) {
+                *dst = *src as f32;
+            }
+            let results = self.runtime.execute_f32(&name, &[&c32, &q32])?;
+            let local = &results[0];
+            out.extend(local[..chunk * out_per_elem].iter().map(|&v| v as f64));
+            start += chunk;
+        }
+        Ok(out)
+    }
+
+    /// Convenience: Map via PJRT + Reduce via the context routing — the
+    /// full TensorGalerkin assembly with the Pallas kernel on the hot path.
+    pub fn assemble_matrix(
+        &self,
+        ctx: &crate::assembly::AssemblyContext,
+        kind: MapKind,
+        coeff: &[f64],
+    ) -> Result<crate::sparse::Csr> {
+        let coords = crate::fem::geometry::gather_coords(&ctx.mesh);
+        let local = self.map(kind, &coords, coeff)?;
+        Ok(ctx.reduce_matrix(&local))
+    }
+
+    /// Map + Reduce for load vectors.
+    pub fn assemble_vector(
+        &self,
+        ctx: &crate::assembly::AssemblyContext,
+        kind: MapKind,
+        coeff: &[f64],
+    ) -> Result<Vec<f64>> {
+        let coords = crate::fem::geometry::gather_coords(&ctx.mesh);
+        let local = self.map(kind, &coords, coeff)?;
+        Ok(ctx.reduce_vector(&local))
+    }
+}
+
+/// Quadrature-point coefficient buffer (`E×Q`) from a constant.
+pub fn const_coeff(n_elems: usize, q: usize, value: f64) -> Vec<f64> {
+    vec![value; n_elems * q]
+}

@@ -1,0 +1,29 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! Rust request path.
+//!
+//! * [`manifest`] — parse `artifacts/manifest.json` written by
+//!   `python/compile/aot.py`.
+//! * [`exec`] — the [`Runtime`]: a PJRT CPU client plus a compile cache
+//!   (one `PjRtLoadedExecutable` per artifact, compiled on first use).
+//! * [`mapper`] — the artifact-backed Batch-Map stage with element-bucket
+//!   padding and chunking, feeding Stage II's routing reduce.
+//!
+//! The `xla` crate's client wraps an `Rc`, so a [`Runtime`] is deliberately
+//! *not* `Send`/`Sync`: create it on the coordinator thread (experiments
+//! and benches are single-threaded through the runtime; the thread pool is
+//! used inside the native compute stages only).
+
+pub mod exec;
+pub mod manifest;
+pub mod mapper;
+
+pub use exec::Runtime;
+pub use manifest::{ArtifactInfo, Manifest};
+pub use mapper::{MapKind, PjrtMapper};
+
+/// Default artifact directory, overridable via `TG_ARTIFACTS`.
+pub fn artifact_dir() -> std::path::PathBuf {
+    std::env::var("TG_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string())
+        .into()
+}

@@ -1,0 +1,183 @@
+//! BiCGSTAB (van der Vorst 1992) with preconditioning — the paper's unified
+//! baseline solver (Table B.1), applicable to the nonsymmetric systems that
+//! arise with Robin conditions and semi-implicit time stepping.
+
+use crate::sparse::Csr;
+use crate::util::{axpy, dot, norm2};
+
+use super::precond::Preconditioner;
+use super::{SolveStats, SolverConfig};
+
+/// Solve `A x = b` with right-preconditioned BiCGSTAB.
+pub fn bicgstab(
+    a: &Csr,
+    b: &[f64],
+    precond: &impl Preconditioner,
+    config: &SolverConfig,
+) -> (Vec<f64>, SolveStats) {
+    let n = b.len();
+    assert_eq!(a.nrows, n);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let nb = norm2(b).max(1e-300);
+    if norm2(&r) / nb < config.rel_tol || norm2(&r) < config.abs_tol {
+        return (
+            x,
+            SolveStats {
+                iterations: 0,
+                rel_residual: norm2(&r) / nb,
+                converged: true,
+            },
+        );
+    }
+    let r_hat = r.clone();
+    let mut rho = 1.0;
+    let mut alpha = 1.0;
+    let mut omega = 1.0;
+    let mut v = vec![0.0; n];
+    let mut p = vec![0.0; n];
+    let mut phat = vec![0.0; n];
+    let mut shat = vec![0.0; n];
+    let mut t = vec![0.0; n];
+
+    for it in 1..=config.max_iter {
+        let rho_new = dot(&r_hat, &r);
+        if rho_new.abs() < 1e-300 {
+            break; // breakdown
+        }
+        let beta = (rho_new / rho) * (alpha / omega);
+        rho = rho_new;
+        for i in 0..n {
+            p[i] = r[i] + beta * (p[i] - omega * v[i]);
+        }
+        precond.apply(&p, &mut phat);
+        a.spmv(&phat, &mut v);
+        let rhv = dot(&r_hat, &v);
+        if rhv.abs() < 1e-300 {
+            break;
+        }
+        alpha = rho / rhv;
+        // s = r − α v (reuse r).
+        axpy(-alpha, &v, &mut r);
+        if norm2(&r) / nb < config.rel_tol {
+            axpy(alpha, &phat, &mut x);
+            let rel = final_residual(a, &x, b, nb);
+            return (
+                x,
+                SolveStats {
+                    iterations: it,
+                    rel_residual: rel,
+                    converged: rel < config.rel_tol.max(1e-9),
+                },
+            );
+        }
+        precond.apply(&r, &mut shat);
+        a.spmv(&shat, &mut t);
+        let tt = dot(&t, &t);
+        if tt.abs() < 1e-300 {
+            break;
+        }
+        omega = dot(&t, &r) / tt;
+        axpy(alpha, &phat, &mut x);
+        axpy(omega, &shat, &mut x);
+        axpy(-omega, &t, &mut r);
+        let rn = norm2(&r);
+        if rn / nb < config.rel_tol || rn < config.abs_tol {
+            let rel = final_residual(a, &x, b, nb);
+            return (
+                x,
+                SolveStats {
+                    iterations: it,
+                    rel_residual: rel,
+                    converged: true,
+                },
+            );
+        }
+        if omega.abs() < 1e-300 {
+            break;
+        }
+    }
+    let rel = final_residual(a, &x, b, nb);
+    (
+        x,
+        SolveStats {
+            iterations: config.max_iter,
+            rel_residual: rel,
+            converged: rel < config.rel_tol,
+        },
+    )
+}
+
+fn final_residual(a: &Csr, x: &[f64], b: &[f64], nb: f64) -> f64 {
+    let mut r = a.dot(x);
+    for (ri, bi) in r.iter_mut().zip(b) {
+        *ri -= bi;
+    }
+    norm2(&r) / nb
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::precond::JacobiPrecond;
+    use super::*;
+    use crate::assembly::map_reduce::FacetContext;
+    use crate::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
+    use crate::bc::{condense, DirichletBc};
+    use crate::mesh::marker;
+    use crate::mesh::structured::{unit_cube_tet, unit_square_tri};
+
+    #[test]
+    fn solves_nonsymmetric_system() {
+        // [[3,1],[−1,2]] x = [5,0] ⇒ x = (10/7, 5/7).
+        let a = Csr {
+            nrows: 2,
+            ncols: 2,
+            indptr: vec![0, 2, 4],
+            indices: vec![0, 1, 0, 1],
+            data: vec![3.0, 1.0, -1.0, 2.0],
+        };
+        let pc = JacobiPrecond::new(&a);
+        let (x, stats) = bicgstab(&a, &[5.0, 0.0], &pc, &SolverConfig::default());
+        assert!(stats.converged);
+        assert!((x[0] - 10.0 / 7.0).abs() < 1e-8);
+        assert!((x[1] - 5.0 / 7.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn solves_3d_poisson_tolerance_1e10() {
+        let m = unit_cube_tet(4);
+        let ctx = AssemblyContext::new(&m, 1);
+        let k = ctx.assemble_matrix(&BilinearForm::Diffusion {
+            rho: Coefficient::Const(1.0),
+        });
+        let f = ctx.assemble_vector(&LinearForm::Source { f: Coefficient::Const(1.0) });
+        let sys = condense(&k, &f, &DirichletBc::homogeneous(m.boundary_nodes()));
+        let pc = JacobiPrecond::new(&sys.k);
+        let (u, stats) = bicgstab(&sys.k, &sys.rhs, &pc, &SolverConfig::default());
+        assert!(stats.converged, "{stats:?}");
+        assert!(stats.rel_residual < 1e-9);
+        assert!(u.iter().all(|&v| v >= -1e-12));
+    }
+
+    #[test]
+    fn robin_system_solvable_without_dirichlet() {
+        // −Δu + Robin(α=1) everywhere is nonsingular without Dirichlet rows.
+        let m = unit_square_tri(8);
+        let ctx = AssemblyContext::new(&m, 1);
+        let k = ctx.assemble_matrix(&BilinearForm::Diffusion {
+            rho: Coefficient::Const(1.0),
+        });
+        let fc = FacetContext::new(&m, &[marker::BOUNDARY], 1);
+        let kr = fc.assemble_matrix(&BilinearForm::FacetMass {
+            alpha: Coefficient::Const(1.0),
+        });
+        let a = k.add_scaled(&kr, 1.0).unwrap();
+        let f = ctx.assemble_vector(&LinearForm::Source { f: Coefficient::Const(1.0) });
+        let pc = JacobiPrecond::new(&a);
+        let (u, stats) = bicgstab(&a, &f, &pc, &SolverConfig::default());
+        assert!(stats.converged, "{stats:?}");
+        assert!(u.iter().all(|&v| v.is_finite()));
+        let umax = u.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(umax > 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Preconditioned conjugate gradients (SPD systems: Poisson, elasticity,
+//! mass-matrix solves inside time steppers).
+
+use crate::sparse::Csr;
+use crate::util::{axpy, dot, norm2};
+
+use super::precond::Preconditioner;
+use super::{SolveStats, SolverConfig};
+
+/// Solve `A x = b` (A symmetric positive definite).
+pub fn cg(
+    a: &Csr,
+    b: &[f64],
+    precond: &impl Preconditioner,
+    config: &SolverConfig,
+) -> (Vec<f64>, SolveStats) {
+    let n = b.len();
+    assert_eq!(a.nrows, n);
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let nb = norm2(b).max(1e-300);
+    if norm2(&r) <= config.abs_tol {
+        return (
+            x,
+            SolveStats {
+                iterations: 0,
+                rel_residual: norm2(&r) / nb,
+                converged: true,
+            },
+        );
+    }
+    let mut z = vec![0.0; n];
+    precond.apply(&r, &mut z);
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+    let mut ap = vec![0.0; n];
+    for it in 1..=config.max_iter {
+        a.spmv(&p, &mut ap);
+        let pap = dot(&p, &ap);
+        if pap.abs() < 1e-300 {
+            return (
+                x,
+                SolveStats {
+                    iterations: it,
+                    rel_residual: norm2(&r) / nb,
+                    converged: false,
+                },
+            );
+        }
+        let alpha = rz / pap;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        let rn = norm2(&r);
+        if rn / nb < config.rel_tol || rn < config.abs_tol {
+            return (
+                x,
+                SolveStats {
+                    iterations: it,
+                    rel_residual: rn / nb,
+                    converged: true,
+                },
+            );
+        }
+        precond.apply(&r, &mut z);
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        for (pi, zi) in p.iter_mut().zip(&z) {
+            *pi = zi + beta * *pi;
+        }
+    }
+    let rn = norm2(&r);
+    (
+        x,
+        SolveStats {
+            iterations: config.max_iter,
+            rel_residual: rn / nb,
+            converged: false,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::precond::{IdentityPrecond, JacobiPrecond};
+    use super::*;
+    use crate::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
+    use crate::bc::{condense, DirichletBc};
+    use crate::mesh::structured::unit_square_tri;
+
+    #[test]
+    fn solves_small_spd() {
+        let a = Csr {
+            nrows: 2,
+            ncols: 2,
+            indptr: vec![0, 2, 4],
+            indices: vec![0, 1, 0, 1],
+            data: vec![4.0, 1.0, 1.0, 3.0],
+        };
+        let (x, stats) = cg(&a, &[1.0, 2.0], &IdentityPrecond, &SolverConfig::default());
+        assert!(stats.converged);
+        assert!((x[0] - 1.0 / 11.0).abs() < 1e-9);
+        assert!((x[1] - 7.0 / 11.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn solves_poisson_to_tolerance() {
+        let m = unit_square_tri(12);
+        let ctx = AssemblyContext::new(&m, 1);
+        let k = ctx.assemble_matrix(&BilinearForm::Diffusion {
+            rho: Coefficient::Const(1.0),
+        });
+        let f = ctx.assemble_vector(&LinearForm::Source { f: Coefficient::Const(1.0) });
+        let sys = condense(&k, &f, &DirichletBc::homogeneous(m.boundary_nodes()));
+        let pc = JacobiPrecond::new(&sys.k);
+        let cfg = SolverConfig::default();
+        let (u, stats) = cg(&sys.k, &sys.rhs, &pc, &cfg);
+        assert!(stats.converged, "stats: {stats:?}");
+        assert!(stats.rel_residual < 1e-10);
+        // Maximum principle: 0 < u < max analytic bound (~0.0737).
+        assert!(u.iter().all(|&v| v > 0.0 && v < 0.08));
+    }
+
+    #[test]
+    fn zero_rhs_returns_zero() {
+        let a = Csr::eye(5);
+        let (x, stats) = cg(&a, &[0.0; 5], &IdentityPrecond, &SolverConfig::default());
+        assert!(stats.converged);
+        assert_eq!(x, vec![0.0; 5]);
+    }
+}

@@ -1,0 +1,74 @@
+//! Iterative linear solvers (the paper's unified configuration, Table B.1:
+//! BiCGSTAB + Jacobi preconditioning, relative tolerance 1e-10).
+
+pub mod bicgstab;
+pub mod cg;
+pub mod precond;
+
+pub use bicgstab::bicgstab;
+pub use cg::cg;
+pub use precond::{IdentityPrecond, JacobiPrecond, Preconditioner};
+
+use crate::sparse::Csr;
+
+/// Convergence/iteration statistics of a linear solve.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveStats {
+    pub iterations: usize,
+    /// Final relative residual `‖Ax−b‖ / ‖b‖`.
+    pub rel_residual: f64,
+    pub converged: bool,
+}
+
+/// Solver configuration matching Table B.1.
+#[derive(Clone, Copy, Debug)]
+pub struct SolverConfig {
+    pub rel_tol: f64,
+    pub abs_tol: f64,
+    pub max_iter: usize,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            rel_tol: 1e-10,
+            abs_tol: 1e-10,
+            max_iter: 10_000,
+        }
+    }
+}
+
+/// Method selector used by the TensorMesh facade / CLI.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Cg,
+    BiCgStab,
+}
+
+/// Solve `A x = b` with the configured method and Jacobi preconditioning.
+pub fn solve(
+    a: &Csr,
+    b: &[f64],
+    method: Method,
+    config: &SolverConfig,
+) -> (Vec<f64>, SolveStats) {
+    let precond = JacobiPrecond::new(a);
+    match method {
+        Method::Cg => cg(a, b, &precond, config),
+        Method::BiCgStab => bicgstab(a, b, &precond, config),
+    }
+}
+
+/// Compute the relative linear-system residual `RelRes_lin` of Eq. (B.8).
+pub fn rel_residual(a: &Csr, x: &[f64], b: &[f64]) -> f64 {
+    let mut r = a.dot(x);
+    for (ri, bi) in r.iter_mut().zip(b) {
+        *ri -= bi;
+    }
+    let nb = crate::util::norm2(b);
+    if nb == 0.0 {
+        crate::util::norm2(&r)
+    } else {
+        crate::util::norm2(&r) / nb
+    }
+}

@@ -1,0 +1,70 @@
+//! Preconditioners.
+
+use crate::sparse::Csr;
+
+/// Application of `M⁻¹` to a vector.
+pub trait Preconditioner {
+    fn apply(&self, r: &[f64], z: &mut [f64]);
+}
+
+/// No preconditioning.
+pub struct IdentityPrecond;
+
+impl Preconditioner for IdentityPrecond {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        z.copy_from_slice(r);
+    }
+}
+
+/// Jacobi (diagonal scaling) preconditioner — the paper's choice (Table B.1).
+pub struct JacobiPrecond {
+    inv_diag: Vec<f64>,
+}
+
+impl JacobiPrecond {
+    pub fn new(a: &Csr) -> JacobiPrecond {
+        let inv_diag = a
+            .diagonal()
+            .into_iter()
+            .map(|d| if d.abs() > 1e-300 { 1.0 / d } else { 1.0 })
+            .collect();
+        JacobiPrecond { inv_diag }
+    }
+}
+
+impl Preconditioner for JacobiPrecond {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        for ((zi, ri), di) in z.iter_mut().zip(r).zip(&self.inv_diag) {
+            *zi = ri * di;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jacobi_inverts_diagonal() {
+        let a = Csr {
+            nrows: 2,
+            ncols: 2,
+            indptr: vec![0, 1, 2],
+            indices: vec![0, 1],
+            data: vec![2.0, 4.0],
+        };
+        let p = JacobiPrecond::new(&a);
+        let mut z = vec![0.0; 2];
+        p.apply(&[2.0, 4.0], &mut z);
+        assert_eq!(z, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn zero_diagonal_falls_back_to_identity() {
+        let a = Csr::zeros(2, 2);
+        let p = JacobiPrecond::new(&a);
+        let mut z = vec![0.0; 2];
+        p.apply(&[3.0, -1.0], &mut z);
+        assert_eq!(z, vec![3.0, -1.0]);
+    }
+}

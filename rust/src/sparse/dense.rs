@@ -1,0 +1,158 @@
+//! Small dense matrices with LU factorization.
+//!
+//! Used for reference solves in tests, the MMA subproblem, and direct
+//! solution of small condensed systems (the paper's UMFPACK/cuDSS role at
+//! laptop scale).
+
+use anyhow::{bail, Result};
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Dense {
+    pub fn zeros(nrows: usize, ncols: usize) -> Dense {
+        Dense {
+            nrows,
+            ncols,
+            data: vec![0.0; nrows * ncols],
+        }
+    }
+
+    pub fn from_rows(rows: &[&[f64]]) -> Dense {
+        let nrows = rows.len();
+        let ncols = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(nrows * ncols);
+        for r in rows {
+            assert_eq!(r.len(), ncols);
+            data.extend_from_slice(r);
+        }
+        Dense { nrows, ncols, data }
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.ncols + j]
+    }
+
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.ncols + j] = v;
+    }
+
+    /// `y = A x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        let mut y = vec![0.0; self.nrows];
+        for i in 0..self.nrows {
+            let row = &self.data[i * self.ncols..(i + 1) * self.ncols];
+            y[i] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+        y
+    }
+
+    /// Solve `A x = b` by LU with partial pivoting (A square).
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        if self.nrows != self.ncols {
+            bail!("solve: matrix not square");
+        }
+        if b.len() != self.nrows {
+            bail!("solve: rhs length mismatch");
+        }
+        let n = self.nrows;
+        let mut a = self.data.clone();
+        let mut x = b.to_vec();
+        let mut piv: Vec<usize> = (0..n).collect();
+        for col in 0..n {
+            // Partial pivot.
+            let mut pmax = col;
+            let mut vmax = a[piv[col] * n + col].abs();
+            for r in (col + 1)..n {
+                let v = a[piv[r] * n + col].abs();
+                if v > vmax {
+                    vmax = v;
+                    pmax = r;
+                }
+            }
+            if vmax < 1e-300 {
+                bail!("solve: singular matrix at column {col}");
+            }
+            piv.swap(col, pmax);
+            let prow = piv[col];
+            let pivot = a[prow * n + col];
+            for r in (col + 1)..n {
+                let row = piv[r];
+                let factor = a[row * n + col] / pivot;
+                if factor != 0.0 {
+                    a[row * n + col] = factor; // store L
+                    for c in (col + 1)..n {
+                        a[row * n + c] -= factor * a[prow * n + c];
+                    }
+                    x[row] -= factor * x[prow];
+                }
+            }
+        }
+        // Back substitution.
+        let mut out = vec![0.0; n];
+        for i in (0..n).rev() {
+            let row = piv[i];
+            let mut s = x[row];
+            for c in (i + 1)..n {
+                s -= a[row * n + c] * out[c];
+            }
+            out[i] = s / a[row * n + i];
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solves_small_system() {
+        let a = Dense::from_rows(&[&[2.0, 1.0], &[1.0, 3.0]]);
+        let x = a.solve(&[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        let a = Dense::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let x = a.solve(&[2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn random_roundtrip_property() {
+        let mut rng = Rng::new(17);
+        for n in [1usize, 2, 5, 12] {
+            let mut a = Dense::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    a.set(i, j, rng.normal());
+                }
+                // Diagonal dominance to guarantee solvability.
+                let d = a.get(i, i);
+                a.set(i, i, d + n as f64 + 1.0);
+            }
+            let xtrue: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b = a.matvec(&xtrue);
+            let x = a.solve(&b).unwrap();
+            for (xi, ti) in x.iter().zip(&xtrue) {
+                assert!((xi - ti).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn singular_matrix_rejected() {
+        let a = Dense::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
+        assert!(a.solve(&[1.0, 2.0]).is_err());
+    }
+}

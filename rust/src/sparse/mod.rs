@@ -1,0 +1,13 @@
+//! Sparse (and small dense) linear algebra substrate.
+//!
+//! Replaces the paper's reliance on `torch.sparse` / TORCH-SLA / cuDSS: CSR
+//! storage with deterministic construction, SpMV/SpMM products, and a dense
+//! LU fallback for small systems (MMA subproblems, reference checks).
+
+pub mod coo;
+pub mod csr;
+pub mod dense;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dense::Dense;

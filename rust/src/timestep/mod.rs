@@ -1,0 +1,14 @@
+//! Time integration for the semi-discrete Galerkin systems of SM A.1:
+//! `M U̇ + K U + F_nonlin(U) = F_ext`.
+//!
+//! * [`wave`] — central-difference integrator for `M Ü + c²K U = 0`
+//!   (Eq. B.16), the reference solver for the wave operator-learning task.
+//! * [`allen_cahn`] — semi-implicit backward Euler for
+//!   `M U̇ + a²K U = F(U)` (Eq. B.19) with the cubic reaction treated
+//!   explicitly through TensorGalerkin's nonlinear load assembly.
+
+pub mod allen_cahn;
+pub mod wave;
+
+pub use allen_cahn::AllenCahnIntegrator;
+pub use wave::WaveIntegrator;

@@ -1,0 +1,189 @@
+//! Criterion-like micro/macro benchmark harness (criterion is unavailable
+//! offline). Benches under `rust/benches/` are `harness = false` binaries
+//! that drive this module.
+//!
+//! The harness performs warmup, adaptively chooses an iteration count to hit
+//! a target measurement time, reports median / mean / p10 / p90, and appends
+//! a JSON record to `target/bench_results.jsonl` so `EXPERIMENTS.md` tables
+//! can be regenerated from raw data.
+
+use std::io::Write as _;
+use std::time::Instant;
+
+use crate::util::json::{obj, Json};
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+    /// Free-form key/value context (problem size, method, ...).
+    pub meta: Vec<(String, f64)>,
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    /// Minimum total measurement time per benchmark (seconds).
+    pub target_time_s: f64,
+    /// Warmup time (seconds).
+    pub warmup_s: f64,
+    /// Max samples collected.
+    pub max_samples: usize,
+    /// Suite name (stamped into the JSONL records).
+    pub suite: String,
+    results: Vec<Measurement>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Self {
+        // Keep defaults small: the CI box is a single core and the macro
+        // benches (assemble+solve at 1e6 DoF) are seconds-long each.
+        let quick = std::env::var("TG_BENCH_QUICK").is_ok();
+        Bench {
+            target_time_s: if quick { 0.05 } else { 0.6 },
+            warmup_s: if quick { 0.01 } else { 0.1 },
+            max_samples: if quick { 3 } else { 25 },
+            suite: suite.to_string(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark a closure. The closure's return value is black-boxed to
+    /// prevent the optimizer from deleting the work.
+    pub fn bench<T>(&mut self, name: &str, meta: &[(&str, f64)], mut f: impl FnMut() -> T) {
+        // Warmup + single-shot estimate.
+        let t0 = Instant::now();
+        let mut one = f();
+        let first = t0.elapsed().as_secs_f64().max(1e-9);
+        let mut spent = first;
+        while spent < self.warmup_s {
+            one = f();
+            spent += first;
+        }
+        std::hint::black_box(&one);
+
+        let want = ((self.target_time_s / first).ceil() as usize).clamp(1, self.max_samples);
+        let mut samples = Vec::with_capacity(want);
+        samples.push(first);
+        for _ in 1..want {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let pct = |p: f64| samples[((samples.len() - 1) as f64 * p).round() as usize];
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_s: mean,
+            median_s: pct(0.5),
+            p10_s: pct(0.1),
+            p90_s: pct(0.9),
+            meta: meta.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        };
+        println!(
+            "{:<58} {:>12} median {:>12} mean  (n={})",
+            format!("{}/{}", self.suite, m.name),
+            fmt_time(m.median_s),
+            fmt_time(m.mean_s),
+            m.iters
+        );
+        self.results.push(m);
+    }
+
+    /// Record an externally measured value (e.g. a full optimization loop
+    /// timed once) without re-running it.
+    pub fn record(&mut self, name: &str, meta: &[(&str, f64)], seconds: f64) {
+        let m = Measurement {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: seconds,
+            median_s: seconds,
+            p10_s: seconds,
+            p90_s: seconds,
+            meta: meta.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        };
+        println!(
+            "{:<58} {:>12} (recorded)",
+            format!("{}/{}", self.suite, m.name),
+            fmt_time(seconds)
+        );
+        self.results.push(m);
+    }
+
+    /// Append all results to `target/bench_results.jsonl`.
+    pub fn finish(&self) {
+        let _ = std::fs::create_dir_all("target");
+        let path = "target/bench_results.jsonl";
+        if let Ok(mut file) = std::fs::OpenOptions::new().create(true).append(true).open(path) {
+            for m in &self.results {
+                let mut fields = vec![
+                    ("suite", Json::Str(self.suite.clone())),
+                    ("name", Json::Str(m.name.clone())),
+                    ("iters", Json::Num(m.iters as f64)),
+                    ("mean_s", Json::Num(m.mean_s)),
+                    ("median_s", Json::Num(m.median_s)),
+                    ("p10_s", Json::Num(m.p10_s)),
+                    ("p90_s", Json::Num(m.p90_s)),
+                ];
+                for (k, v) in &m.meta {
+                    fields.push((k.as_str(), Json::Num(*v)));
+                }
+                let _ = writeln!(file, "{}", obj(fields).to_string_compact());
+            }
+        }
+        println!("{}: {} measurements appended to {path}", self.suite, self.results.len());
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        std::env::set_var("TG_BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest");
+        b.bench("spin", &[("n", 100.0)], || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].median_s > 0.0);
+        assert!(b.results()[0].p10_s <= b.results()[0].p90_s);
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert!(fmt_time(2e-9).ends_with("ns"));
+        assert!(fmt_time(2e-6).ends_with("µs"));
+        assert!(fmt_time(2e-3).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with("s"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Tiny CLI argument parser (`clap` is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse a raw argv tail. Everything after `--` is positional.
+    pub fn parse(raw: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        let mut only_positional = false;
+        while i < raw.len() {
+            let a = &raw[i];
+            if only_positional || !a.starts_with("--") {
+                out.positional.push(a.clone());
+            } else if a == "--" {
+                only_positional = true;
+            } else {
+                let body = &a[2..];
+                if let Some(eq) = body.find('=') {
+                    out.options.insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    out.options.insert(body.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Is a bare `--name` flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.options.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string option.
+    pub fn require_str(&self, name: &str) -> Result<String> {
+        self.options
+            .get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    /// Numeric option with default.
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.options
+            .get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Integer option with default.
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.options
+            .get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of integers, e.g. `--sizes 8,16,32`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.options.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .filter_map(|t| t.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(&sv(&["solve", "extra", "--n", "32", "--tol=1e-8", "--vtk"]));
+        assert_eq!(a.positional, vec!["solve", "extra"]);
+        assert_eq!(a.get_usize("n", 0), 32);
+        assert_eq!(a.get_f64("tol", 0.0), 1e-8);
+        assert!(a.flag("vtk"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn bare_flag_followed_by_value_is_an_option() {
+        // Without a schema `--vtk out` is treated as an option; flag() still
+        // reports presence, which is the behaviour drivers rely on.
+        let a = Args::parse(&sv(&["--vtk", "out.vtk"]));
+        assert!(a.flag("vtk"));
+        assert_eq!(a.get_str("vtk", ""), "out.vtk");
+    }
+
+    #[test]
+    fn double_dash_stops_options() {
+        let a = Args::parse(&sv(&["--x", "1", "--", "--not-an-option"]));
+        assert_eq!(a.get_usize("x", 0), 1);
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = Args::parse(&sv(&["--sizes", "8,16,32"]));
+        assert_eq!(a.get_usize_list("sizes", &[]), vec![8, 16, 32]);
+        assert_eq!(a.get_usize_list("other", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn require_str_errors_when_absent() {
+        let a = Args::parse(&sv(&["--present", "yes"]));
+        assert_eq!(a.require_str("present").unwrap(), "yes");
+        assert!(a.require_str("absent").is_err());
+    }
+}

@@ -1,0 +1,67 @@
+//! Leveled stderr logging with an env switch (`TG_LOG=debug|info|warn|off`).
+
+use std::sync::OnceLock;
+
+/// Log verbosity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+/// Current level, resolved once from `TG_LOG` (default: info).
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| match std::env::var("TG_LOG").as_deref() {
+        Ok("off") => Level::Off,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        _ => Level::Info,
+    })
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+#[macro_export]
+macro_rules! tg_info {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Info) {
+            eprintln!("[tg:info] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! tg_warn {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Warn) {
+            eprintln!("[tg:warn] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! tg_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log::enabled($crate::util::log::Level::Debug) {
+            eprintln!("[tg:debug] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_of_levels() {
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Off < Level::Warn);
+    }
+}

@@ -1,0 +1,81 @@
+//! Hand-rolled substrate utilities.
+//!
+//! The offline registry ships only the `xla` crate closure, so everything a
+//! framework normally pulls from crates.io (CLI parsing, JSON, RNG, thread
+//! pools, bench harness) is implemented here from scratch.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+
+/// Relative L2 distance `||a-b|| / ||b||` between two vectors.
+///
+/// Returns the absolute norm of `a - b` when `||b|| == 0`.
+pub fn rel_l2(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "rel_l2: length mismatch");
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        num += (x - y) * (x - y);
+        den += y * y;
+    }
+    if den == 0.0 {
+        num.sqrt()
+    } else {
+        (num / den).sqrt()
+    }
+}
+
+/// Euclidean norm.
+pub fn norm2(a: &[f64]) -> f64 {
+    a.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_l2_basic() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [1.0, 2.0, 3.0];
+        assert_eq!(rel_l2(&a, &b), 0.0);
+        let c = [2.0, 2.0, 3.0];
+        assert!((rel_l2(&c, &b) - 1.0 / 14f64.sqrt()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rel_l2_zero_denominator() {
+        let a = [3.0, 4.0];
+        let z = [0.0, 0.0];
+        assert!((rel_l2(&a, &z) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn blas1_ops() {
+        let x = [1.0, 2.0];
+        let mut y = [10.0, 20.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0]);
+        assert_eq!(dot(&x, &y), 12.0 + 48.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+}

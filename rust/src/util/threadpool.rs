@@ -1,0 +1,122 @@
+//! A small scoped-parallelism helper (`rayon` is unavailable offline).
+//!
+//! `parallel_chunks` splits an index range into contiguous chunks and runs a
+//! worker per chunk on `std::thread` scoped threads. On the single-core CI
+//! image this degrades gracefully to the sequential path; the code paths are
+//! identical so results are deterministic either way (each worker owns a
+//! disjoint output slice — no atomics, matching the paper's determinism
+//! argument for Sparse-Reduce vs scatter-add atomics).
+
+/// Number of workers to use: `TG_THREADS` env var or available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("TG_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_start, chunk_end)` over `[0, n)` split into `threads` chunks.
+///
+/// `f` must only touch data it can access through `Sync` sharing; output
+/// partitioning is the caller's responsibility (see `for_each_chunk_mut`).
+pub fn parallel_ranges(n: usize, threads: usize, f: impl Fn(usize, usize) + Sync) {
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n == 0 {
+        f(0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let fref = &f;
+            scope.spawn(move || fref(lo, hi));
+        }
+    });
+}
+
+/// Split `out` into per-thread chunks of `stride`-sized rows and process each
+/// in parallel: `f(row_index, row_slice)`.
+pub fn for_each_row_mut<T: Send>(
+    out: &mut [T],
+    stride: usize,
+    threads: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(stride > 0);
+    assert_eq!(out.len() % stride, 0);
+    let nrows = out.len() / stride;
+    let threads = threads.clamp(1, nrows.max(1));
+    if threads <= 1 {
+        for (r, row) in out.chunks_mut(stride).enumerate() {
+            f(r, row);
+        }
+        return;
+    }
+    let rows_per = nrows.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut row0 = 0;
+        while !rest.is_empty() {
+            let take = (rows_per * stride).min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            let fref = &f;
+            let base = row0;
+            scope.spawn(move || {
+                for (i, row) in head.chunks_mut(stride).enumerate() {
+                    fref(base + i, row);
+                }
+            });
+            row0 += take / stride;
+            rest = tail;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn ranges_cover_everything_once() {
+        let hits = AtomicUsize::new(0);
+        parallel_ranges(1000, 4, |lo, hi| {
+            hits.fetch_add(hi - lo, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn rows_processed_with_correct_indices() {
+        let mut data = vec![0usize; 12];
+        for_each_row_mut(&mut data, 3, 4, |r, row| {
+            for v in row.iter_mut() {
+                *v = r + 1;
+            }
+        });
+        assert_eq!(data, vec![1, 1, 1, 2, 2, 2, 3, 3, 3, 4, 4, 4]);
+    }
+
+    #[test]
+    fn sequential_fallback_matches() {
+        let mut a = vec![0usize; 30];
+        let mut b = vec![0usize; 30];
+        for_each_row_mut(&mut a, 5, 1, |r, row| row.iter_mut().for_each(|v| *v = r * r));
+        for_each_row_mut(&mut b, 5, 3, |r, row| row.iter_mut().for_each(|v| *v = r * r));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_input_is_noop() {
+        parallel_ranges(0, 4, |lo, hi| assert_eq!(lo, hi));
+        let mut empty: Vec<usize> = vec![];
+        for_each_row_mut(&mut empty, 3, 4, |_, _| panic!("no rows"));
+    }
+}

@@ -1,0 +1,77 @@
+//! Wall-clock timing helpers shared by the bench harness and experiments.
+
+use std::time::Instant;
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// A named stopwatch accumulating laps, used for stage-level breakdowns
+/// (e.g. Table 3's setup / optimization-loop split).
+#[derive(Debug, Default)]
+pub struct Stopwatch {
+    laps: Vec<(String, f64)>,
+    current: Option<(String, Instant)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start (or restart) a named lap; finishes any running lap first.
+    pub fn start(&mut self, name: &str) {
+        self.stop();
+        self.current = Some((name.to_string(), Instant::now()));
+    }
+
+    /// Stop the running lap, if any.
+    pub fn stop(&mut self) {
+        if let Some((name, t0)) = self.current.take() {
+            self.laps.push((name, t0.elapsed().as_secs_f64()));
+        }
+    }
+
+    /// Total seconds recorded under `name` (laps may repeat).
+    pub fn total(&self, name: &str) -> f64 {
+        self.laps.iter().filter(|(n, _)| n == name).map(|(_, s)| s).sum()
+    }
+
+    /// Sum over all laps.
+    pub fn grand_total(&self) -> f64 {
+        self.laps.iter().map(|(_, s)| s).sum()
+    }
+
+    /// All laps in order.
+    pub fn laps(&self) -> &[(String, f64)] {
+        &self.laps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start("a");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        sw.start("b");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        sw.stop();
+        assert!(sw.total("a") > 0.0);
+        assert!(sw.total("b") > 0.0);
+        assert!((sw.grand_total() - sw.total("a") - sw.total("b")).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! Integration: the AOT Pallas artifacts (Layer 1/2), executed through the
+//! PJRT runtime (Layer 3), must reproduce the native Map stage — closing
+//! the three-layer loop. Requires `make artifacts` (tests self-skip with a
+//! warning when artifacts are missing, so `cargo test` stays usable before
+//! the first build).
+
+use tensor_galerkin::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
+use tensor_galerkin::bc::{condense, DirichletBc};
+use tensor_galerkin::mesh::structured::{jitter, unit_cube_tet, unit_square_tri};
+use tensor_galerkin::runtime::{MapKind, PjrtMapper, Runtime};
+use tensor_galerkin::solver::{self, Method, SolverConfig};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::new() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn max_abs_rel(a: &[f64], b: &[f64]) -> f64 {
+    let scale = b.iter().fold(1e-12f64, |m, &x| m.max(x.abs()));
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f64, f64::max)
+        / scale
+}
+
+#[test]
+fn poisson2d_artifact_matches_native_map() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut mesh = unit_square_tri(11); // 242 elements: pads into E256
+    jitter(&mut mesh, 0.2, 7);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    let rho = ctx.coeff_fn(|p| 1.0 + p[0] + 2.0 * p[1]);
+    let rho_buf = match &rho {
+        Coefficient::Quad(v) => v.clone(),
+        _ => unreachable!(),
+    };
+    let native = ctx.map_matrix(&BilinearForm::Diffusion { rho });
+    let mapper = PjrtMapper::new(&rt);
+    let coords = tensor_galerkin::fem::geometry::gather_coords(&mesh);
+    let artifact = mapper.map(MapKind::Poisson2d, &coords, &rho_buf).unwrap();
+    assert_eq!(native.len(), artifact.len());
+    let err = max_abs_rel(&artifact, &native);
+    assert!(err < 1e-5, "f32 artifact vs f64 native: rel {err}");
+}
+
+#[test]
+fn poisson3d_full_assembly_and_solve_through_artifact() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mesh = unit_cube_tet(5); // 750 elements → bucket 2048
+    let ctx = AssemblyContext::new(&mesh, 1);
+    let mapper = PjrtMapper::new(&rt);
+    let e = mesh.n_cells();
+    let rho = vec![1.0; e * 4];
+    let fq = vec![1.0; e * 4];
+
+    let k_pjrt = mapper.assemble_matrix(&ctx, MapKind::Poisson3d, &rho).unwrap();
+    let f_pjrt = mapper.assemble_vector(&ctx, MapKind::Load3d, &fq).unwrap();
+
+    let k_native = ctx.assemble_matrix(&BilinearForm::Diffusion {
+        rho: Coefficient::Const(1.0),
+    });
+    let f_native = ctx.assemble_vector(&LinearForm::Source { f: Coefficient::Const(1.0) });
+
+    assert_eq!(k_pjrt.indices, k_native.indices, "identical sparsity");
+    assert!(k_pjrt.frob_distance(&k_native) / k_native.data.iter().map(|v| v * v).sum::<f64>().sqrt() < 1e-5);
+    assert!(max_abs_rel(&f_pjrt, &f_native) < 1e-5);
+
+    // End-to-end: solve both systems; solutions must agree to f32 accuracy.
+    let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
+    let sys_a = condense(&k_pjrt, &f_pjrt, &bc);
+    let sys_b = condense(&k_native, &f_native, &bc);
+    let cfg = SolverConfig::default();
+    let (ua, sa) = solver::solve(&sys_a.k, &sys_a.rhs, Method::BiCgStab, &cfg);
+    let (ub, sb) = solver::solve(&sys_b.k, &sys_b.rhs, Method::BiCgStab, &cfg);
+    assert!(sa.converged && sb.converged);
+    assert!(tensor_galerkin::util::rel_l2(&ua, &ub) < 1e-4);
+}
+
+#[test]
+fn elasticity3d_artifact_matches_native() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mesh = unit_cube_tet(3);
+    let ctx = AssemblyContext::new(&mesh, 3);
+    let info = rt
+        .manifest
+        .artifacts
+        .values()
+        .find(|a| a.kind == "elasticity3d_local")
+        .expect("elasticity artifact");
+    let (lambda, mu) = (info.meta["lambda"], info.meta["mu"]);
+    let native = ctx.map_matrix(&BilinearForm::Elasticity {
+        lambda,
+        mu,
+        e_mod: Coefficient::Const(1.0),
+    });
+    let mapper = PjrtMapper::new(&rt);
+    let coords = tensor_galerkin::fem::geometry::gather_coords(&mesh);
+    let emod = vec![1.0; mesh.n_cells() * 4];
+    let artifact = mapper.map(MapKind::Elasticity3d, &coords, &emod).unwrap();
+    let err = max_abs_rel(&artifact, &native);
+    assert!(err < 5e-5, "elasticity artifact rel err {err}");
+}
+
+#[test]
+fn chunking_beyond_largest_bucket_matches() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // Mesh larger than the top test bucket forces chunked execution.
+    let largest = rt.manifest.bucket_for("poisson2d_local", usize::MAX).unwrap();
+    let n = ((largest as f64 / 2.0).sqrt() as usize) + 3; // 2n² > largest
+    let mesh = unit_square_tri(n);
+    assert!(mesh.n_cells() > largest);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    let mapper = PjrtMapper::new(&rt);
+    let rho = vec![1.0; mesh.n_cells() * 3];
+    let k_pjrt = mapper.assemble_matrix(&ctx, MapKind::Poisson2d, &rho).unwrap();
+    let k_native = ctx.assemble_matrix(&BilinearForm::Diffusion {
+        rho: Coefficient::Const(1.0),
+    });
+    let rel = k_pjrt.frob_distance(&k_native)
+        / k_native.data.iter().map(|v| v * v).sum::<f64>().sqrt();
+    assert!(rel < 1e-5, "chunked assembly rel err {rel}");
+}
+
+#[test]
+fn executable_cache_is_reused_not_recompiled() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mesh = unit_square_tri(8);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    let mapper = PjrtMapper::new(&rt);
+    let rho = vec![1.0; mesh.n_cells() * 3];
+    let _ = mapper.assemble_matrix(&ctx, MapKind::Poisson2d, &rho).unwrap();
+    let cached_after_first = rt.cached();
+    for _ in 0..3 {
+        let _ = mapper.assemble_matrix(&ctx, MapKind::Poisson2d, &rho).unwrap();
+    }
+    assert_eq!(rt.cached(), cached_after_first, "no recompilation on reuse");
+}
