@@ -1,7 +1,9 @@
 //! Microbenchmarks of the assembly pipeline stages (the §Perf tool):
 //! Batch-Map (native), Sparse-Reduce (routing), scatter-add baseline,
-//! routing construction, SpMV — per problem size. Used to locate the hot
-//! path before and after each optimization iteration.
+//! routing construction, SpMV — per problem size — plus the batched
+//! multi-instance path (S coefficient instances through one shared-topology
+//! Map-Reduce vs S sequential assemblies). Used to locate the hot path
+//! before and after each optimization iteration.
 
 use tensor_galerkin::assembly::routing::Routing;
 use tensor_galerkin::assembly::{scatter, AssemblyContext, BilinearForm, Coefficient};
@@ -9,11 +11,13 @@ use tensor_galerkin::fem::dofmap::DofMap;
 use tensor_galerkin::mesh::structured::{unit_cube_tet, unit_square_tri};
 use tensor_galerkin::util::bench::Bench;
 use tensor_galerkin::util::cli::Args;
+use tensor_galerkin::util::rng::Rng;
 
 fn main() {
     let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
     let sizes_2d = args.get_usize_list("sizes2d", &[32, 64, 128]);
     let sizes_3d = args.get_usize_list("sizes3d", &[8, 16, 24]);
+    let s_batch = args.get_usize("batch", 16);
     let mut bench = Bench::new("assembly_micro");
 
     for &n in &sizes_2d {
@@ -43,6 +47,53 @@ fn main() {
             k.spmv(&x, &mut y);
             y[0]
         });
+
+        // --- Batched multi-instance assembly (the Fig B.4 regime): S
+        // random coefficient instances on this fixed topology, one
+        // shared-topology Map-Reduce vs S sequential assemble_matrix calls.
+        let nq = ctx.quad.len();
+        let mut rng = Rng::new(99);
+        let coeffs: Vec<Coefficient> = (0..s_batch)
+            .map(|_| {
+                let vals: Vec<f64> = (0..mesh.n_cells() * nq)
+                    .map(|_| rng.uniform_in(0.5, 2.0))
+                    .collect();
+                Coefficient::Quad(vals)
+            })
+            .collect();
+        let forms: Vec<BilinearForm> = coeffs
+            .iter()
+            .map(|c| BilinearForm::Diffusion { rho: c.clone() })
+            .collect();
+        let meta = [("n_elems", ne), ("batch", s_batch as f64)];
+        bench.bench(
+            &format!("2d/assemble_seq_s{s_batch}/e{}", mesh.n_cells()),
+            &meta,
+            || {
+                let mut checksum = 0.0;
+                for f in &forms {
+                    checksum += ctx.assemble_matrix(f).data[0];
+                }
+                checksum
+            },
+        );
+        let plan = ctx.batched(&forms[0]).expect("P1 triangles are separable");
+        bench.bench(
+            &format!("2d/assemble_batched_s{s_batch}/e{}", mesh.n_cells()),
+            &meta,
+            || plan.assemble(&coeffs).data[0],
+        );
+        // Plan construction included (cold batched path) + generic fused path.
+        bench.bench(
+            &format!("2d/assemble_batched_cold_s{s_batch}/e{}", mesh.n_cells()),
+            &meta,
+            || ctx.batched(&forms[0]).unwrap().assemble(&coeffs).data[0],
+        );
+        bench.bench(
+            &format!("2d/assemble_batched_generic_s{s_batch}/e{}", mesh.n_cells()),
+            &meta,
+            || ctx.assemble_matrix_batch(&forms).data[0],
+        );
     }
 
     for &n in &sizes_3d {
@@ -62,6 +113,22 @@ fn main() {
         bench.bench(&format!("3d/scatter_add/e{}", mesh.n_cells()), &[("n_elems", ne)], || {
             scatter::assemble_matrix(&mesh, &ctx.dofmap, &form, &ctx.tab, &ctx.geo)
         });
+    }
+
+    // Acceptance summary: batched-vs-sequential speedup per 2D size.
+    let find = |name: String| bench.results().iter().find(|m| m.name == name).map(|m| m.median_s);
+    for &n in &sizes_2d {
+        let e = 2 * n * n;
+        let seq = find(format!("2d/assemble_seq_s{s_batch}/e{e}"));
+        let bat = find(format!("2d/assemble_batched_s{s_batch}/e{e}"));
+        let cold = find(format!("2d/assemble_batched_cold_s{s_batch}/e{e}"));
+        if let (Some(s), Some(b)) = (seq, bat) {
+            println!(
+                "2d/e{e}: batched S={s_batch} is {:.2}x sequential (warm plan), {:.2}x (cold plan)",
+                s / b.max(1e-12),
+                cold.map(|c| s / c.max(1e-12)).unwrap_or(f64::NAN),
+            );
+        }
     }
     bench.finish();
 }

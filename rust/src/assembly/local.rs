@@ -26,7 +26,6 @@ pub fn local_matrices(
     dim: usize,
 ) -> Vec<f64> {
     let k = tab.k;
-    let nq = geo.q;
     let ncomp = form.ncomp(dim);
     let kl = k * ncomp;
     let mut out = vec![0.0; geo.n_elems * kl * kl];
@@ -35,161 +34,16 @@ pub fn local_matrices(
     // §Perf: P1 simplices have quadrature-constant physical gradients, so
     // the basis contraction can be hoisted out of the q-loop (the weights ×
     // coefficient sum collapses to one scalar per element). Measured ~2.5×
-    // on the 2D/3D diffusion Map stage (see EXPERIMENTS.md §Perf).
+    // on the 2D/3D diffusion Map stage (see EXPERIMENTS.md §Perf). The
+    // per-element bodies live in `fill_matrix_one`, shared with the
+    // batched multi-instance driver.
     let const_grad = matches!(
         tab.element,
         crate::fem::reference::RefElement::P1Tri | crate::fem::reference::RefElement::P1Tet
     );
-
-    match form {
-        BilinearForm::Diffusion { rho } if const_grad => {
-            threadpool::for_each_row_mut(&mut out, kl * kl, threads, |e, ke| {
-                let mut c = 0.0;
-                for q in 0..nq {
-                    c += geo.detj[e * nq + q] * quad_weight(tab, q) * rho.at(e, q, nq);
-                }
-                if c == 0.0 {
-                    return;
-                }
-                for a in 0..k {
-                    let ga = geo.grad(e, 0, a);
-                    for b in a..k {
-                        let gb = geo.grad(e, 0, b);
-                        let mut dotg = 0.0;
-                        for d in 0..dim {
-                            dotg += ga[d] * gb[d];
-                        }
-                        let v = c * dotg;
-                        ke[a * k + b] = v;
-                        ke[b * k + a] = v;
-                    }
-                }
-            });
-        }
-        BilinearForm::Diffusion { rho } => {
-            threadpool::for_each_row_mut(&mut out, kl * kl, threads, |e, ke| {
-                for q in 0..nq {
-                    let w = geo.detj[e * nq + q] * quad_weight(tab, q);
-                    if w == 0.0 {
-                        continue;
-                    }
-                    let c = w * rho.at(e, q, nq);
-                    for a in 0..k {
-                        let ga = geo.grad(e, q, a);
-                        for b in 0..k {
-                            let gb = geo.grad(e, q, b);
-                            let mut dotg = 0.0;
-                            for d in 0..dim {
-                                dotg += ga[d] * gb[d];
-                            }
-                            ke[a * k + b] += c * dotg;
-                        }
-                    }
-                }
-            });
-        }
-        BilinearForm::Mass { rho } => {
-            threadpool::for_each_row_mut(&mut out, kl * kl, threads, |e, ke| {
-                for q in 0..nq {
-                    let w = geo.detj[e * nq + q] * quad_weight(tab, q);
-                    if w == 0.0 {
-                        continue;
-                    }
-                    let c = w * rho.at(e, q, nq);
-                    for a in 0..k {
-                        let pa = tab.val(q, a);
-                        for b in 0..k {
-                            ke[a * k + b] += c * pa * tab.val(q, b);
-                        }
-                    }
-                }
-            });
-        }
-        BilinearForm::Elasticity { lambda, mu, e_mod } if const_grad => {
-            // Same hoisting for the (much heavier) elasticity contraction.
-            let (lambda, mu) = (*lambda, *mu);
-            threadpool::for_each_row_mut(&mut out, kl * kl, threads, |e, ke| {
-                let mut scale = 0.0;
-                for q in 0..nq {
-                    scale += geo.detj[e * nq + q] * quad_weight(tab, q) * e_mod.at(e, q, nq);
-                }
-                if scale == 0.0 {
-                    return;
-                }
-                for a in 0..k {
-                    let ga = geo.grad(e, 0, a);
-                    for b in 0..k {
-                        let gb = geo.grad(e, 0, b);
-                        let mut dotg = 0.0;
-                        for d in 0..dim {
-                            dotg += ga[d] * gb[d];
-                        }
-                        for i in 0..ncomp {
-                            for j in 0..ncomp {
-                                let mut v = lambda * ga[i] * gb[j] + mu * ga[j] * gb[i];
-                                if i == j {
-                                    v += mu * dotg;
-                                }
-                                ke[(a * ncomp + i) * kl + (b * ncomp + j)] = scale * v;
-                            }
-                        }
-                    }
-                }
-            });
-        }
-        BilinearForm::Elasticity { lambda, mu, e_mod } => {
-            let (lambda, mu) = (*lambda, *mu);
-            threadpool::for_each_row_mut(&mut out, kl * kl, threads, |e, ke| {
-                for q in 0..nq {
-                    let w = geo.detj[e * nq + q] * quad_weight(tab, q);
-                    if w == 0.0 {
-                        continue;
-                    }
-                    let scale = w * e_mod.at(e, q, nq);
-                    for a in 0..k {
-                        let ga = geo.grad(e, q, a);
-                        for b in 0..k {
-                            let gb = geo.grad(e, q, b);
-                            let mut dotg = 0.0;
-                            for d in 0..dim {
-                                dotg += ga[d] * gb[d];
-                            }
-                            // K[(a,i),(b,j)] += λ Ga[i] Gb[j]
-                            //                 + μ (Ga[j] Gb[i] + δ_ij Ga·Gb)
-                            for i in 0..ncomp {
-                                for j in 0..ncomp {
-                                    let mut v =
-                                        lambda * ga[i] * gb[j] + mu * ga[j] * gb[i];
-                                    if i == j {
-                                        v += mu * dotg;
-                                    }
-                                    ke[(a * ncomp + i) * kl + (b * ncomp + j)] += scale * v;
-                                }
-                            }
-                        }
-                    }
-                }
-            });
-        }
-        BilinearForm::FacetMass { alpha } => {
-            // Identical to Mass but `geo` is facet geometry (metric in detj).
-            threadpool::for_each_row_mut(&mut out, kl * kl, threads, |e, ke| {
-                for q in 0..nq {
-                    let w = geo.detj[e * nq + q] * quad_weight(tab, q);
-                    if w == 0.0 {
-                        continue;
-                    }
-                    let c = w * alpha.at(e, q, nq);
-                    for a in 0..k {
-                        let pa = tab.val(q, a);
-                        for b in 0..k {
-                            ke[a * k + b] += c * pa * tab.val(q, b);
-                        }
-                    }
-                }
-            });
-        }
-    }
+    threadpool::for_each_row_mut(&mut out, kl * kl, threads, |e, ke| {
+        fill_matrix_one(form, const_grad, e, ke, geo, tab, dim, ncomp);
+    });
     out
 }
 
@@ -201,47 +55,287 @@ pub fn local_vectors(
     dim: usize,
 ) -> Vec<f64> {
     let k = tab.k;
-    let nq = geo.q;
     let ncomp = form.ncomp(dim);
     let kl = k * ncomp;
     let mut out = vec![0.0; geo.n_elems * kl];
     let threads = threadpool::default_threads();
+    threadpool::for_each_row_mut(&mut out, kl, threads, |e, fe| {
+        fill_vector_one(form, e, fe, geo, tab, ncomp);
+    });
+    out
+}
 
+/// Batched local matrices for `S` (possibly distinct) volumetric bilinear
+/// forms over one shared geometry: the multi-instance Batch-Map. Returns
+/// the fused `S × E × kl × kl` flat tensor, produced by a single parallel
+/// pass over the fused `S·E` element range (one thread-scope for the whole
+/// batch instead of one per instance).
+///
+/// The per-element bodies are shared with [`local_matrices`]
+/// (`fill_matrix_one`), so slice `s` of the result is bitwise-identical to
+/// `local_matrices(&forms[s], …)`. All forms must agree on `ncomp` (they
+/// share the DoF layout).
+pub fn local_matrices_batch(
+    forms: &[BilinearForm],
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+    dim: usize,
+) -> Vec<f64> {
+    assert!(!forms.is_empty(), "empty form batch");
+    let ncomp = forms[0].ncomp(dim);
+    for f in forms {
+        assert_eq!(f.ncomp(dim), ncomp, "mixed ncomp in form batch");
+    }
+    let k = tab.k;
+    let kl = k * ncomp;
+    let ne = geo.n_elems;
+    let mut out = vec![0.0; forms.len() * ne * kl * kl];
+    if ne == 0 {
+        return out;
+    }
+    let threads = threadpool::default_threads();
+    let const_grad = matches!(
+        tab.element,
+        crate::fem::reference::RefElement::P1Tri | crate::fem::reference::RefElement::P1Tet
+    );
+    threadpool::for_each_row_mut(&mut out, kl * kl, threads, |r, ke| {
+        let (s, e) = (r / ne, r % ne);
+        fill_matrix_one(&forms[s], const_grad, e, ke, geo, tab, dim, ncomp);
+    });
+    out
+}
+
+/// Batched local vectors for `S` linear forms over one shared geometry:
+/// fused `S × E × kl` flat tensor, one parallel pass. Slice `s` is
+/// bitwise-identical to `local_vectors(&forms[s], …)`.
+pub fn local_vectors_batch(
+    forms: &[LinearForm],
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+    dim: usize,
+) -> Vec<f64> {
+    assert!(!forms.is_empty(), "empty form batch");
+    let ncomp = forms[0].ncomp(dim);
+    for f in forms {
+        assert_eq!(f.ncomp(dim), ncomp, "mixed ncomp in form batch");
+    }
+    let k = tab.k;
+    let kl = k * ncomp;
+    let ne = geo.n_elems;
+    let mut out = vec![0.0; forms.len() * ne * kl];
+    if ne == 0 {
+        return out;
+    }
+    let threads = threadpool::default_threads();
+    threadpool::for_each_row_mut(&mut out, kl, threads, |r, fe| {
+        let (s, e) = (r / ne, r % ne);
+        fill_vector_one(&forms[s], e, fe, geo, tab, ncomp);
+    });
+    out
+}
+
+/// `∇φ_a·∇φ_b` over the first `dim` gradient components — the entry kernel
+/// shared by every diffusion arm and the separable plan construction in
+/// `map_reduce::AssemblyContext::batched` (one copy keeps them bitwise
+/// consistent).
+#[inline]
+pub(crate) fn grad_dot(ga: &[f64], gb: &[f64], dim: usize) -> f64 {
+    let mut dotg = 0.0;
+    for d in 0..dim {
+        dotg += ga[d] * gb[d];
+    }
+    dotg
+}
+
+/// Isotropic elasticity entry `λ Ga[i] Gb[j] + μ (Ga[j] Gb[i] + δ_ij Ga·Gb)`
+/// — shared by both elasticity arms and the separable plan construction.
+#[inline]
+pub(crate) fn elasticity_entry(
+    lambda: f64,
+    mu: f64,
+    ga: &[f64],
+    gb: &[f64],
+    dotg: f64,
+    i: usize,
+    j: usize,
+) -> f64 {
+    let mut v = lambda * ga[i] * gb[j] + mu * ga[j] * gb[i];
+    if i == j {
+        v += mu * dotg;
+    }
+    v
+}
+
+/// One element of the Map stage — the single source of every form's
+/// per-element arithmetic, shared by [`local_matrices`] (one form over all
+/// elements) and [`local_matrices_batch`] (S forms over the fused `S·E`
+/// range), which therefore agree bitwise by construction.
+#[allow(clippy::too_many_arguments)]
+fn fill_matrix_one(
+    form: &BilinearForm,
+    const_grad: bool,
+    e: usize,
+    ke: &mut [f64],
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+    dim: usize,
+    ncomp: usize,
+) {
+    let k = tab.k;
+    let nq = geo.q;
+    let kl = k * ncomp;
     match form {
-        LinearForm::Source { f } | LinearForm::FacetFlux { g: f } => {
-            threadpool::for_each_row_mut(&mut out, kl, threads, |e, fe| {
-                for q in 0..nq {
-                    let w = geo.detj[e * nq + q] * quad_weight(tab, q);
-                    if w == 0.0 {
-                        continue;
-                    }
-                    let c = w * f.at(e, q, nq);
-                    for a in 0..k {
-                        fe[a] += c * tab.val(q, a);
+        BilinearForm::Diffusion { rho } if const_grad => {
+            let mut c = 0.0;
+            for q in 0..nq {
+                c += geo.detj[e * nq + q] * quad_weight(tab, q) * rho.at(e, q, nq);
+            }
+            if c == 0.0 {
+                return;
+            }
+            for a in 0..k {
+                let ga = geo.grad(e, 0, a);
+                for b in a..k {
+                    let v = c * grad_dot(ga, geo.grad(e, 0, b), dim);
+                    ke[a * k + b] = v;
+                    ke[b * k + a] = v;
+                }
+            }
+        }
+        BilinearForm::Diffusion { rho } => {
+            for q in 0..nq {
+                let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+                if w == 0.0 {
+                    continue;
+                }
+                let c = w * rho.at(e, q, nq);
+                for a in 0..k {
+                    let ga = geo.grad(e, q, a);
+                    for b in 0..k {
+                        ke[a * k + b] += c * grad_dot(ga, geo.grad(e, q, b), dim);
                     }
                 }
-            });
+            }
         }
-        LinearForm::VectorSource { f } | LinearForm::FacetTraction { t: f } => {
-            assert_eq!(f.len(), ncomp);
-            let f = f.clone();
-            threadpool::for_each_row_mut(&mut out, kl, threads, |e, fe| {
-                for q in 0..nq {
-                    let w = geo.detj[e * nq + q] * quad_weight(tab, q);
-                    if w == 0.0 {
-                        continue;
+        BilinearForm::Mass { rho } => {
+            for q in 0..nq {
+                let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+                if w == 0.0 {
+                    continue;
+                }
+                let c = w * rho.at(e, q, nq);
+                for a in 0..k {
+                    let pa = tab.val(q, a);
+                    for b in 0..k {
+                        ke[a * k + b] += c * pa * tab.val(q, b);
                     }
-                    for a in 0..k {
-                        let pa = w * tab.val(q, a);
-                        for (i, fi) in f.iter().enumerate() {
-                            fe[a * ncomp + i] += pa * fi;
+                }
+            }
+        }
+        BilinearForm::Elasticity { lambda, mu, e_mod } if const_grad => {
+            let (lambda, mu) = (*lambda, *mu);
+            let mut scale = 0.0;
+            for q in 0..nq {
+                scale += geo.detj[e * nq + q] * quad_weight(tab, q) * e_mod.at(e, q, nq);
+            }
+            if scale == 0.0 {
+                return;
+            }
+            for a in 0..k {
+                let ga = geo.grad(e, 0, a);
+                for b in 0..k {
+                    let gb = geo.grad(e, 0, b);
+                    let dotg = grad_dot(ga, gb, dim);
+                    for i in 0..ncomp {
+                        for j in 0..ncomp {
+                            let v = elasticity_entry(lambda, mu, ga, gb, dotg, i, j);
+                            ke[(a * ncomp + i) * kl + (b * ncomp + j)] = scale * v;
                         }
                     }
                 }
-            });
+            }
+        }
+        BilinearForm::Elasticity { lambda, mu, e_mod } => {
+            let (lambda, mu) = (*lambda, *mu);
+            for q in 0..nq {
+                let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+                if w == 0.0 {
+                    continue;
+                }
+                let scale = w * e_mod.at(e, q, nq);
+                for a in 0..k {
+                    let ga = geo.grad(e, q, a);
+                    for b in 0..k {
+                        let gb = geo.grad(e, q, b);
+                        let dotg = grad_dot(ga, gb, dim);
+                        for i in 0..ncomp {
+                            for j in 0..ncomp {
+                                let v = elasticity_entry(lambda, mu, ga, gb, dotg, i, j);
+                                ke[(a * ncomp + i) * kl + (b * ncomp + j)] += scale * v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        BilinearForm::FacetMass { alpha } => {
+            for q in 0..nq {
+                let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+                if w == 0.0 {
+                    continue;
+                }
+                let c = w * alpha.at(e, q, nq);
+                for a in 0..k {
+                    let pa = tab.val(q, a);
+                    for b in 0..k {
+                        ke[a * k + b] += c * pa * tab.val(q, b);
+                    }
+                }
+            }
         }
     }
-    out
+}
+
+/// Per-element body of [`local_vectors`] (see [`fill_matrix_one`]).
+fn fill_vector_one(
+    form: &LinearForm,
+    e: usize,
+    fe: &mut [f64],
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+    ncomp: usize,
+) {
+    let k = tab.k;
+    let nq = geo.q;
+    match form {
+        LinearForm::Source { f } | LinearForm::FacetFlux { g: f } => {
+            for q in 0..nq {
+                let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+                if w == 0.0 {
+                    continue;
+                }
+                let c = w * f.at(e, q, nq);
+                for a in 0..k {
+                    fe[a] += c * tab.val(q, a);
+                }
+            }
+        }
+        LinearForm::VectorSource { f } | LinearForm::FacetTraction { t: f } => {
+            assert_eq!(f.len(), ncomp);
+            for q in 0..nq {
+                let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+                if w == 0.0 {
+                    continue;
+                }
+                for a in 0..k {
+                    let pa = w * tab.val(q, a);
+                    for (i, fi) in f.iter().enumerate() {
+                        fe[a * ncomp + i] += pa * fi;
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[inline]
@@ -356,6 +450,66 @@ mod tests {
                 let r: f64 = (0..kl).map(|j| k[i * kl + j] * ux[j]).sum();
                 assert!(r.abs() < 1e-12, "translation not in kernel");
             }
+        }
+    }
+
+    #[test]
+    fn batched_matrices_match_per_instance_map() {
+        let m = unit_square_tri(3);
+        let quad = tri_deg2();
+        let tab = RefElement::P1Tri.tabulate(&quad);
+        let geo = geometry::compute(&m, &tab, &quad);
+        let nq = geo.q;
+        // Heterogeneous batch: diffusion (const-grad fast path), mass, and
+        // a spatially varying diffusion instance.
+        let varying: Vec<f64> = (0..m.n_cells() * nq).map(|i| 1.0 + (i % 7) as f64 * 0.1).collect();
+        let forms = vec![
+            BilinearForm::Diffusion { rho: Coefficient::Const(2.0) },
+            BilinearForm::Mass { rho: Coefficient::Const(1.5) },
+            BilinearForm::Diffusion { rho: Coefficient::Quad(varying) },
+        ];
+        let batch = local_matrices_batch(&forms, &geo, &tab, 2);
+        let per = m.n_cells() * 9;
+        assert_eq!(batch.len(), forms.len() * per);
+        for (s, form) in forms.iter().enumerate() {
+            let single = local_matrices(form, &geo, &tab, 2);
+            assert_eq!(&batch[s * per..(s + 1) * per], &single[..], "instance {s}");
+        }
+    }
+
+    #[test]
+    fn batched_elasticity_matches_per_instance_map() {
+        let m = unit_cube_tet(2);
+        let quad = tet_deg2();
+        let tab = RefElement::P1Tet.tabulate(&quad);
+        let geo = geometry::compute(&m, &tab, &quad);
+        let forms = vec![
+            BilinearForm::Elasticity { lambda: 0.5, mu: 0.4, e_mod: Coefficient::Const(1.0) },
+            BilinearForm::Elasticity { lambda: 0.5, mu: 0.4, e_mod: Coefficient::Const(2.5) },
+        ];
+        let batch = local_matrices_batch(&forms, &geo, &tab, 3);
+        let per = m.n_cells() * 144;
+        for (s, form) in forms.iter().enumerate() {
+            let single = local_matrices(form, &geo, &tab, 3);
+            assert_eq!(&batch[s * per..(s + 1) * per], &single[..], "instance {s}");
+        }
+    }
+
+    #[test]
+    fn batched_vectors_match_per_instance_map() {
+        let m = unit_square_tri(3);
+        let quad = tri_deg2();
+        let tab = RefElement::P1Tri.tabulate(&quad);
+        let geo = geometry::compute(&m, &tab, &quad);
+        let forms = vec![
+            LinearForm::Source { f: Coefficient::Const(2.0) },
+            LinearForm::Source { f: Coefficient::Const(-1.0) },
+        ];
+        let batch = local_vectors_batch(&forms, &geo, &tab, 2);
+        let per = m.n_cells() * 3;
+        for (s, form) in forms.iter().enumerate() {
+            let single = local_vectors(form, &geo, &tab, 2);
+            assert_eq!(&batch[s * per..(s + 1) * per], &single[..], "instance {s}");
         }
     }
 

@@ -15,7 +15,8 @@ use crate::fem::geometry::{self, ElementGeometry};
 use crate::fem::quadrature::{self, Quadrature};
 use crate::fem::reference::{RefElement, Tabulation};
 use crate::mesh::{CellType, Mesh};
-use crate::sparse::Csr;
+use crate::sparse::{Csr, CsrBatch};
+use crate::util::threadpool;
 
 use super::forms::{BilinearForm, Coefficient, LinearForm};
 use super::local;
@@ -118,6 +119,116 @@ impl AssemblyContext {
         self.routing.reduce_vector(&self.map_vector(form))
     }
 
+    /// Stage I, batched: local matrices for `S` forms over this context's
+    /// shared geometry (`S × E × kl²` flat), one fused parallel pass.
+    pub fn map_matrix_batch(&self, forms: &[BilinearForm]) -> Vec<f64> {
+        for form in forms {
+            assert!(!form.is_facet(), "facet form passed to volumetric context");
+            assert_eq!(form.ncomp(self.mesh.dim), self.ncomp, "form/context ncomp mismatch");
+        }
+        local::local_matrices_batch(forms, &self.geo, &self.tab, self.mesh.dim)
+    }
+
+    /// Batched Map + Reduce: assemble `S` global matrices that share one
+    /// symbolic pattern (one `indptr`/`indices`, `S` value arrays). The
+    /// generic multi-instance path — works for any mix of volumetric forms
+    /// with this context's `ncomp`; see [`AssemblyContext::batched`] for
+    /// the faster separable plan.
+    pub fn assemble_matrix_batch(&self, forms: &[BilinearForm]) -> CsrBatch {
+        self.routing.reduce_matrix_batch(&self.map_matrix_batch(forms), forms.len())
+    }
+
+    /// Batched vector assembly: `S` load vectors in one fused Batch-Map +
+    /// Sparse-Reduce (`S × N` flat, instance-major).
+    pub fn assemble_vector_batch(&self, forms: &[LinearForm]) -> Vec<f64> {
+        for form in forms {
+            assert!(!form.is_facet(), "facet form passed to volumetric context");
+            assert_eq!(form.ncomp(self.mesh.dim), self.ncomp, "form/context ncomp mismatch");
+        }
+        let local = local::local_vectors_batch(forms, &self.geo, &self.tab, self.mesh.dim);
+        self.routing.reduce_vector_batch(&local, forms.len())
+    }
+
+    /// Separable batched-assembly plan for `form`: `Some` when the local
+    /// matrix factors as `c_e(coefficient) · U_e` with coefficient-free
+    /// `U_e` — the constant-gradient P1 simplex cases (diffusion and
+    /// elasticity). The coefficient inside `form` is ignored; per-instance
+    /// coefficients go to [`BatchedAssembly::assemble`]. Returns `None` for
+    /// non-separable forms (fall back to
+    /// [`AssemblyContext::assemble_matrix_batch`]).
+    pub fn batched(&self, form: &BilinearForm) -> Option<BatchedAssembly<'_>> {
+        let const_grad = matches!(self.tab.element, RefElement::P1Tri | RefElement::P1Tet);
+        if !const_grad {
+            return None;
+        }
+        assert_eq!(form.ncomp(self.mesh.dim), self.ncomp, "form/context ncomp mismatch");
+        let dim = self.mesh.dim;
+        let k = self.tab.k;
+        let ne = self.n_cells();
+        let threads = threadpool::default_threads();
+        let unit = match form {
+            BilinearForm::Diffusion { .. } => {
+                // U_e[a,b] = ∇φ_a·∇φ_b (the hoisted dot products of the
+                // native const-gradient arm, computed once per topology;
+                // the entry kernel is shared with `local::fill_matrix_one`).
+                let mut unit = vec![0.0; ne * k * k];
+                threadpool::for_each_row_mut(&mut unit, k * k, threads, |e, ge| {
+                    for a in 0..k {
+                        let ga = self.geo.grad(e, 0, a);
+                        for b in a..k {
+                            let dotg = local::grad_dot(ga, self.geo.grad(e, 0, b), dim);
+                            ge[a * k + b] = dotg;
+                            ge[b * k + a] = dotg;
+                        }
+                    }
+                });
+                unit
+            }
+            BilinearForm::Elasticity { lambda, mu, .. } => {
+                let (lambda, mu) = (*lambda, *mu);
+                let ncomp = self.ncomp;
+                let kl = k * ncomp;
+                let mut unit = vec![0.0; ne * kl * kl];
+                threadpool::for_each_row_mut(&mut unit, kl * kl, threads, |e, ve| {
+                    for a in 0..k {
+                        let ga = self.geo.grad(e, 0, a);
+                        for b in 0..k {
+                            let gb = self.geo.grad(e, 0, b);
+                            let dotg = local::grad_dot(ga, gb, dim);
+                            for i in 0..ncomp {
+                                for j in 0..ncomp {
+                                    ve[(a * ncomp + i) * kl + (b * ncomp + j)] =
+                                        local::elasticity_entry(lambda, mu, ga, gb, dotg, i, j);
+                                }
+                            }
+                        }
+                    }
+                });
+                unit
+            }
+            _ => return None,
+        };
+        Some(self.batched_from_unit_local(&unit))
+    }
+
+    /// Separable plan from precomputed unit-coefficient local matrices
+    /// (`E × kl²` flat) — e.g. SIMP's cached unit-modulus stiffness, where
+    /// the per-instance scalars are the interpolated Young's moduli.
+    pub fn batched_from_unit_local(&self, unit_local: &[f64]) -> BatchedAssembly<'_> {
+        let kl = self.routing.n_local;
+        let kl2 = kl * kl;
+        assert_eq!(unit_local.len(), self.n_cells() * kl2, "unit local tensor shape");
+        let weights: Vec<f64> =
+            self.routing.mat_src.iter().map(|&s| unit_local[s as usize]).collect();
+        let src_elem: Vec<u32> =
+            self.routing.mat_src.iter().map(|&s| (s as usize / kl2) as u32).collect();
+        BatchedAssembly {
+            ctx: self,
+            weights,
+            src_elem,
+        }
+    }
+
     /// Reduce externally produced local matrices (the PJRT-artifact Map
     /// path feeds this).
     pub fn reduce_matrix(&self, local: &[f64]) -> Csr {
@@ -149,6 +260,103 @@ impl AssemblyContext {
     /// Coefficient interpolated from a nodal (scalar) field.
     pub fn coeff_nodal(&self, u: &[f64]) -> Coefficient {
         Coefficient::from_nodal(u, &self.mesh.cells, &self.tab)
+    }
+}
+
+/// A separable batched-assembly plan: shared-topology Map-Reduce over `S`
+/// problem instances.
+///
+/// For forms whose local matrix factors as `K_local[e] = c_e · U_e` with a
+/// coefficient-independent `U_e` (P1 diffusion/elasticity, SIMP-scaled unit
+/// stiffness), Map and Reduce collapse into one *weighted gather* per
+/// instance: the unit values are gathered into routing order once, and each
+/// assembly then costs a single pass over the `nnz` targets,
+/// `K_s[p] = Σ_{j∈p} U[j] · c_s[elem(j)]`. Geometry, basis contraction and
+/// routing index reads are all amortized across the batch — this is what
+/// makes re-assembly with new coefficients scale with batch size instead of
+/// call count (the paper's batch-generation regime, Fig B.4 / §B.4).
+///
+/// Per-term products and summation order match the native const-gradient
+/// Map arms + [`Routing::reduce_matrix_into`], so every instance is
+/// bitwise-identical to a sequential [`AssemblyContext::assemble_matrix`].
+pub struct BatchedAssembly<'c> {
+    ctx: &'c AssemblyContext,
+    /// Unit local values gathered into `routing.mat_src` order.
+    weights: Vec<f64>,
+    /// Owning element of each gather source.
+    src_elem: Vec<u32>,
+}
+
+impl BatchedAssembly<'_> {
+    /// Per-element scalars `c_e = Σ_q |det J| w · coeff(e, q)` — the
+    /// coefficient collapse of the separable Map stage (bitwise-identical
+    /// to the hoisted sum in the native const-gradient arms).
+    pub fn element_scalars(&self, coeff: &Coefficient) -> Vec<f64> {
+        let geo = &self.ctx.geo;
+        let weights_q = &self.ctx.tab.weights;
+        let nq = geo.q;
+        let ne = self.ctx.n_cells();
+        let mut out = Vec::with_capacity(ne);
+        for e in 0..ne {
+            let mut c = 0.0;
+            for q in 0..nq {
+                c += geo.detj[e * nq + q] * weights_q[q] * coeff.at(e, q, nq);
+            }
+            out.push(c);
+        }
+        out
+    }
+
+    /// Assemble `S` instances from flat `S × E` per-element scalars into a
+    /// [`CsrBatch`] on the shared pattern — one fused parallel region over
+    /// all `S × nnz` targets.
+    pub fn assemble_scaled(&self, scalars: &[f64]) -> CsrBatch {
+        let ne = self.ctx.n_cells();
+        assert!(ne > 0, "empty mesh");
+        assert_eq!(scalars.len() % ne, 0, "scalars must be S × E flat");
+        let n_instances = scalars.len() / ne;
+        let routing = &self.ctx.routing;
+        let nnz = routing.nnz();
+        let mut data = vec![0.0; n_instances * nnz];
+        let threads = threadpool::default_threads();
+        threadpool::for_each_row_mut(&mut data, 1, threads, |r, out| {
+            let (s, p) = (r / nnz, r % nnz);
+            let cs = &scalars[s * ne..(s + 1) * ne];
+            let mut acc = 0.0;
+            for j in routing.mat_ptr[p]..routing.mat_ptr[p + 1] {
+                acc += self.weights[j] * cs[self.src_elem[j] as usize];
+            }
+            out[0] = acc;
+        });
+        routing.csr_batch(data, n_instances)
+    }
+
+    /// Assemble `S` instances from per-instance coefficient fields. The
+    /// coefficient collapse runs as one parallel pass over the fused
+    /// `S × E` scalar range (same arithmetic as
+    /// [`BatchedAssembly::element_scalars`]).
+    pub fn assemble(&self, coeffs: &[Coefficient]) -> CsrBatch {
+        let ne = self.ctx.n_cells();
+        let geo = &self.ctx.geo;
+        let weights_q = &self.ctx.tab.weights;
+        let nq = geo.q;
+        let mut scalars = vec![0.0; coeffs.len() * ne];
+        let threads = threadpool::default_threads();
+        threadpool::for_each_row_mut(&mut scalars, 1, threads, |r, out| {
+            let (s, e) = (r / ne, r % ne);
+            let coeff = &coeffs[s];
+            let mut c = 0.0;
+            for q in 0..nq {
+                c += geo.detj[e * nq + q] * weights_q[q] * coeff.at(e, q, nq);
+            }
+            out[0] = c;
+        });
+        self.assemble_scaled(&scalars)
+    }
+
+    /// Single-instance convenience through the amortized plan.
+    pub fn assemble_one(&self, coeff: &Coefficient) -> Csr {
+        self.assemble(std::slice::from_ref(coeff)).instance(0)
     }
 }
 
@@ -274,6 +482,95 @@ mod tests {
         ctx.assemble_matrix_into(&form, &mut k.data);
         let fresh = ctx.assemble_matrix(&form);
         assert!(k.frob_distance(&fresh) < 1e-14);
+    }
+
+    #[test]
+    fn batched_generic_assembly_matches_sequential() {
+        let mut m = unit_square_tri(5);
+        jitter(&mut m, 0.15, 11);
+        let ctx = AssemblyContext::new(&m, 1);
+        let forms = vec![
+            BilinearForm::Diffusion { rho: ctx.coeff_fn(|p| 1.0 + p[0]) },
+            BilinearForm::Mass { rho: Coefficient::Const(2.0) },
+            BilinearForm::Diffusion { rho: Coefficient::Const(0.5) },
+        ];
+        let batch = ctx.assemble_matrix_batch(&forms);
+        batch.check_invariants().unwrap();
+        assert_eq!(batch.n_instances, 3);
+        for (s, form) in forms.iter().enumerate() {
+            let seq = ctx.assemble_matrix(form);
+            assert_eq!(batch.indices, seq.indices, "instance {s} pattern");
+            assert_eq!(batch.values(s), &seq.data[..], "instance {s} values");
+        }
+    }
+
+    #[test]
+    fn separable_plan_matches_sequential_diffusion() {
+        let mut m = unit_square_tri(6);
+        jitter(&mut m, 0.2, 3);
+        let ctx = AssemblyContext::new(&m, 1);
+        let plan = ctx
+            .batched(&BilinearForm::Diffusion { rho: Coefficient::Const(1.0) })
+            .expect("P1 triangles are separable");
+        let coeffs: Vec<Coefficient> = (0..4)
+            .map(|s| ctx.coeff_fn(move |p| 1.0 + 0.3 * s as f64 + p[0] * p[1]))
+            .collect();
+        let batch = plan.assemble(&coeffs);
+        for (s, rho) in coeffs.iter().enumerate() {
+            let seq = ctx.assemble_matrix(&BilinearForm::Diffusion { rho: rho.clone() });
+            assert_eq!(batch.indices, seq.indices);
+            assert_eq!(batch.values(s), &seq.data[..], "instance {s}");
+        }
+    }
+
+    #[test]
+    fn separable_plan_matches_sequential_elasticity() {
+        let m = unit_cube_tet(2);
+        let ctx = AssemblyContext::new(&m, 3);
+        let (lambda, mu) = (0.5769, 0.3846);
+        let proto = BilinearForm::Elasticity {
+            lambda,
+            mu,
+            e_mod: Coefficient::Const(1.0),
+        };
+        let plan = ctx.batched(&proto).expect("P1 tets are separable");
+        let coeffs =
+            vec![Coefficient::Const(1.0), ctx.coeff_fn(|p| 1.0 + 0.5 * p[2])];
+        let batch = plan.assemble(&coeffs);
+        for (s, e_mod) in coeffs.iter().enumerate() {
+            let seq = ctx.assemble_matrix(&BilinearForm::Elasticity {
+                lambda,
+                mu,
+                e_mod: e_mod.clone(),
+            });
+            assert_eq!(batch.values(s), &seq.data[..], "instance {s}");
+        }
+    }
+
+    #[test]
+    fn separable_plan_unavailable_for_quads() {
+        // Q1 gradients vary over the cell: no constant-gradient factoring.
+        let m = crate::mesh::structured::rect_quad(4, 2, 4.0, 2.0);
+        let ctx = AssemblyContext::new(&m, 1);
+        assert!(ctx
+            .batched(&BilinearForm::Diffusion { rho: Coefficient::Const(1.0) })
+            .is_none());
+    }
+
+    #[test]
+    fn batched_vector_assembly_matches_sequential() {
+        let m = unit_cube_tet(2);
+        let ctx = AssemblyContext::new(&m, 1);
+        let forms = vec![
+            LinearForm::Source { f: ctx.coeff_fn(|p| p[0] + p[1]) },
+            LinearForm::Source { f: Coefficient::Const(3.0) },
+        ];
+        let fbatch = ctx.assemble_vector_batch(&forms);
+        let n = ctx.n_dofs();
+        for (s, form) in forms.iter().enumerate() {
+            let seq = ctx.assemble_vector(form);
+            assert_eq!(&fbatch[s * n..(s + 1) * n], &seq[..], "instance {s}");
+        }
     }
 
     #[test]

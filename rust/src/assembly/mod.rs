@@ -21,5 +21,5 @@ pub mod routing;
 pub mod scatter;
 
 pub use forms::{BilinearForm, Coefficient, LinearForm};
-pub use map_reduce::AssemblyContext;
+pub use map_reduce::{AssemblyContext, BatchedAssembly};
 pub use routing::Routing;

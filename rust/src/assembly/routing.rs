@@ -12,7 +12,7 @@
 use anyhow::Result;
 
 use crate::fem::dofmap::DofMap;
-use crate::sparse::Csr;
+use crate::sparse::{Csr, CsrBatch};
 use crate::util::threadpool;
 
 /// Precomputed routing from local tensors to the global CSR matrix and
@@ -187,6 +187,77 @@ impl Routing {
         out
     }
 
+    /// Batched Sparse-Reduce: `S` local tensors (`local` is the fused
+    /// `S × E × kl²` buffer) into `S × nnz` value arrays sharing this
+    /// routing's pattern. One parallel region covers the whole `S × nnz`
+    /// target range, and per-target summation order matches
+    /// [`Routing::reduce_matrix_into`] exactly, so instance `s` of the
+    /// result is bitwise-identical to a sequential reduce of its slice.
+    pub fn reduce_matrix_batch_into(&self, local: &[f64], n_instances: usize, data: &mut [f64]) {
+        let total = self.mat_src.len();
+        let nnz = self.nnz();
+        assert_eq!(local.len(), n_instances * total, "local tensor size mismatch");
+        assert_eq!(data.len(), n_instances * nnz);
+        let threads = threadpool::default_threads();
+        threadpool::for_each_row_mut(data, 1, threads, |r, out| {
+            let (s, p) = (r / nnz, r % nnz);
+            let inst = &local[s * total..(s + 1) * total];
+            let mut acc = 0.0;
+            for &src in &self.mat_src[self.mat_ptr[p]..self.mat_ptr[p + 1]] {
+                acc += inst[src as usize];
+            }
+            out[0] = acc;
+        });
+    }
+
+    /// Wrap `S × nnz` value arrays in a [`CsrBatch`] on this routing's
+    /// symbolic pattern (the single place the shared pattern is cloned).
+    pub fn csr_batch(&self, data: Vec<f64>, n_instances: usize) -> CsrBatch {
+        assert_eq!(data.len(), n_instances * self.nnz());
+        CsrBatch {
+            nrows: self.n_dofs,
+            ncols: self.n_dofs,
+            indptr: self.pattern_indptr.clone(),
+            indices: self.pattern_indices.clone(),
+            n_instances,
+            data,
+        }
+    }
+
+    /// Batched matrix reduce into a fresh [`CsrBatch`] (pattern cloned once
+    /// for all `S` instances).
+    pub fn reduce_matrix_batch(&self, local: &[f64], n_instances: usize) -> CsrBatch {
+        let mut data = vec![0.0; n_instances * self.nnz()];
+        self.reduce_matrix_batch_into(local, n_instances, &mut data);
+        self.csr_batch(data, n_instances)
+    }
+
+    /// Batched vector reduce: `S × E × kl` local vectors into `S × N`
+    /// global vectors (flat, instance-major), one fused parallel region.
+    pub fn reduce_vector_batch_into(&self, local: &[f64], n_instances: usize, out: &mut [f64]) {
+        let total = self.vec_src.len();
+        let n = self.n_dofs;
+        assert_eq!(local.len(), n_instances * total, "local vector size mismatch");
+        assert_eq!(out.len(), n_instances * n);
+        let threads = threadpool::default_threads();
+        threadpool::for_each_row_mut(out, 1, threads, |r, o| {
+            let (s, i) = (r / n, r % n);
+            let inst = &local[s * total..(s + 1) * total];
+            let mut acc = 0.0;
+            for &src in &self.vec_src[self.vec_ptr[i]..self.vec_ptr[i + 1]] {
+                acc += inst[src as usize];
+            }
+            o[0] = acc;
+        });
+    }
+
+    /// Allocating batched vector reduce (`S × N` flat result).
+    pub fn reduce_vector_batch(&self, local: &[f64], n_instances: usize) -> Vec<f64> {
+        let mut out = vec![0.0; n_instances * self.n_dofs];
+        self.reduce_vector_batch_into(local, n_instances, &mut out);
+        out
+    }
+
     /// The *transpose* action of `S_mat`: scatter global CSR values back to
     /// local positions (`vec(K_local) = S_matᵀ v`). This is the backward
     /// pass of Sparse-Reduce — a pure gather, used by TensorOpt's adjoint
@@ -288,6 +359,38 @@ mod tests {
         r.check_invariants().unwrap();
         assert_eq!(r.n_dofs, 3 * m.n_nodes());
         assert_eq!(r.mat_src.len(), m.n_cells() * 144);
+    }
+
+    #[test]
+    fn batched_matrix_reduce_matches_sequential() {
+        let m = unit_square_tri(3);
+        let dm = DofMap::scalar(&m);
+        let r = Routing::build(&dm);
+        let total = m.n_cells() * 9;
+        // Three instances with distinct deterministic values.
+        let local: Vec<f64> = (0..3 * total).map(|i| (i % 17) as f64 - 8.0).collect();
+        let batch = r.reduce_matrix_batch(&local, 3);
+        batch.check_invariants().unwrap();
+        assert_eq!(batch.n_instances, 3);
+        for s in 0..3 {
+            let seq = r.reduce_matrix(&local[s * total..(s + 1) * total]);
+            assert_eq!(batch.indices, seq.indices, "instance {s} pattern");
+            assert_eq!(batch.values(s), &seq.data[..], "instance {s} values");
+        }
+    }
+
+    #[test]
+    fn batched_vector_reduce_matches_sequential() {
+        let m = unit_square_tri(3);
+        let dm = DofMap::scalar(&m);
+        let r = Routing::build(&dm);
+        let total = m.n_cells() * 3;
+        let local: Vec<f64> = (0..2 * total).map(|i| (i as f64).sin()).collect();
+        let batch = r.reduce_vector_batch(&local, 2);
+        for s in 0..2 {
+            let seq = r.reduce_vector(&local[s * total..(s + 1) * total]);
+            assert_eq!(&batch[s * r.n_dofs..(s + 1) * r.n_dofs], &seq[..]);
+        }
     }
 
     #[test]

@@ -9,6 +9,21 @@ pub struct SolveRequest {
     pub f_nodal: Vec<f64>,
 }
 
+/// A solve request carrying its *own* diffusion coefficient field in
+/// addition to the right-hand side — the multi-instance regime where every
+/// sample is a different operator on the shared mesh topology (material
+/// sampling, UQ sweeps, operator-learning data generation). Served by
+/// [`super::batcher::BatchSolver::solve_varcoeff_batch`], which assembles
+/// all `S` operators through one shared-topology Batch-Map + Sparse-Reduce.
+#[derive(Clone, Debug)]
+pub struct VarCoeffRequest {
+    pub id: u64,
+    /// Nodal diffusion coefficient (must stay strictly positive).
+    pub rho_nodal: Vec<f64>,
+    /// Nodal source values.
+    pub f_nodal: Vec<f64>,
+}
+
 /// The answer.
 #[derive(Clone, Debug)]
 pub struct SolveResponse {

@@ -13,6 +13,6 @@ pub mod api;
 pub mod batcher;
 pub mod server;
 
-pub use api::{SolveRequest, SolveResponse};
+pub use api::{SolveRequest, SolveResponse, VarCoeffRequest};
 pub use batcher::BatchSolver;
 pub use server::BatchServer;

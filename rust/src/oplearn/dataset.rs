@@ -68,15 +68,15 @@ impl PdeSetup {
             ctx.routing.nnz() == info.meta["nnz"] as usize,
             "mesh/artifact nnz mismatch"
         );
-        let kmat = ctx.assemble_matrix(&BilinearForm::Diffusion {
-            rho: Coefficient::Const(1.0),
-        });
-        let mmat = ctx.assemble_matrix(&BilinearForm::Mass {
-            rho: Coefficient::Const(1.0),
-        });
-        let mut rows_idx = Vec::with_capacity(kmat.nnz());
-        for r in 0..kmat.nrows {
-            for _ in kmat.indptr[r]..kmat.indptr[r + 1] {
+        // Stiffness + mass share the topology: one batched Map-Reduce
+        // produces both value arrays on a single symbolic pattern.
+        let km = ctx.assemble_matrix_batch(&[
+            BilinearForm::Diffusion { rho: Coefficient::Const(1.0) },
+            BilinearForm::Mass { rho: Coefficient::Const(1.0) },
+        ]);
+        let mut rows_idx = Vec::with_capacity(km.nnz());
+        for r in 0..km.nrows {
+            for _ in km.indptr[r]..km.indptr[r + 1] {
                 rows_idx.push(r);
             }
         }
@@ -96,11 +96,11 @@ impl PdeSetup {
         let deg_inv: Vec<f64> = deg.iter().map(|&d| 1.0 / d.max(1.0)).collect();
         Ok(PdeSetup {
             kind,
-            ctx,
-            mvals: mmat.data,
-            kvals: kmat.data,
+            mvals: km.values(1).to_vec(),
+            kvals: km.values(0).to_vec(),
             rows_idx,
-            cols_idx: kmat.indices,
+            cols_idx: km.indices,
+            ctx,
             mask,
             edge_src,
             edge_dst,

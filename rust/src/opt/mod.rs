@@ -20,4 +20,4 @@ pub mod topopt;
 
 pub use mma::{Mma, OcUpdate};
 pub use simp::SimpProblem;
-pub use topopt::{run_topopt, TopOptConfig, TopOptResult};
+pub use topopt::{run_topopt, run_topopt_batch, TopOptConfig, TopOptResult};

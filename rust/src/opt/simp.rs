@@ -10,10 +10,10 @@ use crate::bc::{condense, DirichletBc};
 use crate::mesh::structured::rect_quad;
 use crate::mesh::{marker, Mesh};
 use crate::solver::{cg, JacobiPrecond, SolverConfig};
-use crate::sparse::Csr;
+use crate::sparse::{Csr, CsrBatch};
 
 /// Material and discretization parameters (paper defaults).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SimpConfig {
     pub nx: usize,
     pub ny: usize,
@@ -140,6 +140,35 @@ impl SimpProblem {
         self.ctx.reduce_matrix(&local)
     }
 
+    /// Shared-topology assembly plan over the cached unit-modulus locals:
+    /// routing-aligned gather weights built once, after which every `K(ρ)`
+    /// instance costs one weighted gather over the shared pattern (Map and
+    /// Reduce fused). Long-lived drivers (e.g. [`super::topopt::run_topopt_batch`])
+    /// build this once and reuse it across iterations.
+    pub fn batched_plan(&self) -> crate::assembly::BatchedAssembly<'_> {
+        self.ctx.batched_from_unit_local(&self.k0_local)
+    }
+
+    /// Flat `S × E` SIMP moduli for a set of density fields — the scalar
+    /// input of [`SimpProblem::batched_plan`]'s `assemble_scaled`.
+    pub fn moduli_flat(&self, rhos: &[Vec<f64>]) -> Vec<f64> {
+        let ne = self.n_elems();
+        let mut scalars = Vec::with_capacity(rhos.len() * ne);
+        for rho in rhos {
+            assert_eq!(rho.len(), ne, "density field length");
+            scalars.extend(self.e_of_rho(rho));
+        }
+        scalars
+    }
+
+    /// One-shot batched `K(ρ)` for `S` density fields (plan built per
+    /// call — hold [`SimpProblem::batched_plan`] to amortize it across
+    /// repeated batches). Instance `s` is bitwise-identical to
+    /// `assemble_k(&rhos[s])`.
+    pub fn assemble_k_batch(&self, rhos: &[Vec<f64>]) -> CsrBatch {
+        self.batched_plan().assemble_scaled(&self.moduli_flat(rhos))
+    }
+
     /// Solve the state equation; returns (u_full, iterations). `K(ρ)` is
     /// SPD, so preconditioned CG is the right solver — BiCGSTAB stalls at
     /// the extreme (Emax/Emin = 10³) stiffness contrast SIMP develops.
@@ -218,6 +247,22 @@ mod tests {
             p.compliance(&u_full) < p.compliance(&u_half),
             "stiffer structure must be more compliant-efficient"
         );
+    }
+
+    #[test]
+    fn batched_k_matches_sequential_assembly() {
+        let p = small();
+        let ne = p.n_elems();
+        let rhos: Vec<Vec<f64>> = (0..3)
+            .map(|s| (0..ne).map(|e| 0.2 + 0.1 * s as f64 + 0.005 * (e % 9) as f64).collect())
+            .collect();
+        let batch = p.assemble_k_batch(&rhos);
+        batch.check_invariants().unwrap();
+        for (s, rho) in rhos.iter().enumerate() {
+            let seq = p.assemble_k(rho);
+            assert_eq!(batch.indices, seq.indices, "instance {s} pattern");
+            assert_eq!(batch.values(s), &seq.data[..], "instance {s} values");
+        }
     }
 
     #[test]

@@ -118,6 +118,111 @@ pub fn run_topopt(cfg: &TopOptConfig) -> Result<TopOptResult> {
     })
 }
 
+/// Run `S` SIMP problems in lockstep on one shared mesh topology: each
+/// iteration re-assembles ALL `S` stiffness matrices through one
+/// shared-topology batched Map-Reduce ([`SimpProblem::assemble_k_batch`])
+/// instead of `S` scalar assemblies — the multi-start / sweep workload
+/// (varying volume fraction, optimizer, filter radius, move limit) served
+/// at batch cost. Configs must share `simp` and `iters`; results are
+/// identical to running [`run_topopt`] per config (setup/loop timings are
+/// shared across the batch).
+pub fn run_topopt_batch(cfgs: &[TopOptConfig]) -> Result<Vec<TopOptResult>> {
+    anyhow::ensure!(!cfgs.is_empty(), "empty topopt batch");
+    let base = &cfgs[0];
+    for cfg in cfgs {
+        anyhow::ensure!(cfg.simp == base.simp, "topopt batch must share the SIMP problem");
+        anyhow::ensure!(cfg.iters == base.iters, "topopt batch must share the iteration count");
+        anyhow::ensure!(
+            !cfg.rebuild_setup_each_iter,
+            "the rebuild baseline is a per-problem archetype"
+        );
+    }
+
+    struct Lane {
+        rho: Vec<f64>,
+        mma: Mma,
+        oc: OcUpdate,
+        filt: SensitivityFilter,
+        history: Vec<f64>,
+        snapshots: Vec<(usize, Vec<f64>)>,
+        solver_iters: usize,
+    }
+
+    let mut sw = Stopwatch::new();
+    sw.start("setup");
+    let problem = SimpProblem::new(base.simp.clone());
+    // Gather weights built once; every iteration's S-instance re-assembly
+    // is then a weighted gather over the shared pattern.
+    let plan = problem.batched_plan();
+    let ne = problem.n_elems();
+    let h = base.simp.lx / base.simp.nx as f64;
+    let mut lanes: Vec<Lane> = cfgs
+        .iter()
+        .map(|cfg| Lane {
+            rho: vec![cfg.vol_frac; ne],
+            mma: Mma::new(ne, cfg.move_limit),
+            oc: OcUpdate {
+                move_limit: cfg.move_limit.max(0.1),
+                ..OcUpdate::default()
+            },
+            filt: SensitivityFilter::new(&problem.mesh, cfg.rmin_h * h),
+            history: Vec::with_capacity(cfg.iters),
+            snapshots: Vec::new(),
+            solver_iters: 0,
+        })
+        .collect();
+    sw.stop();
+
+    // One pattern materialization shared by every lane and iteration —
+    // only the values change per solve.
+    let mut k = problem.ctx.pattern_matrix();
+    sw.start("loop");
+    for it in 0..base.iters {
+        // One shared-topology batched assembly for the whole lane set.
+        let mut moduli = Vec::with_capacity(lanes.len() * ne);
+        for lane in &lanes {
+            moduli.extend(problem.e_of_rho(&lane.rho));
+        }
+        let kbatch = plan.assemble_scaled(&moduli);
+        for (s, (lane, cfg)) in lanes.iter_mut().zip(cfgs).enumerate() {
+            k.data.copy_from_slice(kbatch.values(s));
+            let (u, iters) = problem.solve_state(&k, None)?;
+            lane.solver_iters += iters;
+            let c = problem.compliance(&u);
+            lane.history.push(c);
+
+            let dc = adjoint::sensitivity_closed_form(&problem, &lane.rho, &u);
+            let dc_f = lane.filt.apply(&lane.rho, &dc);
+
+            lane.rho = if cfg.optimizer == "oc" {
+                lane.oc.update(&lane.rho, &dc_f, cfg.vol_frac, 1e-3)
+            } else {
+                let mean: f64 = lane.rho.iter().sum::<f64>() / ne as f64;
+                let g = mean / cfg.vol_frac - 1.0;
+                let dgdx = vec![1.0 / (cfg.vol_frac * ne as f64); ne];
+                lane.mma.update(&lane.rho, &dc_f, g, &dgdx, 1e-3, 1.0)
+            };
+            if it % (cfg.iters / 4).max(1) == 0 || it + 1 == cfg.iters {
+                lane.snapshots.push((it, lane.rho.clone()));
+            }
+        }
+    }
+    sw.stop();
+
+    let (setup_s, loop_s) = (sw.total("setup"), sw.total("loop"));
+    Ok(lanes
+        .into_iter()
+        .map(|lane| TopOptResult {
+            rho: lane.rho,
+            compliance_history: lane.history,
+            setup_s,
+            loop_s,
+            total_solver_iters: lane.solver_iters,
+            snapshots: lane.snapshots,
+        })
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +270,32 @@ mod tests {
         let (ca, cb) = (a.final_compliance(), b.final_compliance());
         let rel = (ca - cb).abs() / ca.min(cb);
         assert!(rel < 0.10, "OC {ca} vs MMA {cb} ({rel:.3})");
+    }
+
+    #[test]
+    fn batched_lockstep_matches_individual_runs() {
+        let cfg_a = small_cfg("oc", 6);
+        let mut cfg_b = small_cfg("mma", 6);
+        cfg_b.vol_frac = 0.4;
+        let batch = run_topopt_batch(&[cfg_a.clone(), cfg_b.clone()]).unwrap();
+        assert_eq!(batch.len(), 2);
+        let solo_a = run_topopt(&cfg_a).unwrap();
+        let solo_b = run_topopt(&cfg_b).unwrap();
+        for (lane, solo) in batch.iter().zip([&solo_a, &solo_b]) {
+            assert_eq!(lane.compliance_history.len(), solo.compliance_history.len());
+            for (x, y) in lane.compliance_history.iter().zip(&solo.compliance_history) {
+                assert!((x - y).abs() <= 1e-9 * x.abs().max(1.0), "{x} vs {y}");
+            }
+            assert!(crate::util::rel_l2(&lane.rho, &solo.rho) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn batched_topopt_rejects_mismatched_meshes() {
+        let cfg_a = small_cfg("oc", 4);
+        let mut cfg_b = small_cfg("oc", 4);
+        cfg_b.simp.nx = 12;
+        assert!(run_topopt_batch(&[cfg_a, cfg_b]).is_err());
     }
 
     #[test]

@@ -1,25 +1,49 @@
 //! The [`Runtime`]: PJRT CPU client + compiled-executable cache + typed
 //! execution helpers.
+//!
+//! The real implementation needs the vendored `xla` crate and is gated
+//! behind the `pjrt` cargo feature. Without the feature (the default,
+//! offline build) a stub `Runtime` with the same API surface is compiled:
+//! its constructor always returns an error, so every caller that handles
+//! missing artifacts (`Runtime::new().ok()` / `runtime_or_skip()`) degrades
+//! to the native Map path exactly as if `make artifacts` had not been run.
 
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::PathBuf;
-use std::rc::Rc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use super::manifest::Manifest;
+
+/// A typed input operand (f32 tensors, i32 index arrays).
+pub enum Operand<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// f64 → f32 narrowing for the artifact path.
+pub fn to_f32(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&x| x as f32).collect()
+}
+
+/// f32 → f64 widening back to the native path.
+pub fn to_f64(xs: &[f32]) -> Vec<f64> {
+    xs.iter().map(|&x| x as f64).collect()
+}
 
 /// Owns the PJRT client and all compiled executables. Not `Send`/`Sync`
 /// (the underlying client is `Rc`-based) — construct once per coordinator
 /// thread.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
     dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    cache: std::cell::RefCell<
+        std::collections::HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>,
+    >,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a runtime over the default artifact directory.
     pub fn new() -> Result<Runtime> {
@@ -28,13 +52,14 @@ impl Runtime {
 
     /// Create a runtime over an explicit artifact directory.
     pub fn with_dir(dir: PathBuf) -> Result<Runtime> {
+        use anyhow::Context as _;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let manifest = Manifest::load(&dir)?;
         Ok(Runtime {
             client,
             manifest,
             dir,
-            cache: RefCell::new(HashMap::new()),
+            cache: std::cell::RefCell::new(std::collections::HashMap::new()),
         })
     }
 
@@ -46,7 +71,8 @@ impl Runtime {
     /// Load + compile an artifact (cached). This is the paper's JIT-free
     /// agility point: compilation happens once per (kind, bucket), never
     /// per mesh.
-    pub fn load(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    pub fn load(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        use anyhow::Context as _;
         if let Some(exe) = self.cache.borrow().get(name) {
             return Ok(exe.clone());
         }
@@ -54,7 +80,7 @@ impl Runtime {
         let proto = xla::HloModuleProto::from_text_file(&info.file)
             .with_context(|| format!("parsing HLO text {}", info.file.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
+        let exe = std::rc::Rc::new(
             self.client
                 .compile(&comp)
                 .with_context(|| format!("compiling artifact {name}"))?,
@@ -151,18 +177,56 @@ impl Runtime {
     }
 }
 
-/// A typed input operand.
-pub enum Operand<'a> {
-    F32(&'a [f32]),
-    I32(&'a [i32]),
+/// Stub runtime compiled when the `pjrt` feature is off: construction
+/// always fails with an actionable message, so artifact-dependent code
+/// paths self-skip. The struct itself exists only so `&Runtime`-taking
+/// APIs (mapper, trainers, experiment drivers) compile unchanged.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    pub manifest: Manifest,
+    dir: PathBuf,
 }
 
-/// f64 → f32 narrowing for the artifact path.
-pub fn to_f32(xs: &[f64]) -> Vec<f32> {
-    xs.iter().map(|&x| x as f32).collect()
-}
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Create a runtime over the default artifact directory.
+    pub fn new() -> Result<Runtime> {
+        Self::with_dir(super::artifact_dir())
+    }
 
-/// f32 → f64 widening back to the native path.
-pub fn to_f64(xs: &[f32]) -> Vec<f64> {
-    xs.iter().map(|&x| x as f64).collect()
+    /// Create a runtime over an explicit artifact directory. Always errors
+    /// in the stub build — with the manifest error when artifacts are
+    /// missing (the common case), or a feature hint when they exist.
+    pub fn with_dir(dir: PathBuf) -> Result<Runtime> {
+        let _manifest = Manifest::load(&dir)?;
+        anyhow::bail!(
+            "PJRT runtime unavailable: built without the `pjrt` cargo feature \
+             (artifacts exist in {}, but no XLA client is linked; rebuild with \
+             `--features pjrt` and the vendored `xla` crate)",
+            dir.display()
+        )
+    }
+
+    /// Artifact directory this runtime reads from.
+    pub fn dir(&self) -> &PathBuf {
+        &self.dir
+    }
+
+    /// Number of compiled executables currently cached (always 0).
+    pub fn cached(&self) -> usize {
+        0
+    }
+
+    /// Drop all cached executables (no-op).
+    pub fn clear_cache(&self) {}
+
+    /// Execute an artifact on f32 inputs (always errors in the stub).
+    pub fn execute_f32(&self, name: &str, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!("PJRT runtime unavailable (`pjrt` feature disabled): artifact {name}")
+    }
+
+    /// Execute with mixed f32/i32 inputs (always errors in the stub).
+    pub fn execute(&self, name: &str, _inputs: &[Operand<'_>]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!("PJRT runtime unavailable (`pjrt` feature disabled): artifact {name}")
+    }
 }

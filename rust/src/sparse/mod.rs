@@ -4,10 +4,12 @@
 //! storage with deterministic construction, SpMV/SpMM products, and a dense
 //! LU fallback for small systems (MMA subproblems, reference checks).
 
+pub mod batch;
 pub mod coo;
 pub mod csr;
 pub mod dense;
 
+pub use batch::CsrBatch;
 pub use coo::Coo;
 pub use csr::Csr;
 pub use dense::Dense;
