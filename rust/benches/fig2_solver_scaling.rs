@@ -1,17 +1,29 @@
 //! Bench: Fig 2 (a,b) — assemble+solve scaling with DoFs on 3D Poisson and
 //! 3D elasticity, across assembly strategies (scatter-add baseline,
-//! TensorGalerkin native, PJRT-artifact Map, recompile-per-solve).
+//! TensorGalerkin native, PJRT-artifact Map, recompile-per-solve) — plus
+//! the blocked-solve comparison: S=16 varcoeff instances solved by one
+//! batched condensation + lockstep `cg_batch` vs S looped
+//! condense+`cg` pipelines. The looped-vs-blocked speedup is written to
+//! `target/BENCH_solver.json` so the solve-path perf trajectory is tracked
+//! across PRs.
 //!
-//! `cargo bench --bench fig2_solver_scaling [-- --sizes 4,8,12,16]`
+//! `cargo bench --bench fig2_solver_scaling [-- --sizes 4,8,12,16 --batch 16 --batch-n 10]`
 
+use tensor_galerkin::assembly::{AssemblyContext, BilinearForm, LinearForm};
+use tensor_galerkin::bc::{condense, condense_batch, DirichletBc};
 use tensor_galerkin::experiments::fig2;
+use tensor_galerkin::mesh::structured::unit_cube_tet;
 use tensor_galerkin::runtime::Runtime;
+use tensor_galerkin::solver::{cg, cg_batch, JacobiPrecond, SolverConfig};
 use tensor_galerkin::util::bench::Bench;
 use tensor_galerkin::util::cli::Args;
+use tensor_galerkin::util::rng::Rng;
 
 fn main() {
     let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
     let sizes = args.get_usize_list("sizes", &[4, 8, 12, 16]);
+    let s_batch = args.get_usize("batch", 16);
+    let batch_n = args.get_usize("batch-n", 10);
     let runtime = Runtime::new().ok();
     if runtime.is_none() {
         eprintln!("(artifacts missing: pjrt/recompile variants skipped)");
@@ -35,6 +47,63 @@ fn main() {
                 }
             }
         }
+    }
+
+    // --- Looped vs blocked solve: S varcoeff Poisson instances on one 3D
+    // topology. Both sides share the already-assembled CsrBatch, so the
+    // comparison isolates condensation + CG (the phase this PR blocks).
+    let mesh = unit_cube_tet(batch_n);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    let n = ctx.n_dofs();
+    let mut rng = Rng::new(4242);
+    let forms: Vec<BilinearForm> = (0..s_batch)
+        .map(|_| {
+            let rho: Vec<f64> = (0..mesh.n_nodes()).map(|_| rng.uniform_in(0.5, 2.0)).collect();
+            BilinearForm::Diffusion { rho: ctx.coeff_nodal(&rho) }
+        })
+        .collect();
+    let kbatch = ctx.assemble_matrix_batch(&forms);
+    let lforms: Vec<LinearForm> = (0..s_batch)
+        .map(|_| {
+            let f: Vec<f64> = (0..mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            LinearForm::Source { f: ctx.coeff_nodal(&f) }
+        })
+        .collect();
+    let fbatch = ctx.assemble_vector_batch(&lforms);
+    let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
+    let cfg = SolverConfig::default();
+    let meta = [("n_dofs", n as f64), ("batch", s_batch as f64)];
+
+    // Looped baseline mirrors the pre-PR production loop exactly: one
+    // pattern materialization, values copied per instance, scalar
+    // condense + Jacobi CG per instance.
+    let looped_name = format!("poisson3d/solve_looped_s{s_batch}/dofs{n}");
+    let mut k_looped = ctx.pattern_matrix();
+    bench.bench(&looped_name, &meta, || {
+        let mut total_iters = 0usize;
+        for s in 0..s_batch {
+            k_looped.data.copy_from_slice(kbatch.values(s));
+            let sys = condense(&k_looped, &fbatch[s * n..(s + 1) * n], &bc);
+            let pc = JacobiPrecond::new(&sys.k);
+            let (_, stats) = cg(&sys.k, &sys.rhs, &pc, &cfg);
+            total_iters += stats.iterations;
+        }
+        total_iters
+    });
+    let blocked_name = format!("poisson3d/solve_blocked_s{s_batch}/dofs{n}");
+    bench.bench(&blocked_name, &meta, || {
+        let red = condense_batch(&kbatch, &fbatch, &bc);
+        let (_, stats) = cg_batch(&red.k, &red.rhs, &cfg);
+        stats.iter().map(|st| st.iterations).sum::<usize>()
+    });
+
+    if let Some(speedup) =
+        bench.write_speedup_json("target/BENCH_solver.json", &looped_name, &blocked_name, &meta)
+    {
+        println!(
+            "solve S={s_batch}: blocked condense+cg_batch is {speedup:.2}x looped condense+cg \
+             (record: target/BENCH_solver.json)"
+        );
     }
     bench.finish();
 }

@@ -6,8 +6,15 @@
 //! (reducing the linear system — "hard constraints", §B.2.2), so this
 //! module is shared by the solver, the neural-solver residual and the
 //! topology-optimization pipeline.
+//!
+//! For the multi-instance workloads ([`crate::sparse::CsrBatch`]: `S`
+//! operators on one shared sparsity pattern) the condensation bookkeeping
+//! is itself a function of the pattern alone, so [`CondensePlan`] computes
+//! the free-DoF symbolic mapping ONCE and [`condense_batch`] applies it to
+//! all `S` value arrays, producing a [`ReducedBatch`] whose per-instance
+//! numbers are bitwise identical to `S` scalar [`condense`] calls.
 
-use crate::sparse::Csr;
+use crate::sparse::{Csr, CsrBatch};
 
 /// A set of Dirichlet constraints: `dofs[i] ↦ values[i]`.
 #[derive(Clone, Debug, Default)]
@@ -64,78 +71,282 @@ pub struct ReducedSystem {
     n_full: usize,
 }
 
+/// Insert prescribed boundary values and a free-DoF solution into a full
+/// DoF vector — the one expansion kernel shared by the scalar and batched
+/// reduced systems.
+fn expand_free(free: &[usize], bc: &DirichletBc, n_full: usize, u_free: &[f64]) -> Vec<f64> {
+    assert_eq!(u_free.len(), free.len());
+    let mut full = vec![0.0; n_full];
+    for (&d, &v) in bc.dofs.iter().zip(&bc.values) {
+        full[d] = v;
+    }
+    for (&f, &v) in free.iter().zip(u_free) {
+        full[f] = v;
+    }
+    full
+}
+
+/// Gather a full vector's free-DoF entries (shared restriction kernel).
+fn restrict_free(free: &[usize], full: &[f64]) -> Vec<f64> {
+    free.iter().map(|&f| full[f]).collect()
+}
+
 impl ReducedSystem {
     /// Expand a free-DoF solution to the full DoF vector (inserting the
     /// prescribed boundary values).
     pub fn expand(&self, u_free: &[f64]) -> Vec<f64> {
-        assert_eq!(u_free.len(), self.free.len());
-        let mut full = vec![0.0; self.n_full];
-        for (&d, &v) in self.bc.dofs.iter().zip(&self.bc.values) {
-            full[d] = v;
-        }
-        for (&f, &v) in self.free.iter().zip(u_free) {
-            full[f] = v;
-        }
-        full
+        expand_free(&self.free, &self.bc, self.n_full, u_free)
     }
 
     /// Restrict a full vector to free DoFs.
     pub fn restrict(&self, full: &[f64]) -> Vec<f64> {
-        self.free.iter().map(|&f| full[f]).collect()
+        restrict_free(&self.free, full)
     }
 }
 
-/// Condense `K U = F` with the given Dirichlet constraints.
+/// Condense `K U = F` with the given Dirichlet constraints. Implemented as
+/// a single-instance [`CondensePlan`] application, so the scalar and
+/// batched ([`condense_batch`]) paths share one symbolic traversal and one
+/// numeric kernel — their parity holds by construction.
 pub fn condense(k: &Csr, f: &[f64], bc: &DirichletBc) -> ReducedSystem {
-    let n = k.nrows;
-    assert_eq!(f.len(), n);
-    let bc = bc.normalized();
-    let mut constrained = vec![false; n];
-    let mut gvals = vec![0.0; n];
-    for (&d, &v) in bc.dofs.iter().zip(&bc.values) {
-        assert!(d < n, "constraint DoF out of range");
-        constrained[d] = true;
-        gvals[d] = v;
+    assert_eq!(f.len(), k.nrows);
+    CondensePlan::new(k.nrows, &k.indptr, &k.indices, bc).into_apply(&k.data, f)
+}
+
+/// The symbolic (pattern-only) part of Dirichlet condensation, computed
+/// once per shared sparsity pattern and reusable across every value
+/// instance and every repeated solve (long-lived drivers like the lockstep
+/// topology-optimization loop build one plan and apply it each iteration).
+#[derive(Clone, Debug)]
+pub struct CondensePlan {
+    /// Sorted free (unconstrained) DoF indices.
+    pub free: Vec<usize>,
+    /// Condensed pattern: row pointers over free rows.
+    indptr: Vec<usize>,
+    /// Condensed pattern: renumbered free column indices.
+    indices: Vec<usize>,
+    /// Source position in the full value array of each kept entry, aligned
+    /// with `indices` — per instance the condensed values are one gather.
+    keep: Vec<usize>,
+    /// Boundary lift `(free_row, source_pos, g)` triples in row-major entry
+    /// order: `rhs[free_row] -= values[source_pos] * g`, exactly the
+    /// per-row accumulation order of scalar [`condense`].
+    lifts: Vec<(usize, usize, f64)>,
+    /// Normalized constraints (for expansion).
+    bc: DirichletBc,
+    n_full: usize,
+    /// Pattern nnz the plan was built for (guards mismatched reuse).
+    nnz_full: usize,
+    /// FNV hash of the source pattern; debug builds verify it on every
+    /// batched reuse so a plan applied to a *different* equal-size pattern
+    /// fails loudly instead of gathering from wrong positions.
+    fingerprint: u64,
+}
+
+/// FNV-1a over a pattern's `indptr` + `indices`.
+fn pattern_fingerprint(indptr: &[usize], indices: &[usize]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in indptr.iter().chain(indices) {
+        h ^= v as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
     }
-    let free: Vec<usize> = (0..n).filter(|&i| !constrained[i]).collect();
-    let mut free_index = vec![usize::MAX; n];
-    for (new, &old) in free.iter().enumerate() {
-        free_index[old] = new;
+    h
+}
+
+impl CondensePlan {
+    /// Build the symbolic mapping from a shared pattern.
+    pub fn new(
+        nrows: usize,
+        indptr: &[usize],
+        indices: &[usize],
+        bc: &DirichletBc,
+    ) -> CondensePlan {
+        let n = nrows;
+        let bc = bc.normalized();
+        let mut constrained = vec![false; n];
+        let mut gvals = vec![0.0; n];
+        for (&d, &v) in bc.dofs.iter().zip(&bc.values) {
+            assert!(d < n, "constraint DoF out of range");
+            constrained[d] = true;
+            gvals[d] = v;
+        }
+        let free: Vec<usize> = (0..n).filter(|&i| !constrained[i]).collect();
+        let mut free_index = vec![usize::MAX; n];
+        for (new, &old) in free.iter().enumerate() {
+            free_index[old] = new;
+        }
+        let mut red_indptr = Vec::with_capacity(free.len() + 1);
+        red_indptr.push(0);
+        let mut red_indices = Vec::new();
+        let mut keep = Vec::new();
+        let mut lifts = Vec::new();
+        for (rnew, &r) in free.iter().enumerate() {
+            for p in indptr[r]..indptr[r + 1] {
+                let c = indices[p];
+                if constrained[c] {
+                    lifts.push((rnew, p, gvals[c]));
+                } else {
+                    red_indices.push(free_index[c]);
+                    keep.push(p);
+                }
+            }
+            red_indptr.push(red_indices.len());
+        }
+        CondensePlan {
+            free,
+            indptr: red_indptr,
+            indices: red_indices,
+            keep,
+            lifts,
+            bc,
+            n_full: n,
+            nnz_full: indices.len(),
+            fingerprint: pattern_fingerprint(indptr, indices),
+        }
     }
 
-    // Build K_ff and rhs = F_f − K_fd g in one pass over rows.
-    let mut indptr = Vec::with_capacity(free.len() + 1);
-    indptr.push(0);
-    let mut indices = Vec::new();
-    let mut data = Vec::new();
-    let mut rhs = Vec::with_capacity(free.len());
-    for &r in &free {
-        let (cols, vals) = k.row(r);
-        let mut b = f[r];
-        for (c, v) in cols.iter().zip(vals) {
-            if constrained[*c] {
-                b -= v * gvals[*c];
-            } else {
-                indices.push(free_index[*c]);
-                data.push(*v);
+    /// Build from the shared pattern of a [`CsrBatch`].
+    pub fn from_batch(k: &CsrBatch, bc: &DirichletBc) -> CondensePlan {
+        CondensePlan::new(k.nrows, &k.indptr, &k.indices, bc)
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Apply the plan to ONE value instance, keeping the plan for reuse
+    /// (clones its symbolic arrays into the result).
+    pub fn apply(&self, values: &[f64], f: &[f64]) -> ReducedSystem {
+        self.clone().into_apply(values, f)
+    }
+
+    /// One-shot apply: gather the kept entries, then lift the prescribed
+    /// boundary values into the load in row-major entry order, moving the
+    /// plan's symbolic arrays into the result (no clones — scalar
+    /// [`condense`] is exactly this).
+    pub fn into_apply(self, values: &[f64], f: &[f64]) -> ReducedSystem {
+        assert_eq!(values.len(), self.nnz_full, "plan/matrix pattern mismatch");
+        assert_eq!(f.len(), self.n_full, "plan/load length mismatch");
+        let data: Vec<f64> = self.keep.iter().map(|&p| values[p]).collect();
+        let mut rhs: Vec<f64> = self.free.iter().map(|&r| f[r]).collect();
+        for &(rnew, p, g) in &self.lifts {
+            rhs[rnew] -= values[p] * g;
+        }
+        ReducedSystem {
+            k: Csr {
+                nrows: self.free.len(),
+                ncols: self.free.len(),
+                indptr: self.indptr,
+                indices: self.indices,
+                data,
+            },
+            free: self.free,
+            rhs,
+            bc: self.bc,
+            n_full: self.n_full,
+        }
+    }
+
+    /// Apply the plan to `S` value instances and their loads. `f` is either
+    /// one shared load vector (`n_full` entries, broadcast across the
+    /// batch) or `S` instance-major load vectors (`S × n_full`).
+    pub fn apply_batch(&self, k: &CsrBatch, f: &[f64]) -> ReducedBatch {
+        let s_n = k.n_instances;
+        assert_eq!(k.nrows, self.n_full, "plan/matrix row mismatch");
+        assert_eq!(k.nnz(), self.nnz_full, "plan/matrix pattern mismatch");
+        debug_assert_eq!(
+            pattern_fingerprint(&k.indptr, &k.indices),
+            self.fingerprint,
+            "plan applied to a different pattern of equal size"
+        );
+        let broadcast = f.len() == self.n_full;
+        assert!(
+            broadcast || f.len() == s_n * self.n_full,
+            "load vector must be n_full (broadcast) or S × n_full"
+        );
+        let nf = self.free.len();
+        let red_nnz = self.indices.len();
+        let mut data = Vec::with_capacity(s_n * red_nnz);
+        let mut rhs = Vec::with_capacity(s_n * nf);
+        for s in 0..s_n {
+            let vals = k.values(s);
+            // Condensed values: one gather over the kept positions.
+            data.extend(self.keep.iter().map(|&p| vals[p]));
+            // Condensed load: restrict, then lift in scalar entry order.
+            let fs = if broadcast { f } else { &f[s * self.n_full..(s + 1) * self.n_full] };
+            let rhs0 = rhs.len();
+            rhs.extend(self.free.iter().map(|&r| fs[r]));
+            for &(rnew, p, g) in &self.lifts {
+                rhs[rhs0 + rnew] -= vals[p] * g;
             }
         }
-        indptr.push(indices.len());
-        rhs.push(b);
+        ReducedBatch {
+            k: CsrBatch {
+                nrows: nf,
+                ncols: nf,
+                indptr: self.indptr.clone(),
+                indices: self.indices.clone(),
+                n_instances: s_n,
+                data,
+            },
+            rhs,
+            free: self.free.clone(),
+            bc: self.bc.clone(),
+            n_full: self.n_full,
+        }
     }
-    ReducedSystem {
-        k: Csr {
-            nrows: free.len(),
-            ncols: free.len(),
-            indptr,
-            indices,
-            data,
-        },
-        free,
-        rhs,
-        bc,
-        n_full: n,
+}
+
+/// `S` condensed systems over one shared free-DoF structure, plus the
+/// shared expand/restrict bookkeeping.
+#[derive(Clone, Debug)]
+pub struct ReducedBatch {
+    /// Sorted free (unconstrained) DoF indices — shared by all instances.
+    pub free: Vec<usize>,
+    /// Condensed `K_ff` instances on one shared pattern.
+    pub k: CsrBatch,
+    /// Instance-major condensed right-hand sides, `S × n_free`.
+    pub rhs: Vec<f64>,
+    /// Constraints used for expansion.
+    pub bc: DirichletBc,
+    n_full: usize,
+}
+
+impl ReducedBatch {
+    pub fn n_instances(&self) -> usize {
+        self.k.n_instances
     }
+
+    pub fn n_free(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Condensed right-hand side of instance `s`.
+    pub fn rhs_of(&self, s: usize) -> &[f64] {
+        let nf = self.free.len();
+        &self.rhs[s * nf..(s + 1) * nf]
+    }
+
+    /// Expand one instance's free-DoF solution to the full DoF vector
+    /// (inserting the prescribed boundary values — the bookkeeping is
+    /// shared across the batch).
+    pub fn expand(&self, u_free: &[f64]) -> Vec<f64> {
+        expand_free(&self.free, &self.bc, self.n_full, u_free)
+    }
+
+    /// Restrict a full vector to free DoFs.
+    pub fn restrict(&self, full: &[f64]) -> Vec<f64> {
+        restrict_free(&self.free, full)
+    }
+}
+
+/// Condense `S` systems `K_s U_s = F_s` sharing one sparsity pattern: the
+/// free-DoF symbolic mapping is computed once (see [`CondensePlan`]) and
+/// applied to every value instance. `f` is either one shared load vector
+/// (broadcast) or `S` instance-major loads; results match per-instance
+/// [`condense`] bitwise.
+pub fn condense_batch(k: &CsrBatch, f: &[f64], bc: &DirichletBc) -> ReducedBatch {
+    CondensePlan::from_batch(k, bc).apply_batch(k, f)
 }
 
 #[cfg(test)]
@@ -186,6 +397,77 @@ mod tests {
         for &d in &sys.bc.dofs {
             assert_eq!(full[d], 0.0);
         }
+    }
+
+    #[test]
+    fn condense_batch_matches_per_instance_condense() {
+        // S diffusion operators with distinct coefficients on one topology,
+        // inhomogeneous BCs to exercise the boundary lift.
+        let m = unit_square_tri(5);
+        let ctx = AssemblyContext::new(&m, 1);
+        let n = ctx.n_dofs();
+        let forms: Vec<BilinearForm> = (0..3)
+            .map(|s| BilinearForm::Diffusion {
+                rho: Coefficient::Const(1.0 + 0.5 * s as f64),
+            })
+            .collect();
+        let kbatch = ctx.assemble_matrix_batch(&forms);
+        let f: Vec<f64> = (0..3 * n).map(|i| 0.01 * (i % 17) as f64 - 0.05).collect();
+        let bc = DirichletBc::from_fn(&m, &m.boundary_nodes(), |p| p[0] + 2.0 * p[1]);
+        let red = condense_batch(&kbatch, &f, &bc);
+        assert_eq!(red.n_instances(), 3);
+        for s in 0..3 {
+            let sys = condense(&kbatch.instance(s), &f[s * n..(s + 1) * n], &bc);
+            assert_eq!(red.free, sys.free, "instance {s} free set");
+            assert_eq!(red.k.indptr, sys.k.indptr, "instance {s} indptr");
+            assert_eq!(red.k.indices, sys.k.indices, "instance {s} indices");
+            assert_eq!(red.k.values(s), &sys.k.data[..], "instance {s} values");
+            assert_eq!(red.rhs_of(s), &sys.rhs[..], "instance {s} rhs");
+            let u: Vec<f64> = (0..red.n_free()).map(|i| i as f64).collect();
+            assert_eq!(red.expand(&u), sys.expand(&u), "instance {s} expand");
+        }
+    }
+
+    #[test]
+    fn condense_batch_broadcasts_shared_load() {
+        let m = unit_square_tri(4);
+        let ctx = AssemblyContext::new(&m, 1);
+        let n = ctx.n_dofs();
+        let forms: Vec<BilinearForm> = (0..2)
+            .map(|s| BilinearForm::Diffusion {
+                rho: Coefficient::Const(1.0 + s as f64),
+            })
+            .collect();
+        let kbatch = ctx.assemble_matrix_batch(&forms);
+        let f: Vec<f64> = (0..n).map(|i| (i % 7) as f64 * 0.1).collect();
+        let bc = DirichletBc::homogeneous(m.boundary_nodes());
+        let red = condense_batch(&kbatch, &f, &bc);
+        for s in 0..2 {
+            let sys = condense(&kbatch.instance(s), &f, &bc);
+            assert_eq!(red.rhs_of(s), &sys.rhs[..], "instance {s} rhs");
+            assert_eq!(red.k.values(s), &sys.k.data[..], "instance {s} values");
+        }
+    }
+
+    #[test]
+    fn condense_plan_is_reusable_across_value_instances() {
+        let m = unit_square_tri(4);
+        let ctx = AssemblyContext::new(&m, 1);
+        let n = ctx.n_dofs();
+        let bc = DirichletBc::homogeneous(m.boundary_nodes());
+        let k1 = ctx.assemble_matrix_batch(&[BilinearForm::Diffusion {
+            rho: Coefficient::Const(1.0),
+        }]);
+        let plan = CondensePlan::from_batch(&k1, &bc);
+        // Same pattern, different values: the plan applies unchanged.
+        let k2 = ctx.assemble_matrix_batch(&[BilinearForm::Diffusion {
+            rho: Coefficient::Const(4.0),
+        }]);
+        let zero = vec![0.0; n];
+        let a = plan.apply_batch(&k2, &zero);
+        let b = condense(&k2.instance(0), &zero, &bc);
+        assert_eq!(a.k.values(0), &b.k.data[..]);
+        assert_eq!(plan.n_free(), b.free.len());
     }
 
     #[test]

@@ -1,11 +1,15 @@
 //! Boundary conditions.
 //!
 //! * [`dirichlet`] — hard Dirichlet constraints by condensation (the paper's
-//!   "condensed stiffness matrix", §B.1.2/B.2.2).
+//!   "condensed stiffness matrix", §B.1.2/B.2.2), in both scalar
+//!   ([`condense`]) and batched ([`condense_batch`]: one symbolic mapping
+//!   shared by `S` value instances) form.
 //! * Neumann and Robin conditions need no dedicated module: they are
 //!   assembled by [`crate::assembly::map_reduce::FacetContext`] through the
 //!   same Map-Reduce pipeline and simply added to `K`/`F`.
 
 pub mod dirichlet;
 
-pub use dirichlet::{condense, DirichletBc, ReducedSystem};
+pub use dirichlet::{
+    condense, condense_batch, CondensePlan, DirichletBc, ReducedBatch, ReducedSystem,
+};

@@ -6,13 +6,18 @@
 //! and the preconditioner are built ONCE; each sample costs one load
 //! assembly + one iterative solve. This is exactly the amortization
 //! Fig B.4 measures (flat runtime until the per-sample cost dominates).
+//! Since PR 2 the solve phase is blocked as well: the `S` CG solves
+//! advance in lockstep ([`cg_batch`]) so every Krylov iteration performs
+//! ONE fused pass over the shared sparsity pattern instead of `S`, and the
+//! varcoeff path condenses all `S` operators through one setup-time
+//! symbolic mapping ([`CondensePlan`]).
 
 use anyhow::Result;
 
 use crate::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
-use crate::bc::{condense, DirichletBc, ReducedSystem};
+use crate::bc::{condense, CondensePlan, DirichletBc, ReducedSystem};
 use crate::mesh::Mesh;
-use crate::solver::{cg, JacobiPrecond, SolverConfig};
+use crate::solver::{cg, cg_batch, JacobiPrecond, MultiRhs, SolverConfig};
 
 use super::api::{SolveRequest, SolveResponse, VarCoeffRequest};
 
@@ -21,6 +26,9 @@ pub struct BatchSolver {
     pub ctx: AssemblyContext,
     sys: ReducedSystem,
     precond: JacobiPrecond,
+    /// Dirichlet symbolic mapping on the shared pattern — built once at
+    /// setup, reused by every varcoeff batch condensation.
+    cplan: CondensePlan,
     config: SolverConfig,
 }
 
@@ -33,12 +41,16 @@ impl BatchSolver {
         });
         let zero = vec![0.0; ctx.n_dofs()];
         let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
-        let sys = condense(&k, &zero, &bc);
+        let cplan = CondensePlan::new(k.nrows, &k.indptr, &k.indices, &bc);
+        // One symbolic traversal serves both the cached plan and the
+        // fixed-operator reduced system.
+        let sys = cplan.apply(&k.data, &zero);
         let precond = JacobiPrecond::new(&sys.k);
         BatchSolver {
             ctx,
             sys,
             precond,
+            cplan,
             config,
         }
     }
@@ -60,10 +72,12 @@ impl BatchSolver {
     }
 
     /// Solve a whole batch. Beyond the amortized operator state, the `S`
-    /// load assemblies now run as ONE batched Map-Reduce (fused `S × E`
+    /// load assemblies run as ONE batched Map-Reduce (fused `S × E`
     /// Batch-Map + fused `S × N` Sparse-Reduce) instead of `S` scalar
-    /// assembly calls; results are identical to [`BatchSolver::solve_one`]
-    /// per request.
+    /// assembly calls, and the `S` solves run as ONE lockstep CG on the
+    /// shared condensed operator ([`MultiRhs`]: every Krylov iteration
+    /// reads the pattern and values once for the whole batch). Results are
+    /// identical to [`BatchSolver::solve_one`] per request.
     pub fn solve_batch(&self, reqs: &[SolveRequest]) -> Result<Vec<SolveResponse>> {
         if reqs.is_empty() {
             return Ok(Vec::new());
@@ -74,17 +88,24 @@ impl BatchSolver {
             .collect();
         let fbatch = self.ctx.assemble_vector_batch(&forms);
         let n = self.ctx.n_dofs();
+        let nf = self.sys.free.len();
+        let mut rhs = Vec::with_capacity(reqs.len() * nf);
+        for s in 0..reqs.len() {
+            rhs.extend(self.sys.restrict(&fbatch[s * n..(s + 1) * n]));
+        }
+        let op =
+            MultiRhs::with_inv_diag(&self.sys.k, reqs.len(), self.precond.inv_diag().to_vec());
+        let (u, stats) = cg_batch(&op, &rhs, &self.config);
         reqs.iter()
             .enumerate()
             .map(|(s, req)| {
-                let rhs = self.sys.restrict(&fbatch[s * n..(s + 1) * n]);
-                let (u_free, stats) = cg(&self.sys.k, &rhs, &self.precond, &self.config);
-                anyhow::ensure!(stats.converged, "batch solve {} failed: {stats:?}", req.id);
+                let st = stats[s];
+                anyhow::ensure!(st.converged, "batch solve {} failed: {st:?}", req.id);
                 Ok(SolveResponse {
                     id: req.id,
-                    u: self.sys.expand(&u_free),
-                    iterations: stats.iterations,
-                    rel_residual: stats.rel_residual,
+                    u: self.sys.expand(&u[s * nf..(s + 1) * nf]),
+                    iterations: st.iterations,
+                    rel_residual: st.rel_residual,
                 })
             })
             .collect()
@@ -96,8 +117,10 @@ impl BatchSolver {
     /// shared-topology Map-Reduce — the separable weighted-gather plan on
     /// P1 simplices, the fused generic batch otherwise — into a
     /// [`crate::sparse::CsrBatch`] with one symbolic pattern; the `S` load
-    /// vectors by one batched vector assembly. Condensation + CG then run
-    /// per instance.
+    /// vectors by one batched vector assembly. Condensation reuses the
+    /// setup-time symbolic mapping ([`CondensePlan`]) and the `S` solves
+    /// advance in lockstep ([`cg_batch`]: one fused SpMV per Krylov
+    /// iteration), bitwise identical to the per-instance pipeline.
     pub fn solve_varcoeff_batch(&self, reqs: &[VarCoeffRequest]) -> Result<Vec<SolveResponse>> {
         if reqs.is_empty() {
             return Ok(Vec::new());
@@ -121,26 +144,24 @@ impl BatchSolver {
             .map(|r| LinearForm::Source { f: ctx.coeff_nodal(&r.f_nodal) })
             .collect();
         let fbatch = ctx.assemble_vector_batch(&lforms);
-        let n = ctx.n_dofs();
-        // One pattern materialization reused across instances — only the
-        // values change per request (sys.bc is the normalized Dirichlet
-        // set stored by the setup-time condensation).
-        let mut k = ctx.pattern_matrix();
-        let mut out = Vec::with_capacity(reqs.len());
-        for (s, req) in reqs.iter().enumerate() {
-            k.data.copy_from_slice(kbatch.values(s));
-            let sys = condense(&k, &fbatch[s * n..(s + 1) * n], &self.sys.bc);
-            let pc = JacobiPrecond::new(&sys.k);
-            let (u_free, stats) = cg(&sys.k, &sys.rhs, &pc, &self.config);
-            anyhow::ensure!(stats.converged, "varcoeff solve {} failed: {stats:?}", req.id);
-            out.push(SolveResponse {
-                id: req.id,
-                u: sys.expand(&u_free),
-                iterations: stats.iterations,
-                rel_residual: stats.rel_residual,
-            });
-        }
-        Ok(out)
+        // The Dirichlet symbolic mapping was computed once at setup; each
+        // batch only pays the value gather + lift.
+        let red = self.cplan.apply_batch(&kbatch, &fbatch);
+        let (u, stats) = cg_batch(&red.k, &red.rhs, &self.config);
+        let nf = red.n_free();
+        reqs.iter()
+            .enumerate()
+            .map(|(s, req)| {
+                let st = stats[s];
+                anyhow::ensure!(st.converged, "varcoeff solve {} failed: {st:?}", req.id);
+                Ok(SolveResponse {
+                    id: req.id,
+                    u: red.expand(&u[s * nf..(s + 1) * nf]),
+                    iterations: st.iterations,
+                    rel_residual: st.rel_residual,
+                })
+            })
+            .collect()
     }
 
     /// The scalar (one-assembly-per-request) counterpart of

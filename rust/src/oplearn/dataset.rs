@@ -116,7 +116,7 @@ impl PdeSetup {
     pub fn reference_trajectory(&self, u0_full: &[f64], steps: usize) -> Vec<Vec<f64>> {
         match self.kind {
             PdeKind::Wave => {
-                let integ = WaveIntegrator::new(&self.mesh, 4.0, self.dt);
+                let integ = self.wave_integrator();
                 integ
                     .rollout(u0_full, steps)
                     .into_iter()
@@ -124,11 +124,52 @@ impl PdeSetup {
                     .collect()
             }
             PdeKind::AllenCahn => {
-                let integ = AllenCahnIntegrator::new(&self.mesh, 1e-2, 1.0, self.dt);
+                let integ = self.allen_cahn_integrator();
                 integ
                     .rollout(u0_full, steps)
                     .into_iter()
                     .map(|free| integ.expand(&free))
+                    .collect()
+            }
+        }
+    }
+
+    /// The wave reference integrator (c = 4, the experiment's setting) —
+    /// one constructor shared by the scalar and batched generators so the
+    /// PDE constants cannot drift between them.
+    fn wave_integrator(&self) -> WaveIntegrator {
+        WaveIntegrator::new(&self.mesh, 4.0, self.dt)
+    }
+
+    /// The Allen-Cahn reference integrator (a² = 1e-2, ε² = 1).
+    fn allen_cahn_integrator(&self) -> AllenCahnIntegrator {
+        AllenCahnIntegrator::new(&self.mesh, 1e-2, 1.0, self.dt)
+    }
+
+    /// Batched FEM reference trajectories: the whole IC set advances in
+    /// lockstep through ONE integrator (matrices assembled and condensed
+    /// once) with one fused SpMV and one blocked solve per time step for
+    /// the whole set — this is the data-generation workload the blocked
+    /// solve pipeline targets. For the wave equation each trajectory is
+    /// bitwise identical to [`PdeSetup::reference_trajectory`]; for
+    /// Allen-Cahn agreement is to solver tolerance (CG vs BiCGSTAB on the
+    /// same SPD system).
+    pub fn reference_trajectories(&self, ics: &[Vec<f64>], steps: usize) -> Vec<Vec<Vec<f64>>> {
+        match self.kind {
+            PdeKind::Wave => {
+                let integ = self.wave_integrator();
+                integ
+                    .rollout_batch(ics, steps)
+                    .into_iter()
+                    .map(|traj| traj.into_iter().map(|free| integ.expand(&free)).collect())
+                    .collect()
+            }
+            PdeKind::AllenCahn => {
+                let integ = self.allen_cahn_integrator();
+                integ
+                    .rollout_batch(ics, steps)
+                    .into_iter()
+                    .map(|traj| traj.into_iter().map(|free| integ.expand(&free)).collect())
                     .collect()
             }
         }

@@ -74,8 +74,10 @@ pub fn train_datadriven(
 ) -> Result<Vec<f64>> {
     let name = format!("oplearn_{}_datadriven", setup.kind.tag());
     let mut per_ic: Vec<ArtifactLoss<'_>> = Vec::new();
-    for ic in ics {
-        let traj = setup.reference_trajectory(ic, setup.rollout_t);
+    // Supervision targets generated in lockstep across the whole IC set
+    // (one blocked solve per time step instead of one per IC per step).
+    let trajs = setup.reference_trajectories(ics, setup.rollout_t);
+    for (ic, traj) in ics.iter().zip(&trajs) {
         let flat: Vec<f64> = traj.iter().flatten().copied().collect();
         let mut fixed = vec![Operand::from_f64(ic), Operand::from_f64(&flat)];
         fixed.extend(agn_graph_inputs(setup));

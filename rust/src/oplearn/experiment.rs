@@ -31,11 +31,10 @@ pub fn run(args: &Args) -> Result<()> {
         let setup = PdeSetup::new(&rt, kind)?;
         let train_ics = sample_ics(&setup.mesh, n_train, 1000);
         let test_ics = sample_ics(&setup.mesh, n_test, 9000);
-        // Reference trajectories for the test set (2× horizon).
-        let refs: Vec<Vec<Vec<f64>>> = test_ics
-            .iter()
-            .map(|ic| setup.reference_trajectory(ic, 2 * setup.rollout_t))
-            .collect();
+        // Reference trajectories for the test set (2× horizon), generated
+        // in lockstep: one blocked solve per step for the whole IC set.
+        let refs: Vec<Vec<Vec<f64>>> =
+            setup.reference_trajectories(&test_ics, 2 * setup.rollout_t);
 
         for method in ["datadriven", "pils"] {
             let params = match method {
@@ -112,10 +111,8 @@ pub fn run_figb18(args: &Args) -> Result<()> {
     let rt = Runtime::new()?;
     let setup = PdeSetup::new(&rt, PdeKind::Wave)?;
     let test_ics = sample_ics(&setup.mesh, n_test, 9000);
-    let refs: Vec<Vec<Vec<f64>>> = test_ics
-        .iter()
-        .map(|ic| setup.reference_trajectory(ic, 2 * setup.rollout_t))
-        .collect();
+    let refs: Vec<Vec<Vec<f64>>> =
+        setup.reference_trajectories(&test_ics, 2 * setup.rollout_t);
     let mut rows = Vec::new();
     for &c in &counts {
         let train_ics = sample_ics(&setup.mesh, c, 1000);

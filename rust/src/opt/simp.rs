@@ -6,10 +6,10 @@ use anyhow::Result;
 
 use crate::assembly::map_reduce::FacetContext;
 use crate::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
-use crate::bc::{condense, DirichletBc};
+use crate::bc::{condense, CondensePlan, DirichletBc};
 use crate::mesh::structured::rect_quad;
 use crate::mesh::{marker, Mesh};
-use crate::solver::{cg, JacobiPrecond, SolverConfig};
+use crate::solver::{cg, cg_batch, JacobiPrecond, SolverConfig};
 use crate::sparse::{Csr, CsrBatch};
 
 /// Material and discretization parameters (paper defaults).
@@ -180,6 +180,43 @@ impl SimpProblem {
         Ok((sys.expand(&u_free), stats.iterations))
     }
 
+    /// The condensation plan of the (fixed) clamp on this problem's
+    /// pattern — built once by long-lived batch drivers and reused across
+    /// every iteration's [`SimpProblem::solve_state_batch_with`].
+    pub fn condense_plan(&self) -> CondensePlan {
+        let pat = self.ctx.pattern_matrix();
+        CondensePlan::new(pat.nrows, &pat.indptr, &pat.indices, &self.bc)
+    }
+
+    /// Blocked multi-design state solve: `S` stiffness instances on the
+    /// shared pattern are condensed through one symbolic mapping and solved
+    /// by lockstep CG (one fused SpMV per Krylov iteration for the whole
+    /// design set). Per design, results are bitwise identical to
+    /// [`SimpProblem::solve_state`].
+    pub fn solve_state_batch_with(
+        &self,
+        plan: &CondensePlan,
+        kbatch: &CsrBatch,
+    ) -> Result<(Vec<Vec<f64>>, Vec<usize>)> {
+        let red = plan.apply_batch(kbatch, &self.f);
+        let (u, stats) = cg_batch(&red.k, &red.rhs, &self.solver_cfg);
+        let nf = red.n_free();
+        let mut us = Vec::with_capacity(kbatch.n_instances);
+        let mut iters = Vec::with_capacity(kbatch.n_instances);
+        for (s, st) in stats.iter().enumerate() {
+            anyhow::ensure!(st.converged, "state solve (design {s}) failed: {st:?}");
+            us.push(red.expand(&u[s * nf..(s + 1) * nf]));
+            iters.push(st.iterations);
+        }
+        Ok((us, iters))
+    }
+
+    /// One-shot blocked state solve (plan built per call — hold
+    /// [`SimpProblem::condense_plan`] to amortize it across iterations).
+    pub fn solve_state_batch(&self, kbatch: &CsrBatch) -> Result<(Vec<Vec<f64>>, Vec<usize>)> {
+        self.solve_state_batch_with(&self.condense_plan(), kbatch)
+    }
+
     /// Compliance `C = Fᵀu`.
     pub fn compliance(&self, u: &[f64]) -> f64 {
         crate::util::dot(&self.f, u)
@@ -262,6 +299,23 @@ mod tests {
             let seq = p.assemble_k(rho);
             assert_eq!(batch.indices, seq.indices, "instance {s} pattern");
             assert_eq!(batch.values(s), &seq.data[..], "instance {s} values");
+        }
+    }
+
+    #[test]
+    fn blocked_state_solve_matches_scalar() {
+        let p = small();
+        let ne = p.n_elems();
+        let rhos: Vec<Vec<f64>> = (0..3)
+            .map(|s| (0..ne).map(|e| 0.3 + 0.2 * s as f64 + 0.004 * (e % 11) as f64).collect())
+            .collect();
+        let kbatch = p.assemble_k_batch(&rhos);
+        let (us, iters) = p.solve_state_batch(&kbatch).unwrap();
+        for (s, rho) in rhos.iter().enumerate() {
+            let k = p.assemble_k(rho);
+            let (u_ref, it_ref) = p.solve_state(&k, None).unwrap();
+            assert_eq!(iters[s], it_ref, "design {s} iterations");
+            assert_eq!(us[s], u_ref, "design {s} state");
         }
     }
 

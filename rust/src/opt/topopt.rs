@@ -121,11 +121,15 @@ pub fn run_topopt(cfg: &TopOptConfig) -> Result<TopOptResult> {
 /// Run `S` SIMP problems in lockstep on one shared mesh topology: each
 /// iteration re-assembles ALL `S` stiffness matrices through one
 /// shared-topology batched Map-Reduce ([`SimpProblem::assemble_k_batch`])
-/// instead of `S` scalar assemblies — the multi-start / sweep workload
-/// (varying volume fraction, optimizer, filter radius, move limit) served
-/// at batch cost. Configs must share `simp` and `iters`; results are
-/// identical to running [`run_topopt`] per config (setup/loop timings are
-/// shared across the batch).
+/// instead of `S` scalar assemblies, and solves ALL `S` state equations
+/// through one batched condensation (symbolic mapping built once at setup)
+/// plus one lockstep CG — every Krylov iteration performs a single fused
+/// SpMV over the shared pattern for the whole design set instead of `S`
+/// scalar solves. The multi-start / sweep workload (varying volume
+/// fraction, optimizer, filter radius, move limit) served at batch cost.
+/// Configs must share `simp` and `iters`; results are identical to running
+/// [`run_topopt`] per config (setup/loop timings are shared across the
+/// batch).
 pub fn run_topopt_batch(cfgs: &[TopOptConfig]) -> Result<Vec<TopOptResult>> {
     anyhow::ensure!(!cfgs.is_empty(), "empty topopt batch");
     let base = &cfgs[0];
@@ -152,8 +156,12 @@ pub fn run_topopt_batch(cfgs: &[TopOptConfig]) -> Result<Vec<TopOptResult>> {
     sw.start("setup");
     let problem = SimpProblem::new(base.simp.clone());
     // Gather weights built once; every iteration's S-instance re-assembly
-    // is then a weighted gather over the shared pattern.
+    // is then a weighted gather over the shared pattern. Likewise the
+    // Dirichlet symbolic mapping: condensation bookkeeping is a function
+    // of pattern + clamp only, so it is built once here and reused by
+    // every iteration's blocked solve.
     let plan = problem.batched_plan();
+    let cplan = problem.condense_plan();
     let ne = problem.n_elems();
     let h = base.simp.lx / base.simp.nx as f64;
     let mut lanes: Vec<Lane> = cfgs
@@ -173,9 +181,6 @@ pub fn run_topopt_batch(cfgs: &[TopOptConfig]) -> Result<Vec<TopOptResult>> {
         .collect();
     sw.stop();
 
-    // One pattern materialization shared by every lane and iteration —
-    // only the values change per solve.
-    let mut k = problem.ctx.pattern_matrix();
     sw.start("loop");
     for it in 0..base.iters {
         // One shared-topology batched assembly for the whole lane set.
@@ -184,14 +189,15 @@ pub fn run_topopt_batch(cfgs: &[TopOptConfig]) -> Result<Vec<TopOptResult>> {
             moduli.extend(problem.e_of_rho(&lane.rho));
         }
         let kbatch = plan.assemble_scaled(&moduli);
+        // One blocked condensation + lockstep CG for the whole lane set.
+        let (us, iters) = problem.solve_state_batch_with(&cplan, &kbatch)?;
         for (s, (lane, cfg)) in lanes.iter_mut().zip(cfgs).enumerate() {
-            k.data.copy_from_slice(kbatch.values(s));
-            let (u, iters) = problem.solve_state(&k, None)?;
-            lane.solver_iters += iters;
-            let c = problem.compliance(&u);
+            let u = &us[s];
+            lane.solver_iters += iters[s];
+            let c = problem.compliance(u);
             lane.history.push(c);
 
-            let dc = adjoint::sensitivity_closed_form(&problem, &lane.rho, &u);
+            let dc = adjoint::sensitivity_closed_form(&problem, &lane.rho, u);
             let dc_f = lane.filt.apply(&lane.rho, &dc);
 
             lane.rho = if cfg.optimizer == "oc" {

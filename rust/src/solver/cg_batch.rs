@@ -1,0 +1,332 @@
+//! Blocked (lockstep) preconditioned conjugate gradients.
+//!
+//! The multi-instance workloads the paper targets (operator-learning data
+//! generation, multi-design topology optimization, many-sample coordinator
+//! batches) produce `S` SPD systems on ONE shared sparsity pattern. Looping
+//! a scalar [`super::cg`] re-reads that pattern `S` times per iteration;
+//! [`cg_batch`] instead advances all `S` instances in lockstep, so every
+//! Krylov iteration costs ONE fused pattern pass
+//! ([`CsrBatch::spmv_batch`] / [`Csr::spmv_multi`]) driving all instances —
+//! the solve-side analogue of the fused `S × E` Batch-Map on the assembly
+//! side.
+//!
+//! Each instance keeps its own `alpha`/`beta`/residual scalars and a
+//! convergence mask: converged (or broken-down) instances stop updating
+//! their state but stay in the fused SpMV until the whole batch finishes,
+//! and per-instance [`SolveStats`] record where each lane stopped. Per
+//! instance, every arithmetic operation happens in exactly the scalar-CG
+//! order (same SpMV row accumulation, same BLAS-1 reduction order, same
+//! Jacobi guard), so a lane's trajectory — iterates, iteration count,
+//! residuals — is bitwise identical to a scalar Jacobi-preconditioned
+//! [`super::cg`] run on that instance.
+
+use crate::sparse::{Csr, CsrBatch};
+use crate::util::{axpy, dot, norm2};
+
+use super::precond::jacobi_inverse;
+use super::{SolveStats, SolverConfig};
+
+/// `S` SPD operators sharing one sparsity pattern: either `S` distinct
+/// value arrays ([`CsrBatch`]) or one matrix driving `S` right-hand sides
+/// ([`MultiRhs`] — repeated mass solves in lockstep time stepping).
+pub trait LockstepOp {
+    fn nrows(&self) -> usize;
+    fn n_instances(&self) -> usize;
+    /// `Y_s = A_s X_s` for every instance, instance-major layout, one fused
+    /// pass over the shared pattern.
+    fn apply_batch(&self, x: &[f64], y: &mut [f64]);
+    /// Jacobi inverse diagonal of instance `s` (with the scalar
+    /// [`super::JacobiPrecond`] zero-guard).
+    fn inv_diag(&self, s: usize) -> Vec<f64>;
+    /// True when every instance shares one diagonal ([`MultiRhs`]), so the
+    /// solver builds the Jacobi preconditioner once instead of `S` times.
+    fn diag_shared(&self) -> bool {
+        false
+    }
+}
+
+impl LockstepOp for CsrBatch {
+    fn nrows(&self) -> usize {
+        self.nrows
+    }
+
+    fn n_instances(&self) -> usize {
+        self.n_instances
+    }
+
+    fn apply_batch(&self, x: &[f64], y: &mut [f64]) {
+        self.spmv_batch(x, y);
+    }
+
+    fn inv_diag(&self, s: usize) -> Vec<f64> {
+        jacobi_inverse(self.diagonal(s))
+    }
+}
+
+/// One shared matrix applied to `S` right-hand sides: pattern AND values
+/// are read once per fused application, and the Jacobi inverse diagonal is
+/// extracted once at construction — long-lived drivers (lockstep time
+/// steppers, the coordinator) build one `MultiRhs` and reuse it across
+/// every `cg_batch` call.
+pub struct MultiRhs<'a> {
+    a: &'a Csr,
+    n_instances: usize,
+    inv_diag: Vec<f64>,
+}
+
+impl<'a> MultiRhs<'a> {
+    pub fn new(a: &'a Csr, n_instances: usize) -> MultiRhs<'a> {
+        MultiRhs::with_inv_diag(a, n_instances, jacobi_inverse(a.diagonal()))
+    }
+
+    /// Build from a precomputed Jacobi inverse diagonal (e.g. a stored
+    /// [`super::JacobiPrecond`], via [`super::JacobiPrecond::inv_diag`]) —
+    /// skips the diagonal extraction entirely.
+    pub fn with_inv_diag(a: &'a Csr, n_instances: usize, inv_diag: Vec<f64>) -> MultiRhs<'a> {
+        assert_eq!(inv_diag.len(), a.nrows.min(a.ncols), "inverse diagonal length");
+        MultiRhs { a, n_instances, inv_diag }
+    }
+}
+
+impl LockstepOp for MultiRhs<'_> {
+    fn nrows(&self) -> usize {
+        self.a.nrows
+    }
+
+    fn n_instances(&self) -> usize {
+        self.n_instances
+    }
+
+    fn apply_batch(&self, x: &[f64], y: &mut [f64]) {
+        self.a.spmv_multi(x, y, self.n_instances);
+    }
+
+    fn inv_diag(&self, _s: usize) -> Vec<f64> {
+        self.inv_diag.clone()
+    }
+
+    fn diag_shared(&self) -> bool {
+        true
+    }
+}
+
+/// Solve `A_s x_s = b_s` for all instances in lockstep (Jacobi-
+/// preconditioned CG, zero initial guess). `b` is instance-major
+/// (`S × n`); returns the instance-major solutions and per-instance stats.
+/// Lane `s` is bitwise identical to
+/// `cg(&a_s, &b_s, &JacobiPrecond::new(&a_s), config)`.
+pub fn cg_batch<Op: LockstepOp>(
+    a: &Op,
+    b: &[f64],
+    config: &SolverConfig,
+) -> (Vec<f64>, Vec<SolveStats>) {
+    let n = a.nrows();
+    let s_n = a.n_instances();
+    assert_eq!(b.len(), s_n * n, "rhs must be S × n instance-major");
+    // One inverse diagonal per distinct operator: shared-matrix batches
+    // ([`MultiRhs`]) build the Jacobi preconditioner once, not S times.
+    // `inv[s % inv.len()]` below picks the lane's diagonal in either case.
+    let inv: Vec<Vec<f64>> = if a.diag_shared() {
+        vec![a.inv_diag(0)]
+    } else {
+        (0..s_n).map(|s| a.inv_diag(s)).collect()
+    };
+
+    let mut x = vec![0.0; s_n * n];
+    let mut r = b.to_vec();
+    let mut z = vec![0.0; s_n * n];
+    let mut p = vec![0.0; s_n * n];
+    let mut ap = vec![0.0; s_n * n];
+    let mut rz = vec![0.0; s_n];
+    let mut nb = vec![0.0; s_n];
+    let mut active = vec![true; s_n];
+    let mut stats = vec![
+        SolveStats {
+            iterations: 0,
+            rel_residual: 0.0,
+            converged: false,
+        };
+        s_n
+    ];
+
+    // Per-lane setup, mirroring scalar CG exactly.
+    for s in 0..s_n {
+        let lane = s * n..(s + 1) * n;
+        nb[s] = norm2(&b[lane.clone()]).max(1e-300);
+        let rn0 = norm2(&r[lane.clone()]);
+        if rn0 <= config.abs_tol {
+            active[s] = false;
+            stats[s] = SolveStats {
+                iterations: 0,
+                rel_residual: rn0 / nb[s],
+                converged: true,
+            };
+            continue;
+        }
+        let invs = &inv[s % inv.len()];
+        for i in lane.clone() {
+            z[i] = r[i] * invs[i - s * n];
+        }
+        p[lane.clone()].copy_from_slice(&z[lane.clone()]);
+        rz[s] = dot(&r[lane.clone()], &z[lane]);
+    }
+
+    for it in 1..=config.max_iter {
+        if !active.iter().any(|&a| a) {
+            break;
+        }
+        // ONE fused SpMV for the whole batch — converged lanes ride along
+        // (their state is frozen) so the pattern is still read only once.
+        a.apply_batch(&p, &mut ap);
+        for s in 0..s_n {
+            if !active[s] {
+                continue;
+            }
+            let lane = s * n..(s + 1) * n;
+            let pap = dot(&p[lane.clone()], &ap[lane.clone()]);
+            if pap.abs() < 1e-300 {
+                active[s] = false;
+                stats[s] = SolveStats {
+                    iterations: it,
+                    rel_residual: norm2(&r[lane.clone()]) / nb[s],
+                    converged: false,
+                };
+                continue;
+            }
+            let alpha = rz[s] / pap;
+            axpy(alpha, &p[lane.clone()], &mut x[lane.clone()]);
+            // `r -= alpha*ap`: borrow the lane slices disjointly.
+            {
+                let (rs, aps) = (&mut r[lane.clone()], &ap[lane.clone()]);
+                axpy(-alpha, aps, rs);
+            }
+            let rn = norm2(&r[lane.clone()]);
+            if rn / nb[s] < config.rel_tol || rn < config.abs_tol {
+                active[s] = false;
+                stats[s] = SolveStats {
+                    iterations: it,
+                    rel_residual: rn / nb[s],
+                    converged: true,
+                };
+                continue;
+            }
+            let invs = &inv[s % inv.len()];
+            for i in lane.clone() {
+                z[i] = r[i] * invs[i - s * n];
+            }
+            let rz_new = dot(&r[lane.clone()], &z[lane.clone()]);
+            let beta = rz_new / rz[s];
+            rz[s] = rz_new;
+            for i in lane {
+                p[i] = z[i] + beta * p[i];
+            }
+        }
+    }
+    // Lanes still active hit max_iter without converging.
+    for s in 0..s_n {
+        if active[s] {
+            let lane = s * n..(s + 1) * n;
+            stats[s] = SolveStats {
+                iterations: config.max_iter,
+                rel_residual: norm2(&r[lane]) / nb[s],
+                converged: false,
+            };
+        }
+    }
+    (x, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::precond::JacobiPrecond;
+    use super::super::{cg, SolverConfig};
+    use super::*;
+
+    fn spd_batch() -> CsrBatch {
+        // Two SPD tridiagonal-ish instances on one pattern.
+        let base = Csr {
+            nrows: 3,
+            ncols: 3,
+            indptr: vec![0, 2, 5, 7],
+            indices: vec![0, 1, 0, 1, 2, 1, 2],
+            data: vec![2.0, -1.0, -1.0, 2.0, -1.0, -1.0, 2.0],
+        };
+        let mut b = CsrBatch::zeros_like(&base, 2);
+        b.values_mut(0).copy_from_slice(&base.data);
+        b.values_mut(1)
+            .copy_from_slice(&[4.0, -1.0, -1.0, 4.0, -1.0, -1.0, 4.0]);
+        b
+    }
+
+    #[test]
+    fn lockstep_matches_looped_scalar_cg() {
+        let a = spd_batch();
+        let b = vec![1.0, 2.0, 3.0, -1.0, 0.5, 2.0];
+        let cfg = SolverConfig::default();
+        let (x, stats) = cg_batch(&a, &b, &cfg);
+        for s in 0..2 {
+            let inst = a.instance(s);
+            let pc = JacobiPrecond::new(&inst);
+            let (xs, st) = cg(&inst, &b[s * 3..(s + 1) * 3], &pc, &cfg);
+            assert_eq!(stats[s].iterations, st.iterations, "lane {s}");
+            assert_eq!(stats[s].converged, st.converged, "lane {s}");
+            assert_eq!(&x[s * 3..(s + 1) * 3], &xs[..], "lane {s}");
+        }
+    }
+
+    #[test]
+    fn zero_rhs_lane_converges_immediately_others_proceed() {
+        let a = spd_batch();
+        let b = vec![0.0, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let (x, stats) = cg_batch(&a, &b, &SolverConfig::default());
+        assert!(stats[0].converged);
+        assert_eq!(stats[0].iterations, 0);
+        assert_eq!(&x[..3], &[0.0, 0.0, 0.0]);
+        assert!(stats[1].converged);
+        assert!(stats[1].iterations > 0);
+        // Residual check on the live lane.
+        let mut ax = vec![0.0; 3];
+        a.spmv(1, &x[3..], &mut ax);
+        for i in 0..3 {
+            assert!((ax[i] - b[3 + i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn multi_rhs_matches_looped_scalar_cg() {
+        let m = Csr {
+            nrows: 3,
+            ncols: 3,
+            indptr: vec![0, 2, 5, 7],
+            indices: vec![0, 1, 0, 1, 2, 1, 2],
+            data: vec![3.0, -1.0, -1.0, 3.0, -1.0, -1.0, 3.0],
+        };
+        let b = vec![1.0, 0.0, -1.0, 2.0, 2.0, 2.0, 0.5, -0.25, 1.5];
+        let cfg = SolverConfig::default();
+        let op = MultiRhs::new(&m, 3);
+        let (x, stats) = cg_batch(&op, &b, &cfg);
+        let pc = JacobiPrecond::new(&m);
+        for s in 0..3 {
+            let (xs, st) = cg(&m, &b[s * 3..(s + 1) * 3], &pc, &cfg);
+            assert_eq!(stats[s].iterations, st.iterations, "rhs {s}");
+            assert_eq!(&x[s * 3..(s + 1) * 3], &xs[..], "rhs {s}");
+        }
+    }
+
+    #[test]
+    fn unconverged_lanes_report_max_iter() {
+        let a = spd_batch();
+        let b = vec![1.0, 2.0, 3.0, -1.0, 0.5, 2.0];
+        let cfg = SolverConfig {
+            max_iter: 1,
+            rel_tol: 1e-16,
+            abs_tol: 0.0,
+        };
+        let (_, stats) = cg_batch(&a, &b, &cfg);
+        for st in &stats {
+            assert!(!st.converged);
+            assert_eq!(st.iterations, 1);
+            assert!(st.rel_residual > 0.0);
+        }
+    }
+}

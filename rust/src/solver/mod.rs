@@ -1,12 +1,16 @@
 //! Iterative linear solvers (the paper's unified configuration, Table B.1:
-//! BiCGSTAB + Jacobi preconditioning, relative tolerance 1e-10).
+//! BiCGSTAB + Jacobi preconditioning, relative tolerance 1e-10), plus the
+//! blocked lockstep CG ([`cg_batch`]) that advances `S` shared-pattern
+//! systems with one fused SpMV per Krylov iteration.
 
 pub mod bicgstab;
 pub mod cg;
+pub mod cg_batch;
 pub mod precond;
 
 pub use bicgstab::bicgstab;
 pub use cg::cg;
+pub use cg_batch::{cg_batch, LockstepOp, MultiRhs};
 pub use precond::{IdentityPrecond, JacobiPrecond, Preconditioner};
 
 use crate::sparse::Csr;

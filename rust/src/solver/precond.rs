@@ -16,6 +16,13 @@ impl Preconditioner for IdentityPrecond {
     }
 }
 
+/// Invert a diagonal with the Jacobi zero-guard. Shared by the scalar
+/// [`JacobiPrecond`] and the blocked [`crate::solver::cg_batch`] path so
+/// both apply bitwise-identical preconditioning.
+pub fn jacobi_inverse(diag: Vec<f64>) -> Vec<f64> {
+    diag.into_iter().map(|d| if d.abs() > 1e-300 { 1.0 / d } else { 1.0 }).collect()
+}
+
 /// Jacobi (diagonal scaling) preconditioner — the paper's choice (Table B.1).
 pub struct JacobiPrecond {
     inv_diag: Vec<f64>,
@@ -23,12 +30,13 @@ pub struct JacobiPrecond {
 
 impl JacobiPrecond {
     pub fn new(a: &Csr) -> JacobiPrecond {
-        let inv_diag = a
-            .diagonal()
-            .into_iter()
-            .map(|d| if d.abs() > 1e-300 { 1.0 / d } else { 1.0 })
-            .collect();
-        JacobiPrecond { inv_diag }
+        JacobiPrecond { inv_diag: jacobi_inverse(a.diagonal()) }
+    }
+
+    /// The stored inverse diagonal — lets blocked solvers reuse a
+    /// setup-time preconditioner instead of re-extracting the diagonal.
+    pub fn inv_diag(&self) -> &[f64] {
+        &self.inv_diag
     }
 }
 

@@ -91,6 +91,57 @@ impl CsrBatch {
         });
     }
 
+    /// `Y_s = A_s·X_s` for EVERY instance in one pass over the shared
+    /// pattern: each `indptr`/`indices` read drives all `S` value arrays and
+    /// all `S` input vectors through a fused instance-major inner loop, so
+    /// the symbolic structure is paid once per batch instead of once per
+    /// instance. `x` and `y` are instance-major (`S × ncols` / `S × nrows`).
+    /// Per instance the row accumulation order matches [`CsrBatch::spmv`]
+    /// bitwise — the blocked solvers inherit the scalar CG trajectory.
+    pub fn spmv_batch(&self, x: &[f64], y: &mut [f64]) {
+        let s_n = self.n_instances;
+        assert_eq!(x.len(), s_n * self.ncols);
+        assert_eq!(y.len(), s_n * self.nrows);
+        let nnz = self.nnz();
+        let (nrows, ncols) = (self.nrows, self.ncols);
+        let yp = threadpool::SyncPtr::new(y);
+        let threads = threadpool::default_threads();
+        threadpool::parallel_ranges(nrows, threads, |r0, r1| {
+            let mut acc = vec![0.0; s_n];
+            for i in r0..r1 {
+                let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+                acc.iter_mut().for_each(|a| *a = 0.0);
+                for p in lo..hi {
+                    let c = self.indices[p];
+                    for (s, a) in acc.iter_mut().enumerate() {
+                        *a += self.data[s * nnz + p] * x[s * ncols + c];
+                    }
+                }
+                for (s, a) in acc.iter().enumerate() {
+                    // SAFETY: row `i` of every instance is written by
+                    // exactly one task (tasks own disjoint row ranges).
+                    unsafe { *yp.get().add(s * nrows + i) = *a };
+                }
+            }
+        });
+    }
+
+    /// Diagonal of instance `s` (0.0 where the pattern has no diagonal
+    /// entry) — the batched counterpart of [`Csr::diagonal`].
+    pub fn diagonal(&self, s: usize) -> Vec<f64> {
+        let vals = self.values(s);
+        let n = self.nrows.min(self.ncols);
+        (0..n)
+            .map(|i| {
+                let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+                match self.indices[lo..hi].binary_search(&i) {
+                    Ok(p) => vals[lo + p],
+                    Err(_) => 0.0,
+                }
+            })
+            .collect()
+    }
+
     /// Structural invariants: valid shared pattern + value bookkeeping.
     pub fn check_invariants(&self) -> Result<()> {
         // Validate the shared pattern by borrowing instance 0's view.
@@ -156,6 +207,37 @@ mod tests {
             b.spmv(s, &x, &mut y);
             assert_eq!(y, b.instance(s).dot(&x));
         }
+    }
+
+    #[test]
+    fn spmv_batch_matches_per_instance_spmv() {
+        let p = pattern();
+        let s_n = 3;
+        let mut b = CsrBatch::zeros_like(&p, s_n);
+        for s in 0..s_n {
+            let scale = 1.0 + s as f64;
+            b.values_mut(s)
+                .copy_from_slice(&p.data.iter().map(|v| scale * v).collect::<Vec<_>>());
+        }
+        let x: Vec<f64> = (0..s_n * 3).map(|i| 0.5 + i as f64).collect();
+        let mut y = vec![0.0; s_n * 3];
+        b.spmv_batch(&x, &mut y);
+        for s in 0..s_n {
+            let mut ys = vec![0.0; 3];
+            b.spmv(s, &x[s * 3..(s + 1) * 3], &mut ys);
+            assert_eq!(&y[s * 3..(s + 1) * 3], &ys[..], "instance {s}");
+        }
+    }
+
+    #[test]
+    fn diagonal_per_instance() {
+        let p = pattern();
+        let mut b = CsrBatch::zeros_like(&p, 2);
+        b.values_mut(0).copy_from_slice(&p.data);
+        b.values_mut(1)
+            .copy_from_slice(&p.data.iter().map(|v| 3.0 * v).collect::<Vec<_>>());
+        assert_eq!(b.diagonal(0), p.diagonal());
+        assert_eq!(b.diagonal(1), vec![3.0, 9.0, 15.0]);
     }
 
     #[test]

@@ -72,6 +72,37 @@ impl Csr {
         y
     }
 
+    /// `Y_s = A·X_s` for `s_n` instance-major right-hand sides in one pass
+    /// over the pattern (each nonzero read once per batch): the shared-
+    /// matrix counterpart of [`crate::sparse::CsrBatch::spmv_batch`], used
+    /// by the lockstep time steppers whose mass solves repeat over one
+    /// pattern. Per instance the accumulation order matches [`Csr::spmv`]
+    /// bitwise.
+    pub fn spmv_multi(&self, x: &[f64], y: &mut [f64], s_n: usize) {
+        assert_eq!(x.len(), s_n * self.ncols);
+        assert_eq!(y.len(), s_n * self.nrows);
+        let (nrows, ncols) = (self.nrows, self.ncols);
+        let yp = threadpool::SyncPtr::new(y);
+        let threads = threadpool::default_threads();
+        threadpool::parallel_ranges(nrows, threads, |r0, r1| {
+            let mut acc = vec![0.0; s_n];
+            for i in r0..r1 {
+                let (cols, vals) = self.row(i);
+                acc.iter_mut().for_each(|a| *a = 0.0);
+                for (c, v) in cols.iter().zip(vals) {
+                    for (s, a) in acc.iter_mut().enumerate() {
+                        *a += v * x[s * ncols + *c];
+                    }
+                }
+                for (s, a) in acc.iter().enumerate() {
+                    // SAFETY: row `i` of every instance is written by
+                    // exactly one task (tasks own disjoint row ranges).
+                    unsafe { *yp.get().add(s * nrows + i) = *a };
+                }
+            }
+        });
+    }
+
     /// `Y = A·X` for a dense `X` with `ncols_x` columns (row-major).
     pub fn spmm_dense(&self, x: &[f64], ncols_x: usize) -> Vec<f64> {
         assert_eq!(x.len(), self.ncols * ncols_x);
@@ -296,6 +327,19 @@ mod tests {
         let a = example();
         let x = [1.0, 2.0, 3.0];
         assert_eq!(a.dot(&x), vec![7.0, 6.0, 19.0]);
+    }
+
+    #[test]
+    fn spmv_multi_matches_per_rhs_spmv() {
+        let a = example();
+        let s_n = 3;
+        let x: Vec<f64> = (0..s_n * 3).map(|i| 0.25 * i as f64 - 0.5).collect();
+        let mut y = vec![0.0; s_n * 3];
+        a.spmv_multi(&x, &mut y, s_n);
+        for s in 0..s_n {
+            let ys = a.dot(&x[s * 3..(s + 1) * 3]);
+            assert_eq!(&y[s * 3..(s + 1) * 3], &ys[..], "rhs {s}");
+        }
     }
 
     #[test]

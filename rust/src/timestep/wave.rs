@@ -9,7 +9,7 @@
 use crate::assembly::{AssemblyContext, BilinearForm, Coefficient};
 use crate::bc::{condense, DirichletBc};
 use crate::mesh::Mesh;
-use crate::solver::{cg, JacobiPrecond, SolverConfig};
+use crate::solver::{cg, cg_batch, JacobiPrecond, MultiRhs, SolverConfig};
 use crate::sparse::Csr;
 
 /// Precomputed wave stepping state.
@@ -118,6 +118,70 @@ impl WaveIntegrator {
         traj
     }
 
+    /// Roll out `S` trajectories in lockstep: per step, ONE fused `K` SpMV
+    /// over all instances ([`Csr::spmv_multi`]) and ONE blocked mass solve
+    /// ([`cg_batch`] on [`MultiRhs`]) replace `S` scalar SpMV+CG pairs —
+    /// the mass solves repeat over a shared pattern, so the pattern (and
+    /// here the values too) is read once per step for the whole set.
+    /// Returns per-instance trajectories on free DoFs; each is bitwise
+    /// identical to [`WaveIntegrator::rollout`] on that initial condition.
+    pub fn rollout_batch(&self, u0s_full: &[Vec<f64>], steps: usize) -> Vec<Vec<Vec<f64>>> {
+        let s_n = u0s_full.len();
+        let nf = self.free.len();
+        if s_n == 0 {
+            return Vec::new();
+        }
+        let mut trajs: Vec<Vec<Vec<f64>>> = vec![Vec::with_capacity(steps + 1); s_n];
+        let mut u_prev = Vec::with_capacity(s_n * nf);
+        for u0 in u0s_full {
+            u_prev.extend(self.restrict(u0));
+        }
+        for (s, traj) in trajs.iter_mut().enumerate() {
+            traj.push(u_prev[s * nf..(s + 1) * nf].to_vec());
+        }
+        // Taylor first step (zero initial velocity), blocked:
+        // U^1 = U^0 − (Δt²/2) c² M⁻¹K U^0.
+        let mut ku = vec![0.0; s_n * nf];
+        self.k.spmv_multi(&u_prev, &mut ku, s_n);
+        // Reuse the constructor-time Jacobi diagonal; M never changes.
+        let op = MultiRhs::with_inv_diag(&self.m, s_n, self.precond.inv_diag().to_vec());
+        let (minv_ku, stats) = cg_batch(&op, &ku, &self.config);
+        // Hard check: this feeds bulk reference-data generation, where a
+        // silently unconverged mass solve would corrupt every later step.
+        assert!(stats.iter().all(|st| st.converged), "first-step mass solve: {stats:?}");
+        let half = 0.5 * self.dt * self.dt * self.c2;
+        let mut u_curr: Vec<f64> = u_prev
+            .iter()
+            .zip(&minv_ku)
+            .map(|(&u, &mk)| u - half * mk)
+            .collect();
+        for (s, traj) in trajs.iter_mut().enumerate() {
+            traj.push(u_curr[s * nf..(s + 1) * nf].to_vec());
+        }
+        // Central-difference steps, blocked.
+        let scale = self.dt * self.dt * self.c2;
+        for _ in 2..=steps {
+            self.k.spmv_multi(&u_curr, &mut ku, s_n);
+            let (minv_ku, stats) = cg_batch(&op, &ku, &self.config);
+            assert!(stats.iter().all(|st| st.converged), "mass solve: {stats:?}");
+            let next: Vec<f64> = u_curr
+                .iter()
+                .zip(&u_prev)
+                .zip(&minv_ku)
+                .map(|((&uc, &up), &mk)| 2.0 * uc - up - scale * mk)
+                .collect();
+            for (s, traj) in trajs.iter_mut().enumerate() {
+                traj.push(next[s * nf..(s + 1) * nf].to_vec());
+            }
+            u_prev = u_curr;
+            u_curr = next;
+        }
+        for traj in trajs.iter_mut() {
+            traj.truncate(steps + 1);
+        }
+        trajs
+    }
+
     /// Discrete energy `½ U̇ᵀMU̇ + ½c² UᵀKU` at midpoints — conserved (to
     /// O(Δt²)) by the central scheme under the CFL limit.
     pub fn energy(&self, u_prev: &[f64], u_curr: &[f64]) -> f64 {
@@ -179,6 +243,34 @@ mod tests {
             e0,
             e_end
         );
+    }
+
+    #[test]
+    fn rollout_batch_matches_looped_rollout() {
+        let m = unit_square_tri(8);
+        let w = WaveIntegrator::new(&m, 2.0, 1e-3);
+        let pi = std::f64::consts::PI;
+        let ics: Vec<Vec<f64>> = (1..=3)
+            .map(|mode| {
+                (0..m.n_nodes())
+                    .map(|i| {
+                        let p = m.point(i);
+                        (mode as f64 * pi * p[0]).sin() * (pi * p[1]).sin()
+                    })
+                    .collect()
+            })
+            .collect();
+        let steps = 12;
+        let batch = w.rollout_batch(&ics, steps);
+        assert_eq!(batch.len(), 3);
+        for (s, ic) in ics.iter().enumerate() {
+            let solo = w.rollout(ic, steps);
+            assert_eq!(batch[s].len(), solo.len(), "ic {s} length");
+            for (k, (a, b)) in batch[s].iter().zip(&solo).enumerate() {
+                let err = crate::util::rel_l2(a, b);
+                assert!(err < 1e-12, "ic {s} step {k}: rel err {err}");
+            }
+        }
     }
 
     #[test]

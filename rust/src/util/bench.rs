@@ -144,6 +144,46 @@ impl Bench {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    /// Median of a named measurement, if recorded.
+    pub fn median_of(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|m| m.name == name).map(|m| m.median_s)
+    }
+
+    /// Write a standalone speedup record comparing a baseline measurement
+    /// against an optimized one (e.g. `target/BENCH_solver.json`), so the
+    /// perf trajectory of an optimization can be tracked across PRs
+    /// without parsing the full JSONL stream.
+    pub fn write_speedup_json(
+        &self,
+        path: &str,
+        baseline: &str,
+        optimized: &str,
+        meta: &[(&str, f64)],
+    ) -> Option<f64> {
+        let base = self.median_of(baseline)?;
+        let opt = self.median_of(optimized)?;
+        let speedup = base / opt.max(1e-12);
+        let mut fields = vec![
+            ("suite", Json::Str(self.suite.clone())),
+            ("baseline", Json::Str(baseline.to_string())),
+            ("optimized", Json::Str(optimized.to_string())),
+            ("baseline_median_s", Json::Num(base)),
+            ("optimized_median_s", Json::Num(opt)),
+            ("speedup", Json::Num(speedup)),
+        ];
+        for (k, v) in meta {
+            fields.push((*k, Json::Num(*v)));
+        }
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        if let Err(e) = std::fs::write(path, obj(fields).to_string_compact()) {
+            eprintln!("bench: failed to write {path}: {e}");
+            return None;
+        }
+        Some(speedup)
+    }
 }
 
 /// Human-readable duration.
@@ -177,6 +217,18 @@ mod tests {
         assert_eq!(b.results().len(), 1);
         assert!(b.results()[0].median_s > 0.0);
         assert!(b.results()[0].p10_s <= b.results()[0].p90_s);
+    }
+
+    #[test]
+    fn speedup_json_written() {
+        let mut b = Bench::new("selftest_speedup");
+        b.record("base", &[], 2.0);
+        b.record("opt", &[], 1.0);
+        let s = b.write_speedup_json("target/test_speedup.json", "base", "opt", &[("batch", 4.0)]);
+        assert_eq!(s, Some(2.0));
+        let text = std::fs::read_to_string("target/test_speedup.json").unwrap();
+        assert!(text.contains("\"speedup\""));
+        assert!(b.write_speedup_json("target/x.json", "missing", "opt", &[]).is_none());
     }
 
     #[test]

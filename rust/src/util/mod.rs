@@ -30,23 +30,68 @@ pub fn rel_l2(a: &[f64], b: &[f64]) -> f64 {
     }
 }
 
-/// Euclidean norm.
-pub fn norm2(a: &[f64]) -> f64 {
-    a.iter().map(|x| x * x).sum::<f64>().sqrt()
+/// Minimum length before the BLAS-1 kernels go parallel; below this the
+/// pool dispatch costs more than the arithmetic.
+const PAR_MIN: usize = 16_384;
+
+/// Fixed reduction-block size for the parallel dot/norm kernels. Partial
+/// sums are always accumulated over `PAR_CHUNK`-element blocks in index
+/// order and then combined in index order, so the result is bitwise
+/// identical for every `TG_THREADS` setting (the path choice depends only
+/// on the vector length, never on the thread count).
+const PAR_CHUNK: usize = 4096;
+
+/// Chunked partial sums of `f(i)` over `[0, n)` — deterministic across
+/// thread counts (see [`PAR_CHUNK`]).
+fn chunked_sum(n: usize, f: impl Fn(usize) -> f64 + Sync) -> f64 {
+    let n_chunks = n.div_ceil(PAR_CHUNK);
+    let mut partials = vec![0.0; n_chunks];
+    let threads = threadpool::default_threads();
+    threadpool::for_each_row_mut(&mut partials, 1, threads, |c, out| {
+        let lo = c * PAR_CHUNK;
+        let hi = (lo + PAR_CHUNK).min(n);
+        let mut acc = 0.0;
+        for i in lo..hi {
+            acc += f(i);
+        }
+        out[0] = acc;
+    });
+    partials.iter().sum()
 }
 
-/// Dot product.
+/// Euclidean norm. Parallel (fixed-chunk partial sums) above [`PAR_MIN`].
+pub fn norm2(a: &[f64]) -> f64 {
+    if a.len() < PAR_MIN {
+        return a.iter().map(|x| x * x).sum::<f64>().sqrt();
+    }
+    chunked_sum(a.len(), |i| a[i] * a[i]).sqrt()
+}
+
+/// Dot product. Parallel (fixed-chunk partial sums) above [`PAR_MIN`].
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    if a.len() < PAR_MIN {
+        return a.iter().zip(b).map(|(x, y)| x * y).sum();
+    }
+    chunked_sum(a.len(), |i| a[i] * b[i])
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x`. Parallel above [`PAR_MIN`] (elementwise — bitwise
+/// identical for any chunking).
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
+    if y.len() < PAR_MIN {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+        return;
     }
+    let threads = threadpool::default_threads();
+    threadpool::for_each_chunk_mut(y, threads, |off, chunk| {
+        for (yi, xi) in chunk.iter_mut().zip(&x[off..off + chunk.len()]) {
+            *yi += alpha * xi;
+        }
+    });
 }
 
 #[cfg(test)]
@@ -77,5 +122,43 @@ mod tests {
         assert_eq!(y, [12.0, 24.0]);
         assert_eq!(dot(&x, &y), 12.0 + 48.0);
         assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn large_blas1_matches_fixed_chunk_reference() {
+        // Above PAR_MIN the kernels must produce EXACTLY the fixed-chunk
+        // reduction (same blocks, same order) regardless of thread count.
+        let n = 3 * PAR_MIN / 2 + 17;
+        let a: Vec<f64> = (0..n).map(|i| ((i * 37 + 11) % 101) as f64 * 1e-2 - 0.5).collect();
+        let b: Vec<f64> = (0..n).map(|i| ((i * 53 + 7) % 97) as f64 * 1e-2 - 0.4).collect();
+        let mut dot_ref = 0.0;
+        let mut nrm_ref = 0.0;
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + PAR_CHUNK).min(n);
+            let mut d = 0.0;
+            let mut s = 0.0;
+            for i in lo..hi {
+                d += a[i] * b[i];
+                s += a[i] * a[i];
+            }
+            dot_ref += d;
+            nrm_ref += s;
+            lo = hi;
+        }
+        assert_eq!(dot(&a, &b), dot_ref);
+        assert_eq!(norm2(&a), nrm_ref.sqrt());
+        // And they agree with the naive serial sums to rounding.
+        let serial: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - serial).abs() <= 1e-9 * serial.abs().max(1.0));
+
+        // axpy is elementwise: exactly the serial result for any chunking.
+        let mut y_par = b.clone();
+        axpy(0.37, &a, &mut y_par);
+        let mut y_ser = b.clone();
+        for (yi, xi) in y_ser.iter_mut().zip(&a) {
+            *yi += 0.37 * xi;
+        }
+        assert_eq!(y_par, y_ser);
     }
 }

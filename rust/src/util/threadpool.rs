@@ -1,20 +1,247 @@
-//! A small scoped-parallelism helper (`rayon` is unavailable offline).
+//! A small persistent-pool parallelism helper (`rayon` is unavailable
+//! offline).
 //!
-//! `parallel_chunks` splits an index range into contiguous chunks and runs a
-//! worker per chunk on `std::thread` scoped threads. On the single-core CI
-//! image this degrades gracefully to the sequential path; the code paths are
-//! identical so results are deterministic either way (each worker owns a
-//! disjoint output slice — no atomics, matching the paper's determinism
-//! argument for Sparse-Reduce vs scatter-add atomics).
+//! The public entry points split an index range (or an output slice) into
+//! contiguous chunks and run one worker per chunk. Chunking depends only on
+//! the requested `threads` value and the problem size — never on how many
+//! OS threads actually execute the chunks — and each worker owns a disjoint
+//! output region (no atomics on the data path), so results are
+//! deterministic across pool sizes, matching the paper's determinism
+//! argument for Sparse-Reduce vs scatter-add atomics.
+//!
+//! Execution is backed by a lazily-initialized persistent worker pool
+//! (`OnceLock` + condvar-parked workers) instead of per-call
+//! `std::thread::scope` spawning: the blocked CG driver issues one fused
+//! SpMV plus a handful of BLAS-1 reductions per iteration, and spawning
+//! fresh OS threads for each of those put thread start-up on the hot path.
+//! Workers are spawned once per process, park on a condvar while idle, and
+//! claim chunk indices from a shared atomic counter when a job is
+//! broadcast. On a single-core image (or `TG_THREADS=1`) no workers are
+//! spawned and every entry point degrades to the identical sequential code
+//! path.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of workers to use: `TG_THREADS` env var or available parallelism.
+/// The resolution (env lookup + parse) runs once per process — this sits
+/// inside every SpMV and reduce, so it must not re-read the environment on
+/// each call.
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("TG_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
+    static CACHED: OnceLock<usize> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        if let Ok(v) = std::env::var("TG_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// A broadcast job: a type-erased task closure plus claim/completion
+/// counters. Late-waking workers are safe by construction: every task index
+/// is claimed before `remaining` can reach zero, so once the submitter
+/// returns (and the closure dies) any further `next` claim sees
+/// `>= n_tasks` and never dereferences `data`.
+struct Job {
+    /// Borrowed closure, valid until `remaining == 0`.
+    data: *const (),
+    /// Monomorphized shim that calls `data` as the concrete closure type.
+    call: unsafe fn(*const (), usize),
+    n_tasks: usize,
+    /// Next unclaimed task index.
+    next: AtomicUsize,
+    /// Tasks not yet completed.
+    remaining: AtomicUsize,
+    /// Set when any task panicked; the submitter re-raises so a failing
+    /// assertion inside a task still fails the caller (as scoped threads
+    /// did) instead of deadlocking the pool.
+    panicked: AtomicBool,
+}
+
+// SAFETY: `data` is only dereferenced for claimed task indices `< n_tasks`,
+// and the submitting thread blocks until all such tasks complete, keeping
+// the borrowed closure alive for every dereference.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+struct PoolState {
+    /// Bumped on every broadcast so parked workers can detect new work.
+    epoch: u64,
+    /// The job of the current epoch. A stale entry after completion is
+    /// harmless: its tasks are all claimed, so workers no-op on it.
+    job: Option<Arc<Job>>,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here waiting for a new epoch.
+    work_cv: Condvar,
+    /// The submitter parks here waiting for `remaining == 0`.
+    done_cv: Condvar,
+}
+
+struct Pool {
+    shared: Arc<PoolShared>,
+    /// Spawned worker threads (excludes the submitting thread, which always
+    /// participates in its own jobs).
+    workers: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+thread_local! {
+    /// Set permanently on pool workers and temporarily on an active
+    /// submitter, so nested submissions (a task that itself calls a
+    /// parallel entry point) fall back to sequential execution instead of
+    /// deadlocking on their own job or the submission lock.
+    static IN_POOL_CONTEXT: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let workers = default_threads().saturating_sub(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { epoch: 0, job: None }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        for _ in 0..workers {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("tg-pool".into())
+                .spawn(move || worker_loop(sh))
+                .expect("spawn pool worker");
+        }
+        Pool { shared, workers }
+    })
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    IN_POOL_CONTEXT.with(|w| w.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            while st.epoch == seen {
+                st = shared.work_cv.wait(st).unwrap();
+            }
+            seen = st.epoch;
+            match st.job.clone() {
+                Some(j) => j,
+                None => continue,
+            }
+        };
+        run_claimed_tasks(&shared, &job);
+    }
+}
+
+/// Claim and run tasks of `job` until the claim counter is exhausted.
+fn run_claimed_tasks(shared: &PoolShared, job: &Job) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n_tasks {
+            return;
+        }
+        // SAFETY: `i < n_tasks`, so `remaining > 0` and the submitter is
+        // still blocked, keeping the closure behind `data` alive.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+            (job.call)(job.data, i)
+        }));
+        if res.is_err() {
+            job.panicked.store(true, Ordering::Release);
+        }
+        if job.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last task: wake the submitter (lock ordering prevents a lost
+            // wakeup against its `remaining` check).
+            let _guard = shared.state.lock().unwrap();
+            shared.done_cv.notify_all();
         }
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(0), f(1), ..., f(n_tasks-1)` across the persistent pool (the
+/// calling thread participates). Falls back to a plain sequential loop when
+/// the pool has no workers, the call is nested inside a pool task, or there
+/// is at most one task.
+fn run_parallel<F: Fn(usize) + Sync>(n_tasks: usize, f: &F) {
+    if n_tasks == 0 {
+        return;
+    }
+    if n_tasks == 1 || IN_POOL_CONTEXT.with(|w| w.get()) {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+    let pool = pool();
+    if pool.workers == 0 {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+    // One in-flight job at a time: concurrent top-level submitters (e.g.
+    // the multi-threaded test harness) serialize here. Poisoning is
+    // recovered: it only means an earlier job's panic already propagated.
+    static SUBMIT: Mutex<()> = Mutex::new(());
+    let _submit_guard = SUBMIT.lock().unwrap_or_else(|e| e.into_inner());
+
+    unsafe fn call_shim<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+        let f = unsafe { &*(data as *const F) };
+        f(i);
+    }
+    let job = Arc::new(Job {
+        data: f as *const F as *const (),
+        call: call_shim::<F>,
+        n_tasks,
+        next: AtomicUsize::new(0),
+        remaining: AtomicUsize::new(n_tasks),
+        panicked: AtomicBool::new(false),
+    });
+    {
+        let mut st = pool.shared.state.lock().unwrap();
+        st.epoch += 1;
+        st.job = Some(Arc::clone(&job));
+        pool.shared.work_cv.notify_all();
+    }
+    // Participate (nested parallel calls inside `f` stay sequential while
+    // the flag is set), then wait for stragglers.
+    IN_POOL_CONTEXT.with(|w| w.set(true));
+    run_claimed_tasks(&pool.shared, &job);
+    IN_POOL_CONTEXT.with(|w| w.set(false));
+    {
+        let mut st = pool.shared.state.lock().unwrap();
+        while job.remaining.load(Ordering::Acquire) > 0 {
+            st = pool.shared.done_cv.wait(st).unwrap();
+        }
+    }
+    if job.panicked.load(Ordering::Acquire) {
+        panic!("threadpool task panicked (see worker output above)");
+    }
+}
+
+/// Raw-pointer wrapper letting disjoint output regions be written from
+/// different pool tasks. The *caller* asserts disjointness; the wrapper
+/// only carries the pointer across the closure's `Sync` bound.
+pub struct SyncPtr<T>(*mut T);
+
+// SAFETY: the constructor is only reachable with `T: Send`, and every use
+// site partitions the pointee into per-task disjoint regions.
+unsafe impl<T: Send> Send for SyncPtr<T> {}
+unsafe impl<T: Send> Sync for SyncPtr<T> {}
+
+impl<T: Send> SyncPtr<T> {
+    /// Wrap a mutable slice's base pointer for cross-task disjoint writes.
+    pub fn new(slice: &mut [T]) -> SyncPtr<T> {
+        SyncPtr(slice.as_mut_ptr())
+    }
+
+    /// The wrapped base pointer.
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
 }
 
 /// Run `f(chunk_start, chunk_end)` over `[0, n)` split into `threads` chunks.
@@ -28,16 +255,11 @@ pub fn parallel_ranges(n: usize, threads: usize, f: impl Fn(usize, usize) + Sync
         return;
     }
     let chunk = n.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for t in 0..threads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let fref = &f;
-            scope.spawn(move || fref(lo, hi));
-        }
+    let n_tasks = n.div_ceil(chunk);
+    run_parallel(n_tasks, &|t| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        f(lo, hi);
     });
 }
 
@@ -60,22 +282,42 @@ pub fn for_each_row_mut<T: Send>(
         return;
     }
     let rows_per = nrows.div_ceil(threads);
-    std::thread::scope(|scope| {
-        let mut rest = out;
-        let mut row0 = 0;
-        while !rest.is_empty() {
-            let take = (rows_per * stride).min(rest.len());
-            let (head, tail) = rest.split_at_mut(take);
-            let fref = &f;
-            let base = row0;
-            scope.spawn(move || {
-                for (i, row) in head.chunks_mut(stride).enumerate() {
-                    fref(base + i, row);
-                }
-            });
-            row0 += take / stride;
-            rest = tail;
+    let n_tasks = nrows.div_ceil(rows_per);
+    let base = SyncPtr::new(out);
+    run_parallel(n_tasks, &|t| {
+        let row0 = t * rows_per;
+        let row1 = ((t + 1) * rows_per).min(nrows);
+        for r in row0..row1 {
+            // SAFETY: tasks own disjoint row ranges of `out`.
+            let row =
+                unsafe { std::slice::from_raw_parts_mut(base.get().add(r * stride), stride) };
+            f(r, row);
         }
+    });
+}
+
+/// Split `out` into `threads` contiguous chunks and process each in
+/// parallel: `f(chunk_start_index, chunk_slice)`.
+pub fn for_each_chunk_mut<T: Send>(
+    out: &mut [T],
+    threads: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    let n = out.len();
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 {
+        f(0, out);
+        return;
+    }
+    let per = n.div_ceil(threads);
+    let n_tasks = n.div_ceil(per);
+    let base = SyncPtr::new(out);
+    run_parallel(n_tasks, &|t| {
+        let lo = t * per;
+        let hi = ((t + 1) * per).min(n);
+        // SAFETY: tasks own disjoint element ranges of `out`.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.get().add(lo), hi - lo) };
+        f(lo, chunk);
     });
 }
 
@@ -118,5 +360,54 @@ mod tests {
         parallel_ranges(0, 4, |lo, hi| assert_eq!(lo, hi));
         let mut empty: Vec<usize> = vec![];
         for_each_row_mut(&mut empty, 3, 4, |_, _| panic!("no rows"));
+        for_each_chunk_mut(&mut empty, 4, |_, _| {});
+    }
+
+    #[test]
+    fn chunks_cover_disjointly() {
+        let mut data = vec![0usize; 101];
+        for_each_chunk_mut(&mut data, 4, |lo, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v += lo + i + 1;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i + 1, "element {i} written exactly once");
+        }
+    }
+
+    #[test]
+    fn pool_reuse_many_submissions() {
+        // Exercise repeated pool round-trips (the CG-iteration pattern);
+        // results must stay deterministic and complete every time.
+        let mut out = vec![0u64; 64];
+        for round in 0..200u64 {
+            for_each_chunk_mut(&mut out, 4, |lo, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v = round * 1000 + (lo + i) as u64;
+                }
+            });
+            assert_eq!(out[63], round * 1000 + 63);
+        }
+    }
+
+    #[test]
+    fn nested_submission_falls_back_sequentially() {
+        // A task that itself calls a parallel entry point must not deadlock.
+        let hits = AtomicUsize::new(0);
+        parallel_ranges(8, 4, |lo, hi| {
+            parallel_ranges(hi - lo, 4, |a, b| {
+                hits.fetch_add(b - a, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn default_threads_is_cached_and_positive() {
+        let a = default_threads();
+        let b = default_threads();
+        assert!(a >= 1);
+        assert_eq!(a, b);
     }
 }

@@ -1,0 +1,196 @@
+//! Blocked solve-pipeline parity: `condense_batch` must reproduce `S`
+//! scalar `condense` calls exactly, and lockstep `cg_batch` must reproduce
+//! `S` looped Jacobi-preconditioned `cg` solves — solutions to 1e-12 and
+//! per-instance iteration counts exactly — on jittered (unstructured-like)
+//! 2D triangle and 3D tet meshes, including batches with mixed
+//! converged/unconverged instances. The blocked implementations mirror the
+//! scalar arithmetic order term-for-term (same SpMV row accumulation, same
+//! fixed-chunk BLAS-1 reductions, same Jacobi guard), so the observed
+//! agreement is bitwise.
+
+use tensor_galerkin::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
+use tensor_galerkin::bc::{condense, condense_batch, DirichletBc};
+use tensor_galerkin::mesh::structured::{jitter, unit_cube_tet, unit_square_tri};
+use tensor_galerkin::mesh::Mesh;
+use tensor_galerkin::solver::{cg, cg_batch, JacobiPrecond, MultiRhs, SolverConfig};
+use tensor_galerkin::sparse::CsrBatch;
+use tensor_galerkin::util::rng::Rng;
+
+fn jittered_tri(n: usize, seed: u64) -> Mesh {
+    let mut m = unit_square_tri(n);
+    jitter(&mut m, 0.2, seed);
+    m
+}
+
+fn jittered_tet(n: usize, seed: u64) -> Mesh {
+    let mut m = unit_cube_tet(n);
+    jitter(&mut m, 0.15, seed);
+    m
+}
+
+/// `S` diffusion operators with random nodal coefficients plus `S` random
+/// loads on one topology.
+fn varcoeff_problem(
+    ctx: &AssemblyContext,
+    mesh: &Mesh,
+    s_n: usize,
+    seed: u64,
+) -> (CsrBatch, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let n = ctx.n_dofs();
+    let forms: Vec<BilinearForm> = (0..s_n)
+        .map(|_| {
+            let rho: Vec<f64> = (0..mesh.n_nodes()).map(|_| rng.uniform_in(0.5, 2.0)).collect();
+            BilinearForm::Diffusion { rho: ctx.coeff_nodal(&rho) }
+        })
+        .collect();
+    let kbatch = ctx.assemble_matrix_batch(&forms);
+    let lforms: Vec<LinearForm> = (0..s_n)
+        .map(|_| {
+            let f: Vec<f64> = (0..mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            LinearForm::Source { f: ctx.coeff_nodal(&f) }
+        })
+        .collect();
+    let fbatch = ctx.assemble_vector_batch(&lforms);
+    (kbatch, fbatch)
+}
+
+/// Condense scalar-vs-batch and solve looped-vs-blocked, asserting exact
+/// symbolic parity, 1e-12 solution parity and identical iteration counts.
+fn assert_solve_parity(
+    ctx: &AssemblyContext,
+    mesh: &Mesh,
+    mesh_tag: &str,
+    bc: &DirichletBc,
+    s_n: usize,
+    seed: u64,
+    cfg: &SolverConfig,
+    expect_all_converged: bool,
+) {
+    let (kbatch, fbatch) = varcoeff_problem(ctx, mesh, s_n, seed);
+    let n = ctx.n_dofs();
+
+    let red = condense_batch(&kbatch, &fbatch, bc);
+    let (u, stats) = cg_batch(&red.k, &red.rhs, cfg);
+    let nf = red.n_free();
+
+    let mut seen_converged = 0;
+    let mut seen_unconverged = 0;
+    for s in 0..s_n {
+        let k_s = kbatch.instance(s);
+        let sys = condense(&k_s, &fbatch[s * n..(s + 1) * n], bc);
+        // Condensation parity: same symbolic mapping, same numbers.
+        assert_eq!(red.free, sys.free, "{mesh_tag} instance {s}: free set");
+        assert_eq!(red.k.indptr, sys.k.indptr, "{mesh_tag} instance {s}: indptr");
+        assert_eq!(red.k.indices, sys.k.indices, "{mesh_tag} instance {s}: indices");
+        assert_eq!(red.k.values(s), &sys.k.data[..], "{mesh_tag} instance {s}: values");
+        assert_eq!(red.rhs_of(s), &sys.rhs[..], "{mesh_tag} instance {s}: rhs");
+
+        // Solve parity vs the scalar pipeline.
+        let pc = JacobiPrecond::new(&sys.k);
+        let (u_ref, st_ref) = cg(&sys.k, &sys.rhs, &pc, cfg);
+        assert_eq!(
+            stats[s].iterations, st_ref.iterations,
+            "{mesh_tag} instance {s}: iteration count"
+        );
+        assert_eq!(
+            stats[s].converged, st_ref.converged,
+            "{mesh_tag} instance {s}: convergence flag"
+        );
+        let err = tensor_galerkin::util::rel_l2(&u[s * nf..(s + 1) * nf], &u_ref);
+        assert!(err <= 1e-12, "{mesh_tag} instance {s}: solution rel err {err}");
+        if stats[s].converged {
+            seen_converged += 1;
+        } else {
+            seen_unconverged += 1;
+        }
+    }
+    if expect_all_converged {
+        assert_eq!(seen_converged, s_n, "{mesh_tag}: all instances must converge");
+    } else {
+        assert!(seen_converged > 0, "{mesh_tag}: want a converged lane in the mix");
+        assert!(seen_unconverged > 0, "{mesh_tag}: want an unconverged lane in the mix");
+    }
+}
+
+#[test]
+fn blocked_solve_matches_looped_2d_tri() {
+    let mesh = jittered_tri(8, 11);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    let bc = DirichletBc::from_fn(&mesh, &mesh.boundary_nodes(), |p| p[0] - 0.5 * p[1]);
+    let cfg = SolverConfig::default();
+    assert_solve_parity(&ctx, &mesh, "tri2d", &bc, 5, 101, &cfg, true);
+}
+
+#[test]
+fn blocked_solve_matches_looped_3d_tet() {
+    let mesh = jittered_tet(4, 23);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    let bc = DirichletBc::from_fn(&mesh, &mesh.boundary_nodes(), |p| p[0] + p[1] * p[2]);
+    let cfg = SolverConfig::default();
+    assert_solve_parity(&ctx, &mesh, "tet3d", &bc, 4, 707, &cfg, true);
+}
+
+#[test]
+fn mixed_convergence_lanes_match_looped_cg() {
+    // A zero-load lane converges at iteration 0; with a tight iteration
+    // budget the random-load lanes stop unconverged — the mask must leave
+    // each lane exactly where its scalar counterpart stops.
+    let mesh = jittered_tri(7, 31);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    let n = ctx.n_dofs();
+    let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
+    let (kbatch, mut fbatch) = varcoeff_problem(&ctx, &mesh, 4, 909);
+    // Lane 2 gets a zero load (and homogeneous BC ⇒ zero condensed rhs).
+    for v in fbatch[2 * n..3 * n].iter_mut() {
+        *v = 0.0;
+    }
+    let cfg = SolverConfig { rel_tol: 1e-10, abs_tol: 1e-10, max_iter: 4 };
+
+    let red = condense_batch(&kbatch, &fbatch, &bc);
+    let (u, stats) = cg_batch(&red.k, &red.rhs, &cfg);
+    let nf = red.n_free();
+    assert!(stats[2].converged, "zero-rhs lane converges immediately");
+    assert_eq!(stats[2].iterations, 0);
+    assert!(
+        stats.iter().any(|st| !st.converged),
+        "iteration budget must leave some lane unconverged"
+    );
+    for s in 0..4 {
+        let sys = condense(&kbatch.instance(s), &fbatch[s * n..(s + 1) * n], &bc);
+        let pc = JacobiPrecond::new(&sys.k);
+        let (u_ref, st_ref) = cg(&sys.k, &sys.rhs, &pc, &cfg);
+        assert_eq!(stats[s].iterations, st_ref.iterations, "lane {s} iterations");
+        assert_eq!(stats[s].converged, st_ref.converged, "lane {s} converged");
+        let err = tensor_galerkin::util::rel_l2(&u[s * nf..(s + 1) * nf], &u_ref);
+        assert!(err <= 1e-12, "lane {s}: rel err {err}");
+    }
+}
+
+#[test]
+fn multi_rhs_lockstep_matches_looped_cg() {
+    // One shared operator, S right-hand sides (the solve_batch /
+    // mass-solve regime).
+    let mesh = jittered_tet(3, 5);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    let n = ctx.n_dofs();
+    let k = ctx.assemble_matrix(&BilinearForm::Diffusion { rho: Coefficient::Const(1.0) });
+    let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
+    let zero = vec![0.0; n];
+    let sys = condense(&k, &zero, &bc);
+    let mut rng = Rng::new(77);
+    let s_n = 6;
+    let rhs: Vec<f64> = (0..s_n * sys.free.len()).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+    let cfg = SolverConfig::default();
+    let op = MultiRhs::new(&sys.k, s_n);
+    let (u, stats) = cg_batch(&op, &rhs, &cfg);
+    let pc = JacobiPrecond::new(&sys.k);
+    let nf = sys.free.len();
+    for s in 0..s_n {
+        let (u_ref, st_ref) = cg(&sys.k, &rhs[s * nf..(s + 1) * nf], &pc, &cfg);
+        assert_eq!(stats[s].iterations, st_ref.iterations, "rhs {s} iterations");
+        assert!(stats[s].converged, "rhs {s} must converge");
+        let err = tensor_galerkin::util::rel_l2(&u[s * nf..(s + 1) * nf], &u_ref);
+        assert!(err <= 1e-12, "rhs {s}: rel err {err}");
+    }
+}
