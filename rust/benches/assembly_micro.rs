@@ -2,8 +2,12 @@
 //! Batch-Map (native), Sparse-Reduce (routing), scatter-add baseline,
 //! routing construction, SpMV — per problem size — plus the batched
 //! multi-instance path (S coefficient instances through one shared-topology
-//! Map-Reduce vs S sequential assemblies). Used to locate the hot path
-//! before and after each optimization iteration.
+//! Map-Reduce vs S sequential assemblies) and the fused-vs-two-stage
+//! comparison (tile engine vs materialized `S×E×kl²` intermediate, scalar
+//! and S=16 batched). The fused speedup on the largest 2D batched
+//! diffusion case is written to `BENCH_assembly.json` at the repo root so
+//! the assembly-path perf trajectory is tracked across PRs. Used to locate
+//! the hot path before and after each optimization iteration.
 
 use tensor_galerkin::assembly::routing::Routing;
 use tensor_galerkin::assembly::{scatter, AssemblyContext, BilinearForm, Coefficient};
@@ -94,6 +98,38 @@ fn main() {
             &meta,
             || ctx.assemble_matrix_batch(&forms).data[0],
         );
+
+        // --- Fused tile engine vs the two-stage pipeline, scalar and
+        // batched, on identical inputs and preallocated outputs for BOTH
+        // arms: the two-stage side still materializes the local tensor
+        // (that intermediate is what it is), but reduces into the same
+        // preallocated value buffer the fused side fills, so the
+        // comparison isolates the Map+Reduce execution itself rather than
+        // output/pattern allocation.
+        let mut kdata = vec![0.0; ctx.routing.nnz()];
+        bench.bench(&format!("2d/fused_scalar/e{}", mesh.n_cells()), &[("n_elems", ne)], || {
+            ctx.assemble_matrix_into(&form, &mut kdata);
+            kdata[0]
+        });
+        bench.bench(
+            &format!("2d/two_stage_scalar/e{}", mesh.n_cells()),
+            &[("n_elems", ne)],
+            || {
+                let local = ctx.map_matrix(&form);
+                ctx.routing.reduce_matrix_into(&local, &mut kdata);
+                kdata[0]
+            },
+        );
+        let mut batch_data = vec![0.0; s_batch * ctx.routing.nnz()];
+        bench.bench(&format!("2d/fused_s{s_batch}/e{}", mesh.n_cells()), &meta, || {
+            ctx.assemble_matrix_batch_into(&forms, &mut batch_data);
+            batch_data[0]
+        });
+        bench.bench(&format!("2d/two_stage_s{s_batch}/e{}", mesh.n_cells()), &meta, || {
+            let local = ctx.map_matrix_batch(&forms);
+            ctx.routing.reduce_matrix_batch_into(&local, s_batch, &mut batch_data);
+            batch_data[0]
+        });
     }
 
     for &n in &sizes_3d {
@@ -115,7 +151,8 @@ fn main() {
         });
     }
 
-    // Acceptance summary: batched-vs-sequential speedup per 2D size.
+    // Acceptance summary: batched-vs-sequential and fused-vs-two-stage
+    // speedups per 2D size.
     let find = |name: String| bench.results().iter().find(|m| m.name == name).map(|m| m.median_s);
     for &n in &sizes_2d {
         let e = 2 * n * n;
@@ -127,6 +164,27 @@ fn main() {
                 "2d/e{e}: batched S={s_batch} is {:.2}x sequential (warm plan), {:.2}x (cold plan)",
                 s / b.max(1e-12),
                 cold.map(|c| s / c.max(1e-12)).unwrap_or(f64::NAN),
+            );
+        }
+        let two = find(format!("2d/two_stage_s{s_batch}/e{e}"));
+        let fus = find(format!("2d/fused_s{s_batch}/e{e}"));
+        if let (Some(t), Some(f)) = (two, fus) {
+            println!("2d/e{e}: fused S={s_batch} is {:.2}x two-stage", t / f.max(1e-12));
+        }
+    }
+    // Perf-trajectory record: fused vs two-stage on the largest 2D S-batch
+    // (the workload where the S×E×kl² intermediate traffic dominates).
+    if let Some(&n) = sizes_2d.last() {
+        let e = 2 * n * n;
+        if let Some(speedup) = bench.write_speedup_json(
+            "BENCH_assembly.json",
+            &format!("2d/two_stage_s{s_batch}/e{e}"),
+            &format!("2d/fused_s{s_batch}/e{e}"),
+            &[("n_elems", e as f64), ("batch", s_batch as f64)],
+        ) {
+            println!(
+                "assembly S={s_batch}: fused tile engine is {speedup:.2}x two-stage \
+                 (record: BENCH_assembly.json at the repo root)"
             );
         }
     }

@@ -4,8 +4,8 @@
 //! the blocked-solve comparison: S=16 varcoeff instances solved by one
 //! batched condensation + lockstep `cg_batch` vs S looped
 //! condense+`cg` pipelines. The looped-vs-blocked speedup is written to
-//! `target/BENCH_solver.json` so the solve-path perf trajectory is tracked
-//! across PRs.
+//! `BENCH_solver.json` at the repo root so the solve-path perf trajectory
+//! is tracked across PRs.
 //!
 //! `cargo bench --bench fig2_solver_scaling [-- --sizes 4,8,12,16 --batch 16 --batch-n 10]`
 
@@ -98,11 +98,11 @@ fn main() {
     });
 
     if let Some(speedup) =
-        bench.write_speedup_json("target/BENCH_solver.json", &looped_name, &blocked_name, &meta)
+        bench.write_speedup_json("BENCH_solver.json", &looped_name, &blocked_name, &meta)
     {
         println!(
             "solve S={s_batch}: blocked condense+cg_batch is {speedup:.2}x looped condense+cg \
-             (record: target/BENCH_solver.json)"
+             (record: BENCH_solver.json at the repo root)"
         );
     }
     bench.finish();

@@ -9,6 +9,21 @@
 use crate::fem::geometry::ElementGeometry;
 use crate::fem::reference::Tabulation;
 
+/// One nodal-to-quadrature interpolation `Σ_a u[g_e(a)] φ̂_a(x̂_q)` — the
+/// single source of this kernel's arithmetic order.
+/// [`Coefficient::from_nodal`], the separable plan's nodal collapse
+/// (`BatchedAssembly::element_scalars_nodal_into`) and the Allen-Cahn
+/// reaction path all call it, so their documented bitwise-equality
+/// contracts hold by construction instead of by copy discipline.
+#[inline]
+pub(crate) fn interp_nodal(u: &[f64], dofs: &[usize], tab: &Tabulation, q: usize) -> f64 {
+    let mut s = 0.0;
+    for (a, &d) in dofs.iter().enumerate() {
+        s += u[d] * tab.val(q, a);
+    }
+    s
+}
+
 /// A scalar coefficient field.
 #[derive(Clone, Debug)]
 pub enum Coefficient {
@@ -43,11 +58,7 @@ impl Coefficient {
         for e in 0..n_elems {
             let dofs = &entries[e * k..(e + 1) * k];
             for q in 0..tab.q {
-                let mut s = 0.0;
-                for (a, &d) in dofs.iter().enumerate() {
-                    s += u[d] * tab.val(q, a);
-                }
-                vals.push(s);
+                vals.push(interp_nodal(u, dofs, tab, q));
             }
         }
         Coefficient::Quad(vals)

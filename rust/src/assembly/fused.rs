@@ -1,0 +1,553 @@
+//! The fused Map–Reduce assembly engine: zero-materialization tiles.
+//!
+//! The two-stage pipeline ([`super::local`] then [`super::routing`])
+//! materializes the full local tensor `K_local ∈ R^{E×kl×kl}` between the
+//! stages, so repeated assembly is bound by `O(E·kl²)` intermediate
+//! write+read memory traffic rather than FLOPs. [`FusedPlan`] removes that
+//! intermediate entirely: elements are partitioned into cache-sized tiles,
+//! each tile is Mapped into a small scratch buffer (L1/L2-resident, reused
+//! for every tile) and immediately Reduced through per-tile restrictions of
+//! the routing gather lists. The full `E·kl²` tensor never exists.
+//!
+//! # Determinism / bitwise-parity argument
+//!
+//! [`super::Routing`] accumulates every global target (a CSR nonzero or a
+//! global DoF) by summing its flat local sources in ascending order. The
+//! fused engine preserves exactly that order:
+//!
+//! * **Interior targets** — targets whose sources all come from one tile
+//!   (tiles are contiguous element ranges and gather lists are sorted, so
+//!   "first and last source in the same tile" is sufficient) — are gathered
+//!   in-tile, reading the same sources in the same ascending order from the
+//!   tile scratch. Each interior target is owned by exactly one tile, so
+//!   parallel tiles write disjoint outputs with no atomics.
+//! * **Boundary targets** — targets whose gather list spans ≥ 2 tiles —
+//!   are *not* summed per-tile (per-tile partials would change the
+//!   floating-point association). Instead each tile copies the boundary
+//!   sources it owns into a persistent *halo* buffer (laid out in ascending
+//!   global source order, so per-tile halo ranges are contiguous and
+//!   disjoint), and a short fix-up pass then accumulates every boundary
+//!   target from the halo in ascending source order — the identical
+//!   sequential sum the two-stage Reduce performs.
+//!
+//! Both passes partition their outputs disjointly and the tile/chunk split
+//! depends only on the cached thread count and problem size, never on OS
+//! scheduling — so results are **bitwise identical** to the two-stage path
+//! at any thread count (the same argument as `Routing` vs scatter-add
+//! atomics, extended to tiling).
+//!
+//! # Workspaces
+//!
+//! All transient state (tile scratch, matrix/vector halos, per-element
+//! scalar buffers of the separable plan) lives in an [`AssemblyWorkspace`]
+//! that grows to a high-water mark and is then reused: repeated assembly —
+//! scalar or the fused `S×E` batched variant — performs **zero heap
+//! allocation** in steady state. [`super::AssemblyContext`] owns one behind
+//! a mutex and routes every assembly call through it.
+
+use crate::fem::geometry::ElementGeometry;
+use crate::fem::reference::Tabulation;
+use crate::util::threadpool::{self, SyncPtr};
+
+use super::forms::{BilinearForm, LinearForm};
+use super::local;
+use super::routing::Routing;
+
+/// Target tile-scratch footprint in `f64`s (256 KiB): big enough to
+/// amortize per-tile bookkeeping, small enough to stay L2-resident while
+/// the in-tile gather re-reads it randomly.
+const TILE_BUDGET_F64: usize = 32 * 1024;
+
+/// Reusable assembly scratch. Buffers only ever grow (to the workload's
+/// high-water mark), so steady-state reuse is allocation-free.
+#[derive(Debug, Default)]
+pub struct AssemblyWorkspace {
+    /// Per-task tile Map buffers, `n_tasks × tile_len` (matrix or vector).
+    scratch: Vec<f64>,
+    /// Cross-tile matrix sources, `S × n_halo`, ascending source order.
+    halo: Vec<f64>,
+    /// Cross-tile vector sources, `S × n_vhalo`.
+    vhalo: Vec<f64>,
+    /// Fused `S × E` per-element scalars (separable plans, SIMP moduli).
+    pub scalars: Vec<f64>,
+}
+
+impl AssemblyWorkspace {
+    pub fn new() -> AssemblyWorkspace {
+        AssemblyWorkspace::default()
+    }
+
+    /// Grow-only slice of `buf` — the reuse primitive for every workspace
+    /// buffer (never shrinks, so repeat calls allocate nothing).
+    pub fn grown(buf: &mut Vec<f64>, len: usize) -> &mut [f64] {
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        &mut buf[..len]
+    }
+}
+
+/// Per-tile restriction of a routing side (matrix targets or vector
+/// targets): which targets each tile fully owns, and where the cross-tile
+/// sources live in the halo buffer.
+#[derive(Clone, Debug)]
+struct TiledSide {
+    /// `n_tiles + 1` — ranges into `int_targets`.
+    int_tile_ptr: Vec<usize>,
+    /// Targets fully owned by a tile, grouped by tile.
+    int_targets: Vec<u32>,
+    /// `n_tiles + 1` — per-tile contiguous ranges of the halo buffer.
+    halo_tile_ptr: Vec<usize>,
+    /// Tile-local flat source position of each halo slot.
+    halo_local: Vec<u32>,
+    /// Targets whose gather lists span tiles.
+    bnd_targets: Vec<u32>,
+    /// `bnd_targets.len() + 1` — ranges into `bnd_src`.
+    bnd_ptr: Vec<usize>,
+    /// Halo positions of each boundary target's sources (ascending, i.e.
+    /// the exact summation order of the two-stage Reduce).
+    bnd_src: Vec<u32>,
+}
+
+impl TiledSide {
+    /// Partition one routing side. `ptr`/`src` are the gather lists,
+    /// `tile_flat` the number of flat source slots per tile.
+    fn build(
+        ptr: &[usize],
+        src: &[u32],
+        n_targets: usize,
+        n_tiles: usize,
+        tile_flat: usize,
+    ) -> TiledSide {
+        let mut tile_targets: Vec<Vec<u32>> = vec![Vec::new(); n_tiles];
+        let mut bnd_targets = Vec::new();
+        for p in 0..n_targets {
+            let lo = ptr[p];
+            let hi = ptr[p + 1];
+            if lo == hi {
+                // Sourceless target (cannot occur for matrices; guards
+                // hypothetical isolated DoFs): gather trivially in tile 0.
+                tile_targets[0].push(p as u32);
+                continue;
+            }
+            let t_first = src[lo] as usize / tile_flat;
+            let t_last = src[hi - 1] as usize / tile_flat;
+            if t_first == t_last {
+                tile_targets[t_first].push(p as u32);
+            } else {
+                bnd_targets.push(p as u32);
+            }
+        }
+        let mut int_tile_ptr = Vec::with_capacity(n_tiles + 1);
+        int_tile_ptr.push(0);
+        let mut int_targets = Vec::new();
+        for list in &tile_targets {
+            int_targets.extend_from_slice(list);
+            int_tile_ptr.push(int_targets.len());
+        }
+        // Halo layout: all boundary sources in ascending global flat order
+        // (each flat source is routed exactly once, so this is a bijection).
+        let mut halo_global: Vec<u32> = Vec::new();
+        for &p in &bnd_targets {
+            halo_global.extend_from_slice(&src[ptr[p as usize]..ptr[p as usize + 1]]);
+        }
+        halo_global.sort_unstable();
+        let mut bnd_ptr = Vec::with_capacity(bnd_targets.len() + 1);
+        bnd_ptr.push(0);
+        let mut bnd_src = Vec::with_capacity(halo_global.len());
+        for &p in &bnd_targets {
+            for &s in &src[ptr[p as usize]..ptr[p as usize + 1]] {
+                let h = halo_global.binary_search(&s).expect("boundary source in halo");
+                bnd_src.push(h as u32);
+            }
+            bnd_ptr.push(bnd_src.len());
+        }
+        let mut halo_tile_ptr = Vec::with_capacity(n_tiles + 1);
+        halo_tile_ptr.push(0);
+        for t in 0..n_tiles {
+            let end = (t + 1) * tile_flat;
+            let hi = halo_global.partition_point(|&s| (s as usize) < end);
+            halo_tile_ptr.push(hi);
+        }
+        let halo_local: Vec<u32> = halo_global
+            .iter()
+            .map(|&s| (s as usize % tile_flat) as u32)
+            .collect();
+        TiledSide {
+            int_tile_ptr,
+            int_targets,
+            halo_tile_ptr,
+            halo_local,
+            bnd_targets,
+            bnd_ptr,
+            bnd_src,
+        }
+    }
+
+    fn halo_len(&self) -> usize {
+        self.halo_local.len()
+    }
+}
+
+/// Precomputed tiling of a [`Routing`]: element tiles plus the per-tile
+/// target/halo restrictions for the matrix and vector sides. Built once per
+/// topology (alongside the routing), reused for every assembly.
+#[derive(Clone, Debug)]
+pub struct FusedPlan {
+    /// Elements per tile.
+    pub tile: usize,
+    pub n_tiles: usize,
+    n_elems: usize,
+    n_local: usize,
+    mat: TiledSide,
+    vec: TiledSide,
+}
+
+impl FusedPlan {
+    /// Build with the default cache-sized tile.
+    pub fn build(routing: &Routing, n_elems: usize) -> FusedPlan {
+        let kl2 = routing.n_local * routing.n_local;
+        let tile = (TILE_BUDGET_F64 / kl2.max(1)).max(16).min(n_elems.max(1));
+        FusedPlan::with_tile(routing, n_elems, tile)
+    }
+
+    /// Build with an explicit tile size (tests force small tiles so the
+    /// cross-tile fix-up path is exercised on small meshes).
+    pub fn with_tile(routing: &Routing, n_elems: usize, tile: usize) -> FusedPlan {
+        assert!(tile > 0, "tile must be positive");
+        let kl = routing.n_local;
+        let n_tiles = n_elems.div_ceil(tile).max(1);
+        let mat = TiledSide::build(
+            &routing.mat_ptr,
+            &routing.mat_src,
+            routing.nnz(),
+            n_tiles,
+            tile * kl * kl,
+        );
+        let vec = TiledSide::build(
+            &routing.vec_ptr,
+            &routing.vec_src,
+            routing.n_dofs,
+            n_tiles,
+            tile * kl,
+        );
+        FusedPlan {
+            tile,
+            n_tiles,
+            n_elems,
+            n_local: kl,
+            mat,
+            vec,
+        }
+    }
+
+    /// Number of cross-tile matrix sources (halo slots) — the only
+    /// intermediate the fused path keeps, `O(tile surface)` not `O(E·kl²)`.
+    pub fn halo_len(&self) -> usize {
+        self.mat.halo_len()
+    }
+
+    /// Fused Map+Reduce for `S` bilinear forms into `S × nnz` instance-major
+    /// values. Bitwise identical to `local_matrices_batch` followed by
+    /// `Routing::reduce_matrix_batch_into` at any thread count; allocates
+    /// nothing beyond the (grow-once) workspace.
+    #[allow(clippy::too_many_arguments)]
+    pub fn assemble_matrix_batch_into(
+        &self,
+        routing: &Routing,
+        forms: &[BilinearForm],
+        geo: &ElementGeometry,
+        tab: &Tabulation,
+        dim: usize,
+        ws: &mut AssemblyWorkspace,
+        data: &mut [f64],
+    ) {
+        assert!(!forms.is_empty(), "empty form batch");
+        let ncomp = forms[0].ncomp(dim);
+        for f in forms {
+            assert_eq!(f.ncomp(dim), ncomp, "mixed ncomp in form batch");
+        }
+        let kl = tab.k * ncomp;
+        assert_eq!(kl, self.n_local, "form kl does not match the plan");
+        let s_n = forms.len();
+        let nnz = routing.nnz();
+        assert_eq!(data.len(), s_n * nnz, "output must be S × nnz");
+        if self.n_elems == 0 {
+            data.fill(0.0);
+            return;
+        }
+        let const_grad = local::is_const_grad(tab);
+        let tile_len = self.tile * kl * kl;
+        let side = &self.mat;
+        self.run_tiles(
+            s_n,
+            tile_len,
+            side,
+            ws,
+            nnz,
+            data,
+            |s, e, ke| local::fill_matrix_one(&forms[s], const_grad, e, ke, geo, tab, dim, ncomp),
+            |p| (routing.mat_ptr[p], routing.mat_ptr[p + 1]),
+            &routing.mat_src,
+        );
+    }
+
+    /// Fused Map+Reduce for `S` linear forms into `S × n_dofs` instance-
+    /// major global vectors (bitwise identical to the two-stage path).
+    #[allow(clippy::too_many_arguments)]
+    pub fn assemble_vector_batch_into(
+        &self,
+        routing: &Routing,
+        forms: &[LinearForm],
+        geo: &ElementGeometry,
+        tab: &Tabulation,
+        dim: usize,
+        ws: &mut AssemblyWorkspace,
+        out: &mut [f64],
+    ) {
+        assert!(!forms.is_empty(), "empty form batch");
+        let ncomp = forms[0].ncomp(dim);
+        for f in forms {
+            assert_eq!(f.ncomp(dim), ncomp, "mixed ncomp in form batch");
+        }
+        let kl = tab.k * ncomp;
+        assert_eq!(kl, self.n_local, "form kl does not match the plan");
+        let s_n = forms.len();
+        let n = routing.n_dofs;
+        assert_eq!(out.len(), s_n * n, "output must be S × n_dofs");
+        if self.n_elems == 0 {
+            out.fill(0.0);
+            return;
+        }
+        let tile_len = self.tile * kl;
+        // The vector halo reuses the matrix halo's sibling buffer so the
+        // two sides never fight over one allocation high-water mark.
+        let side = &self.vec;
+        self.run_tiles_vec(
+            s_n,
+            tile_len,
+            side,
+            ws,
+            n,
+            out,
+            |s, e, fe| local::fill_vector_one(&forms[s], e, fe, geo, tab, ncomp),
+            |i| (routing.vec_ptr[i], routing.vec_ptr[i + 1]),
+            &routing.vec_src,
+        );
+    }
+
+    /// Tile driver for the matrix side. `fill(s, e, slot)` Maps one element
+    /// into a zeroed `kl²` slot; `range(p)`/`src` are the routing gather
+    /// lists.
+    #[allow(clippy::too_many_arguments)]
+    fn run_tiles(
+        &self,
+        s_n: usize,
+        tile_len: usize,
+        side: &TiledSide,
+        ws: &mut AssemblyWorkspace,
+        stride_out: usize,
+        data: &mut [f64],
+        fill: impl Fn(usize, usize, &mut [f64]) + Sync,
+        range: impl Fn(usize) -> (usize, usize) + Sync,
+        src: &[u32],
+    ) {
+        let threads = threadpool::default_threads();
+        let total = s_n * self.n_tiles;
+        let n_tasks = threadpool::n_chunks(total, threads);
+        let scratch = AssemblyWorkspace::grown(&mut ws.scratch, n_tasks * tile_len);
+        let halo_n = side.halo_len();
+        let halo = AssemblyWorkspace::grown(&mut ws.halo, s_n * halo_n);
+
+        let (tile, n_tiles, ne) = (self.tile, self.n_tiles, self.n_elems);
+        let slot = tile_len / tile; // kl² (matrix) or kl (vector)
+        debug_assert_eq!(slot * tile, tile_len);
+        {
+            let scratch_ptr = SyncPtr::new(scratch);
+            let data_ptr = SyncPtr::new(data);
+            let halo_ptr = SyncPtr::new(halo);
+            threadpool::parallel_indexed_ranges(total, threads, |task, lo, hi| {
+                // SAFETY: each task owns a disjoint scratch slice; interior
+                // targets and halo ranges are disjoint across (s, tile).
+                let buf = unsafe {
+                    std::slice::from_raw_parts_mut(scratch_ptr.get().add(task * tile_len), tile_len)
+                };
+                for w in lo..hi {
+                    let (s, t) = (w / n_tiles, w % n_tiles);
+                    let e0 = t * tile;
+                    let e1 = ((t + 1) * tile).min(ne);
+                    let used = (e1 - e0) * slot;
+                    buf[..used].fill(0.0);
+                    // Map this tile.
+                    for e in e0..e1 {
+                        fill(s, e, &mut buf[(e - e0) * slot..(e - e0 + 1) * slot]);
+                    }
+                    // In-tile Reduce of fully-owned targets (ascending
+                    // source order — identical to the two-stage gather).
+                    let base = t * tile_len;
+                    for &p in &side.int_targets[side.int_tile_ptr[t]..side.int_tile_ptr[t + 1]] {
+                        let (plo, phi) = range(p as usize);
+                        let mut acc = 0.0;
+                        for &g in &src[plo..phi] {
+                            acc += buf[g as usize - base];
+                        }
+                        unsafe { *data_ptr.get().add(s * stride_out + p as usize) = acc };
+                    }
+                    // Export this tile's cross-tile sources to the halo.
+                    for h in side.halo_tile_ptr[t]..side.halo_tile_ptr[t + 1] {
+                        let v = buf[side.halo_local[h] as usize];
+                        unsafe { *halo_ptr.get().add(s * halo_n + h) = v };
+                    }
+                }
+            });
+        }
+        // Fix-up: boundary targets, accumulated in ascending global source
+        // order from the halo — the exact two-stage summation sequence.
+        let n_bnd = side.bnd_targets.len();
+        if n_bnd == 0 {
+            return;
+        }
+        let halo: &[f64] = halo;
+        let data_ptr = SyncPtr::new(data);
+        threadpool::parallel_ranges(s_n * n_bnd, threads, |lo, hi| {
+            for j in lo..hi {
+                let (s, b) = (j / n_bnd, j % n_bnd);
+                let p = side.bnd_targets[b] as usize;
+                let mut acc = 0.0;
+                for &h in &side.bnd_src[side.bnd_ptr[b]..side.bnd_ptr[b + 1]] {
+                    acc += halo[s * halo_n + h as usize];
+                }
+                // SAFETY: boundary targets are disjoint from interior
+                // targets and from each other.
+                unsafe { *data_ptr.get().add(s * stride_out + p) = acc };
+            }
+        });
+    }
+
+    /// Vector-side twin of [`FusedPlan::run_tiles`] using the `vhalo`
+    /// buffer (separate high-water mark from the matrix halo).
+    #[allow(clippy::too_many_arguments)]
+    fn run_tiles_vec(
+        &self,
+        s_n: usize,
+        tile_len: usize,
+        side: &TiledSide,
+        ws: &mut AssemblyWorkspace,
+        stride_out: usize,
+        data: &mut [f64],
+        fill: impl Fn(usize, usize, &mut [f64]) + Sync,
+        range: impl Fn(usize) -> (usize, usize) + Sync,
+        src: &[u32],
+    ) {
+        // Swap vhalo in as the halo buffer, run the shared driver, swap
+        // back — keeps one driver implementation for both sides.
+        std::mem::swap(&mut ws.halo, &mut ws.vhalo);
+        self.run_tiles(s_n, tile_len, side, ws, stride_out, data, fill, range, src);
+        std::mem::swap(&mut ws.halo, &mut ws.vhalo);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembly::forms::Coefficient;
+    use crate::assembly::local::{local_matrices_batch, local_vectors_batch};
+    use crate::fem::dofmap::DofMap;
+    use crate::fem::geometry;
+    use crate::mesh::structured::{jitter, unit_cube_tet, unit_square_tri};
+
+    /// Fused assembly with tiny tiles (forcing many cross-tile boundary
+    /// targets) must be bitwise identical to the two-stage path.
+    #[test]
+    fn tiny_tiles_match_two_stage_bitwise() {
+        let mut m = unit_square_tri(5);
+        jitter(&mut m, 0.2, 7);
+        let ctx_quad = crate::assembly::map_reduce::default_quadrature(m.cell_type);
+        let element = crate::fem::reference::RefElement::for_cell(m.cell_type);
+        let tab = element.tabulate(&ctx_quad);
+        let geo = geometry::compute(&m, &tab, &ctx_quad);
+        let dm = DofMap::scalar(&m);
+        let routing = Routing::build(&dm);
+        let forms = vec![
+            BilinearForm::Diffusion { rho: Coefficient::from_fn(&geo, |p| 1.0 + p[0] * p[1]) },
+            BilinearForm::Mass { rho: Coefficient::Const(2.0) },
+        ];
+        let local = local_matrices_batch(&forms, &geo, &tab, 2);
+        let mut oracle = vec![0.0; forms.len() * routing.nnz()];
+        routing.reduce_matrix_batch_into(&local, forms.len(), &mut oracle);
+        for tile in [1, 3, 7, 1000] {
+            let plan = FusedPlan::with_tile(&routing, m.n_cells(), tile);
+            let mut ws = AssemblyWorkspace::new();
+            let mut fused = vec![0.0; forms.len() * routing.nnz()];
+            plan.assemble_matrix_batch_into(&routing, &forms, &geo, &tab, 2, &mut ws, &mut fused);
+            assert_eq!(fused, oracle, "tile={tile}");
+            // Steady state: a second call through the same workspace must
+            // reproduce the result exactly (buffer reuse is clean).
+            plan.assemble_matrix_batch_into(&routing, &forms, &geo, &tab, 2, &mut ws, &mut fused);
+            assert_eq!(fused, oracle, "tile={tile} repeat");
+        }
+    }
+
+    #[test]
+    fn tiny_tiles_match_two_stage_vectors() {
+        let m = unit_cube_tet(3);
+        let quad = crate::assembly::map_reduce::default_quadrature(m.cell_type);
+        let element = crate::fem::reference::RefElement::for_cell(m.cell_type);
+        let tab = element.tabulate(&quad);
+        let geo = geometry::compute(&m, &tab, &quad);
+        let routing = Routing::build(&DofMap::scalar(&m));
+        let forms = vec![
+            LinearForm::Source { f: Coefficient::from_fn(&geo, |p| p[0] - 2.0 * p[2]) },
+            LinearForm::Source { f: Coefficient::Const(1.5) },
+        ];
+        let local = local_vectors_batch(&forms, &geo, &tab, 3);
+        let oracle = routing.reduce_vector_batch(&local, forms.len());
+        for tile in [2, 11, 4096] {
+            let plan = FusedPlan::with_tile(&routing, m.n_cells(), tile);
+            let mut ws = AssemblyWorkspace::new();
+            let mut fused = vec![0.0; forms.len() * routing.n_dofs];
+            plan.assemble_vector_batch_into(&routing, &forms, &geo, &tab, 3, &mut ws, &mut fused);
+            assert_eq!(fused, oracle, "tile={tile}");
+        }
+    }
+
+    /// Every routing target lands either in exactly one tile's interior
+    /// list or in the boundary list, and halo slots biject with the
+    /// boundary targets' sources.
+    #[test]
+    fn plan_partitions_targets_exactly_once() {
+        let m = unit_square_tri(4);
+        let routing = Routing::build(&DofMap::scalar(&m));
+        let plan = FusedPlan::with_tile(&routing, m.n_cells(), 3);
+        let side = &plan.mat;
+        let mut seen = vec![false; routing.nnz()];
+        for &p in &side.int_targets {
+            assert!(!seen[p as usize], "target {p} in two tiles");
+            seen[p as usize] = true;
+        }
+        for &p in &side.bnd_targets {
+            assert!(!seen[p as usize], "target {p} interior AND boundary");
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b), "target uncovered");
+        let n_bnd_srcs: usize = side
+            .bnd_targets
+            .iter()
+            .map(|&p| routing.mat_ptr[p as usize + 1] - routing.mat_ptr[p as usize])
+            .sum();
+        assert_eq!(side.halo_len(), n_bnd_srcs);
+        assert_eq!(*side.bnd_ptr.last().unwrap(), n_bnd_srcs);
+        assert_eq!(*side.halo_tile_ptr.last().unwrap(), n_bnd_srcs);
+    }
+
+    #[test]
+    fn default_tile_is_cache_sized() {
+        let m = unit_square_tri(4);
+        let routing = Routing::build(&DofMap::scalar(&m));
+        let plan = FusedPlan::build(&routing, m.n_cells());
+        let budget = super::TILE_BUDGET_F64.max(16 * 9);
+        assert!(plan.tile * routing.n_local * routing.n_local <= budget);
+        assert!(plan.tile >= 1);
+        assert_eq!(plan.n_tiles, m.n_cells().div_ceil(plan.tile));
+    }
+}

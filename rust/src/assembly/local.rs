@@ -37,10 +37,7 @@ pub fn local_matrices(
     // on the 2D/3D diffusion Map stage (see EXPERIMENTS.md §Perf). The
     // per-element bodies live in `fill_matrix_one`, shared with the
     // batched multi-instance driver.
-    let const_grad = matches!(
-        tab.element,
-        crate::fem::reference::RefElement::P1Tri | crate::fem::reference::RefElement::P1Tet
-    );
+    let const_grad = is_const_grad(tab);
     threadpool::for_each_row_mut(&mut out, kl * kl, threads, |e, ke| {
         fill_matrix_one(form, const_grad, e, ke, geo, tab, dim, ncomp);
     });
@@ -94,10 +91,7 @@ pub fn local_matrices_batch(
         return out;
     }
     let threads = threadpool::default_threads();
-    let const_grad = matches!(
-        tab.element,
-        crate::fem::reference::RefElement::P1Tri | crate::fem::reference::RefElement::P1Tet
-    );
+    let const_grad = is_const_grad(tab);
     threadpool::for_each_row_mut(&mut out, kl * kl, threads, |r, ke| {
         let (s, e) = (r / ne, r % ne);
         fill_matrix_one(&forms[s], const_grad, e, ke, geo, tab, dim, ncomp);
@@ -166,12 +160,23 @@ pub(crate) fn elasticity_entry(
     v
 }
 
+/// Quadrature-constant-gradient detection (P1 simplices) shared by every
+/// Map driver, including the fused tile engine.
+#[inline]
+pub(crate) fn is_const_grad(tab: &Tabulation) -> bool {
+    matches!(
+        tab.element,
+        crate::fem::reference::RefElement::P1Tri | crate::fem::reference::RefElement::P1Tet
+    )
+}
+
 /// One element of the Map stage — the single source of every form's
 /// per-element arithmetic, shared by [`local_matrices`] (one form over all
-/// elements) and [`local_matrices_batch`] (S forms over the fused `S·E`
-/// range), which therefore agree bitwise by construction.
+/// elements), [`local_matrices_batch`] (S forms over the fused `S·E`
+/// range) and the fused tile engine ([`super::fused::FusedPlan`]), which
+/// therefore all agree bitwise by construction. `ke` must be zeroed.
 #[allow(clippy::too_many_arguments)]
-fn fill_matrix_one(
+pub(crate) fn fill_matrix_one(
     form: &BilinearForm,
     const_grad: bool,
     e: usize,
@@ -297,7 +302,7 @@ fn fill_matrix_one(
 }
 
 /// Per-element body of [`local_vectors`] (see [`fill_matrix_one`]).
-fn fill_vector_one(
+pub(crate) fn fill_vector_one(
     form: &LinearForm,
     e: usize,
     fe: &mut [f64],

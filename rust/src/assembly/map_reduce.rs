@@ -4,11 +4,18 @@
 //! [`AssemblyContext`] plays the role of the paper's "setup" phase
 //! (Table 3): it tabulates the reference basis, computes batched geometry
 //! and builds the routing matrices once. Every subsequent assembly — with
-//! new coefficients, densities or time-step combinations — is two monolithic
-//! operations: one batched local contraction (Map) and one routing product
-//! (Reduce). When the PJRT runtime is attached (phase 2), the Map stage can
-//! be executed by the AOT-compiled Pallas kernel instead of the native code;
-//! the Reduce stage is identical for both backends.
+//! new coefficients, densities or time-step combinations — runs through the
+//! **fused tile engine** ([`super::fused::FusedPlan`]): Map and Reduce are
+//! interleaved per cache-sized element tile, so the full `E×kl²` local
+//! tensor is never materialized and repeat calls do zero heap allocation
+//! (transients live in the context's [`AssemblyWorkspace`]). The two-stage
+//! path (explicit [`AssemblyContext::map_matrix`] +
+//! [`AssemblyContext::reduce_matrix`], and the `*_two_stage` oracles) is
+//! kept for externally produced Map results — when the PJRT runtime is
+//! attached (phase 2) the Map stage can be executed by the AOT-compiled
+//! Pallas kernel — and as the bitwise-parity reference in tests/benches.
+
+use std::sync::Mutex;
 
 use crate::fem::dofmap::DofMap;
 use crate::fem::geometry::{self, ElementGeometry};
@@ -19,6 +26,7 @@ use crate::sparse::{Csr, CsrBatch};
 use crate::util::threadpool;
 
 use super::forms::{BilinearForm, Coefficient, LinearForm};
+use super::fused::{AssemblyWorkspace, FusedPlan};
 use super::local;
 use super::routing::Routing;
 
@@ -49,6 +57,12 @@ pub struct AssemblyContext {
     pub tab: Tabulation,
     pub geo: ElementGeometry,
     pub routing: Routing,
+    /// Tiling of the routing for the fused zero-materialization engine.
+    pub fused: FusedPlan,
+    /// Grow-once scratch shared by every assembly call on this context
+    /// (tile buffers, halos, per-element scalars) — repeat assemblies
+    /// allocate nothing.
+    workspace: Mutex<AssemblyWorkspace>,
 }
 
 impl AssemblyContext {
@@ -70,6 +84,7 @@ impl AssemblyContext {
             DofMap::vector(mesh, ncomp)
         };
         let routing = Routing::build(&dofmap);
+        let fused = FusedPlan::build(&routing, mesh.n_cells());
         AssemblyContext {
             mesh: mesh.clone(),
             ncomp,
@@ -78,7 +93,17 @@ impl AssemblyContext {
             tab,
             geo,
             routing,
+            fused,
+            workspace: Mutex::new(AssemblyWorkspace::new()),
         }
+    }
+
+    /// Borrow the context's reusable assembly workspace (poisoning is
+    /// recovered: a panic mid-assembly leaves only dirty scratch, which
+    /// every entry point fully re-initializes).
+    pub fn with_workspace<R>(&self, f: impl FnOnce(&mut AssemblyWorkspace) -> R) -> R {
+        let mut ws = self.workspace.lock().unwrap_or_else(|e| e.into_inner());
+        f(&mut ws)
     }
 
     pub fn n_dofs(&self) -> usize {
@@ -103,19 +128,42 @@ impl AssemblyContext {
         local::local_vectors(form, &self.geo, &self.tab, self.mesh.dim)
     }
 
-    /// Map + Reduce: assemble the global matrix.
+    /// Assemble the global matrix through the fused tile engine (bitwise
+    /// identical to [`AssemblyContext::assemble_matrix_two_stage`], no
+    /// `E×kl²` intermediate).
     pub fn assemble_matrix(&self, form: &BilinearForm) -> Csr {
+        let mut k = self.pattern_matrix();
+        self.assemble_matrix_into(form, &mut k.data);
+        k
+    }
+
+    /// Fused assembly into preallocated CSR values (hot loop: zero heap
+    /// allocation in steady state).
+    pub fn assemble_matrix_into(&self, form: &BilinearForm, data: &mut [f64]) {
+        self.assemble_matrix_batch_into(std::slice::from_ref(form), data);
+    }
+
+    /// Two-stage oracle: materialize the full local tensor, then Reduce.
+    /// Kept as the parity/benchmark baseline for the fused engine.
+    pub fn assemble_matrix_two_stage(&self, form: &BilinearForm) -> Csr {
         self.routing.reduce_matrix(&self.map_matrix(form))
     }
 
-    /// Map + Reduce into preallocated CSR values (hot loop: zero alloc for
-    /// the global matrix).
-    pub fn assemble_matrix_into(&self, form: &BilinearForm, data: &mut [f64]) {
-        self.routing.reduce_matrix_into(&self.map_matrix(form), data);
+    /// Assemble the global load vector through the fused tile engine.
+    pub fn assemble_vector(&self, form: &LinearForm) -> Vec<f64> {
+        let mut out = vec![0.0; self.n_dofs()];
+        self.assemble_vector_into(form, &mut out);
+        out
     }
 
-    /// Map + Reduce: assemble the global load vector.
-    pub fn assemble_vector(&self, form: &LinearForm) -> Vec<f64> {
+    /// Fused vector assembly into a preallocated output.
+    pub fn assemble_vector_into(&self, form: &LinearForm, out: &mut [f64]) {
+        self.assemble_vector_batch_into(std::slice::from_ref(form), out);
+    }
+
+    /// Two-stage vector oracle (see
+    /// [`AssemblyContext::assemble_matrix_two_stage`]).
+    pub fn assemble_vector_two_stage(&self, form: &LinearForm) -> Vec<f64> {
         self.routing.reduce_vector(&self.map_vector(form))
     }
 
@@ -129,18 +177,72 @@ impl AssemblyContext {
         local::local_matrices_batch(forms, &self.geo, &self.tab, self.mesh.dim)
     }
 
-    /// Batched Map + Reduce: assemble `S` global matrices that share one
-    /// symbolic pattern (one `indptr`/`indices`, `S` value arrays). The
-    /// generic multi-instance path — works for any mix of volumetric forms
-    /// with this context's `ncomp`; see [`AssemblyContext::batched`] for
-    /// the faster separable plan.
+    /// Batched fused assembly: `S` global matrices sharing one symbolic
+    /// pattern (one `indptr`/`indices`, `S` value arrays). The generic
+    /// multi-instance path — works for any mix of volumetric forms with
+    /// this context's `ncomp`; see [`AssemblyContext::batched`] for the
+    /// faster separable plan. Instance `s` is bitwise-identical to
+    /// `assemble_matrix(&forms[s])` and to the two-stage oracle.
     pub fn assemble_matrix_batch(&self, forms: &[BilinearForm]) -> CsrBatch {
+        let mut data = vec![0.0; forms.len() * self.routing.nnz()];
+        self.assemble_matrix_batch_into(forms, &mut data);
+        self.routing.csr_batch(data, forms.len())
+    }
+
+    /// Batched fused assembly into preallocated `S × nnz` instance-major
+    /// values — the zero-allocation hot path for repeated re-assembly.
+    pub fn assemble_matrix_batch_into(&self, forms: &[BilinearForm], data: &mut [f64]) {
+        for form in forms {
+            assert!(!form.is_facet(), "facet form passed to volumetric context");
+            assert_eq!(form.ncomp(self.mesh.dim), self.ncomp, "form/context ncomp mismatch");
+        }
+        self.with_workspace(|ws| {
+            self.fused.assemble_matrix_batch_into(
+                &self.routing,
+                forms,
+                &self.geo,
+                &self.tab,
+                self.mesh.dim,
+                ws,
+                data,
+            );
+        });
+    }
+
+    /// Two-stage batched oracle (full `S×E×kl²` intermediate).
+    pub fn assemble_matrix_batch_two_stage(&self, forms: &[BilinearForm]) -> CsrBatch {
         self.routing.reduce_matrix_batch(&self.map_matrix_batch(forms), forms.len())
     }
 
-    /// Batched vector assembly: `S` load vectors in one fused Batch-Map +
-    /// Sparse-Reduce (`S × N` flat, instance-major).
+    /// Batched vector assembly: `S` load vectors through the fused tile
+    /// engine (`S × N` flat, instance-major).
     pub fn assemble_vector_batch(&self, forms: &[LinearForm]) -> Vec<f64> {
+        let mut out = vec![0.0; forms.len() * self.n_dofs()];
+        self.assemble_vector_batch_into(forms, &mut out);
+        out
+    }
+
+    /// Batched fused vector assembly into a preallocated `S × N` output.
+    pub fn assemble_vector_batch_into(&self, forms: &[LinearForm], out: &mut [f64]) {
+        for form in forms {
+            assert!(!form.is_facet(), "facet form passed to volumetric context");
+            assert_eq!(form.ncomp(self.mesh.dim), self.ncomp, "form/context ncomp mismatch");
+        }
+        self.with_workspace(|ws| {
+            self.fused.assemble_vector_batch_into(
+                &self.routing,
+                forms,
+                &self.geo,
+                &self.tab,
+                self.mesh.dim,
+                ws,
+                out,
+            );
+        });
+    }
+
+    /// Two-stage batched vector oracle.
+    pub fn assemble_vector_batch_two_stage(&self, forms: &[LinearForm]) -> Vec<f64> {
         for form in forms {
             assert!(!form.is_facet(), "facet form passed to volumetric context");
             assert_eq!(form.ncomp(self.mesh.dim), self.ncomp, "form/context ncomp mismatch");
@@ -290,36 +392,71 @@ pub struct BatchedAssembly<'c> {
 impl BatchedAssembly<'_> {
     /// Per-element scalars `c_e = Σ_q |det J| w · coeff(e, q)` — the
     /// coefficient collapse of the separable Map stage (bitwise-identical
-    /// to the hoisted sum in the native const-gradient arms).
-    pub fn element_scalars(&self, coeff: &Coefficient) -> Vec<f64> {
+    /// to the hoisted sum in the native const-gradient arms) — into a
+    /// caller-owned buffer (zero allocation on repeat calls).
+    pub fn element_scalars_into(&self, coeff: &Coefficient, out: &mut [f64]) {
         let geo = &self.ctx.geo;
         let weights_q = &self.ctx.tab.weights;
         let nq = geo.q;
         let ne = self.ctx.n_cells();
-        let mut out = Vec::with_capacity(ne);
-        for e in 0..ne {
+        assert_eq!(out.len(), ne, "scalar buffer must be E long");
+        for (e, o) in out.iter_mut().enumerate() {
             let mut c = 0.0;
             for q in 0..nq {
                 c += geo.detj[e * nq + q] * weights_q[q] * coeff.at(e, q, nq);
             }
-            out.push(c);
+            *o = c;
         }
+    }
+
+    /// Allocating convenience around
+    /// [`BatchedAssembly::element_scalars_into`].
+    pub fn element_scalars(&self, coeff: &Coefficient) -> Vec<f64> {
+        let mut out = vec![0.0; self.ctx.n_cells()];
+        self.element_scalars_into(coeff, &mut out);
         out
     }
 
-    /// Assemble `S` instances from flat `S × E` per-element scalars into a
-    /// [`CsrBatch`] on the shared pattern — one fused parallel region over
-    /// all `S × nnz` targets.
-    pub fn assemble_scaled(&self, scalars: &[f64]) -> CsrBatch {
+    /// Per-element scalars for a *nodal* scalar field, skipping the
+    /// quadrature-point materialization of [`Coefficient::from_nodal`]
+    /// entirely: the interpolation `Σ_a u[g_e(a)] φ̂_a(x̂_q)` is folded
+    /// into the collapse sum with the identical arithmetic order, so the
+    /// result is bitwise-equal to
+    /// `element_scalars(&ctx.coeff_nodal(u))` — without the fresh `E × Q`
+    /// `Vec` per call (the coordinator's per-request path).
+    pub fn element_scalars_nodal_into(&self, u: &[f64], out: &mut [f64]) {
+        let ctx = self.ctx;
+        assert_eq!(ctx.ncomp, 1, "nodal scalar collapse is a scalar-field path");
+        let geo = &ctx.geo;
+        let tab = &ctx.tab;
+        let nq = geo.q;
+        let k = tab.k;
+        let ne = ctx.n_cells();
+        assert_eq!(out.len(), ne, "scalar buffer must be E long");
+        for (e, o) in out.iter_mut().enumerate() {
+            let dofs = &ctx.mesh.cells[e * k..(e + 1) * k];
+            let mut c = 0.0;
+            for q in 0..nq {
+                let s = super::forms::interp_nodal(u, dofs, tab, q);
+                c += geo.detj[e * nq + q] * tab.weights[q] * s;
+            }
+            *o = c;
+        }
+    }
+
+    /// Assemble `S` instances from flat `S × E` per-element scalars into
+    /// preallocated `S × nnz` instance-major values — one fused parallel
+    /// region over all `S × nnz` targets, zero heap allocation.
+    pub fn assemble_scaled_into(&self, scalars: &[f64], data: &mut [f64]) {
         let ne = self.ctx.n_cells();
         assert!(ne > 0, "empty mesh");
         assert_eq!(scalars.len() % ne, 0, "scalars must be S × E flat");
         let n_instances = scalars.len() / ne;
         let routing = &self.ctx.routing;
         let nnz = routing.nnz();
-        let mut data = vec![0.0; n_instances * nnz];
+        assert_eq!(data.len(), n_instances * nnz, "values must be S × nnz");
         let threads = threadpool::default_threads();
-        threadpool::for_each_row_mut(&mut data, 1, threads, |r, out| {
+        threadpool::for_each_row_mut(data, 1, threads, |r, out| {
             let (s, p) = (r / nnz, r % nnz);
             let cs = &scalars[s * ne..(s + 1) * ne];
             let mut acc = 0.0;
@@ -328,30 +465,64 @@ impl BatchedAssembly<'_> {
             }
             out[0] = acc;
         });
-        routing.csr_batch(data, n_instances)
+    }
+
+    /// Assemble `S` instances from flat `S × E` per-element scalars into a
+    /// fresh [`CsrBatch`] on the shared pattern.
+    pub fn assemble_scaled(&self, scalars: &[f64]) -> CsrBatch {
+        let ne = self.ctx.n_cells();
+        assert!(ne > 0, "empty mesh");
+        assert_eq!(scalars.len() % ne, 0, "scalars must be S × E flat");
+        let n_instances = scalars.len() / ne;
+        let mut data = vec![0.0; n_instances * self.ctx.routing.nnz()];
+        self.assemble_scaled_into(scalars, &mut data);
+        self.ctx.routing.csr_batch(data, n_instances)
     }
 
     /// Assemble `S` instances from per-instance coefficient fields. The
     /// coefficient collapse runs as one parallel pass over the fused
     /// `S × E` scalar range (same arithmetic as
-    /// [`BatchedAssembly::element_scalars`]).
+    /// [`BatchedAssembly::element_scalars_into`]) through the context
+    /// workspace — no per-call scalar allocation.
     pub fn assemble(&self, coeffs: &[Coefficient]) -> CsrBatch {
         let ne = self.ctx.n_cells();
-        let geo = &self.ctx.geo;
-        let weights_q = &self.ctx.tab.weights;
-        let nq = geo.q;
-        let mut scalars = vec![0.0; coeffs.len() * ne];
-        let threads = threadpool::default_threads();
-        threadpool::for_each_row_mut(&mut scalars, 1, threads, |r, out| {
-            let (s, e) = (r / ne, r % ne);
-            let coeff = &coeffs[s];
-            let mut c = 0.0;
-            for q in 0..nq {
-                c += geo.detj[e * nq + q] * weights_q[q] * coeff.at(e, q, nq);
-            }
-            out[0] = c;
+        let mut data = vec![0.0; coeffs.len() * self.ctx.routing.nnz()];
+        self.ctx.with_workspace(|ws| {
+            let scalars = AssemblyWorkspace::grown(&mut ws.scalars, coeffs.len() * ne);
+            let geo = &self.ctx.geo;
+            let weights_q = &self.ctx.tab.weights;
+            let nq = geo.q;
+            let threads = threadpool::default_threads();
+            threadpool::for_each_row_mut(scalars, 1, threads, |r, out| {
+                let (s, e) = (r / ne, r % ne);
+                let coeff = &coeffs[s];
+                let mut c = 0.0;
+                for q in 0..nq {
+                    c += geo.detj[e * nq + q] * weights_q[q] * coeff.at(e, q, nq);
+                }
+                out[0] = c;
+            });
+            self.assemble_scaled_into(scalars, &mut data);
         });
-        self.assemble_scaled(&scalars)
+        self.ctx.routing.csr_batch(data, coeffs.len())
+    }
+
+    /// Assemble `S` instances from `S` *nodal* coefficient fields without
+    /// materializing any per-request quadrature `Vec`
+    /// ([`BatchedAssembly::element_scalars_nodal_into`] through the
+    /// context workspace). Bitwise-identical to
+    /// `assemble(&[ctx.coeff_nodal(u_s), …])`.
+    pub fn assemble_nodal<U: AsRef<[f64]>>(&self, nodal: &[U]) -> CsrBatch {
+        let ne = self.ctx.n_cells();
+        let mut data = vec![0.0; nodal.len() * self.ctx.routing.nnz()];
+        self.ctx.with_workspace(|ws| {
+            let scalars = AssemblyWorkspace::grown(&mut ws.scalars, nodal.len() * ne);
+            for (s, u) in nodal.iter().enumerate() {
+                self.element_scalars_nodal_into(u.as_ref(), &mut scalars[s * ne..(s + 1) * ne]);
+            }
+            self.assemble_scaled_into(scalars, &mut data);
+        });
+        self.ctx.routing.csr_batch(data, nodal.len())
     }
 
     /// Single-instance convenience through the amortized plan.

@@ -11,15 +11,21 @@
 //!   application.
 //! * [`scatter`] — the classical per-element **scatter-add baseline**
 //!   (what FEniCS/SKFEM-style assembly does), kept for benchmarking.
+//! * [`fused`] — the **zero-materialization tile engine**: Map and Reduce
+//!   interleaved per cache-sized element tile (never the full `E×kl²`
+//!   tensor), with a deterministic cross-tile fix-up and grow-once
+//!   workspaces; bitwise identical to the two-stage path.
 //! * [`map_reduce`] — the user-facing engine combining Map and Reduce with
 //!   cached topology (and, in phase 2, a PJRT artifact Map backend).
 
 pub mod forms;
+pub mod fused;
 pub mod local;
 pub mod map_reduce;
 pub mod routing;
 pub mod scatter;
 
 pub use forms::{BilinearForm, Coefficient, LinearForm};
+pub use fused::{AssemblyWorkspace, FusedPlan};
 pub use map_reduce::{AssemblyContext, BatchedAssembly};
 pub use routing::Routing;

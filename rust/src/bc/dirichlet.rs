@@ -247,6 +247,29 @@ impl CondensePlan {
         }
     }
 
+    /// Refill a previously applied [`ReducedSystem`] with new values (and
+    /// the same-or-new load) on the same pattern: the value gather, free
+    /// restriction and boundary lift only — **zero heap allocation**.
+    /// Numbers are produced in exactly the order of
+    /// [`CondensePlan::into_apply`], so the refilled system is bitwise
+    /// identical to a fresh application (iteration loops hold one
+    /// `ReducedSystem` and refill it per solve).
+    pub fn reapply_into(&self, values: &[f64], f: &[f64], sys: &mut ReducedSystem) {
+        assert_eq!(values.len(), self.nnz_full, "plan/matrix pattern mismatch");
+        assert_eq!(f.len(), self.n_full, "plan/load length mismatch");
+        assert_eq!(sys.k.data.len(), self.keep.len(), "system/plan pattern mismatch");
+        assert_eq!(sys.rhs.len(), self.free.len(), "system/plan free-set mismatch");
+        for (d, &p) in sys.k.data.iter_mut().zip(&self.keep) {
+            *d = values[p];
+        }
+        for (r, &row) in sys.rhs.iter_mut().zip(&self.free) {
+            *r = f[row];
+        }
+        for &(rnew, p, g) in &self.lifts {
+            sys.rhs[rnew] -= values[p] * g;
+        }
+    }
+
     /// Apply the plan to `S` value instances and their loads. `f` is either
     /// one shared load vector (`n_full` entries, broadcast across the
     /// batch) or `S` instance-major load vectors (`S × n_full`).
@@ -397,6 +420,27 @@ mod tests {
         for &d in &sys.bc.dofs {
             assert_eq!(full[d], 0.0);
         }
+    }
+
+    #[test]
+    fn reapply_into_matches_fresh_condense_bitwise() {
+        // Inhomogeneous BCs exercise the boundary lift; refilling a stale
+        // system with new values must equal a fresh condense exactly.
+        let m = unit_square_tri(5);
+        let ctx = AssemblyContext::new(&m, 1);
+        let bc = DirichletBc::from_fn(&m, &m.boundary_nodes(), |p| p[0] - 2.0 * p[1]);
+        let k1 = ctx.assemble_matrix(&BilinearForm::Diffusion { rho: Coefficient::Const(1.0) });
+        let k2 = ctx.assemble_matrix(&BilinearForm::Diffusion {
+            rho: ctx.coeff_fn(|p| 1.0 + p[0] * p[1]),
+        });
+        let f = ctx.assemble_vector(&LinearForm::Source { f: Coefficient::Const(1.0) });
+        let plan = CondensePlan::new(k1.nrows, &k1.indptr, &k1.indices, &bc);
+        let mut sys = plan.apply(&k1.data, &f);
+        plan.reapply_into(&k2.data, &f, &mut sys);
+        let fresh = condense(&k2, &f, &bc);
+        assert_eq!(sys.k.data, fresh.k.data);
+        assert_eq!(sys.rhs, fresh.rhs);
+        assert_eq!(sys.free, fresh.free);
     }
 
     #[test]

@@ -126,15 +126,21 @@ impl BatchSolver {
             return Ok(Vec::new());
         }
         let ctx = &self.ctx;
-        let coeffs: Vec<Coefficient> =
-            reqs.iter().map(|r| ctx.coeff_nodal(&r.rho_nodal)).collect();
         let proto = BilinearForm::Diffusion { rho: Coefficient::Const(1.0) };
         let kbatch = match ctx.batched(&proto) {
-            Some(plan) => plan.assemble(&coeffs),
+            Some(plan) => {
+                // Separable path: each request's nodal coefficient
+                // collapses straight to per-element scalars through the
+                // context workspace — no per-request quadrature `Vec` is
+                // materialized (bitwise-identical to evaluating
+                // `coeff_nodal` first).
+                let nodal: Vec<&[f64]> = reqs.iter().map(|r| r.rho_nodal.as_slice()).collect();
+                plan.assemble_nodal(&nodal)
+            }
             None => {
-                let forms: Vec<BilinearForm> = coeffs
+                let forms: Vec<BilinearForm> = reqs
                     .iter()
-                    .map(|rho| BilinearForm::Diffusion { rho: rho.clone() })
+                    .map(|r| BilinearForm::Diffusion { rho: ctx.coeff_nodal(&r.rho_nodal) })
                     .collect();
                 ctx.assemble_matrix_batch(&forms)
             }

@@ -68,8 +68,9 @@ impl PdeSetup {
             ctx.routing.nnz() == info.meta["nnz"] as usize,
             "mesh/artifact nnz mismatch"
         );
-        // Stiffness + mass share the topology: one batched Map-Reduce
-        // produces both value arrays on a single symbolic pattern.
+        // Stiffness + mass share the topology: one fused batched
+        // Map-Reduce (tile engine — no S×E×kl² intermediate) produces
+        // both value arrays on a single symbolic pattern.
         let km = ctx.assemble_matrix_batch(&[
             BilinearForm::Diffusion { rho: Coefficient::Const(1.0) },
             BilinearForm::Mass { rho: Coefficient::Const(1.0) },

@@ -6,10 +6,10 @@ use anyhow::Result;
 
 use crate::assembly::map_reduce::FacetContext;
 use crate::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
-use crate::bc::{condense, CondensePlan, DirichletBc};
+use crate::bc::{CondensePlan, DirichletBc, ReducedSystem};
 use crate::mesh::structured::rect_quad;
 use crate::mesh::{marker, Mesh};
-use crate::solver::{cg, cg_batch, JacobiPrecond, SolverConfig};
+use crate::solver::{cg_batch_warm, cg_warm, JacobiPrecond, SolverConfig};
 use crate::sparse::{Csr, CsrBatch};
 
 /// Material and discretization parameters (paper defaults).
@@ -118,26 +118,30 @@ impl SimpProblem {
         self.mesh.n_cells()
     }
 
-    /// Young's modulus per element under SIMP.
-    pub fn e_of_rho(&self, rho: &[f64]) -> Vec<f64> {
-        rho.iter()
-            .map(|&r| self.cfg.e_min + r.powf(self.cfg.penal) * (self.cfg.e_max - self.cfg.e_min))
-            .collect()
+    /// Young's modulus per element under SIMP, into a caller-owned buffer
+    /// (the per-iteration hot path allocates nothing).
+    pub fn e_of_rho_into(&self, rho: &[f64], out: &mut [f64]) {
+        assert_eq!(rho.len(), out.len(), "density/modulus length");
+        for (o, &r) in out.iter_mut().zip(rho) {
+            *o = self.cfg.e_min + r.powf(self.cfg.penal) * (self.cfg.e_max - self.cfg.e_min);
+        }
     }
 
-    /// Assemble `K(ρ)` by scaling the cached unit-modulus local matrices
-    /// (Stage I becomes one vectorized scale; Stage II is the cached
-    /// routing reduce — exactly the paper's "JIT-free repeated assembly").
+    /// Allocating convenience around [`SimpProblem::e_of_rho_into`].
+    pub fn e_of_rho(&self, rho: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; rho.len()];
+        self.e_of_rho_into(rho, &mut out);
+        out
+    }
+
+    /// Assemble `K(ρ)` through the separable weighted-gather plan over the
+    /// cached unit-modulus locals — Map and Reduce fused, no `E × kl²`
+    /// intermediate (bitwise-identical to scaling the locals and reducing:
+    /// same per-source products, same ascending summation order). One-shot
+    /// convenience: hot loops hold [`SimpProblem::batched_plan`] and use
+    /// `assemble_scaled_into` instead.
     pub fn assemble_k(&self, rho: &[f64]) -> Csr {
-        let e_mod = self.e_of_rho(rho);
-        let kl2 = 64;
-        let mut local = Vec::with_capacity(self.k0_local.len());
-        for (e, &em) in e_mod.iter().enumerate() {
-            for v in &self.k0_local[e * kl2..(e + 1) * kl2] {
-                local.push(v * em);
-            }
-        }
-        self.ctx.reduce_matrix(&local)
+        self.batched_plan().assemble_scaled(&self.e_of_rho(rho)).instance(0)
     }
 
     /// Shared-topology assembly plan over the cached unit-modulus locals:
@@ -149,15 +153,22 @@ impl SimpProblem {
         self.ctx.batched_from_unit_local(&self.k0_local)
     }
 
-    /// Flat `S × E` SIMP moduli for a set of density fields — the scalar
-    /// input of [`SimpProblem::batched_plan`]'s `assemble_scaled`.
-    pub fn moduli_flat(&self, rhos: &[Vec<f64>]) -> Vec<f64> {
+    /// Flat `S × E` SIMP moduli into a caller-owned buffer — the scalar
+    /// input of [`SimpProblem::batched_plan`]'s `assemble_scaled_into`
+    /// (zero allocation across iterations).
+    pub fn moduli_into(&self, rhos: &[Vec<f64>], out: &mut [f64]) {
         let ne = self.n_elems();
-        let mut scalars = Vec::with_capacity(rhos.len() * ne);
-        for rho in rhos {
+        assert_eq!(out.len(), rhos.len() * ne, "moduli buffer must be S × E");
+        for (rho, chunk) in rhos.iter().zip(out.chunks_mut(ne)) {
             assert_eq!(rho.len(), ne, "density field length");
-            scalars.extend(self.e_of_rho(rho));
+            self.e_of_rho_into(rho, chunk);
         }
+    }
+
+    /// Allocating convenience around [`SimpProblem::moduli_into`].
+    pub fn moduli_flat(&self, rhos: &[Vec<f64>]) -> Vec<f64> {
+        let mut scalars = vec![0.0; rhos.len() * self.n_elems()];
+        self.moduli_into(rhos, &mut scalars);
         scalars
     }
 
@@ -172,10 +183,51 @@ impl SimpProblem {
     /// Solve the state equation; returns (u_full, iterations). `K(ρ)` is
     /// SPD, so preconditioned CG is the right solver — BiCGSTAB stalls at
     /// the extreme (Emax/Emin = 10³) stiffness contrast SIMP develops.
-    pub fn solve_state(&self, k: &Csr, _warm: Option<&[f64]>) -> Result<(Vec<f64>, usize)> {
-        let sys = condense(k, &self.f, &self.bc);
+    /// `warm` (a full nodal field, e.g. the previous topopt iterate) seeds
+    /// the CG; `None` reproduces the cold start bitwise. One-shot
+    /// convenience — iteration loops hold [`SimpProblem::condense_plan`]
+    /// and call [`SimpProblem::solve_state_with`] so the Dirichlet
+    /// symbolic mapping is not rebuilt per solve.
+    pub fn solve_state(&self, k: &Csr, warm: Option<&[f64]>) -> Result<(Vec<f64>, usize)> {
+        // `condense` is exactly plan-build + apply, so this agrees bitwise
+        // with the plan-cached path.
+        let plan = CondensePlan::new(k.nrows, &k.indptr, &k.indices, &self.bc);
+        self.solve_state_with(&plan, &k.data, warm)
+    }
+
+    /// Scalar state solve through a cached condensation plan: per call only
+    /// the value gather + lift + CG run (the symbolic free-DoF mapping is a
+    /// function of pattern + clamp, built once by the caller). Bitwise
+    /// identical to [`SimpProblem::solve_state`] on the same values.
+    pub fn solve_state_with(
+        &self,
+        plan: &CondensePlan,
+        kvalues: &[f64],
+        warm: Option<&[f64]>,
+    ) -> Result<(Vec<f64>, usize)> {
+        let mut sys = plan.apply(kvalues, &self.f);
+        self.solve_state_reusing(plan, None, warm, &mut sys)
+    }
+
+    /// Scalar state solve refilling a persistent [`ReducedSystem`] in
+    /// place: when `kvalues` is `Some`, the plan's value gather + lift is
+    /// reapplied into `sys` (zero allocation on the condensation side);
+    /// `None` solves `sys` as-is. Iteration loops hold the plan + one
+    /// system built at setup and call this per iteration. Bitwise
+    /// identical to [`SimpProblem::solve_state`] on the same values.
+    pub fn solve_state_reusing(
+        &self,
+        plan: &CondensePlan,
+        kvalues: Option<&[f64]>,
+        warm: Option<&[f64]>,
+        sys: &mut ReducedSystem,
+    ) -> Result<(Vec<f64>, usize)> {
+        if let Some(values) = kvalues {
+            plan.reapply_into(values, &self.f, sys);
+        }
         let pc = JacobiPrecond::new(&sys.k);
-        let (u_free, stats) = cg(&sys.k, &sys.rhs, &pc, &self.solver_cfg);
+        let x0 = warm.map(|w| sys.restrict(w));
+        let (u_free, stats) = cg_warm(&sys.k, &sys.rhs, x0.as_deref(), &pc, &self.solver_cfg);
         anyhow::ensure!(stats.converged, "state solve failed: {stats:?}");
         Ok((sys.expand(&u_free), stats.iterations))
     }
@@ -191,15 +243,25 @@ impl SimpProblem {
     /// Blocked multi-design state solve: `S` stiffness instances on the
     /// shared pattern are condensed through one symbolic mapping and solved
     /// by lockstep CG (one fused SpMV per Krylov iteration for the whole
-    /// design set). Per design, results are bitwise identical to
-    /// [`SimpProblem::solve_state`].
+    /// design set). `warm` carries per-design full nodal seeds (previous
+    /// iterates). Per design, results are bitwise identical to
+    /// [`SimpProblem::solve_state`] with the same seed.
     pub fn solve_state_batch_with(
         &self,
         plan: &CondensePlan,
         kbatch: &CsrBatch,
+        warm: Option<&[&[f64]]>,
     ) -> Result<(Vec<Vec<f64>>, Vec<usize>)> {
         let red = plan.apply_batch(kbatch, &self.f);
-        let (u, stats) = cg_batch(&red.k, &red.rhs, &self.solver_cfg);
+        let x0: Option<Vec<f64>> = warm.map(|ws| {
+            assert_eq!(ws.len(), kbatch.n_instances, "one warm seed per design");
+            let mut flat = Vec::with_capacity(kbatch.n_instances * red.n_free());
+            for w in ws {
+                flat.extend(red.restrict(w));
+            }
+            flat
+        });
+        let (u, stats) = cg_batch_warm(&red.k, &red.rhs, x0.as_deref(), &self.solver_cfg);
         let nf = red.n_free();
         let mut us = Vec::with_capacity(kbatch.n_instances);
         let mut iters = Vec::with_capacity(kbatch.n_instances);
@@ -214,7 +276,7 @@ impl SimpProblem {
     /// One-shot blocked state solve (plan built per call — hold
     /// [`SimpProblem::condense_plan`] to amortize it across iterations).
     pub fn solve_state_batch(&self, kbatch: &CsrBatch) -> Result<(Vec<Vec<f64>>, Vec<usize>)> {
-        self.solve_state_batch_with(&self.condense_plan(), kbatch)
+        self.solve_state_batch_with(&self.condense_plan(), kbatch, None)
     }
 
     /// Compliance `C = Fᵀu`.

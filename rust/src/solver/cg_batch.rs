@@ -120,6 +120,21 @@ pub fn cg_batch<Op: LockstepOp>(
     b: &[f64],
     config: &SolverConfig,
 ) -> (Vec<f64>, Vec<SolveStats>) {
+    cg_batch_warm(a, b, None, config)
+}
+
+/// Lockstep CG from an optional instance-major initial guess `x0`
+/// (`S × n`). Lane `s` is bitwise identical to
+/// `cg_warm(&a_s, &b_s, x0_s, &JacobiPrecond::new(&a_s), config)` — the
+/// warm residual is formed by the same fused SpMV the iterations use, and
+/// `x0 = None` preserves the exact cold-start trajectory of [`cg_batch`]
+/// (initial residual taken as `b`, no SpMV against the zero guess).
+pub fn cg_batch_warm<Op: LockstepOp>(
+    a: &Op,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    config: &SolverConfig,
+) -> (Vec<f64>, Vec<SolveStats>) {
     let n = a.nrows();
     let s_n = a.n_instances();
     assert_eq!(b.len(), s_n * n, "rhs must be S × n instance-major");
@@ -132,11 +147,25 @@ pub fn cg_batch<Op: LockstepOp>(
         (0..s_n).map(|s| a.inv_diag(s)).collect()
     };
 
-    let mut x = vec![0.0; s_n * n];
+    let mut x = match x0 {
+        Some(x0) => {
+            assert_eq!(x0.len(), s_n * n, "initial guess must be S × n instance-major");
+            x0.to_vec()
+        }
+        None => vec![0.0; s_n * n],
+    };
     let mut r = b.to_vec();
     let mut z = vec![0.0; s_n * n];
     let mut p = vec![0.0; s_n * n];
     let mut ap = vec![0.0; s_n * n];
+    if x0.is_some() {
+        // Warm residual r = b − A x0 through the same fused SpMV the
+        // iterations use (lane-bitwise-equal to the scalar path).
+        a.apply_batch(&x, &mut ap);
+        for (ri, &axi) in r.iter_mut().zip(&ap) {
+            *ri -= axi;
+        }
+    }
     let mut rz = vec![0.0; s_n];
     let mut nb = vec![0.0; s_n];
     let mut active = vec![true; s_n];
@@ -311,6 +340,35 @@ mod tests {
             assert_eq!(stats[s].iterations, st.iterations, "rhs {s}");
             assert_eq!(&x[s * 3..(s + 1) * 3], &xs[..], "rhs {s}");
         }
+    }
+
+    #[test]
+    fn warm_lockstep_matches_looped_scalar_warm_cg() {
+        let a = spd_batch();
+        let b = vec![1.0, 2.0, 3.0, -1.0, 0.5, 2.0];
+        let cfg = SolverConfig::default();
+        // A deliberately rough guess: lanes must still agree bitwise in
+        // iteration count with the scalar warm path, and None must stay
+        // bitwise-cold.
+        let x0 = vec![0.5, 0.5, 0.5, -0.25, 0.0, 1.0];
+        let (x, stats) = cg_batch_warm(&a, &b, Some(&x0), &cfg);
+        for s in 0..2 {
+            let inst = a.instance(s);
+            let pc = JacobiPrecond::new(&inst);
+            let (xs, st) = super::super::cg::cg_warm(
+                &inst,
+                &b[s * 3..(s + 1) * 3],
+                Some(&x0[s * 3..(s + 1) * 3]),
+                &pc,
+                &cfg,
+            );
+            assert_eq!(stats[s].iterations, st.iterations, "lane {s}");
+            assert_eq!(&x[s * 3..(s + 1) * 3], &xs[..], "lane {s}");
+        }
+        let (x_none, st_none) = cg_batch_warm(&a, &b, None, &cfg);
+        let (x_cold, st_cold) = cg_batch(&a, &b, &cfg);
+        assert_eq!(x_none, x_cold);
+        assert_eq!(st_none[0].iterations, st_cold[0].iterations);
     }
 
     #[test]

@@ -9,8 +9,8 @@ pub mod cg_batch;
 pub mod precond;
 
 pub use bicgstab::bicgstab;
-pub use cg::cg;
-pub use cg_batch::{cg_batch, LockstepOp, MultiRhs};
+pub use cg::{cg, cg_warm};
+pub use cg_batch::{cg_batch, cg_batch_warm, LockstepOp, MultiRhs};
 pub use precond::{IdentityPrecond, JacobiPrecond, Preconditioner};
 
 use crate::sparse::Csr;

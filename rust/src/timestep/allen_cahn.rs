@@ -33,12 +33,14 @@ impl AllenCahnIntegrator {
     /// `ε²` of Eq. (B.18).
     pub fn new(mesh: &Mesh, a2: f64, eps2: f64, dt: f64) -> AllenCahnIntegrator {
         let ctx = AssemblyContext::new(mesh, 1);
-        let k_full = ctx.assemble_matrix(&BilinearForm::Diffusion {
-            rho: Coefficient::Const(1.0),
-        });
-        let m_full = ctx.assemble_matrix(&BilinearForm::Mass {
-            rho: Coefficient::Const(1.0),
-        });
+        // K and M share the topology: one fused batched Map-Reduce
+        // produces both value arrays in a single tile pass.
+        let km = ctx.assemble_matrix_batch(&[
+            BilinearForm::Diffusion { rho: Coefficient::Const(1.0) },
+            BilinearForm::Mass { rho: Coefficient::Const(1.0) },
+        ]);
+        let k_full = km.instance(0);
+        let m_full = km.instance(1);
         let a_full = m_full
             .add_scaled(&k_full, a2 * dt)
             .expect("same shape")
@@ -85,6 +87,29 @@ impl AllenCahnIntegrator {
             .coeff_nodal(u_full)
             .map(move |u| -eps2 * u * (u * u - 1.0));
         self.ctx.assemble_vector(&LinearForm::Source { f: coeff })
+    }
+
+    /// Reaction values `−ε² u(u²−1)` at quadrature points for a full nodal
+    /// field, into a reused `E × Q` buffer — the interpolation of
+    /// [`crate::assembly::Coefficient::from_nodal`] and the pointwise
+    /// nonlinearity fused in the identical arithmetic order, so the values
+    /// are bitwise-equal to `ctx.coeff_nodal(u).map(…)` without the
+    /// per-call quadrature `Vec` (the blocked rollout's per-lane-per-step
+    /// hot path).
+    fn reaction_quad_into(&self, u_full: &[f64], out: &mut [f64]) {
+        let tab = &self.ctx.tab;
+        let cells = &self.ctx.mesh.cells;
+        let k = tab.k;
+        let nq = tab.q;
+        let eps2 = self.eps2;
+        assert_eq!(out.len(), (cells.len() / k) * nq, "quad buffer must be E × Q");
+        for e in 0..cells.len() / k {
+            let dofs = &cells[e * k..(e + 1) * k];
+            for q in 0..nq {
+                let s = crate::assembly::forms::interp_nodal(u_full, dofs, tab, q);
+                out[e * nq + q] = -eps2 * s * (s * s - 1.0);
+            }
+        }
     }
 
     /// One semi-implicit step on free DoFs.
@@ -141,28 +166,41 @@ impl AllenCahnIntegrator {
         // never changes across the rollout.
         let op = MultiRhs::with_inv_diag(&self.a_mat, s_n, self.precond.inv_diag().to_vec());
         let mut mu = vec![0.0; s_n * nf];
+        // Persistent per-rollout buffers: the fused batched reaction
+        // assembly and the blocked RHS are refilled in place every step,
+        // and the per-lane quadrature coefficient buffers are reclaimed
+        // from the forms after each assembly — the whole step is
+        // allocation-free in steady state.
+        let mut reactions = vec![0.0; s_n * self.n_full];
+        let mut rhs = vec![0.0; s_n * nf];
+        let mut full = vec![0.0; self.n_full];
+        let nq = self.ctx.quad.len();
+        let ne = self.ctx.n_cells();
+        let mut quad_bufs: Vec<Vec<f64>> = (0..s_n).map(|_| vec![0.0; ne * nq]).collect();
         for _ in 0..steps {
-            // Batched reaction-load assembly over the S nodal fields.
-            let eps2 = self.eps2;
-            let lforms: Vec<LinearForm> = (0..s_n)
-                .map(|s| {
-                    let full = self.expand(&u[s * nf..(s + 1) * nf]);
-                    let coeff = self
-                        .ctx
-                        .coeff_nodal(&full)
-                        .map(move |v| -eps2 * v * (v * v - 1.0));
-                    LinearForm::Source { f: coeff }
+            // Batched reaction-load assembly over the S nodal fields
+            // through the fused tile engine. Each lane's state is expanded
+            // into the reused full-field buffer (boundary entries stay
+            // zero) and interpolated straight into its reclaimed
+            // quadrature buffer.
+            let lforms: Vec<LinearForm> = quad_bufs
+                .drain(..)
+                .enumerate()
+                .map(|(s, mut vals)| {
+                    for (&dof, &v) in self.free.iter().zip(&u[s * nf..(s + 1) * nf]) {
+                        full[dof] = v;
+                    }
+                    self.reaction_quad_into(&full, &mut vals);
+                    LinearForm::Source { f: Coefficient::Quad(vals) }
                 })
                 .collect();
-            let reactions = self.ctx.assemble_vector_batch(&lforms);
+            self.ctx.assemble_vector_batch_into(&lforms, &mut reactions);
             let n_full = self.n_full;
             self.m.spmv_multi(&u, &mut mu, s_n);
-            let rhs: Vec<f64> = (0..s_n * nf)
-                .map(|i| {
-                    let (s, j) = (i / nf, i % nf);
-                    mu[i] / self.dt + reactions[s * n_full + self.free[j]]
-                })
-                .collect();
+            for (i, r) in rhs.iter_mut().enumerate() {
+                let (s, j) = (i / nf, i % nf);
+                *r = mu[i] / self.dt + reactions[s * n_full + self.free[j]];
+            }
             let (next, stats) = cg_batch(&op, &rhs, &self.config);
             // Hard check: this feeds bulk reference-data generation, where
             // a silently unconverged solve would corrupt every later step.
@@ -171,6 +209,11 @@ impl AllenCahnIntegrator {
                 traj.push(next[s * nf..(s + 1) * nf].to_vec());
             }
             u = next;
+            // Reclaim the quadrature buffers for the next step.
+            quad_bufs.extend(lforms.into_iter().map(|lf| match lf {
+                LinearForm::Source { f: Coefficient::Quad(vals) } => vals,
+                _ => unreachable!("reaction forms are quadrature sources"),
+            }));
         }
         trajs
     }

@@ -28,16 +28,18 @@ pub struct WaveIntegrator {
 }
 
 impl WaveIntegrator {
-    /// Build from a mesh: assembles `M`, `K` via Map-Reduce and condenses
-    /// homogeneous Dirichlet rows/cols (the paper's setup).
+    /// Build from a mesh: assembles `M`, `K` in one fused batched
+    /// Map-Reduce (they share the topology, so one tile pass over the
+    /// mesh yields both value arrays) and condenses homogeneous Dirichlet
+    /// rows/cols (the paper's setup).
     pub fn new(mesh: &Mesh, c: f64, dt: f64) -> WaveIntegrator {
         let ctx = AssemblyContext::new(mesh, 1);
-        let k_full = ctx.assemble_matrix(&BilinearForm::Diffusion {
-            rho: Coefficient::Const(1.0),
-        });
-        let m_full = ctx.assemble_matrix(&BilinearForm::Mass {
-            rho: Coefficient::Const(1.0),
-        });
+        let km = ctx.assemble_matrix_batch(&[
+            BilinearForm::Diffusion { rho: Coefficient::Const(1.0) },
+            BilinearForm::Mass { rho: Coefficient::Const(1.0) },
+        ]);
+        let k_full = km.instance(0);
+        let m_full = km.instance(1);
         let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
         let zero = vec![0.0; ctx.n_dofs()];
         let sys_k = condense(&k_full, &zero, &bc);

@@ -151,9 +151,12 @@ impl Bench {
     }
 
     /// Write a standalone speedup record comparing a baseline measurement
-    /// against an optimized one (e.g. `target/BENCH_solver.json`), so the
-    /// perf trajectory of an optimization can be tracked across PRs
-    /// without parsing the full JSONL stream.
+    /// against an optimized one (e.g. `BENCH_solver.json`), so the perf
+    /// trajectory of an optimization can be tracked across PRs without
+    /// parsing the full JSONL stream. Relative paths are resolved against
+    /// the **repo root** (not the bench binary's cwd, which cargo sets to
+    /// the crate directory) — `BENCH_*.json` records must land where the
+    /// cross-PR trajectory is collected.
     pub fn write_speedup_json(
         &self,
         path: &str,
@@ -161,6 +164,9 @@ impl Bench {
         optimized: &str,
         meta: &[(&str, f64)],
     ) -> Option<f64> {
+        let path = repo_root_path(path);
+        let path = path.to_string_lossy();
+        let path: &str = &path;
         let base = self.median_of(baseline)?;
         let opt = self.median_of(optimized)?;
         let speedup = base / opt.max(1e-12);
@@ -184,6 +190,22 @@ impl Bench {
         }
         Some(speedup)
     }
+}
+
+/// Resolve a bench output file against the repo root (the workspace
+/// directory above this crate). Cargo runs bench/test binaries with the
+/// crate directory as cwd, so bare relative paths would land under
+/// `rust/` — invisible to the cross-PR `BENCH_*.json` trajectory collector
+/// at the repo root. Absolute paths pass through untouched.
+pub fn repo_root_path(name: &str) -> std::path::PathBuf {
+    let p = std::path::Path::new(name);
+    if p.is_absolute() {
+        return p.to_path_buf();
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|root| root.join(p))
+        .unwrap_or_else(|| p.to_path_buf())
 }
 
 /// Human-readable duration.
@@ -220,15 +242,25 @@ mod tests {
     }
 
     #[test]
-    fn speedup_json_written() {
+    fn speedup_json_written_at_repo_root() {
         let mut b = Bench::new("selftest_speedup");
         b.record("base", &[], 2.0);
         b.record("opt", &[], 1.0);
         let s = b.write_speedup_json("target/test_speedup.json", "base", "opt", &[("batch", 4.0)]);
         assert_eq!(s, Some(2.0));
-        let text = std::fs::read_to_string("target/test_speedup.json").unwrap();
+        // Relative paths resolve against the repo root, not the crate cwd.
+        let resolved = repo_root_path("target/test_speedup.json");
+        assert_ne!(resolved, std::path::PathBuf::from("target/test_speedup.json"));
+        let text = std::fs::read_to_string(&resolved).unwrap();
         assert!(text.contains("\"speedup\""));
         assert!(b.write_speedup_json("target/x.json", "missing", "opt", &[]).is_none());
+    }
+
+    #[test]
+    fn repo_root_path_passes_absolute_through() {
+        assert_eq!(repo_root_path("/tmp/x.json"), std::path::PathBuf::from("/tmp/x.json"));
+        assert!(repo_root_path("BENCH_assembly.json").ends_with("BENCH_assembly.json"));
+        assert!(!repo_root_path("BENCH_assembly.json").starts_with("rust"));
     }
 
     #[test]

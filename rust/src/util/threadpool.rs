@@ -263,6 +263,38 @@ pub fn parallel_ranges(n: usize, threads: usize, f: impl Fn(usize, usize) + Sync
     });
 }
 
+/// Number of chunks [`parallel_indexed_ranges`] will split `[0, n)` into
+/// for a given `threads` request — callers size per-task workspace slices
+/// (the fused assembly engine's tile scratch) with this before launching.
+pub fn n_chunks(n: usize, threads: usize) -> usize {
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n == 0 {
+        return 1;
+    }
+    let chunk = n.div_ceil(threads);
+    n.div_ceil(chunk)
+}
+
+/// Like [`parallel_ranges`] but also hands each task its stable chunk
+/// index: `f(chunk_index, lo, hi)` with `chunk_index < n_chunks(n,
+/// threads)`. The index depends only on `(n, threads)` — never on which OS
+/// thread claims the chunk — so tasks can own disjoint scratch slices
+/// (tile scheduling for the fused assembly engine) deterministically.
+pub fn parallel_indexed_ranges(n: usize, threads: usize, f: impl Fn(usize, usize, usize) + Sync) {
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n == 0 {
+        f(0, 0, n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    let n_tasks = n.div_ceil(chunk);
+    run_parallel(n_tasks, &|t| {
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        f(t, lo, hi);
+    });
+}
+
 /// Split `out` into per-thread chunks of `stride`-sized rows and process each
 /// in parallel: `f(row_index, row_slice)`.
 pub fn for_each_row_mut<T: Send>(
@@ -374,6 +406,25 @@ mod tests {
         for (i, v) in data.iter().enumerate() {
             assert_eq!(*v, i + 1, "element {i} written exactly once");
         }
+    }
+
+    #[test]
+    fn indexed_ranges_cover_once_with_stable_chunk_ids() {
+        for threads in [1, 3, 4, 9] {
+            let n = 23;
+            let n_tasks = n_chunks(n, threads);
+            let hits = AtomicUsize::new(0);
+            let max_task = AtomicUsize::new(0);
+            parallel_indexed_ranges(n, threads, |task, lo, hi| {
+                assert!(task < n_tasks, "task {task} >= {n_tasks}");
+                max_task.fetch_max(task, Ordering::SeqCst);
+                hits.fetch_add(hi - lo, Ordering::SeqCst);
+            });
+            assert_eq!(hits.load(Ordering::SeqCst), n, "threads={threads}");
+            assert_eq!(max_task.load(Ordering::SeqCst), n_tasks - 1, "threads={threads}");
+        }
+        assert_eq!(n_chunks(0, 4), 1);
+        assert_eq!(n_chunks(5, 1), 1);
     }
 
     #[test]

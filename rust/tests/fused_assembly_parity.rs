@@ -1,0 +1,201 @@
+//! Fused-engine parity: the zero-materialization tile engine (Map and
+//! Reduce interleaved per cache-sized tile, deterministic cross-tile
+//! fix-up) must reproduce the two-stage pipeline (full `E×kl²` local
+//! tensor, then Sparse-Reduce) **bitwise** — matrix and vector, scalar and
+//! `S = 16` batched — on jittered (unstructured-like) 2D triangle and 3D
+//! tet meshes. CI runs this under `TG_THREADS=1` and `TG_THREADS=4` (like
+//! `batched_solve_parity.rs`): the tile/chunk split depends only on the
+//! requested thread count and problem size, so any divergence across pool
+//! sizes is a determinism bug.
+//!
+//! Default-tile plans put these small meshes in one tile, so the
+//! cross-tile fix-up is additionally forced with explicit tiny tiles
+//! through [`FusedPlan::with_tile`].
+
+use tensor_galerkin::assembly::{
+    AssemblyContext, AssemblyWorkspace, BilinearForm, Coefficient, FusedPlan, LinearForm,
+};
+use tensor_galerkin::mesh::structured::{jitter, unit_cube_tet, unit_square_tri};
+use tensor_galerkin::mesh::Mesh;
+use tensor_galerkin::util::rng::Rng;
+
+fn jittered_tri(n: usize, seed: u64) -> Mesh {
+    let mut m = unit_square_tri(n);
+    jitter(&mut m, 0.2, seed);
+    m
+}
+
+fn jittered_tet(n: usize, seed: u64) -> Mesh {
+    let mut m = unit_cube_tet(n);
+    jitter(&mut m, 0.15, seed);
+    m
+}
+
+/// `S` random quadrature-point diffusion coefficients on one topology.
+fn random_forms(ctx: &AssemblyContext, mesh: &Mesh, s_n: usize, seed: u64) -> Vec<BilinearForm> {
+    let nq = ctx.quad.len();
+    let mut rng = Rng::new(seed);
+    (0..s_n)
+        .map(|_| {
+            let vals: Vec<f64> =
+                (0..mesh.n_cells() * nq).map(|_| rng.uniform_in(0.5, 2.0)).collect();
+            BilinearForm::Diffusion { rho: Coefficient::Quad(vals) }
+        })
+        .collect()
+}
+
+fn random_lforms(ctx: &AssemblyContext, mesh: &Mesh, s_n: usize, seed: u64) -> Vec<LinearForm> {
+    let nq = ctx.quad.len();
+    let mut rng = Rng::new(seed);
+    (0..s_n)
+        .map(|_| {
+            let vals: Vec<f64> =
+                (0..mesh.n_cells() * nq).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            LinearForm::Source { f: Coefficient::Quad(vals) }
+        })
+        .collect()
+}
+
+/// Scalar + batched, matrix + vector bitwise parity on one mesh through
+/// the context's default plan, plus repeat-call determinism (workspace
+/// reuse must not leak state between assemblies).
+fn assert_ctx_parity(ctx: &AssemblyContext, mesh: &Mesh, tag: &str, seed: u64) {
+    let forms = random_forms(ctx, mesh, 16, seed);
+    let lforms = random_lforms(ctx, mesh, 16, seed ^ 0xabcd);
+
+    // Scalar matrix, including a Mass instance (the accumulating, non-
+    // const-gradient Map arm) and a Const-coefficient diffusion.
+    let scalars = [
+        forms[0].clone(),
+        BilinearForm::Mass { rho: Coefficient::Const(1.5) },
+        BilinearForm::Diffusion { rho: Coefficient::Const(2.0) },
+    ];
+    for (i, form) in scalars.iter().enumerate() {
+        let fused = ctx.assemble_matrix(form);
+        let two = ctx.assemble_matrix_two_stage(form);
+        assert_eq!(fused.indices, two.indices, "{tag} scalar {i}: pattern");
+        assert_eq!(fused.data, two.data, "{tag} scalar {i}: values");
+    }
+
+    // Batched S=16 matrix.
+    let fused_b = ctx.assemble_matrix_batch(&forms);
+    let two_b = ctx.assemble_matrix_batch_two_stage(&forms);
+    assert_eq!(fused_b.indices, two_b.indices, "{tag}: batch pattern");
+    for s in 0..forms.len() {
+        assert_eq!(fused_b.values(s), two_b.values(s), "{tag}: batch instance {s}");
+        // …and each instance matches its scalar assembly bitwise.
+        let solo = ctx.assemble_matrix(&forms[s]);
+        assert_eq!(fused_b.values(s), &solo.data[..], "{tag}: batch-vs-scalar {s}");
+    }
+
+    // Scalar + batched vectors.
+    let fv = ctx.assemble_vector(&lforms[0]);
+    let tv = ctx.assemble_vector_two_stage(&lforms[0]);
+    assert_eq!(fv, tv, "{tag}: scalar vector");
+    let fvb = ctx.assemble_vector_batch(&lforms);
+    let tvb = ctx.assemble_vector_batch_two_stage(&lforms);
+    assert_eq!(fvb, tvb, "{tag}: batched vector");
+
+    // Repeat-call determinism through the shared workspace.
+    let again = ctx.assemble_matrix_batch(&forms);
+    assert_eq!(again.data, fused_b.data, "{tag}: repeat call drifted");
+}
+
+/// Tiny explicit tiles (1, 3 and 7 elements) force cross-tile boundary
+/// targets on these meshes; the fix-up pass must keep every value bitwise
+/// equal to the two-stage reduce.
+fn assert_small_tile_parity(ctx: &AssemblyContext, mesh: &Mesh, tag: &str, seed: u64) {
+    let forms = random_forms(ctx, mesh, 16, seed);
+    let lforms = random_lforms(ctx, mesh, 16, seed ^ 0x1234);
+    let two_b = ctx.assemble_matrix_batch_two_stage(&forms);
+    let two_v = ctx.assemble_vector_batch_two_stage(&lforms);
+    for tile in [1usize, 3, 7] {
+        let plan = FusedPlan::with_tile(&ctx.routing, mesh.n_cells(), tile);
+        assert!(plan.n_tiles > 1, "{tag} tile={tile}: want a multi-tile plan");
+        assert!(plan.halo_len() > 0, "{tag} tile={tile}: want cross-tile targets");
+        let mut ws = AssemblyWorkspace::new();
+        let mut data = vec![0.0; forms.len() * ctx.routing.nnz()];
+        plan.assemble_matrix_batch_into(
+            &ctx.routing,
+            &forms,
+            &ctx.geo,
+            &ctx.tab,
+            mesh.dim,
+            &mut ws,
+            &mut data,
+        );
+        assert_eq!(data, two_b.data, "{tag} tile={tile}: matrix values");
+        let mut vout = vec![0.0; lforms.len() * ctx.n_dofs()];
+        plan.assemble_vector_batch_into(
+            &ctx.routing,
+            &lforms,
+            &ctx.geo,
+            &ctx.tab,
+            mesh.dim,
+            &mut ws,
+            &mut vout,
+        );
+        assert_eq!(vout, two_v, "{tag} tile={tile}: vector values");
+    }
+}
+
+#[test]
+fn fused_matches_two_stage_2d_tri() {
+    let mesh = jittered_tri(8, 11);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    assert_ctx_parity(&ctx, &mesh, "tri2d", 301);
+}
+
+#[test]
+fn fused_matches_two_stage_3d_tet() {
+    let mesh = jittered_tet(4, 23);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    assert_ctx_parity(&ctx, &mesh, "tet3d", 302);
+}
+
+#[test]
+fn fused_small_tiles_match_two_stage_2d_tri() {
+    let mesh = jittered_tri(7, 31);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    assert_small_tile_parity(&ctx, &mesh, "tri2d", 303);
+}
+
+#[test]
+fn fused_small_tiles_match_two_stage_3d_tet() {
+    let mesh = jittered_tet(3, 41);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    assert_small_tile_parity(&ctx, &mesh, "tet3d", 304);
+}
+
+#[test]
+fn fused_matches_two_stage_elasticity_3d() {
+    // Vector-valued DoFs (ncomp = 3, kl = 12): both the const-gradient
+    // elasticity arm and the tile/fix-up bookkeeping at a larger kl².
+    let mesh = jittered_tet(3, 53);
+    let ctx = AssemblyContext::new(&mesh, 3);
+    let form = BilinearForm::Elasticity {
+        lambda: 0.5769,
+        mu: 0.3846,
+        e_mod: Coefficient::Const(1.0),
+    };
+    let fused = ctx.assemble_matrix(&form);
+    let two = ctx.assemble_matrix_two_stage(&form);
+    assert_eq!(fused.data, two.data, "elasticity scalar");
+    let two_b = ctx.assemble_matrix_batch_two_stage(std::slice::from_ref(&form));
+    for tile in [2usize, 5] {
+        let plan = FusedPlan::with_tile(&ctx.routing, mesh.n_cells(), tile);
+        assert!(plan.n_tiles > 1);
+        let mut ws = AssemblyWorkspace::new();
+        let mut data = vec![0.0; ctx.routing.nnz()];
+        plan.assemble_matrix_batch_into(
+            &ctx.routing,
+            std::slice::from_ref(&form),
+            &ctx.geo,
+            &ctx.tab,
+            mesh.dim,
+            &mut ws,
+            &mut data,
+        );
+        assert_eq!(data, two_b.data, "elasticity tile={tile}");
+    }
+}
