@@ -1,10 +1,15 @@
 //! Bench: Fig B.4 — batched data generation (fixed 3D Poisson operator,
 //! varying RHS) vs the naive per-sample pipeline, plus the multi-instance
 //! regime where every sample carries its own coefficient field and all S
-//! operators are assembled by one shared-topology Map-Reduce.
+//! operators are assembled by one shared-topology Map-Reduce, plus the
+//! *served* regime: the same burst pushed through the continuous-batching
+//! [`BatchServer`] (one batched dispatch) vs a sequential client
+//! (request-by-request over the same server). The served comparison is the
+//! coordinator's perf trajectory, recorded to `BENCH_coordinator.json` at
+//! the repo root.
 
 use tensor_galerkin::coordinator::batcher::{solve_unbatched, BatchSolver};
-use tensor_galerkin::coordinator::{SolveRequest, VarCoeffRequest};
+use tensor_galerkin::coordinator::{BatchServer, SolveRequest, VarCoeffRequest};
 use tensor_galerkin::mesh::structured::unit_cube_tet;
 use tensor_galerkin::solver::SolverConfig;
 use tensor_galerkin::util::bench::Bench;
@@ -16,6 +21,7 @@ fn main() {
     let n = args.get_usize("n", 12);
     let batches = args.get_usize_list("batches", &[1, 4, 16, 64]);
     let s_varcoeff = args.get_usize("varcoeff", 16);
+    let s_served = args.get_usize("served", 32);
     let mesh = unit_cube_tet(n);
     let cfg = SolverConfig {
         rel_tol: 1e-8,
@@ -26,9 +32,11 @@ fn main() {
     let solver = BatchSolver::new(&mesh, cfg);
     for &b in &batches {
         let reqs: Vec<SolveRequest> = (0..b)
-            .map(|id| SolveRequest {
-                id: id as u64,
-                f_nodal: (0..mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            .map(|id| {
+                SolveRequest::new(
+                    id as u64,
+                    (0..mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+                )
             })
             .collect();
         bench.bench(
@@ -48,10 +56,12 @@ fn main() {
     // sharing one symbolic pattern (CsrBatch) vs S scalar assembly+solve
     // pipelines over the same requests.
     let vreqs: Vec<VarCoeffRequest> = (0..s_varcoeff)
-        .map(|id| VarCoeffRequest {
-            id: id as u64,
-            rho_nodal: (0..mesh.n_nodes()).map(|_| rng.uniform_in(0.5, 2.0)).collect(),
-            f_nodal: (0..mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+        .map(|id| {
+            VarCoeffRequest::new(
+                id as u64,
+                (0..mesh.n_nodes()).map(|_| rng.uniform_in(0.5, 2.0)).collect(),
+                (0..mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            )
         })
         .collect();
     bench.bench(
@@ -64,5 +74,58 @@ fn main() {
         &[("batch", s_varcoeff as f64), ("n_dofs", mesh.n_nodes() as f64)],
         || solver.solve_varcoeff_sequential(&vreqs).unwrap().len(),
     );
+
+    // --- Served throughput: the same burst through the continuous-batching
+    // server. Burst submission lands the whole group in one drain cycle →
+    // ONE batched assembly + one lockstep CG; the baseline is a sequential
+    // client that waits for each response before submitting the next
+    // (request-by-request serving, what the pre-PR-4 worker did for every
+    // drained batch).
+    let server = BatchServer::start(mesh.clone(), cfg, s_served);
+    let sreqs: Vec<SolveRequest> = (0..s_served)
+        .map(|id| {
+            SolveRequest::new(
+                id as u64,
+                (0..mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            )
+        })
+        .collect();
+    // Warm the lazy per-mesh state so both arms measure steady-state serving.
+    server
+        .submit(sreqs[0].clone())
+        .recv()
+        .expect("server alive")
+        .expect("warmup solve");
+    bench.bench(
+        &format!("served_burst/b{s_served}"),
+        &[("batch", s_served as f64), ("n_dofs", mesh.n_nodes() as f64)],
+        || {
+            let out = server.solve_all(sreqs.clone()).unwrap();
+            out.len()
+        },
+    );
+    bench.bench(
+        &format!("served_sequential/b{s_served}"),
+        &[("batch", s_served as f64), ("n_dofs", mesh.n_nodes() as f64)],
+        || {
+            sreqs
+                .iter()
+                .map(|r| server.submit(r.clone()).recv().unwrap().unwrap())
+                .count()
+        },
+    );
     bench.finish();
+    let stats = server.stats().expect("worker alive");
+    println!(
+        "server dispatches: {} batched, {} scalar, {} failed",
+        stats.batched_solves, stats.scalar_solves, stats.failed_requests
+    );
+    if let Some(speedup) = bench.write_speedup_json(
+        "BENCH_coordinator.json",
+        &format!("served_sequential/b{s_served}"),
+        &format!("served_burst/b{s_served}"),
+        &[("batch", s_served as f64), ("n_dofs", mesh.n_nodes() as f64)],
+    ) {
+        println!("served burst vs sequential client speedup: {speedup:.2}×");
+    }
 }

@@ -15,6 +15,7 @@
 //! attached (phase 2) the Map stage can be executed by the AOT-compiled
 //! Pallas kernel — and as the bitwise-parity reference in tests/benches.
 
+use std::borrow::Cow;
 use std::sync::Mutex;
 
 use crate::fem::dofmap::DofMap;
@@ -326,8 +327,33 @@ impl AssemblyContext {
             self.routing.mat_src.iter().map(|&s| (s as usize / kl2) as u32).collect();
         BatchedAssembly {
             ctx: self,
-            weights,
-            src_elem,
+            plan: Cow::Owned(BatchedPlan { weights, src_elem }),
+        }
+    }
+
+    /// The owned separable plan for `form` (see
+    /// [`AssemblyContext::batched`]) — `None` for non-separable forms.
+    /// Cache it next to the context and rebind per batch with
+    /// [`AssemblyContext::batched_cached`]; the unit-tensor Map then runs
+    /// once per topology instead of once per call.
+    pub fn batched_plan(&self, form: &BilinearForm) -> Option<BatchedPlan> {
+        self.batched(form).map(BatchedAssembly::into_plan)
+    }
+
+    /// Rebind a cached [`BatchedPlan`] to this context (zero-copy).
+    ///
+    /// Contract: the plan must have been built from this context's
+    /// topology AND the same bilinear form (including parameters such as
+    /// elasticity's `lambda`/`mu`) — only the topology half is cheap
+    /// enough to assert here, so rebinding a plan from a *different form*
+    /// on the same context would silently assemble that other operator.
+    /// Cache one plan per (context, form) pair, as
+    /// [`crate::coordinator::BatchSolver`] does.
+    pub fn batched_cached<'c>(&'c self, plan: &'c BatchedPlan) -> BatchedAssembly<'c> {
+        assert_eq!(plan.weights.len(), self.routing.mat_src.len(), "plan/context mismatch");
+        BatchedAssembly {
+            ctx: self,
+            plan: Cow::Borrowed(plan),
         }
     }
 
@@ -383,10 +409,28 @@ impl AssemblyContext {
 /// bitwise-identical to a sequential [`AssemblyContext::assemble_matrix`].
 pub struct BatchedAssembly<'c> {
     ctx: &'c AssemblyContext,
+    plan: Cow<'c, BatchedPlan>,
+}
+
+/// The owned data of a separable batched-assembly plan, detached from the
+/// [`AssemblyContext`] borrow so long-lived owners (e.g. the coordinator's
+/// per-mesh registry) can cache it next to the context and rebind with
+/// [`AssemblyContext::batched_cached`] on every batch instead of paying the
+/// `E × kl²` unit-tensor Map again per call.
+#[derive(Clone, Debug)]
+pub struct BatchedPlan {
     /// Unit local values gathered into `routing.mat_src` order.
     weights: Vec<f64>,
     /// Owning element of each gather source.
     src_elem: Vec<u32>,
+}
+
+impl<'c> BatchedAssembly<'c> {
+    /// Detach the owned plan data (to cache; rebind later with
+    /// [`AssemblyContext::batched_cached`]).
+    pub fn into_plan(self) -> BatchedPlan {
+        self.plan.into_owned()
+    }
 }
 
 impl BatchedAssembly<'_> {
@@ -461,7 +505,7 @@ impl BatchedAssembly<'_> {
             let cs = &scalars[s * ne..(s + 1) * ne];
             let mut acc = 0.0;
             for j in routing.mat_ptr[p]..routing.mat_ptr[p + 1] {
-                acc += self.weights[j] * cs[self.src_elem[j] as usize];
+                acc += self.plan.weights[j] * cs[self.plan.src_elem[j] as usize];
             }
             out[0] = acc;
         });
@@ -716,6 +760,27 @@ mod tests {
             });
             assert_eq!(batch.values(s), &seq.data[..], "instance {s}");
         }
+    }
+
+    #[test]
+    fn cached_plan_rebinding_is_bitwise_fresh_plan() {
+        let mut m = unit_square_tri(5);
+        jitter(&mut m, 0.1, 7);
+        let ctx = AssemblyContext::new(&m, 1);
+        let proto = BilinearForm::Diffusion { rho: Coefficient::Const(1.0) };
+        let owned = ctx.batched_plan(&proto).expect("P1 triangles are separable");
+        let coeffs: Vec<Coefficient> =
+            (0..3).map(|s| ctx.coeff_fn(move |p| 1.0 + 0.2 * s as f64 + p[1])).collect();
+        let fresh = ctx.batched(&proto).unwrap().assemble(&coeffs);
+        let cached = ctx.batched_cached(&owned).assemble(&coeffs);
+        assert_eq!(fresh.data, cached.data);
+        // The rebound plan also serves the nodal collapse path.
+        let nodal: Vec<Vec<f64>> = (0..2)
+            .map(|s| (0..ctx.n_dofs()).map(|i| 1.0 + (i + s) as f64 * 1e-3).collect())
+            .collect();
+        let a = ctx.batched(&proto).unwrap().assemble_nodal(&nodal);
+        let b = ctx.batched_cached(&owned).assemble_nodal(&nodal);
+        assert_eq!(a.data, b.data);
     }
 
     #[test]

@@ -27,5 +27,5 @@ pub mod scatter;
 
 pub use forms::{BilinearForm, Coefficient, LinearForm};
 pub use fused::{AssemblyWorkspace, FusedPlan};
-pub use map_reduce::{AssemblyContext, BatchedAssembly};
+pub use map_reduce::{AssemblyContext, BatchedAssembly, BatchedPlan};
 pub use routing::Routing;

@@ -1,12 +1,41 @@
 //! Request/response types of the batch-solve service.
+//!
+//! Every request is tagged with the `mesh_id` of the topology it targets:
+//! one [`super::server::BatchServer`] instance serves many registered
+//! meshes, grouping drained requests by mesh key before dispatching each
+//! group as one batched solve. Single-mesh callers can ignore the tag —
+//! [`DEFAULT_MESH`] is what `BatchServer::start` registers its mesh under
+//! and what the convenience constructors fill in.
+
+/// The mesh key used by single-mesh servers and the plain constructors.
+pub const DEFAULT_MESH: u64 = 0;
 
 /// A single solve request: right-hand side nodal values for the shared
-/// operator (the Fig B.4 regime — fixed mesh/K, varying `f`).
+/// operator of the target mesh (the Fig B.4 regime — fixed mesh/K,
+/// varying `f`).
 #[derive(Clone, Debug)]
 pub struct SolveRequest {
     pub id: u64,
+    /// Key of the registered mesh topology this request targets.
+    pub mesh_id: u64,
     /// Nodal source values, interpolated to quadrature by the solver.
     pub f_nodal: Vec<f64>,
+}
+
+impl SolveRequest {
+    /// Request against the default (single-server) mesh.
+    pub fn new(id: u64, f_nodal: Vec<f64>) -> SolveRequest {
+        SolveRequest {
+            id,
+            mesh_id: DEFAULT_MESH,
+            f_nodal,
+        }
+    }
+
+    /// Request against a specific registered mesh.
+    pub fn on_mesh(id: u64, mesh_id: u64, f_nodal: Vec<f64>) -> SolveRequest {
+        SolveRequest { id, mesh_id, f_nodal }
+    }
 }
 
 /// A solve request carrying its *own* diffusion coefficient field in
@@ -18,10 +47,39 @@ pub struct SolveRequest {
 #[derive(Clone, Debug)]
 pub struct VarCoeffRequest {
     pub id: u64,
+    /// Key of the registered mesh topology this request targets.
+    pub mesh_id: u64,
     /// Nodal diffusion coefficient (must stay strictly positive).
     pub rho_nodal: Vec<f64>,
     /// Nodal source values.
     pub f_nodal: Vec<f64>,
+}
+
+impl VarCoeffRequest {
+    /// Request against the default (single-server) mesh.
+    pub fn new(id: u64, rho_nodal: Vec<f64>, f_nodal: Vec<f64>) -> VarCoeffRequest {
+        VarCoeffRequest {
+            id,
+            mesh_id: DEFAULT_MESH,
+            rho_nodal,
+            f_nodal,
+        }
+    }
+
+    /// Request against a specific registered mesh.
+    pub fn on_mesh(
+        id: u64,
+        mesh_id: u64,
+        rho_nodal: Vec<f64>,
+        f_nodal: Vec<f64>,
+    ) -> VarCoeffRequest {
+        VarCoeffRequest {
+            id,
+            mesh_id,
+            rho_nodal,
+            f_nodal,
+        }
+    }
 }
 
 /// The answer.
@@ -31,4 +89,23 @@ pub struct SolveResponse {
     pub u: Vec<f64>,
     pub iterations: usize,
     pub rel_residual: f64,
+}
+
+/// Aggregate serving counters of a [`super::server::BatchServer`] worker,
+/// summed over every per-mesh [`super::batcher::BatchSolver`] it has built
+/// (observability + the regression hook proving drained bursts really go
+/// through the batched pipelines).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CoordinatorStats {
+    /// Batched dispatches (one `solve_batch`/`solve_varcoeff_batch` call,
+    /// whatever the group size).
+    pub batched_solves: u64,
+    /// Scalar dispatches (`solve_one`/`solve_varcoeff_one` — singleton
+    /// groups only).
+    pub scalar_solves: u64,
+    /// Requests answered with an error (validation, unconverged lane, or
+    /// recovered panic).
+    pub failed_requests: u64,
+    /// Mesh states materialized so far (lazy registry fills).
+    pub meshes_built: u64,
 }

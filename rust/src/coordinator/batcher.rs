@@ -11,10 +11,20 @@
 //! ONE fused pass over the shared sparsity pattern instead of `S`, and the
 //! varcoeff path condenses all `S` operators through one setup-time
 //! symbolic mapping ([`CondensePlan`]).
+//!
+//! Fault isolation (PR 4): the `*_each` entry points return one `Result`
+//! per request — a malformed request (shape mismatch, non-positive
+//! coefficient) or an unconverged lane fails *that request only*; its
+//! healthy neighbors in the same batched dispatch still get answers. The
+//! legacy `Result<Vec<_>>` wrappers keep the old abort-on-first-error
+//! contract for callers that want it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
 
 use anyhow::Result;
 
-use crate::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
+use crate::assembly::{AssemblyContext, BatchedPlan, BilinearForm, Coefficient, LinearForm};
 use crate::bc::{condense, CondensePlan, DirichletBc, ReducedSystem};
 use crate::mesh::Mesh;
 use crate::solver::{cg, cg_batch, JacobiPrecond, MultiRhs, SolverConfig};
@@ -29,16 +39,30 @@ pub struct BatchSolver {
     /// Dirichlet symbolic mapping on the shared pattern — built once at
     /// setup, reused by every varcoeff batch condensation.
     cplan: CondensePlan,
+    /// Separable weighted-gather plan for the varcoeff diffusion operator
+    /// (P1 simplices) — built lazily on the first varcoeff batch (pure
+    /// fixed-operator workloads never pay the `E × kl²` unit-tensor Map),
+    /// then reused by every later batch. `Some(None)` on non-separable
+    /// topologies (Quad4), where the generic fused batch path runs.
+    vplan: OnceLock<Option<BatchedPlan>>,
     config: SolverConfig,
+    /// Batched dispatches performed (one per `solve_batch`-family call
+    /// that reached the lockstep solver) — the serving layer's regression
+    /// hook proving drained bursts cost ONE batched solve, not S scalar
+    /// ones.
+    batched_solves: AtomicU64,
+    /// Scalar dispatches performed (`solve_one` / `solve_varcoeff_one`).
+    scalar_solves: AtomicU64,
 }
 
 impl BatchSolver {
     /// Build the amortized state (assemble K once, condense, precondition).
     pub fn new(mesh: &Mesh, config: SolverConfig) -> BatchSolver {
         let ctx = AssemblyContext::new(mesh, 1);
-        let k = ctx.assemble_matrix(&BilinearForm::Diffusion {
+        let proto = BilinearForm::Diffusion {
             rho: Coefficient::Const(1.0),
-        });
+        };
+        let k = ctx.assemble_matrix(&proto);
         let zero = vec![0.0; ctx.n_dofs()];
         let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
         let cplan = CondensePlan::new(k.nrows, &k.indptr, &k.indices, &bc);
@@ -51,12 +75,76 @@ impl BatchSolver {
             sys,
             precond,
             cplan,
+            vplan: OnceLock::new(),
             config,
+            batched_solves: AtomicU64::new(0),
+            scalar_solves: AtomicU64::new(0),
         }
+    }
+
+    /// The cached separable plan for the varcoeff diffusion operator,
+    /// built on first use.
+    fn varcoeff_plan(&self) -> &Option<BatchedPlan> {
+        self.vplan.get_or_init(|| {
+            self.ctx.batched_plan(&BilinearForm::Diffusion {
+                rho: Coefficient::Const(1.0),
+            })
+        })
+    }
+
+    /// Batched dispatches performed so far (each covering a whole group).
+    pub fn n_batched_solves(&self) -> u64 {
+        self.batched_solves.load(Ordering::Relaxed)
+    }
+
+    /// Scalar dispatches performed so far.
+    pub fn n_scalar_solves(&self) -> u64 {
+        self.scalar_solves.load(Ordering::Relaxed)
+    }
+
+    /// Shape-check a fixed-operator request. Rejecting up front is what
+    /// keeps a malformed request from panicking inside the nodal
+    /// interpolation (out-of-bounds `f_nodal[cell[a]]`) and killing the
+    /// serving worker.
+    pub fn validate(&self, req: &SolveRequest) -> Result<()> {
+        anyhow::ensure!(
+            req.f_nodal.len() == self.ctx.n_dofs(),
+            "request {}: f_nodal has {} entries, mesh has {} dofs",
+            req.id,
+            req.f_nodal.len(),
+            self.ctx.n_dofs()
+        );
+        Ok(())
+    }
+
+    /// Shape- and positivity-check a varcoeff request (`rho` must be a
+    /// strictly positive finite field for the operator to stay SPD).
+    pub fn validate_varcoeff(&self, req: &VarCoeffRequest) -> Result<()> {
+        let n = self.ctx.n_dofs();
+        anyhow::ensure!(
+            req.rho_nodal.len() == n,
+            "request {}: rho_nodal has {} entries, mesh has {n} dofs",
+            req.id,
+            req.rho_nodal.len()
+        );
+        anyhow::ensure!(
+            req.f_nodal.len() == n,
+            "request {}: f_nodal has {} entries, mesh has {n} dofs",
+            req.id,
+            req.f_nodal.len()
+        );
+        anyhow::ensure!(
+            req.rho_nodal.iter().all(|&r| r.is_finite() && r > 0.0),
+            "request {}: rho_nodal must be strictly positive and finite",
+            req.id
+        );
+        Ok(())
     }
 
     /// Solve one request against the amortized operator.
     pub fn solve_one(&self, req: &SolveRequest) -> Result<SolveResponse> {
+        self.validate(req)?;
+        self.scalar_solves.fetch_add(1, Ordering::Relaxed);
         let f = self.ctx.assemble_vector(&LinearForm::Source {
             f: self.ctx.coeff_nodal(&req.f_nodal),
         });
@@ -71,103 +159,151 @@ impl BatchSolver {
         })
     }
 
-    /// Solve a whole batch. Beyond the amortized operator state, the `S`
-    /// load assemblies run as ONE batched Map-Reduce (fused `S × E`
-    /// Batch-Map + fused `S × N` Sparse-Reduce) instead of `S` scalar
-    /// assembly calls, and the `S` solves run as ONE lockstep CG on the
-    /// shared condensed operator ([`MultiRhs`]: every Krylov iteration
-    /// reads the pattern and values once for the whole batch). Results are
-    /// identical to [`BatchSolver::solve_one`] per request.
-    pub fn solve_batch(&self, reqs: &[SolveRequest]) -> Result<Vec<SolveResponse>> {
-        if reqs.is_empty() {
-            return Ok(Vec::new());
+    /// Solve one varcoeff request through the full per-instance pipeline
+    /// (assemble its operator, condense, precondition, solve).
+    pub fn solve_varcoeff_one(&self, req: &VarCoeffRequest) -> Result<SolveResponse> {
+        self.validate_varcoeff(req)?;
+        self.scalar_solves.fetch_add(1, Ordering::Relaxed);
+        let ctx = &self.ctx;
+        let k = ctx.assemble_matrix(&BilinearForm::Diffusion {
+            rho: ctx.coeff_nodal(&req.rho_nodal),
+        });
+        let f = ctx.assemble_vector(&LinearForm::Source {
+            f: ctx.coeff_nodal(&req.f_nodal),
+        });
+        let sys = condense(&k, &f, &self.sys.bc);
+        let pc = JacobiPrecond::new(&sys.k);
+        let (u_free, stats) = cg(&sys.k, &sys.rhs, &pc, &self.config);
+        anyhow::ensure!(stats.converged, "varcoeff solve {} failed: {stats:?}", req.id);
+        Ok(SolveResponse {
+            id: req.id,
+            u: sys.expand(&u_free),
+            iterations: stats.iterations,
+            rel_residual: stats.rel_residual,
+        })
+    }
+
+    /// Solve a whole batch with per-request fault isolation. Beyond the
+    /// amortized operator state, the `S` load assemblies run as ONE
+    /// batched Map-Reduce (fused `S × E` Batch-Map + fused `S × N`
+    /// Sparse-Reduce) instead of `S` scalar assembly calls, and the `S`
+    /// solves run as ONE lockstep CG on the shared condensed operator
+    /// ([`MultiRhs`]: every Krylov iteration reads the pattern and values
+    /// once for the whole batch). Each lane is bitwise-identical to
+    /// [`BatchSolver::solve_one`] on the same request.
+    ///
+    /// Malformed requests are rejected before assembly and unconverged
+    /// lanes yield an `Err` — in both cases only for the offending
+    /// request; every other lane still gets its answer.
+    pub fn solve_batch_each(&self, reqs: &[SolveRequest]) -> Vec<Result<SolveResponse>> {
+        let (out, valid) = partition_valid(reqs, |r| self.validate(r));
+        if valid.is_empty() {
+            return seal_lanes(out, &valid, |_, _| unreachable!("no valid lanes"));
         }
-        let forms: Vec<LinearForm> = reqs
+        self.batched_solves.fetch_add(1, Ordering::Relaxed);
+        let forms: Vec<LinearForm> = valid
             .iter()
-            .map(|r| LinearForm::Source { f: self.ctx.coeff_nodal(&r.f_nodal) })
+            .map(|&i| LinearForm::Source { f: self.ctx.coeff_nodal(&reqs[i].f_nodal) })
             .collect();
         let fbatch = self.ctx.assemble_vector_batch(&forms);
         let n = self.ctx.n_dofs();
         let nf = self.sys.free.len();
-        let mut rhs = Vec::with_capacity(reqs.len() * nf);
-        for s in 0..reqs.len() {
+        let mut rhs = Vec::with_capacity(valid.len() * nf);
+        for s in 0..valid.len() {
             rhs.extend(self.sys.restrict(&fbatch[s * n..(s + 1) * n]));
         }
         let op =
-            MultiRhs::with_inv_diag(&self.sys.k, reqs.len(), self.precond.inv_diag().to_vec());
+            MultiRhs::with_inv_diag(&self.sys.k, valid.len(), self.precond.inv_diag().to_vec());
         let (u, stats) = cg_batch(&op, &rhs, &self.config);
-        reqs.iter()
-            .enumerate()
-            .map(|(s, req)| {
-                let st = stats[s];
-                anyhow::ensure!(st.converged, "batch solve {} failed: {st:?}", req.id);
-                Ok(SolveResponse {
-                    id: req.id,
-                    u: self.sys.expand(&u[s * nf..(s + 1) * nf]),
-                    iterations: st.iterations,
-                    rel_residual: st.rel_residual,
-                })
+        seal_lanes(out, &valid, |s, i| {
+            let st = stats[s];
+            anyhow::ensure!(st.converged, "batch solve {} failed: {st:?}", reqs[i].id);
+            Ok(SolveResponse {
+                id: reqs[i].id,
+                u: self.sys.expand(&u[s * nf..(s + 1) * nf]),
+                iterations: st.iterations,
+                rel_residual: st.rel_residual,
             })
-            .collect()
+        })
     }
 
-    /// Multi-instance batch: every request carries its own coefficient
-    /// field, so each sample is a *different operator* on the shared
-    /// topology. All `S` stiffness matrices are produced by one
-    /// shared-topology Map-Reduce — the separable weighted-gather plan on
-    /// P1 simplices, the fused generic batch otherwise — into a
-    /// [`crate::sparse::CsrBatch`] with one symbolic pattern; the `S` load
-    /// vectors by one batched vector assembly. Condensation reuses the
-    /// setup-time symbolic mapping ([`CondensePlan`]) and the `S` solves
-    /// advance in lockstep ([`cg_batch`]: one fused SpMV per Krylov
-    /// iteration), bitwise identical to the per-instance pipeline.
-    pub fn solve_varcoeff_batch(&self, reqs: &[VarCoeffRequest]) -> Result<Vec<SolveResponse>> {
-        if reqs.is_empty() {
-            return Ok(Vec::new());
+    /// Abort-on-first-error wrapper around
+    /// [`BatchSolver::solve_batch_each`] (the historical contract: any
+    /// failing lane fails the call).
+    pub fn solve_batch(&self, reqs: &[SolveRequest]) -> Result<Vec<SolveResponse>> {
+        self.solve_batch_each(reqs).into_iter().collect()
+    }
+
+    /// Multi-instance batch with per-request fault isolation: every
+    /// request carries its own coefficient field, so each sample is a
+    /// *different operator* on the shared topology. All `S` stiffness
+    /// matrices are produced by one shared-topology Map-Reduce — the
+    /// setup-cached separable weighted-gather plan on P1 simplices, the
+    /// fused generic batch otherwise — into a [`crate::sparse::CsrBatch`]
+    /// with one symbolic pattern; the `S` load vectors by one batched
+    /// vector assembly. Condensation reuses the setup-time symbolic
+    /// mapping ([`CondensePlan`]) and the `S` solves advance in lockstep
+    /// ([`cg_batch`]: one fused SpMV per Krylov iteration), bitwise
+    /// identical to the per-instance pipeline. Malformed requests and
+    /// unconverged lanes fail individually, as in
+    /// [`BatchSolver::solve_batch_each`].
+    pub fn solve_varcoeff_batch_each(
+        &self,
+        reqs: &[VarCoeffRequest],
+    ) -> Vec<Result<SolveResponse>> {
+        let (out, valid) = partition_valid(reqs, |r| self.validate_varcoeff(r));
+        if valid.is_empty() {
+            return seal_lanes(out, &valid, |_, _| unreachable!("no valid lanes"));
         }
+        self.batched_solves.fetch_add(1, Ordering::Relaxed);
         let ctx = &self.ctx;
-        let proto = BilinearForm::Diffusion { rho: Coefficient::Const(1.0) };
-        let kbatch = match ctx.batched(&proto) {
+        let kbatch = match self.varcoeff_plan() {
             Some(plan) => {
                 // Separable path: each request's nodal coefficient
                 // collapses straight to per-element scalars through the
                 // context workspace — no per-request quadrature `Vec` is
                 // materialized (bitwise-identical to evaluating
                 // `coeff_nodal` first).
-                let nodal: Vec<&[f64]> = reqs.iter().map(|r| r.rho_nodal.as_slice()).collect();
-                plan.assemble_nodal(&nodal)
+                let nodal: Vec<&[f64]> =
+                    valid.iter().map(|&i| reqs[i].rho_nodal.as_slice()).collect();
+                ctx.batched_cached(plan).assemble_nodal(&nodal)
             }
             None => {
-                let forms: Vec<BilinearForm> = reqs
+                let forms: Vec<BilinearForm> = valid
                     .iter()
-                    .map(|r| BilinearForm::Diffusion { rho: ctx.coeff_nodal(&r.rho_nodal) })
+                    .map(|&i| BilinearForm::Diffusion {
+                        rho: ctx.coeff_nodal(&reqs[i].rho_nodal),
+                    })
                     .collect();
                 ctx.assemble_matrix_batch(&forms)
             }
         };
-        let lforms: Vec<LinearForm> = reqs
+        let lforms: Vec<LinearForm> = valid
             .iter()
-            .map(|r| LinearForm::Source { f: ctx.coeff_nodal(&r.f_nodal) })
+            .map(|&i| LinearForm::Source { f: ctx.coeff_nodal(&reqs[i].f_nodal) })
             .collect();
         let fbatch = ctx.assemble_vector_batch(&lforms);
-        // The Dirichlet symbolic mapping was computed once at setup; each
-        // batch only pays the value gather + lift.
+        // The Dirichlet symbolic mapping was computed once at setup;
+        // each batch only pays the value gather + lift.
         let red = self.cplan.apply_batch(&kbatch, &fbatch);
         let (u, stats) = cg_batch(&red.k, &red.rhs, &self.config);
         let nf = red.n_free();
-        reqs.iter()
-            .enumerate()
-            .map(|(s, req)| {
-                let st = stats[s];
-                anyhow::ensure!(st.converged, "varcoeff solve {} failed: {st:?}", req.id);
-                Ok(SolveResponse {
-                    id: req.id,
-                    u: red.expand(&u[s * nf..(s + 1) * nf]),
-                    iterations: st.iterations,
-                    rel_residual: st.rel_residual,
-                })
+        seal_lanes(out, &valid, |s, i| {
+            let st = stats[s];
+            anyhow::ensure!(st.converged, "varcoeff solve {} failed: {st:?}", reqs[i].id);
+            Ok(SolveResponse {
+                id: reqs[i].id,
+                u: red.expand(&u[s * nf..(s + 1) * nf]),
+                iterations: st.iterations,
+                rel_residual: st.rel_residual,
             })
-            .collect()
+        })
+    }
+
+    /// Abort-on-first-error wrapper around
+    /// [`BatchSolver::solve_varcoeff_batch_each`].
+    pub fn solve_varcoeff_batch(&self, reqs: &[VarCoeffRequest]) -> Result<Vec<SolveResponse>> {
+        self.solve_varcoeff_batch_each(reqs).into_iter().collect()
     }
 
     /// The scalar (one-assembly-per-request) counterpart of
@@ -177,32 +313,46 @@ impl BatchSolver {
         &self,
         reqs: &[VarCoeffRequest],
     ) -> Result<Vec<SolveResponse>> {
-        let ctx = &self.ctx;
-        reqs.iter()
-            .map(|req| {
-                let k = ctx.assemble_matrix(&BilinearForm::Diffusion {
-                    rho: ctx.coeff_nodal(&req.rho_nodal),
-                });
-                let f = ctx.assemble_vector(&LinearForm::Source {
-                    f: ctx.coeff_nodal(&req.f_nodal),
-                });
-                let sys = condense(&k, &f, &self.sys.bc);
-                let pc = JacobiPrecond::new(&sys.k);
-                let (u_free, stats) = cg(&sys.k, &sys.rhs, &pc, &self.config);
-                anyhow::ensure!(stats.converged, "varcoeff solve {} failed: {stats:?}", req.id);
-                Ok(SolveResponse {
-                    id: req.id,
-                    u: sys.expand(&u_free),
-                    iterations: stats.iterations,
-                    rel_residual: stats.rel_residual,
-                })
-            })
-            .collect()
+        reqs.iter().map(|req| self.solve_varcoeff_one(req)).collect()
     }
 
     pub fn n_dofs(&self) -> usize {
         self.ctx.n_dofs()
     }
+}
+
+/// Validate every request, pre-filling the per-request outcome slots with
+/// the rejections; returns `(slots, indices of the valid lanes)`. Shared
+/// scaffold of the `*_each` fault-isolated batch entry points.
+fn partition_valid<R>(
+    reqs: &[R],
+    validate: impl Fn(&R) -> Result<()>,
+) -> (Vec<Option<Result<SolveResponse>>>, Vec<usize>) {
+    let mut out = Vec::with_capacity(reqs.len());
+    let mut valid = Vec::with_capacity(reqs.len());
+    for (i, req) in reqs.iter().enumerate() {
+        match validate(req) {
+            Ok(()) => {
+                valid.push(i);
+                out.push(None);
+            }
+            Err(e) => out.push(Some(Err(e))),
+        }
+    }
+    (out, valid)
+}
+
+/// Fill the still-open outcome slots from the lockstep solve — `lane(s, i)`
+/// answers request `i = valid[s]` — and unwrap every slot.
+fn seal_lanes(
+    mut out: Vec<Option<Result<SolveResponse>>>,
+    valid: &[usize],
+    mut lane: impl FnMut(usize, usize) -> Result<SolveResponse>,
+) -> Vec<Result<SolveResponse>> {
+    for (s, &i) in valid.iter().enumerate() {
+        out[i] = Some(lane(s, i));
+    }
+    out.into_iter().map(|r| r.expect("every lane answered")).collect()
 }
 
 /// The naive per-sample pipeline (baseline in Fig B.4): everything rebuilt
@@ -229,9 +379,24 @@ mod tests {
     fn requests(n_nodes: usize, count: usize, seed: u64) -> Vec<SolveRequest> {
         let mut rng = Rng::new(seed);
         (0..count)
-            .map(|id| SolveRequest {
-                id: id as u64,
-                f_nodal: (0..n_nodes).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            .map(|id| {
+                SolveRequest::new(
+                    id as u64,
+                    (0..n_nodes).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+                )
+            })
+            .collect()
+    }
+
+    fn varcoeff_requests(n_nodes: usize, count: usize, seed: u64) -> Vec<VarCoeffRequest> {
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|id| {
+                VarCoeffRequest::new(
+                    id as u64,
+                    (0..n_nodes).map(|_| rng.uniform_in(0.5, 2.0)).collect(),
+                    (0..n_nodes).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+                )
             })
             .collect()
     }
@@ -251,18 +416,23 @@ mod tests {
     }
 
     #[test]
+    fn batched_lane_is_bitwise_solve_one() {
+        let mesh = unit_cube_tet(3);
+        let solver = BatchSolver::new(&mesh, SolverConfig::default());
+        let reqs = requests(mesh.n_nodes(), 4, 11);
+        let batched = solver.solve_batch(&reqs).unwrap();
+        for (resp, req) in batched.iter().zip(&reqs) {
+            let one = solver.solve_one(req).unwrap();
+            assert_eq!(resp.u, one.u, "lane {} not bitwise", req.id);
+            assert_eq!(resp.iterations, one.iterations);
+        }
+    }
+
+    #[test]
     fn varcoeff_batch_matches_sequential() {
         let mesh = unit_cube_tet(3);
-        let n = mesh.n_nodes();
         let solver = BatchSolver::new(&mesh, SolverConfig::default());
-        let mut rng = Rng::new(17);
-        let reqs: Vec<VarCoeffRequest> = (0..4)
-            .map(|id| VarCoeffRequest {
-                id,
-                rho_nodal: (0..n).map(|_| rng.uniform_in(0.5, 2.0)).collect(),
-                f_nodal: (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
-            })
-            .collect();
+        let reqs = varcoeff_requests(mesh.n_nodes(), 4, 17);
         let batched = solver.solve_varcoeff_batch(&reqs).unwrap();
         let seq = solver.solve_varcoeff_sequential(&reqs).unwrap();
         assert_eq!(batched.len(), 4);
@@ -282,18 +452,89 @@ mod tests {
         let mesh = unit_cube_tet(3);
         let batch = BatchSolver::new(&mesh, SolverConfig::default());
         let reqs = requests(mesh.n_nodes(), 2, 9);
-        let sum_req = SolveRequest {
-            id: 99,
-            f_nodal: reqs[0]
+        let sum_req = SolveRequest::new(
+            99,
+            reqs[0]
                 .f_nodal
                 .iter()
                 .zip(&reqs[1].f_nodal)
                 .map(|(a, b)| a + b)
                 .collect(),
-        };
+        );
         let r = batch.solve_batch(&reqs).unwrap();
         let rs = batch.solve_one(&sum_req).unwrap();
         let sum_u: Vec<f64> = r[0].u.iter().zip(&r[1].u).map(|(a, b)| a + b).collect();
         assert!(crate::util::rel_l2(&rs.u, &sum_u) < 1e-7);
+    }
+
+    #[test]
+    fn malformed_lane_fails_alone() {
+        let mesh = unit_cube_tet(3);
+        let solver = BatchSolver::new(&mesh, SolverConfig::default());
+        let mut reqs = requests(mesh.n_nodes(), 4, 23);
+        reqs[2].f_nodal.truncate(5); // wrong shape
+        let each = solver.solve_batch_each(&reqs);
+        assert!(each[0].is_ok() && each[1].is_ok() && each[3].is_ok());
+        assert!(each[2].is_err());
+        // Healthy lanes are unchanged by the sick neighbor: bitwise equal
+        // to solving them without it.
+        let healthy: Vec<SolveRequest> =
+            [0usize, 1, 3].iter().map(|&i| reqs[i].clone()).collect();
+        let alone = solver.solve_batch(&healthy).unwrap();
+        for (resp, idx) in alone.iter().zip([0usize, 1, 3]) {
+            assert_eq!(each[idx].as_ref().unwrap().u, resp.u);
+        }
+    }
+
+    #[test]
+    fn varcoeff_malformed_and_nonpositive_fail_alone() {
+        let mesh = unit_cube_tet(3);
+        let solver = BatchSolver::new(&mesh, SolverConfig::default());
+        let mut reqs = varcoeff_requests(mesh.n_nodes(), 4, 29);
+        reqs[0].rho_nodal[3] = -1.0; // SPD violation
+        reqs[2].rho_nodal.push(1.0); // wrong shape
+        let each = solver.solve_varcoeff_batch_each(&reqs);
+        assert!(each[0].is_err());
+        assert!(each[1].is_ok());
+        assert!(each[2].is_err());
+        assert!(each[3].is_ok());
+        let oracle = solver.solve_varcoeff_one(&reqs[1]).unwrap();
+        assert_eq!(each[1].as_ref().unwrap().u, oracle.u);
+    }
+
+    #[test]
+    fn unconverged_lane_fails_alone() {
+        // max_iter too small for a genuine solve, but a zero RHS converges
+        // at iteration 0 — so lane 1 succeeds while its neighbors fail.
+        let mesh = unit_cube_tet(3);
+        let cfg = SolverConfig {
+            max_iter: 1,
+            ..SolverConfig::default()
+        };
+        let solver = BatchSolver::new(&mesh, cfg);
+        let mut reqs = requests(mesh.n_nodes(), 3, 31);
+        reqs[1].f_nodal.iter_mut().for_each(|v| *v = 0.0);
+        let each = solver.solve_batch_each(&reqs);
+        assert!(each[0].is_err());
+        assert!(each[2].is_err());
+        let zero = each[1].as_ref().unwrap();
+        assert!(zero.u.iter().all(|&v| v == 0.0));
+        assert_eq!(zero.iterations, 0);
+    }
+
+    #[test]
+    fn dispatch_counters_track_calls() {
+        let mesh = unit_cube_tet(3);
+        let solver = BatchSolver::new(&mesh, SolverConfig::default());
+        assert_eq!(solver.n_batched_solves(), 0);
+        assert_eq!(solver.n_scalar_solves(), 0);
+        let reqs = requests(mesh.n_nodes(), 4, 37);
+        solver.solve_batch(&reqs).unwrap();
+        assert_eq!((solver.n_batched_solves(), solver.n_scalar_solves()), (1, 0));
+        solver.solve_one(&reqs[0]).unwrap();
+        assert_eq!((solver.n_batched_solves(), solver.n_scalar_solves()), (1, 1));
+        let vreqs = varcoeff_requests(mesh.n_nodes(), 3, 41);
+        solver.solve_varcoeff_batch(&vreqs).unwrap();
+        assert_eq!((solver.n_batched_solves(), solver.n_scalar_solves()), (2, 1));
     }
 }

@@ -2,17 +2,34 @@
 //! (batched dataset generation, Fig B.4; uncertainty quantification;
 //! operator-learning data pipelines).
 //!
-//! Architecture (vLLM-router-style, scaled to this problem): callers submit
-//! [`SolveRequest`]s to a [`BatchServer`]; a batcher thread drains the
-//! queue, groups requests sharing a problem signature, amortizes the
-//! per-problem state (assembly context, routing, condensation pattern,
-//! preconditioner) across the group, and answers через response channels.
-//! Everything is std::sync::mpsc — no external runtime.
+//! Architecture (vLLM-router-style continuous batching, multi-mesh):
+//! callers submit mesh-tagged [`SolveRequest`]s / [`VarCoeffRequest`]s to a
+//! [`BatchServer`]; a worker thread drains the queue, groups pending
+//! requests by `(mesh_id, request kind)`, and dispatches each group as ONE
+//! batched assembly + lockstep-CG call through the per-mesh
+//! [`BatchSolver`] — the scalar `solve_one` path runs only for singleton
+//! groups. Per-mesh amortized state (assembly context, routing,
+//! condensation plan, Jacobi preconditioner, separable batched-assembly
+//! plan) lives in a registry `mesh_id → BatchSolver`, built lazily on the
+//! first request for each registered topology, so one server instance
+//! serves many mesh topologies.
+//!
+//! Fault isolation: requests are shape-validated before they can reach the
+//! assembly kernels, an unconverged lane fails only its own reply
+//! (`solve_batch_each` / `solve_varcoeff_batch_each` return one `Result`
+//! per request), and panics while serving a chunk are caught and converted
+//! into per-request error responses — the worker survives hostile traffic
+//! and `submit` surfaces a gone worker instead of hanging the client.
+//! [`CoordinatorStats`] exposes the worker's dispatch counters (batched vs
+//! scalar, failures, registry fills) for observability and regression
+//! tests. Everything is std::sync::mpsc — no external runtime.
 
 pub mod api;
 pub mod batcher;
 pub mod server;
 
-pub use api::{SolveRequest, SolveResponse, VarCoeffRequest};
+pub use api::{
+    CoordinatorStats, SolveRequest, SolveResponse, VarCoeffRequest, DEFAULT_MESH,
+};
 pub use batcher::BatchSolver;
 pub use server::BatchServer;

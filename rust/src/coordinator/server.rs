@@ -1,21 +1,59 @@
-//! The leader/worker batch server: a request queue drained by a worker
-//! thread that groups pending requests into batches (vLLM-style continuous
-//! batching, degenerate single-queue form appropriate to one shared
-//! operator) and answers over per-request channels.
+//! The multi-mesh continuous-batching server.
+//!
+//! A request queue drained by a worker thread (vLLM-style continuous
+//! batching): callers submit mesh-tagged [`SolveRequest`]s /
+//! [`VarCoeffRequest`]s; the worker drains the queue, groups pending
+//! requests by `(mesh_id, request kind)`, and dispatches every group as
+//! ONE batched assembly + one lockstep-CG call through the per-mesh
+//! [`BatchSolver`] — `solve_one` runs only for singleton groups. Per-mesh
+//! state (assembly context, condensation plan, preconditioner, separable
+//! batched-assembly plan) lives in a registry `mesh_id → BatchSolver`
+//! filled lazily on the first request for each registered topology, so one
+//! server instance serves many meshes with amortized setup.
+//!
+//! Fault isolation: requests are validated before assembly, an
+//! unconverged lane fails only its own reply, and a panic while serving a
+//! chunk is caught and converted into per-request errors — the worker
+//! never dies with clients parked on `recv`. [`BatchServer::submit`]
+//! surfaces a gone worker as an error response instead of silently
+//! dropping the request.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, SendError, Sender};
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::mesh::Mesh;
 use crate::solver::SolverConfig;
 
-use super::api::{SolveRequest, SolveResponse};
+use super::api::{CoordinatorStats, SolveRequest, SolveResponse, VarCoeffRequest, DEFAULT_MESH};
 use super::batcher::BatchSolver;
 
+type Reply = Sender<Result<SolveResponse>>;
+
+/// A queued request of either kind.
+enum Req {
+    Fixed(SolveRequest),
+    Var(VarCoeffRequest),
+}
+
+impl Req {
+    fn id(&self) -> u64 {
+        match self {
+            Req::Fixed(r) => r.id,
+            Req::Var(r) => r.id,
+        }
+    }
+}
+
 enum Msg {
-    Request(SolveRequest, Sender<Result<SolveResponse>>),
+    /// One or more requests submitted together ([`BatchServer::submit`] /
+    /// [`BatchServer::submit_many`]): a burst arrives as one queue entry,
+    /// so the whole burst is guaranteed to land in a single drain cycle.
+    Many(Vec<(Req, Reply)>),
+    Stats(Sender<CoordinatorStats>),
     Shutdown,
 }
 
@@ -23,38 +61,257 @@ enum Msg {
 pub struct BatchServer {
     tx: Sender<Msg>,
     worker: Option<JoinHandle<()>>,
-    /// Max requests drained into one batch.
-    pub max_batch: usize,
+    max_batch: usize,
+}
+
+/// The worker-side state: registered meshes and the lazily built per-mesh
+/// solver registry.
+struct Worker {
+    meshes: HashMap<u64, Mesh>,
+    /// Lazily built per-mesh state; a failed build (unknown key, panicking
+    /// setup) is memoized too, so sustained traffic for a bad mesh pays
+    /// the setup attempt once, not per drain cycle.
+    states: HashMap<u64, std::result::Result<BatchSolver, String>>,
+    config: SolverConfig,
+    max_batch: usize,
+    failed: u64,
+    /// Stats queries seen in the current drain cycle — answered only
+    /// AFTER the cycle's dispatch, so a snapshot reflects every request
+    /// that was enqueued ahead of it (FIFO through the queue).
+    stats_waiters: Vec<Sender<CoordinatorStats>>,
+}
+
+/// Bucket mesh-homogeneous items by mesh key, preserving arrival order
+/// within each bucket (first-seen key order across buckets).
+fn group_by_mesh<R>(
+    items: Vec<(R, Reply)>,
+    mesh_id: fn(&R) -> u64,
+) -> Vec<(u64, Vec<(R, Reply)>)> {
+    let mut groups: Vec<(u64, Vec<(R, Reply)>)> = Vec::new();
+    let mut index: HashMap<u64, usize> = HashMap::new();
+    for (req, reply) in items {
+        let key = mesh_id(&req);
+        let gi = *index.entry(key).or_insert_with(|| {
+            groups.push((key, Vec::new()));
+            groups.len() - 1
+        });
+        groups[gi].1.push((req, reply));
+    }
+    groups
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+impl Worker {
+    /// Returns `false` on shutdown.
+    fn accept(&mut self, msg: Msg, pending: &mut Vec<(Req, Reply)>) -> bool {
+        match msg {
+            Msg::Many(items) => pending.extend(items),
+            Msg::Stats(tx) => self.stats_waiters.push(tx),
+            Msg::Shutdown => return false,
+        }
+        true
+    }
+
+    /// Answer the stats queries collected this cycle (post-dispatch).
+    fn flush_stats(&mut self) {
+        if self.stats_waiters.is_empty() {
+            return;
+        }
+        let snapshot = self.stats();
+        for tx in self.stats_waiters.drain(..) {
+            let _ = tx.send(snapshot);
+        }
+    }
+
+    fn stats(&self) -> CoordinatorStats {
+        let mut s = CoordinatorStats {
+            failed_requests: self.failed,
+            ..CoordinatorStats::default()
+        };
+        for solver in self.states.values().filter_map(|st| st.as_ref().ok()) {
+            s.meshes_built += 1;
+            s.batched_solves += solver.n_batched_solves();
+            s.scalar_solves += solver.n_scalar_solves();
+        }
+        s
+    }
+
+    /// Look up (or lazily build, memoizing success AND failure) the
+    /// amortized state for a mesh key.
+    fn solver_for(&mut self, mesh_id: u64) -> std::result::Result<&BatchSolver, String> {
+        use std::collections::hash_map::Entry;
+        let state = match self.states.entry(mesh_id) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(v) => {
+                let built = match self.meshes.get(&mesh_id) {
+                    None => Err(format!("no mesh registered under mesh_id {mesh_id}")),
+                    Some(mesh) => {
+                        let config = self.config;
+                        catch_unwind(AssertUnwindSafe(|| BatchSolver::new(mesh, config)))
+                            .map_err(|p| {
+                                format!(
+                                    "building state for mesh_id {mesh_id} panicked: {}",
+                                    panic_msg(&*p)
+                                )
+                            })
+                    }
+                };
+                v.insert(built)
+            }
+        };
+        state.as_ref().map_err(|e| e.clone())
+    }
+
+    /// Group the drained queue by `(mesh_id, kind)` — arrival order is
+    /// preserved within each group — and serve every group batched.
+    fn dispatch(&mut self, pending: Vec<(Req, Reply)>) {
+        let mut fixed_items = Vec::new();
+        let mut var_items = Vec::new();
+        for (req, reply) in pending {
+            match req {
+                Req::Fixed(q) => fixed_items.push((q, reply)),
+                Req::Var(q) => var_items.push((q, reply)),
+            }
+        }
+        let fixed = group_by_mesh(fixed_items, |r| r.mesh_id);
+        let var = group_by_mesh(var_items, |r| r.mesh_id);
+        for (mesh_id, group) in fixed {
+            self.serve_group(
+                mesh_id,
+                group,
+                |r: &SolveRequest| r.id,
+                BatchSolver::solve_one,
+                BatchSolver::solve_batch_each,
+            );
+        }
+        for (mesh_id, group) in var {
+            self.serve_group(
+                mesh_id,
+                group,
+                |r: &VarCoeffRequest| r.id,
+                BatchSolver::solve_varcoeff_one,
+                BatchSolver::solve_varcoeff_batch_each,
+            );
+        }
+    }
+
+    /// Serve one homogeneous `(mesh_id, kind)` group: the scalar path runs
+    /// only for a true singleton group; everything else goes through the
+    /// batched dispatch in `max_batch`-sized chunks (a trailing chunk of 1
+    /// from a larger group still dispatches batched, keeping the
+    /// batched/scalar counters an exact regression signal). A panic while
+    /// solving a chunk answers that chunk's requests with errors and keeps
+    /// the worker alive.
+    fn serve_group<R>(
+        &mut self,
+        mesh_id: u64,
+        mut group: Vec<(R, Reply)>,
+        req_id: fn(&R) -> u64,
+        solve_single: fn(&BatchSolver, &R) -> Result<SolveResponse>,
+        solve_batch: fn(&BatchSolver, &[R]) -> Vec<Result<SolveResponse>>,
+    ) {
+        let max_batch = self.max_batch.max(1);
+        let singleton = group.len() == 1;
+        let mut failed = 0u64;
+        match self.solver_for(mesh_id) {
+            Err(msg) => {
+                failed = group.len() as u64;
+                for (req, reply) in group {
+                    let _ = reply.send(Err(anyhow!("request {}: {msg}", req_id(&req))));
+                }
+            }
+            Ok(solver) => {
+                while !group.is_empty() {
+                    let take = group.len().min(max_batch);
+                    let (reqs, replies): (Vec<R>, Vec<Reply>) = group.drain(..take).unzip();
+                    let results = catch_unwind(AssertUnwindSafe(|| {
+                        if singleton {
+                            vec![solve_single(solver, &reqs[0])]
+                        } else {
+                            solve_batch(solver, &reqs)
+                        }
+                    }))
+                    .unwrap_or_else(|p| {
+                        let m = panic_msg(&*p);
+                        reqs.iter()
+                            .map(|r| {
+                                Err(anyhow!("solve panicked serving request {}: {m}", req_id(r)))
+                            })
+                            .collect()
+                    });
+                    for (res, reply) in results.into_iter().zip(replies) {
+                        if res.is_err() {
+                            failed += 1;
+                        }
+                        let _ = reply.send(res);
+                    }
+                }
+            }
+        }
+        self.failed += failed;
+    }
 }
 
 impl BatchServer {
-    /// Spawn the worker; `max_batch` bounds the drain per cycle.
+    /// Spawn a single-mesh server (the mesh is registered under
+    /// [`DEFAULT_MESH`]); `max_batch` bounds the batched dispatch size.
     pub fn start(mesh: Mesh, config: SolverConfig, max_batch: usize) -> BatchServer {
+        BatchServer::start_multi(vec![(DEFAULT_MESH, mesh)], config, max_batch)
+    }
+
+    /// Spawn a server over many registered mesh topologies. Per-mesh
+    /// solver state is built lazily on the first request tagged with each
+    /// `mesh_id`.
+    pub fn start_multi(
+        meshes: Vec<(u64, Mesh)>,
+        config: SolverConfig,
+        max_batch: usize,
+    ) -> BatchServer {
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
         let worker = std::thread::spawn(move || {
-            let solver = BatchSolver::new(&mesh, config);
-            let mut pending: Vec<(SolveRequest, Sender<Result<SolveResponse>>)> = Vec::new();
+            let mut w = Worker {
+                meshes: meshes.into_iter().collect(),
+                states: HashMap::new(),
+                config,
+                max_batch,
+                failed: 0,
+                stats_waiters: Vec::new(),
+            };
+            let mut pending: Vec<(Req, Reply)> = Vec::new();
             loop {
                 // Block for the first message, then drain without blocking.
-                match rx.recv() {
-                    Err(_) | Ok(Msg::Shutdown) => break,
-                    Ok(Msg::Request(r, reply)) => pending.push((r, reply)),
+                let msg = match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return,
+                };
+                if !w.accept(msg, &mut pending) {
+                    w.dispatch(std::mem::take(&mut pending));
+                    w.flush_stats();
+                    return;
                 }
-                while pending.len() < max_batch {
+                while pending.len() < w.max_batch.max(1) {
                     match rx.try_recv() {
-                        Ok(Msg::Request(r, reply)) => pending.push((r, reply)),
-                        Ok(Msg::Shutdown) => {
-                            for (req, reply) in pending.drain(..) {
-                                let _ = reply.send(solver.solve_one(&req));
+                        Ok(m) => {
+                            if !w.accept(m, &mut pending) {
+                                w.dispatch(std::mem::take(&mut pending));
+                                w.flush_stats();
+                                return;
                             }
-                            return;
                         }
                         Err(_) => break,
                     }
                 }
-                for (req, reply) in pending.drain(..) {
-                    let _ = reply.send(solver.solve_one(&req));
-                }
+                w.dispatch(std::mem::take(&mut pending));
+                w.flush_stats();
             }
         });
         BatchServer {
@@ -64,30 +321,114 @@ impl BatchServer {
         }
     }
 
-    /// Submit a request; returns the receiver for the response.
-    pub fn submit(&self, req: SolveRequest) -> Receiver<Result<SolveResponse>> {
-        let (reply_tx, reply_rx) = channel();
-        let _ = self.tx.send(Msg::Request(req, reply_tx));
-        reply_rx
+    /// Max requests per batched dispatch (larger groups are served in
+    /// `max_batch`-sized chunks, bounding lockstep memory). Fixed at
+    /// start — the worker snapshots it.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
     }
 
-    /// Submit many and wait for all.
-    pub fn solve_all(&self, reqs: Vec<SolveRequest>) -> Result<Vec<SolveResponse>> {
-        let receivers: Vec<_> = reqs.into_iter().map(|r| self.submit(r)).collect();
-        let mut out = Vec::with_capacity(receivers.len());
-        for rx in receivers {
-            out.push(rx.recv()??);
+    /// Submit a fixed-operator request; returns the response receiver.
+    pub fn submit(&self, req: SolveRequest) -> Receiver<Result<SolveResponse>> {
+        self.submit_burst(vec![Req::Fixed(req)]).remove(0)
+    }
+
+    /// Submit a varcoeff (own-operator) request.
+    pub fn submit_varcoeff(&self, req: VarCoeffRequest) -> Receiver<Result<SolveResponse>> {
+        self.submit_burst(vec![Req::Var(req)]).remove(0)
+    }
+
+    /// Submit a burst as ONE queue entry: the whole burst lands in a
+    /// single drain cycle, so same-mesh bursts are guaranteed to be served
+    /// by batched dispatches (in `max_batch`-sized chunks).
+    pub fn submit_many(&self, reqs: Vec<SolveRequest>) -> Vec<Receiver<Result<SolveResponse>>> {
+        self.submit_burst(reqs.into_iter().map(Req::Fixed).collect())
+    }
+
+    /// Varcoeff counterpart of [`BatchServer::submit_many`].
+    pub fn submit_many_varcoeff(
+        &self,
+        reqs: Vec<VarCoeffRequest>,
+    ) -> Vec<Receiver<Result<SolveResponse>>> {
+        self.submit_burst(reqs.into_iter().map(Req::Var).collect())
+    }
+
+    fn submit_burst(&self, reqs: Vec<Req>) -> Vec<Receiver<Result<SolveResponse>>> {
+        let mut items = Vec::with_capacity(reqs.len());
+        let mut receivers = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            let (reply_tx, reply_rx) = channel();
+            items.push((req, reply_tx));
+            receivers.push(reply_rx);
         }
-        Ok(out)
+        if let Err(SendError(msg)) = self.tx.send(Msg::Many(items)) {
+            // The worker is gone (shutdown or died): answer immediately
+            // instead of leaving callers parked on `recv` forever.
+            if let Msg::Many(items) = msg {
+                for (req, reply) in items {
+                    let _ = reply.send(Err(anyhow!(
+                        "batch server worker is gone; request {} was not accepted",
+                        req.id()
+                    )));
+                }
+            }
+        }
+        receivers
+    }
+
+    /// Submit many and wait for all; any failed request fails the call.
+    pub fn solve_all(&self, reqs: Vec<SolveRequest>) -> Result<Vec<SolveResponse>> {
+        self.solve_all_each(reqs).into_iter().collect()
+    }
+
+    /// Submit many and wait for all, keeping per-request outcomes.
+    pub fn solve_all_each(&self, reqs: Vec<SolveRequest>) -> Vec<Result<SolveResponse>> {
+        Self::collect(self.submit_many(reqs))
+    }
+
+    /// Varcoeff counterpart of [`BatchServer::solve_all_each`].
+    pub fn solve_all_varcoeff_each(
+        &self,
+        reqs: Vec<VarCoeffRequest>,
+    ) -> Vec<Result<SolveResponse>> {
+        Self::collect(self.submit_many_varcoeff(reqs))
+    }
+
+    fn collect(receivers: Vec<Receiver<Result<SolveResponse>>>) -> Vec<Result<SolveResponse>> {
+        receivers
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .unwrap_or_else(|_| Err(anyhow!("batch server dropped the reply channel")))
+            })
+            .collect()
+    }
+
+    /// Snapshot of the worker's aggregate serving counters — a synchronous
+    /// round-trip through the queue, answered only after the worker has
+    /// dispatched every request enqueued ahead of the query (FIFO), so a
+    /// `submit_many` + `stats` sequence observes the burst's dispatch.
+    /// `None` when the worker is gone (shut down or died) — NOT the same
+    /// as a fresh idle server's all-zero counters.
+    pub fn stats(&self) -> Option<CoordinatorStats> {
+        let (tx, rx) = channel();
+        self.tx.send(Msg::Stats(tx)).ok()?;
+        rx.recv().ok()
+    }
+
+    /// Stop the worker, flushing (batched) any pending requests.
+    /// Idempotent; also run by `Drop`.
+    pub fn shutdown(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
     }
 }
 
 impl Drop for BatchServer {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -104,9 +445,8 @@ mod tests {
         let server = BatchServer::start(mesh, SolverConfig::default(), 8);
         let mut rng = Rng::new(2);
         let reqs: Vec<_> = (0..10)
-            .map(|id| crate::coordinator::SolveRequest {
-                id,
-                f_nodal: (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            .map(|id| {
+                SolveRequest::new(id, (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect())
             })
             .collect();
         let out = server.solve_all(reqs).unwrap();
@@ -122,12 +462,37 @@ mod tests {
         let mesh = unit_cube_tet(2);
         let n = mesh.n_nodes();
         let server = BatchServer::start(mesh, SolverConfig::default(), 4);
-        let rx = server.submit(crate::coordinator::SolveRequest {
-            id: 7,
-            f_nodal: vec![1.0; n],
-        });
+        let rx = server.submit(SolveRequest::new(7, vec![1.0; n]));
         drop(server); // shutdown must still answer
         let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.id, 7);
+    }
+
+    #[test]
+    fn submit_after_shutdown_surfaces_error() {
+        let mesh = unit_cube_tet(2);
+        let n = mesh.n_nodes();
+        let mut server = BatchServer::start(mesh, SolverConfig::default(), 4);
+        server.shutdown();
+        let rx = server.submit(SolveRequest::new(3, vec![1.0; n]));
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("worker is gone"), "{err}");
+        // Burst submission surfaces the same condition per request.
+        let outs = server.solve_all_each(vec![SolveRequest::new(4, vec![1.0; n])]);
+        assert!(outs[0].is_err());
+    }
+
+    #[test]
+    fn unknown_mesh_id_is_answered_not_hung() {
+        let mesh = unit_cube_tet(2);
+        let n = mesh.n_nodes();
+        let server = BatchServer::start(mesh, SolverConfig::default(), 4);
+        let rx = server.submit(SolveRequest::on_mesh(1, 42, vec![1.0; n]));
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("no mesh registered"), "{err}");
+        // The worker is still alive and serving.
+        let ok = server.submit(SolveRequest::new(2, vec![1.0; n]));
+        assert!(ok.recv().unwrap().is_ok());
+        assert_eq!(server.stats().expect("worker alive").failed_requests, 1);
     }
 }

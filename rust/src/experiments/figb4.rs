@@ -26,9 +26,11 @@ pub fn run(args: &Args) -> Result<()> {
     let mut rng = Rng::new(42);
     let gen = |count: usize, rng: &mut Rng| -> Vec<SolveRequest> {
         (0..count)
-            .map(|id| SolveRequest {
-                id: id as u64,
-                f_nodal: (0..mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            .map(|id| {
+                SolveRequest::new(
+                    id as u64,
+                    (0..mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+                )
             })
             .collect()
     };

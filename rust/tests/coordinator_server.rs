@@ -1,0 +1,237 @@
+//! Integration tests of the multi-mesh continuous-batching server: drained
+//! bursts must run through the batched pipelines (one batched assembly +
+//! one lockstep CG per same-mesh group, asserted via the instrumented
+//! dispatch counters), responses must bitwise-match the scalar per-mesh
+//! oracles, and hostile requests must fail alone without killing the
+//! worker.
+
+use tensor_galerkin::coordinator::{
+    BatchServer, BatchSolver, SolveRequest, VarCoeffRequest, DEFAULT_MESH,
+};
+use tensor_galerkin::mesh::structured::{unit_cube_tet, unit_square_tri};
+use tensor_galerkin::mesh::Mesh;
+use tensor_galerkin::solver::SolverConfig;
+use tensor_galerkin::util::rng::Rng;
+
+fn fixed_reqs(mesh_id: u64, n_nodes: usize, count: usize, rng: &mut Rng) -> Vec<SolveRequest> {
+    (0..count)
+        .map(|id| {
+            SolveRequest::on_mesh(
+                mesh_id * 1000 + id as u64,
+                mesh_id,
+                (0..n_nodes).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            )
+        })
+        .collect()
+}
+
+fn var_reqs(mesh_id: u64, n_nodes: usize, count: usize, rng: &mut Rng) -> Vec<VarCoeffRequest> {
+    (0..count)
+        .map(|id| {
+            VarCoeffRequest::on_mesh(
+                mesh_id * 1000 + id as u64,
+                mesh_id,
+                (0..n_nodes).map(|_| rng.uniform_in(0.5, 2.0)).collect(),
+                (0..n_nodes).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            )
+        })
+        .collect()
+}
+
+/// A burst of S same-mesh requests costs exactly ONE batched dispatch (not
+/// S scalar solves), and every response is bitwise-identical to the scalar
+/// `solve_one` oracle.
+#[test]
+fn burst_is_one_batched_dispatch_and_bitwise_scalar_parity() {
+    let mesh = unit_cube_tet(3);
+    let cfg = SolverConfig::default();
+    let oracle = BatchSolver::new(&mesh, cfg);
+    let server = BatchServer::start(mesh, cfg, 16);
+    let mut rng = Rng::new(5);
+    let reqs = fixed_reqs(DEFAULT_MESH, oracle.n_dofs(), 6, &mut rng);
+    let out = server.solve_all(reqs.clone()).unwrap();
+    assert_eq!(out.len(), 6);
+    for (resp, req) in out.iter().zip(&reqs) {
+        let want = oracle.solve_one(req).unwrap();
+        assert_eq!(resp.id, want.id);
+        assert_eq!(resp.u, want.u, "request {} not bitwise-equal to solve_one", req.id);
+        assert_eq!(resp.iterations, want.iterations);
+    }
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.batched_solves, 1, "burst must cost one batched dispatch: {stats:?}");
+    assert_eq!(stats.scalar_solves, 0, "burst must not fall back to scalar: {stats:?}");
+    assert_eq!(stats.meshes_built, 1);
+    assert_eq!(stats.failed_requests, 0);
+}
+
+/// A varcoeff burst likewise runs as one batched dispatch, matching the
+/// per-instance scalar pipeline bitwise.
+#[test]
+fn varcoeff_burst_is_one_batched_dispatch() {
+    let mesh = unit_cube_tet(3);
+    let cfg = SolverConfig::default();
+    let oracle = BatchSolver::new(&mesh, cfg);
+    let server = BatchServer::start(mesh, cfg, 16);
+    let mut rng = Rng::new(11);
+    let reqs = var_reqs(DEFAULT_MESH, oracle.n_dofs(), 5, &mut rng);
+    let out: Vec<_> = server
+        .solve_all_varcoeff_each(reqs.clone())
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect();
+    for (resp, req) in out.iter().zip(&reqs) {
+        let want = oracle.solve_varcoeff_one(req).unwrap();
+        assert_eq!(resp.u, want.u, "request {} not bitwise-equal to scalar pipeline", req.id);
+        assert_eq!(resp.iterations, want.iterations);
+    }
+    let stats = server.stats().expect("worker alive");
+    assert_eq!((stats.batched_solves, stats.scalar_solves), (1, 0), "{stats:?}");
+}
+
+/// One server, two topologies (2D tri + 3D tet), interleaved mesh-tagged
+/// requests of both kinds: every response must bitwise-match the
+/// corresponding single-mesh oracle, each same-mesh group must be served
+/// by one batched dispatch, and both registry entries must be built.
+#[test]
+fn cross_mesh_interleaved_requests_match_single_mesh_oracles() {
+    const TRI: u64 = 1;
+    const TET: u64 = 2;
+    let tri: Mesh = unit_square_tri(6);
+    let tet: Mesh = unit_cube_tet(3);
+    let cfg = SolverConfig::default();
+    let oracle_tri = BatchSolver::new(&tri, cfg);
+    let oracle_tet = BatchSolver::new(&tet, cfg);
+    let server = BatchServer::start_multi(vec![(TRI, tri), (TET, tet)], cfg, 32);
+
+    let mut rng = Rng::new(23);
+    let tri_fixed = fixed_reqs(TRI, oracle_tri.n_dofs(), 3, &mut rng);
+    let tet_fixed = fixed_reqs(TET, oracle_tet.n_dofs(), 3, &mut rng);
+    // Interleave the two meshes in one burst; the server regroups by key.
+    let mixed: Vec<SolveRequest> = tri_fixed
+        .iter()
+        .zip(&tet_fixed)
+        .flat_map(|(a, b)| [a.clone(), b.clone()])
+        .collect();
+    let out = server.solve_all(mixed.clone()).unwrap();
+    for (resp, req) in out.iter().zip(&mixed) {
+        let oracle = if req.mesh_id == TRI { &oracle_tri } else { &oracle_tet };
+        let want = oracle.solve_one(req).unwrap();
+        assert_eq!(resp.id, want.id);
+        assert_eq!(resp.u, want.u, "mesh {} request {} not bitwise", req.mesh_id, req.id);
+        assert_eq!(resp.iterations, want.iterations);
+    }
+
+    // Varcoeff bursts across both meshes through the same server instance.
+    let tri_var = var_reqs(TRI, oracle_tri.n_dofs(), 3, &mut rng);
+    let tet_var = var_reqs(TET, oracle_tet.n_dofs(), 3, &mut rng);
+    let vmixed: Vec<VarCoeffRequest> = tri_var
+        .iter()
+        .zip(&tet_var)
+        .flat_map(|(a, b)| [a.clone(), b.clone()])
+        .collect();
+    let vout: Vec<_> = server
+        .solve_all_varcoeff_each(vmixed.clone())
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect();
+    for (resp, req) in vout.iter().zip(&vmixed) {
+        let oracle = if req.mesh_id == TRI { &oracle_tri } else { &oracle_tet };
+        let want = oracle.solve_varcoeff_one(req).unwrap();
+        assert_eq!(resp.u, want.u, "mesh {} request {} not bitwise", req.mesh_id, req.id);
+        assert_eq!(resp.iterations, want.iterations);
+    }
+
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.meshes_built, 2, "{stats:?}");
+    // 2 fixed groups + 2 varcoeff groups, one batched dispatch each.
+    assert_eq!(stats.batched_solves, 4, "{stats:?}");
+    assert_eq!(stats.scalar_solves, 0, "{stats:?}");
+    assert_eq!(stats.failed_requests, 0, "{stats:?}");
+}
+
+/// Hostile traffic: malformed shapes and non-positive coefficients get an
+/// error response for that request only; healthy neighbors in the same
+/// drained burst still get bitwise-correct answers, and the worker keeps
+/// serving afterwards.
+#[test]
+fn bad_requests_fail_alone_and_worker_survives() {
+    let mesh = unit_cube_tet(3);
+    let cfg = SolverConfig::default();
+    let oracle = BatchSolver::new(&mesh, cfg);
+    let n = oracle.n_dofs();
+    let server = BatchServer::start(mesh, cfg, 16);
+    let mut rng = Rng::new(31);
+
+    // Fixed burst: good / short-vector / good.
+    let mut reqs = fixed_reqs(DEFAULT_MESH, n, 3, &mut rng);
+    reqs[1].f_nodal.truncate(3);
+    let out = server.solve_all_each(reqs.clone());
+    assert!(out[0].is_ok() && out[2].is_ok());
+    let err = out[1].as_ref().unwrap_err();
+    assert!(err.to_string().contains("f_nodal"), "{err}");
+    for &i in &[0usize, 2] {
+        let want = oracle.solve_one(&reqs[i]).unwrap();
+        assert_eq!(out[i].as_ref().unwrap().u, want.u);
+    }
+
+    // Varcoeff burst: good / negative rho / oversized rho / good.
+    let mut vreqs = var_reqs(DEFAULT_MESH, n, 4, &mut rng);
+    vreqs[1].rho_nodal[0] = -2.0;
+    vreqs[2].rho_nodal.push(1.0);
+    let vout = server.solve_all_varcoeff_each(vreqs.clone());
+    assert!(vout[0].is_ok() && vout[3].is_ok());
+    assert!(vout[1].is_err() && vout[2].is_err());
+    for &i in &[0usize, 3] {
+        let want = oracle.solve_varcoeff_one(&vreqs[i]).unwrap();
+        assert_eq!(vout[i].as_ref().unwrap().u, want.u);
+    }
+
+    // The worker survived all of it and still serves.
+    let again = fixed_reqs(DEFAULT_MESH, n, 2, &mut rng);
+    let out2 = server.solve_all(again).unwrap();
+    assert_eq!(out2.len(), 2);
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.failed_requests, 3, "{stats:?}");
+}
+
+/// A lone request is served by the scalar path (no batched dispatch for
+/// singleton groups), still bitwise-equal to the oracle.
+#[test]
+fn singleton_group_uses_scalar_path() {
+    let mesh = unit_cube_tet(2);
+    let cfg = SolverConfig::default();
+    let oracle = BatchSolver::new(&mesh, cfg);
+    let server = BatchServer::start(mesh, cfg, 8);
+    let mut rng = Rng::new(41);
+    let req = fixed_reqs(DEFAULT_MESH, oracle.n_dofs(), 1, &mut rng).remove(0);
+    let resp = server.submit(req.clone()).recv().unwrap().unwrap();
+    let want = oracle.solve_one(&req).unwrap();
+    assert_eq!(resp.u, want.u);
+    let stats = server.stats().expect("worker alive");
+    assert_eq!((stats.batched_solves, stats.scalar_solves), (0, 1), "{stats:?}");
+}
+
+/// An unconverged lane (max_iter starved) fails alone through the server;
+/// the zero-RHS lane in the same burst converges at iteration 0 and is
+/// still answered.
+#[test]
+fn unconverged_lane_fails_alone_through_server() {
+    let mesh = unit_cube_tet(3);
+    let cfg = SolverConfig {
+        max_iter: 1,
+        ..SolverConfig::default()
+    };
+    let n = mesh.n_nodes();
+    let server = BatchServer::start(mesh, cfg, 8);
+    let mut rng = Rng::new(43);
+    let mut reqs = fixed_reqs(DEFAULT_MESH, n, 3, &mut rng);
+    reqs[1].f_nodal.iter_mut().for_each(|v| *v = 0.0);
+    let out = server.solve_all_each(reqs);
+    assert!(out[0].is_err() && out[2].is_err());
+    let zero = out[1].as_ref().unwrap();
+    assert!(zero.u.iter().all(|&v| v == 0.0));
+    assert_eq!(zero.iterations, 0);
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.failed_requests, 2, "{stats:?}");
+    assert_eq!(stats.batched_solves, 1, "{stats:?}");
+}
