@@ -30,8 +30,14 @@ fn main() -> anyhow::Result<()> {
     println!(
         "== multi-mesh batch generation: {n2}-node tri + {n3}-node tet, {count} samples each =="
     );
-    let server =
-        BatchServer::start_multi(vec![(MESH_2D, tri), (MESH_3D, tet)], SolverConfig::default(), 32);
+    // Registry capped at 8 resident mesh states (plenty for two meshes —
+    // the cap matters for servers cycling through many topologies).
+    let server = BatchServer::start_multi(
+        vec![(MESH_2D, tri), (MESH_3D, tet)],
+        SolverConfig::default(),
+        32,
+        8,
+    );
 
     // Interleaved mesh-tagged requests: the server groups them by mesh key
     // when draining, so both topologies are still served batched.

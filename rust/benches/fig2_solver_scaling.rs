@@ -1,29 +1,50 @@
 //! Bench: Fig 2 (a,b) — assemble+solve scaling with DoFs on 3D Poisson and
 //! 3D elasticity, across assembly strategies (scatter-add baseline,
 //! TensorGalerkin native, PJRT-artifact Map, recompile-per-solve) — plus
-//! the blocked-solve comparison: S=16 varcoeff instances solved by one
-//! batched condensation + lockstep `cg_batch` vs S looped
-//! condense+`cg` pipelines. The looped-vs-blocked speedup is written to
-//! `BENCH_solver.json` at the repo root so the solve-path perf trajectory
-//! is tracked across PRs.
+//! two solve-path comparisons:
 //!
-//! `cargo bench --bench fig2_solver_scaling [-- --sizes 4,8,12,16 --batch 16 --batch-n 10]`
+//! * **Looped vs blocked** (PR 2): S=16 varcoeff instances solved by one
+//!   batched condensation + lockstep `cg_batch` vs S looped condense+`cg`
+//!   pipelines, written to `BENCH_solver.json`.
+//! * **Jacobi-PCG vs AMG-PCG** (PR 5): the fig2 Poisson family at two mesh
+//!   sizes, preconditioner SETUP time (Jacobi diagonal extraction / AMG
+//!   hierarchy construction) recorded separately from the ITERATION phase
+//!   so neither record is polluted by one-time setup, with per-method
+//!   iteration counts at both sizes and the large-size end-to-end solve
+//!   speedup written to `BENCH_precond.json`.
+//!
+//! `cargo bench --bench fig2_solver_scaling [-- --sizes 4,8,12,16
+//!   --batch 16 --batch-n 10 --precond-sizes 10,20]`
 
-use tensor_galerkin::assembly::{AssemblyContext, BilinearForm, LinearForm};
+use tensor_galerkin::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
 use tensor_galerkin::bc::{condense, condense_batch, DirichletBc};
 use tensor_galerkin::experiments::fig2;
 use tensor_galerkin::mesh::structured::unit_cube_tet;
 use tensor_galerkin::runtime::Runtime;
-use tensor_galerkin::solver::{cg, cg_batch, JacobiPrecond, SolverConfig};
+use tensor_galerkin::solver::{
+    cg, cg_batch, AmgConfig, AmgHierarchy, AmgPrecond, JacobiPrecond, SolverConfig,
+};
+use tensor_galerkin::sparse::Csr;
 use tensor_galerkin::util::bench::Bench;
 use tensor_galerkin::util::cli::Args;
 use tensor_galerkin::util::rng::Rng;
+
+/// Condensed 3D Poisson system of the fig2 family at structured size `n`.
+fn poisson3d_condensed(n: usize) -> (Csr, Vec<f64>) {
+    let mesh = unit_cube_tet(n);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    let k = ctx.assemble_matrix(&BilinearForm::Diffusion { rho: Coefficient::Const(1.0) });
+    let f = ctx.assemble_vector(&LinearForm::Source { f: Coefficient::Const(1.0) });
+    let sys = condense(&k, &f, &DirichletBc::homogeneous(mesh.boundary_nodes()));
+    (sys.k, sys.rhs)
+}
 
 fn main() {
     let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>());
     let sizes = args.get_usize_list("sizes", &[4, 8, 12, 16]);
     let s_batch = args.get_usize("batch", 16);
     let batch_n = args.get_usize("batch-n", 10);
+    let precond_sizes = args.get_usize_list("precond-sizes", &[10, 20]);
     let runtime = Runtime::new().ok();
     if runtime.is_none() {
         eprintln!("(artifacts missing: pjrt/recompile variants skipped)");
@@ -51,7 +72,7 @@ fn main() {
 
     // --- Looped vs blocked solve: S varcoeff Poisson instances on one 3D
     // topology. Both sides share the already-assembled CsrBatch, so the
-    // comparison isolates condensation + CG (the phase this PR blocks).
+    // comparison isolates condensation + CG (the phase PR 2 blocked).
     let mesh = unit_cube_tet(batch_n);
     let ctx = AssemblyContext::new(&mesh, 1);
     let n = ctx.n_dofs();
@@ -104,6 +125,67 @@ fn main() {
             "solve S={s_batch}: blocked condense+cg_batch is {speedup:.2}x looped condense+cg \
              (record: BENCH_solver.json at the repo root)"
         );
+    }
+
+    // --- Jacobi-PCG vs AMG-PCG on the fig2 Poisson family. Preconditioner
+    // SETUP is benchmarked separately from the ITERATION phase: the solve
+    // records time only PCG against a prebuilt preconditioner, so the
+    // BENCH_precond.json speedup reflects per-solve cost — the regime of
+    // every repeated-solve consumer, where the hierarchy is refilled, not
+    // rebuilt. Setup has its own records for the one-shot picture.
+    let mut precond_meta: Vec<(String, f64)> = Vec::new();
+    // The BENCH_precond.json record compares the LARGEST problem (by DoF
+    // count, not argument order — `--precond-sizes 16,8` must still pick
+    // the 16³ mesh).
+    let mut largest: Option<(usize, String, String)> = None;
+    for &pn in &precond_sizes {
+        let (a, b) = poisson3d_condensed(pn);
+        let nd = a.nrows;
+        let size_meta = [("n_dofs", nd as f64)];
+        bench.bench(&format!("precond_setup/jacobi/dofs{nd}"), &size_meta, || {
+            JacobiPrecond::new(&a)
+        });
+        bench.bench(&format!("precond_setup/amg/dofs{nd}"), &size_meta, || {
+            AmgHierarchy::build(&a, AmgConfig::default())
+        });
+        let jac = JacobiPrecond::new(&a);
+        let h = AmgHierarchy::build(&a, AmgConfig::default());
+        let (_, st_jac) = cg(&a, &b, &jac, &cfg);
+        let amg_pc = AmgPrecond::new(&h);
+        let (_, st_amg) = cg(&a, &b, &amg_pc, &cfg);
+        println!(
+            "precond dofs={nd}: jacobi {} iters, amg {} iters ({} levels, opc {:.2})",
+            st_jac.iterations,
+            st_amg.iterations,
+            h.n_levels(),
+            h.operator_complexity()
+        );
+        let jac_name = format!("poisson3d/solve_jacobi_pcg/dofs{nd}");
+        let amg_name = format!("poisson3d/solve_amg_pcg/dofs{nd}");
+        bench.bench(&jac_name, &[("n_dofs", nd as f64), ("iters", st_jac.iterations as f64)], || {
+            cg(&a, &b, &jac, &cfg).1.iterations
+        });
+        bench.bench(&amg_name, &[("n_dofs", nd as f64), ("iters", st_amg.iterations as f64)], || {
+            cg(&a, &b, &amg_pc, &cfg).1.iterations
+        });
+        precond_meta.push((format!("dofs_{pn}"), nd as f64));
+        precond_meta.push((format!("iters_jacobi_{pn}"), st_jac.iterations as f64));
+        precond_meta.push((format!("iters_amg_{pn}"), st_amg.iterations as f64));
+        if largest.as_ref().map_or(true, |(best, _, _)| nd > *best) {
+            largest = Some((nd, jac_name, amg_name));
+        }
+    }
+    if let Some((_, jac_name, amg_name)) = largest {
+        let meta_refs: Vec<(&str, f64)> =
+            precond_meta.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        if let Some(speedup) =
+            bench.write_speedup_json("BENCH_precond.json", &jac_name, &amg_name, &meta_refs)
+        {
+            println!(
+                "precond: AMG-PCG is {speedup:.2}x Jacobi-PCG at the largest size \
+                 (record: BENCH_precond.json at the repo root)"
+            );
+        }
     }
     bench.finish();
 }

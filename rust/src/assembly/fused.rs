@@ -7,7 +7,10 @@
 //! intermediate entirely: elements are partitioned into cache-sized tiles,
 //! each tile is Mapped into a small scratch buffer (L1/L2-resident, reused
 //! for every tile) and immediately Reduced through per-tile restrictions of
-//! the routing gather lists. The full `E·kl²` tensor never exists.
+//! the routing gather lists. The full `E·kl²` tensor never exists. The Map
+//! itself dispatches on the form once per *tile*, not once per element:
+//! `local::fill_{matrix,vector}_tile` hoist the form `match` and run a
+//! monomorphized per-form kernel over the tile's contiguous element range.
 //!
 //! # Determinism / bitwise-parity argument
 //!
@@ -279,6 +282,9 @@ impl FusedPlan {
         let const_grad = local::is_const_grad(tab);
         let tile_len = self.tile * kl * kl;
         let side = &self.mat;
+        // Tile-level Map: the per-form dispatch happens once per tile
+        // (`fill_matrix_tile` hoists the `match` out of the element loop
+        // and runs a monomorphized kernel over the tile).
         self.run_tiles(
             s_n,
             tile_len,
@@ -286,7 +292,19 @@ impl FusedPlan {
             ws,
             nnz,
             data,
-            |s, e, ke| local::fill_matrix_one(&forms[s], const_grad, e, ke, geo, tab, dim, ncomp),
+            |s, e0, buf| {
+                local::fill_matrix_tile(
+                    &forms[s],
+                    const_grad,
+                    e0,
+                    kl * kl,
+                    buf,
+                    geo,
+                    tab,
+                    dim,
+                    ncomp,
+                )
+            },
             |p| (routing.mat_ptr[p], routing.mat_ptr[p + 1]),
             &routing.mat_src,
         );
@@ -330,15 +348,16 @@ impl FusedPlan {
             ws,
             n,
             out,
-            |s, e, fe| local::fill_vector_one(&forms[s], e, fe, geo, tab, ncomp),
+            |s, e0, buf| local::fill_vector_tile(&forms[s], e0, kl, buf, geo, tab, ncomp),
             |i| (routing.vec_ptr[i], routing.vec_ptr[i + 1]),
             &routing.vec_src,
         );
     }
 
-    /// Tile driver for the matrix side. `fill(s, e, slot)` Maps one element
-    /// into a zeroed `kl²` slot; `range(p)`/`src` are the routing gather
-    /// lists.
+    /// Tile driver for the matrix side. `fill(s, e0, buf)` Maps the whole
+    /// zeroed tile starting at element `e0` (one slot per element) — form
+    /// dispatch is the callee's, hoisted out of the element loop;
+    /// `range(p)`/`src` are the routing gather lists.
     #[allow(clippy::too_many_arguments)]
     fn run_tiles(
         &self,
@@ -378,10 +397,8 @@ impl FusedPlan {
                     let e1 = ((t + 1) * tile).min(ne);
                     let used = (e1 - e0) * slot;
                     buf[..used].fill(0.0);
-                    // Map this tile.
-                    for e in e0..e1 {
-                        fill(s, e, &mut buf[(e - e0) * slot..(e - e0 + 1) * slot]);
-                    }
+                    // Map this tile (one monomorphized kernel call).
+                    fill(s, e0, &mut buf[..used]);
                     // In-tile Reduce of fully-owned targets (ascending
                     // source order — identical to the two-stage gather).
                     let base = t * tile_len;

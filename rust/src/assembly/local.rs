@@ -170,11 +170,173 @@ pub(crate) fn is_const_grad(tab: &Tabulation) -> bool {
     )
 }
 
-/// One element of the Map stage — the single source of every form's
-/// per-element arithmetic, shared by [`local_matrices`] (one form over all
-/// elements), [`local_matrices_batch`] (S forms over the fused `S·E`
-/// range) and the fused tile engine ([`super::fused::FusedPlan`]), which
-/// therefore all agree bitwise by construction. `ke` must be zeroed.
+/// Per-form element kernels. Each is the body of one `match` arm of the
+/// historical `fill_matrix_one`, extracted so the two dispatch styles —
+/// per-element ([`fill_matrix_one`], the two-stage Map) and per-tile
+/// ([`fill_matrix_tile`], the fused engine) — share one copy of the
+/// arithmetic and therefore agree bitwise by construction.
+#[inline]
+fn diffusion_const_grad_elem(
+    rho: &super::forms::Coefficient,
+    e: usize,
+    ke: &mut [f64],
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+    dim: usize,
+) {
+    let k = tab.k;
+    let nq = geo.q;
+    let mut c = 0.0;
+    for q in 0..nq {
+        c += geo.detj[e * nq + q] * quad_weight(tab, q) * rho.at(e, q, nq);
+    }
+    if c == 0.0 {
+        return;
+    }
+    for a in 0..k {
+        let ga = geo.grad(e, 0, a);
+        for b in a..k {
+            let v = c * grad_dot(ga, geo.grad(e, 0, b), dim);
+            ke[a * k + b] = v;
+            ke[b * k + a] = v;
+        }
+    }
+}
+
+#[inline]
+fn diffusion_elem(
+    rho: &super::forms::Coefficient,
+    e: usize,
+    ke: &mut [f64],
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+    dim: usize,
+) {
+    let k = tab.k;
+    let nq = geo.q;
+    for q in 0..nq {
+        let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+        if w == 0.0 {
+            continue;
+        }
+        let c = w * rho.at(e, q, nq);
+        for a in 0..k {
+            let ga = geo.grad(e, q, a);
+            for b in 0..k {
+                ke[a * k + b] += c * grad_dot(ga, geo.grad(e, q, b), dim);
+            }
+        }
+    }
+}
+
+/// Shared by `Mass` and `FacetMass` (identical arithmetic, different
+/// coefficient slot).
+#[inline]
+fn mass_elem(
+    rho: &super::forms::Coefficient,
+    e: usize,
+    ke: &mut [f64],
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+) {
+    let k = tab.k;
+    let nq = geo.q;
+    for q in 0..nq {
+        let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+        if w == 0.0 {
+            continue;
+        }
+        let c = w * rho.at(e, q, nq);
+        for a in 0..k {
+            let pa = tab.val(q, a);
+            for b in 0..k {
+                ke[a * k + b] += c * pa * tab.val(q, b);
+            }
+        }
+    }
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn elasticity_const_grad_elem(
+    lambda: f64,
+    mu: f64,
+    e_mod: &super::forms::Coefficient,
+    e: usize,
+    ke: &mut [f64],
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+    dim: usize,
+    ncomp: usize,
+) {
+    let k = tab.k;
+    let nq = geo.q;
+    let kl = k * ncomp;
+    let mut scale = 0.0;
+    for q in 0..nq {
+        scale += geo.detj[e * nq + q] * quad_weight(tab, q) * e_mod.at(e, q, nq);
+    }
+    if scale == 0.0 {
+        return;
+    }
+    for a in 0..k {
+        let ga = geo.grad(e, 0, a);
+        for b in 0..k {
+            let gb = geo.grad(e, 0, b);
+            let dotg = grad_dot(ga, gb, dim);
+            for i in 0..ncomp {
+                for j in 0..ncomp {
+                    let v = elasticity_entry(lambda, mu, ga, gb, dotg, i, j);
+                    ke[(a * ncomp + i) * kl + (b * ncomp + j)] = scale * v;
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn elasticity_elem(
+    lambda: f64,
+    mu: f64,
+    e_mod: &super::forms::Coefficient,
+    e: usize,
+    ke: &mut [f64],
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+    dim: usize,
+    ncomp: usize,
+) {
+    let k = tab.k;
+    let nq = geo.q;
+    let kl = k * ncomp;
+    for q in 0..nq {
+        let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+        if w == 0.0 {
+            continue;
+        }
+        let scale = w * e_mod.at(e, q, nq);
+        for a in 0..k {
+            let ga = geo.grad(e, q, a);
+            for b in 0..k {
+                let gb = geo.grad(e, q, b);
+                let dotg = grad_dot(ga, gb, dim);
+                for i in 0..ncomp {
+                    for j in 0..ncomp {
+                        let v = elasticity_entry(lambda, mu, ga, gb, dotg, i, j);
+                        ke[(a * ncomp + i) * kl + (b * ncomp + j)] += scale * v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One element of the Map stage — dispatches once and calls the shared
+/// per-form kernel. Used by the per-element drivers ([`local_matrices`],
+/// [`local_matrices_batch`]); the fused tile engine goes through
+/// [`fill_matrix_tile`], which hoists this `match` out of the element
+/// loop. `ke` must be zeroed.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn fill_matrix_one(
     form: &BilinearForm,
@@ -186,116 +348,124 @@ pub(crate) fn fill_matrix_one(
     dim: usize,
     ncomp: usize,
 ) {
-    let k = tab.k;
-    let nq = geo.q;
-    let kl = k * ncomp;
     match form {
         BilinearForm::Diffusion { rho } if const_grad => {
-            let mut c = 0.0;
-            for q in 0..nq {
-                c += geo.detj[e * nq + q] * quad_weight(tab, q) * rho.at(e, q, nq);
-            }
-            if c == 0.0 {
-                return;
-            }
-            for a in 0..k {
-                let ga = geo.grad(e, 0, a);
-                for b in a..k {
-                    let v = c * grad_dot(ga, geo.grad(e, 0, b), dim);
-                    ke[a * k + b] = v;
-                    ke[b * k + a] = v;
-                }
-            }
+            diffusion_const_grad_elem(rho, e, ke, geo, tab, dim)
+        }
+        BilinearForm::Diffusion { rho } => diffusion_elem(rho, e, ke, geo, tab, dim),
+        BilinearForm::Mass { rho } => mass_elem(rho, e, ke, geo, tab),
+        BilinearForm::Elasticity { lambda, mu, e_mod } if const_grad => {
+            elasticity_const_grad_elem(*lambda, *mu, e_mod, e, ke, geo, tab, dim, ncomp)
+        }
+        BilinearForm::Elasticity { lambda, mu, e_mod } => {
+            elasticity_elem(*lambda, *mu, e_mod, e, ke, geo, tab, dim, ncomp)
+        }
+        BilinearForm::FacetMass { alpha } => mass_elem(alpha, e, ke, geo, tab),
+    }
+}
+
+/// Run a monomorphized per-element kernel over a contiguous element tile
+/// (`slot` f64s per element in `buf`). Generic over the kernel closure, so
+/// each call site below compiles to a direct loop with the form dispatch
+/// hoisted entirely out of it.
+#[inline]
+fn for_tile(e0: usize, slot: usize, buf: &mut [f64], f: impl Fn(usize, &mut [f64])) {
+    for (i, ke) in buf.chunks_exact_mut(slot).enumerate() {
+        f(e0 + i, ke);
+    }
+}
+
+/// Tile-level Map for one bilinear form: the form `match` runs once per
+/// tile, then a monomorphized element loop fills `buf` (`(e1−e0) × slot`,
+/// zeroed by the caller). Element `e` lands in the same slot with the same
+/// bits as [`fill_matrix_one`] — the fused engine's parity contract with
+/// the two-stage path is unchanged.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fill_matrix_tile(
+    form: &BilinearForm,
+    const_grad: bool,
+    e0: usize,
+    slot: usize,
+    buf: &mut [f64],
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+    dim: usize,
+    ncomp: usize,
+) {
+    match form {
+        BilinearForm::Diffusion { rho } if const_grad => {
+            for_tile(e0, slot, buf, |e, ke| diffusion_const_grad_elem(rho, e, ke, geo, tab, dim))
         }
         BilinearForm::Diffusion { rho } => {
-            for q in 0..nq {
-                let w = geo.detj[e * nq + q] * quad_weight(tab, q);
-                if w == 0.0 {
-                    continue;
-                }
-                let c = w * rho.at(e, q, nq);
-                for a in 0..k {
-                    let ga = geo.grad(e, q, a);
-                    for b in 0..k {
-                        ke[a * k + b] += c * grad_dot(ga, geo.grad(e, q, b), dim);
-                    }
-                }
-            }
+            for_tile(e0, slot, buf, |e, ke| diffusion_elem(rho, e, ke, geo, tab, dim))
         }
         BilinearForm::Mass { rho } => {
-            for q in 0..nq {
-                let w = geo.detj[e * nq + q] * quad_weight(tab, q);
-                if w == 0.0 {
-                    continue;
-                }
-                let c = w * rho.at(e, q, nq);
-                for a in 0..k {
-                    let pa = tab.val(q, a);
-                    for b in 0..k {
-                        ke[a * k + b] += c * pa * tab.val(q, b);
-                    }
-                }
-            }
+            for_tile(e0, slot, buf, |e, ke| mass_elem(rho, e, ke, geo, tab))
         }
         BilinearForm::Elasticity { lambda, mu, e_mod } if const_grad => {
             let (lambda, mu) = (*lambda, *mu);
-            let mut scale = 0.0;
-            for q in 0..nq {
-                scale += geo.detj[e * nq + q] * quad_weight(tab, q) * e_mod.at(e, q, nq);
-            }
-            if scale == 0.0 {
-                return;
-            }
-            for a in 0..k {
-                let ga = geo.grad(e, 0, a);
-                for b in 0..k {
-                    let gb = geo.grad(e, 0, b);
-                    let dotg = grad_dot(ga, gb, dim);
-                    for i in 0..ncomp {
-                        for j in 0..ncomp {
-                            let v = elasticity_entry(lambda, mu, ga, gb, dotg, i, j);
-                            ke[(a * ncomp + i) * kl + (b * ncomp + j)] = scale * v;
-                        }
-                    }
-                }
-            }
+            for_tile(e0, slot, buf, |e, ke| {
+                elasticity_const_grad_elem(lambda, mu, e_mod, e, ke, geo, tab, dim, ncomp)
+            })
         }
         BilinearForm::Elasticity { lambda, mu, e_mod } => {
             let (lambda, mu) = (*lambda, *mu);
-            for q in 0..nq {
-                let w = geo.detj[e * nq + q] * quad_weight(tab, q);
-                if w == 0.0 {
-                    continue;
-                }
-                let scale = w * e_mod.at(e, q, nq);
-                for a in 0..k {
-                    let ga = geo.grad(e, q, a);
-                    for b in 0..k {
-                        let gb = geo.grad(e, q, b);
-                        let dotg = grad_dot(ga, gb, dim);
-                        for i in 0..ncomp {
-                            for j in 0..ncomp {
-                                let v = elasticity_entry(lambda, mu, ga, gb, dotg, i, j);
-                                ke[(a * ncomp + i) * kl + (b * ncomp + j)] += scale * v;
-                            }
-                        }
-                    }
-                }
-            }
+            for_tile(e0, slot, buf, |e, ke| {
+                elasticity_elem(lambda, mu, e_mod, e, ke, geo, tab, dim, ncomp)
+            })
         }
         BilinearForm::FacetMass { alpha } => {
-            for q in 0..nq {
-                let w = geo.detj[e * nq + q] * quad_weight(tab, q);
-                if w == 0.0 {
-                    continue;
-                }
-                let c = w * alpha.at(e, q, nq);
-                for a in 0..k {
-                    let pa = tab.val(q, a);
-                    for b in 0..k {
-                        ke[a * k + b] += c * pa * tab.val(q, b);
-                    }
-                }
+            for_tile(e0, slot, buf, |e, ke| mass_elem(alpha, e, ke, geo, tab))
+        }
+    }
+}
+
+/// Scalar-source element kernel (shared by `Source` and `FacetFlux`).
+#[inline]
+fn source_elem(
+    f: &super::forms::Coefficient,
+    e: usize,
+    fe: &mut [f64],
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+) {
+    let k = tab.k;
+    let nq = geo.q;
+    for q in 0..nq {
+        let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+        if w == 0.0 {
+            continue;
+        }
+        let c = w * f.at(e, q, nq);
+        for a in 0..k {
+            fe[a] += c * tab.val(q, a);
+        }
+    }
+}
+
+/// Constant-vector element kernel (shared by `VectorSource` and
+/// `FacetTraction`).
+#[inline]
+fn vector_source_elem(
+    f: &[f64],
+    e: usize,
+    fe: &mut [f64],
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+    ncomp: usize,
+) {
+    assert_eq!(f.len(), ncomp);
+    let k = tab.k;
+    let nq = geo.q;
+    for q in 0..nq {
+        let w = geo.detj[e * nq + q] * quad_weight(tab, q);
+        if w == 0.0 {
+            continue;
+        }
+        for a in 0..k {
+            let pa = w * tab.val(q, a);
+            for (i, fi) in f.iter().enumerate() {
+                fe[a * ncomp + i] += pa * fi;
             }
         }
     }
@@ -310,35 +480,32 @@ pub(crate) fn fill_vector_one(
     tab: &Tabulation,
     ncomp: usize,
 ) {
-    let k = tab.k;
-    let nq = geo.q;
     match form {
         LinearForm::Source { f } | LinearForm::FacetFlux { g: f } => {
-            for q in 0..nq {
-                let w = geo.detj[e * nq + q] * quad_weight(tab, q);
-                if w == 0.0 {
-                    continue;
-                }
-                let c = w * f.at(e, q, nq);
-                for a in 0..k {
-                    fe[a] += c * tab.val(q, a);
-                }
-            }
+            source_elem(f, e, fe, geo, tab)
         }
         LinearForm::VectorSource { f } | LinearForm::FacetTraction { t: f } => {
-            assert_eq!(f.len(), ncomp);
-            for q in 0..nq {
-                let w = geo.detj[e * nq + q] * quad_weight(tab, q);
-                if w == 0.0 {
-                    continue;
-                }
-                for a in 0..k {
-                    let pa = w * tab.val(q, a);
-                    for (i, fi) in f.iter().enumerate() {
-                        fe[a * ncomp + i] += pa * fi;
-                    }
-                }
-            }
+            vector_source_elem(f, e, fe, geo, tab, ncomp)
+        }
+    }
+}
+
+/// Tile-level twin of [`fill_vector_one`] (see [`fill_matrix_tile`]).
+pub(crate) fn fill_vector_tile(
+    form: &LinearForm,
+    e0: usize,
+    slot: usize,
+    buf: &mut [f64],
+    geo: &ElementGeometry,
+    tab: &Tabulation,
+    ncomp: usize,
+) {
+    match form {
+        LinearForm::Source { f } | LinearForm::FacetFlux { g: f } => {
+            for_tile(e0, slot, buf, |e, fe| source_elem(f, e, fe, geo, tab))
+        }
+        LinearForm::VectorSource { f } | LinearForm::FacetTraction { t: f } => {
+            for_tile(e0, slot, buf, |e, fe| vector_source_elem(f, e, fe, geo, tab, ncomp))
         }
     }
 }

@@ -106,6 +106,11 @@ pub struct CoordinatorStats {
     /// Requests answered with an error (validation, unconverged lane, or
     /// recovered panic).
     pub failed_requests: u64,
-    /// Mesh states materialized so far (lazy registry fills).
+    /// Mesh states currently resident in the registry.
     pub meshes_built: u64,
+    /// Registry entries evicted by the LRU cap (`max_mesh_states`).
+    pub evicted_states: u64,
+    /// Mesh states rebuilt after a prior eviction — sustained traffic on
+    /// more meshes than the cap shows up here as churn.
+    pub state_rebuilds: u64,
 }

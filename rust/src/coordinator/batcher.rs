@@ -27,7 +27,10 @@ use anyhow::Result;
 use crate::assembly::{AssemblyContext, BatchedPlan, BilinearForm, Coefficient, LinearForm};
 use crate::bc::{condense, CondensePlan, DirichletBc, ReducedSystem};
 use crate::mesh::Mesh;
-use crate::solver::{cg, cg_batch, JacobiPrecond, MultiRhs, SolverConfig};
+use crate::solver::{
+    cg, cg_batch, cg_batch_warm_with, AmgBatch, AmgPrecond, JacobiPrecond, MultiRhs,
+    PrecondEngine, SolverConfig,
+};
 
 use super::api::{SolveRequest, SolveResponse, VarCoeffRequest};
 
@@ -35,7 +38,14 @@ use super::api::{SolveRequest, SolveResponse, VarCoeffRequest};
 pub struct BatchSolver {
     pub ctx: AssemblyContext,
     sys: ReducedSystem,
-    precond: JacobiPrecond,
+    /// Preconditioner over the condensed prototype operator, built once per
+    /// mesh state (next to the `CondensePlan`). Under
+    /// [`crate::solver::PrecondKind::Amg`] this is the "one hierarchy per
+    /// mesh": the fixed-operator paths use it directly and the varcoeff
+    /// paths — whose per-request operators share this topology and
+    /// spectrum — reuse it as a shared SPD preconditioner, so no request
+    /// ever pays a hierarchy construction.
+    engine: PrecondEngine,
     /// Dirichlet symbolic mapping on the shared pattern — built once at
     /// setup, reused by every varcoeff batch condensation.
     cplan: CondensePlan,
@@ -69,11 +79,11 @@ impl BatchSolver {
         // One symbolic traversal serves both the cached plan and the
         // fixed-operator reduced system.
         let sys = cplan.apply(&k.data, &zero);
-        let precond = JacobiPrecond::new(&sys.k);
+        let engine = PrecondEngine::build(&sys.k, config.precond);
         BatchSolver {
             ctx,
             sys,
-            precond,
+            engine,
             cplan,
             vplan: OnceLock::new(),
             config,
@@ -149,7 +159,7 @@ impl BatchSolver {
             f: self.ctx.coeff_nodal(&req.f_nodal),
         });
         let rhs = self.sys.restrict(&f);
-        let (u_free, stats) = cg(&self.sys.k, &rhs, &self.precond, &self.config);
+        let (u_free, stats) = self.engine.cg_warm(&self.sys.k, &rhs, None, &self.config);
         anyhow::ensure!(stats.converged, "batch solve {} failed: {stats:?}", req.id);
         Ok(SolveResponse {
             id: req.id,
@@ -172,8 +182,20 @@ impl BatchSolver {
             f: ctx.coeff_nodal(&req.f_nodal),
         });
         let sys = condense(&k, &f, &self.sys.bc);
-        let pc = JacobiPrecond::new(&sys.k);
-        let (u_free, stats) = cg(&sys.k, &sys.rhs, &pc, &self.config);
+        // Jacobi: the historical per-request diagonal (bitwise). AMG: the
+        // shared per-mesh hierarchy — the request's operator differs from
+        // the prototype only through its (positive) coefficient field, so
+        // the shared hierarchy stays a valid SPD preconditioner and no
+        // per-request setup is paid.
+        let (u_free, stats) = match &self.engine {
+            PrecondEngine::Jacobi(_) => {
+                let pc = JacobiPrecond::new(&sys.k);
+                cg(&sys.k, &sys.rhs, &pc, &self.config)
+            }
+            PrecondEngine::Amg(h, ws) => {
+                cg(&sys.k, &sys.rhs, &AmgPrecond::with_scratch(h, ws), &self.config)
+            }
+        };
         anyhow::ensure!(stats.converged, "varcoeff solve {} failed: {stats:?}", req.id);
         Ok(SolveResponse {
             id: req.id,
@@ -212,9 +234,11 @@ impl BatchSolver {
         for s in 0..valid.len() {
             rhs.extend(self.sys.restrict(&fbatch[s * n..(s + 1) * n]));
         }
-        let op =
-            MultiRhs::with_inv_diag(&self.sys.k, valid.len(), self.precond.inv_diag().to_vec());
-        let (u, stats) = cg_batch(&op, &rhs, &self.config);
+        let op = match self.engine.inv_diag() {
+            Some(inv) => MultiRhs::with_inv_diag(&self.sys.k, valid.len(), inv.to_vec()),
+            None => MultiRhs::new(&self.sys.k, valid.len()),
+        };
+        let (u, stats) = self.engine.cg_batch_warm(&op, &rhs, None, &self.config);
         seal_lanes(out, &valid, |s, i| {
             let st = stats[s];
             anyhow::ensure!(st.converged, "batch solve {} failed: {st:?}", reqs[i].id);
@@ -284,9 +308,17 @@ impl BatchSolver {
             .collect();
         let fbatch = ctx.assemble_vector_batch(&lforms);
         // The Dirichlet symbolic mapping was computed once at setup;
-        // each batch only pays the value gather + lift.
+        // each batch only pays the value gather + lift. The lockstep CG
+        // uses per-lane Jacobi under the default config (bitwise) or ONE
+        // shared-mesh AMG hierarchy applied to all lanes per iteration.
         let red = self.cplan.apply_batch(&kbatch, &fbatch);
-        let (u, stats) = cg_batch(&red.k, &red.rhs, &self.config);
+        let (u, stats) = match &self.engine {
+            PrecondEngine::Jacobi(_) => cg_batch(&red.k, &red.rhs, &self.config),
+            PrecondEngine::Amg(h, ws) => {
+                let pc = AmgBatch::with_scratch(h, red.n_instances(), ws);
+                cg_batch_warm_with(&red.k, &red.rhs, None, &pc, &self.config)
+            }
+        };
         let nf = red.n_free();
         seal_lanes(out, &valid, |s, i| {
             let st = stats[s];
@@ -520,6 +552,40 @@ mod tests {
         let zero = each[1].as_ref().unwrap();
         assert!(zero.u.iter().all(|&v| v == 0.0));
         assert_eq!(zero.iterations, 0);
+    }
+
+    #[test]
+    fn amg_configured_solver_serves_all_paths() {
+        let mesh = unit_cube_tet(3);
+        let cfg = SolverConfig {
+            precond: crate::solver::PrecondKind::amg(),
+            ..SolverConfig::default()
+        };
+        let solver = BatchSolver::new(&mesh, cfg);
+        // Fixed-operator: batched lanes bitwise-match scalar AMG-PCG (one
+        // shared hierarchy drives both paths).
+        let reqs = requests(mesh.n_nodes(), 3, 51);
+        let batched = solver.solve_batch(&reqs).unwrap();
+        for (resp, req) in batched.iter().zip(&reqs) {
+            let one = solver.solve_one(req).unwrap();
+            assert_eq!(resp.u, one.u, "lane {} not bitwise under AMG", req.id);
+            assert_eq!(resp.iterations, one.iterations);
+        }
+        // Varcoeff: the shared-mesh hierarchy preconditions every
+        // per-request operator; batch lanes bitwise-match the scalar path.
+        let vreqs = varcoeff_requests(mesh.n_nodes(), 3, 53);
+        let vb = solver.solve_varcoeff_batch(&vreqs).unwrap();
+        let vs = solver.solve_varcoeff_sequential(&vreqs).unwrap();
+        for (a, b) in vb.iter().zip(&vs) {
+            assert_eq!(a.iterations, b.iterations, "id {}", a.id);
+            assert_eq!(a.u, b.u, "id {}", a.id);
+        }
+        // Same physics as the Jacobi-configured solver, to solver tol.
+        let jac = BatchSolver::new(&mesh, SolverConfig::default());
+        let jb = jac.solve_batch(&reqs).unwrap();
+        for (a, b) in batched.iter().zip(&jb) {
+            assert!(crate::util::rel_l2(&a.u, &b.u) < 1e-8, "id {}", a.id);
+        }
     }
 
     #[test]

@@ -9,10 +9,11 @@
 //! batched assembly + lockstep-CG call through the per-mesh
 //! [`BatchSolver`] — the scalar `solve_one` path runs only for singleton
 //! groups. Per-mesh amortized state (assembly context, routing,
-//! condensation plan, Jacobi preconditioner, separable batched-assembly
-//! plan) lives in a registry `mesh_id → BatchSolver`, built lazily on the
-//! first request for each registered topology, so one server instance
-//! serves many mesh topologies.
+//! condensation plan, preconditioner engine — Jacobi or a per-mesh AMG
+//! hierarchy, separable batched-assembly plan) lives in a registry
+//! `mesh_id → BatchSolver`, built lazily on the first request for each
+//! registered topology and LRU-capped by `max_mesh_states`, so one server
+//! instance serves many mesh topologies with bounded resident state.
 //!
 //! Fault isolation: requests are shape-validated before they can reach the
 //! assembly kernels, an unconverged lane fails only its own reply
@@ -21,8 +22,9 @@
 //! into per-request error responses — the worker survives hostile traffic
 //! and `submit` surfaces a gone worker instead of hanging the client.
 //! [`CoordinatorStats`] exposes the worker's dispatch counters (batched vs
-//! scalar, failures, registry fills) for observability and regression
-//! tests. Everything is std::sync::mpsc — no external runtime.
+//! scalar, failures, registry fills, evictions/rebuilds) for observability
+//! and regression tests. Everything is std::sync::mpsc — no external
+//! runtime.
 
 pub mod api;
 pub mod batcher;

@@ -6,10 +6,14 @@
 //! requests by `(mesh_id, request kind)`, and dispatches every group as
 //! ONE batched assembly + one lockstep-CG call through the per-mesh
 //! [`BatchSolver`] — `solve_one` runs only for singleton groups. Per-mesh
-//! state (assembly context, condensation plan, preconditioner, separable
-//! batched-assembly plan) lives in a registry `mesh_id → BatchSolver`
-//! filled lazily on the first request for each registered topology, so one
-//! server instance serves many meshes with amortized setup.
+//! state (assembly context, condensation plan, preconditioner — Jacobi or
+//! a per-mesh AMG hierarchy, separable batched-assembly plan) lives in a
+//! registry `mesh_id → BatchSolver` filled lazily on the first request for
+//! each registered topology, so one server instance serves many meshes
+//! with amortized setup. The registry is LRU-capped (`max_mesh_states` on
+//! [`BatchServer::start_multi`]): beyond the cap the least-recently-used
+//! state is dropped and transparently rebuilt on its next request, with
+//! eviction/rebuild counters in [`CoordinatorStats`].
 //!
 //! Fault isolation: requests are validated before assembly, an
 //! unconverged lane fails only its own reply, and a panic while serving a
@@ -18,7 +22,7 @@
 //! surfaces a gone worker as an error response instead of silently
 //! dropping the request.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, SendError, Sender};
 use std::thread::JoinHandle;
@@ -64,16 +68,38 @@ pub struct BatchServer {
     max_batch: usize,
 }
 
+/// A registry slot: the built (or failed) per-mesh state plus its
+/// last-touch tick for LRU eviction.
+struct RegistryEntry {
+    /// A failed build (panicking setup of a *registered* mesh) is memoized
+    /// too, so sustained traffic for a bad mesh pays the setup attempt
+    /// once, not per drain cycle (until the slot is evicted). Unregistered
+    /// keys never get a slot at all.
+    state: std::result::Result<BatchSolver, String>,
+    last_used: u64,
+}
+
 /// The worker-side state: registered meshes and the lazily built per-mesh
-/// solver registry.
+/// solver registry (LRU-capped at `max_states` when nonzero).
 struct Worker {
     meshes: HashMap<u64, Mesh>,
-    /// Lazily built per-mesh state; a failed build (unknown key, panicking
-    /// setup) is memoized too, so sustained traffic for a bad mesh pays
-    /// the setup attempt once, not per drain cycle.
-    states: HashMap<u64, std::result::Result<BatchSolver, String>>,
+    /// Lazily built per-mesh state.
+    states: HashMap<u64, RegistryEntry>,
     config: SolverConfig,
     max_batch: usize,
+    /// Registry cap (`max_mesh_states` on `start_multi`; 0 = unbounded).
+    max_states: usize,
+    /// Monotone access clock driving the LRU order.
+    tick: u64,
+    evictions: u64,
+    rebuilds: u64,
+    /// Keys that were evicted at least once — a rebuild of one of these
+    /// counts as registry churn (`state_rebuilds`).
+    evicted_keys: HashSet<u64>,
+    /// Dispatch counters of evicted solvers, folded in so the aggregate
+    /// stats stay monotone across evictions.
+    retired_batched: u64,
+    retired_scalar: u64,
     failed: u64,
     /// Stats queries seen in the current drain cycle — answered only
     /// AFTER the cycle's dispatch, so a snapshot reflects every request
@@ -135,40 +161,67 @@ impl Worker {
     fn stats(&self) -> CoordinatorStats {
         let mut s = CoordinatorStats {
             failed_requests: self.failed,
+            evicted_states: self.evictions,
+            state_rebuilds: self.rebuilds,
+            batched_solves: self.retired_batched,
+            scalar_solves: self.retired_scalar,
             ..CoordinatorStats::default()
         };
-        for solver in self.states.values().filter_map(|st| st.as_ref().ok()) {
-            s.meshes_built += 1;
-            s.batched_solves += solver.n_batched_solves();
-            s.scalar_solves += solver.n_scalar_solves();
+        for entry in self.states.values() {
+            if let Ok(solver) = &entry.state {
+                s.meshes_built += 1;
+                s.batched_solves += solver.n_batched_solves();
+                s.scalar_solves += solver.n_scalar_solves();
+            }
         }
         s
     }
 
     /// Look up (or lazily build, memoizing success AND failure) the
-    /// amortized state for a mesh key.
+    /// amortized state for a mesh key, touching its LRU clock. When the
+    /// registry is at its cap, the least-recently-used slot is evicted
+    /// before the new build (its dispatch counters fold into the retired
+    /// totals so aggregate stats stay monotone).
     fn solver_for(&mut self, mesh_id: u64) -> std::result::Result<&BatchSolver, String> {
-        use std::collections::hash_map::Entry;
-        let state = match self.states.entry(mesh_id) {
-            Entry::Occupied(e) => e.into_mut(),
-            Entry::Vacant(v) => {
-                let built = match self.meshes.get(&mesh_id) {
-                    None => Err(format!("no mesh registered under mesh_id {mesh_id}")),
-                    Some(mesh) => {
-                        let config = self.config;
-                        catch_unwind(AssertUnwindSafe(|| BatchSolver::new(mesh, config)))
-                            .map_err(|p| {
-                                format!(
-                                    "building state for mesh_id {mesh_id} panicked: {}",
-                                    panic_msg(&*p)
-                                )
-                            })
+        self.tick += 1;
+        let tick = self.tick;
+        if !self.states.contains_key(&mesh_id) {
+            // Unregistered keys never occupy a registry slot: a hostile
+            // stream of bogus mesh_ids must not evict built states or grow
+            // the eviction bookkeeping (the error string is cheap to
+            // rebuild per request).
+            let Some(mesh) = self.meshes.get(&mesh_id) else {
+                return Err(format!("no mesh registered under mesh_id {mesh_id}"));
+            };
+            if self.max_states > 0 && self.states.len() >= self.max_states {
+                // LRU victim: stalest tick, smallest key on (never-occurring
+                // within one worker) ties — fully deterministic.
+                if let Some((&victim, _)) =
+                    self.states.iter().min_by_key(|&(k, e)| (e.last_used, *k))
+                {
+                    if let Some(entry) = self.states.remove(&victim) {
+                        self.evictions += 1;
+                        self.evicted_keys.insert(victim);
+                        if let Ok(solver) = entry.state {
+                            self.retired_batched += solver.n_batched_solves();
+                            self.retired_scalar += solver.n_scalar_solves();
+                        }
                     }
-                };
-                v.insert(built)
+                }
             }
-        };
-        state.as_ref().map_err(|e| e.clone())
+            if self.evicted_keys.contains(&mesh_id) {
+                self.rebuilds += 1;
+            }
+            let config = self.config;
+            let built = catch_unwind(AssertUnwindSafe(|| BatchSolver::new(mesh, config)))
+                .map_err(|p| {
+                    format!("building state for mesh_id {mesh_id} panicked: {}", panic_msg(&*p))
+                });
+            self.states.insert(mesh_id, RegistryEntry { state: built, last_used: tick });
+        }
+        let entry = self.states.get_mut(&mesh_id).expect("slot just ensured");
+        entry.last_used = tick;
+        entry.state.as_ref().map_err(|e| e.clone())
     }
 
     /// Group the drained queue by `(mesh_id, kind)` — arrival order is
@@ -265,16 +318,21 @@ impl BatchServer {
     /// Spawn a single-mesh server (the mesh is registered under
     /// [`DEFAULT_MESH`]); `max_batch` bounds the batched dispatch size.
     pub fn start(mesh: Mesh, config: SolverConfig, max_batch: usize) -> BatchServer {
-        BatchServer::start_multi(vec![(DEFAULT_MESH, mesh)], config, max_batch)
+        BatchServer::start_multi(vec![(DEFAULT_MESH, mesh)], config, max_batch, 0)
     }
 
     /// Spawn a server over many registered mesh topologies. Per-mesh
     /// solver state is built lazily on the first request tagged with each
-    /// `mesh_id`.
+    /// `mesh_id`; `max_mesh_states` caps how many built states stay
+    /// resident at once (LRU eviction; 0 = unbounded, the pre-cap
+    /// behavior). Eviction/rebuild churn is surfaced through
+    /// [`CoordinatorStats`], so an undersized cap under steady multi-mesh
+    /// traffic is visible as `state_rebuilds` growth.
     pub fn start_multi(
         meshes: Vec<(u64, Mesh)>,
         config: SolverConfig,
         max_batch: usize,
+        max_mesh_states: usize,
     ) -> BatchServer {
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
         let worker = std::thread::spawn(move || {
@@ -283,6 +341,13 @@ impl BatchServer {
                 states: HashMap::new(),
                 config,
                 max_batch,
+                max_states: max_mesh_states,
+                tick: 0,
+                evictions: 0,
+                rebuilds: 0,
+                evicted_keys: HashSet::new(),
+                retired_batched: 0,
+                retired_scalar: 0,
                 failed: 0,
                 stats_waiters: Vec::new(),
             };
@@ -480,6 +545,51 @@ mod tests {
         // Burst submission surfaces the same condition per request.
         let outs = server.solve_all_each(vec![SolveRequest::new(4, vec![1.0; n])]);
         assert!(outs[0].is_err());
+    }
+
+    #[test]
+    fn lru_cap_evicts_and_rebuilds_states() {
+        // Two meshes, a one-state cap: alternating traffic must evict and
+        // rebuild, with every request still answered correctly.
+        let (a, b) = (unit_cube_tet(2), unit_cube_tet(3));
+        let (na, nb) = (a.n_nodes(), b.n_nodes());
+        let server =
+            BatchServer::start_multi(vec![(1, a), (2, b)], SolverConfig::default(), 4, 1);
+        let mut answers = Vec::new();
+        for (round, (mesh_id, n)) in [(1u64, na), (2, nb), (1, na), (2, nb)].iter().enumerate() {
+            let rx = server.submit(SolveRequest::on_mesh(round as u64, *mesh_id, vec![1.0; *n]));
+            answers.push(rx.recv().unwrap().unwrap());
+        }
+        // Round-trip answers are mesh-consistent (u length = mesh DoFs).
+        assert_eq!(answers[0].u.len(), na);
+        assert_eq!(answers[1].u.len(), nb);
+        // Re-serving an evicted mesh gives the same solution bitwise (the
+        // rebuilt state is a pure function of mesh + config).
+        assert_eq!(answers[0].u, answers[2].u);
+        assert_eq!(answers[1].u, answers[3].u);
+        let stats = server.stats().expect("worker alive");
+        assert!(stats.evicted_states >= 2, "stats: {stats:?}");
+        assert!(stats.state_rebuilds >= 2, "stats: {stats:?}");
+        // One resident state at most, but dispatch counters stay monotone
+        // (retired counts folded in).
+        assert!(stats.meshes_built <= 1, "stats: {stats:?}");
+        assert_eq!(stats.scalar_solves, 4, "stats: {stats:?}");
+    }
+
+    #[test]
+    fn uncapped_registry_never_evicts() {
+        let (a, b) = (unit_cube_tet(2), unit_cube_tet(2));
+        let n = a.n_nodes();
+        let server =
+            BatchServer::start_multi(vec![(1, a), (2, b)], SolverConfig::default(), 4, 0);
+        for (i, mesh_id) in [1u64, 2, 1, 2].iter().enumerate() {
+            let rx = server.submit(SolveRequest::on_mesh(i as u64, *mesh_id, vec![1.0; n]));
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let stats = server.stats().expect("worker alive");
+        assert_eq!(stats.evicted_states, 0);
+        assert_eq!(stats.state_rebuilds, 0);
+        assert_eq!(stats.meshes_built, 2);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::mesh::curved::wave_circle;
 use crate::mesh::structured::lshape_tri;
 use crate::mesh::Mesh;
 use crate::runtime::Runtime;
+use crate::solver::PrecondKind;
 use crate::timestep::{AllenCahnIntegrator, WaveIntegrator};
 use crate::util::rng::Rng;
 
@@ -47,6 +48,11 @@ pub struct PdeSetup {
     pub dt: f64,
     pub rollout_t: usize,
     pub param_count: usize,
+    /// Preconditioner for the reference integrators (default Jacobi —
+    /// bitwise-preserved data generation; [`PdeSetup::set_precond`] opts a
+    /// generation run into AMG, one hierarchy per integrator reused across
+    /// every trajectory of the set).
+    pub precond: PrecondKind,
 }
 
 impl PdeSetup {
@@ -109,8 +115,15 @@ impl PdeSetup {
             dt: info.meta["dt"],
             rollout_t: info.meta["rollout_t"] as usize,
             param_count: info.meta["param_count"] as usize,
+            precond: PrecondKind::Jacobi,
             mesh,
         })
+    }
+
+    /// Select the preconditioner used by the reference integrators for
+    /// every subsequent trajectory generation.
+    pub fn set_precond(&mut self, kind: PrecondKind) {
+        self.precond = kind;
     }
 
     /// FEM reference trajectory (full nodal states) of length `steps+1`.
@@ -139,12 +152,12 @@ impl PdeSetup {
     /// one constructor shared by the scalar and batched generators so the
     /// PDE constants cannot drift between them.
     fn wave_integrator(&self) -> WaveIntegrator {
-        WaveIntegrator::new(&self.mesh, 4.0, self.dt)
+        WaveIntegrator::with_precond(&self.mesh, 4.0, self.dt, self.precond)
     }
 
     /// The Allen-Cahn reference integrator (a² = 1e-2, ε² = 1).
     fn allen_cahn_integrator(&self) -> AllenCahnIntegrator {
-        AllenCahnIntegrator::new(&self.mesh, 1e-2, 1.0, self.dt)
+        AllenCahnIntegrator::with_precond(&self.mesh, 1e-2, 1.0, self.dt, self.precond)
     }
 
     /// Batched FEM reference trajectories: the whole IC set advances in

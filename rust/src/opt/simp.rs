@@ -6,10 +6,13 @@ use anyhow::Result;
 
 use crate::assembly::map_reduce::FacetContext;
 use crate::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
-use crate::bc::{CondensePlan, DirichletBc, ReducedSystem};
+use crate::bc::{CondensePlan, DirichletBc, ReducedBatch, ReducedSystem};
 use crate::mesh::structured::rect_quad;
 use crate::mesh::{marker, Mesh};
-use crate::solver::{cg_batch_warm, cg_warm, JacobiPrecond, SolverConfig};
+use crate::solver::{
+    cg_batch_warm, cg_batch_warm_with, AmgBatch, AmgHierarchy, PrecondEngine, PrecondKind,
+    SolverConfig,
+};
 use crate::sparse::{Csr, CsrBatch};
 
 /// Material and discretization parameters (paper defaults).
@@ -110,8 +113,18 @@ impl SimpProblem {
                 rel_tol: 1e-7,
                 abs_tol: 1e-12,
                 max_iter: 50_000,
+                ..SolverConfig::default()
             },
         }
+    }
+
+    /// Select the state-solve preconditioner (default Jacobi — bitwise
+    /// back-compat). With [`PrecondKind::Amg`] the drivers build ONE
+    /// hierarchy from the first condensed stiffness and refill it per
+    /// iteration (aggregation + symbolic triple-product reused; only
+    /// values flow with the SIMP densities).
+    pub fn set_solver_precond(&mut self, kind: PrecondKind) {
+        self.solver_cfg.precond = kind;
     }
 
     pub fn n_elems(&self) -> usize {
@@ -213,8 +226,10 @@ impl SimpProblem {
     /// place: when `kvalues` is `Some`, the plan's value gather + lift is
     /// reapplied into `sys` (zero allocation on the condensation side);
     /// `None` solves `sys` as-is. Iteration loops hold the plan + one
-    /// system built at setup and call this per iteration. Bitwise
-    /// identical to [`SimpProblem::solve_state`] on the same values.
+    /// system built at setup and call this per iteration (plus a
+    /// persistent engine slot — see [`SimpProblem::solve_state_engine`]).
+    /// Bitwise identical to [`SimpProblem::solve_state`] on the same
+    /// values.
     pub fn solve_state_reusing(
         &self,
         plan: &CondensePlan,
@@ -222,12 +237,34 @@ impl SimpProblem {
         warm: Option<&[f64]>,
         sys: &mut ReducedSystem,
     ) -> Result<(Vec<f64>, usize)> {
+        self.solve_state_engine(plan, kvalues, warm, sys, &mut None)
+    }
+
+    /// [`SimpProblem::solve_state_reusing`] with a caller-held
+    /// preconditioner slot: `None` builds the configured engine from the
+    /// (refilled) condensed stiffness, `Some` renumerates it in place —
+    /// for Jacobi that is the per-solve diagonal extraction the historical
+    /// path performed (bitwise-identical); for AMG it is
+    /// [`AmgHierarchy::refill`], so the aggregation and symbolic structure
+    /// built at iteration 0 serve the whole optimization loop.
+    pub fn solve_state_engine(
+        &self,
+        plan: &CondensePlan,
+        kvalues: Option<&[f64]>,
+        warm: Option<&[f64]>,
+        sys: &mut ReducedSystem,
+        engine: &mut Option<PrecondEngine>,
+    ) -> Result<(Vec<f64>, usize)> {
         if let Some(values) = kvalues {
             plan.reapply_into(values, &self.f, sys);
         }
-        let pc = JacobiPrecond::new(&sys.k);
+        match engine {
+            Some(e) => e.refill(&sys.k),
+            None => *engine = Some(PrecondEngine::build(&sys.k, self.solver_cfg.precond)),
+        }
+        let e = engine.as_ref().expect("engine just ensured");
         let x0 = warm.map(|w| sys.restrict(w));
-        let (u_free, stats) = cg_warm(&sys.k, &sys.rhs, x0.as_deref(), &pc, &self.solver_cfg);
+        let (u_free, stats) = e.cg_warm(&sys.k, &sys.rhs, x0.as_deref(), &self.solver_cfg);
         anyhow::ensure!(stats.converged, "state solve failed: {stats:?}");
         Ok((sys.expand(&u_free), stats.iterations))
     }
@@ -252,6 +289,24 @@ impl SimpProblem {
         kbatch: &CsrBatch,
         warm: Option<&[&[f64]]>,
     ) -> Result<(Vec<Vec<f64>>, Vec<usize>)> {
+        self.solve_state_batch_engine(plan, kbatch, warm, &mut None)
+    }
+
+    /// Blocked state solve with a caller-held AMG slot (unused under the
+    /// default Jacobi config — that path is bitwise-identical to the
+    /// historical [`SimpProblem::solve_state_batch_with`]). Under
+    /// [`PrecondKind::Amg`], ONE hierarchy — built from design 0's
+    /// condensed stiffness on the first call, refilled from it afterwards —
+    /// preconditions every lane of the lockstep CG ([`AmgBatch`]): the
+    /// designs share a topology, so the shared-mesh hierarchy is a valid
+    /// SPD preconditioner for the whole set.
+    pub fn solve_state_batch_engine(
+        &self,
+        plan: &CondensePlan,
+        kbatch: &CsrBatch,
+        warm: Option<&[&[f64]]>,
+        amg: &mut Option<AmgHierarchy>,
+    ) -> Result<(Vec<Vec<f64>>, Vec<usize>)> {
         let red = plan.apply_batch(kbatch, &self.f);
         let x0: Option<Vec<f64>> = warm.map(|ws| {
             assert_eq!(ws.len(), kbatch.n_instances, "one warm seed per design");
@@ -261,7 +316,7 @@ impl SimpProblem {
             }
             flat
         });
-        let (u, stats) = cg_batch_warm(&red.k, &red.rhs, x0.as_deref(), &self.solver_cfg);
+        let (u, stats) = self.solve_reduced_batch(&red, x0.as_deref(), amg);
         let nf = red.n_free();
         let mut us = Vec::with_capacity(kbatch.n_instances);
         let mut iters = Vec::with_capacity(kbatch.n_instances);
@@ -271,6 +326,29 @@ impl SimpProblem {
             iters.push(st.iterations);
         }
         Ok((us, iters))
+    }
+
+    /// The lockstep CG dispatch shared by the blocked state solves:
+    /// per-lane Jacobi under the default config, one build-or-refill
+    /// shared hierarchy under AMG.
+    fn solve_reduced_batch(
+        &self,
+        red: &ReducedBatch,
+        x0: Option<&[f64]>,
+        amg: &mut Option<AmgHierarchy>,
+    ) -> (Vec<f64>, Vec<crate::solver::SolveStats>) {
+        match self.solver_cfg.precond {
+            PrecondKind::Jacobi => cg_batch_warm(&red.k, &red.rhs, x0, &self.solver_cfg),
+            PrecondKind::Amg(acfg) => {
+                match amg {
+                    Some(h) => h.refill(red.k.values(0)),
+                    None => *amg = Some(AmgHierarchy::build(&red.k.instance(0), acfg)),
+                }
+                let h = amg.as_ref().expect("hierarchy just ensured");
+                let pc = AmgBatch::new(h, red.n_instances());
+                cg_batch_warm_with(&red.k, &red.rhs, x0, &pc, &self.solver_cfg)
+            }
+        }
     }
 
     /// One-shot blocked state solve (plan built per call — hold

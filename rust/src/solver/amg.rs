@@ -1,0 +1,972 @@
+//! Smoothed-aggregation algebraic multigrid (SA-AMG) preconditioning.
+//!
+//! Jacobi-PCG — the paper's Table B.1 configuration — needs `O(h⁻¹)` Krylov
+//! iterations on the Poisson/elasticity families of Fig. 2, so on fine
+//! meshes the *solve*, not assembly, dominates wall-clock. A multigrid
+//! V-cycle preconditioner makes the iteration count (near) mesh-independent:
+//! every PCG iteration then costs a few SpMVs more, but the iteration count
+//! stops growing with refinement.
+//!
+//! # Symbolic-once / numeric-refill design
+//!
+//! Mirroring [`crate::bc::CondensePlan`] (and the shared-topology discipline
+//! of the whole assembly layer), the hierarchy is split into a symbolic part
+//! that depends only on the sparsity pattern + one strength snapshot, and a
+//! numeric part that is a pure function of the operator values:
+//!
+//! * **Symbolic (built once per mesh/pattern):** greedy strength-of-
+//!   connection aggregation of the CSR graph, the pattern of the smoothed
+//!   prolongation `P = (I − ω D⁻¹A) T`, the pattern of `W = A·P` and of the
+//!   Galerkin coarse operator `Aᶜ = Pᵀ·W`, with flat gather lists (pair
+//!   lists of data positions) for every product nonzero.
+//! * **Numeric ([`AmgHierarchy::refill`]):** given new values on the same
+//!   fine pattern — a topology-optimization re-assembly, a varying
+//!   coefficient field — the inverse diagonals, `P`, `W`, every coarse
+//!   level and the coarsest dense LU are recomputed *in place* through the
+//!   stored plans. [`AmgHierarchy::build`] itself runs exactly this numeric
+//!   pass after the symbolic setup, so a refill is bitwise identical to a
+//!   rebuild with the same aggregation.
+//!
+//! # Determinism
+//!
+//! Aggregation and all symbolic passes are sequential. The numeric passes
+//! parallelize over disjoint output targets with a fixed per-target
+//! accumulation order (the same argument as `Routing`), and the V-cycle is
+//! composed of deterministic kernels ([`Csr::spmv_multi`], elementwise
+//! sweeps, a sequential dense back-solve) — results are bitwise identical
+//! at any `TG_THREADS`.
+//!
+//! # Batched application
+//!
+//! [`AmgBatch`] applies ONE hierarchy to `S` residual lanes at once: every
+//! level traversal reads the level operators a single time through the
+//! fused instance-major kernels (`spmv_multi`), the smoothing sweeps run
+//! lane-major, and the coarse LU back-solves per lane — the preconditioner
+//! analogue of [`crate::sparse::CsrBatch::spmv_batch`]. Per lane the
+//! arithmetic order is exactly the scalar V-cycle's, so each lane of a
+//! lockstep AMG-PCG solve is bitwise identical to a scalar AMG-PCG run
+//! sharing the same hierarchy.
+//!
+//! Scope note: the tentative prolongation uses the constant vector as the
+//! near-null-space candidate, which is exact for scalar diffusion and an
+//! approximation for elasticity (rigid-body modes are a recorded follow-up)
+//! — for vector problems the hierarchy is still SPD and symmetric, just
+//! less optimal.
+
+use std::cell::RefCell;
+
+use crate::sparse::{Csr, Dense, LuFactor};
+use crate::util::threadpool::{self, SyncPtr};
+
+use super::precond::{jacobi_inverse, Preconditioner};
+
+/// SA-AMG construction parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AmgConfig {
+    /// Strength-of-connection threshold: `j` is strongly connected to `i`
+    /// iff `|a_ij| ≥ theta·√(|a_ii·a_jj|)`.
+    pub theta: f64,
+    /// Base damping weight for the prolongation smoother and the V-cycle
+    /// Jacobi sweeps; rescaled per level by a Gershgorin bound on
+    /// `ρ(D⁻¹A)` so the effective `ω·ρ` stays below 2 (keeps the smoother
+    /// convergent and the V-cycle SPD on elasticity-like operators).
+    pub omega: f64,
+    /// Stop coarsening once a level has at most this many DoFs; that level
+    /// is LU-factorized and solved directly.
+    pub coarse_max: usize,
+    /// Hard cap on the number of coarsening steps.
+    pub max_levels: usize,
+}
+
+impl Default for AmgConfig {
+    fn default() -> Self {
+        AmgConfig {
+            theta: 0.08,
+            omega: 2.0 / 3.0,
+            coarse_max: 200,
+            max_levels: 12,
+        }
+    }
+}
+
+/// Greedy (Vaněk-style) aggregation of the strength graph. Returns the
+/// aggregate id of every node and the aggregate count. Fully sequential and
+/// a function of `(pattern, values, theta)` alone — independent of thread
+/// count by construction.
+fn aggregate(a: &Csr, theta: f64) -> (Vec<usize>, usize) {
+    let n = a.nrows;
+    let diag = a.diagonal();
+    let strong = |i: usize, j: usize, v: f64| -> bool {
+        j != i && v.abs() >= theta * (diag[i].abs() * diag[j].abs()).sqrt() && v != 0.0
+    };
+    let mut agg = vec![usize::MAX; n];
+    let mut n_agg = 0usize;
+    // Pass 1: a node whose strong neighborhood is entirely unaggregated
+    // seeds a new aggregate of itself plus that neighborhood.
+    for i in 0..n {
+        if agg[i] != usize::MAX {
+            continue;
+        }
+        let (cols, vals) = a.row(i);
+        let free = cols
+            .iter()
+            .zip(vals)
+            .all(|(&j, &v)| !strong(i, j, v) || agg[j] == usize::MAX);
+        if !free {
+            continue;
+        }
+        agg[i] = n_agg;
+        for (&j, &v) in cols.iter().zip(vals) {
+            if strong(i, j, v) {
+                agg[j] = n_agg;
+            }
+        }
+        n_agg += 1;
+    }
+    // Pass 2: leftover nodes join the pass-1 aggregate of their strongest
+    // connection (decided against the pass-1 snapshot so chains cannot
+    // form; first-in-row-order wins ties deterministically).
+    let snapshot = agg.clone();
+    for i in 0..n {
+        if agg[i] != usize::MAX {
+            continue;
+        }
+        let (cols, vals) = a.row(i);
+        let mut best: Option<(f64, usize)> = None;
+        for (&j, &v) in cols.iter().zip(vals) {
+            if strong(i, j, v) && snapshot[j] != usize::MAX {
+                let w = v.abs();
+                if best.map_or(true, |(bw, _)| w > bw) {
+                    best = Some((w, snapshot[j]));
+                }
+            }
+        }
+        if let Some((_, g)) = best {
+            agg[i] = g;
+        }
+    }
+    // Pass 3: whatever is left seeds aggregates from the still-unaggregated
+    // strong remainder (isolated nodes become singletons).
+    for i in 0..n {
+        if agg[i] != usize::MAX {
+            continue;
+        }
+        agg[i] = n_agg;
+        let (cols, vals) = a.row(i);
+        for (&j, &v) in cols.iter().zip(vals) {
+            if strong(i, j, v) && agg[j] == usize::MAX {
+                agg[j] = n_agg;
+            }
+        }
+        n_agg += 1;
+    }
+    (agg, n_agg)
+}
+
+/// Symbolic transpose of a CSR pattern: returns `(t_indptr, t_indices,
+/// perm)` with `t_data[k] = data[perm[k]]` for any value array on the
+/// source pattern (counting sort — deterministic).
+fn transpose_pattern(
+    nrows: usize,
+    ncols: usize,
+    indptr: &[usize],
+    indices: &[usize],
+) -> (Vec<usize>, Vec<usize>, Vec<usize>) {
+    let nnz = indices.len();
+    let mut counts = vec![0usize; ncols + 1];
+    for &c in indices {
+        counts[c + 1] += 1;
+    }
+    for i in 0..ncols {
+        counts[i + 1] += counts[i];
+    }
+    let t_indptr = counts.clone();
+    let mut t_indices = vec![0usize; nnz];
+    let mut perm = vec![0usize; nnz];
+    let mut next = counts;
+    for r in 0..nrows {
+        for pos in indptr[r]..indptr[r + 1] {
+            let c = indices[pos];
+            let slot = next[c];
+            t_indices[slot] = r;
+            perm[slot] = pos;
+            next[c] += 1;
+        }
+    }
+    (t_indptr, t_indices, perm)
+}
+
+/// Symbolic sparse product `C = A·B`: the pattern of `C` plus, per `C`
+/// nonzero, the flat list of `(A-data, B-data)` position pairs whose
+/// products it sums — in a canonical order (A row order, then B row order)
+/// so the numeric refill is deterministic and identical across rebuilds.
+#[derive(Clone, Debug)]
+struct ProductPlan {
+    nrows: usize,
+    ncols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    pair_ptr: Vec<usize>,
+    left: Vec<u32>,
+    right: Vec<u32>,
+}
+
+impl ProductPlan {
+    fn build(
+        a_nrows: usize,
+        a_indptr: &[usize],
+        a_indices: &[usize],
+        b_ncols: usize,
+        b_indptr: &[usize],
+        b_indices: &[usize],
+    ) -> ProductPlan {
+        let mut indptr = Vec::with_capacity(a_nrows + 1);
+        indptr.push(0);
+        let mut indices = Vec::new();
+        let mut pair_ptr = vec![0usize];
+        let mut left = Vec::new();
+        let mut right = Vec::new();
+        let mut row: Vec<(usize, u32, u32)> = Vec::new();
+        for i in 0..a_nrows {
+            row.clear();
+            for apos in a_indptr[i]..a_indptr[i + 1] {
+                let j = a_indices[apos];
+                for bpos in b_indptr[j]..b_indptr[j + 1] {
+                    row.push((b_indices[bpos], apos as u32, bpos as u32));
+                }
+            }
+            // Stable sort keeps the canonical generation order within each
+            // output column.
+            row.sort_by_key(|t| t.0);
+            let mut p = 0;
+            while p < row.len() {
+                let k = row[p].0;
+                indices.push(k);
+                while p < row.len() && row[p].0 == k {
+                    left.push(row[p].1);
+                    right.push(row[p].2);
+                    p += 1;
+                }
+                pair_ptr.push(left.len());
+            }
+            indptr.push(indices.len());
+        }
+        ProductPlan {
+            nrows: a_nrows,
+            ncols: b_ncols,
+            indptr,
+            indices,
+            pair_ptr,
+            left,
+            right,
+        }
+    }
+
+    fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Numeric product through the stored pair lists. Each output nonzero
+    /// is owned by one task and summed in the canonical stored order —
+    /// deterministic at any thread count.
+    fn apply(&self, a_data: &[f64], b_data: &[f64], out: &mut [f64]) {
+        assert_eq!(out.len(), self.nnz(), "product output length");
+        let threads = threadpool::default_threads();
+        threadpool::for_each_row_mut(out, 1, threads, |p, slot| {
+            let mut acc = 0.0;
+            for t in self.pair_ptr[p]..self.pair_ptr[p + 1] {
+                acc += a_data[self.left[t] as usize] * b_data[self.right[t] as usize];
+            }
+            slot[0] = acc;
+        });
+    }
+}
+
+/// Numeric refill plan for the smoothed prolongation values: per `P`
+/// nonzero, the A-data positions feeding the `−ω D⁻¹(A T)` part plus the
+/// tentative 0/1 contribution.
+#[derive(Clone, Debug)]
+struct ProlongPlan {
+    ptr: Vec<usize>,
+    src: Vec<u32>,
+    tent: Vec<f64>,
+}
+
+/// One coarsening step: the fine operator, the transfer operators and every
+/// numeric-refill plan tied to this level.
+#[derive(Clone, Debug)]
+struct AmgLevel {
+    /// Fine operator of this level (level 0 holds the caller's matrix).
+    a: Csr,
+    /// Position of each diagonal entry in `a.data` (`usize::MAX` if the
+    /// pattern lacks one).
+    diag_pos: Vec<usize>,
+    inv_diag: Vec<f64>,
+    /// Per-level damping `ω_eff = ω·2/λ̂` with `λ̂` the Gershgorin bound on
+    /// `ρ(D⁻¹A)` — recomputed on every refill.
+    omega: f64,
+    /// Smoothed prolongation `n × n_agg`.
+    p: Csr,
+    pplan: ProlongPlan,
+    /// Restriction `Pᵀ` (pattern transposed once; values gathered through
+    /// `rperm` on refill).
+    r: Csr,
+    rperm: Vec<usize>,
+    /// `W = A·P` (values only live here; pattern inside the plan).
+    wplan: ProductPlan,
+    wvals: Vec<f64>,
+    /// `Aᶜ = Pᵀ·W` — writes the next level's (or the coarsest) values.
+    cplan: ProductPlan,
+}
+
+impl AmgLevel {
+    /// Symbolic construction from an owned fine operator + aggregation.
+    fn symbolic(a: Csr, agg: &[usize], n_agg: usize) -> AmgLevel {
+        let n = a.nrows;
+        let mut diag_pos = vec![usize::MAX; n];
+        for (i, dp) in diag_pos.iter_mut().enumerate() {
+            if let Some(pos) = a.pos(i, i) {
+                *dp = pos;
+            }
+        }
+        // Pattern of P: row p couples to every aggregate its A-row touches,
+        // plus its own aggregate (tentative identity).
+        let mut p_indptr = Vec::with_capacity(n + 1);
+        p_indptr.push(0);
+        let mut p_indices = Vec::new();
+        let mut ptr = vec![0usize];
+        let mut src = Vec::new();
+        let mut tent = Vec::new();
+        let mut ents: Vec<(usize, u32)> = Vec::new();
+        for row in 0..n {
+            ents.clear();
+            for pos in a.indptr[row]..a.indptr[row + 1] {
+                ents.push((agg[a.indices[pos]], pos as u32));
+            }
+            ents.sort_by_key(|e| e.0);
+            let jt = agg[row];
+            let mut seen_t = false;
+            let mut i = 0;
+            while i < ents.len() {
+                let j = ents[i].0;
+                if !seen_t && jt < j {
+                    p_indices.push(jt);
+                    tent.push(1.0);
+                    ptr.push(src.len());
+                    seen_t = true;
+                    continue;
+                }
+                p_indices.push(j);
+                tent.push(if j == jt { 1.0 } else { 0.0 });
+                if j == jt {
+                    seen_t = true;
+                }
+                while i < ents.len() && ents[i].0 == j {
+                    src.push(ents[i].1);
+                    i += 1;
+                }
+                ptr.push(src.len());
+            }
+            if !seen_t {
+                p_indices.push(jt);
+                tent.push(1.0);
+                ptr.push(src.len());
+            }
+            p_indptr.push(p_indices.len());
+        }
+        let p = Csr {
+            nrows: n,
+            ncols: n_agg,
+            data: vec![0.0; p_indices.len()],
+            indptr: p_indptr,
+            indices: p_indices,
+        };
+        let (r_indptr, r_indices, rperm) =
+            transpose_pattern(p.nrows, p.ncols, &p.indptr, &p.indices);
+        let r = Csr {
+            nrows: n_agg,
+            ncols: n,
+            data: vec![0.0; r_indices.len()],
+            indptr: r_indptr,
+            indices: r_indices,
+        };
+        let wplan = ProductPlan::build(n, &a.indptr, &a.indices, n_agg, &p.indptr, &p.indices);
+        let cplan = ProductPlan::build(
+            n_agg,
+            &r.indptr,
+            &r.indices,
+            n_agg,
+            &wplan.indptr,
+            &wplan.indices,
+        );
+        let wvals = vec![0.0; wplan.nnz()];
+        AmgLevel {
+            inv_diag: vec![0.0; n],
+            omega: 0.0,
+            pplan: ProlongPlan { ptr, src, tent },
+            a,
+            diag_pos,
+            p,
+            rperm,
+            r,
+            wplan,
+            wvals,
+            cplan,
+        }
+    }
+
+    /// Numeric pass for this level: inverse diagonal, damping bound,
+    /// smoothed `P`, `R` gather and `W = A·P`, leaving the Galerkin product
+    /// for the hierarchy driver (it writes the next level's storage).
+    fn update_numeric(&mut self, omega_base: f64) {
+        let n = self.a.nrows;
+        for i in 0..n {
+            let d = match self.diag_pos[i] {
+                usize::MAX => 0.0,
+                pos => self.a.data[pos],
+            };
+            self.inv_diag[i] = if d.abs() > 1e-300 { 1.0 / d } else { 1.0 };
+        }
+        // Gershgorin bound on ρ(D⁻¹A): max_i |d_i|⁻¹·Σ_j |a_ij| (exact max,
+        // order-independent). Rescale ω so ω_eff·ρ ≤ 2·ω_base < 2.
+        let mut lam = 0.0f64;
+        for i in 0..n {
+            let (_, vals) = self.a.row(i);
+            let rowsum: f64 = vals.iter().map(|v| v.abs()).sum();
+            lam = lam.max(rowsum * self.inv_diag[i].abs());
+        }
+        self.omega = omega_base * 2.0 / lam.max(1.0);
+        // Smoothed prolongation values: P = T − ω D⁻¹(A T), rows disjoint.
+        let omega = self.omega;
+        let (a_data, inv_diag) = (&self.a.data, &self.inv_diag);
+        let (p_indptr, pplan) = (&self.p.indptr, &self.pplan);
+        let pdata = SyncPtr::new(&mut self.p.data);
+        let threads = threadpool::default_threads();
+        threadpool::parallel_ranges(n, threads, |r0, r1| {
+            for row in r0..r1 {
+                for k in p_indptr[row]..p_indptr[row + 1] {
+                    let mut acc = 0.0;
+                    for t in pplan.ptr[k]..pplan.ptr[k + 1] {
+                        acc += a_data[pplan.src[t] as usize];
+                    }
+                    let v = pplan.tent[k] - omega * inv_diag[row] * acc;
+                    // SAFETY: tasks own disjoint row ranges of P's data.
+                    unsafe { *pdata.get().add(k) = v };
+                }
+            }
+        });
+        for (k, &pos) in self.rperm.iter().enumerate() {
+            self.r.data[k] = self.p.data[pos];
+        }
+        self.wplan.apply(&self.a.data, &self.p.data, &mut self.wvals);
+    }
+}
+
+/// A full SA-AMG hierarchy: coarsening levels plus an LU-factorized
+/// coarsest operator. Build once per mesh/pattern; [`AmgHierarchy::refill`]
+/// renumerates it for new values on the same pattern.
+#[derive(Clone, Debug)]
+pub struct AmgHierarchy {
+    cfg: AmgConfig,
+    levels: Vec<AmgLevel>,
+    /// Coarsest operator (the caller's matrix itself when it is already at
+    /// or below `coarse_max`).
+    coarse_a: Csr,
+    coarse_inv_diag: Vec<f64>,
+    /// Dense LU of the coarsest operator; `None` falls back to a Jacobi
+    /// sweep (numerically singular coarse level).
+    lu: Option<LuFactor>,
+}
+
+impl AmgHierarchy {
+    /// Build the hierarchy for an SPD operator. Symbolic structure
+    /// (aggregation, transfer patterns, product pair lists) is computed
+    /// here once; the numeric tail is the same pass [`AmgHierarchy::refill`]
+    /// runs, so refilling with these values reproduces this hierarchy
+    /// bitwise.
+    pub fn build(a: &Csr, cfg: AmgConfig) -> AmgHierarchy {
+        assert_eq!(a.nrows, a.ncols, "AMG needs a square operator");
+        let mut levels = Vec::new();
+        let mut cur = a.clone();
+        while cur.nrows > cfg.coarse_max && levels.len() < cfg.max_levels {
+            let (agg, n_agg) = aggregate(&cur, cfg.theta);
+            if n_agg == 0 || n_agg >= cur.nrows {
+                break; // no coarsening progress — stop here
+            }
+            let level = AmgLevel::symbolic(cur, &agg, n_agg);
+            cur = Csr {
+                nrows: level.cplan.nrows,
+                ncols: level.cplan.ncols,
+                indptr: level.cplan.indptr.clone(),
+                indices: level.cplan.indices.clone(),
+                data: vec![0.0; level.cplan.nnz()],
+            };
+            levels.push(level);
+        }
+        let n_c = cur.nrows;
+        let mut h = AmgHierarchy {
+            cfg,
+            levels,
+            coarse_a: cur,
+            coarse_inv_diag: vec![0.0; n_c],
+            lu: None,
+        };
+        h.renumeric();
+        h
+    }
+
+    /// Renumerate the whole hierarchy for new values on the finest pattern
+    /// (same length as the original matrix's data). Aggregation, transfer
+    /// patterns and product plans are reused — only values flow: the trick
+    /// [`crate::bc::CondensePlan::reapply_into`] applies to condensation,
+    /// extended through the Galerkin triple product.
+    pub fn refill(&mut self, values: &[f64]) {
+        let fine = self
+            .levels
+            .first_mut()
+            .map(|l| &mut l.a)
+            .unwrap_or(&mut self.coarse_a);
+        assert_eq!(values.len(), fine.data.len(), "refill value length");
+        fine.data.copy_from_slice(values);
+        self.renumeric();
+    }
+
+    /// The shared numeric pass of [`AmgHierarchy::build`] and
+    /// [`AmgHierarchy::refill`].
+    fn renumeric(&mut self) {
+        let nl = self.levels.len();
+        for l in 0..nl {
+            let (head, tail) = self.levels.split_at_mut(l + 1);
+            let lev = &mut head[l];
+            lev.update_numeric(self.cfg.omega);
+            let next_data: &mut [f64] = match tail.first_mut() {
+                Some(next) => &mut next.a.data,
+                None => &mut self.coarse_a.data,
+            };
+            lev.cplan.apply(&lev.r.data, &lev.wvals, next_data);
+        }
+        self.coarse_inv_diag = jacobi_inverse(self.coarse_a.diagonal());
+        let n_c = self.coarse_a.nrows;
+        // Guard against stalled coarsening (e.g. a near-diagonal operator
+        // with no strong connections): never densify a large coarse level —
+        // the Jacobi-sweep fallback keeps the cycle valid at O(n) cost.
+        if n_c > 4 * self.cfg.coarse_max.max(1) {
+            self.lu = None;
+            return;
+        }
+        let dense = Dense {
+            nrows: n_c,
+            ncols: n_c,
+            data: self.coarse_a.to_dense(),
+        };
+        self.lu = dense.factor().ok();
+    }
+
+    /// Number of operator levels including the coarsest.
+    pub fn n_levels(&self) -> usize {
+        self.levels.len() + 1
+    }
+
+    /// DoF count per level, finest first.
+    pub fn level_dims(&self) -> Vec<usize> {
+        let mut dims: Vec<usize> = self.levels.iter().map(|l| l.a.nrows).collect();
+        dims.push(self.coarse_a.nrows);
+        dims
+    }
+
+    /// Operator complexity `Σ_l nnz(A_l) / nnz(A_0)` — the classic AMG
+    /// memory/work figure of merit.
+    pub fn operator_complexity(&self) -> f64 {
+        let fine_nnz = self.levels.first().map(|l| l.a.nnz()).unwrap_or(self.coarse_a.nnz());
+        let total: usize =
+            self.levels.iter().map(|l| l.a.nnz()).sum::<usize>() + self.coarse_a.nnz();
+        total as f64 / fine_nnz.max(1) as f64
+    }
+
+    /// Finest-level dimension.
+    pub fn nrows(&self) -> usize {
+        self.levels.first().map(|l| l.a.nrows).unwrap_or(self.coarse_a.nrows)
+    }
+
+    /// Allocate cycle scratch for `lanes` simultaneous residual lanes.
+    pub fn scratch(&self, lanes: usize) -> CycleScratch {
+        let dims = self.level_dims();
+        CycleScratch {
+            lanes,
+            r: dims.iter().map(|&n| vec![0.0; lanes * n]).collect(),
+            z: dims.iter().map(|&n| vec![0.0; lanes * n]).collect(),
+            t: dims[..dims.len() - 1].iter().map(|&n| vec![0.0; lanes * n]).collect(),
+        }
+    }
+
+    /// One symmetric V(1,1)-cycle applied to `s_n` instance-major residual
+    /// lanes: `Z_s ← B R_s` with `B ≈ A⁻¹`. All level traversals are fused
+    /// across lanes (`spmv_multi` reads each level pattern once per batch);
+    /// per lane the arithmetic order equals a 1-lane call, so batched and
+    /// scalar applications agree bitwise lane for lane.
+    pub fn vcycle_into(&self, s_n: usize, r_in: &[f64], z_out: &mut [f64], ws: &mut CycleScratch) {
+        let nl = self.levels.len();
+        assert_eq!(ws.lanes, s_n, "scratch sized for a different lane count");
+        let n0 = self.nrows();
+        assert_eq!(r_in.len(), s_n * n0, "residual must be S × n");
+        assert_eq!(z_out.len(), s_n * n0, "output must be S × n");
+        ws.r[0].copy_from_slice(r_in);
+        // Down-sweep: pre-smooth from zero, restrict the residual.
+        for l in 0..nl {
+            let lev = &self.levels[l];
+            let n = lev.a.nrows;
+            let (rhead, rtail) = ws.r.split_at_mut(l + 1);
+            let rcur = &rhead[l];
+            let rnext = &mut rtail[0];
+            let z = &mut ws.z[l];
+            let t = &mut ws.t[l];
+            // One damped-Jacobi sweep from the zero guess: z = ω D⁻¹ r.
+            for s in 0..s_n {
+                let base = s * n;
+                for i in 0..n {
+                    z[base + i] = lev.omega * lev.inv_diag[i] * rcur[base + i];
+                }
+            }
+            // Restrict the smoothed residual: r_{l+1} = Pᵀ (r − A z).
+            lev.a.spmv_multi(z, t, s_n);
+            for (ti, &ri) in t.iter_mut().zip(rcur.iter()) {
+                *ti = ri - *ti;
+            }
+            lev.r.spmv_multi(t, rnext, s_n);
+        }
+        // Coarsest solve (direct LU per lane; Jacobi-sweep fallback when
+        // the coarse operator failed to factorize).
+        {
+            let n_c = self.coarse_a.nrows;
+            let rc = &ws.r[nl];
+            let zc = &mut ws.z[nl];
+            match &self.lu {
+                Some(lu) => {
+                    for s in 0..s_n {
+                        let lane = s * n_c..(s + 1) * n_c;
+                        lu.solve_into(&rc[lane.clone()], &mut zc[lane]);
+                    }
+                }
+                None => {
+                    for s in 0..s_n {
+                        let base = s * n_c;
+                        for i in 0..n_c {
+                            zc[base + i] = self.coarse_inv_diag[i] * rc[base + i];
+                        }
+                    }
+                }
+            }
+        }
+        // Up-sweep: prolong the correction, post-smooth.
+        for l in (0..nl).rev() {
+            let lev = &self.levels[l];
+            let n = lev.a.nrows;
+            let (zhead, ztail) = ws.z.split_at_mut(l + 1);
+            let z = &mut zhead[l];
+            let znext = &ztail[0];
+            let t = &mut ws.t[l];
+            let rcur = &ws.r[l];
+            lev.p.spmv_multi(znext, t, s_n);
+            for (zi, &ti) in z.iter_mut().zip(t.iter()) {
+                *zi += ti;
+            }
+            // Post-smooth: z += ω D⁻¹ (r − A z) — symmetric with the
+            // pre-sweep, keeping the cycle SPD for CG.
+            lev.a.spmv_multi(z, t, s_n);
+            for s in 0..s_n {
+                let base = s * n;
+                for i in 0..n {
+                    z[base + i] += lev.omega * lev.inv_diag[i] * (rcur[base + i] - t[base + i]);
+                }
+            }
+        }
+        z_out.copy_from_slice(&ws.z[0]);
+    }
+}
+
+/// Reusable V-cycle workspace (per-level residual/correction/temp buffers
+/// for a fixed lane count) — grow-once per configuration, so repeated
+/// applications allocate nothing.
+#[derive(Clone, Debug)]
+pub struct CycleScratch {
+    lanes: usize,
+    r: Vec<Vec<f64>>,
+    z: Vec<Vec<f64>>,
+    t: Vec<Vec<f64>>,
+}
+
+impl CycleScratch {
+    /// An unsized scratch — [`CycleScratch::ensure`] shapes it on first
+    /// use. Long-lived owners ([`super::PrecondEngine`]) start here so one
+    /// slot serves every later solve without per-call allocation.
+    pub fn empty() -> CycleScratch {
+        CycleScratch {
+            lanes: 0,
+            r: Vec::new(),
+            z: Vec::new(),
+            t: Vec::new(),
+        }
+    }
+
+    /// Resize for a hierarchy + lane count; a no-op when already shaped
+    /// (the steady state of every repeated-solve driver).
+    pub fn ensure(&mut self, h: &AmgHierarchy, lanes: usize) {
+        let dims = h.level_dims();
+        let ok = self.lanes == lanes
+            && self.r.len() == dims.len()
+            && self.r.iter().zip(&dims).all(|(b, &n)| b.len() == lanes * n);
+        if !ok {
+            *self = h.scratch(lanes);
+        }
+    }
+}
+
+/// Scratch storage of the V-cycle wrappers: owned (one-shot constructions)
+/// or borrowed from a long-lived holder like [`super::PrecondEngine`], so
+/// repeated solves reuse one allocation.
+enum ScratchSlot<'a> {
+    Owned(RefCell<CycleScratch>),
+    Shared(&'a RefCell<CycleScratch>),
+}
+
+impl ScratchSlot<'_> {
+    fn cell(&self) -> &RefCell<CycleScratch> {
+        match self {
+            ScratchSlot::Owned(c) => c,
+            ScratchSlot::Shared(c) => c,
+        }
+    }
+}
+
+/// Scalar V-cycle preconditioner over a borrowed hierarchy — plugs into
+/// [`super::cg`]/[`super::cg_warm`]/[`super::bicgstab`] through the
+/// [`Preconditioner`] trait exactly like [`super::JacobiPrecond`].
+pub struct AmgPrecond<'h> {
+    h: &'h AmgHierarchy,
+    scratch: ScratchSlot<'h>,
+}
+
+impl<'h> AmgPrecond<'h> {
+    pub fn new(h: &'h AmgHierarchy) -> AmgPrecond<'h> {
+        AmgPrecond {
+            h,
+            scratch: ScratchSlot::Owned(RefCell::new(h.scratch(1))),
+        }
+    }
+
+    /// Borrow a caller-held scratch instead of allocating one — the
+    /// engine-owned slot that makes repeated AMG solves allocation-free.
+    pub fn with_scratch(
+        h: &'h AmgHierarchy,
+        scratch: &'h RefCell<CycleScratch>,
+    ) -> AmgPrecond<'h> {
+        AmgPrecond { h, scratch: ScratchSlot::Shared(scratch) }
+    }
+}
+
+impl Preconditioner for AmgPrecond<'_> {
+    fn apply(&self, r: &[f64], z: &mut [f64]) {
+        let mut ws = self.scratch.cell().borrow_mut();
+        ws.ensure(self.h, 1);
+        self.h.vcycle_into(1, r, z, &mut ws);
+    }
+}
+
+/// Lockstep V-cycle preconditioner: ONE hierarchy applied to `S`
+/// instance-major residual lanes per call, with every level operator read
+/// once per batch ([`Csr::spmv_multi`] inner loops). Each lane is bitwise
+/// identical to [`AmgPrecond`] on that lane.
+pub struct AmgBatch<'h> {
+    h: &'h AmgHierarchy,
+    s_n: usize,
+    scratch: ScratchSlot<'h>,
+}
+
+impl<'h> AmgBatch<'h> {
+    pub fn new(h: &'h AmgHierarchy, s_n: usize) -> AmgBatch<'h> {
+        AmgBatch {
+            h,
+            s_n,
+            scratch: ScratchSlot::Owned(RefCell::new(h.scratch(s_n))),
+        }
+    }
+
+    /// Borrow a caller-held scratch (see [`AmgPrecond::with_scratch`]).
+    pub fn with_scratch(
+        h: &'h AmgHierarchy,
+        s_n: usize,
+        scratch: &'h RefCell<CycleScratch>,
+    ) -> AmgBatch<'h> {
+        AmgBatch { h, s_n, scratch: ScratchSlot::Shared(scratch) }
+    }
+}
+
+impl super::cg_batch::LockstepPrecond for AmgBatch<'_> {
+    fn apply_batch(&self, r: &[f64], z: &mut [f64]) {
+        let mut ws = self.scratch.cell().borrow_mut();
+        ws.ensure(self.h, self.s_n);
+        self.h.vcycle_into(self.s_n, r, z, &mut ws);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{cg, cg_warm, JacobiPrecond, SolverConfig};
+    use super::*;
+    use crate::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
+    use crate::bc::{condense, DirichletBc};
+    use crate::mesh::structured::unit_square_tri;
+
+    fn poisson(n: usize, rho: Option<fn(&[f64]) -> f64>) -> (Csr, Vec<f64>) {
+        let m = unit_square_tri(n);
+        let ctx = AssemblyContext::new(&m, 1);
+        let coeff = match rho {
+            Some(f) => ctx.coeff_fn(f),
+            None => Coefficient::Const(1.0),
+        };
+        let k = ctx.assemble_matrix(&BilinearForm::Diffusion { rho: coeff });
+        let f = ctx.assemble_vector(&LinearForm::Source { f: Coefficient::Const(1.0) });
+        let sys = condense(&k, &f, &DirichletBc::homogeneous(m.boundary_nodes()));
+        (sys.k, sys.rhs)
+    }
+
+    #[test]
+    fn aggregation_covers_every_node_once() {
+        let (a, _) = poisson(10, None);
+        let (agg, n_agg) = aggregate(&a, 0.08);
+        assert!(n_agg > 0 && n_agg < a.nrows);
+        let mut seen = vec![false; n_agg];
+        for &g in &agg {
+            assert!(g < n_agg);
+            seen[g] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "empty aggregate");
+        // Deterministic: a second pass reproduces the assignment exactly.
+        let (agg2, n2) = aggregate(&a, 0.08);
+        assert_eq!(agg, agg2);
+        assert_eq!(n_agg, n2);
+    }
+
+    #[test]
+    fn hierarchy_coarsens_and_is_deterministic() {
+        let (a, _) = poisson(16, None);
+        let cfg = AmgConfig { coarse_max: 20, ..AmgConfig::default() };
+        let h1 = AmgHierarchy::build(&a, cfg);
+        assert!(h1.n_levels() >= 2, "levels: {:?}", h1.level_dims());
+        let dims = h1.level_dims();
+        assert!(dims.windows(2).all(|w| w[1] < w[0]), "dims must shrink: {dims:?}");
+        assert!(h1.operator_complexity() < 3.0, "complexity {}", h1.operator_complexity());
+        // Rebuild bitwise-equals (threaded numeric passes are deterministic).
+        let h2 = AmgHierarchy::build(&a, cfg);
+        for (l1, l2) in h1.levels.iter().zip(&h2.levels) {
+            assert_eq!(l1.a.data, l2.a.data);
+            assert_eq!(l1.p.data, l2.p.data);
+        }
+        assert_eq!(h1.coarse_a.data, h2.coarse_a.data);
+    }
+
+    #[test]
+    fn galerkin_coarse_operators_stay_spd() {
+        let (a, _) = poisson(12, Some(|p: &[f64]| 1.0 + 3.0 * p[0] * p[1]));
+        let h = AmgHierarchy::build(&a, AmgConfig { coarse_max: 10, ..AmgConfig::default() });
+        let mut ops: Vec<&Csr> = h.levels.iter().map(|l| &l.a).collect();
+        ops.push(&h.coarse_a);
+        for (l, op) in ops.iter().enumerate() {
+            // Symmetry (up to roundoff of the two summation orders).
+            for i in 0..op.nrows {
+                let (cols, vals) = op.row(i);
+                for (&j, &v) in cols.iter().zip(vals) {
+                    let vt = op.get(j, i).unwrap_or(0.0);
+                    assert!(
+                        (v - vt).abs() <= 1e-12 * v.abs().max(1.0),
+                        "level {l}: asymmetry at ({i},{j}): {v} vs {vt}"
+                    );
+                }
+            }
+            // Positive definiteness on a few deterministic probes.
+            for probe in 0..3u64 {
+                let x: Vec<f64> = (0..op.nrows)
+                    .map(|i| 0.1 + ((i as u64 * 2654435761 + probe * 97) % 1000) as f64 / 1000.0)
+                    .collect();
+                let ax = op.dot(&x);
+                let xax: f64 = x.iter().zip(&ax).map(|(a, b)| a * b).sum();
+                assert!(xax > 0.0, "level {l}: xᵀAx = {xax}");
+            }
+        }
+    }
+
+    #[test]
+    fn refill_bitwise_matches_rebuild() {
+        let (a, _) = poisson(12, None);
+        // Scaled values keep every strength decision identical, so rebuild
+        // and refill share the aggregation — they must agree bitwise.
+        let mut a2 = a.clone();
+        a2.scale(3.5);
+        let cfg = AmgConfig { coarse_max: 15, ..AmgConfig::default() };
+        let mut h = AmgHierarchy::build(&a, cfg);
+        let fresh = AmgHierarchy::build(&a2, cfg);
+        h.refill(&a2.data);
+        for (lr, lf) in h.levels.iter().zip(&fresh.levels) {
+            assert_eq!(lr.a.data, lf.a.data, "refilled level operator");
+            assert_eq!(lr.p.data, lf.p.data, "refilled prolongation");
+            assert_eq!(lr.omega, lf.omega, "refilled damping");
+        }
+        assert_eq!(h.coarse_a.data, fresh.coarse_a.data);
+        // And the applications agree bitwise too.
+        let n = a.nrows;
+        let r: Vec<f64> = (0..n).map(|i| ((i * 37 + 11) % 17) as f64 - 8.0).collect();
+        let (mut z1, mut z2) = (vec![0.0; n], vec![0.0; n]);
+        AmgPrecond::new(&h).apply(&r, &mut z1);
+        AmgPrecond::new(&fresh).apply(&r, &mut z2);
+        assert_eq!(z1, z2);
+    }
+
+    #[test]
+    fn vcycle_application_is_repeatable() {
+        let (a, _) = poisson(10, None);
+        let h = AmgHierarchy::build(&a, AmgConfig::default());
+        let pc = AmgPrecond::new(&h);
+        let n = a.nrows;
+        let r: Vec<f64> = (0..n).map(|i| (i % 5) as f64 - 2.0).collect();
+        let (mut z1, mut z2) = (vec![0.0; n], vec![0.0; n]);
+        pc.apply(&r, &mut z1);
+        pc.apply(&r, &mut z2);
+        assert_eq!(z1, z2, "scratch reuse must not perturb the cycle");
+    }
+
+    #[test]
+    fn amg_pcg_converges_and_beats_jacobi_iterations() {
+        let (a, b) = poisson(24, None);
+        let cfg = SolverConfig::default();
+        let h = AmgHierarchy::build(&a, AmgConfig::default());
+        let amg = AmgPrecond::new(&h);
+        let (x_amg, st_amg) = cg(&a, &b, &amg, &cfg);
+        assert!(st_amg.converged, "{st_amg:?}");
+        let jac = JacobiPrecond::new(&a);
+        let (x_jac, st_jac) = cg(&a, &b, &jac, &cfg);
+        assert!(st_jac.converged);
+        assert!(
+            st_amg.iterations < st_jac.iterations,
+            "AMG {} vs Jacobi {}",
+            st_amg.iterations,
+            st_jac.iterations
+        );
+        assert!(crate::util::rel_l2(&x_amg, &x_jac) < 1e-8);
+    }
+
+    #[test]
+    fn tiny_operator_degenerates_to_direct_solve() {
+        // At or below coarse_max the hierarchy is a pure dense solve: the
+        // preconditioner is (numerically) A⁻¹ and CG converges immediately.
+        let (a, b) = poisson(4, None);
+        let h = AmgHierarchy::build(&a, AmgConfig::default());
+        assert_eq!(h.n_levels(), 1);
+        let pc = AmgPrecond::new(&h);
+        let (x, st) = cg_warm(&a, &b, None, &pc, &SolverConfig::default());
+        assert!(st.converged);
+        assert!(st.iterations <= 2, "direct-solve preconditioner: {st:?}");
+        let jac = JacobiPrecond::new(&a);
+        let (x_ref, _) = cg(&a, &b, &jac, &SolverConfig::default());
+        assert!(crate::util::rel_l2(&x, &x_ref) < 1e-8);
+    }
+}

@@ -8,7 +8,10 @@
 //! Krylov iteration costs ONE fused pattern pass
 //! ([`CsrBatch::spmv_batch`] / [`Csr::spmv_multi`]) driving all instances —
 //! the solve-side analogue of the fused `S × E` Batch-Map on the assembly
-//! side.
+//! side. Preconditioning is fused the same way: one
+//! [`LockstepPrecond::apply_batch`] call per iteration covers every lane
+//! (per-lane Jacobi scaling, or one AMG V-cycle walking each hierarchy
+//! level once for the whole batch — [`super::AmgBatch`]).
 //!
 //! Each instance keeps its own `alpha`/`beta`/residual scalars and a
 //! convergence mask: converged (or broken-down) instances stop updating
@@ -17,14 +20,15 @@
 //! instance, every arithmetic operation happens in exactly the scalar-CG
 //! order (same SpMV row accumulation, same BLAS-1 reduction order, same
 //! Jacobi guard), so a lane's trajectory — iterates, iteration count,
-//! residuals — is bitwise identical to a scalar Jacobi-preconditioned
-//! [`super::cg`] run on that instance.
+//! residuals — is bitwise identical to a scalar [`super::cg`] run on that
+//! instance with the matching scalar preconditioner.
 
 use crate::sparse::{Csr, CsrBatch};
 use crate::util::{axpy, dot, norm2};
 
+use super::amg::{AmgBatch, AmgHierarchy};
 use super::precond::jacobi_inverse;
-use super::{SolveStats, SolverConfig};
+use super::{PrecondKind, SolveStats, SolverConfig};
 
 /// `S` SPD operators sharing one sparsity pattern: either `S` distinct
 /// value arrays ([`CsrBatch`]) or one matrix driving `S` right-hand sides
@@ -43,6 +47,55 @@ pub trait LockstepOp {
     fn diag_shared(&self) -> bool {
         false
     }
+    /// A representative instance of the operator family — what a
+    /// config-driven AMG hierarchy is built from when the caller did not
+    /// supply one (instance 0; long-lived drivers cache their own
+    /// hierarchy and call [`cg_batch_warm_with`] instead).
+    fn representative(&self) -> Csr;
+}
+
+/// Lockstep preconditioner application: `Z_s = M⁻¹ R_s` for every lane of
+/// an instance-major `S × n` residual block, in one fused call per Krylov
+/// iteration. Implementations must keep each lane's arithmetic identical
+/// to the matching scalar [`super::Preconditioner`] so lane trajectories
+/// stay bitwise-equal to scalar runs.
+pub trait LockstepPrecond {
+    fn apply_batch(&self, r: &[f64], z: &mut [f64]);
+}
+
+/// Per-lane Jacobi scaling — the lockstep counterpart of
+/// [`super::JacobiPrecond`], holding one inverse diagonal per distinct
+/// operator (a single shared one for [`MultiRhs`]).
+pub struct JacobiBatch {
+    inv: Vec<Vec<f64>>,
+    n: usize,
+}
+
+impl JacobiBatch {
+    /// Extract the inverse diagonals from a lockstep operator (one per
+    /// instance, or one shared when [`LockstepOp::diag_shared`]).
+    pub fn from_op<Op: LockstepOp + ?Sized>(a: &Op) -> JacobiBatch {
+        let inv: Vec<Vec<f64>> = if a.diag_shared() {
+            vec![a.inv_diag(0)]
+        } else {
+            (0..a.n_instances()).map(|s| a.inv_diag(s)).collect()
+        };
+        JacobiBatch { inv, n: a.nrows() }
+    }
+}
+
+impl LockstepPrecond for JacobiBatch {
+    fn apply_batch(&self, r: &[f64], z: &mut [f64]) {
+        let n = self.n;
+        let s_n = r.len() / n;
+        for s in 0..s_n {
+            let invs = &self.inv[s % self.inv.len()];
+            let base = s * n;
+            for i in 0..n {
+                z[base + i] = r[base + i] * invs[i];
+            }
+        }
+    }
 }
 
 impl LockstepOp for CsrBatch {
@@ -60,6 +113,10 @@ impl LockstepOp for CsrBatch {
 
     fn inv_diag(&self, s: usize) -> Vec<f64> {
         jacobi_inverse(self.diagonal(s))
+    }
+
+    fn representative(&self) -> Csr {
+        self.instance(0)
     }
 }
 
@@ -108,13 +165,17 @@ impl LockstepOp for MultiRhs<'_> {
     fn diag_shared(&self) -> bool {
         true
     }
+
+    fn representative(&self) -> Csr {
+        self.a.clone()
+    }
 }
 
-/// Solve `A_s x_s = b_s` for all instances in lockstep (Jacobi-
-/// preconditioned CG, zero initial guess). `b` is instance-major
-/// (`S × n`); returns the instance-major solutions and per-instance stats.
-/// Lane `s` is bitwise identical to
-/// `cg(&a_s, &b_s, &JacobiPrecond::new(&a_s), config)`.
+/// Solve `A_s x_s = b_s` for all instances in lockstep (zero initial
+/// guess), with the preconditioner selected by `config.precond`. `b` is
+/// instance-major (`S × n`); returns the instance-major solutions and
+/// per-instance stats. With the default config, lane `s` is bitwise
+/// identical to `cg(&a_s, &b_s, &JacobiPrecond::new(&a_s), config)`.
 pub fn cg_batch<Op: LockstepOp>(
     a: &Op,
     b: &[f64],
@@ -125,27 +186,45 @@ pub fn cg_batch<Op: LockstepOp>(
 
 /// Lockstep CG from an optional instance-major initial guess `x0`
 /// (`S × n`). Lane `s` is bitwise identical to
-/// `cg_warm(&a_s, &b_s, x0_s, &JacobiPrecond::new(&a_s), config)` — the
-/// warm residual is formed by the same fused SpMV the iterations use, and
-/// `x0 = None` preserves the exact cold-start trajectory of [`cg_batch`]
-/// (initial residual taken as `b`, no SpMV against the zero guess).
+/// `cg_warm(&a_s, &b_s, x0_s, …, config)` with the matching scalar
+/// preconditioner — the warm residual is formed by the same fused SpMV the
+/// iterations use, and `x0 = None` preserves the exact cold-start
+/// trajectory of [`cg_batch`] (initial residual taken as `b`, no SpMV
+/// against the zero guess).
+///
+/// When `config.precond` requests AMG, a hierarchy is built here from the
+/// op's representative instance and applied to every lane — a one-shot
+/// convenience; repeated solves hold their own [`AmgHierarchy`] and call
+/// [`cg_batch_warm_with`] so the hierarchy is refilled, never rebuilt.
 pub fn cg_batch_warm<Op: LockstepOp>(
     a: &Op,
     b: &[f64],
     x0: Option<&[f64]>,
     config: &SolverConfig,
 ) -> (Vec<f64>, Vec<SolveStats>) {
+    match config.precond {
+        PrecondKind::Jacobi => cg_batch_warm_with(a, b, x0, &JacobiBatch::from_op(a), config),
+        PrecondKind::Amg(acfg) => {
+            let h = AmgHierarchy::build(&a.representative(), acfg);
+            cg_batch_warm_with(a, b, x0, &AmgBatch::new(&h, a.n_instances()), config)
+        }
+    }
+}
+
+/// Lockstep PCG with an explicit lockstep preconditioner — the entry point
+/// long-lived drivers use with a cached [`JacobiBatch`] or
+/// [`super::AmgBatch`]. Per iteration: ONE fused operator application and
+/// ONE fused preconditioner application for the whole batch.
+pub fn cg_batch_warm_with<Op: LockstepOp, P: LockstepPrecond>(
+    a: &Op,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    precond: &P,
+    config: &SolverConfig,
+) -> (Vec<f64>, Vec<SolveStats>) {
     let n = a.nrows();
     let s_n = a.n_instances();
     assert_eq!(b.len(), s_n * n, "rhs must be S × n instance-major");
-    // One inverse diagonal per distinct operator: shared-matrix batches
-    // ([`MultiRhs`]) build the Jacobi preconditioner once, not S times.
-    // `inv[s % inv.len()]` below picks the lane's diagonal in either case.
-    let inv: Vec<Vec<f64>> = if a.diag_shared() {
-        vec![a.inv_diag(0)]
-    } else {
-        (0..s_n).map(|s| a.inv_diag(s)).collect()
-    };
 
     let mut x = match x0 {
         Some(x0) => {
@@ -178,11 +257,11 @@ pub fn cg_batch_warm<Op: LockstepOp>(
         s_n
     ];
 
-    // Per-lane setup, mirroring scalar CG exactly.
+    // Per-lane norms + immediate-convergence checks, mirroring scalar CG.
     for s in 0..s_n {
         let lane = s * n..(s + 1) * n;
         nb[s] = norm2(&b[lane.clone()]).max(1e-300);
-        let rn0 = norm2(&r[lane.clone()]);
+        let rn0 = norm2(&r[lane]);
         if rn0 <= config.abs_tol {
             active[s] = false;
             stats[s] = SolveStats {
@@ -190,12 +269,17 @@ pub fn cg_batch_warm<Op: LockstepOp>(
                 rel_residual: rn0 / nb[s],
                 converged: true,
             };
+        }
+    }
+    // One fused preconditioner application covers every lane (inactive
+    // lanes ride along; their z is never read). Per lane the values equal
+    // the scalar preconditioner's.
+    precond.apply_batch(&r, &mut z);
+    for s in 0..s_n {
+        if !active[s] {
             continue;
         }
-        let invs = &inv[s % inv.len()];
-        for i in lane.clone() {
-            z[i] = r[i] * invs[i - s * n];
-        }
+        let lane = s * n..(s + 1) * n;
         p[lane.clone()].copy_from_slice(&z[lane.clone()]);
         rz[s] = dot(&r[lane.clone()], &z[lane]);
     }
@@ -237,12 +321,19 @@ pub fn cg_batch_warm<Op: LockstepOp>(
                     rel_residual: rn / nb[s],
                     converged: true,
                 };
+            }
+        }
+        if !active.iter().any(|&a| a) {
+            break;
+        }
+        // Fused preconditioner application on the updated residuals; the
+        // per-lane direction update then mirrors scalar CG exactly.
+        precond.apply_batch(&r, &mut z);
+        for s in 0..s_n {
+            if !active[s] {
                 continue;
             }
-            let invs = &inv[s % inv.len()];
-            for i in lane.clone() {
-                z[i] = r[i] * invs[i - s * n];
-            }
+            let lane = s * n..(s + 1) * n;
             let rz_new = dot(&r[lane.clone()], &z[lane.clone()]);
             let beta = rz_new / rz[s];
             rz[s] = rz_new;
@@ -372,6 +463,20 @@ mod tests {
     }
 
     #[test]
+    fn explicit_jacobi_batch_matches_config_default() {
+        let a = spd_batch();
+        let b = vec![1.0, 2.0, 3.0, -1.0, 0.5, 2.0];
+        let cfg = SolverConfig::default();
+        let (x_cfg, st_cfg) = cg_batch(&a, &b, &cfg);
+        let pc = JacobiBatch::from_op(&a);
+        let (x_pc, st_pc) = cg_batch_warm_with(&a, &b, None, &pc, &cfg);
+        assert_eq!(x_cfg, x_pc);
+        for (a, b) in st_cfg.iter().zip(&st_pc) {
+            assert_eq!(a.iterations, b.iterations);
+        }
+    }
+
+    #[test]
     fn unconverged_lanes_report_max_iter() {
         let a = spd_batch();
         let b = vec![1.0, 2.0, 3.0, -1.0, 0.5, 2.0];
@@ -379,6 +484,7 @@ mod tests {
             max_iter: 1,
             rel_tol: 1e-16,
             abs_tol: 0.0,
+            ..SolverConfig::default()
         };
         let (_, stats) = cg_batch(&a, &b, &cfg);
         for st in &stats {

@@ -1,6 +1,15 @@
-//! Preconditioners.
+//! Preconditioners: the scalar [`Preconditioner`] trait, its Jacobi/
+//! identity implementations, and the [`PrecondEngine`] that long-lived
+//! drivers (integrators, the coordinator, topology optimization) hold to
+//! dispatch between Jacobi and AMG across scalar AND lockstep solves.
+
+use std::cell::RefCell;
 
 use crate::sparse::Csr;
+
+use super::amg::{AmgBatch, AmgHierarchy, AmgPrecond, CycleScratch};
+use super::cg_batch::{cg_batch_warm_with, JacobiBatch, LockstepOp};
+use super::{PrecondKind, SolveStats, SolverConfig};
 
 /// Application of `M⁻¹` to a vector.
 pub trait Preconditioner {
@@ -48,6 +57,102 @@ impl Preconditioner for JacobiPrecond {
     }
 }
 
+/// A built preconditioner of either kind, owned by a long-lived driver and
+/// reused across every solve against one operator family. The Jacobi arm
+/// reproduces the historical per-solve `JacobiPrecond::new` numbers
+/// bitwise; the AMG arm holds an [`AmgHierarchy`] whose aggregation and
+/// symbolic triple-product plans survive [`PrecondEngine::refill`] — only
+/// values flow on re-assembly.
+pub enum PrecondEngine {
+    Jacobi(JacobiPrecond),
+    /// The hierarchy plus an engine-owned V-cycle scratch: every solve
+    /// through this engine — scalar or lockstep, any lane count — reuses
+    /// the one workspace ([`CycleScratch::ensure`] reshapes it only when
+    /// the configuration changes), so repeated AMG solves allocate
+    /// nothing per call.
+    Amg(AmgHierarchy, RefCell<CycleScratch>),
+}
+
+impl PrecondEngine {
+    /// Build for an operator according to the configured kind.
+    pub fn build(a: &Csr, kind: PrecondKind) -> PrecondEngine {
+        match kind {
+            PrecondKind::Jacobi => PrecondEngine::Jacobi(JacobiPrecond::new(a)),
+            PrecondKind::Amg(cfg) => {
+                PrecondEngine::Amg(AmgHierarchy::build(a, cfg), RefCell::new(CycleScratch::empty()))
+            }
+        }
+    }
+
+    /// Renumerate for new values on the same pattern: Jacobi re-extracts
+    /// the diagonal (bitwise-equal to a fresh build); AMG refills the
+    /// hierarchy in place through its cached plans.
+    pub fn refill(&mut self, a: &Csr) {
+        match self {
+            PrecondEngine::Jacobi(pc) => *pc = JacobiPrecond::new(a),
+            PrecondEngine::Amg(h, _) => h.refill(&a.data),
+        }
+    }
+
+    /// The stored Jacobi inverse diagonal, when this engine is Jacobi —
+    /// lets lockstep drivers keep the setup-time
+    /// [`super::MultiRhs::with_inv_diag`] fast path.
+    pub fn inv_diag(&self) -> Option<&[f64]> {
+        match self {
+            PrecondEngine::Jacobi(pc) => Some(pc.inv_diag()),
+            PrecondEngine::Amg(..) => None,
+        }
+    }
+
+    /// Scalar PCG through this engine (see [`super::cg_warm`]).
+    pub fn cg_warm(
+        &self,
+        a: &Csr,
+        b: &[f64],
+        x0: Option<&[f64]>,
+        config: &SolverConfig,
+    ) -> (Vec<f64>, SolveStats) {
+        match self {
+            PrecondEngine::Jacobi(pc) => super::cg_warm(a, b, x0, pc, config),
+            PrecondEngine::Amg(h, ws) => {
+                super::cg_warm(a, b, x0, &AmgPrecond::with_scratch(h, ws), config)
+            }
+        }
+    }
+
+    /// Scalar BiCGSTAB through this engine.
+    pub fn bicgstab(&self, a: &Csr, b: &[f64], config: &SolverConfig) -> (Vec<f64>, SolveStats) {
+        match self {
+            PrecondEngine::Jacobi(pc) => super::bicgstab(a, b, pc, config),
+            PrecondEngine::Amg(h, ws) => {
+                super::bicgstab(a, b, &AmgPrecond::with_scratch(h, ws), config)
+            }
+        }
+    }
+
+    /// Lockstep PCG through this engine: Jacobi lanes use the op's own
+    /// inverse diagonals (bitwise-equal to [`super::cg_batch_warm`] with
+    /// the default config); the AMG arm applies ONE hierarchy to all lanes
+    /// per iteration ([`AmgBatch`]).
+    pub fn cg_batch_warm<Op: LockstepOp>(
+        &self,
+        a: &Op,
+        b: &[f64],
+        x0: Option<&[f64]>,
+        config: &SolverConfig,
+    ) -> (Vec<f64>, Vec<SolveStats>) {
+        match self {
+            PrecondEngine::Jacobi(_) => {
+                cg_batch_warm_with(a, b, x0, &JacobiBatch::from_op(a), config)
+            }
+            PrecondEngine::Amg(h, ws) => {
+                let pc = AmgBatch::with_scratch(h, a.n_instances(), ws);
+                cg_batch_warm_with(a, b, x0, &pc, config)
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +179,20 @@ mod tests {
         let mut z = vec![0.0; 2];
         p.apply(&[3.0, -1.0], &mut z);
         assert_eq!(z, vec![3.0, -1.0]);
+    }
+
+    #[test]
+    fn engine_refill_tracks_new_values() {
+        let mut a = Csr::eye(3);
+        let mut eng = PrecondEngine::build(&a, PrecondKind::Jacobi);
+        a.data = vec![2.0, 4.0, 8.0];
+        eng.refill(&a);
+        match &eng {
+            PrecondEngine::Jacobi(pc) => assert_eq!(pc.inv_diag(), &[0.5, 0.25, 0.125]),
+            PrecondEngine::Amg(..) => unreachable!("built as Jacobi"),
+        }
+        assert!(eng.inv_diag().is_some());
+        let amg = PrecondEngine::build(&a, PrecondKind::amg());
+        assert!(amg.inv_diag().is_none());
     }
 }

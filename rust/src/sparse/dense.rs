@@ -53,17 +53,30 @@ impl Dense {
         y
     }
 
-    /// Solve `A x = b` by LU with partial pivoting (A square).
+    /// Solve `A x = b` by LU with partial pivoting (A square). One-shot
+    /// convenience around [`Dense::factor`] — repeated solves against one
+    /// matrix (e.g. the AMG coarse level, solved once per V-cycle) hold the
+    /// [`LuFactor`] instead of re-eliminating every call.
     pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
-        if self.nrows != self.ncols {
-            bail!("solve: matrix not square");
-        }
         if b.len() != self.nrows {
             bail!("solve: rhs length mismatch");
         }
+        let lu = self.factor()?;
+        let mut out = vec![0.0; self.nrows];
+        lu.solve_into(b, &mut out);
+        Ok(out)
+    }
+
+    /// LU-factorize with partial pivoting. The elimination is exactly the
+    /// one [`Dense::solve`] historically interleaved with its forward
+    /// substitution, so `factor().solve_into(b)` is bitwise identical to
+    /// the one-shot solve.
+    pub fn factor(&self) -> Result<LuFactor> {
+        if self.nrows != self.ncols {
+            bail!("factor: matrix not square");
+        }
         let n = self.nrows;
         let mut a = self.data.clone();
-        let mut x = b.to_vec();
         let mut piv: Vec<usize> = (0..n).collect();
         for col in 0..n {
             // Partial pivot.
@@ -77,7 +90,7 @@ impl Dense {
                 }
             }
             if vmax < 1e-300 {
-                bail!("solve: singular matrix at column {col}");
+                bail!("factor: singular matrix at column {col}");
             }
             piv.swap(col, pmax);
             let prow = piv[col];
@@ -90,21 +103,58 @@ impl Dense {
                     for c in (col + 1)..n {
                         a[row * n + c] -= factor * a[prow * n + c];
                     }
-                    x[row] -= factor * x[prow];
                 }
             }
         }
-        // Back substitution.
-        let mut out = vec![0.0; n];
-        for i in (0..n).rev() {
-            let row = piv[i];
-            let mut s = x[row];
-            for c in (i + 1)..n {
-                s -= a[row * n + c] * out[c];
+        Ok(LuFactor { n, lu: a, piv })
+    }
+}
+
+/// A reusable LU factorization of a small dense matrix (partial pivoting,
+/// factors stored in the original row layout with a pivot permutation).
+/// The coarsest AMG level holds one of these and back-solves it once per
+/// V-cycle instead of re-factorizing.
+#[derive(Clone, Debug)]
+pub struct LuFactor {
+    n: usize,
+    /// Combined L (strict lower, unit diagonal implicit) and U factors in
+    /// original row positions; `piv[i]` is the storage row of logical row i.
+    lu: Vec<f64>,
+    piv: Vec<usize>,
+}
+
+impl LuFactor {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Solve `A x = b` from the stored factors into a caller-owned buffer.
+    /// Forward elimination runs in the exact (col, row) order of the
+    /// factorization loop, so results are bitwise identical to the
+    /// historical interleaved [`Dense::solve`].
+    pub fn solve_into(&self, b: &[f64], x: &mut [f64]) {
+        let n = self.n;
+        assert_eq!(b.len(), n, "rhs length");
+        assert_eq!(x.len(), n, "solution length");
+        let mut y = b.to_vec();
+        for col in 0..n {
+            let prow = self.piv[col];
+            for r in (col + 1)..n {
+                let row = self.piv[r];
+                let factor = self.lu[row * n + col];
+                if factor != 0.0 {
+                    y[row] -= factor * y[prow];
+                }
             }
-            out[i] = s / a[row * n + i];
         }
-        Ok(out)
+        for i in (0..n).rev() {
+            let row = self.piv[i];
+            let mut s = y[row];
+            for c in (i + 1)..n {
+                s -= self.lu[row * n + c] * x[c];
+            }
+            x[i] = s / self.lu[row * n + i];
+        }
     }
 }
 
@@ -154,5 +204,27 @@ mod tests {
     fn singular_matrix_rejected() {
         let a = Dense::from_rows(&[&[1.0, 2.0], &[2.0, 4.0]]);
         assert!(a.solve(&[1.0, 2.0]).is_err());
+        assert!(a.factor().is_err());
+    }
+
+    #[test]
+    fn factored_solve_matches_one_shot_bitwise() {
+        let mut rng = Rng::new(23);
+        let n = 9;
+        let mut a = Dense::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a.set(i, j, rng.normal());
+            }
+            let d = a.get(i, i);
+            a.set(i, i, d + n as f64 + 1.0);
+        }
+        let lu = a.factor().unwrap();
+        let mut x = vec![0.0; n];
+        for trial in 0..3 {
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            lu.solve_into(&b, &mut x);
+            assert_eq!(x, a.solve(&b).unwrap(), "trial {trial}");
+        }
     }
 }

@@ -12,4 +12,4 @@ pub mod dense;
 pub use batch::CsrBatch;
 pub use coo::Coo;
 pub use csr::Csr;
-pub use dense::Dense;
+pub use dense::{Dense, LuFactor};

@@ -10,7 +10,7 @@
 use crate::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
 use crate::bc::{condense, DirichletBc};
 use crate::mesh::Mesh;
-use crate::solver::{bicgstab, cg_batch, JacobiPrecond, MultiRhs, SolverConfig};
+use crate::solver::{MultiRhs, PrecondEngine, PrecondKind, SolverConfig};
 use crate::sparse::Csr;
 
 /// Precomputed Allen-Cahn stepping state.
@@ -24,14 +24,32 @@ pub struct AllenCahnIntegrator {
     pub dt: f64,
     pub eps2: f64,
     n_full: usize,
-    precond: JacobiPrecond,
+    /// Implicit-solve preconditioner over `M/Δt + a²K`, built once (the
+    /// system matrix never changes across a rollout — one AMG hierarchy
+    /// serves every step of every lane).
+    engine: PrecondEngine,
     config: SolverConfig,
 }
 
 impl AllenCahnIntegrator {
     /// `a2` is the diffusion coefficient `a²`, `eps2` the reaction strength
-    /// `ε²` of Eq. (B.18).
+    /// `ε²` of Eq. (B.18). Jacobi-preconditioned (the paper's Table B.1
+    /// configuration, bitwise-preserved); for diffusion-dominated regimes
+    /// (`a²·Δt` large relative to `h²`) use
+    /// [`AllenCahnIntegrator::with_precond`] with [`PrecondKind::Amg`].
     pub fn new(mesh: &Mesh, a2: f64, eps2: f64, dt: f64) -> AllenCahnIntegrator {
+        AllenCahnIntegrator::with_precond(mesh, a2, eps2, dt, PrecondKind::Jacobi)
+    }
+
+    /// [`AllenCahnIntegrator::new`] with an explicit preconditioner for
+    /// the implicit solves.
+    pub fn with_precond(
+        mesh: &Mesh,
+        a2: f64,
+        eps2: f64,
+        dt: f64,
+        precond: PrecondKind,
+    ) -> AllenCahnIntegrator {
         let ctx = AssemblyContext::new(mesh, 1);
         // K and M share the topology: one fused batched Map-Reduce
         // produces both value arrays in a single tile pass.
@@ -52,7 +70,7 @@ impl AllenCahnIntegrator {
         let zero = vec![0.0; ctx.n_dofs()];
         let sys_a = condense(&a_full, &zero, &bc);
         let sys_m = condense(&m_full, &zero, &bc);
-        let precond = JacobiPrecond::new(&sys_a.k);
+        let engine = PrecondEngine::build(&sys_a.k, precond);
         AllenCahnIntegrator {
             a_mat: sys_a.k,
             m: sys_m.k,
@@ -60,8 +78,11 @@ impl AllenCahnIntegrator {
             dt,
             eps2,
             n_full: ctx.n_dofs(),
-            precond,
-            config: SolverConfig::default(),
+            engine,
+            config: SolverConfig {
+                precond,
+                ..SolverConfig::default()
+            },
             ctx,
         }
     }
@@ -123,7 +144,7 @@ impl AllenCahnIntegrator {
             .zip(&reaction)
             .map(|(&m, &r)| m / self.dt + r)
             .collect();
-        let (next, stats) = bicgstab(&self.a_mat, &rhs, &self.precond, &self.config);
+        let (next, stats) = self.engine.bicgstab(&self.a_mat, &rhs, &self.config);
         debug_assert!(stats.converged, "{stats:?}");
         next
     }
@@ -162,9 +183,12 @@ impl AllenCahnIntegrator {
         for (s, traj) in trajs.iter_mut().enumerate() {
             traj.push(u[s * nf..(s + 1) * nf].to_vec());
         }
-        // Reuse the constructor-time Jacobi diagonal; the system matrix
+        // Reuse the constructor-time preconditioner; the system matrix
         // never changes across the rollout.
-        let op = MultiRhs::with_inv_diag(&self.a_mat, s_n, self.precond.inv_diag().to_vec());
+        let op = match self.engine.inv_diag() {
+            Some(inv) => MultiRhs::with_inv_diag(&self.a_mat, s_n, inv.to_vec()),
+            None => MultiRhs::new(&self.a_mat, s_n),
+        };
         let mut mu = vec![0.0; s_n * nf];
         // Persistent per-rollout buffers: the fused batched reaction
         // assembly and the blocked RHS are refilled in place every step,
@@ -201,7 +225,7 @@ impl AllenCahnIntegrator {
                 let (s, j) = (i / nf, i % nf);
                 *r = mu[i] / self.dt + reactions[s * n_full + self.free[j]];
             }
-            let (next, stats) = cg_batch(&op, &rhs, &self.config);
+            let (next, stats) = self.engine.cg_batch_warm(&op, &rhs, None, &self.config);
             // Hard check: this feeds bulk reference-data generation, where
             // a silently unconverged solve would corrupt every later step.
             assert!(stats.iter().all(|st| st.converged), "implicit solve: {stats:?}");
@@ -284,6 +308,31 @@ mod tests {
                 let err = crate::util::rel_l2(a, b);
                 assert!(err < 1e-8, "ic {s} step {k}: rel err {err}");
             }
+        }
+    }
+
+    #[test]
+    fn amg_rollout_matches_jacobi_to_solver_tol() {
+        use crate::solver::PrecondKind;
+        let m = lshape_tri(6);
+        let jac = AllenCahnIntegrator::new(&m, 1e-2, 1.0, 1e-3);
+        let amg = AllenCahnIntegrator::with_precond(&m, 1e-2, 1.0, 1e-3, PrecondKind::amg());
+        let pi = std::f64::consts::PI;
+        let u0: Vec<f64> = (0..m.n_nodes())
+            .map(|i| {
+                let p = m.point(i);
+                0.6 * (pi * p[0]).sin() * (pi * p[1]).sin()
+            })
+            .collect();
+        let a = jac.rollout(&u0, 6);
+        let b = amg.rollout(&u0, 6);
+        for (k, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!(crate::util::rel_l2(x, y) < 1e-7, "step {k}");
+        }
+        let bb = amg.rollout_batch(std::slice::from_ref(&u0), 6);
+        for (k, (x, y)) in bb[0].iter().zip(&amg.rollout(&u0, 6)).enumerate() {
+            // Blocked AMG-CG vs scalar AMG-BiCGSTAB: both hit rel_tol.
+            assert!(crate::util::rel_l2(x, y) < 1e-7, "batched step {k}");
         }
     }
 

@@ -9,7 +9,7 @@
 use crate::assembly::{AssemblyContext, BilinearForm, Coefficient};
 use crate::bc::{condense, DirichletBc};
 use crate::mesh::Mesh;
-use crate::solver::{cg, cg_batch, JacobiPrecond, MultiRhs, SolverConfig};
+use crate::solver::{MultiRhs, PrecondEngine, PrecondKind, SolverConfig};
 use crate::sparse::Csr;
 
 /// Precomputed wave stepping state.
@@ -23,7 +23,8 @@ pub struct WaveIntegrator {
     pub c2: f64,
     pub dt: f64,
     n_full: usize,
-    precond: JacobiPrecond,
+    /// Mass-solve preconditioner, built once (M never changes).
+    engine: PrecondEngine,
     config: SolverConfig,
 }
 
@@ -31,8 +32,17 @@ impl WaveIntegrator {
     /// Build from a mesh: assembles `M`, `K` in one fused batched
     /// Map-Reduce (they share the topology, so one tile pass over the
     /// mesh yields both value arrays) and condenses homogeneous Dirichlet
-    /// rows/cols (the paper's setup).
+    /// rows/cols (the paper's setup). Mass solves are Jacobi-PCG — `M` is
+    /// extremely well conditioned, exactly the regime where AMG setup
+    /// cannot pay for itself (see `solver` module docs); use
+    /// [`WaveIntegrator::with_precond`] to override.
     pub fn new(mesh: &Mesh, c: f64, dt: f64) -> WaveIntegrator {
+        WaveIntegrator::with_precond(mesh, c, dt, PrecondKind::Jacobi)
+    }
+
+    /// [`WaveIntegrator::new`] with an explicit mass-solve preconditioner
+    /// (the default Jacobi reproduces the historical trajectories bitwise).
+    pub fn with_precond(mesh: &Mesh, c: f64, dt: f64, precond: PrecondKind) -> WaveIntegrator {
         let ctx = AssemblyContext::new(mesh, 1);
         let km = ctx.assemble_matrix_batch(&[
             BilinearForm::Diffusion { rho: Coefficient::Const(1.0) },
@@ -44,7 +54,7 @@ impl WaveIntegrator {
         let zero = vec![0.0; ctx.n_dofs()];
         let sys_k = condense(&k_full, &zero, &bc);
         let sys_m = condense(&m_full, &zero, &bc);
-        let precond = JacobiPrecond::new(&sys_m.k);
+        let engine = PrecondEngine::build(&sys_m.k, precond);
         WaveIntegrator {
             m: sys_m.k,
             k: sys_k.k,
@@ -52,9 +62,10 @@ impl WaveIntegrator {
             c2: c * c,
             dt,
             n_full: ctx.n_dofs(),
-            precond,
+            engine,
             config: SolverConfig {
                 rel_tol: 1e-12,
+                precond,
                 ..SolverConfig::default()
             },
         }
@@ -78,7 +89,7 @@ impl WaveIntegrator {
     /// return `U^{k+2} = 2U^{k+1} − U^k − Δt² c² M⁻¹ K U^{k+1}`.
     pub fn step(&self, u_prev: &[f64], u_curr: &[f64]) -> Vec<f64> {
         let ku = self.k.dot(u_curr);
-        let (minv_ku, stats) = cg(&self.m, &ku, &self.precond, &self.config);
+        let (minv_ku, stats) = self.engine.cg_warm(&self.m, &ku, None, &self.config);
         debug_assert!(stats.converged);
         let s = self.dt * self.dt * self.c2;
         u_curr
@@ -93,7 +104,7 @@ impl WaveIntegrator {
     /// `U^1 = U^0 + Δt V^0 − (Δt²/2) c² M⁻¹K U^0` (Taylor start).
     pub fn first_step(&self, u0: &[f64], v0: &[f64]) -> Vec<f64> {
         let ku = self.k.dot(u0);
-        let (minv_ku, _) = cg(&self.m, &ku, &self.precond, &self.config);
+        let (minv_ku, _) = self.engine.cg_warm(&self.m, &ku, None, &self.config);
         let s = 0.5 * self.dt * self.dt * self.c2;
         u0.iter()
             .zip(v0)
@@ -145,9 +156,14 @@ impl WaveIntegrator {
         // U^1 = U^0 − (Δt²/2) c² M⁻¹K U^0.
         let mut ku = vec![0.0; s_n * nf];
         self.k.spmv_multi(&u_prev, &mut ku, s_n);
-        // Reuse the constructor-time Jacobi diagonal; M never changes.
-        let op = MultiRhs::with_inv_diag(&self.m, s_n, self.precond.inv_diag().to_vec());
-        let (minv_ku, stats) = cg_batch(&op, &ku, &self.config);
+        // Reuse the constructor-time preconditioner; M never changes (the
+        // Jacobi arm ships its stored inverse diagonal into the op, the
+        // AMG arm applies the constructor-time hierarchy to all lanes).
+        let op = match self.engine.inv_diag() {
+            Some(inv) => MultiRhs::with_inv_diag(&self.m, s_n, inv.to_vec()),
+            None => MultiRhs::new(&self.m, s_n),
+        };
+        let (minv_ku, stats) = self.engine.cg_batch_warm(&op, &ku, None, &self.config);
         // Hard check: this feeds bulk reference-data generation, where a
         // silently unconverged mass solve would corrupt every later step.
         assert!(stats.iter().all(|st| st.converged), "first-step mass solve: {stats:?}");
@@ -164,7 +180,7 @@ impl WaveIntegrator {
         let scale = self.dt * self.dt * self.c2;
         for _ in 2..=steps {
             self.k.spmv_multi(&u_curr, &mut ku, s_n);
-            let (minv_ku, stats) = cg_batch(&op, &ku, &self.config);
+            let (minv_ku, stats) = self.engine.cg_batch_warm(&op, &ku, None, &self.config);
             assert!(stats.iter().all(|st| st.converged), "mass solve: {stats:?}");
             let next: Vec<f64> = u_curr
                 .iter()
@@ -272,6 +288,31 @@ mod tests {
                 let err = crate::util::rel_l2(a, b);
                 assert!(err < 1e-12, "ic {s} step {k}: rel err {err}");
             }
+        }
+    }
+
+    #[test]
+    fn amg_mass_solves_match_jacobi_to_solver_tol() {
+        use crate::solver::PrecondKind;
+        let m = unit_square_tri(8);
+        let jac = WaveIntegrator::new(&m, 2.0, 1e-3);
+        let amg = WaveIntegrator::with_precond(&m, 2.0, 1e-3, PrecondKind::amg());
+        let pi = std::f64::consts::PI;
+        let u0: Vec<f64> = (0..m.n_nodes())
+            .map(|i| {
+                let p = m.point(i);
+                (pi * p[0]).sin() * (pi * p[1]).sin()
+            })
+            .collect();
+        let a = jac.rollout(&u0, 10);
+        let b = amg.rollout(&u0, 10);
+        for (k, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!(crate::util::rel_l2(x, y) < 1e-8, "step {k}");
+        }
+        // Batched AMG rollout matches its own scalar path.
+        let bb = amg.rollout_batch(std::slice::from_ref(&u0), 10);
+        for (k, (x, y)) in bb[0].iter().zip(&b).enumerate() {
+            assert!(crate::util::rel_l2(x, y) < 1e-12, "batched step {k}");
         }
     }
 

@@ -1,0 +1,225 @@
+//! Integration tests for the smoothed-aggregation AMG preconditioner:
+//! mesh-(near-)independent PCG iteration counts on the fig2 Poisson family
+//! (2D tri + 3D tet), bitwise lane parity of the batched V-cycle against
+//! scalar AMG-PCG, hierarchy refill across coefficient changes, and the
+//! bitwise-intact default (Jacobi) lockstep path.
+
+use tensor_galerkin::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
+use tensor_galerkin::bc::{condense, condense_batch, DirichletBc};
+use tensor_galerkin::mesh::structured::{unit_cube_tet, unit_square_tri};
+use tensor_galerkin::mesh::Mesh;
+use tensor_galerkin::solver::{
+    cg, cg_batch, cg_batch_warm, cg_batch_warm_with, cg_warm, AmgBatch, AmgConfig, AmgHierarchy,
+    AmgPrecond, JacobiBatch, JacobiPrecond, SolverConfig,
+};
+use tensor_galerkin::sparse::Csr;
+
+/// Condensed unit-coefficient Poisson system on a mesh.
+fn poisson(mesh: &Mesh) -> (Csr, Vec<f64>) {
+    let ctx = AssemblyContext::new(mesh, 1);
+    let k = ctx.assemble_matrix(&BilinearForm::Diffusion { rho: Coefficient::Const(1.0) });
+    let f = ctx.assemble_vector(&LinearForm::Source { f: Coefficient::Const(1.0) });
+    let sys = condense(&k, &f, &DirichletBc::homogeneous(mesh.boundary_nodes()));
+    (sys.k, sys.rhs)
+}
+
+fn iters(a: &Csr, b: &[f64], amg: bool) -> usize {
+    let cfg = SolverConfig::default();
+    if amg {
+        let h = AmgHierarchy::build(a, AmgConfig::default());
+        let (_, st) = cg(a, b, &AmgPrecond::new(&h), &cfg);
+        assert!(st.converged, "{st:?}");
+        st.iterations
+    } else {
+        let (_, st) = cg(a, b, &JacobiPrecond::new(a), &cfg);
+        assert!(st.converged, "{st:?}");
+        st.iterations
+    }
+}
+
+/// 2D: quadrupling the DoF count (h → h/2) must leave AMG-PCG iterations
+/// near-flat (≤ 1.5×) while Jacobi-PCG grows like h⁻¹ (≈ 2×).
+#[test]
+fn amg_iterations_near_mesh_independent_2d() {
+    let (k16, f16) = poisson(&unit_square_tri(16));
+    let (k32, f32) = poisson(&unit_square_tri(32));
+    let (jac16, jac32) = (iters(&k16, &f16, false), iters(&k32, &f32, false));
+    let (amg16, amg32) = (iters(&k16, &f16, true), iters(&k32, &f32, true));
+    assert!(
+        amg32 as f64 <= 1.5 * amg16 as f64 + 1.0,
+        "AMG iteration growth: {amg16} -> {amg32}"
+    );
+    assert!(
+        jac32 as f64 >= 1.5 * jac16 as f64,
+        "Jacobi should grow ~2x on h/2: {jac16} -> {jac32}"
+    );
+    assert!(amg32 < jac32, "AMG {amg32} vs Jacobi {jac32} at the fine size");
+}
+
+/// 3D tet family: AMG growth stays below Jacobi growth, and AMG wins
+/// outright at the finer size.
+#[test]
+fn amg_iterations_near_mesh_independent_3d() {
+    // Both sizes sit above the hierarchy's direct-solve threshold
+    // (`coarse_max`), so real multilevel cycles run at both.
+    let (k8, f8) = poisson(&unit_cube_tet(8));
+    let (k13, f13) = poisson(&unit_cube_tet(13));
+    let (jac8, jac13) = (iters(&k8, &f8, false), iters(&k13, &f13, false));
+    let (amg8, amg13) = (iters(&k8, &f8, true), iters(&k13, &f13, true));
+    let amg_growth = amg13 as f64 / amg8.max(1) as f64;
+    let jac_growth = jac13 as f64 / jac8.max(1) as f64;
+    assert!(
+        amg_growth < jac_growth,
+        "AMG growth {amg_growth:.2} vs Jacobi growth {jac_growth:.2}"
+    );
+    assert!(
+        amg13 as f64 <= 1.5 * amg8 as f64 + 1.0,
+        "AMG growth: {amg8} -> {amg13}"
+    );
+    assert!(amg13 < jac13, "AMG {amg13} vs Jacobi {jac13}");
+}
+
+/// Shared-topology varcoeff batch + one shared hierarchy: every lane of
+/// the lockstep AMG-PCG must be bitwise identical to a scalar AMG-PCG run
+/// on that lane with the same hierarchy.
+#[test]
+fn batched_amg_lanes_bitwise_match_scalar_amg() {
+    let mesh = unit_square_tri(12);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    let n = ctx.n_dofs();
+    let forms: Vec<BilinearForm> = (0..3)
+        .map(|s| BilinearForm::Diffusion {
+            rho: ctx.coeff_fn(move |p| 1.0 + 0.4 * s as f64 + 0.5 * p[0] * p[1]),
+        })
+        .collect();
+    let kbatch = ctx.assemble_matrix_batch(&forms);
+    let f: Vec<f64> = (0..3 * n).map(|i| 0.02 * ((i % 23) as f64 - 11.0)).collect();
+    let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
+    let red = condense_batch(&kbatch, &f, &bc);
+    let cfg = SolverConfig::default();
+    // One hierarchy per mesh, built from lane 0's condensed operator. A
+    // small coarse threshold forces genuine multilevel cycles so the
+    // batched parity covers smoothing, transfer and coarse solves.
+    let h = AmgHierarchy::build(
+        &red.k.instance(0),
+        AmgConfig { coarse_max: 30, ..AmgConfig::default() },
+    );
+    let pc = AmgBatch::new(&h, red.n_instances());
+    let (u, stats) = cg_batch_warm_with(&red.k, &red.rhs, None, &pc, &cfg);
+    let nf = red.n_free();
+    for s in 0..3 {
+        let inst = red.k.instance(s);
+        let scalar_pc = AmgPrecond::new(&h);
+        let (us, st) = cg(&inst, red.rhs_of(s), &scalar_pc, &cfg);
+        assert!(st.converged, "lane {s}: {st:?}");
+        assert_eq!(stats[s].iterations, st.iterations, "lane {s} iterations");
+        assert_eq!(&u[s * nf..(s + 1) * nf], &us[..], "lane {s} bitwise");
+    }
+    // Warm-started lanes keep the parity too.
+    let x0: Vec<f64> = u.iter().map(|v| v * (1.0 + 1e-3)).collect();
+    let (uw, stw) = cg_batch_warm_with(&red.k, &red.rhs, Some(&x0), &pc, &cfg);
+    for s in 0..3 {
+        let inst = red.k.instance(s);
+        let scalar_pc = AmgPrecond::new(&h);
+        let (us, st) =
+            cg_warm(&inst, red.rhs_of(s), Some(&x0[s * nf..(s + 1) * nf]), &scalar_pc, &cfg);
+        assert_eq!(stw[s].iterations, st.iterations, "warm lane {s} iterations");
+        assert_eq!(&uw[s * nf..(s + 1) * nf], &us[..], "warm lane {s} bitwise");
+    }
+}
+
+/// `config.precond = Amg` on the plain lockstep entry point builds a
+/// representative hierarchy internally and must agree with the explicit
+/// [`AmgBatch`] path built from the same representative.
+#[test]
+fn config_driven_amg_batch_matches_explicit_hierarchy() {
+    let mesh = unit_cube_tet(4);
+    let (k, f) = poisson(&mesh);
+    let kb = {
+        let mut b = tensor_galerkin::sparse::CsrBatch::zeros_like(&k, 2);
+        b.values_mut(0).copy_from_slice(&k.data);
+        let scaled: Vec<f64> = k.data.iter().map(|v| 1.5 * v).collect();
+        b.values_mut(1).copy_from_slice(&scaled);
+        b
+    };
+    let rhs: Vec<f64> = f.iter().chain(f.iter()).copied().collect();
+    let cfg = SolverConfig {
+        precond: tensor_galerkin::solver::PrecondKind::amg(),
+        ..SolverConfig::default()
+    };
+    let (u_cfg, st_cfg) = cg_batch_warm(&kb, &rhs, None, &cfg);
+    let h = AmgHierarchy::build(&kb.instance(0), AmgConfig::default());
+    let pc = AmgBatch::new(&h, 2);
+    let (u_ex, st_ex) = cg_batch_warm_with(&kb, &rhs, None, &pc, &cfg);
+    assert_eq!(u_cfg, u_ex);
+    for (a, b) in st_cfg.iter().zip(&st_ex) {
+        assert_eq!(a.iterations, b.iterations);
+        assert!(a.converged);
+    }
+}
+
+/// Refilling one hierarchy across a coefficient change (the topopt /
+/// varcoeff pattern) keeps it an effective preconditioner: iteration
+/// counts stay in the same ballpark as a freshly built hierarchy.
+#[test]
+fn refilled_hierarchy_still_preconditions_well() {
+    let mesh = unit_square_tri(20);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
+    let f = ctx.assemble_vector(&LinearForm::Source { f: Coefficient::Const(1.0) });
+    let k1 = ctx.assemble_matrix(&BilinearForm::Diffusion { rho: Coefficient::Const(1.0) });
+    let k2 = ctx.assemble_matrix(&BilinearForm::Diffusion {
+        rho: ctx.coeff_fn(|p| 1.0 + 4.0 * p[0] + 2.0 * p[1] * p[1]),
+    });
+    let sys1 = condense(&k1, &f, &bc);
+    let sys2 = condense(&k2, &f, &bc);
+    let cfg = SolverConfig::default();
+    let mut h = AmgHierarchy::build(&sys1.k, AmgConfig::default());
+    h.refill(&sys2.k.data);
+    let (_, st_refill) = cg(&sys2.k, &sys2.rhs, &AmgPrecond::new(&h), &cfg);
+    assert!(st_refill.converged, "{st_refill:?}");
+    let fresh = AmgHierarchy::build(&sys2.k, AmgConfig::default());
+    let (_, st_fresh) = cg(&sys2.k, &sys2.rhs, &AmgPrecond::new(&fresh), &cfg);
+    assert!(st_fresh.converged);
+    // Same aggregation, new values: effectiveness must be comparable (the
+    // aggregation was computed on a different strength snapshot, so exact
+    // equality is not required).
+    assert!(
+        st_refill.iterations <= st_fresh.iterations + 10,
+        "refilled {} vs fresh {}",
+        st_refill.iterations,
+        st_fresh.iterations
+    );
+    // And both still beat Jacobi on this anisotropy-free problem.
+    let (_, st_jac) = cg(&sys2.k, &sys2.rhs, &JacobiPrecond::new(&sys2.k), &cfg);
+    assert!(st_refill.iterations < st_jac.iterations);
+}
+
+/// The default config's lockstep path must remain bitwise-identical to an
+/// explicit per-lane Jacobi batch — the PR-wide back-compat guarantee.
+#[test]
+fn default_lockstep_path_is_bitwise_jacobi() {
+    let mesh = unit_cube_tet(3);
+    let (k, f) = poisson(&mesh);
+    let mut kb = tensor_galerkin::sparse::CsrBatch::zeros_like(&k, 2);
+    kb.values_mut(0).copy_from_slice(&k.data);
+    let scaled: Vec<f64> = k.data.iter().map(|v| 2.0 * v).collect();
+    kb.values_mut(1).copy_from_slice(&scaled);
+    let rhs: Vec<f64> = f.iter().chain(f.iter()).copied().collect();
+    let cfg = SolverConfig::default();
+    let (u_default, st_default) = cg_batch(&kb, &rhs, &cfg);
+    let (u_explicit, st_explicit) =
+        cg_batch_warm_with(&kb, &rhs, None, &JacobiBatch::from_op(&kb), &cfg);
+    assert_eq!(u_default, u_explicit);
+    for (s, (a, b)) in st_default.iter().zip(&st_explicit).enumerate() {
+        assert_eq!(a.iterations, b.iterations, "lane {s}");
+    }
+    // And lane-bitwise against scalar Jacobi-PCG (the historical oracle).
+    let nf = k.nrows;
+    for s in 0..2 {
+        let inst = kb.instance(s);
+        let (us, st) = cg(&inst, &rhs[s * nf..(s + 1) * nf], &JacobiPrecond::new(&inst), &cfg);
+        assert_eq!(st_default[s].iterations, st.iterations, "lane {s}");
+        assert_eq!(&u_default[s * nf..(s + 1) * nf], &us[..], "lane {s}");
+    }
+}

@@ -145,7 +145,7 @@ fn mixed_convergence_lanes_match_looped_cg() {
     for v in fbatch[2 * n..3 * n].iter_mut() {
         *v = 0.0;
     }
-    let cfg = SolverConfig { rel_tol: 1e-10, abs_tol: 1e-10, max_iter: 4 };
+    let cfg = SolverConfig { max_iter: 4, ..SolverConfig::default() };
 
     let red = condense_batch(&kbatch, &fbatch, &bc);
     let (u, stats) = cg_batch(&red.k, &red.rhs, &cfg);

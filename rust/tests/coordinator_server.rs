@@ -101,7 +101,7 @@ fn cross_mesh_interleaved_requests_match_single_mesh_oracles() {
     let cfg = SolverConfig::default();
     let oracle_tri = BatchSolver::new(&tri, cfg);
     let oracle_tet = BatchSolver::new(&tet, cfg);
-    let server = BatchServer::start_multi(vec![(TRI, tri), (TET, tet)], cfg, 32);
+    let server = BatchServer::start_multi(vec![(TRI, tri), (TET, tet)], cfg, 32, 0);
 
     let mut rng = Rng::new(23);
     let tri_fixed = fixed_reqs(TRI, oracle_tri.n_dofs(), 3, &mut rng);
