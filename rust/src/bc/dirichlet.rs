@@ -102,6 +102,11 @@ impl ReducedSystem {
     pub fn restrict(&self, full: &[f64]) -> Vec<f64> {
         restrict_free(&self.free, full)
     }
+
+    /// Number of DoFs in the full (uncondensed) system.
+    pub fn n_full(&self) -> usize {
+        self.n_full
+    }
 }
 
 /// Condense `K U = F` with the given Dirichlet constraints. Implemented as

@@ -113,4 +113,14 @@ pub struct CoordinatorStats {
     /// Mesh states rebuilt after a prior eviction — sustained traffic on
     /// more meshes than the cap shows up here as churn.
     pub state_rebuilds: u64,
+    /// Requests drained from the queue, summed over drain cycles — the
+    /// queue-depth integral (`queued_requests / drain_cycles` is the mean
+    /// drained batch size under load). Monotone: survives evictions.
+    pub queued_requests: u64,
+    /// Non-empty drain cycles the worker has completed.
+    pub drain_cycles: u64,
+    /// `(mesh_id, kind)` dispatch groups formed across all drain cycles —
+    /// with `queued_requests`, the per-drain group-size signal
+    /// (`queued_requests / dispatch_groups` is the mean group size).
+    pub dispatch_groups: u64,
 }

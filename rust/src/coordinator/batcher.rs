@@ -7,55 +7,51 @@
 //! assembly + one iterative solve. This is exactly the amortization
 //! Fig B.4 measures (flat runtime until the per-sample cost dominates).
 //! Since PR 2 the solve phase is blocked as well: the `S` CG solves
-//! advance in lockstep ([`cg_batch`]) so every Krylov iteration performs
-//! ONE fused pass over the shared sparsity pattern instead of `S`, and the
-//! varcoeff path condenses all `S` operators through one setup-time
-//! symbolic mapping ([`CondensePlan`]).
+//! advance in lockstep ([`crate::solver::cg_batch`]) so every Krylov
+//! iteration performs ONE fused pass over the shared sparsity pattern
+//! instead of `S`, and the varcoeff path condenses all `S` operators
+//! through one setup-time symbolic mapping.
 //!
-//! Fault isolation (PR 4): the `*_each` entry points return one `Result`
-//! per request — a malformed request (shape mismatch, non-positive
-//! coefficient) or an unconverged lane fails *that request only*; its
-//! healthy neighbors in the same batched dispatch still get answers. The
-//! legacy `Result<Vec<_>>` wrappers keep the old abort-on-first-error
-//! contract for callers that want it.
+//! Since PR 6 the amortized per-mesh state itself lives in a
+//! [`MeshSession`] (one owner for plan + engine + reduced system — see
+//! [`crate::session`]); `BatchSolver` is the thin serving adapter that
+//! adds request validation, batched load assembly, dispatch counters and
+//! per-request fault isolation on top. The `*_each` entry points return
+//! one `Result` per request — a malformed request (shape mismatch,
+//! non-positive coefficient) or an unconverged lane fails *that request
+//! only*; its healthy neighbors in the same batched dispatch still get
+//! answers. The legacy `Result<Vec<_>>` wrappers keep the old
+//! abort-on-first-error contract for callers that want it.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
 
 use anyhow::Result;
 
-use crate::assembly::{AssemblyContext, BatchedPlan, BilinearForm, Coefficient, LinearForm};
-use crate::bc::{condense, CondensePlan, DirichletBc, ReducedSystem};
+use crate::assembly::{BatchedPlan, BilinearForm, Coefficient, LinearForm};
 use crate::mesh::Mesh;
-use crate::solver::{
-    cg, cg_batch, cg_batch_warm_with, AmgBatch, AmgPrecond, JacobiPrecond, MultiRhs,
-    PrecondEngine, SolverConfig,
-};
+use crate::session::MeshSession;
+use crate::solver::SolverConfig;
 
 use super::api::{SolveRequest, SolveResponse, VarCoeffRequest};
 
-/// Shared state for a fixed-operator batch workload.
+/// Shared state for a fixed-operator batch workload: a [`MeshSession`]
+/// (the solve stack) plus the serving-layer extras.
 pub struct BatchSolver {
-    pub ctx: AssemblyContext,
-    sys: ReducedSystem,
-    /// Preconditioner over the condensed prototype operator, built once per
-    /// mesh state (next to the `CondensePlan`). Under
-    /// [`crate::solver::PrecondKind::Amg`] this is the "one hierarchy per
-    /// mesh": the fixed-operator paths use it directly and the varcoeff
-    /// paths — whose per-request operators share this topology and
-    /// spectrum — reuse it as a shared SPD preconditioner, so no request
-    /// ever pays a hierarchy construction.
-    engine: PrecondEngine,
-    /// Dirichlet symbolic mapping on the shared pattern — built once at
-    /// setup, reused by every varcoeff batch condensation.
-    cplan: CondensePlan,
+    /// The per-mesh solve stack — fixed Poisson operator, homogeneous
+    /// Dirichlet clamp, engine built once. Under
+    /// [`crate::solver::PrecondKind::Amg`] its hierarchy is the "one
+    /// hierarchy per mesh": the fixed-operator paths use it directly and
+    /// the varcoeff paths — whose per-request operators share this
+    /// topology and spectrum — reuse it as a shared SPD preconditioner,
+    /// so no request ever pays a hierarchy construction.
+    session: MeshSession,
     /// Separable weighted-gather plan for the varcoeff diffusion operator
     /// (P1 simplices) — built lazily on the first varcoeff batch (pure
     /// fixed-operator workloads never pay the `E × kl²` unit-tensor Map),
     /// then reused by every later batch. `Some(None)` on non-separable
     /// topologies (Quad4), where the generic fused batch path runs.
     vplan: OnceLock<Option<BatchedPlan>>,
-    config: SolverConfig,
     /// Batched dispatches performed (one per `solve_batch`-family call
     /// that reached the lockstep solver) — the serving layer's regression
     /// hook proving drained bursts cost ONE batched solve, not S scalar
@@ -68,35 +64,24 @@ pub struct BatchSolver {
 impl BatchSolver {
     /// Build the amortized state (assemble K once, condense, precondition).
     pub fn new(mesh: &Mesh, config: SolverConfig) -> BatchSolver {
-        let ctx = AssemblyContext::new(mesh, 1);
-        let proto = BilinearForm::Diffusion {
-            rho: Coefficient::Const(1.0),
-        };
-        let k = ctx.assemble_matrix(&proto);
-        let zero = vec![0.0; ctx.n_dofs()];
-        let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
-        let cplan = CondensePlan::new(k.nrows, &k.indptr, &k.indices, &bc);
-        // One symbolic traversal serves both the cached plan and the
-        // fixed-operator reduced system.
-        let sys = cplan.apply(&k.data, &zero);
-        let engine = PrecondEngine::build(&sys.k, config.precond);
         BatchSolver {
-            ctx,
-            sys,
-            engine,
-            cplan,
+            session: MeshSession::poisson(mesh, config),
             vplan: OnceLock::new(),
-            config,
             batched_solves: AtomicU64::new(0),
             scalar_solves: AtomicU64::new(0),
         }
+    }
+
+    /// The underlying per-mesh session.
+    pub fn session(&self) -> &MeshSession {
+        &self.session
     }
 
     /// The cached separable plan for the varcoeff diffusion operator,
     /// built on first use.
     fn varcoeff_plan(&self) -> &Option<BatchedPlan> {
         self.vplan.get_or_init(|| {
-            self.ctx.batched_plan(&BilinearForm::Diffusion {
+            self.session.ctx().batched_plan(&BilinearForm::Diffusion {
                 rho: Coefficient::Const(1.0),
             })
         })
@@ -118,11 +103,11 @@ impl BatchSolver {
     /// serving worker.
     pub fn validate(&self, req: &SolveRequest) -> Result<()> {
         anyhow::ensure!(
-            req.f_nodal.len() == self.ctx.n_dofs(),
+            req.f_nodal.len() == self.n_dofs(),
             "request {}: f_nodal has {} entries, mesh has {} dofs",
             req.id,
             req.f_nodal.len(),
-            self.ctx.n_dofs()
+            self.n_dofs()
         );
         Ok(())
     }
@@ -130,7 +115,7 @@ impl BatchSolver {
     /// Shape- and positivity-check a varcoeff request (`rho` must be a
     /// strictly positive finite field for the operator to stay SPD).
     pub fn validate_varcoeff(&self, req: &VarCoeffRequest) -> Result<()> {
-        let n = self.ctx.n_dofs();
+        let n = self.n_dofs();
         anyhow::ensure!(
             req.rho_nodal.len() == n,
             "request {}: rho_nodal has {} entries, mesh has {n} dofs",
@@ -155,51 +140,38 @@ impl BatchSolver {
     pub fn solve_one(&self, req: &SolveRequest) -> Result<SolveResponse> {
         self.validate(req)?;
         self.scalar_solves.fetch_add(1, Ordering::Relaxed);
-        let f = self.ctx.assemble_vector(&LinearForm::Source {
-            f: self.ctx.coeff_nodal(&req.f_nodal),
+        let ctx = self.session.ctx();
+        let f = ctx.assemble_vector(&LinearForm::Source {
+            f: ctx.coeff_nodal(&req.f_nodal),
         });
-        let rhs = self.sys.restrict(&f);
-        let (u_free, stats) = self.engine.cg_warm(&self.sys.k, &rhs, None, &self.config);
+        let (u, stats) = self.session.solve_with_load(&f);
         anyhow::ensure!(stats.converged, "batch solve {} failed: {stats:?}", req.id);
         Ok(SolveResponse {
             id: req.id,
-            u: self.sys.expand(&u_free),
+            u,
             iterations: stats.iterations,
             rel_residual: stats.rel_residual,
         })
     }
 
     /// Solve one varcoeff request through the full per-instance pipeline
-    /// (assemble its operator, condense, precondition, solve).
+    /// (assemble its operator, condense through the session constraints,
+    /// precondition, solve — see [`MeshSession::solve_foreign`]).
     pub fn solve_varcoeff_one(&self, req: &VarCoeffRequest) -> Result<SolveResponse> {
         self.validate_varcoeff(req)?;
         self.scalar_solves.fetch_add(1, Ordering::Relaxed);
-        let ctx = &self.ctx;
+        let ctx = self.session.ctx();
         let k = ctx.assemble_matrix(&BilinearForm::Diffusion {
             rho: ctx.coeff_nodal(&req.rho_nodal),
         });
         let f = ctx.assemble_vector(&LinearForm::Source {
             f: ctx.coeff_nodal(&req.f_nodal),
         });
-        let sys = condense(&k, &f, &self.sys.bc);
-        // Jacobi: the historical per-request diagonal (bitwise). AMG: the
-        // shared per-mesh hierarchy — the request's operator differs from
-        // the prototype only through its (positive) coefficient field, so
-        // the shared hierarchy stays a valid SPD preconditioner and no
-        // per-request setup is paid.
-        let (u_free, stats) = match &self.engine {
-            PrecondEngine::Jacobi(_) => {
-                let pc = JacobiPrecond::new(&sys.k);
-                cg(&sys.k, &sys.rhs, &pc, &self.config)
-            }
-            PrecondEngine::Amg(h, ws) => {
-                cg(&sys.k, &sys.rhs, &AmgPrecond::with_scratch(h, ws), &self.config)
-            }
-        };
+        let (u, stats) = self.session.solve_foreign(&k, &f);
         anyhow::ensure!(stats.converged, "varcoeff solve {} failed: {stats:?}", req.id);
         Ok(SolveResponse {
             id: req.id,
-            u: sys.expand(&u_free),
+            u,
             iterations: stats.iterations,
             rel_residual: stats.rel_residual,
         })
@@ -210,9 +182,10 @@ impl BatchSolver {
     /// batched Map-Reduce (fused `S × E` Batch-Map + fused `S × N`
     /// Sparse-Reduce) instead of `S` scalar assembly calls, and the `S`
     /// solves run as ONE lockstep CG on the shared condensed operator
-    /// ([`MultiRhs`]: every Krylov iteration reads the pattern and values
-    /// once for the whole batch). Each lane is bitwise-identical to
-    /// [`BatchSolver::solve_one`] on the same request.
+    /// ([`MeshSession::solve_load_batch`]: every Krylov iteration reads
+    /// the pattern and values once for the whole batch). Each lane is
+    /// bitwise-identical to [`BatchSolver::solve_one`] on the same
+    /// request.
     ///
     /// Malformed requests are rejected before assembly and unconverged
     /// lanes yield an `Err` — in both cases only for the offending
@@ -223,28 +196,25 @@ impl BatchSolver {
             return seal_lanes(out, &valid, |_, _| unreachable!("no valid lanes"));
         }
         self.batched_solves.fetch_add(1, Ordering::Relaxed);
+        let ctx = self.session.ctx();
         let forms: Vec<LinearForm> = valid
             .iter()
-            .map(|&i| LinearForm::Source { f: self.ctx.coeff_nodal(&reqs[i].f_nodal) })
+            .map(|&i| LinearForm::Source { f: ctx.coeff_nodal(&reqs[i].f_nodal) })
             .collect();
-        let fbatch = self.ctx.assemble_vector_batch(&forms);
-        let n = self.ctx.n_dofs();
-        let nf = self.sys.free.len();
+        let fbatch = ctx.assemble_vector_batch(&forms);
+        let n = self.n_dofs();
+        let nf = self.session.n_free();
         let mut rhs = Vec::with_capacity(valid.len() * nf);
         for s in 0..valid.len() {
-            rhs.extend(self.sys.restrict(&fbatch[s * n..(s + 1) * n]));
+            rhs.extend(self.session.restrict(&fbatch[s * n..(s + 1) * n]));
         }
-        let op = match self.engine.inv_diag() {
-            Some(inv) => MultiRhs::with_inv_diag(&self.sys.k, valid.len(), inv.to_vec()),
-            None => MultiRhs::new(&self.sys.k, valid.len()),
-        };
-        let (u, stats) = self.engine.cg_batch_warm(&op, &rhs, None, &self.config);
+        let (u, stats) = self.session.solve_load_batch(&rhs);
         seal_lanes(out, &valid, |s, i| {
             let st = stats[s];
             anyhow::ensure!(st.converged, "batch solve {} failed: {st:?}", reqs[i].id);
             Ok(SolveResponse {
                 id: reqs[i].id,
-                u: self.sys.expand(&u[s * nf..(s + 1) * nf]),
+                u: self.session.expand(&u[s * nf..(s + 1) * nf]),
                 iterations: st.iterations,
                 rel_residual: st.rel_residual,
             })
@@ -265,11 +235,11 @@ impl BatchSolver {
     /// setup-cached separable weighted-gather plan on P1 simplices, the
     /// fused generic batch otherwise — into a [`crate::sparse::CsrBatch`]
     /// with one symbolic pattern; the `S` load vectors by one batched
-    /// vector assembly. Condensation reuses the setup-time symbolic
-    /// mapping ([`CondensePlan`]) and the `S` solves advance in lockstep
-    /// ([`cg_batch`]: one fused SpMV per Krylov iteration), bitwise
-    /// identical to the per-instance pipeline. Malformed requests and
-    /// unconverged lanes fail individually, as in
+    /// vector assembly. Condensation reuses the session's setup-time
+    /// symbolic mapping and the `S` solves advance in lockstep
+    /// ([`MeshSession::solve_varcoeff_batch`]: one fused SpMV per Krylov
+    /// iteration), bitwise identical to the per-instance pipeline.
+    /// Malformed requests and unconverged lanes fail individually, as in
     /// [`BatchSolver::solve_batch_each`].
     pub fn solve_varcoeff_batch_each(
         &self,
@@ -280,7 +250,7 @@ impl BatchSolver {
             return seal_lanes(out, &valid, |_, _| unreachable!("no valid lanes"));
         }
         self.batched_solves.fetch_add(1, Ordering::Relaxed);
-        let ctx = &self.ctx;
+        let ctx = self.session.ctx();
         let kbatch = match self.varcoeff_plan() {
             Some(plan) => {
                 // Separable path: each request's nodal coefficient
@@ -307,18 +277,12 @@ impl BatchSolver {
             .map(|&i| LinearForm::Source { f: ctx.coeff_nodal(&reqs[i].f_nodal) })
             .collect();
         let fbatch = ctx.assemble_vector_batch(&lforms);
-        // The Dirichlet symbolic mapping was computed once at setup;
-        // each batch only pays the value gather + lift. The lockstep CG
-        // uses per-lane Jacobi under the default config (bitwise) or ONE
-        // shared-mesh AMG hierarchy applied to all lanes per iteration.
-        let red = self.cplan.apply_batch(&kbatch, &fbatch);
-        let (u, stats) = match &self.engine {
-            PrecondEngine::Jacobi(_) => cg_batch(&red.k, &red.rhs, &self.config),
-            PrecondEngine::Amg(h, ws) => {
-                let pc = AmgBatch::with_scratch(h, red.n_instances(), ws);
-                cg_batch_warm_with(&red.k, &red.rhs, None, &pc, &self.config)
-            }
-        };
+        // The Dirichlet symbolic mapping was computed once at session
+        // build; each batch only pays the value gather + lift. The
+        // lockstep CG uses per-lane Jacobi under the default config
+        // (bitwise) or ONE shared-mesh AMG hierarchy applied to all lanes
+        // per iteration.
+        let (red, u, stats) = self.session.solve_varcoeff_batch(&kbatch, &fbatch);
         let nf = red.n_free();
         seal_lanes(out, &valid, |s, i| {
             let st = stats[s];
@@ -349,7 +313,7 @@ impl BatchSolver {
     }
 
     pub fn n_dofs(&self) -> usize {
-        self.ctx.n_dofs()
+        self.session.ctx().n_dofs()
     }
 }
 

@@ -5,15 +5,22 @@
 //! Architecture (vLLM-router-style continuous batching, multi-mesh):
 //! callers submit mesh-tagged [`SolveRequest`]s / [`VarCoeffRequest`]s to a
 //! [`BatchServer`]; a worker thread drains the queue, groups pending
-//! requests by `(mesh_id, request kind)`, and dispatches each group as ONE
-//! batched assembly + lockstep-CG call through the per-mesh
-//! [`BatchSolver`] — the scalar `solve_one` path runs only for singleton
-//! groups. Per-mesh amortized state (assembly context, routing,
-//! condensation plan, preconditioner engine — Jacobi or a per-mesh AMG
-//! hierarchy, separable batched-assembly plan) lives in a registry
-//! `mesh_id → BatchSolver`, built lazily on the first request for each
-//! registered topology and LRU-capped by `max_mesh_states`, so one server
-//! instance serves many mesh topologies with bounded resident state.
+//! requests by `(mesh_id, request kind)`, and serves the groups
+//! round-robin in `max_batch`-sized chunks — each chunk ONE batched
+//! assembly + lockstep-CG call through the per-mesh [`BatchSolver`], with
+//! the scalar `solve_one` path reserved for singleton groups — so a large
+//! group cannot starve requests for other meshes within a drain cycle.
+//! The per-mesh amortized state is a [`BatchSolver`]: a thin adapter over
+//! one [`crate::session::MeshSession`] (assembly context, condensation
+//! plan, preconditioner engine — Jacobi or AMG hierarchy — and persistent
+//! reduced-system scratch) plus the lazily built separable
+//! batched-assembly plan. Solvers live in a registry
+//! `mesh_id → Arc<BatchSolver>`, built lazily on the first request for
+//! each registered topology and LRU-capped by `max_mesh_states`, so one
+//! server instance serves many mesh topologies with bounded resident
+//! state; the `Arc` is the seam for sharded multi-worker serving. New
+//! topologies can be registered over the running server
+//! ([`BatchServer::register_mesh`]) — the AMR-as-served-workload path.
 //!
 //! Fault isolation: requests are shape-validated before they can reach the
 //! assembly kernels, an unconverged lane fails only its own reply
@@ -22,9 +29,9 @@
 //! into per-request error responses — the worker survives hostile traffic
 //! and `submit` surfaces a gone worker instead of hanging the client.
 //! [`CoordinatorStats`] exposes the worker's dispatch counters (batched vs
-//! scalar, failures, registry fills, evictions/rebuilds) for observability
-//! and regression tests. Everything is std::sync::mpsc — no external
-//! runtime.
+//! scalar, failures, registry fills, evictions/rebuilds, drained-queue
+//! depth and dispatch-group telemetry) for observability and regression
+//! tests. Everything is std::sync::mpsc — no external runtime.
 
 pub mod api;
 pub mod batcher;

@@ -4,16 +4,27 @@
 //! batching): callers submit mesh-tagged [`SolveRequest`]s /
 //! [`VarCoeffRequest`]s; the worker drains the queue, groups pending
 //! requests by `(mesh_id, request kind)`, and dispatches every group as
-//! ONE batched assembly + one lockstep-CG call through the per-mesh
+//! batched assembly + lockstep-CG calls through the per-mesh
 //! [`BatchSolver`] — `solve_one` runs only for singleton groups. Per-mesh
-//! state (assembly context, condensation plan, preconditioner — Jacobi or
-//! a per-mesh AMG hierarchy, separable batched-assembly plan) lives in a
-//! registry `mesh_id → BatchSolver` filled lazily on the first request for
+//! state (the [`crate::session::MeshSession`] solve stack plus the
+//! separable batched-assembly plan) lives in a registry
+//! `mesh_id → Arc<BatchSolver>` filled lazily on the first request for
 //! each registered topology, so one server instance serves many meshes
-//! with amortized setup. The registry is LRU-capped (`max_mesh_states` on
-//! [`BatchServer::start_multi`]): beyond the cap the least-recently-used
-//! state is dropped and transparently rebuilt on its next request, with
-//! eviction/rebuild counters in [`CoordinatorStats`].
+//! with amortized setup; the `Arc` is the designed seam for sharded
+//! multi-worker serving (N workers sharing one registry). The registry is
+//! LRU-capped (`max_mesh_states` on [`BatchServer::start_multi`]): beyond
+//! the cap the least-recently-used state is dropped and transparently
+//! rebuilt on its next request, with eviction/rebuild counters in
+//! [`CoordinatorStats`]. New topologies can be registered over the
+//! running server ([`BatchServer::register_mesh`]) — the AMR-as-served-
+//! workload entry point; re-registering an id retires any built state so
+//! the next request solves against the new mesh.
+//!
+//! Drain fairness: within one drain cycle the worker serves groups
+//! round-robin in `max_batch`-sized chunks — a large group takes one
+//! chunk, then every other group takes one, and so on until all are
+//! drained — so a burst of hundreds of requests for one mesh cannot
+//! starve a singleton for another past the first chunk.
 //!
 //! Fault isolation: requests are validated before assembly, an
 //! unconverged lane fails only its own reply, and a panic while serving a
@@ -25,6 +36,7 @@
 use std::collections::{HashMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, SendError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::{anyhow, Result};
@@ -57,6 +69,9 @@ enum Msg {
     /// [`BatchServer::submit_many`]): a burst arrives as one queue entry,
     /// so the whole burst is guaranteed to land in a single drain cycle.
     Many(Vec<(Req, Reply)>),
+    /// Register (or replace) a mesh topology over the running server;
+    /// acknowledged once the worker has installed it.
+    Register(u64, Box<Mesh>, Sender<()>),
     Stats(Sender<CoordinatorStats>),
     Shutdown,
 }
@@ -69,14 +84,28 @@ pub struct BatchServer {
 }
 
 /// A registry slot: the built (or failed) per-mesh state plus its
-/// last-touch tick for LRU eviction.
+/// last-touch tick for LRU eviction. Built states sit behind an `Arc` so
+/// future sharded workers can hold a group's solver across a drain cycle
+/// without blocking registry mutation.
 struct RegistryEntry {
     /// A failed build (panicking setup of a *registered* mesh) is memoized
     /// too, so sustained traffic for a bad mesh pays the setup attempt
     /// once, not per drain cycle (until the slot is evicted). Unregistered
     /// keys never get a slot at all.
-    state: std::result::Result<BatchSolver, String>,
+    state: std::result::Result<Arc<BatchSolver>, String>,
     last_used: u64,
+}
+
+/// One `(mesh_id, kind)` group's still-unserved requests within a drain
+/// cycle, consumed chunk by chunk by the round-robin scheduler.
+struct GroupQueue<R> {
+    mesh_id: u64,
+    items: Vec<(R, Reply)>,
+    /// Whether the group *arrived* as a singleton (scalar dispatch); a
+    /// trailing chunk of 1 carved from a larger group still dispatches
+    /// batched, keeping the batched/scalar counters an exact regression
+    /// signal.
+    singleton: bool,
 }
 
 /// The worker-side state: registered meshes and the lazily built per-mesh
@@ -101,6 +130,14 @@ struct Worker {
     retired_batched: u64,
     retired_scalar: u64,
     failed: u64,
+    /// Requests drained from the queue, summed over drain cycles (the
+    /// queue-depth integral: `queued_requests / drain_cycles` is the mean
+    /// drained batch size under load).
+    queued_requests: u64,
+    /// Non-empty drain cycles completed.
+    drain_cycles: u64,
+    /// `(mesh_id, kind)` groups formed across all drain cycles.
+    dispatch_groups: u64,
     /// Stats queries seen in the current drain cycle — answered only
     /// AFTER the cycle's dispatch, so a snapshot reflects every request
     /// that was enqueued ahead of it (FIFO through the queue).
@@ -109,19 +146,23 @@ struct Worker {
 
 /// Bucket mesh-homogeneous items by mesh key, preserving arrival order
 /// within each bucket (first-seen key order across buckets).
-fn group_by_mesh<R>(
-    items: Vec<(R, Reply)>,
-    mesh_id: fn(&R) -> u64,
-) -> Vec<(u64, Vec<(R, Reply)>)> {
-    let mut groups: Vec<(u64, Vec<(R, Reply)>)> = Vec::new();
+fn group_by_mesh<R>(items: Vec<(R, Reply)>, mesh_id: fn(&R) -> u64) -> Vec<GroupQueue<R>> {
+    let mut groups: Vec<GroupQueue<R>> = Vec::new();
     let mut index: HashMap<u64, usize> = HashMap::new();
     for (req, reply) in items {
         let key = mesh_id(&req);
         let gi = *index.entry(key).or_insert_with(|| {
-            groups.push((key, Vec::new()));
+            groups.push(GroupQueue {
+                mesh_id: key,
+                items: Vec::new(),
+                singleton: false,
+            });
             groups.len() - 1
         });
-        groups[gi].1.push((req, reply));
+        groups[gi].items.push((req, reply));
+    }
+    for g in &mut groups {
+        g.singleton = g.items.len() == 1;
     }
     groups
 }
@@ -141,10 +182,31 @@ impl Worker {
     fn accept(&mut self, msg: Msg, pending: &mut Vec<(Req, Reply)>) -> bool {
         match msg {
             Msg::Many(items) => pending.extend(items),
+            Msg::Register(mesh_id, mesh, ack) => {
+                self.register(mesh_id, *mesh);
+                let _ = ack.send(());
+            }
             Msg::Stats(tx) => self.stats_waiters.push(tx),
             Msg::Shutdown => return false,
         }
         true
+    }
+
+    /// Install (or replace) a mesh topology. Replacing a registered id
+    /// retires any built state for the old topology — counted as an
+    /// eviction, dispatch counters folded into the retired totals — so
+    /// the next request builds against the new mesh (the AMR
+    /// re-registration path).
+    fn register(&mut self, mesh_id: u64, mesh: Mesh) {
+        if let Some(entry) = self.states.remove(&mesh_id) {
+            self.evictions += 1;
+            self.evicted_keys.insert(mesh_id);
+            if let Ok(solver) = entry.state {
+                self.retired_batched += solver.n_batched_solves();
+                self.retired_scalar += solver.n_scalar_solves();
+            }
+        }
+        self.meshes.insert(mesh_id, mesh);
     }
 
     /// Answer the stats queries collected this cycle (post-dispatch).
@@ -165,6 +227,9 @@ impl Worker {
             state_rebuilds: self.rebuilds,
             batched_solves: self.retired_batched,
             scalar_solves: self.retired_scalar,
+            queued_requests: self.queued_requests,
+            drain_cycles: self.drain_cycles,
+            dispatch_groups: self.dispatch_groups,
             ..CoordinatorStats::default()
         };
         for entry in self.states.values() {
@@ -182,7 +247,7 @@ impl Worker {
     /// registry is at its cap, the least-recently-used slot is evicted
     /// before the new build (its dispatch counters fold into the retired
     /// totals so aggregate stats stay monotone).
-    fn solver_for(&mut self, mesh_id: u64) -> std::result::Result<&BatchSolver, String> {
+    fn solver_for(&mut self, mesh_id: u64) -> std::result::Result<Arc<BatchSolver>, String> {
         self.tick += 1;
         let tick = self.tick;
         if !self.states.contains_key(&mesh_id) {
@@ -213,20 +278,32 @@ impl Worker {
                 self.rebuilds += 1;
             }
             let config = self.config;
-            let built = catch_unwind(AssertUnwindSafe(|| BatchSolver::new(mesh, config)))
-                .map_err(|p| {
-                    format!("building state for mesh_id {mesh_id} panicked: {}", panic_msg(&*p))
-                });
+            let built =
+                catch_unwind(AssertUnwindSafe(|| Arc::new(BatchSolver::new(mesh, config))))
+                    .map_err(|p| {
+                        format!(
+                            "building state for mesh_id {mesh_id} panicked: {}",
+                            panic_msg(&*p)
+                        )
+                    });
             self.states.insert(mesh_id, RegistryEntry { state: built, last_used: tick });
         }
         let entry = self.states.get_mut(&mesh_id).expect("slot just ensured");
         entry.last_used = tick;
-        entry.state.as_ref().map_err(|e| e.clone())
+        entry.state.as_ref().map(Arc::clone).map_err(|e| e.clone())
     }
 
     /// Group the drained queue by `(mesh_id, kind)` — arrival order is
-    /// preserved within each group — and serve every group batched.
+    /// preserved within each group — and serve the groups round-robin in
+    /// `max_batch`-sized chunks until all are drained: every group gets
+    /// one chunk per round, so a large group cannot starve the others
+    /// past its first chunk.
     fn dispatch(&mut self, pending: Vec<(Req, Reply)>) {
+        if pending.is_empty() {
+            return;
+        }
+        self.drain_cycles += 1;
+        self.queued_requests += pending.len() as u64;
         let mut fixed_items = Vec::new();
         let mut var_items = Vec::new();
         for (req, reply) in pending {
@@ -235,78 +312,96 @@ impl Worker {
                 Req::Var(q) => var_items.push((q, reply)),
             }
         }
-        let fixed = group_by_mesh(fixed_items, |r| r.mesh_id);
-        let var = group_by_mesh(var_items, |r| r.mesh_id);
-        for (mesh_id, group) in fixed {
-            self.serve_group(
-                mesh_id,
-                group,
+        let mut fixed = group_by_mesh(fixed_items, |r| r.mesh_id);
+        let mut var = group_by_mesh(var_items, |r| r.mesh_id);
+        self.dispatch_groups += (fixed.len() + var.len()) as u64;
+        loop {
+            let served_fixed = self.serve_round(
+                &mut fixed,
                 |r: &SolveRequest| r.id,
                 BatchSolver::solve_one,
                 BatchSolver::solve_batch_each,
             );
-        }
-        for (mesh_id, group) in var {
-            self.serve_group(
-                mesh_id,
-                group,
+            let served_var = self.serve_round(
+                &mut var,
                 |r: &VarCoeffRequest| r.id,
                 BatchSolver::solve_varcoeff_one,
                 BatchSolver::solve_varcoeff_batch_each,
             );
+            if !served_fixed && !served_var {
+                break;
+            }
         }
     }
 
-    /// Serve one homogeneous `(mesh_id, kind)` group: the scalar path runs
-    /// only for a true singleton group; everything else goes through the
-    /// batched dispatch in `max_batch`-sized chunks (a trailing chunk of 1
-    /// from a larger group still dispatches batched, keeping the
-    /// batched/scalar counters an exact regression signal). A panic while
-    /// solving a chunk answers that chunk's requests with errors and keeps
-    /// the worker alive.
-    fn serve_group<R>(
+    /// One fairness round: take at most one `max_batch`-sized chunk from
+    /// every non-empty group, in first-seen group order. Returns whether
+    /// any work was served.
+    fn serve_round<R>(
+        &mut self,
+        groups: &mut [GroupQueue<R>],
+        req_id: fn(&R) -> u64,
+        solve_single: fn(&BatchSolver, &R) -> Result<SolveResponse>,
+        solve_batch: fn(&BatchSolver, &[R]) -> Vec<Result<SolveResponse>>,
+    ) -> bool {
+        let max_batch = self.max_batch.max(1);
+        let mut any = false;
+        for g in groups.iter_mut() {
+            if g.items.is_empty() {
+                continue;
+            }
+            any = true;
+            let take = g.items.len().min(max_batch);
+            let chunk: Vec<(R, Reply)> = g.items.drain(..take).collect();
+            self.serve_chunk(g.mesh_id, chunk, g.singleton, req_id, solve_single, solve_batch);
+        }
+        any
+    }
+
+    /// Serve one chunk of a homogeneous `(mesh_id, kind)` group: the
+    /// scalar path runs only for a true singleton group; everything else
+    /// goes through the batched dispatch. A panic while solving answers
+    /// the chunk's requests with errors and keeps the worker alive.
+    fn serve_chunk<R>(
         &mut self,
         mesh_id: u64,
-        mut group: Vec<(R, Reply)>,
+        chunk: Vec<(R, Reply)>,
+        singleton: bool,
         req_id: fn(&R) -> u64,
         solve_single: fn(&BatchSolver, &R) -> Result<SolveResponse>,
         solve_batch: fn(&BatchSolver, &[R]) -> Vec<Result<SolveResponse>>,
     ) {
-        let max_batch = self.max_batch.max(1);
-        let singleton = group.len() == 1;
         let mut failed = 0u64;
         match self.solver_for(mesh_id) {
             Err(msg) => {
-                failed = group.len() as u64;
-                for (req, reply) in group {
+                failed = chunk.len() as u64;
+                for (req, reply) in chunk {
                     let _ = reply.send(Err(anyhow!("request {}: {msg}", req_id(&req))));
                 }
             }
             Ok(solver) => {
-                while !group.is_empty() {
-                    let take = group.len().min(max_batch);
-                    let (reqs, replies): (Vec<R>, Vec<Reply>) = group.drain(..take).unzip();
-                    let results = catch_unwind(AssertUnwindSafe(|| {
-                        if singleton {
-                            vec![solve_single(solver, &reqs[0])]
-                        } else {
-                            solve_batch(solver, &reqs)
-                        }
-                    }))
-                    .unwrap_or_else(|p| {
-                        let m = panic_msg(&*p);
-                        reqs.iter()
-                            .map(|r| {
-                                Err(anyhow!("solve panicked serving request {}: {m}", req_id(r)))
-                            })
-                            .collect()
-                    });
-                    for (res, reply) in results.into_iter().zip(replies) {
-                        if res.is_err() {
-                            failed += 1;
-                        }
-                        let _ = reply.send(res);
+                let solver = &*solver;
+                let (reqs, replies): (Vec<R>, Vec<Reply>) = chunk.into_iter().unzip();
+                let results = catch_unwind(AssertUnwindSafe(|| {
+                    if singleton {
+                        vec![solve_single(solver, &reqs[0])]
+                    } else {
+                        solve_batch(solver, &reqs)
                     }
+                }))
+                .unwrap_or_else(|p| {
+                    let m = panic_msg(&*p);
+                    reqs.iter()
+                        .map(|r| {
+                            Err(anyhow!("solve panicked serving request {}: {m}", req_id(r)))
+                        })
+                        .collect()
+                });
+                for (res, reply) in results.into_iter().zip(replies) {
+                    if res.is_err() {
+                        failed += 1;
+                    }
+                    let _ = reply.send(res);
                 }
             }
         }
@@ -349,6 +444,9 @@ impl BatchServer {
                 retired_batched: 0,
                 retired_scalar: 0,
                 failed: 0,
+                queued_requests: 0,
+                drain_cycles: 0,
+                dispatch_groups: 0,
                 stats_waiters: Vec::new(),
             };
             let mut pending: Vec<(Req, Reply)> = Vec::new();
@@ -391,6 +489,20 @@ impl BatchServer {
     /// start — the worker snapshots it.
     pub fn max_batch(&self) -> usize {
         self.max_batch
+    }
+
+    /// Register (or replace) a mesh topology on the running server.
+    /// Synchronous: returns once the worker has installed the mesh, so a
+    /// subsequent request tagged with `mesh_id` is guaranteed to find it.
+    /// Replacing an id retires any built solver state for the old
+    /// topology (counted as an eviction).
+    pub fn register_mesh(&self, mesh_id: u64, mesh: Mesh) -> Result<()> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Register(mesh_id, Box::new(mesh), tx))
+            .map_err(|_| anyhow!("batch server worker is gone; mesh {mesh_id} not registered"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("batch server worker died before registering mesh {mesh_id}"))
     }
 
     /// Submit a fixed-operator request; returns the response receiver.
@@ -545,6 +657,8 @@ mod tests {
         // Burst submission surfaces the same condition per request.
         let outs = server.solve_all_each(vec![SolveRequest::new(4, vec![1.0; n])]);
         assert!(outs[0].is_err());
+        // Registration over a dead worker errors instead of hanging.
+        assert!(server.register_mesh(9, unit_cube_tet(2)).is_err());
     }
 
     #[test]
@@ -604,5 +718,83 @@ mod tests {
         let ok = server.submit(SolveRequest::new(2, vec![1.0; n]));
         assert!(ok.recv().unwrap().is_ok());
         assert_eq!(server.stats().expect("worker alive").failed_requests, 1);
+    }
+
+    /// Starvation regression: a 12-request group and a singleton for a
+    /// second mesh land in one drain cycle with `max_batch = 4` and a
+    /// one-state registry cap. Round-robin chunking serves the singleton
+    /// after the large group's FIRST chunk, which is observable through
+    /// the LRU churn: the interleaving m1(4), m2(1), m1(4), m1(4) forces
+    /// an eviction of each state and a REBUILD of mesh 1's
+    /// (`state_rebuilds ≥ 1`); the old serve-each-group-fully order
+    /// (m1×3 chunks, then m2) never rebuilds anything.
+    #[test]
+    fn large_group_cannot_starve_singleton() {
+        let (a, b) = (unit_cube_tet(3), unit_cube_tet(2));
+        let (na, nb) = (a.n_nodes(), b.n_nodes());
+        let server =
+            BatchServer::start_multi(vec![(1, a), (2, b)], SolverConfig::default(), 4, 1);
+        let mut rng = Rng::new(61);
+        let mut reqs: Vec<SolveRequest> = (0..12)
+            .map(|id| {
+                SolveRequest::on_mesh(
+                    id,
+                    1,
+                    (0..na).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+                )
+            })
+            .collect();
+        reqs.push(SolveRequest::on_mesh(100, 2, vec![1.0; nb]));
+        // One burst → one drain cycle; the server regroups by mesh.
+        let out = server.solve_all(reqs.clone()).unwrap();
+        assert_eq!(out.len(), 13);
+        assert_eq!(out[12].u.len(), nb, "singleton answered on its own mesh");
+        // Lane parity survives the mid-group rebuild: the rebuilt state is
+        // a pure function of mesh + config.
+        let oracle = BatchSolver::new(&unit_cube_tet(3), SolverConfig::default());
+        for (resp, req) in out[..12].iter().zip(&reqs[..12]) {
+            let want = oracle.solve_one(req).unwrap();
+            assert_eq!(resp.u, want.u, "request {} not bitwise", req.id);
+        }
+        let stats = server.stats().expect("worker alive");
+        // The fairness signature: the singleton ran between mesh-1 chunks.
+        assert!(stats.state_rebuilds >= 1, "singleton starved: {stats:?}");
+        assert!(stats.evicted_states >= 2, "stats: {stats:?}");
+        // 12 requests in 4-sized chunks (batched) + 1 singleton (scalar).
+        assert_eq!(stats.batched_solves, 3, "stats: {stats:?}");
+        assert_eq!(stats.scalar_solves, 1, "stats: {stats:?}");
+        // Drain telemetry: one non-empty cycle, 13 drained requests, two
+        // (mesh, kind) groups.
+        assert_eq!(stats.drain_cycles, 1, "stats: {stats:?}");
+        assert_eq!(stats.queued_requests, 13, "stats: {stats:?}");
+        assert_eq!(stats.dispatch_groups, 2, "stats: {stats:?}");
+    }
+
+    /// Dynamic registration: an unknown mesh id errors, then
+    /// `register_mesh` installs the topology over the running server and
+    /// the same request succeeds — matching a statically registered
+    /// oracle bitwise.
+    #[test]
+    fn unknown_mesh_then_register_then_solve() {
+        let a = unit_cube_tet(2);
+        let b = unit_cube_tet(3);
+        let nb = b.n_nodes();
+        let server = BatchServer::start_multi(vec![(1, a)], SolverConfig::default(), 4, 0);
+        let mut rng = Rng::new(67);
+        let req = SolveRequest::on_mesh(
+            5,
+            7,
+            (0..nb).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+        );
+        let err = server.submit(req.clone()).recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("no mesh registered"), "{err}");
+        server.register_mesh(7, b.clone()).unwrap();
+        let resp = server.submit(req.clone()).recv().unwrap().unwrap();
+        let oracle = BatchSolver::new(&b, SolverConfig::default());
+        let want = oracle.solve_one(&req).unwrap();
+        assert_eq!(resp.u, want.u, "registered-mesh solve not bitwise");
+        let stats = server.stats().expect("worker alive");
+        assert_eq!(stats.failed_requests, 1, "stats: {stats:?}");
+        assert_eq!(stats.meshes_built, 2, "stats: {stats:?}");
     }
 }

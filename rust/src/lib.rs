@@ -15,6 +15,11 @@
 //!   the global CSR matrix with precomputed binary *routing matrices*
 //!   applied as one deterministic sparse product ([`assembly::routing`]).
 //!
+//! Between the assembly engine and the applications sits the shared
+//! per-mesh solver session ([`session`]): every downstream path solves
+//! through one [`session::MeshSession`] owning the condensation plan,
+//! preconditioner engine and warm-start state for its mesh.
+//!
 //! On top of the assembly engine sit the paper's three downstream systems:
 //!
 //! * **TensorMesh** — a numerical PDE solver ([`tensormesh`]),
@@ -37,6 +42,7 @@ pub mod oplearn;
 pub mod opt;
 pub mod pils;
 pub mod runtime;
+pub mod session;
 pub mod solver;
 pub mod sparse;
 pub mod tensormesh;

@@ -161,13 +161,15 @@ impl PdeSetup {
     }
 
     /// Batched FEM reference trajectories: the whole IC set advances in
-    /// lockstep through ONE integrator (matrices assembled and condensed
-    /// once) with one fused SpMV and one blocked solve per time step for
-    /// the whole set — this is the data-generation workload the blocked
-    /// solve pipeline targets. For the wave equation each trajectory is
-    /// bitwise identical to [`PdeSetup::reference_trajectory`]; for
-    /// Allen-Cahn agreement is to solver tolerance (CG vs BiCGSTAB on the
-    /// same SPD system).
+    /// lockstep through ONE integrator — whose matrices are assembled and
+    /// condensed once into a single shared
+    /// [`crate::session::MeshSession`], so the scalar and blocked
+    /// generators draw on the same plan and preconditioner — with one
+    /// fused SpMV and one blocked solve per time step for the whole set:
+    /// this is the data-generation workload the blocked solve pipeline
+    /// targets. For the wave equation each trajectory is bitwise identical
+    /// to [`PdeSetup::reference_trajectory`]; for Allen-Cahn agreement is
+    /// to solver tolerance (CG vs BiCGSTAB on the same SPD system).
     pub fn reference_trajectories(&self, ics: &[Vec<f64>], steps: usize) -> Vec<Vec<Vec<f64>>> {
         match self.kind {
             PdeKind::Wave => {

@@ -6,13 +6,11 @@ use anyhow::Result;
 
 use crate::assembly::map_reduce::FacetContext;
 use crate::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
-use crate::bc::{CondensePlan, DirichletBc, ReducedBatch, ReducedSystem};
+use crate::bc::DirichletBc;
 use crate::mesh::structured::rect_quad;
 use crate::mesh::{marker, Mesh};
-use crate::solver::{
-    cg_batch_warm, cg_batch_warm_with, AmgBatch, AmgHierarchy, PrecondEngine, PrecondKind,
-    SolverConfig,
-};
+use crate::session::MeshSession;
+use crate::solver::{PrecondKind, SolverConfig};
 use crate::sparse::{Csr, CsrBatch};
 
 /// Material and discretization parameters (paper defaults).
@@ -198,125 +196,73 @@ impl SimpProblem {
     /// the extreme (Emax/Emin = 10³) stiffness contrast SIMP develops.
     /// `warm` (a full nodal field, e.g. the previous topopt iterate) seeds
     /// the CG; `None` reproduces the cold start bitwise. One-shot
-    /// convenience — iteration loops hold [`SimpProblem::condense_plan`]
-    /// and call [`SimpProblem::solve_state_with`] so the Dirichlet
-    /// symbolic mapping is not rebuilt per solve.
+    /// convenience — iteration loops hold a [`SimpProblem::session`] and
+    /// call [`SimpProblem::solve_state_session`] so the Dirichlet symbolic
+    /// mapping and preconditioner setup are not rebuilt per solve.
     pub fn solve_state(&self, k: &Csr, warm: Option<&[f64]>) -> Result<(Vec<f64>, usize)> {
-        // `condense` is exactly plan-build + apply, so this agrees bitwise
-        // with the plan-cached path.
-        let plan = CondensePlan::new(k.nrows, &k.indptr, &k.indices, &self.bc);
-        self.solve_state_with(&plan, &k.data, warm)
+        // An ephemeral session IS exactly plan-build + apply + engine
+        // build + warm CG, so this agrees bitwise with the cached path.
+        let session = MeshSession::from_matrix(k, &self.f, &self.bc, self.solver_cfg);
+        let (u, stats) = session.solve_current(warm);
+        anyhow::ensure!(stats.converged, "state solve failed: {stats:?}");
+        Ok((u, stats.iterations))
     }
 
-    /// Scalar state solve through a cached condensation plan: per call only
-    /// the value gather + lift + CG run (the symbolic free-DoF mapping is a
-    /// function of pattern + clamp, built once by the caller). Bitwise
-    /// identical to [`SimpProblem::solve_state`] on the same values.
-    pub fn solve_state_with(
-        &self,
-        plan: &CondensePlan,
-        kvalues: &[f64],
-        warm: Option<&[f64]>,
-    ) -> Result<(Vec<f64>, usize)> {
-        let mut sys = plan.apply(kvalues, &self.f);
-        self.solve_state_reusing(plan, None, warm, &mut sys)
+    /// The per-problem solver session: the clamp's symbolic mapping on
+    /// this problem's (fixed) pattern plus persistent condensed-system
+    /// scratch, built once by long-lived drivers and refilled with each
+    /// iteration's `K(ρ)` values through
+    /// [`SimpProblem::solve_state_session`] /
+    /// [`SimpProblem::solve_state_batch_session`]. The engine is deferred
+    /// to the first solve (AMG aggregation must see real stiffness
+    /// values, not the zeroed pattern).
+    pub fn session(&self) -> MeshSession {
+        let pat = self.ctx.pattern_matrix();
+        MeshSession::from_pattern(&pat, &self.f, &self.bc, self.solver_cfg)
     }
 
-    /// Scalar state solve refilling a persistent [`ReducedSystem`] in
-    /// place: when `kvalues` is `Some`, the plan's value gather + lift is
-    /// reapplied into `sys` (zero allocation on the condensation side);
-    /// `None` solves `sys` as-is. Iteration loops hold the plan + one
-    /// system built at setup and call this per iteration (plus a
-    /// persistent engine slot — see [`SimpProblem::solve_state_engine`]).
-    /// Bitwise identical to [`SimpProblem::solve_state`] on the same
-    /// values.
-    pub fn solve_state_reusing(
+    /// Scalar state solve through a long-lived session: when `kvalues` is
+    /// `Some`, the session system is renumerated in place (value gather +
+    /// lift, zero allocation); `None` solves the session's current
+    /// operator as-is. The engine is refilled per call — for Jacobi that
+    /// is the per-solve diagonal extraction the historical path performed
+    /// (bitwise-identical); for AMG the aggregation and symbolic
+    /// triple-product built on the first solve serve the whole
+    /// optimization loop. Bitwise identical to [`SimpProblem::solve_state`]
+    /// on the same values and seed.
+    pub fn solve_state_session(
         &self,
-        plan: &CondensePlan,
+        session: &mut MeshSession,
         kvalues: Option<&[f64]>,
         warm: Option<&[f64]>,
-        sys: &mut ReducedSystem,
-    ) -> Result<(Vec<f64>, usize)> {
-        self.solve_state_engine(plan, kvalues, warm, sys, &mut None)
-    }
-
-    /// [`SimpProblem::solve_state_reusing`] with a caller-held
-    /// preconditioner slot: `None` builds the configured engine from the
-    /// (refilled) condensed stiffness, `Some` renumerates it in place —
-    /// for Jacobi that is the per-solve diagonal extraction the historical
-    /// path performed (bitwise-identical); for AMG it is
-    /// [`AmgHierarchy::refill`], so the aggregation and symbolic structure
-    /// built at iteration 0 serve the whole optimization loop.
-    pub fn solve_state_engine(
-        &self,
-        plan: &CondensePlan,
-        kvalues: Option<&[f64]>,
-        warm: Option<&[f64]>,
-        sys: &mut ReducedSystem,
-        engine: &mut Option<PrecondEngine>,
     ) -> Result<(Vec<f64>, usize)> {
         if let Some(values) = kvalues {
-            plan.reapply_into(values, &self.f, sys);
+            session.refill(values, &self.f);
         }
-        match engine {
-            Some(e) => e.refill(&sys.k),
-            None => *engine = Some(PrecondEngine::build(&sys.k, self.solver_cfg.precond)),
-        }
-        let e = engine.as_ref().expect("engine just ensured");
-        let x0 = warm.map(|w| sys.restrict(w));
-        let (u_free, stats) = e.cg_warm(&sys.k, &sys.rhs, x0.as_deref(), &self.solver_cfg);
+        session.sync_engine();
+        let (u, stats) = session.solve_current(warm);
         anyhow::ensure!(stats.converged, "state solve failed: {stats:?}");
-        Ok((sys.expand(&u_free), stats.iterations))
+        Ok((u, stats.iterations))
     }
 
-    /// The condensation plan of the (fixed) clamp on this problem's
-    /// pattern — built once by long-lived batch drivers and reused across
-    /// every iteration's [`SimpProblem::solve_state_batch_with`].
-    pub fn condense_plan(&self) -> CondensePlan {
-        let pat = self.ctx.pattern_matrix();
-        CondensePlan::new(pat.nrows, &pat.indptr, &pat.indices, &self.bc)
-    }
-
-    /// Blocked multi-design state solve: `S` stiffness instances on the
-    /// shared pattern are condensed through one symbolic mapping and solved
-    /// by lockstep CG (one fused SpMV per Krylov iteration for the whole
-    /// design set). `warm` carries per-design full nodal seeds (previous
-    /// iterates). Per design, results are bitwise identical to
-    /// [`SimpProblem::solve_state`] with the same seed.
-    pub fn solve_state_batch_with(
+    /// Blocked multi-design state solve through a long-lived session: `S`
+    /// stiffness instances on the shared pattern are condensed through the
+    /// session's symbolic mapping and solved by lockstep CG (one fused
+    /// SpMV per Krylov iteration for the whole design set). `warm` carries
+    /// per-design full nodal seeds (previous iterates). Under the default
+    /// Jacobi config each lane uses its own diagonal — per design bitwise
+    /// identical to [`SimpProblem::solve_state`] with the same seed; under
+    /// [`PrecondKind::Amg`] ONE hierarchy, built from design 0's condensed
+    /// stiffness on the first call and refilled afterwards, preconditions
+    /// every lane (the designs share a topology, so the shared-mesh
+    /// hierarchy is a valid SPD preconditioner for the whole set).
+    pub fn solve_state_batch_session(
         &self,
-        plan: &CondensePlan,
+        session: &mut MeshSession,
         kbatch: &CsrBatch,
         warm: Option<&[&[f64]]>,
     ) -> Result<(Vec<Vec<f64>>, Vec<usize>)> {
-        self.solve_state_batch_engine(plan, kbatch, warm, &mut None)
-    }
-
-    /// Blocked state solve with a caller-held AMG slot (unused under the
-    /// default Jacobi config — that path is bitwise-identical to the
-    /// historical [`SimpProblem::solve_state_batch_with`]). Under
-    /// [`PrecondKind::Amg`], ONE hierarchy — built from design 0's
-    /// condensed stiffness on the first call, refilled from it afterwards —
-    /// preconditions every lane of the lockstep CG ([`AmgBatch`]): the
-    /// designs share a topology, so the shared-mesh hierarchy is a valid
-    /// SPD preconditioner for the whole set.
-    pub fn solve_state_batch_engine(
-        &self,
-        plan: &CondensePlan,
-        kbatch: &CsrBatch,
-        warm: Option<&[&[f64]]>,
-        amg: &mut Option<AmgHierarchy>,
-    ) -> Result<(Vec<Vec<f64>>, Vec<usize>)> {
-        let red = plan.apply_batch(kbatch, &self.f);
-        let x0: Option<Vec<f64>> = warm.map(|ws| {
-            assert_eq!(ws.len(), kbatch.n_instances, "one warm seed per design");
-            let mut flat = Vec::with_capacity(kbatch.n_instances * red.n_free());
-            for w in ws {
-                flat.extend(red.restrict(w));
-            }
-            flat
-        });
-        let (u, stats) = self.solve_reduced_batch(&red, x0.as_deref(), amg);
+        let (red, u, stats) = session.solve_refit_batch(kbatch, &self.f, warm);
         let nf = red.n_free();
         let mut us = Vec::with_capacity(kbatch.n_instances);
         let mut iters = Vec::with_capacity(kbatch.n_instances);
@@ -328,33 +274,12 @@ impl SimpProblem {
         Ok((us, iters))
     }
 
-    /// The lockstep CG dispatch shared by the blocked state solves:
-    /// per-lane Jacobi under the default config, one build-or-refill
-    /// shared hierarchy under AMG.
-    fn solve_reduced_batch(
-        &self,
-        red: &ReducedBatch,
-        x0: Option<&[f64]>,
-        amg: &mut Option<AmgHierarchy>,
-    ) -> (Vec<f64>, Vec<crate::solver::SolveStats>) {
-        match self.solver_cfg.precond {
-            PrecondKind::Jacobi => cg_batch_warm(&red.k, &red.rhs, x0, &self.solver_cfg),
-            PrecondKind::Amg(acfg) => {
-                match amg {
-                    Some(h) => h.refill(red.k.values(0)),
-                    None => *amg = Some(AmgHierarchy::build(&red.k.instance(0), acfg)),
-                }
-                let h = amg.as_ref().expect("hierarchy just ensured");
-                let pc = AmgBatch::new(h, red.n_instances());
-                cg_batch_warm_with(&red.k, &red.rhs, x0, &pc, &self.solver_cfg)
-            }
-        }
-    }
-
-    /// One-shot blocked state solve (plan built per call — hold
-    /// [`SimpProblem::condense_plan`] to amortize it across iterations).
+    /// One-shot blocked state solve (session built per call — hold
+    /// [`SimpProblem::session`] to amortize the symbolic work across
+    /// iterations).
     pub fn solve_state_batch(&self, kbatch: &CsrBatch) -> Result<(Vec<Vec<f64>>, Vec<usize>)> {
-        self.solve_state_batch_with(&self.condense_plan(), kbatch, None)
+        let mut session = self.session();
+        self.solve_state_batch_session(&mut session, kbatch, None)
     }
 
     /// Compliance `C = Fᵀu`.

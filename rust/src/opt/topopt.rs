@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use crate::solver::{AmgHierarchy, PrecondEngine, PrecondKind};
+use crate::solver::PrecondKind;
 use crate::util::timer::Stopwatch;
 
 use super::adjoint;
@@ -159,23 +159,18 @@ pub fn run_topopt(cfg: &TopOptConfig) -> Result<TopOptResult> {
     let h = cfg.simp.lx / cfg.simp.nx as f64;
     let mut lane = Lane::new(&problem, cfg, h);
     // Per-iteration state, built once: the separable weighted-gather plan
-    // over the cached unit-modulus locals, the Dirichlet condensation plan
-    // (symbolic mapping is a function of pattern + clamp only), a
-    // persistent stiffness value array refilled in place, and the modulus
-    // buffer — the K(ρ) update allocates nothing after this point and the
-    // solve pays only the value gather + lift per iteration.
+    // over the cached unit-modulus locals, a persistent stiffness value
+    // array refilled in place, the modulus buffer, and the solver session
+    // (Dirichlet symbolic mapping + persistent condensed system +
+    // preconditioner engine — Jacobi rebuilds its diagonal per solve, the
+    // historical behavior bitwise; an AMG engine is built at iteration 0
+    // and only refilled afterwards). The K(ρ) update allocates nothing
+    // after this point and the solve pays only the value gather + lift
+    // per iteration.
     let plan = problem.batched_plan();
-    let cplan = problem.condense_plan();
+    let mut session = problem.session();
     let mut kvals = vec![0.0; problem.ctx.routing.nnz()];
     let mut moduli = vec![0.0; problem.n_elems()];
-    // Persistent condensed system, refilled in place each iteration
-    // (value gather + lift only — the symbolic arrays are never recloned).
-    let mut sys = cplan.apply(&kvals, &problem.f);
-    // Persistent preconditioner slot: Jacobi rebuilds its diagonal per
-    // solve (the historical behavior, bitwise); an AMG engine is built at
-    // iteration 0 and only refilled afterwards — the aggregation and
-    // Galerkin symbolic plans are paid once for the whole loop.
-    let mut engine: Option<PrecondEngine> = None;
     sw.stop();
 
     sw.start("loop");
@@ -185,12 +180,10 @@ pub fn run_topopt(cfg: &TopOptConfig) -> Result<TopOptResult> {
         // Warm start: seed CG with the previous iterate (densities move a
         // little per iteration, so the previous state is an excellent
         // guess; the drop shows up in `solver_iters_history`).
-        let (u, iters) = problem.solve_state_engine(
-            &cplan,
+        let (u, iters) = problem.solve_state_session(
+            &mut session,
             Some(&kvals),
             lane.u_prev.as_deref(),
-            &mut sys,
-            &mut engine,
         )?;
         lane.advance(&problem, cfg, u, iters, it);
     }
@@ -260,12 +253,14 @@ pub fn run_topopt_batch(cfgs: &[TopOptConfig]) -> Result<Vec<TopOptResult>> {
     problem.set_solver_precond(base.precond);
     // Gather weights built once; every iteration's S-instance re-assembly
     // is then a weighted gather over the shared pattern into a persistent
-    // CsrBatch (values refilled in place). Likewise the Dirichlet symbolic
-    // mapping: condensation bookkeeping is a function of pattern + clamp
+    // CsrBatch (values refilled in place). Likewise the solver session:
+    // the Dirichlet symbolic mapping is a function of pattern + clamp
     // only, so it is built once here and reused by every iteration's
-    // blocked solve.
+    // blocked solve; under AMG the session also keeps the one shared
+    // hierarchy (built from design 0 at iteration 0, refilled per
+    // iteration) that preconditions every lockstep lane.
     let plan = problem.batched_plan();
-    let cplan = problem.condense_plan();
+    let mut session = problem.session();
     let ne = problem.n_elems();
     let h = base.simp.lx / base.simp.nx as f64;
     let mut lanes: Vec<Lane> = cfgs.iter().map(|cfg| Lane::new(&problem, cfg, h)).collect();
@@ -274,10 +269,6 @@ pub fn run_topopt_batch(cfgs: &[TopOptConfig]) -> Result<Vec<TopOptResult>> {
         .ctx
         .routing
         .csr_batch(vec![0.0; lanes.len() * problem.ctx.routing.nnz()], lanes.len());
-    // Shared AMG slot (unused under the default Jacobi config): one
-    // hierarchy per mesh, built from design 0 at iteration 0, refilled per
-    // iteration, preconditioning every lockstep lane.
-    let mut amg: Option<AmgHierarchy> = None;
     sw.stop();
 
     sw.start("loop");
@@ -293,7 +284,7 @@ pub fn run_topopt_batch(cfgs: &[TopOptConfig]) -> Result<Vec<TopOptResult>> {
         // driver's warm start, so per-lane results stay identical).
         let warm: Vec<&[f64]> = lanes.iter().filter_map(|l| l.u_prev.as_deref()).collect();
         let warm_opt = (warm.len() == lanes.len()).then_some(&warm[..]);
-        let (us, iters) = problem.solve_state_batch_engine(&cplan, &kbatch, warm_opt, &mut amg)?;
+        let (us, iters) = problem.solve_state_batch_session(&mut session, &kbatch, warm_opt)?;
         for ((lane, cfg), (u, its)) in lanes.iter_mut().zip(cfgs).zip(us.into_iter().zip(iters)) {
             lane.advance(&problem, cfg, u, its, it);
         }

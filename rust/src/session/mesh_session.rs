@@ -1,0 +1,427 @@
+//! The [`MeshSession`] type: one owner for the per-mesh solve stack.
+
+use crate::assembly::{AssemblyContext, BilinearForm, Coefficient};
+use crate::bc::{condense, CondensePlan, DirichletBc, ReducedBatch, ReducedSystem};
+use crate::mesh::Mesh;
+use crate::solver::{
+    cg, cg_batch, cg_batch_warm, cg_batch_warm_with, AmgBatch, AmgHierarchy, AmgPrecond,
+    JacobiPrecond, LockstepOp, MultiRhs, PrecondEngine, PrecondKind, SolveStats, SolverConfig,
+};
+use crate::sparse::{Csr, CsrBatch};
+
+/// The complete per-mesh solve stack, built once per (mesh, BC, form):
+/// Dirichlet condensation plan, persistent reduced system, preconditioner
+/// engine, optional warm-start state, and (for self-assembling sessions)
+/// the assembly context. See the [module docs](super) for the
+/// symbolic-once / numeric-refill lifecycle and ownership rules.
+pub struct MeshSession {
+    /// Assembly context, owned when the session assembled its own
+    /// operator ([`MeshSession::poisson`]); sessions wrapping an
+    /// externally assembled matrix leave it to the caller.
+    ctx: Option<AssemblyContext>,
+    /// Dirichlet symbolic mapping on the session pattern — built once.
+    cplan: CondensePlan,
+    /// Persistent condensed system; [`MeshSession::refill`] renumerates
+    /// it in place (value gather + lift, zero allocation).
+    sys: ReducedSystem,
+    /// Preconditioner over the condensed session operator. `None` until
+    /// the first [`MeshSession::sync_engine`] on pattern-only sessions:
+    /// AMG aggregation reads VALUES, so building from a zeroed pattern
+    /// would not match a build from the first real operator.
+    engine: Option<PrecondEngine>,
+    /// Separate AMG slot for [`MeshSession::solve_refit_batch`], whose
+    /// hierarchy is built from the *condensed batch* representative (not
+    /// the session operator) — built on first use, refilled afterwards.
+    batch_amg: Option<AmgHierarchy>,
+    /// Stored warm-start seed (full DoF field) for
+    /// [`MeshSession::solve_current`].
+    warm: Option<Vec<f64>>,
+    config: SolverConfig,
+}
+
+impl MeshSession {
+    /// Fixed-operator Poisson session over a mesh: assemble the unit
+    /// diffusion operator once, clamp the whole boundary homogeneously,
+    /// condense and precondition. The coordinator's per-mesh state.
+    pub fn poisson(mesh: &Mesh, config: SolverConfig) -> MeshSession {
+        let ctx = AssemblyContext::new(mesh, 1);
+        let proto = BilinearForm::Diffusion {
+            rho: Coefficient::Const(1.0),
+        };
+        let k = ctx.assemble_matrix(&proto);
+        let zero = vec![0.0; ctx.n_dofs()];
+        let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
+        let cplan = CondensePlan::new(k.nrows, &k.indptr, &k.indices, &bc);
+        // One symbolic traversal serves both the cached plan and the
+        // fixed-operator reduced system.
+        let sys = cplan.apply(&k.data, &zero);
+        let engine = PrecondEngine::build(&sys.k, config.precond);
+        MeshSession {
+            ctx: Some(ctx),
+            cplan,
+            sys,
+            engine: Some(engine),
+            batch_amg: None,
+            warm: None,
+            config,
+        }
+    }
+
+    /// Session over an externally assembled operator: condense `K U = F`
+    /// once and build the configured engine from the condensed values.
+    pub fn from_matrix(
+        k: &Csr,
+        f_full: &[f64],
+        bc: &DirichletBc,
+        config: SolverConfig,
+    ) -> MeshSession {
+        let cplan = CondensePlan::new(k.nrows, &k.indptr, &k.indices, bc);
+        let sys = cplan.apply(&k.data, f_full);
+        let engine = PrecondEngine::build(&sys.k, config.precond);
+        MeshSession {
+            ctx: None,
+            cplan,
+            sys,
+            engine: Some(engine),
+            batch_amg: None,
+            warm: None,
+            config,
+        }
+    }
+
+    /// Session over a bare sparsity pattern (values all zero), for
+    /// drivers that refill the operator per iteration before solving.
+    /// The engine is deferred to the first [`MeshSession::sync_engine`]:
+    /// AMG aggregation depends on values, so it must see the first real
+    /// operator, not the zeroed pattern.
+    pub fn from_pattern(
+        pattern: &Csr,
+        f_full: &[f64],
+        bc: &DirichletBc,
+        config: SolverConfig,
+    ) -> MeshSession {
+        let cplan = CondensePlan::new(pattern.nrows, &pattern.indptr, &pattern.indices, bc);
+        let sys = cplan.apply(&pattern.data, f_full);
+        MeshSession {
+            ctx: None,
+            cplan,
+            sys,
+            engine: None,
+            batch_amg: None,
+            warm: None,
+            config,
+        }
+    }
+
+    /// Renumerate the session system for new operator values (and load)
+    /// on the unchanged pattern: value gather + restriction + boundary
+    /// lift, zero allocation, bitwise identical to a fresh condensation.
+    /// Call [`MeshSession::sync_engine`] before solving so the
+    /// preconditioner tracks the new values.
+    pub fn refill(&mut self, values: &[f64], f_full: &[f64]) {
+        self.cplan.reapply_into(values, f_full, &mut self.sys);
+    }
+
+    /// Bring the engine up to date with the current session values:
+    /// refill in place when built (Jacobi re-extracts its diagonal —
+    /// bitwise the historical per-solve build; AMG refills the hierarchy
+    /// through its cached symbolic plans), build it on first call.
+    pub fn sync_engine(&mut self) {
+        match &mut self.engine {
+            Some(e) => e.refill(&self.sys.k),
+            None => self.engine = Some(PrecondEngine::build(&self.sys.k, self.config.precond)),
+        }
+    }
+
+    /// Stash a full-DoF iterate as the warm-start seed for the next
+    /// [`MeshSession::solve_current`] (iteration loops seed with the
+    /// previous state).
+    pub fn seed_warm(&mut self, u_full: &[f64]) {
+        match &mut self.warm {
+            Some(w) => w.copy_from_slice(u_full),
+            None => self.warm = Some(u_full.to_vec()),
+        }
+    }
+
+    /// Drop the stored warm-start seed (next solve cold-starts).
+    pub fn clear_warm(&mut self) {
+        self.warm = None;
+    }
+
+    fn engine_ref(&self) -> &PrecondEngine {
+        self.engine
+            .as_ref()
+            .expect("session engine not built: call sync_engine() after the first refill")
+    }
+
+    /// Scalar PCG on the current session system. `warm` (full DoF field)
+    /// overrides the stored [`MeshSession::seed_warm`] seed; with
+    /// neither, the cold start is bitwise the historical trajectory.
+    /// Returns the expanded full-DoF solution.
+    pub fn solve_current(&self, warm: Option<&[f64]>) -> (Vec<f64>, SolveStats) {
+        let seed = warm.or(self.warm.as_deref());
+        let x0 = seed.map(|w| self.sys.restrict(w));
+        let (u_free, stats) =
+            self.engine_ref().cg_warm(&self.sys.k, &self.sys.rhs, x0.as_deref(), &self.config);
+        (self.sys.expand(&u_free), stats)
+    }
+
+    /// Scalar PCG against the session operator with a caller-supplied
+    /// full-DoF load (the fixed-operator serving path): restrict, solve
+    /// cold, expand.
+    pub fn solve_with_load(&self, f_full: &[f64]) -> (Vec<f64>, SolveStats) {
+        let rhs = self.sys.restrict(f_full);
+        let (u_free, stats) = self.engine_ref().cg_warm(&self.sys.k, &rhs, None, &self.config);
+        (self.sys.expand(&u_free), stats)
+    }
+
+    /// Scalar PCG on the session operator with an already-reduced RHS
+    /// (free DoFs) — time steppers form their own reduced loads. No
+    /// expansion; the caller owns the free-DoF state.
+    pub fn solve_reduced(&self, rhs: &[f64], x0: Option<&[f64]>) -> (Vec<f64>, SolveStats) {
+        self.engine_ref().cg_warm(&self.sys.k, rhs, x0, &self.config)
+    }
+
+    /// Scalar BiCGSTAB on the session operator with a reduced RHS (the
+    /// Allen-Cahn semi-implicit step).
+    pub fn bicgstab_reduced(&self, rhs: &[f64]) -> (Vec<f64>, SolveStats) {
+        self.engine_ref().bicgstab(&self.sys.k, rhs, &self.config)
+    }
+
+    /// Full per-instance pipeline for a *foreign* operator on the session
+    /// topology (per-request varcoeff solves): condense with the session
+    /// constraints, precondition — Jacobi extracts the request diagonal
+    /// (the historical per-request numbers, bitwise); AMG reuses the
+    /// session hierarchy, a valid SPD preconditioner for same-topology
+    /// positive-coefficient operators, so no request pays a hierarchy
+    /// construction — and solve. Returns the expanded solution.
+    pub fn solve_foreign(&self, k: &Csr, f_full: &[f64]) -> (Vec<f64>, SolveStats) {
+        let sys = condense(k, f_full, &self.sys.bc);
+        let (u_free, stats) = match self.engine_ref() {
+            PrecondEngine::Jacobi(_) => {
+                let pc = JacobiPrecond::new(&sys.k);
+                cg(&sys.k, &sys.rhs, &pc, &self.config)
+            }
+            PrecondEngine::Amg(h, ws) => {
+                cg(&sys.k, &sys.rhs, &AmgPrecond::with_scratch(h, ws), &self.config)
+            }
+        };
+        (sys.expand(&u_free), stats)
+    }
+
+    /// Lockstep multi-RHS operator over the session matrix, carrying the
+    /// engine's setup-time Jacobi diagonal when available (bitwise the
+    /// per-lane scalar preconditioning).
+    pub fn multi_op(&self, s_n: usize) -> MultiRhs<'_> {
+        match self.engine_ref().inv_diag() {
+            Some(inv) => MultiRhs::with_inv_diag(&self.sys.k, s_n, inv.to_vec()),
+            None => MultiRhs::new(&self.sys.k, s_n),
+        }
+    }
+
+    /// Lockstep PCG through the session engine on a caller-built op
+    /// (cold start): Jacobi lanes use the op's own diagonals; AMG applies
+    /// the session hierarchy to every lane per iteration.
+    pub fn solve_multi<Op: LockstepOp>(&self, op: &Op, rhs: &[f64]) -> (Vec<f64>, Vec<SolveStats>) {
+        self.engine_ref().cg_batch_warm(op, rhs, None, &self.config)
+    }
+
+    /// `S` solves against the session operator with instance-major
+    /// reduced loads (`S × n_free`) — the fixed-operator batched serving
+    /// path, one fused SpMV per Krylov iteration for the whole set.
+    pub fn solve_load_batch(&self, rhs: &[f64]) -> (Vec<f64>, Vec<SolveStats>) {
+        let nf = self.n_free();
+        assert_eq!(rhs.len() % nf.max(1), 0, "rhs must be S × n_free");
+        let op = self.multi_op(rhs.len() / nf.max(1));
+        self.solve_multi(&op, rhs)
+    }
+
+    /// `S` foreign operators on the session pattern, condensed through
+    /// the session plan and solved in lockstep (the batched varcoeff
+    /// pipeline). `f` is one broadcast load (`n_full`) or `S` instance-
+    /// major loads. Jacobi lanes match the scalar per-request pipeline
+    /// bitwise; AMG applies the session hierarchy to every lane. Returns
+    /// the reduced batch (for expansion) with solutions and stats.
+    pub fn solve_varcoeff_batch(
+        &self,
+        kbatch: &CsrBatch,
+        f: &[f64],
+    ) -> (ReducedBatch, Vec<f64>, Vec<SolveStats>) {
+        let red = self.cplan.apply_batch(kbatch, f);
+        let (u, stats) = match self.engine_ref() {
+            PrecondEngine::Jacobi(_) => cg_batch(&red.k, &red.rhs, &self.config),
+            PrecondEngine::Amg(h, ws) => {
+                let pc = AmgBatch::with_scratch(h, red.n_instances(), ws);
+                cg_batch_warm_with(&red.k, &red.rhs, None, &pc, &self.config)
+            }
+        };
+        (red, u, stats)
+    }
+
+    /// `S` refitted session operators (same pattern, new values per
+    /// design — the lockstep topology-optimization state solve), with
+    /// optional per-design full-DoF warm seeds. Under Jacobi each lane
+    /// uses its own diagonal (bitwise the historical blocked path);
+    /// under AMG one hierarchy — built from design 0's condensed
+    /// stiffness on first call, refilled from it afterwards — serves
+    /// every lane. Returns the reduced batch with solutions and stats.
+    pub fn solve_refit_batch(
+        &mut self,
+        kbatch: &CsrBatch,
+        f: &[f64],
+        warm: Option<&[&[f64]]>,
+    ) -> (ReducedBatch, Vec<f64>, Vec<SolveStats>) {
+        let red = self.cplan.apply_batch(kbatch, f);
+        let x0: Option<Vec<f64>> = warm.map(|ws| {
+            assert_eq!(ws.len(), kbatch.n_instances, "one warm seed per design");
+            let mut flat = Vec::with_capacity(kbatch.n_instances * red.n_free());
+            for w in ws {
+                flat.extend(red.restrict(w));
+            }
+            flat
+        });
+        let (u, stats) = match self.config.precond {
+            PrecondKind::Jacobi => cg_batch_warm(&red.k, &red.rhs, x0.as_deref(), &self.config),
+            PrecondKind::Amg(acfg) => {
+                match &mut self.batch_amg {
+                    Some(h) => h.refill(red.k.values(0)),
+                    None => self.batch_amg = Some(AmgHierarchy::build(&red.k.instance(0), acfg)),
+                }
+                let h = self.batch_amg.as_ref().expect("hierarchy just ensured");
+                let pc = AmgBatch::new(h, red.n_instances());
+                cg_batch_warm_with(&red.k, &red.rhs, x0.as_deref(), &pc, &self.config)
+            }
+        };
+        (red, u, stats)
+    }
+
+    /// The owned assembly context of a self-assembling session.
+    pub fn ctx(&self) -> &AssemblyContext {
+        self.ctx.as_ref().expect("session does not own an assembly context")
+    }
+
+    /// The condensed session operator.
+    pub fn matrix(&self) -> &Csr {
+        &self.sys.k
+    }
+
+    /// The condensed session right-hand side.
+    pub fn reduced_rhs(&self) -> &[f64] {
+        &self.sys.rhs
+    }
+
+    /// Sorted free (unconstrained) DoF indices.
+    pub fn free(&self) -> &[usize] {
+        &self.sys.free
+    }
+
+    /// The session constraints.
+    pub fn bc(&self) -> &DirichletBc {
+        &self.sys.bc
+    }
+
+    /// The Dirichlet symbolic mapping (for same-pattern auxiliary
+    /// condensations — e.g. a time stepper's stiffness next to its mass).
+    pub fn plan(&self) -> &CondensePlan {
+        &self.cplan
+    }
+
+    pub fn n_free(&self) -> usize {
+        self.sys.free.len()
+    }
+
+    pub fn n_full(&self) -> usize {
+        self.sys.n_full()
+    }
+
+    /// Restrict a full vector to free DoFs.
+    pub fn restrict(&self, full: &[f64]) -> Vec<f64> {
+        self.sys.restrict(full)
+    }
+
+    /// Expand a free-DoF solution to the full DoF vector (inserting the
+    /// prescribed boundary values).
+    pub fn expand(&self, u_free: &[f64]) -> Vec<f64> {
+        self.sys.expand(u_free)
+    }
+
+    pub fn config(&self) -> &SolverConfig {
+        &self.config
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::assembly::LinearForm;
+    use crate::mesh::structured::unit_square_tri;
+
+    fn poisson_pieces(n: usize) -> (Csr, Vec<f64>, DirichletBc) {
+        let m = unit_square_tri(n);
+        let ctx = AssemblyContext::new(&m, 1);
+        let k = ctx.assemble_matrix(&BilinearForm::Diffusion {
+            rho: Coefficient::Const(1.0),
+        });
+        let f = ctx.assemble_vector(&LinearForm::Source { f: Coefficient::Const(1.0) });
+        let bc = DirichletBc::homogeneous(m.boundary_nodes());
+        (k, f, bc)
+    }
+
+    #[test]
+    fn from_matrix_solves_and_matches_manual_stack() {
+        let (k, f, bc) = poisson_pieces(6);
+        let session = MeshSession::from_matrix(&k, &f, &bc, SolverConfig::default());
+        let (u, stats) = session.solve_current(None);
+        assert!(stats.converged);
+        // Manual pre-session stack: condense + engine + cg, bitwise.
+        let sys = condense(&k, &f, &bc);
+        let engine = PrecondEngine::build(&sys.k, PrecondKind::Jacobi);
+        let (uf, st) = engine.cg_warm(&sys.k, &sys.rhs, None, &SolverConfig::default());
+        assert_eq!(u, sys.expand(&uf));
+        assert_eq!(stats.iterations, st.iterations);
+    }
+
+    #[test]
+    fn pattern_session_refill_matches_direct_build() {
+        let (k, f, bc) = poisson_pieces(5);
+        let pattern = Csr {
+            data: vec![0.0; k.data.len()],
+            ..k.clone()
+        };
+        let mut session = MeshSession::from_pattern(&pattern, &f, &bc, SolverConfig::default());
+        session.refill(&k.data, &f);
+        session.sync_engine();
+        let (u, _) = session.solve_current(None);
+        let direct = MeshSession::from_matrix(&k, &f, &bc, SolverConfig::default());
+        let (u2, _) = direct.solve_current(None);
+        assert_eq!(u, u2);
+    }
+
+    #[test]
+    fn warm_seed_is_used_and_clearable() {
+        let (k, f, bc) = poisson_pieces(6);
+        let mut session = MeshSession::from_matrix(&k, &f, &bc, SolverConfig::default());
+        let (u, cold) = session.solve_current(None);
+        session.seed_warm(&u);
+        let (_, warm) = session.solve_current(None);
+        assert!(warm.iterations < cold.iterations, "{warm:?} vs {cold:?}");
+        session.clear_warm();
+        let (_, cold2) = session.solve_current(None);
+        assert_eq!(cold2.iterations, cold.iterations);
+    }
+
+    #[test]
+    fn load_batch_lane_matches_scalar_solve() {
+        let (k, f, bc) = poisson_pieces(5);
+        let session = MeshSession::from_matrix(&k, &f, &bc, SolverConfig::default());
+        let nf = session.n_free();
+        let mut rhs = Vec::with_capacity(2 * nf);
+        rhs.extend(session.reduced_rhs());
+        rhs.extend(session.reduced_rhs().iter().map(|v| 2.0 * v));
+        let (u, stats) = session.solve_load_batch(&rhs);
+        assert!(stats.iter().all(|s| s.converged));
+        let (u0, st0) = session.solve_reduced(&rhs[..nf], None);
+        assert_eq!(&u[..nf], &u0[..]);
+        assert_eq!(stats[0].iterations, st0.iterations);
+    }
+}

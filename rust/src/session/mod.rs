@@ -1,0 +1,61 @@
+//! The per-mesh solver session: ONE owner for the solve stack every
+//! downstream path shares.
+//!
+//! The paper's central claim is that a single Galerkin assembly + solve
+//! core serves solving, PDE-constrained optimization and operator
+//! learning. This module is that core's runtime embodiment: a
+//! [`MeshSession`] is built once per (mesh, boundary conditions, form)
+//! and owns the complete per-mesh stack —
+//!
+//! * the Dirichlet symbolic mapping ([`crate::bc::CondensePlan`]),
+//! * the persistent condensed system ([`crate::bc::ReducedSystem`]),
+//! * the preconditioner engine ([`crate::solver::PrecondEngine`]:
+//!   Jacobi diagonal or smoothed-aggregation AMG hierarchy), and
+//! * optional warm-start state for iteration loops.
+//!
+//! # Symbolic-once / numeric-refill lifecycle
+//!
+//! Everything that depends only on the sparsity *pattern* — the free-DoF
+//! mapping, the condensed pattern, the AMG aggregation and symbolic
+//! triple-product plans — is computed exactly once, at session build.
+//! Everything that depends on *values* flows through refill entry points
+//! that reuse the symbolic plans without reallocating:
+//!
+//! 1. **Build** ([`MeshSession::from_matrix`] /
+//!    [`MeshSession::from_pattern`]): condense the operator (or its bare
+//!    pattern) once, build the engine (deferred for pattern-only builds,
+//!    because AMG aggregation reads values).
+//! 2. **Refill** ([`MeshSession::refill`] +
+//!    [`MeshSession::sync_engine`]): push new values through
+//!    [`crate::bc::CondensePlan::reapply_into`] and
+//!    [`crate::solver::PrecondEngine::refill`] — zero allocation, bitwise
+//!    identical to a fresh condense + build-from-values.
+//! 3. **Solve** ([`MeshSession::solve_current`],
+//!    [`MeshSession::solve_with_load`], [`MeshSession::solve_load_batch`],
+//!    [`MeshSession::solve_varcoeff_batch`],
+//!    [`MeshSession::solve_refit_batch`], …): scalar or lockstep, against
+//!    the session operator or per-request foreign operators on the same
+//!    pattern, each path bitwise identical to the hand-wired stack it
+//!    replaced.
+//! 4. **Seed** ([`MeshSession::seed_warm`]): stash a full-DoF iterate so
+//!    the next [`MeshSession::solve_current`] warm-starts from it.
+//!
+//! # Ownership rules
+//!
+//! Outside this module (and `bc`/`solver`, which define the types), no
+//! code constructs a [`crate::bc::CondensePlan`] or a
+//! [`crate::solver::PrecondEngine`] directly — CI greps for it. Consumers
+//! hold a `MeshSession` (the coordinator's registry holds
+//! `Arc<BatchSolver>`-wrapped sessions, the designed seam for sharded
+//! multi-worker serving) and go through its lifecycle API, so the next
+//! capabilities (sharded workers, AMR re-registration, predict-then-
+//! correct seeding) are one-call-site changes instead of five.
+//!
+//! All interior scratch (`ReducedSystem` storage, AMG cycle workspace
+//! behind a `Mutex`) lives inside the session, so repeated calls on any
+//! path stay allocation-free and the session is `Sync`: one instance can
+//! serve scalar and blocked rollouts concurrently behind an `Arc`.
+
+mod mesh_session;
+
+pub use mesh_session::MeshSession;

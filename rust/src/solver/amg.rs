@@ -53,7 +53,7 @@
 //! — for vector problems the hierarchy is still SPD and symmetric, just
 //! less optimal.
 
-use std::cell::RefCell;
+use std::sync::Mutex;
 
 use crate::sparse::{Csr, Dense, LuFactor};
 use crate::util::threadpool::{self, SyncPtr};
@@ -723,14 +723,17 @@ impl CycleScratch {
 
 /// Scratch storage of the V-cycle wrappers: owned (one-shot constructions)
 /// or borrowed from a long-lived holder like [`super::PrecondEngine`], so
-/// repeated solves reuse one allocation.
+/// repeated solves reuse one allocation. The slot is a `Mutex` (not a
+/// `RefCell`) so engine-holding drivers stay `Sync` and can sit behind an
+/// `Arc` — the lock is uncontended on every current path (one solve at a
+/// time per engine) and costs one atomic per preconditioner application.
 enum ScratchSlot<'a> {
-    Owned(RefCell<CycleScratch>),
-    Shared(&'a RefCell<CycleScratch>),
+    Owned(Mutex<CycleScratch>),
+    Shared(&'a Mutex<CycleScratch>),
 }
 
 impl ScratchSlot<'_> {
-    fn cell(&self) -> &RefCell<CycleScratch> {
+    fn cell(&self) -> &Mutex<CycleScratch> {
         match self {
             ScratchSlot::Owned(c) => c,
             ScratchSlot::Shared(c) => c,
@@ -750,7 +753,7 @@ impl<'h> AmgPrecond<'h> {
     pub fn new(h: &'h AmgHierarchy) -> AmgPrecond<'h> {
         AmgPrecond {
             h,
-            scratch: ScratchSlot::Owned(RefCell::new(h.scratch(1))),
+            scratch: ScratchSlot::Owned(Mutex::new(h.scratch(1))),
         }
     }
 
@@ -758,7 +761,7 @@ impl<'h> AmgPrecond<'h> {
     /// engine-owned slot that makes repeated AMG solves allocation-free.
     pub fn with_scratch(
         h: &'h AmgHierarchy,
-        scratch: &'h RefCell<CycleScratch>,
+        scratch: &'h Mutex<CycleScratch>,
     ) -> AmgPrecond<'h> {
         AmgPrecond { h, scratch: ScratchSlot::Shared(scratch) }
     }
@@ -766,7 +769,7 @@ impl<'h> AmgPrecond<'h> {
 
 impl Preconditioner for AmgPrecond<'_> {
     fn apply(&self, r: &[f64], z: &mut [f64]) {
-        let mut ws = self.scratch.cell().borrow_mut();
+        let mut ws = self.scratch.cell().lock().unwrap();
         ws.ensure(self.h, 1);
         self.h.vcycle_into(1, r, z, &mut ws);
     }
@@ -787,7 +790,7 @@ impl<'h> AmgBatch<'h> {
         AmgBatch {
             h,
             s_n,
-            scratch: ScratchSlot::Owned(RefCell::new(h.scratch(s_n))),
+            scratch: ScratchSlot::Owned(Mutex::new(h.scratch(s_n))),
         }
     }
 
@@ -795,7 +798,7 @@ impl<'h> AmgBatch<'h> {
     pub fn with_scratch(
         h: &'h AmgHierarchy,
         s_n: usize,
-        scratch: &'h RefCell<CycleScratch>,
+        scratch: &'h Mutex<CycleScratch>,
     ) -> AmgBatch<'h> {
         AmgBatch { h, s_n, scratch: ScratchSlot::Shared(scratch) }
     }
@@ -803,7 +806,7 @@ impl<'h> AmgBatch<'h> {
 
 impl super::cg_batch::LockstepPrecond for AmgBatch<'_> {
     fn apply_batch(&self, r: &[f64], z: &mut [f64]) {
-        let mut ws = self.scratch.cell().borrow_mut();
+        let mut ws = self.scratch.cell().lock().unwrap();
         ws.ensure(self.h, self.s_n);
         self.h.vcycle_into(self.s_n, r, z, &mut ws);
     }

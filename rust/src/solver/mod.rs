@@ -32,9 +32,13 @@
 //!
 //! Opt in per call site through [`SolverConfig::precond`]
 //! ([`PrecondKind::Amg`]); the default ([`PrecondKind::Jacobi`]) keeps
-//! every pre-existing trajectory bitwise intact. Long-lived drivers hold an
-//! [`amg::AmgHierarchy`] (or a [`PrecondEngine`]) next to their
-//! `CondensePlan` and pass it to the `*_with` solver entry points directly.
+//! every pre-existing trajectory bitwise intact. Downstream drivers do not
+//! wire hierarchies by hand: they hold a
+//! [`crate::session::MeshSession`], which owns the [`PrecondEngine`] next
+//! to its condensation plan and refills it through the session lifecycle
+//! ([`crate::session::MeshSession::sync_engine`]). Only the session layer
+//! (and this module's own [`solve`] convenience) constructs a
+//! [`PrecondEngine`] — CI greps for strays.
 
 pub mod amg;
 pub mod bicgstab;

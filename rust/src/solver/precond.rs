@@ -3,7 +3,7 @@
 //! drivers (integrators, the coordinator, topology optimization) hold to
 //! dispatch between Jacobi and AMG across scalar AND lockstep solves.
 
-use std::cell::RefCell;
+use std::sync::Mutex;
 
 use crate::sparse::Csr;
 
@@ -69,8 +69,9 @@ pub enum PrecondEngine {
     /// through this engine — scalar or lockstep, any lane count — reuses
     /// the one workspace ([`CycleScratch::ensure`] reshapes it only when
     /// the configuration changes), so repeated AMG solves allocate
-    /// nothing per call.
-    Amg(AmgHierarchy, RefCell<CycleScratch>),
+    /// nothing per call. The scratch sits in a `Mutex` so the engine is
+    /// `Sync` and session registries can share it behind an `Arc`.
+    Amg(AmgHierarchy, Mutex<CycleScratch>),
 }
 
 impl PrecondEngine {
@@ -79,7 +80,7 @@ impl PrecondEngine {
         match kind {
             PrecondKind::Jacobi => PrecondEngine::Jacobi(JacobiPrecond::new(a)),
             PrecondKind::Amg(cfg) => {
-                PrecondEngine::Amg(AmgHierarchy::build(a, cfg), RefCell::new(CycleScratch::empty()))
+                PrecondEngine::Amg(AmgHierarchy::build(a, cfg), Mutex::new(CycleScratch::empty()))
             }
         }
     }

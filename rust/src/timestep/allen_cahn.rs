@@ -6,29 +6,30 @@
 //! `−ε² u(u²−1)`, assembled every step through TensorGalerkin's Map-Reduce
 //! with the nodal field interpolated to quadrature points (the paper's
 //! analytic shape-function evaluation — no autodiff, no per-element loops).
+//! The system matrix is condensed once into a [`MeshSession`] shared by the
+//! scalar and blocked rollouts; the mass matrix rides on the same session
+//! plan (they share the assembly pattern).
 
 use crate::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
-use crate::bc::{condense, DirichletBc};
+use crate::bc::DirichletBc;
 use crate::mesh::Mesh;
-use crate::solver::{MultiRhs, PrecondEngine, PrecondKind, SolverConfig};
+use crate::session::MeshSession;
+use crate::solver::{PrecondKind, SolverConfig};
 use crate::sparse::Csr;
 
 /// Precomputed Allen-Cahn stepping state.
 pub struct AllenCahnIntegrator {
     ctx: AssemblyContext,
-    /// Condensed system matrix `M/Δt + a²K`.
-    pub a_mat: Csr,
-    /// Condensed mass matrix (for the RHS term `M U^k / Δt`).
+    /// Shared solver session over the condensed system matrix
+    /// `M/Δt + a²K` — the engine is built once (the matrix never changes
+    /// across a rollout, so one AMG hierarchy serves every step of every
+    /// lane).
+    session: MeshSession,
+    /// Condensed mass matrix (for the RHS term `M U^k / Δt`; condensed
+    /// through the session's plan — same pattern).
     pub m: Csr,
-    pub free: Vec<usize>,
     pub dt: f64,
     pub eps2: f64,
-    n_full: usize,
-    /// Implicit-solve preconditioner over `M/Δt + a²K`, built once (the
-    /// system matrix never changes across a rollout — one AMG hierarchy
-    /// serves every step of every lane).
-    engine: PrecondEngine,
-    config: SolverConfig,
 }
 
 impl AllenCahnIntegrator {
@@ -68,35 +69,43 @@ impl AllenCahnIntegrator {
         a_full.scale(1.0 / dt);
         let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
         let zero = vec![0.0; ctx.n_dofs()];
-        let sys_a = condense(&a_full, &zero, &bc);
-        let sys_m = condense(&m_full, &zero, &bc);
-        let engine = PrecondEngine::build(&sys_a.k, precond);
-        AllenCahnIntegrator {
-            a_mat: sys_a.k,
-            m: sys_m.k,
-            free: sys_a.free.clone(),
-            dt,
-            eps2,
-            n_full: ctx.n_dofs(),
-            engine,
-            config: SolverConfig {
+        let session = MeshSession::from_matrix(
+            &a_full,
+            &zero,
+            &bc,
+            SolverConfig {
                 precond,
                 ..SolverConfig::default()
             },
+        );
+        // M shares the system matrix's pattern, so the session plan
+        // condenses it too — bitwise the separate condensation it replaced.
+        let m = session.plan().apply(&m_full.data, &zero).k;
+        AllenCahnIntegrator {
             ctx,
+            session,
+            m,
+            dt,
+            eps2,
         }
+    }
+
+    /// The condensed system matrix `M/Δt + a²K` (the session operator).
+    pub fn a_mat(&self) -> &Csr {
+        self.session.matrix()
+    }
+
+    /// Free DoF ids (interior nodes).
+    pub fn free(&self) -> &[usize] {
+        self.session.free()
     }
 
     pub fn restrict(&self, full: &[f64]) -> Vec<f64> {
-        self.free.iter().map(|&f| full[f]).collect()
+        self.session.restrict(full)
     }
 
     pub fn expand(&self, free_vals: &[f64]) -> Vec<f64> {
-        let mut out = vec![0.0; self.n_full];
-        for (&f, &v) in self.free.iter().zip(free_vals) {
-            out[f] = v;
-        }
-        out
+        self.session.expand(free_vals)
     }
 
     /// Reaction load `F(U)_i = ∫ −ε² u(u²−1) φ_i` for a *full* nodal field,
@@ -137,14 +146,15 @@ impl AllenCahnIntegrator {
     pub fn step(&self, u: &[f64]) -> Vec<f64> {
         let u_full = self.expand(u);
         let reaction_full = self.reaction_load_full(&u_full);
-        let reaction: Vec<f64> = self.free.iter().map(|&f| reaction_full[f]).collect();
+        let reaction: Vec<f64> =
+            self.session.free().iter().map(|&f| reaction_full[f]).collect();
         let mu = self.m.dot(u);
         let rhs: Vec<f64> = mu
             .iter()
             .zip(&reaction)
             .map(|(&m, &r)| m / self.dt + r)
             .collect();
-        let (next, stats) = self.engine.bicgstab(&self.a_mat, &rhs, &self.config);
+        let (next, stats) = self.session.bicgstab_reduced(&rhs);
         debug_assert!(stats.converged, "{stats:?}");
         next
     }
@@ -165,13 +175,14 @@ impl AllenCahnIntegrator {
     /// loads are assembled by ONE batched Map-Reduce
     /// ([`AssemblyContext::assemble_vector_batch`]), the `S` mass products
     /// by one fused [`Csr::spmv_multi`], and the `S` implicit solves by one
-    /// blocked [`cg_batch`] on the shared system matrix. `M/Δt + a²K` is
+    /// blocked lockstep CG through the shared session. `M/Δt + a²K` is
     /// SPD, so lockstep CG applies; the scalar path keeps the paper's
     /// BiCGSTAB, hence per-instance agreement is to solver tolerance
     /// (both converge to `rel_tol`) rather than bitwise.
     pub fn rollout_batch(&self, u0s_full: &[Vec<f64>], steps: usize) -> Vec<Vec<Vec<f64>>> {
         let s_n = u0s_full.len();
-        let nf = self.free.len();
+        let nf = self.session.n_free();
+        let free = self.session.free();
         if s_n == 0 {
             return Vec::new();
         }
@@ -183,21 +194,19 @@ impl AllenCahnIntegrator {
         for (s, traj) in trajs.iter_mut().enumerate() {
             traj.push(u[s * nf..(s + 1) * nf].to_vec());
         }
-        // Reuse the constructor-time preconditioner; the system matrix
-        // never changes across the rollout.
-        let op = match self.engine.inv_diag() {
-            Some(inv) => MultiRhs::with_inv_diag(&self.a_mat, s_n, inv.to_vec()),
-            None => MultiRhs::new(&self.a_mat, s_n),
-        };
+        // Reuse the session's constructor-time preconditioner; the system
+        // matrix never changes across the rollout.
+        let op = self.session.multi_op(s_n);
         let mut mu = vec![0.0; s_n * nf];
         // Persistent per-rollout buffers: the fused batched reaction
         // assembly and the blocked RHS are refilled in place every step,
         // and the per-lane quadrature coefficient buffers are reclaimed
         // from the forms after each assembly — the whole step is
         // allocation-free in steady state.
-        let mut reactions = vec![0.0; s_n * self.n_full];
+        let n_full = self.session.n_full();
+        let mut reactions = vec![0.0; s_n * n_full];
         let mut rhs = vec![0.0; s_n * nf];
-        let mut full = vec![0.0; self.n_full];
+        let mut full = vec![0.0; n_full];
         let nq = self.ctx.quad.len();
         let ne = self.ctx.n_cells();
         let mut quad_bufs: Vec<Vec<f64>> = (0..s_n).map(|_| vec![0.0; ne * nq]).collect();
@@ -211,7 +220,7 @@ impl AllenCahnIntegrator {
                 .drain(..)
                 .enumerate()
                 .map(|(s, mut vals)| {
-                    for (&dof, &v) in self.free.iter().zip(&u[s * nf..(s + 1) * nf]) {
+                    for (&dof, &v) in free.iter().zip(&u[s * nf..(s + 1) * nf]) {
                         full[dof] = v;
                     }
                     self.reaction_quad_into(&full, &mut vals);
@@ -219,13 +228,12 @@ impl AllenCahnIntegrator {
                 })
                 .collect();
             self.ctx.assemble_vector_batch_into(&lforms, &mut reactions);
-            let n_full = self.n_full;
             self.m.spmv_multi(&u, &mut mu, s_n);
             for (i, r) in rhs.iter_mut().enumerate() {
                 let (s, j) = (i / nf, i % nf);
-                *r = mu[i] / self.dt + reactions[s * n_full + self.free[j]];
+                *r = mu[i] / self.dt + reactions[s * n_full + free[j]];
             }
-            let (next, stats) = self.engine.cg_batch_warm(&op, &rhs, None, &self.config);
+            let (next, stats) = self.session.solve_multi(&op, &rhs);
             // Hard check: this feeds bulk reference-data generation, where
             // a silently unconverged solve would corrupt every later step.
             assert!(stats.iter().all(|st| st.converged), "implicit solve: {stats:?}");
@@ -340,7 +348,7 @@ mod tests {
     fn single_step_preserves_constant_zero() {
         let m = lshape_tri(4);
         let ac = AllenCahnIntegrator::new(&m, 1e-2, 1.0, 1e-3);
-        let u = vec![0.0; ac.free.len()];
+        let u = vec![0.0; ac.free().len()];
         let next = ac.step(&u);
         assert!(next.iter().all(|&v| v.abs() < 1e-12));
     }

@@ -2,30 +2,30 @@
 //!
 //! `M (U^{k+2} − 2U^{k+1} + U^k)/Δt² + c² K U^{k+1} = 0`,
 //!
-//! with homogeneous Dirichlet boundary. `M` and `K` are condensed once; each
-//! step is one SpMV plus one mass solve (CG — `M` is SPD and extremely well
-//! conditioned).
+//! with homogeneous Dirichlet boundary. `M` and `K` are condensed once
+//! through ONE [`MeshSession`] (they share the assembly pattern, so the
+//! session's Dirichlet plan serves both); each step is one SpMV plus one
+//! mass solve through the session engine (CG — `M` is SPD and extremely
+//! well conditioned). The scalar and blocked rollouts share the same
+//! session, so the constructor-time preconditioner serves both paths.
 
 use crate::assembly::{AssemblyContext, BilinearForm, Coefficient};
-use crate::bc::{condense, DirichletBc};
+use crate::bc::DirichletBc;
 use crate::mesh::Mesh;
-use crate::solver::{MultiRhs, PrecondEngine, PrecondKind, SolverConfig};
+use crate::session::MeshSession;
+use crate::solver::{PrecondKind, SolverConfig};
 use crate::sparse::Csr;
 
 /// Precomputed wave stepping state.
 pub struct WaveIntegrator {
-    /// Condensed mass matrix.
-    pub m: Csr,
-    /// Condensed stiffness matrix.
+    /// Shared solver session over the condensed mass matrix — the operator
+    /// every step solves against (plan, engine, free-DoF mapping).
+    session: MeshSession,
+    /// Condensed stiffness matrix (same pattern as the mass; condensed
+    /// through the session's plan).
     pub k: Csr,
-    /// Free DoF ids (interior nodes).
-    pub free: Vec<usize>,
     pub c2: f64,
     pub dt: f64,
-    n_full: usize,
-    /// Mass-solve preconditioner, built once (M never changes).
-    engine: PrecondEngine,
-    config: SolverConfig,
 }
 
 impl WaveIntegrator {
@@ -52,44 +52,52 @@ impl WaveIntegrator {
         let m_full = km.instance(1);
         let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
         let zero = vec![0.0; ctx.n_dofs()];
-        let sys_k = condense(&k_full, &zero, &bc);
-        let sys_m = condense(&m_full, &zero, &bc);
-        let engine = PrecondEngine::build(&sys_m.k, precond);
-        WaveIntegrator {
-            m: sys_m.k,
-            k: sys_k.k,
-            free: sys_k.free.clone(),
-            c2: c * c,
-            dt,
-            n_full: ctx.n_dofs(),
-            engine,
-            config: SolverConfig {
+        let session = MeshSession::from_matrix(
+            &m_full,
+            &zero,
+            &bc,
+            SolverConfig {
                 rel_tol: 1e-12,
                 precond,
                 ..SolverConfig::default()
             },
+        );
+        // K shares M's assembly pattern, so the session plan condenses it
+        // too — bitwise the separate condensation it replaces.
+        let k = session.plan().apply(&k_full.data, &zero).k;
+        WaveIntegrator {
+            session,
+            k,
+            c2: c * c,
+            dt,
         }
+    }
+
+    /// The condensed mass matrix (the session operator).
+    pub fn mass(&self) -> &Csr {
+        self.session.matrix()
+    }
+
+    /// Free DoF ids (interior nodes).
+    pub fn free(&self) -> &[usize] {
+        self.session.free()
     }
 
     /// Restrict a full nodal field to free DoFs.
     pub fn restrict(&self, full: &[f64]) -> Vec<f64> {
-        self.free.iter().map(|&f| full[f]).collect()
+        self.session.restrict(full)
     }
 
     /// Expand free DoFs to the full field (zeros on the boundary).
     pub fn expand(&self, free_vals: &[f64]) -> Vec<f64> {
-        let mut out = vec![0.0; self.n_full];
-        for (&f, &v) in self.free.iter().zip(free_vals) {
-            out[f] = v;
-        }
-        out
+        self.session.expand(free_vals)
     }
 
     /// One central-difference step: given `U^k`, `U^{k+1}` (free DoFs),
     /// return `U^{k+2} = 2U^{k+1} − U^k − Δt² c² M⁻¹ K U^{k+1}`.
     pub fn step(&self, u_prev: &[f64], u_curr: &[f64]) -> Vec<f64> {
         let ku = self.k.dot(u_curr);
-        let (minv_ku, stats) = self.engine.cg_warm(&self.m, &ku, None, &self.config);
+        let (minv_ku, stats) = self.session.solve_reduced(&ku, None);
         debug_assert!(stats.converged);
         let s = self.dt * self.dt * self.c2;
         u_curr
@@ -104,7 +112,7 @@ impl WaveIntegrator {
     /// `U^1 = U^0 + Δt V^0 − (Δt²/2) c² M⁻¹K U^0` (Taylor start).
     pub fn first_step(&self, u0: &[f64], v0: &[f64]) -> Vec<f64> {
         let ku = self.k.dot(u0);
-        let (minv_ku, _) = self.engine.cg_warm(&self.m, &ku, None, &self.config);
+        let (minv_ku, _) = self.session.solve_reduced(&ku, None);
         let s = 0.5 * self.dt * self.dt * self.c2;
         u0.iter()
             .zip(v0)
@@ -133,14 +141,15 @@ impl WaveIntegrator {
 
     /// Roll out `S` trajectories in lockstep: per step, ONE fused `K` SpMV
     /// over all instances ([`Csr::spmv_multi`]) and ONE blocked mass solve
-    /// ([`cg_batch`] on [`MultiRhs`]) replace `S` scalar SpMV+CG pairs —
-    /// the mass solves repeat over a shared pattern, so the pattern (and
-    /// here the values too) is read once per step for the whole set.
-    /// Returns per-instance trajectories on free DoFs; each is bitwise
-    /// identical to [`WaveIntegrator::rollout`] on that initial condition.
+    /// through the session engine replace `S` scalar SpMV+CG pairs — the
+    /// mass solves repeat over a shared pattern, so the pattern (and here
+    /// the values too) is read once per step for the whole set. Returns
+    /// per-instance trajectories on free DoFs; each is bitwise identical
+    /// to [`WaveIntegrator::rollout`] on that initial condition (the two
+    /// paths share one session).
     pub fn rollout_batch(&self, u0s_full: &[Vec<f64>], steps: usize) -> Vec<Vec<Vec<f64>>> {
         let s_n = u0s_full.len();
-        let nf = self.free.len();
+        let nf = self.session.n_free();
         if s_n == 0 {
             return Vec::new();
         }
@@ -156,14 +165,11 @@ impl WaveIntegrator {
         // U^1 = U^0 − (Δt²/2) c² M⁻¹K U^0.
         let mut ku = vec![0.0; s_n * nf];
         self.k.spmv_multi(&u_prev, &mut ku, s_n);
-        // Reuse the constructor-time preconditioner; M never changes (the
-        // Jacobi arm ships its stored inverse diagonal into the op, the
-        // AMG arm applies the constructor-time hierarchy to all lanes).
-        let op = match self.engine.inv_diag() {
-            Some(inv) => MultiRhs::with_inv_diag(&self.m, s_n, inv.to_vec()),
-            None => MultiRhs::new(&self.m, s_n),
-        };
-        let (minv_ku, stats) = self.engine.cg_batch_warm(&op, &ku, None, &self.config);
+        // Reuse the session's constructor-time preconditioner; M never
+        // changes (the Jacobi arm ships its stored inverse diagonal into
+        // the op, the AMG arm applies the session hierarchy to all lanes).
+        let op = self.session.multi_op(s_n);
+        let (minv_ku, stats) = self.session.solve_multi(&op, &ku);
         // Hard check: this feeds bulk reference-data generation, where a
         // silently unconverged mass solve would corrupt every later step.
         assert!(stats.iter().all(|st| st.converged), "first-step mass solve: {stats:?}");
@@ -180,7 +186,7 @@ impl WaveIntegrator {
         let scale = self.dt * self.dt * self.c2;
         for _ in 2..=steps {
             self.k.spmv_multi(&u_curr, &mut ku, s_n);
-            let (minv_ku, stats) = self.engine.cg_batch_warm(&op, &ku, None, &self.config);
+            let (minv_ku, stats) = self.session.solve_multi(&op, &ku);
             assert!(stats.iter().all(|st| st.converged), "mass solve: {stats:?}");
             let next: Vec<f64> = u_curr
                 .iter()
@@ -208,7 +214,7 @@ impl WaveIntegrator {
         for i in 0..n {
             vel[i] = (u_curr[i] - u_prev[i]) / self.dt;
         }
-        let mv = self.m.dot(&vel);
+        let mv = self.session.matrix().dot(&vel);
         let ku = self.k.dot(u_curr);
         0.5 * crate::util::dot(&vel, &mv) + 0.5 * self.c2 * crate::util::dot(u_curr, &ku)
     }

@@ -1,0 +1,616 @@
+//! Cross-consumer session parity: every downstream path rebuilt on
+//! [`tensor_galerkin::session::MeshSession`] in PR 6 — the coordinator's
+//! `BatchSolver`, the topology-optimization state solves, the wave and
+//! Allen-Cahn integrators, and the operator-learning data generators —
+//! must be **bitwise identical** to the pre-refactor stack it replaced.
+//! The oracles below hand-wire that stack from the `bc`/`solver`
+//! primitives exactly as the old per-driver code did (`CondensePlan` +
+//! `PrecondEngine` + `cg_warm`/`cg_batch_warm`/`bicgstab`), on jittered
+//! (unstructured-like) 2D-triangle and 3D-tet meshes, under both Jacobi
+//! and AMG preconditioning, scalar and S = 16 lockstep.
+//!
+//! Cross-shape comparisons (a lockstep lane against a scalar solve) are
+//! asserted bitwise only where an existing tier-1 test already pins that
+//! invariant; otherwise the oracle mirrors the shape of the path under
+//! test, so the expected agreement is exact by construction.
+
+use std::sync::Mutex;
+
+use tensor_galerkin::assembly::{AssemblyContext, BilinearForm, Coefficient, LinearForm};
+use tensor_galerkin::bc::{condense, CondensePlan, DirichletBc, ReducedSystem};
+use tensor_galerkin::coordinator::{BatchSolver, SolveRequest, VarCoeffRequest};
+use tensor_galerkin::mesh::curved::wave_circle;
+use tensor_galerkin::mesh::structured::{jitter, unit_cube_tet, unit_square_tri};
+use tensor_galerkin::mesh::Mesh;
+use tensor_galerkin::oplearn::sample_ics;
+use tensor_galerkin::opt::simp::{SimpConfig, SimpProblem};
+use tensor_galerkin::session::MeshSession;
+use tensor_galerkin::solver::{
+    cg, cg_batch_warm, cg_batch_warm_with, AmgBatch, AmgHierarchy, AmgPrecond, CycleScratch,
+    JacobiPrecond, MultiRhs, PrecondEngine, PrecondKind, SolverConfig,
+};
+use tensor_galerkin::sparse::Csr;
+use tensor_galerkin::timestep::{AllenCahnIntegrator, WaveIntegrator};
+use tensor_galerkin::util::rng::Rng;
+
+fn jittered_tri(n: usize, seed: u64) -> Mesh {
+    let mut m = unit_square_tri(n);
+    jitter(&mut m, 0.2, seed);
+    m
+}
+
+fn jittered_tet(n: usize, seed: u64) -> Mesh {
+    let mut m = unit_cube_tet(n);
+    jitter(&mut m, 0.15, seed);
+    m
+}
+
+fn both_preconds() -> [PrecondKind; 2] {
+    [PrecondKind::Jacobi, PrecondKind::amg()]
+}
+
+fn nodal_field(n: usize, seed: u64, lo: f64, hi: f64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.uniform_in(lo, hi)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// 1. The session itself: MeshSession::from_matrix vs the hand-wired stack.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_scalar_stack_matches_handwired_stack() {
+    for mesh in [jittered_tri(8, 3), jittered_tet(3, 5)] {
+        let ctx = AssemblyContext::new(&mesh, 1);
+        let k = ctx.assemble_matrix(&BilinearForm::Diffusion {
+            rho: Coefficient::Const(1.0),
+        });
+        let f = ctx.assemble_vector(&LinearForm::Source {
+            f: ctx.coeff_fn(|p| (p[0] + 0.3) * (p[1] + 0.7)),
+        });
+        let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
+        for precond in both_preconds() {
+            let cfg = SolverConfig { precond, ..SolverConfig::default() };
+            let session = MeshSession::from_matrix(&k, &f, &bc, cfg);
+            let (u, stats) = session.solve_current(None);
+            assert!(stats.converged);
+            // Pre-refactor stack: condense + engine + warm CG, by hand.
+            let sys = condense(&k, &f, &bc);
+            let engine = PrecondEngine::build(&sys.k, precond);
+            let (uf, st) = engine.cg_warm(&sys.k, &sys.rhs, None, &cfg);
+            assert_eq!(u, sys.expand(&uf), "{precond:?} solution");
+            assert_eq!(stats.iterations, st.iterations, "{precond:?} iterations");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Coordinator serving paths (scalar + S = 16 lockstep, fixed + varcoeff).
+// ---------------------------------------------------------------------------
+
+/// The pre-refactor per-mesh serving state: assembled fixed operator,
+/// zero-load condensation, engine over the condensed values.
+fn serving_oracle(
+    mesh: &Mesh,
+    precond: PrecondKind,
+) -> (AssemblyContext, ReducedSystem, PrecondEngine) {
+    let ctx = AssemblyContext::new(mesh, 1);
+    let k = ctx.assemble_matrix(&BilinearForm::Diffusion {
+        rho: Coefficient::Const(1.0),
+    });
+    let zero = vec![0.0; ctx.n_dofs()];
+    let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
+    let sys = condense(&k, &zero, &bc);
+    let engine = PrecondEngine::build(&sys.k, precond);
+    (ctx, sys, engine)
+}
+
+#[test]
+fn coordinator_fixed_paths_match_handwired_pipeline() {
+    for mesh in [jittered_tri(8, 7), jittered_tet(3, 9)] {
+        for precond in both_preconds() {
+            let cfg = SolverConfig { precond, ..SolverConfig::default() };
+            let solver = BatchSolver::new(&mesh, cfg);
+            let (ctx, sys, engine) = serving_oracle(&mesh, precond);
+            let reqs: Vec<SolveRequest> = (0..16)
+                .map(|id| {
+                    SolveRequest::new(id, nodal_field(mesh.n_nodes(), 100 + id, -1.0, 1.0))
+                })
+                .collect();
+            // S = 16 lockstep dispatch. Each lane is bitwise the scalar
+            // pipeline (pinned by the batcher's own tier-1 tests), so the
+            // scalar oracle also certifies the blocked path.
+            let batched = solver.solve_batch(&reqs).unwrap();
+            for (resp, req) in batched.iter().zip(&reqs) {
+                let f = ctx.assemble_vector(&LinearForm::Source {
+                    f: ctx.coeff_nodal(&req.f_nodal),
+                });
+                let rhs = sys.restrict(&f);
+                let (uf, st) = engine.cg_warm(&sys.k, &rhs, None, &cfg);
+                assert_eq!(resp.u, sys.expand(&uf), "lane {} ({precond:?})", req.id);
+                assert_eq!(resp.iterations, st.iterations, "lane {}", req.id);
+                // Scalar entry point agrees with its own lane.
+                let one = solver.solve_one(req).unwrap();
+                assert_eq!(one.u, resp.u, "scalar vs lane {}", req.id);
+            }
+        }
+    }
+}
+
+#[test]
+fn coordinator_varcoeff_lanes_match_per_instance_pipeline() {
+    for mesh in [jittered_tri(8, 13), jittered_tet(3, 15)] {
+        for precond in both_preconds() {
+            let cfg = SolverConfig { precond, ..SolverConfig::default() };
+            let solver = BatchSolver::new(&mesh, cfg);
+            let (ctx, sys_fixed, _) = serving_oracle(&mesh, precond);
+            // Pre-refactor AMG serving reused ONE shared-mesh hierarchy
+            // (built from the fixed condensed operator) for every request.
+            let amg_state = match precond {
+                PrecondKind::Amg(acfg) => Some((
+                    AmgHierarchy::build(&sys_fixed.k, acfg),
+                    Mutex::new(CycleScratch::empty()),
+                )),
+                PrecondKind::Jacobi => None,
+            };
+            let reqs: Vec<VarCoeffRequest> = (0..16)
+                .map(|id| {
+                    VarCoeffRequest::new(
+                        id,
+                        nodal_field(mesh.n_nodes(), 200 + id, 0.5, 2.0),
+                        nodal_field(mesh.n_nodes(), 300 + id, -1.0, 1.0),
+                    )
+                })
+                .collect();
+            let batched = solver.solve_varcoeff_batch(&reqs).unwrap();
+            for (resp, req) in batched.iter().zip(&reqs) {
+                // Full pre-refactor per-request pipeline: assemble this
+                // request's operator and load, condense, precondition,
+                // solve.
+                let k = ctx.assemble_matrix(&BilinearForm::Diffusion {
+                    rho: ctx.coeff_nodal(&req.rho_nodal),
+                });
+                let f = ctx.assemble_vector(&LinearForm::Source {
+                    f: ctx.coeff_nodal(&req.f_nodal),
+                });
+                let sys = condense(&k, &f, &sys_fixed.bc);
+                let (uf, st) = match &amg_state {
+                    None => {
+                        let pc = JacobiPrecond::new(&sys.k);
+                        cg(&sys.k, &sys.rhs, &pc, &cfg)
+                    }
+                    Some((h, ws)) => {
+                        cg(&sys.k, &sys.rhs, &AmgPrecond::with_scratch(h, ws), &cfg)
+                    }
+                };
+                assert_eq!(resp.u, sys.expand(&uf), "lane {} ({precond:?})", req.id);
+                assert_eq!(resp.iterations, st.iterations, "lane {}", req.id);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Topology optimization: session-backed state solves vs the hand-wired
+//    engine-threading stack the drivers used before PR 6.
+// ---------------------------------------------------------------------------
+
+fn simp_problem(precond: PrecondKind) -> SimpProblem {
+    let mut p = SimpProblem::new(SimpConfig {
+        nx: 12,
+        ny: 6,
+        lx: 12.0,
+        ly: 6.0,
+        ..SimpConfig::default()
+    });
+    p.set_solver_precond(precond);
+    p
+}
+
+/// The problem's (private) solver configuration, reconstructed for the
+/// oracles.
+fn simp_solver_cfg(precond: PrecondKind) -> SolverConfig {
+    SolverConfig {
+        rel_tol: 1e-7,
+        abs_tol: 1e-12,
+        max_iter: 50_000,
+        precond,
+    }
+}
+
+fn density_field(ne: usize, seed: u64) -> Vec<f64> {
+    nodal_field(ne, seed, 0.3, 1.0)
+}
+
+#[test]
+fn topopt_session_scalar_matches_handwired_engine_threading() {
+    for precond in both_preconds() {
+        let p = simp_problem(precond);
+        let cfg = simp_solver_cfg(precond);
+        let k1 = p.assemble_k(&density_field(p.n_elems(), 401));
+        let k2 = p.assemble_k(&density_field(p.n_elems(), 402));
+        // Session path: one long-lived session, refilled per design, warm
+        // seeded with the previous iterate — the run_topopt loop shape.
+        let mut session = p.session();
+        let (u1, it1) = p.solve_state_session(&mut session, Some(&k1.data), None).unwrap();
+        let (u2, it2) =
+            p.solve_state_session(&mut session, Some(&k2.data), Some(&u1)).unwrap();
+        // Pre-refactor stack: condense per design, thread ONE engine
+        // through the loop (build on the first design, refill after).
+        let sys1 = condense(&k1, &p.f, &p.bc);
+        let mut engine = PrecondEngine::build(&sys1.k, precond);
+        let (uf1, st1) = engine.cg_warm(&sys1.k, &sys1.rhs, None, &cfg);
+        assert_eq!(u1, sys1.expand(&uf1), "{precond:?} design 1");
+        assert_eq!(it1, st1.iterations);
+        let sys2 = condense(&k2, &p.f, &p.bc);
+        engine.refill(&sys2.k);
+        let x0 = sys2.restrict(&u1);
+        let (uf2, st2) = engine.cg_warm(&sys2.k, &sys2.rhs, Some(&x0), &cfg);
+        assert_eq!(u2, sys2.expand(&uf2), "{precond:?} design 2 (warm)");
+        assert_eq!(it2, st2.iterations);
+    }
+}
+
+#[test]
+fn topopt_session_batch_matches_handwired_blocked_stack() {
+    for precond in both_preconds() {
+        let p = simp_problem(precond);
+        let cfg = simp_solver_cfg(precond);
+        let rhos: Vec<Vec<f64>> =
+            (0..16).map(|s| density_field(p.n_elems(), 500 + s)).collect();
+        let kbatch = p.assemble_k_batch(&rhos);
+        let mut session = p.session();
+        let (us, iters) =
+            p.solve_state_batch_session(&mut session, &kbatch, None).unwrap();
+        // Pre-refactor blocked stack: plan once, condense the batch,
+        // lockstep CG — per-lane Jacobi, or one hierarchy from design 0.
+        let plan = CondensePlan::new(kbatch.nrows, &kbatch.indptr, &kbatch.indices, &p.bc);
+        let red = plan.apply_batch(&kbatch, &p.f);
+        let (u, stats) = match precond {
+            PrecondKind::Jacobi => cg_batch_warm(&red.k, &red.rhs, None, &cfg),
+            PrecondKind::Amg(acfg) => {
+                let h = AmgHierarchy::build(&red.k.instance(0), acfg);
+                let pc = AmgBatch::new(&h, red.n_instances());
+                cg_batch_warm_with(&red.k, &red.rhs, None, &pc, &cfg)
+            }
+        };
+        let nf = red.n_free();
+        for s in 0..rhos.len() {
+            assert_eq!(
+                us[s],
+                red.expand(&u[s * nf..(s + 1) * nf]),
+                "design {s} ({precond:?})"
+            );
+            assert_eq!(iters[s], stats[s].iterations, "design {s}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Wave integrator: scalar and S = 16 blocked rollouts vs the hand-wired
+//    pre-refactor integrator internals (separate condensations + engine).
+// ---------------------------------------------------------------------------
+
+/// Pre-refactor wave state: M and K condensed independently (the session
+/// now condenses K through the shared plan — same pattern, same numbers),
+/// engine over the condensed mass.
+struct WaveOracle {
+    msys: ReducedSystem,
+    kred: Csr,
+    engine: PrecondEngine,
+    cfg: SolverConfig,
+    c2: f64,
+    dt: f64,
+}
+
+impl WaveOracle {
+    fn new(mesh: &Mesh, c: f64, dt: f64, precond: PrecondKind) -> WaveOracle {
+        let ctx = AssemblyContext::new(mesh, 1);
+        let km = ctx.assemble_matrix_batch(&[
+            BilinearForm::Diffusion { rho: Coefficient::Const(1.0) },
+            BilinearForm::Mass { rho: Coefficient::Const(1.0) },
+        ]);
+        let zero = vec![0.0; ctx.n_dofs()];
+        let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
+        let msys = condense(&km.instance(1), &zero, &bc);
+        let kred = condense(&km.instance(0), &zero, &bc).k;
+        let cfg = SolverConfig {
+            rel_tol: 1e-12,
+            precond,
+            ..SolverConfig::default()
+        };
+        let engine = PrecondEngine::build(&msys.k, precond);
+        WaveOracle { msys, kred, engine, cfg, c2: c * c, dt }
+    }
+
+    fn rollout(&self, u0_full: &[f64], steps: usize) -> Vec<Vec<f64>> {
+        let u0 = self.msys.restrict(u0_full);
+        let v0 = vec![0.0; u0.len()];
+        let mut traj = Vec::with_capacity(steps + 1);
+        let ku = self.kred.dot(&u0);
+        let (minv, _) = self.engine.cg_warm(&self.msys.k, &ku, None, &self.cfg);
+        let s = 0.5 * self.dt * self.dt * self.c2;
+        let u1: Vec<f64> = u0
+            .iter()
+            .zip(&v0)
+            .zip(&minv)
+            .map(|((&u, &v), &mk)| u + self.dt * v - s * mk)
+            .collect();
+        traj.push(u0);
+        traj.push(u1);
+        let scale = self.dt * self.dt * self.c2;
+        for k in 2..=steps {
+            let ku = self.kred.dot(&traj[k - 1]);
+            let (minv, _) = self.engine.cg_warm(&self.msys.k, &ku, None, &self.cfg);
+            let next: Vec<f64> = traj[k - 1]
+                .iter()
+                .zip(&traj[k - 2])
+                .zip(&minv)
+                .map(|((&uc, &up), &mk)| 2.0 * uc - up - scale * mk)
+                .collect();
+            traj.push(next);
+        }
+        traj.truncate(steps + 1);
+        traj
+    }
+
+    fn multi_op(&self, s_n: usize) -> MultiRhs<'_> {
+        match self.engine.inv_diag() {
+            Some(inv) => MultiRhs::with_inv_diag(&self.msys.k, s_n, inv.to_vec()),
+            None => MultiRhs::new(&self.msys.k, s_n),
+        }
+    }
+
+    fn rollout_batch(&self, u0s_full: &[Vec<f64>], steps: usize) -> Vec<Vec<Vec<f64>>> {
+        let s_n = u0s_full.len();
+        let nf = self.msys.free.len();
+        let mut trajs: Vec<Vec<Vec<f64>>> = vec![Vec::with_capacity(steps + 1); s_n];
+        let mut u_prev = Vec::with_capacity(s_n * nf);
+        for u0 in u0s_full {
+            u_prev.extend(self.msys.restrict(u0));
+        }
+        for (s, traj) in trajs.iter_mut().enumerate() {
+            traj.push(u_prev[s * nf..(s + 1) * nf].to_vec());
+        }
+        let mut ku = vec![0.0; s_n * nf];
+        self.kred.spmv_multi(&u_prev, &mut ku, s_n);
+        let op = self.multi_op(s_n);
+        let (minv, stats) = self.engine.cg_batch_warm(&op, &ku, None, &self.cfg);
+        assert!(stats.iter().all(|st| st.converged));
+        let half = 0.5 * self.dt * self.dt * self.c2;
+        let mut u_curr: Vec<f64> =
+            u_prev.iter().zip(&minv).map(|(&u, &mk)| u - half * mk).collect();
+        for (s, traj) in trajs.iter_mut().enumerate() {
+            traj.push(u_curr[s * nf..(s + 1) * nf].to_vec());
+        }
+        let scale = self.dt * self.dt * self.c2;
+        for _ in 2..=steps {
+            self.kred.spmv_multi(&u_curr, &mut ku, s_n);
+            let (minv, stats) = self.engine.cg_batch_warm(&op, &ku, None, &self.cfg);
+            assert!(stats.iter().all(|st| st.converged));
+            let next: Vec<f64> = u_curr
+                .iter()
+                .zip(&u_prev)
+                .zip(&minv)
+                .map(|((&uc, &up), &mk)| 2.0 * uc - up - scale * mk)
+                .collect();
+            for (s, traj) in trajs.iter_mut().enumerate() {
+                traj.push(next[s * nf..(s + 1) * nf].to_vec());
+            }
+            u_prev = u_curr;
+            u_curr = next;
+        }
+        for traj in trajs.iter_mut() {
+            traj.truncate(steps + 1);
+        }
+        trajs
+    }
+}
+
+#[test]
+fn wave_session_rollouts_match_handwired_integrator() {
+    let steps = 4;
+    for mesh in [jittered_tri(8, 17), jittered_tet(3, 19)] {
+        for precond in both_preconds() {
+            let w = WaveIntegrator::with_precond(&mesh, 2.0, 1e-3, precond);
+            let oracle = WaveOracle::new(&mesh, 2.0, 1e-3, precond);
+            let ics: Vec<Vec<f64>> = (0..16)
+                .map(|s| nodal_field(mesh.n_nodes(), 600 + s, -1.0, 1.0))
+                .collect();
+            // Scalar path, bitwise.
+            let solo = w.rollout(&ics[0], steps);
+            let solo_oracle = oracle.rollout(&ics[0], steps);
+            for (k, (a, b)) in solo.iter().zip(&solo_oracle).enumerate() {
+                assert_eq!(a, b, "scalar step {k} ({precond:?})");
+            }
+            // S = 16 blocked path, bitwise against the blocked oracle.
+            let batch = w.rollout_batch(&ics, steps);
+            let batch_oracle = oracle.rollout_batch(&ics, steps);
+            for s in 0..ics.len() {
+                for (k, (a, b)) in batch[s].iter().zip(&batch_oracle[s]).enumerate() {
+                    assert_eq!(a, b, "lane {s} step {k} ({precond:?})");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 5. Allen-Cahn integrator: scalar BiCGSTAB steps and S = 16 blocked CG
+//    rollouts vs the hand-wired pre-refactor internals.
+// ---------------------------------------------------------------------------
+
+struct AllenCahnOracle {
+    ctx: AssemblyContext,
+    asys: ReducedSystem,
+    mred: Csr,
+    engine: PrecondEngine,
+    cfg: SolverConfig,
+    dt: f64,
+    eps2: f64,
+}
+
+impl AllenCahnOracle {
+    fn new(mesh: &Mesh, a2: f64, eps2: f64, dt: f64, precond: PrecondKind) -> AllenCahnOracle {
+        let ctx = AssemblyContext::new(mesh, 1);
+        let km = ctx.assemble_matrix_batch(&[
+            BilinearForm::Diffusion { rho: Coefficient::Const(1.0) },
+            BilinearForm::Mass { rho: Coefficient::Const(1.0) },
+        ]);
+        let k_full = km.instance(0);
+        let m_full = km.instance(1);
+        let mut a_full = m_full.add_scaled(&k_full, a2 * dt).expect("same shape");
+        a_full.scale(1.0 / dt);
+        let zero = vec![0.0; ctx.n_dofs()];
+        let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
+        let asys = condense(&a_full, &zero, &bc);
+        let mred = condense(&m_full, &zero, &bc).k;
+        let cfg = SolverConfig { precond, ..SolverConfig::default() };
+        let engine = PrecondEngine::build(&asys.k, precond);
+        AllenCahnOracle { ctx, asys, mred, engine, cfg, dt, eps2 }
+    }
+
+    fn reaction_form(&self, u_full: &[f64]) -> LinearForm {
+        let eps2 = self.eps2;
+        LinearForm::Source {
+            f: self.ctx.coeff_nodal(u_full).map(move |u| -eps2 * u * (u * u - 1.0)),
+        }
+    }
+
+    fn step(&self, u: &[f64]) -> Vec<f64> {
+        let u_full = self.asys.expand(u);
+        let reaction_full = self.ctx.assemble_vector(&self.reaction_form(&u_full));
+        let reaction: Vec<f64> =
+            self.asys.free.iter().map(|&f| reaction_full[f]).collect();
+        let mu = self.mred.dot(u);
+        let rhs: Vec<f64> =
+            mu.iter().zip(&reaction).map(|(&m, &r)| m / self.dt + r).collect();
+        let (next, stats) = self.engine.bicgstab(&self.asys.k, &rhs, &self.cfg);
+        assert!(stats.converged);
+        next
+    }
+
+    fn rollout(&self, u0_full: &[f64], steps: usize) -> Vec<Vec<f64>> {
+        let mut traj = Vec::with_capacity(steps + 1);
+        traj.push(self.asys.restrict(u0_full));
+        for k in 0..steps {
+            let next = self.step(&traj[k]);
+            traj.push(next);
+        }
+        traj
+    }
+
+    fn rollout_batch(&self, u0s_full: &[Vec<f64>], steps: usize) -> Vec<Vec<Vec<f64>>> {
+        let s_n = u0s_full.len();
+        let nf = self.asys.free.len();
+        let n_full = self.asys.n_full();
+        let free = &self.asys.free;
+        let mut trajs: Vec<Vec<Vec<f64>>> = vec![Vec::with_capacity(steps + 1); s_n];
+        let mut u = Vec::with_capacity(s_n * nf);
+        for u0 in u0s_full {
+            u.extend(self.asys.restrict(u0));
+        }
+        for (s, traj) in trajs.iter_mut().enumerate() {
+            traj.push(u[s * nf..(s + 1) * nf].to_vec());
+        }
+        let op = match self.engine.inv_diag() {
+            Some(inv) => MultiRhs::with_inv_diag(&self.asys.k, s_n, inv.to_vec()),
+            None => MultiRhs::new(&self.asys.k, s_n),
+        };
+        let mut mu = vec![0.0; s_n * nf];
+        let mut rhs = vec![0.0; s_n * nf];
+        for _ in 0..steps {
+            let lforms: Vec<LinearForm> = (0..s_n)
+                .map(|s| {
+                    let mut full = vec![0.0; n_full];
+                    for (&dof, &v) in free.iter().zip(&u[s * nf..(s + 1) * nf]) {
+                        full[dof] = v;
+                    }
+                    self.reaction_form(&full)
+                })
+                .collect();
+            let reactions = self.ctx.assemble_vector_batch(&lforms);
+            self.mred.spmv_multi(&u, &mut mu, s_n);
+            for (i, r) in rhs.iter_mut().enumerate() {
+                let (s, j) = (i / nf, i % nf);
+                *r = mu[i] / self.dt + reactions[s * n_full + free[j]];
+            }
+            let (next, stats) = self.engine.cg_batch_warm(&op, &rhs, None, &self.cfg);
+            assert!(stats.iter().all(|st| st.converged));
+            for (s, traj) in trajs.iter_mut().enumerate() {
+                traj.push(next[s * nf..(s + 1) * nf].to_vec());
+            }
+            u = next;
+        }
+        trajs
+    }
+}
+
+#[test]
+fn allen_cahn_session_rollouts_match_handwired_integrator() {
+    let steps = 3;
+    for mesh in [jittered_tri(6, 23), jittered_tet(3, 25)] {
+        for precond in both_preconds() {
+            let ac = AllenCahnIntegrator::with_precond(&mesh, 1e-2, 1.0, 1e-3, precond);
+            let oracle = AllenCahnOracle::new(&mesh, 1e-2, 1.0, 1e-3, precond);
+            let ics: Vec<Vec<f64>> = (0..16)
+                .map(|s| nodal_field(mesh.n_nodes(), 700 + s, -0.8, 0.8))
+                .collect();
+            // Scalar path (BiCGSTAB steps), bitwise.
+            let solo = ac.rollout(&ics[0], steps);
+            let solo_oracle = oracle.rollout(&ics[0], steps);
+            for (k, (a, b)) in solo.iter().zip(&solo_oracle).enumerate() {
+                assert_eq!(a, b, "scalar step {k} ({precond:?})");
+            }
+            // S = 16 blocked path (lockstep CG), bitwise against the
+            // blocked oracle.
+            let batch = ac.rollout_batch(&ics, steps);
+            let batch_oracle = oracle.rollout_batch(&ics, steps);
+            for s in 0..ics.len() {
+                for (k, (a, b)) in batch[s].iter().zip(&batch_oracle[s]).enumerate() {
+                    assert_eq!(a, b, "lane {s} step {k} ({precond:?})");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 6. Operator-learning data generation: the dataset generators drive the
+//    shared-session integrators; their reference trajectories must match
+//    the hand-wired oracle on the actual oplearn mesh + IC distribution.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn oplearn_generation_path_matches_handwired_oracle() {
+    let mesh = wave_circle(8);
+    let (c, dt, steps) = (4.0, 1e-3, 4);
+    let ics = sample_ics(&mesh, 16, 41);
+    for precond in both_preconds() {
+        // The PdeSetup generators construct exactly this integrator and
+        // call rollout / rollout_batch + expand on it.
+        let integ = WaveIntegrator::with_precond(&mesh, c, dt, precond);
+        let oracle = WaveOracle::new(&mesh, c, dt, precond);
+        let batch = integ.rollout_batch(&ics, steps);
+        let batch_oracle = oracle.rollout_batch(&ics, steps);
+        for s in 0..ics.len() {
+            for (k, (a, b)) in batch[s].iter().zip(&batch_oracle[s]).enumerate() {
+                // Full-field expansion is what the dataset stores.
+                assert_eq!(
+                    integ.expand(a),
+                    oracle.msys.expand(b),
+                    "lane {s} step {k} ({precond:?})"
+                );
+            }
+        }
+        // Scalar generator agrees with the blocked one to solver
+        // tolerance (the dataset's documented contract).
+        let solo = integ.rollout(&ics[0], steps);
+        for (k, (a, b)) in batch[0].iter().zip(&solo).enumerate() {
+            assert!(
+                tensor_galerkin::util::rel_l2(a, b) < 1e-10,
+                "lane 0 step {k} scalar/blocked drift"
+            );
+        }
+    }
+}
