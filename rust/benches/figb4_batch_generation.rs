@@ -8,6 +8,8 @@
 //! coordinator's perf trajectory, recorded to `BENCH_coordinator.json` at
 //! the repo root.
 
+use std::time::Instant;
+
 use tensor_galerkin::coordinator::batcher::{solve_unbatched, BatchSolver};
 use tensor_galerkin::coordinator::{BatchServer, SolveRequest, VarCoeffRequest};
 use tensor_galerkin::mesh::structured::unit_cube_tet;
@@ -115,16 +117,78 @@ fn main() {
         },
     );
     bench.finish();
+
+    // --- Serving SLO smoke: per-request latency distribution under the
+    // burst regime (submit-to-reply, so the tail is the full drain time),
+    // plus deadline-expiry and admission-rejection probes. The percentiles
+    // and robustness counters ride along in the BENCH_coordinator.json
+    // meta so the serving trajectory tracks tail latency across PRs.
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(2 * s_served);
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        for rx in server.submit_many(sreqs.clone()) {
+            rx.recv().expect("server alive").expect("latency probe solve");
+            lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+    }
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat_ms[((lat_ms.len() - 1) as f64 * p).round() as usize];
+    let (lat_p50, lat_p99) = (pct(0.5), pct(0.99));
+    println!(
+        "served latency over {} requests: p50 {lat_p50:.2} ms, p99 {lat_p99:.2} ms",
+        lat_ms.len()
+    );
+    // Deadline expiry: already-passed deadlines are answered Expired at
+    // dispatch without solving.
+    let expired_probe: Vec<SolveRequest> = (0..4)
+        .map(|id| {
+            SolveRequest::new(
+                9000 + id,
+                (0..mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            )
+            .with_deadline(Instant::now())
+        })
+        .collect();
+    for rx in server.submit_many(expired_probe) {
+        let _ = rx.recv().expect("server alive");
+    }
+    // Admission rejection: a burst larger than the queue bound is refused
+    // synchronously. The bound is lifted again afterwards.
+    server.set_max_queue(2);
+    let overload_probe: Vec<SolveRequest> = (0..8)
+        .map(|id| {
+            SolveRequest::new(
+                9100 + id,
+                (0..mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            )
+        })
+        .collect();
+    for rx in server.submit_many(overload_probe) {
+        let _ = rx.recv().expect("server alive");
+    }
+    server.set_max_queue(0);
+
     let stats = server.stats().expect("worker alive");
     println!(
-        "server dispatches: {} batched, {} scalar, {} failed",
-        stats.batched_solves, stats.scalar_solves, stats.failed_requests
+        "server dispatches: {} batched, {} scalar, {} failed ({} expired, {} rejected)",
+        stats.batched_solves,
+        stats.scalar_solves,
+        stats.failed_requests,
+        stats.expired_requests,
+        stats.rejected_requests
     );
     if let Some(speedup) = bench.write_speedup_json(
         "BENCH_coordinator.json",
         &format!("served_sequential/b{s_served}"),
         &format!("served_burst/b{s_served}"),
-        &[("batch", s_served as f64), ("n_dofs", mesh.n_nodes() as f64)],
+        &[
+            ("batch", s_served as f64),
+            ("n_dofs", mesh.n_nodes() as f64),
+            ("latency_p50_ms", lat_p50),
+            ("latency_p99_ms", lat_p99),
+            ("expired_requests", stats.expired_requests as f64),
+            ("rejected_requests", stats.rejected_requests as f64),
+        ],
     ) {
         println!("served burst vs sequential client speedup: {speedup:.2}×");
     }

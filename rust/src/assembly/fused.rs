@@ -392,6 +392,8 @@ impl FusedPlan {
                     std::slice::from_raw_parts_mut(scratch_ptr.get().add(task * tile_len), tile_len)
                 };
                 for w in lo..hi {
+                    #[cfg(feature = "fault-inject")]
+                    crate::util::faults::maybe_panic(crate::util::faults::ASSEMBLY_TILE_PANIC, w);
                     let (s, t) = (w / n_tiles, w % n_tiles);
                     let e0 = t * tile;
                     let e1 = ((t + 1) * tile).min(ne);

@@ -6,6 +6,16 @@
 //! group as one batched solve. Single-mesh callers can ignore the tag —
 //! [`DEFAULT_MESH`] is what `BatchServer::start` registers its mesh under
 //! and what the convenience constructors fill in.
+//!
+//! Failed requests are answered with a typed [`SolveError`] (wrapped in
+//! `anyhow`; downcast with `err.downcast_ref::<SolveError>()`) so clients
+//! can branch on the failure class — invalid input, expired deadline,
+//! admission rejection, or a classified solver failure with its
+//! escalation accounting.
+
+use std::time::Instant;
+
+use crate::solver::{EscalationReport, FailureKind, SolveStats};
 
 /// The mesh key used by single-mesh servers and the plain constructors.
 pub const DEFAULT_MESH: u64 = 0;
@@ -20,6 +30,10 @@ pub struct SolveRequest {
     pub mesh_id: u64,
     /// Nodal source values, interpolated to quadrature by the solver.
     pub f_nodal: Vec<f64>,
+    /// Optional serving deadline: a request still queued past this
+    /// instant is answered with [`SolveError::Expired`] instead of
+    /// solving (checked at dispatch, before any assembly work).
+    pub deadline: Option<Instant>,
 }
 
 impl SolveRequest {
@@ -29,12 +43,19 @@ impl SolveRequest {
             id,
             mesh_id: DEFAULT_MESH,
             f_nodal,
+            deadline: None,
         }
     }
 
     /// Request against a specific registered mesh.
     pub fn on_mesh(id: u64, mesh_id: u64, f_nodal: Vec<f64>) -> SolveRequest {
-        SolveRequest { id, mesh_id, f_nodal }
+        SolveRequest { id, mesh_id, f_nodal, deadline: None }
+    }
+
+    /// Attach a serving deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> SolveRequest {
+        self.deadline = Some(deadline);
+        self
     }
 }
 
@@ -53,6 +74,8 @@ pub struct VarCoeffRequest {
     pub rho_nodal: Vec<f64>,
     /// Nodal source values.
     pub f_nodal: Vec<f64>,
+    /// Optional serving deadline (see [`SolveRequest::deadline`]).
+    pub deadline: Option<Instant>,
 }
 
 impl VarCoeffRequest {
@@ -63,6 +86,7 @@ impl VarCoeffRequest {
             mesh_id: DEFAULT_MESH,
             rho_nodal,
             f_nodal,
+            deadline: None,
         }
     }
 
@@ -78,7 +102,14 @@ impl VarCoeffRequest {
             mesh_id,
             rho_nodal,
             f_nodal,
+            deadline: None,
         }
+    }
+
+    /// Attach a serving deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> VarCoeffRequest {
+        self.deadline = Some(deadline);
+        self
     }
 }
 
@@ -89,7 +120,79 @@ pub struct SolveResponse {
     pub u: Vec<f64>,
     pub iterations: usize,
     pub rel_residual: f64,
+    /// Per-stage accounting when the escalation ladder recovered this
+    /// request; `None` on the (normal) first-attempt success path.
+    pub escalation: Option<EscalationReport>,
 }
+
+/// Typed failure answer of the serving layer, carried inside `anyhow`
+/// errors (`err.downcast_ref::<SolveError>()`). The variants partition
+/// the failure surface: bad input, deadline expiry before solving,
+/// admission-queue rejection, and classified solver failures (with the
+/// escalation ladder's accounting when it ran).
+#[derive(Clone, Debug)]
+pub enum SolveError {
+    /// Request rejected by validation before entering a batch.
+    Invalid { id: u64, reason: String },
+    /// The request's deadline passed while it was still queued; answered
+    /// without solving.
+    Expired { id: u64 },
+    /// The bounded admission queue was full; the request was never
+    /// enqueued. Back off and resubmit.
+    Overloaded {
+        id: u64,
+        queue_depth: usize,
+        max_queue: usize,
+    },
+    /// The solve failed with the given classification; `escalation`
+    /// records the recovery ladder when it ran (and was exhausted).
+    Solver {
+        id: u64,
+        kind: FailureKind,
+        stats: SolveStats,
+        escalation: Option<EscalationReport>,
+    },
+}
+
+impl SolveError {
+    /// The id of the request this error answers.
+    pub fn id(&self) -> u64 {
+        match self {
+            SolveError::Invalid { id, .. }
+            | SolveError::Expired { id }
+            | SolveError::Overloaded { id, .. }
+            | SolveError::Solver { id, .. } => *id,
+        }
+    }
+}
+
+impl std::fmt::Display for SolveError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SolveError::Invalid { id, reason } => write!(f, "request {id}: {reason}"),
+            SolveError::Expired { id } => {
+                write!(f, "request {id}: deadline expired before solving")
+            }
+            SolveError::Overloaded { id, queue_depth, max_queue } => write!(
+                f,
+                "request {id}: admission queue full ({queue_depth}/{max_queue}), not enqueued"
+            ),
+            SolveError::Solver { id, kind, stats, escalation } => {
+                write!(
+                    f,
+                    "request {id}: solve failed ({kind}) after {} iterations, rel residual {:.3e}",
+                    stats.iterations, stats.rel_residual
+                )?;
+                if let Some(rep) = escalation {
+                    write!(f, "; escalation ladder exhausted after {} stages", rep.attempts.len())?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::error::Error for SolveError {}
 
 /// Aggregate serving counters of a [`super::server::BatchServer`] worker,
 /// summed over every per-mesh [`super::batcher::BatchSolver`] it has built
@@ -123,4 +226,18 @@ pub struct CoordinatorStats {
     /// with `queued_requests`, the per-drain group-size signal
     /// (`queued_requests / dispatch_groups` is the mean group size).
     pub dispatch_groups: u64,
+    /// Requests answered with [`SolveError::Expired`] — their deadline
+    /// passed while queued, so they were never solved.
+    pub expired_requests: u64,
+    /// Requests rejected at admission ([`SolveError::Overloaded`]) by the
+    /// bounded queue; they never reached the worker.
+    pub rejected_requests: u64,
+    /// Lanes that failed their first solve and entered the escalation
+    /// ladder (whether or not a stage recovered them).
+    pub retried_lanes: u64,
+    /// Escalated lanes a ladder stage successfully recovered.
+    pub rescued_lanes: u64,
+    /// High-water mark of the admission-queue depth (requests submitted
+    /// but not yet drained) since server start.
+    pub queue_high_water: u64,
 }

@@ -18,22 +18,26 @@
 //! adds request validation, batched load assembly, dispatch counters and
 //! per-request fault isolation on top. The `*_each` entry points return
 //! one `Result` per request — a malformed request (shape mismatch,
-//! non-positive coefficient) or an unconverged lane fails *that request
-//! only*; its healthy neighbors in the same batched dispatch still get
-//! answers. The legacy `Result<Vec<_>>` wrappers keep the old
-//! abort-on-first-error contract for callers that want it.
+//! non-positive coefficient, NaN load), an expired deadline, or an
+//! unconverged lane fails *that request only*; its healthy neighbors in
+//! the same batched dispatch still get answers. Failures carry a typed
+//! [`SolveError`] (downcast from the `anyhow` error) with the classified
+//! [`crate::solver::FailureKind`] and the escalation ladder's accounting.
+//! The legacy `Result<Vec<_>>` wrappers keep the old abort-on-first-error
+//! contract for callers that want it.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::assembly::{BatchedPlan, BilinearForm, Coefficient, LinearForm};
 use crate::mesh::Mesh;
 use crate::session::MeshSession;
-use crate::solver::SolverConfig;
+use crate::solver::{EscalationReport, SolveStats, SolverConfig};
 
-use super::api::{SolveRequest, SolveResponse, VarCoeffRequest};
+use super::api::{SolveError, SolveRequest, SolveResponse, VarCoeffRequest};
 
 /// Shared state for a fixed-operator batch workload: a [`MeshSession`]
 /// (the solve stack) plus the serving-layer extras.
@@ -59,6 +63,10 @@ pub struct BatchSolver {
     batched_solves: AtomicU64,
     /// Scalar dispatches performed (`solve_one` / `solve_varcoeff_one`).
     scalar_solves: AtomicU64,
+    /// Lanes whose first solve failed and entered the escalation ladder.
+    retried_lanes: AtomicU64,
+    /// Escalated lanes a ladder stage recovered.
+    rescued_lanes: AtomicU64,
 }
 
 impl BatchSolver {
@@ -69,6 +77,8 @@ impl BatchSolver {
             vplan: OnceLock::new(),
             batched_solves: AtomicU64::new(0),
             scalar_solves: AtomicU64::new(0),
+            retried_lanes: AtomicU64::new(0),
+            rescued_lanes: AtomicU64::new(0),
         }
     }
 
@@ -97,42 +107,89 @@ impl BatchSolver {
         self.scalar_solves.load(Ordering::Relaxed)
     }
 
-    /// Shape-check a fixed-operator request. Rejecting up front is what
-    /// keeps a malformed request from panicking inside the nodal
-    /// interpolation (out-of-bounds `f_nodal[cell[a]]`) and killing the
-    /// serving worker.
+    /// Lanes that entered the escalation ladder so far.
+    pub fn n_retried_lanes(&self) -> u64 {
+        self.retried_lanes.load(Ordering::Relaxed)
+    }
+
+    /// Escalated lanes a ladder stage recovered so far.
+    pub fn n_rescued_lanes(&self) -> u64 {
+        self.rescued_lanes.load(Ordering::Relaxed)
+    }
+
+    /// Count an escalation report toward the retry/rescue counters.
+    fn track_escalation(&self, rep: &Option<EscalationReport>) {
+        if let Some(rep) = rep {
+            self.retried_lanes.fetch_add(1, Ordering::Relaxed);
+            if rep.resolved() {
+                self.rescued_lanes.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Shape-check a fixed-operator request (and reject NaN/Inf loads — a
+    /// non-finite `f_nodal` would contaminate its whole assembly tile) and
+    /// enforce its deadline. Rejecting up front is what keeps a malformed
+    /// request from panicking inside the nodal interpolation
+    /// (out-of-bounds `f_nodal[cell[a]]`) and killing the serving worker.
     pub fn validate(&self, req: &SolveRequest) -> Result<()> {
-        anyhow::ensure!(
-            req.f_nodal.len() == self.n_dofs(),
-            "request {}: f_nodal has {} entries, mesh has {} dofs",
-            req.id,
-            req.f_nodal.len(),
-            self.n_dofs()
-        );
+        if let Some(d) = req.deadline {
+            if Instant::now() >= d {
+                return Err(SolveError::Expired { id: req.id }.into());
+            }
+        }
+        if req.f_nodal.len() != self.n_dofs() {
+            return Err(SolveError::Invalid {
+                id: req.id,
+                reason: format!(
+                    "f_nodal has {} entries, mesh has {} dofs",
+                    req.f_nodal.len(),
+                    self.n_dofs()
+                ),
+            }
+            .into());
+        }
+        if !req.f_nodal.iter().all(|v| v.is_finite()) {
+            return Err(SolveError::Invalid {
+                id: req.id,
+                reason: "f_nodal must be finite (NaN/Inf load rejected)".to_string(),
+            }
+            .into());
+        }
         Ok(())
     }
 
     /// Shape- and positivity-check a varcoeff request (`rho` must be a
-    /// strictly positive finite field for the operator to stay SPD).
+    /// strictly positive finite field for the operator to stay SPD, and
+    /// `f_nodal` must be finite) and enforce its deadline.
     pub fn validate_varcoeff(&self, req: &VarCoeffRequest) -> Result<()> {
+        if let Some(d) = req.deadline {
+            if Instant::now() >= d {
+                return Err(SolveError::Expired { id: req.id }.into());
+            }
+        }
         let n = self.n_dofs();
-        anyhow::ensure!(
-            req.rho_nodal.len() == n,
-            "request {}: rho_nodal has {} entries, mesh has {n} dofs",
-            req.id,
-            req.rho_nodal.len()
-        );
-        anyhow::ensure!(
-            req.f_nodal.len() == n,
-            "request {}: f_nodal has {} entries, mesh has {n} dofs",
-            req.id,
-            req.f_nodal.len()
-        );
-        anyhow::ensure!(
-            req.rho_nodal.iter().all(|&r| r.is_finite() && r > 0.0),
-            "request {}: rho_nodal must be strictly positive and finite",
-            req.id
-        );
+        let invalid = |reason: String| -> Result<()> {
+            Err(SolveError::Invalid { id: req.id, reason }.into())
+        };
+        if req.rho_nodal.len() != n {
+            return invalid(format!(
+                "rho_nodal has {} entries, mesh has {n} dofs",
+                req.rho_nodal.len()
+            ));
+        }
+        if req.f_nodal.len() != n {
+            return invalid(format!(
+                "f_nodal has {} entries, mesh has {n} dofs",
+                req.f_nodal.len()
+            ));
+        }
+        if !req.rho_nodal.iter().all(|&r| r.is_finite() && r > 0.0) {
+            return invalid("rho_nodal must be strictly positive and finite".to_string());
+        }
+        if !req.f_nodal.iter().all(|v| v.is_finite()) {
+            return invalid("f_nodal must be finite (NaN/Inf load rejected)".to_string());
+        }
         Ok(())
     }
 
@@ -144,14 +201,9 @@ impl BatchSolver {
         let f = ctx.assemble_vector(&LinearForm::Source {
             f: ctx.coeff_nodal(&req.f_nodal),
         });
-        let (u, stats) = self.session.solve_with_load(&f);
-        anyhow::ensure!(stats.converged, "batch solve {} failed: {stats:?}", req.id);
-        Ok(SolveResponse {
-            id: req.id,
-            u,
-            iterations: stats.iterations,
-            rel_residual: stats.rel_residual,
-        })
+        let (u, stats, rep) = self.session.solve_with_load_resilient(&f);
+        self.track_escalation(&rep);
+        respond(req.id, u, stats, rep)
     }
 
     /// Solve one varcoeff request through the full per-instance pipeline
@@ -167,14 +219,9 @@ impl BatchSolver {
         let f = ctx.assemble_vector(&LinearForm::Source {
             f: ctx.coeff_nodal(&req.f_nodal),
         });
-        let (u, stats) = self.session.solve_foreign(&k, &f);
-        anyhow::ensure!(stats.converged, "varcoeff solve {} failed: {stats:?}", req.id);
-        Ok(SolveResponse {
-            id: req.id,
-            u,
-            iterations: stats.iterations,
-            rel_residual: stats.rel_residual,
-        })
+        let (u, stats, rep) = self.session.solve_foreign_resilient(&k, &f);
+        self.track_escalation(&rep);
+        respond(req.id, u, stats, rep)
     }
 
     /// Solve a whole batch with per-request fault isolation. Beyond the
@@ -208,16 +255,15 @@ impl BatchSolver {
         for s in 0..valid.len() {
             rhs.extend(self.session.restrict(&fbatch[s * n..(s + 1) * n]));
         }
-        let (u, stats) = self.session.solve_load_batch(&rhs);
+        let (u, stats, reps) = self.session.solve_load_batch_resilient(&rhs);
         seal_lanes(out, &valid, |s, i| {
-            let st = stats[s];
-            anyhow::ensure!(st.converged, "batch solve {} failed: {st:?}", reqs[i].id);
-            Ok(SolveResponse {
-                id: reqs[i].id,
-                u: self.session.expand(&u[s * nf..(s + 1) * nf]),
-                iterations: st.iterations,
-                rel_residual: st.rel_residual,
-            })
+            self.track_escalation(&reps[s]);
+            respond(
+                reqs[i].id,
+                self.session.expand(&u[s * nf..(s + 1) * nf]),
+                stats[s],
+                reps[s].clone(),
+            )
         })
     }
 
@@ -282,17 +328,16 @@ impl BatchSolver {
         // lockstep CG uses per-lane Jacobi under the default config
         // (bitwise) or ONE shared-mesh AMG hierarchy applied to all lanes
         // per iteration.
-        let (red, u, stats) = self.session.solve_varcoeff_batch(&kbatch, &fbatch);
+        let (red, u, stats, reps) = self.session.solve_varcoeff_batch_resilient(&kbatch, &fbatch);
         let nf = red.n_free();
         seal_lanes(out, &valid, |s, i| {
-            let st = stats[s];
-            anyhow::ensure!(st.converged, "varcoeff solve {} failed: {st:?}", reqs[i].id);
-            Ok(SolveResponse {
-                id: reqs[i].id,
-                u: red.expand(&u[s * nf..(s + 1) * nf]),
-                iterations: st.iterations,
-                rel_residual: st.rel_residual,
-            })
+            self.track_escalation(&reps[s]);
+            respond(
+                reqs[i].id,
+                red.expand(&u[s * nf..(s + 1) * nf]),
+                stats[s],
+                reps[s].clone(),
+            )
         })
     }
 
@@ -314,6 +359,31 @@ impl BatchSolver {
 
     pub fn n_dofs(&self) -> usize {
         self.session.ctx().n_dofs()
+    }
+}
+
+/// Seal one lane's outcome: a converged solve becomes a [`SolveResponse`]
+/// (carrying the escalation report when the ladder recovered it); a failed
+/// one becomes a typed [`SolveError::Solver`] naming the
+/// [`crate::solver::FailureKind`] — the single replacement for the four
+/// historical `ensure!(stats.converged, …)` sites that stringified the
+/// failure away.
+fn respond(
+    id: u64,
+    u: Vec<f64>,
+    stats: SolveStats,
+    escalation: Option<EscalationReport>,
+) -> Result<SolveResponse> {
+    if stats.converged {
+        Ok(SolveResponse {
+            id,
+            u,
+            iterations: stats.iterations,
+            rel_residual: stats.rel_residual,
+            escalation,
+        })
+    } else {
+        Err(SolveError::Solver { id, kind: stats.failure, stats, escalation }.into())
     }
 }
 

@@ -32,13 +32,40 @@
 //! scalar, failures, registry fills, evictions/rebuilds, drained-queue
 //! depth and dispatch-group telemetry) for observability and regression
 //! tests. Everything is std::sync::mpsc — no external runtime.
+//!
+//! # Failure semantics
+//!
+//! Every failed request is answered with a typed [`SolveError`] carried
+//! inside the `anyhow` error (`err.downcast_ref::<SolveError>()`), so
+//! clients branch on the failure class instead of parsing strings:
+//!
+//! * [`SolveError::Invalid`] — rejected by validation (shape mismatch,
+//!   non-positive coefficient, non-finite load) before any assembly.
+//! * [`SolveError::Expired`] — the request carried a deadline
+//!   ([`SolveRequest::with_deadline`]) that passed while it was queued;
+//!   answered at dispatch without solving.
+//! * [`SolveError::Overloaded`] — the bounded admission queue
+//!   ([`BatchServer::set_max_queue`]) was full at submission; the request
+//!   never reached the worker. Back off and resubmit.
+//! * [`SolveError::Solver`] — the solve failed with a classified
+//!   [`crate::solver::FailureKind`] (max-iterations, stagnation,
+//!   breakdown, non-finite), including the escalation ladder's per-stage
+//!   accounting when the session policy ran it and it was exhausted.
+//!
+//! When [`crate::solver::EscalationPolicy`] is enabled on the server's
+//! `SolverConfig`, failed lanes are retried through the session ladder
+//! (cold restart → preconditioner escalation → iteration-budget bump →
+//! dense-LU fallback) before a `Solver` error is returned; a rescued
+//! request answers normally with the [`SolveResponse::escalation`] report
+//! attached. Expired/rejected/retried/rescued counts and the
+//! admission-queue high-water mark are surfaced in [`CoordinatorStats`].
 
 pub mod api;
 pub mod batcher;
 pub mod server;
 
 pub use api::{
-    CoordinatorStats, SolveRequest, SolveResponse, VarCoeffRequest, DEFAULT_MESH,
+    CoordinatorStats, SolveError, SolveRequest, SolveResponse, VarCoeffRequest, DEFAULT_MESH,
 };
 pub use batcher::BatchSolver;
 pub use server::BatchServer;

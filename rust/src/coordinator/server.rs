@@ -32,9 +32,21 @@
 //! never dies with clients parked on `recv`. [`BatchServer::submit`]
 //! surfaces a gone worker as an error response instead of silently
 //! dropping the request.
+//!
+//! Admission control: [`BatchServer::set_max_queue`] bounds the number of
+//! requests allowed in flight (submitted but not yet drained). A burst
+//! that would push the depth past the bound is rejected at submission
+//! with a per-request [`super::api::SolveError::Overloaded`] — it never
+//! reaches the worker, so an overloaded server sheds load in O(1) instead
+//! of queueing unboundedly. Requests carrying a deadline that expires
+//! while queued are answered with `SolveError::Expired` at dispatch,
+//! before any assembly work. Both outcomes, plus the queue-depth
+//! high-water mark and the escalation ladder's retried/rescued lane
+//! counts, are surfaced through [`CoordinatorStats`].
 
 use std::collections::{HashMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, SendError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -44,7 +56,9 @@ use anyhow::{anyhow, Result};
 use crate::mesh::Mesh;
 use crate::solver::SolverConfig;
 
-use super::api::{CoordinatorStats, SolveRequest, SolveResponse, VarCoeffRequest, DEFAULT_MESH};
+use super::api::{
+    CoordinatorStats, SolveError, SolveRequest, SolveResponse, VarCoeffRequest, DEFAULT_MESH,
+};
 use super::batcher::BatchSolver;
 
 type Reply = Sender<Result<SolveResponse>>;
@@ -76,11 +90,28 @@ enum Msg {
     Shutdown,
 }
 
+/// Admission bookkeeping shared between the submitting side
+/// ([`BatchServer`]) and the worker: queue depth is incremented at
+/// submission and decremented when the worker drains, so the bound holds
+/// across concurrent submitters without a round-trip through the queue.
+#[derive(Default)]
+struct Admission {
+    /// Requests submitted but not yet drained by the worker.
+    depth: AtomicUsize,
+    /// Depth bound (0 = unbounded, the default).
+    max_queue: AtomicUsize,
+    /// Bursts rejected at admission, counted per request.
+    rejected: AtomicU64,
+    /// High-water mark of `depth` since server start.
+    high_water: AtomicU64,
+}
+
 /// Handle to the running server.
 pub struct BatchServer {
     tx: Sender<Msg>,
     worker: Option<JoinHandle<()>>,
     max_batch: usize,
+    admission: Arc<Admission>,
 }
 
 /// A registry slot: the built (or failed) per-mesh state plus its
@@ -129,7 +160,15 @@ struct Worker {
     /// stats stay monotone across evictions.
     retired_batched: u64,
     retired_scalar: u64,
+    /// Escalation-ladder counters of evicted solvers (same fold).
+    retired_retried: u64,
+    retired_rescued: u64,
     failed: u64,
+    /// Requests answered with [`SolveError::Expired`] — deadline passed
+    /// while queued, answered without solving.
+    expired: u64,
+    /// Shared admission bookkeeping (depth decremented at drain).
+    admission: Arc<Admission>,
     /// Requests drained from the queue, summed over drain cycles (the
     /// queue-depth integral: `queued_requests / drain_cycles` is the mean
     /// drained batch size under load).
@@ -202,11 +241,19 @@ impl Worker {
             self.evictions += 1;
             self.evicted_keys.insert(mesh_id);
             if let Ok(solver) = entry.state {
-                self.retired_batched += solver.n_batched_solves();
-                self.retired_scalar += solver.n_scalar_solves();
+                self.retire(&solver);
             }
         }
         self.meshes.insert(mesh_id, mesh);
+    }
+
+    /// Fold an evicted solver's counters into the retired totals so the
+    /// aggregate stats stay monotone across evictions.
+    fn retire(&mut self, solver: &BatchSolver) {
+        self.retired_batched += solver.n_batched_solves();
+        self.retired_scalar += solver.n_scalar_solves();
+        self.retired_retried += solver.n_retried_lanes();
+        self.retired_rescued += solver.n_rescued_lanes();
     }
 
     /// Answer the stats queries collected this cycle (post-dispatch).
@@ -230,6 +277,11 @@ impl Worker {
             queued_requests: self.queued_requests,
             drain_cycles: self.drain_cycles,
             dispatch_groups: self.dispatch_groups,
+            expired_requests: self.expired,
+            rejected_requests: self.admission.rejected.load(Ordering::Relaxed),
+            retried_lanes: self.retired_retried,
+            rescued_lanes: self.retired_rescued,
+            queue_high_water: self.admission.high_water.load(Ordering::Relaxed),
             ..CoordinatorStats::default()
         };
         for entry in self.states.values() {
@@ -237,6 +289,8 @@ impl Worker {
                 s.meshes_built += 1;
                 s.batched_solves += solver.n_batched_solves();
                 s.scalar_solves += solver.n_scalar_solves();
+                s.retried_lanes += solver.n_retried_lanes();
+                s.rescued_lanes += solver.n_rescued_lanes();
             }
         }
         s
@@ -268,8 +322,7 @@ impl Worker {
                         self.evictions += 1;
                         self.evicted_keys.insert(victim);
                         if let Ok(solver) = entry.state {
-                            self.retired_batched += solver.n_batched_solves();
-                            self.retired_scalar += solver.n_scalar_solves();
+                            self.retire(&solver);
                         }
                     }
                 }
@@ -299,6 +352,11 @@ impl Worker {
     /// one chunk per round, so a large group cannot starve the others
     /// past its first chunk.
     fn dispatch(&mut self, pending: Vec<(Req, Reply)>) {
+        #[cfg(feature = "fault-inject")]
+        if let Some(ms) = crate::util::faults::stall_ms(crate::util::faults::SERVER_STALL) {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+        self.admission.depth.fetch_sub(pending.len(), Ordering::Relaxed);
         if pending.is_empty() {
             return;
         }
@@ -398,8 +456,14 @@ impl Worker {
                         .collect()
                 });
                 for (res, reply) in results.into_iter().zip(replies) {
-                    if res.is_err() {
+                    if let Err(e) = &res {
                         failed += 1;
+                        if matches!(
+                            e.downcast_ref::<SolveError>(),
+                            Some(SolveError::Expired { .. })
+                        ) {
+                            self.expired += 1;
+                        }
                     }
                     let _ = reply.send(res);
                 }
@@ -430,6 +494,8 @@ impl BatchServer {
         max_mesh_states: usize,
     ) -> BatchServer {
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let admission = Arc::new(Admission::default());
+        let worker_admission = Arc::clone(&admission);
         let worker = std::thread::spawn(move || {
             let mut w = Worker {
                 meshes: meshes.into_iter().collect(),
@@ -443,7 +509,11 @@ impl BatchServer {
                 evicted_keys: HashSet::new(),
                 retired_batched: 0,
                 retired_scalar: 0,
+                retired_retried: 0,
+                retired_rescued: 0,
                 failed: 0,
+                expired: 0,
+                admission: worker_admission,
                 queued_requests: 0,
                 drain_cycles: 0,
                 dispatch_groups: 0,
@@ -481,6 +551,7 @@ impl BatchServer {
             tx,
             worker: Some(worker),
             max_batch,
+            admission,
         }
     }
 
@@ -489,6 +560,14 @@ impl BatchServer {
     /// start — the worker snapshots it.
     pub fn max_batch(&self) -> usize {
         self.max_batch
+    }
+
+    /// Bound the admission queue: a burst that would push the in-flight
+    /// depth (submitted but not yet drained) past `n` is rejected at
+    /// submission with [`SolveError::Overloaded`] per request — it never
+    /// reaches the worker. `0` removes the bound (the default).
+    pub fn set_max_queue(&self, n: usize) {
+        self.admission.max_queue.store(n, Ordering::Relaxed);
     }
 
     /// Register (or replace) a mesh topology on the running server.
@@ -531,6 +610,31 @@ impl BatchServer {
     }
 
     fn submit_burst(&self, reqs: Vec<Req>) -> Vec<Receiver<Result<SolveResponse>>> {
+        let k = reqs.len();
+        let adm = &self.admission;
+        let prev = adm.depth.fetch_add(k, Ordering::Relaxed);
+        let max = adm.max_queue.load(Ordering::Relaxed);
+        if max > 0 && prev + k > max {
+            // Bounded admission: shed the whole burst without enqueueing
+            // (the worker never sees it), answering each request with a
+            // typed rejection the caller can back off on.
+            adm.depth.fetch_sub(k, Ordering::Relaxed);
+            adm.rejected.fetch_add(k as u64, Ordering::Relaxed);
+            return reqs
+                .into_iter()
+                .map(|req| {
+                    let (reply_tx, reply_rx) = channel();
+                    let err = SolveError::Overloaded {
+                        id: req.id(),
+                        queue_depth: prev,
+                        max_queue: max,
+                    };
+                    let _ = reply_tx.send(Err(err.into()));
+                    reply_rx
+                })
+                .collect();
+        }
+        adm.high_water.fetch_max((prev + k) as u64, Ordering::Relaxed);
         let mut items = Vec::with_capacity(reqs.len());
         let mut receivers = Vec::with_capacity(reqs.len());
         for req in reqs {
@@ -541,6 +645,7 @@ impl BatchServer {
         if let Err(SendError(msg)) = self.tx.send(Msg::Many(items)) {
             // The worker is gone (shutdown or died): answer immediately
             // instead of leaving callers parked on `recv` forever.
+            adm.depth.fetch_sub(k, Ordering::Relaxed);
             if let Msg::Many(items) = msg {
                 for (req, reply) in items {
                     let _ = reply.send(Err(anyhow!(

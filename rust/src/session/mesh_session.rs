@@ -1,13 +1,16 @@
 //! The [`MeshSession`] type: one owner for the per-mesh solve stack.
 
+use std::sync::OnceLock;
+
 use crate::assembly::{AssemblyContext, BilinearForm, Coefficient};
 use crate::bc::{condense, CondensePlan, DirichletBc, ReducedBatch, ReducedSystem};
 use crate::mesh::Mesh;
 use crate::solver::{
-    cg, cg_batch, cg_batch_warm, cg_batch_warm_with, AmgBatch, AmgHierarchy, AmgPrecond,
-    JacobiPrecond, LockstepOp, MultiRhs, PrecondEngine, PrecondKind, SolveStats, SolverConfig,
+    cg, cg_batch, cg_batch_warm, cg_batch_warm_with, rel_residual, AmgBatch, AmgConfig,
+    AmgHierarchy, AmgPrecond, EscalationReport, EscalationStage, FailureKind, JacobiPrecond,
+    LockstepOp, MultiRhs, PrecondEngine, PrecondKind, SolveStats, SolverConfig, StageAttempt,
 };
-use crate::sparse::{Csr, CsrBatch};
+use crate::sparse::{Csr, CsrBatch, Dense};
 
 /// The complete per-mesh solve stack, built once per (mesh, BC, form):
 /// Dirichlet condensation plan, persistent reduced system, preconditioner
@@ -36,6 +39,10 @@ pub struct MeshSession {
     /// Stored warm-start seed (full DoF field) for
     /// [`MeshSession::solve_current`].
     warm: Option<Vec<f64>>,
+    /// Lazily built AMG hierarchy for the preconditioner-escalation
+    /// ladder stage (only used when the engine is Jacobi): built from the
+    /// session operator on the first rescue, cached for every later one.
+    rescue_amg: OnceLock<AmgHierarchy>,
     config: SolverConfig,
 }
 
@@ -63,6 +70,7 @@ impl MeshSession {
             engine: Some(engine),
             batch_amg: None,
             warm: None,
+            rescue_amg: OnceLock::new(),
             config,
         }
     }
@@ -85,6 +93,7 @@ impl MeshSession {
             engine: Some(engine),
             batch_amg: None,
             warm: None,
+            rescue_amg: OnceLock::new(),
             config,
         }
     }
@@ -109,6 +118,7 @@ impl MeshSession {
             engine: None,
             batch_amg: None,
             warm: None,
+            rescue_amg: OnceLock::new(),
             config,
         }
     }
@@ -120,6 +130,8 @@ impl MeshSession {
     /// preconditioner tracks the new values.
     pub fn refill(&mut self, values: &[f64], f_full: &[f64]) {
         self.cplan.reapply_into(values, f_full, &mut self.sys);
+        // The rescue hierarchy aggregated the old values; rebuild lazily.
+        let _ = self.rescue_amg.take();
     }
 
     /// Bring the engine up to date with the current session values:
@@ -207,6 +219,257 @@ impl MeshSession {
             }
         };
         (sys.expand(&u_free), stats)
+    }
+
+    /// Foreign-operator pipeline with the escalation ladder: bitwise
+    /// [`MeshSession::solve_foreign`] when the solve converges or the
+    /// policy is off; otherwise the failed request retries through
+    /// [`MeshSession::escalate_lane`](crate::solver::EscalationPolicy).
+    pub fn solve_foreign_resilient(
+        &self,
+        k: &Csr,
+        f_full: &[f64],
+    ) -> (Vec<f64>, SolveStats, Option<EscalationReport>) {
+        let sys = condense(k, f_full, &self.sys.bc);
+        let (u_free, stats) = match self.engine_ref() {
+            PrecondEngine::Jacobi(_) => {
+                let pc = JacobiPrecond::new(&sys.k);
+                cg(&sys.k, &sys.rhs, &pc, &self.config)
+            }
+            PrecondEngine::Amg(h, ws) => {
+                cg(&sys.k, &sys.rhs, &AmgPrecond::with_scratch(h, ws), &self.config)
+            }
+        };
+        if stats.converged || !self.config.escalation.enabled {
+            return (sys.expand(&u_free), stats, None);
+        }
+        let (rescued, rep) = self.escalate_lane(&sys.k, &sys.rhs, stats, false);
+        match rescued {
+            Some(x) => {
+                let st = rep.final_stats().unwrap_or(stats);
+                (sys.expand(&x), st, Some(rep))
+            }
+            None => (sys.expand(&u_free), stats, Some(rep)),
+        }
+    }
+
+    /// The escalation-stage AMG hierarchy, built from the session operator
+    /// on first use. Like [`MeshSession::solve_foreign`] under AMG, it is
+    /// a valid SPD preconditioner for same-topology positive-coefficient
+    /// foreign operators, so one hierarchy serves every rescued lane.
+    fn rescue_hierarchy(&self) -> &AmgHierarchy {
+        self.rescue_amg.get_or_init(|| AmgHierarchy::build(&self.sys.k, AmgConfig::default()))
+    }
+
+    /// One scalar rescue solve of `(k, rhs)`. `amg = false`: per-operator
+    /// Jacobi; `amg = true`: the session's AMG hierarchy (engine-owned
+    /// when the engine is AMG, the cached rescue hierarchy otherwise).
+    fn rescue_solve(
+        &self,
+        k: &Csr,
+        rhs: &[f64],
+        amg: bool,
+        cfg: &SolverConfig,
+    ) -> (Vec<f64>, SolveStats) {
+        if amg {
+            match self.engine.as_ref() {
+                Some(PrecondEngine::Amg(h, ws)) => {
+                    cg(k, rhs, &AmgPrecond::with_scratch(h, ws), cfg)
+                }
+                _ => cg(k, rhs, &AmgPrecond::new(self.rescue_hierarchy()), cfg),
+            }
+        } else {
+            cg(k, rhs, &JacobiPrecond::new(k), cfg)
+        }
+    }
+
+    /// Dense-LU direct fallback — the ladder's last rung. Accepts the
+    /// factored answer only when its true relative residual meets the
+    /// (slightly relaxed) solve tolerance.
+    fn direct_solve(&self, k: &Csr, rhs: &[f64]) -> (Option<Vec<f64>>, SolveStats) {
+        let dense = Dense { nrows: k.nrows, ncols: k.ncols, data: k.to_dense() };
+        match dense.factor() {
+            Ok(lu) => {
+                let mut x = vec![0.0; k.nrows];
+                lu.solve_into(rhs, &mut x);
+                let rel = rel_residual(k, &x, rhs);
+                if rel.is_finite() && rel <= self.config.rel_tol.max(1e-8) {
+                    (Some(x), SolveStats::ok(0, rel))
+                } else if rel.is_finite() {
+                    (None, SolveStats::fail(0, rel, FailureKind::Stagnated))
+                } else {
+                    (None, SolveStats::fail(0, rel, FailureKind::NonFinite))
+                }
+            }
+            Err(_) => (None, SolveStats::fail(0, f64::INFINITY, FailureKind::Breakdown)),
+        }
+    }
+
+    /// Run the escalation ladder on one failed lane: `k`/`rhs` are the
+    /// lane's reduced operator and load, `first` the failing stats,
+    /// `was_warm` whether the failed attempt was warm-started (gates the
+    /// cold-restart stage — a cold failure retried cold is the same
+    /// solve). Returns the rescued free-DoF solution (`None` when every
+    /// configured stage failed) and the per-stage accounting.
+    fn escalate_lane(
+        &self,
+        k: &Csr,
+        rhs: &[f64],
+        first: SolveStats,
+        was_warm: bool,
+    ) -> (Option<Vec<f64>>, EscalationReport) {
+        let pol = self.config.escalation;
+        let mut rep = EscalationReport {
+            first: Some(first),
+            attempts: Vec::new(),
+            resolved_by: None,
+        };
+        let engine_amg = matches!(self.engine.as_ref(), Some(PrecondEngine::Amg(..)));
+        // Tracks the strongest preconditioner reached so far; later stages
+        // keep it rather than regressing to the one that already failed.
+        let mut amg = engine_amg;
+        if pol.cold_restart && was_warm {
+            let (x, st) = self.rescue_solve(k, rhs, amg, &self.config);
+            rep.attempts.push(StageAttempt { stage: EscalationStage::ColdRestart, stats: st });
+            if st.converged {
+                rep.resolved_by = Some(EscalationStage::ColdRestart);
+                return (Some(x), rep);
+            }
+        }
+        if pol.escalate_precond && !engine_amg {
+            amg = true;
+            let (x, st) = self.rescue_solve(k, rhs, true, &self.config);
+            rep.attempts
+                .push(StageAttempt { stage: EscalationStage::PrecondEscalation, stats: st });
+            if st.converged {
+                rep.resolved_by = Some(EscalationStage::PrecondEscalation);
+                return (Some(x), rep);
+            }
+        }
+        if pol.iter_bump > 1 {
+            let mut cfg = self.config;
+            cfg.max_iter = cfg.max_iter.saturating_mul(pol.iter_bump);
+            let (x, st) = self.rescue_solve(k, rhs, amg, &cfg);
+            rep.attempts.push(StageAttempt { stage: EscalationStage::IterBump, stats: st });
+            if st.converged {
+                rep.resolved_by = Some(EscalationStage::IterBump);
+                return (Some(x), rep);
+            }
+        }
+        if pol.direct_fallback && k.nrows <= pol.direct_max {
+            let (x, st) = self.direct_solve(k, rhs);
+            rep.attempts.push(StageAttempt { stage: EscalationStage::DirectLu, stats: st });
+            if st.converged {
+                rep.resolved_by = Some(EscalationStage::DirectLu);
+                return (x, rep);
+            }
+        }
+        (None, rep)
+    }
+
+    /// [`MeshSession::solve_with_load`] plus the escalation ladder on
+    /// failure. With the policy off (the default) or a converged first
+    /// attempt, the result is bitwise `solve_with_load` and no report is
+    /// produced — serving paths call this unconditionally.
+    pub fn solve_with_load_resilient(
+        &self,
+        f_full: &[f64],
+    ) -> (Vec<f64>, SolveStats, Option<EscalationReport>) {
+        let rhs = self.sys.restrict(f_full);
+        let (u_free, stats) = self.engine_ref().cg_warm(&self.sys.k, &rhs, None, &self.config);
+        if stats.converged || !self.config.escalation.enabled {
+            return (self.sys.expand(&u_free), stats, None);
+        }
+        let (rescued, rep) = self.escalate_lane(&self.sys.k, &rhs, stats, false);
+        match rescued {
+            Some(x) => {
+                let st = rep.final_stats().unwrap_or(stats);
+                (self.sys.expand(&x), st, Some(rep))
+            }
+            None => (self.sys.expand(&u_free), stats, Some(rep)),
+        }
+    }
+
+    /// [`MeshSession::solve_reduced`] plus the escalation ladder on
+    /// failure (`x0.is_some()` arms the cold-restart stage). Bitwise
+    /// `solve_reduced` when converged or with the policy off.
+    pub fn solve_reduced_resilient(
+        &self,
+        rhs: &[f64],
+        x0: Option<&[f64]>,
+    ) -> (Vec<f64>, SolveStats, Option<EscalationReport>) {
+        let (x, stats) = self.engine_ref().cg_warm(&self.sys.k, rhs, x0, &self.config);
+        if stats.converged || !self.config.escalation.enabled {
+            return (x, stats, None);
+        }
+        let (rescued, rep) = self.escalate_lane(&self.sys.k, rhs, stats, x0.is_some());
+        match rescued {
+            Some(xr) => {
+                let st = rep.final_stats().unwrap_or(stats);
+                (xr, st, Some(rep))
+            }
+            None => (x, stats, Some(rep)),
+        }
+    }
+
+    /// [`MeshSession::solve_load_batch`] plus per-lane escalation: only
+    /// failed lanes re-solve, and a rescued lane overwrites exactly its
+    /// own instance-major slice — healthy neighbors are untouched (their
+    /// lockstep trajectories are never re-run). Bitwise `solve_load_batch`
+    /// when every lane converges or with the policy off.
+    pub fn solve_load_batch_resilient(
+        &self,
+        rhs: &[f64],
+    ) -> (Vec<f64>, Vec<SolveStats>, Vec<Option<EscalationReport>>) {
+        let (mut u, mut stats) = self.solve_load_batch(rhs);
+        let mut reports = vec![None; stats.len()];
+        if self.config.escalation.enabled {
+            let nf = self.n_free();
+            for s in 0..stats.len() {
+                if stats[s].converged {
+                    continue;
+                }
+                let lane = s * nf..(s + 1) * nf;
+                let (rescued, rep) =
+                    self.escalate_lane(&self.sys.k, &rhs[lane.clone()], stats[s], false);
+                if let Some(x) = rescued {
+                    stats[s] = rep.final_stats().unwrap_or(stats[s]);
+                    u[lane].copy_from_slice(&x);
+                }
+                reports[s] = Some(rep);
+            }
+        }
+        (u, stats, reports)
+    }
+
+    /// [`MeshSession::solve_varcoeff_batch`] plus per-lane escalation on
+    /// the lane's own condensed operator (`red.k` instance `s`). Only
+    /// failed lanes re-solve; healthy neighbors are untouched. Bitwise
+    /// `solve_varcoeff_batch` when every lane converges or with the
+    /// policy off.
+    pub fn solve_varcoeff_batch_resilient(
+        &self,
+        kbatch: &CsrBatch,
+        f: &[f64],
+    ) -> (ReducedBatch, Vec<f64>, Vec<SolveStats>, Vec<Option<EscalationReport>>) {
+        let (red, mut u, mut stats) = self.solve_varcoeff_batch(kbatch, f);
+        let mut reports = vec![None; stats.len()];
+        if self.config.escalation.enabled {
+            let nf = red.n_free();
+            for s in 0..stats.len() {
+                if stats[s].converged {
+                    continue;
+                }
+                let ks = red.k.instance(s);
+                let (rescued, rep) = self.escalate_lane(&ks, red.rhs_of(s), stats[s], false);
+                if let Some(x) = rescued {
+                    stats[s] = rep.final_stats().unwrap_or(stats[s]);
+                    u[s * nf..(s + 1) * nf].copy_from_slice(&x);
+                }
+                reports[s] = Some(rep);
+            }
+        }
+        (red, u, stats, reports)
     }
 
     /// Lockstep multi-RHS operator over the session matrix, carrying the

@@ -55,6 +55,25 @@
 //! behind a `Mutex`) lives inside the session, so repeated calls on any
 //! path stay allocation-free and the session is `Sync`: one instance can
 //! serve scalar and blocked rollouts concurrently behind an `Arc`.
+//!
+//! # Escalation ladder
+//!
+//! When [`crate::solver::EscalationPolicy`] is enabled on the session
+//! config, the `*_resilient` solve methods
+//! ([`MeshSession::solve_with_load_resilient`],
+//! [`MeshSession::solve_load_batch_resilient`],
+//! [`MeshSession::solve_varcoeff_batch_resilient`],
+//! [`MeshSession::solve_foreign_resilient`],
+//! [`MeshSession::solve_reduced_resilient`]) retry *only the failed
+//! lanes* through a fixed recovery sequence — cold restart (drop the warm
+//! seed), preconditioner escalation (Jacobi → AMG with a session-cached
+//! rescue hierarchy), iteration-budget bump, dense-LU direct fallback —
+//! recording per-stage [`crate::solver::SolveStats`] in an
+//! [`crate::solver::EscalationReport`]. Healthy lanes of a lockstep batch
+//! are never re-run: a rescue overwrites exactly the failed lane's
+//! instance-major slice. With the policy off (the default) the resilient
+//! methods are bitwise their plain counterparts, so serving paths call
+//! them unconditionally.
 
 mod mesh_session;
 

@@ -680,7 +680,27 @@ impl AmgHierarchy {
                 }
             }
         }
+        #[cfg(feature = "fault-inject")]
+        for s in 0..s_n {
+            if crate::util::faults::fire(crate::util::faults::AMG_POISON, s, 0) {
+                ws.z[0][s * n0..(s + 1) * n0].fill(f64::NAN);
+            }
+        }
         z_out.copy_from_slice(&ws.z[0]);
+        // Guard: a lane whose smoothed correction went non-finite from a
+        // finite residual falls back to the identity preconditioner for
+        // this application — one poisoned lane cannot leak NaN into the
+        // outer Krylov state of its neighbors, and CG on the lane keeps a
+        // valid (if unaccelerated) direction.
+        for s in 0..s_n {
+            let lane = s * n0..(s + 1) * n0;
+            if z_out[lane.clone()].iter().any(|v| !v.is_finite())
+                && r_in[lane.clone()].iter().all(|v| v.is_finite())
+            {
+                let (dst, src) = (&mut z_out[lane.clone()], &r_in[lane]);
+                dst.copy_from_slice(src);
+            }
+        }
     }
 }
 

@@ -6,9 +6,16 @@ use crate::sparse::Csr;
 use crate::util::{axpy, dot, norm2};
 
 use super::precond::Preconditioner;
-use super::{SolveStats, SolverConfig};
+use super::{FailureKind, SolveStats, SolverConfig};
 
 /// Solve `A x = b` with right-preconditioned BiCGSTAB.
+///
+/// Failure classification (see the [`super`] module docs): vanishing
+/// `ρ`/`r̂·v`/`t·t`/`ω` scalars are [`FailureKind::Breakdown`], NaN/Inf in
+/// those scalars or the residual norm is [`FailureKind::NonFinite`], and an
+/// exhausted budget is [`FailureKind::MaxIters`]. The checks compare values
+/// the solver already computes, so converging trajectories are bitwise
+/// unchanged.
 pub fn bicgstab(
     a: &Csr,
     b: &[f64],
@@ -21,14 +28,7 @@ pub fn bicgstab(
     let mut r = b.to_vec();
     let nb = norm2(b).max(1e-300);
     if norm2(&r) / nb < config.rel_tol || norm2(&r) < config.abs_tol {
-        return (
-            x,
-            SolveStats {
-                iterations: 0,
-                rel_residual: norm2(&r) / nb,
-                converged: true,
-            },
-        );
+        return (x, SolveStats::ok(0, norm2(&r) / nb));
     }
     let r_hat = r.clone();
     let mut rho = 1.0;
@@ -39,11 +39,22 @@ pub fn bicgstab(
     let mut phat = vec![0.0; n];
     let mut shat = vec![0.0; n];
     let mut t = vec![0.0; n];
+    // Why the loop broke out early (breakdown vs NaN contamination); stays
+    // MaxIters when the budget simply ran out.
+    let mut fail = FailureKind::MaxIters;
+    let mut iters = config.max_iter;
 
     for it in 1..=config.max_iter {
         let rho_new = dot(&r_hat, &r);
+        if !rho_new.is_finite() {
+            fail = FailureKind::NonFinite;
+            iters = it;
+            break;
+        }
         if rho_new.abs() < 1e-300 {
-            break; // breakdown
+            fail = FailureKind::Breakdown;
+            iters = it;
+            break;
         }
         let beta = (rho_new / rho) * (alpha / omega);
         rho = rho_new;
@@ -53,7 +64,14 @@ pub fn bicgstab(
         precond.apply(&p, &mut phat);
         a.spmv(&phat, &mut v);
         let rhv = dot(&r_hat, &v);
+        if !rhv.is_finite() {
+            fail = FailureKind::NonFinite;
+            iters = it;
+            break;
+        }
         if rhv.abs() < 1e-300 {
+            fail = FailureKind::Breakdown;
+            iters = it;
             break;
         }
         alpha = rho / rhv;
@@ -62,19 +80,24 @@ pub fn bicgstab(
         if norm2(&r) / nb < config.rel_tol {
             axpy(alpha, &phat, &mut x);
             let rel = final_residual(a, &x, b, nb);
-            return (
-                x,
-                SolveStats {
-                    iterations: it,
-                    rel_residual: rel,
-                    converged: rel < config.rel_tol.max(1e-9),
-                },
-            );
+            // Recurrence says converged; trust only the true residual.
+            return if rel < config.rel_tol.max(1e-9) {
+                (x, SolveStats::ok(it, rel))
+            } else {
+                (x, SolveStats::fail(it, rel, FailureKind::Stagnated))
+            };
         }
         precond.apply(&r, &mut shat);
         a.spmv(&shat, &mut t);
         let tt = dot(&t, &t);
+        if !tt.is_finite() {
+            fail = FailureKind::NonFinite;
+            iters = it;
+            break;
+        }
         if tt.abs() < 1e-300 {
+            fail = FailureKind::Breakdown;
+            iters = it;
             break;
         }
         omega = dot(&t, &r) / tt;
@@ -82,30 +105,28 @@ pub fn bicgstab(
         axpy(omega, &shat, &mut x);
         axpy(-omega, &t, &mut r);
         let rn = norm2(&r);
+        if !rn.is_finite() {
+            fail = FailureKind::NonFinite;
+            iters = it;
+            break;
+        }
         if rn / nb < config.rel_tol || rn < config.abs_tol {
             let rel = final_residual(a, &x, b, nb);
-            return (
-                x,
-                SolveStats {
-                    iterations: it,
-                    rel_residual: rel,
-                    converged: true,
-                },
-            );
+            return (x, SolveStats::ok(it, rel));
         }
         if omega.abs() < 1e-300 {
+            fail = FailureKind::Breakdown;
+            iters = it;
             break;
         }
     }
     let rel = final_residual(a, &x, b, nb);
-    (
-        x,
-        SolveStats {
-            iterations: config.max_iter,
-            rel_residual: rel,
-            converged: rel < config.rel_tol,
-        },
-    )
+    if rel < config.rel_tol {
+        // A breakdown after reaching tolerance is still a success.
+        (x, SolveStats::ok(iters, rel))
+    } else {
+        (x, SolveStats::fail(iters, rel, fail))
+    }
 }
 
 fn final_residual(a: &Csr, x: &[f64], b: &[f64], nb: f64) -> f64 {

@@ -1,11 +1,19 @@
 //! Preconditioned conjugate gradients (SPD systems: Poisson, elasticity,
 //! mass-matrix solves inside time steppers).
+//!
+//! Failure classification (see the [`super`] module docs): breakdown on
+//! `p·Ap ≤ 0`, non-finite on a NaN/Inf residual norm or Krylov scalar,
+//! stagnation after [`super::STALL_WINDOW`] non-improving iterations. All
+//! checks compare values the solver already computes — the clean-path
+//! trajectory is bitwise unchanged.
 
 use crate::sparse::Csr;
+#[cfg(feature = "fault-inject")]
+use crate::util::faults;
 use crate::util::{axpy, dot, norm2};
 
 use super::precond::Preconditioner;
-use super::{SolveStats, SolverConfig};
+use super::{FailureKind, SolveStats, SolverConfig, STALL_IMPROVE, STALL_WINDOW};
 
 /// Solve `A x = b` (A symmetric positive definite) from a zero initial
 /// guess.
@@ -45,46 +53,51 @@ pub fn cg_warm(
     };
     let nb = norm2(b).max(1e-300);
     if norm2(&r) <= config.abs_tol {
-        return (
-            x,
-            SolveStats {
-                iterations: 0,
-                rel_residual: norm2(&r) / nb,
-                converged: true,
-            },
-        );
+        return (x, SolveStats::ok(0, norm2(&r) / nb));
     }
     let mut z = vec![0.0; n];
     precond.apply(&r, &mut z);
     let mut p = z.clone();
     let mut rz = dot(&r, &z);
     let mut ap = vec![0.0; n];
+    let mut best_rn = f64::INFINITY;
+    let mut stall = 0usize;
     for it in 1..=config.max_iter {
         a.spmv(&p, &mut ap);
         let pap = dot(&p, &ap);
-        if pap.abs() < 1e-300 {
-            return (
-                x,
-                SolveStats {
-                    iterations: it,
-                    rel_residual: norm2(&r) / nb,
-                    converged: false,
-                },
-            );
+        #[cfg(feature = "fault-inject")]
+        let pap = if faults::fire(faults::CG_BREAKDOWN, 0, it) { 0.0 } else { pap };
+        if !pap.is_finite() {
+            return (x, SolveStats::fail(it, norm2(&r) / nb, FailureKind::NonFinite));
+        }
+        if pap <= 0.0 || pap.abs() < 1e-300 {
+            return (x, SolveStats::fail(it, norm2(&r) / nb, FailureKind::Breakdown));
         }
         let alpha = rz / pap;
         axpy(alpha, &p, &mut x);
         axpy(-alpha, &ap, &mut r);
+        #[cfg(feature = "fault-inject")]
+        if faults::fire(faults::CG_POISON, 0, it) {
+            r.fill(f64::NAN);
+        }
         let rn = norm2(&r);
-        if rn / nb < config.rel_tol || rn < config.abs_tol {
-            return (
-                x,
-                SolveStats {
-                    iterations: it,
-                    rel_residual: rn / nb,
-                    converged: true,
-                },
-            );
+        if !rn.is_finite() {
+            return (x, SolveStats::fail(it, rn / nb, FailureKind::NonFinite));
+        }
+        let converged = rn / nb < config.rel_tol || rn < config.abs_tol;
+        #[cfg(feature = "fault-inject")]
+        let converged = converged && !faults::fire(faults::CG_STALL, 0, it);
+        if converged {
+            return (x, SolveStats::ok(it, rn / nb));
+        }
+        if rn < best_rn * STALL_IMPROVE {
+            best_rn = rn;
+            stall = 0;
+        } else {
+            stall += 1;
+            if stall >= STALL_WINDOW {
+                return (x, SolveStats::fail(it, rn / nb, FailureKind::Stagnated));
+            }
         }
         precond.apply(&r, &mut z);
         let rz_new = dot(&r, &z);
@@ -95,14 +108,7 @@ pub fn cg_warm(
         }
     }
     let rn = norm2(&r);
-    (
-        x,
-        SolveStats {
-            iterations: config.max_iter,
-            rel_residual: rn / nb,
-            converged: false,
-        },
-    )
+    (x, SolveStats::fail(config.max_iter, rn / nb, FailureKind::MaxIters))
 }
 
 #[cfg(test)]

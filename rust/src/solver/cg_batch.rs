@@ -24,11 +24,13 @@
 //! instance with the matching scalar preconditioner.
 
 use crate::sparse::{Csr, CsrBatch};
+#[cfg(feature = "fault-inject")]
+use crate::util::faults;
 use crate::util::{axpy, dot, norm2};
 
 use super::amg::{AmgBatch, AmgHierarchy};
 use super::precond::jacobi_inverse;
-use super::{PrecondKind, SolveStats, SolverConfig};
+use super::{FailureKind, PrecondKind, SolveStats, SolverConfig, STALL_IMPROVE, STALL_WINDOW};
 
 /// `S` SPD operators sharing one sparsity pattern: either `S` distinct
 /// value arrays ([`CsrBatch`]) or one matrix driving `S` right-hand sides
@@ -248,14 +250,9 @@ pub fn cg_batch_warm_with<Op: LockstepOp, P: LockstepPrecond>(
     let mut rz = vec![0.0; s_n];
     let mut nb = vec![0.0; s_n];
     let mut active = vec![true; s_n];
-    let mut stats = vec![
-        SolveStats {
-            iterations: 0,
-            rel_residual: 0.0,
-            converged: false,
-        };
-        s_n
-    ];
+    let mut stats = vec![SolveStats::fail(0, 0.0, FailureKind::MaxIters); s_n];
+    let mut best_rn = vec![f64::INFINITY; s_n];
+    let mut stall = vec![0usize; s_n];
 
     // Per-lane norms + immediate-convergence checks, mirroring scalar CG.
     for s in 0..s_n {
@@ -264,11 +261,7 @@ pub fn cg_batch_warm_with<Op: LockstepOp, P: LockstepPrecond>(
         let rn0 = norm2(&r[lane]);
         if rn0 <= config.abs_tol {
             active[s] = false;
-            stats[s] = SolveStats {
-                iterations: 0,
-                rel_residual: rn0 / nb[s],
-                converged: true,
-            };
+            stats[s] = SolveStats::ok(0, rn0 / nb[s]);
         }
     }
     // One fused preconditioner application covers every lane (inactive
@@ -297,13 +290,18 @@ pub fn cg_batch_warm_with<Op: LockstepOp, P: LockstepPrecond>(
             }
             let lane = s * n..(s + 1) * n;
             let pap = dot(&p[lane.clone()], &ap[lane.clone()]);
-            if pap.abs() < 1e-300 {
+            #[cfg(feature = "fault-inject")]
+            let pap = if faults::fire(faults::CG_BREAKDOWN, s, it) { 0.0 } else { pap };
+            if !pap.is_finite() {
                 active[s] = false;
-                stats[s] = SolveStats {
-                    iterations: it,
-                    rel_residual: norm2(&r[lane.clone()]) / nb[s],
-                    converged: false,
-                };
+                stats[s] =
+                    SolveStats::fail(it, norm2(&r[lane.clone()]) / nb[s], FailureKind::NonFinite);
+                continue;
+            }
+            if pap <= 0.0 || pap.abs() < 1e-300 {
+                active[s] = false;
+                stats[s] =
+                    SolveStats::fail(it, norm2(&r[lane.clone()]) / nb[s], FailureKind::Breakdown);
                 continue;
             }
             let alpha = rz[s] / pap;
@@ -313,14 +311,31 @@ pub fn cg_batch_warm_with<Op: LockstepOp, P: LockstepPrecond>(
                 let (rs, aps) = (&mut r[lane.clone()], &ap[lane.clone()]);
                 axpy(-alpha, aps, rs);
             }
+            #[cfg(feature = "fault-inject")]
+            if faults::fire(faults::CG_POISON, s, it) {
+                r[lane.clone()].fill(f64::NAN);
+            }
             let rn = norm2(&r[lane.clone()]);
-            if rn / nb[s] < config.rel_tol || rn < config.abs_tol {
+            if !rn.is_finite() {
                 active[s] = false;
-                stats[s] = SolveStats {
-                    iterations: it,
-                    rel_residual: rn / nb[s],
-                    converged: true,
-                };
+                stats[s] = SolveStats::fail(it, rn / nb[s], FailureKind::NonFinite);
+                continue;
+            }
+            let converged = rn / nb[s] < config.rel_tol || rn < config.abs_tol;
+            #[cfg(feature = "fault-inject")]
+            let converged = converged && !faults::fire(faults::CG_STALL, s, it);
+            if converged {
+                active[s] = false;
+                stats[s] = SolveStats::ok(it, rn / nb[s]);
+            } else if rn < best_rn[s] * STALL_IMPROVE {
+                best_rn[s] = rn;
+                stall[s] = 0;
+            } else {
+                stall[s] += 1;
+                if stall[s] >= STALL_WINDOW {
+                    active[s] = false;
+                    stats[s] = SolveStats::fail(it, rn / nb[s], FailureKind::Stagnated);
+                }
             }
         }
         if !active.iter().any(|&a| a) {
@@ -346,11 +361,8 @@ pub fn cg_batch_warm_with<Op: LockstepOp, P: LockstepPrecond>(
     for s in 0..s_n {
         if active[s] {
             let lane = s * n..(s + 1) * n;
-            stats[s] = SolveStats {
-                iterations: config.max_iter,
-                rel_residual: norm2(&r[lane]) / nb[s],
-                converged: false,
-            };
+            let rel = norm2(&r[lane]) / nb[s];
+            stats[s] = SolveStats::fail(config.max_iter, rel, FailureKind::MaxIters);
         }
     }
     (x, stats)
@@ -489,6 +501,7 @@ mod tests {
         let (_, stats) = cg_batch(&a, &b, &cfg);
         for st in &stats {
             assert!(!st.converged);
+            assert_eq!(st.failure, FailureKind::MaxIters);
             assert_eq!(st.iterations, 1);
             assert!(st.rel_residual > 0.0);
         }

@@ -39,6 +39,40 @@
 //! ([`crate::session::MeshSession::sync_engine`]). Only the session layer
 //! (and this module's own [`solve`] convenience) constructs a
 //! [`PrecondEngine`] — CI greps for strays.
+//!
+//! # Failure semantics
+//!
+//! Every solve classifies its outcome as a [`FailureKind`] carried in
+//! [`SolveStats::failure`] (`converged` stays as the boolean summary and
+//! is always equivalent to `failure == Converged`):
+//!
+//! * [`FailureKind::MaxIters`] — the iteration budget ran out with a
+//!   finite residual above tolerance.
+//! * [`FailureKind::Stagnated`] — the residual stopped improving: no
+//!   relative decrease better than [`STALL_IMPROVE`] for [`STALL_WINDOW`]
+//!   consecutive iterations. Catches indefinite/near-singular systems that
+//!   would otherwise burn the whole budget.
+//! * [`FailureKind::Breakdown`] — a Krylov scalar left the valid range
+//!   (`p·Ap ≤ 0` in CG, meaning the operator is not SPD on the current
+//!   search direction; vanishing `ρ`/`ω`/`t·t` in BiCGSTAB).
+//! * [`FailureKind::NonFinite`] — NaN/Inf contaminated the iterate or a
+//!   Krylov scalar; the solve stops immediately rather than propagating
+//!   poison.
+//!
+//! Detection adds **no floating-point operations** to the iterate
+//! arithmetic — only comparisons on values the solvers already compute —
+//! so clean trajectories are bitwise identical to the pre-taxonomy
+//! solvers. The AMG V-cycle additionally guards its output
+//! ([`amg::AmgHierarchy::vcycle_into`]): a lane whose smoothed correction
+//! went non-finite from a *finite* residual falls back to the identity
+//! preconditioner for that application, so one poisoned lane of a
+//! lockstep batch cannot leak NaN into the shared hierarchy path.
+//!
+//! Recovery from a classified failure is the session layer's job:
+//! [`crate::session::MeshSession`] retries failed lanes through the
+//! [`EscalationPolicy`] ladder (cold restart → preconditioner escalation →
+//! iteration-budget bump → dense-LU direct fallback), recording each stage
+//! in an [`EscalationReport`].
 
 pub mod amg;
 pub mod bicgstab;
@@ -57,6 +91,46 @@ pub use precond::{IdentityPrecond, JacobiPrecond, PrecondEngine, Preconditioner}
 
 use crate::sparse::Csr;
 
+/// Stagnation window: a solve is declared [`FailureKind::Stagnated`] after
+/// this many consecutive iterations without a relative residual
+/// improvement better than [`STALL_IMPROVE`].
+pub const STALL_WINDOW: usize = 100;
+
+/// Minimum relative improvement factor counted as progress by the
+/// stagnation detector: an iteration "improves" when the residual norm
+/// drops below `best_so_far * STALL_IMPROVE`.
+pub const STALL_IMPROVE: f64 = 0.999;
+
+/// Classified outcome of a linear solve. `Converged` is the success case;
+/// the other variants name why the solver stopped early or exhausted its
+/// budget (see the module-level *Failure semantics* section).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailureKind {
+    /// Reached the configured tolerance.
+    Converged,
+    /// Iteration budget exhausted with a finite, above-tolerance residual.
+    MaxIters,
+    /// Residual stopped improving for [`STALL_WINDOW`] iterations.
+    Stagnated,
+    /// Krylov scalar left its valid range (`p·Ap ≤ 0`, vanishing ρ/ω).
+    Breakdown,
+    /// NaN/Inf contaminated the iterate or a Krylov scalar.
+    NonFinite,
+}
+
+impl std::fmt::Display for FailureKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            FailureKind::Converged => "converged",
+            FailureKind::MaxIters => "max-iterations",
+            FailureKind::Stagnated => "stagnated",
+            FailureKind::Breakdown => "breakdown",
+            FailureKind::NonFinite => "non-finite",
+        };
+        f.write_str(s)
+    }
+}
+
 /// Convergence/iteration statistics of a linear solve.
 #[derive(Clone, Copy, Debug)]
 pub struct SolveStats {
@@ -64,6 +138,21 @@ pub struct SolveStats {
     /// Final relative residual `‖Ax−b‖ / ‖b‖`.
     pub rel_residual: f64,
     pub converged: bool,
+    /// Classified outcome; `converged == (failure == Converged)` always.
+    pub failure: FailureKind,
+}
+
+impl SolveStats {
+    /// Successful solve.
+    pub fn ok(iterations: usize, rel_residual: f64) -> SolveStats {
+        SolveStats { iterations, rel_residual, converged: true, failure: FailureKind::Converged }
+    }
+
+    /// Failed solve with the given classification (`kind != Converged`).
+    pub fn fail(iterations: usize, rel_residual: f64, kind: FailureKind) -> SolveStats {
+        debug_assert!(kind != FailureKind::Converged);
+        SolveStats { iterations, rel_residual, converged: false, failure: kind }
+    }
 }
 
 /// Preconditioner selector carried by [`SolverConfig`]. The default
@@ -90,14 +179,135 @@ impl Default for PrecondKind {
     }
 }
 
+/// Escalation ladder configuration. With the default ([`off`]) a failed
+/// solve is reported as-is — bitwise identical behavior to the
+/// pre-escalation code. [`ladder`] enables the full recovery sequence run
+/// by [`crate::session::MeshSession`] on failed lanes only:
+///
+/// 1. **Cold restart** — drop the warm seed, same preconditioner (only
+///    attempted when the failed solve was warm-started).
+/// 2. **Preconditioner escalation** — retry under AMG with a
+///    session-cached rescue hierarchy (skipped when already on AMG).
+/// 3. **Iteration-budget bump** — multiply `max_iter` by `iter_bump`,
+///    best preconditioner so far.
+/// 4. **Dense-LU direct fallback** — factor the reduced operator
+///    (`n ≤ direct_max` only) and accept the direct solve if its true
+///    residual meets tolerance.
+///
+/// [`off`]: EscalationPolicy::off
+/// [`ladder`]: EscalationPolicy::ladder
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EscalationPolicy {
+    /// Master switch; `false` disables every stage.
+    pub enabled: bool,
+    /// Stage 1: retry without the warm seed.
+    pub cold_restart: bool,
+    /// Stage 2: retry under AMG (session-cached rescue hierarchy).
+    pub escalate_precond: bool,
+    /// Stage 3: `max_iter` multiplier (`> 1` enables the stage).
+    pub iter_bump: usize,
+    /// Stage 4: dense-LU direct solve of the reduced system.
+    pub direct_fallback: bool,
+    /// Size cap for the dense fallback (`n_free` above this skips it).
+    pub direct_max: usize,
+}
+
+impl EscalationPolicy {
+    /// No escalation: failures are reported as-is (the default).
+    pub fn off() -> EscalationPolicy {
+        EscalationPolicy {
+            enabled: false,
+            cold_restart: false,
+            escalate_precond: false,
+            iter_bump: 0,
+            direct_fallback: false,
+            direct_max: 0,
+        }
+    }
+
+    /// The full four-stage ladder with default knobs.
+    pub fn ladder() -> EscalationPolicy {
+        EscalationPolicy {
+            enabled: true,
+            cold_restart: true,
+            escalate_precond: true,
+            iter_bump: 4,
+            direct_fallback: true,
+            direct_max: 2000,
+        }
+    }
+}
+
+impl Default for EscalationPolicy {
+    fn default() -> Self {
+        EscalationPolicy::off()
+    }
+}
+
+/// One rung of the escalation ladder (in execution order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EscalationStage {
+    ColdRestart,
+    PrecondEscalation,
+    IterBump,
+    DirectLu,
+}
+
+impl std::fmt::Display for EscalationStage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            EscalationStage::ColdRestart => "cold-restart",
+            EscalationStage::PrecondEscalation => "precond-escalation",
+            EscalationStage::IterBump => "iter-bump",
+            EscalationStage::DirectLu => "direct-lu",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Outcome of one attempted ladder stage.
+#[derive(Clone, Copy, Debug)]
+pub struct StageAttempt {
+    pub stage: EscalationStage,
+    pub stats: SolveStats,
+}
+
+/// Per-lane accounting of an escalation run: the original failure, every
+/// stage attempted, and which stage (if any) resolved the lane.
+#[derive(Clone, Debug, Default)]
+pub struct EscalationReport {
+    /// Stats of the original (failed) solve that triggered escalation.
+    pub first: Option<SolveStats>,
+    /// Stages attempted, in ladder order.
+    pub attempts: Vec<StageAttempt>,
+    /// The stage whose solve succeeded, or `None` if the ladder was
+    /// exhausted without recovering the lane.
+    pub resolved_by: Option<EscalationStage>,
+}
+
+impl EscalationReport {
+    /// Did any stage recover the lane?
+    pub fn resolved(&self) -> bool {
+        self.resolved_by.is_some()
+    }
+
+    /// Stats of the last attempt, falling back to the original failure.
+    pub fn final_stats(&self) -> Option<SolveStats> {
+        self.attempts.last().map(|a| a.stats).or(self.first)
+    }
+}
+
 /// Solver configuration matching Table B.1, plus the preconditioner
-/// selector (default Jacobi — bitwise-identical to the historical config).
+/// selector (default Jacobi — bitwise-identical to the historical config)
+/// and the escalation ladder (default off — failures reported as-is).
 #[derive(Clone, Copy, Debug)]
 pub struct SolverConfig {
     pub rel_tol: f64,
     pub abs_tol: f64,
     pub max_iter: usize,
     pub precond: PrecondKind,
+    /// Recovery ladder applied by the session layer on failed lanes.
+    pub escalation: EscalationPolicy,
 }
 
 impl Default for SolverConfig {
@@ -107,6 +317,7 @@ impl Default for SolverConfig {
             abs_tol: 1e-10,
             max_iter: 10_000,
             precond: PrecondKind::Jacobi,
+            escalation: EscalationPolicy::off(),
         }
     }
 }

@@ -1,0 +1,203 @@
+//! Deterministic fault-injection registry (compiled only under the
+//! `fault-inject` cargo feature — a default build contains neither this
+//! module nor any of its call sites).
+//!
+//! Tests arm a named failpoint with a [`Fault`] describing exactly when it
+//! fires — which lockstep lanes, which iteration, how many times — and the
+//! instrumented code asks [`fire`] at its trigger point. Because every
+//! trigger is keyed on values the algorithms already track (lane index,
+//! Krylov iteration, tile index), an armed fault reproduces the same
+//! failure on every run at any `TG_THREADS`: the substrate for the
+//! escalation-ladder and lane-isolation tests.
+//!
+//! Registered sites:
+//!
+//! * [`CG_BREAKDOWN`] — force `p·Ap = 0` (a Krylov breakdown) in
+//!   scalar/lockstep CG on the matching lane + iteration.
+//! * [`CG_POISON`] — overwrite the CG residual lane with NaN.
+//! * [`CG_STALL`] — suppress CG convergence, driving the lane into the
+//!   stagnation detector.
+//! * [`AMG_POISON`] — poison one lane of the AMG V-cycle output (the
+//!   cycle's non-finite guard must repair it).
+//! * [`ASSEMBLY_TILE_PANIC`] — panic inside the fused assembly tile loop
+//!   (lane = linear tile work index).
+//! * [`SERVER_STALL`] — sleep at the top of a coordinator drain cycle
+//!   ([`Fault::delay_ms`]) to make deadline expiry deterministic.
+//!
+//! The registry is process-global; tests that arm faults serialize
+//! themselves with [`exclusive`] and disarm via [`reset`] (or rely on
+//! [`Fault::max_hits`]) so concurrently running clean tests never observe
+//! a stray failpoint.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// Failpoint: force `p·Ap = 0` in CG (scalar runs are lane 0).
+pub const CG_BREAKDOWN: &str = "cg.breakdown";
+/// Failpoint: fill the CG residual lane with NaN after the iterate update.
+pub const CG_POISON: &str = "cg.poison_residual";
+/// Failpoint: suppress CG convergence on the lane (stagnation driver).
+pub const CG_STALL: &str = "cg.stall";
+/// Failpoint: fill one lane of the AMG V-cycle output with NaN.
+pub const AMG_POISON: &str = "amg.poison_sweep";
+/// Failpoint: panic inside the fused assembly tile loop.
+pub const ASSEMBLY_TILE_PANIC: &str = "assembly.tile_panic";
+/// Failpoint: stall a coordinator drain cycle for [`Fault::delay_ms`].
+pub const SERVER_STALL: &str = "server.stall_drain";
+
+/// When an armed failpoint fires. Every field is a filter; `None`/`0`
+/// means "any". Defaults (via [`Fault::default`]) fire on every query.
+#[derive(Clone, Debug, Default)]
+pub struct Fault {
+    /// Restrict to these lockstep lanes (scalar call sites pass lane 0).
+    pub lanes: Option<Vec<usize>>,
+    /// Fire only at this iteration / tile index.
+    pub at_iter: Option<usize>,
+    /// Disarm automatically after this many fires.
+    pub max_hits: Option<u64>,
+    /// Sleep duration for stall-style sites ([`SERVER_STALL`]).
+    pub delay_ms: u64,
+}
+
+impl Fault {
+    /// Fault firing on every query of its site.
+    pub fn always() -> Fault {
+        Fault::default()
+    }
+
+    /// Restrict to the given lanes.
+    pub fn on_lanes(mut self, lanes: &[usize]) -> Fault {
+        self.lanes = Some(lanes.to_vec());
+        self
+    }
+
+    /// Fire only at the given iteration / work index.
+    pub fn at(mut self, iter: usize) -> Fault {
+        self.at_iter = Some(iter);
+        self
+    }
+
+    /// Disarm after `n` fires.
+    pub fn hits(mut self, n: u64) -> Fault {
+        self.max_hits = Some(n);
+        self
+    }
+
+    /// Stall duration for delay-style sites.
+    pub fn delay(mut self, ms: u64) -> Fault {
+        self.delay_ms = ms;
+        self
+    }
+}
+
+struct FaultState {
+    fault: Fault,
+    hits: u64,
+}
+
+fn registry() -> &'static Mutex<HashMap<&'static str, FaultState>> {
+    static REG: OnceLock<Mutex<HashMap<&'static str, FaultState>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Process-wide test lock: fault-injection tests take this guard first so
+/// the global registry is never shared between concurrently running tests.
+pub fn exclusive() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let lock = LOCK.get_or_init(|| Mutex::new(()));
+    // A test that panicked while holding the guard poisons it; the
+    // registry itself is still consistent, so later tests may proceed.
+    lock.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arm `site` with the given fault, replacing any previous arming.
+pub fn arm(site: &'static str, fault: Fault) {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.insert(site, FaultState { fault, hits: 0 });
+}
+
+/// Disarm one site (no-op when not armed).
+pub fn disarm(site: &str) {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.remove(site);
+}
+
+/// Disarm every site.
+pub fn reset() {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    reg.clear();
+}
+
+/// Query a failpoint from instrumented code: does the armed fault (if any)
+/// fire for this `(lane, iter)`? Counts a hit and honors
+/// [`Fault::max_hits`].
+pub fn fire(site: &str, lane: usize, iter: usize) -> bool {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    let Some(state) = reg.get_mut(site) else {
+        return false;
+    };
+    if let Some(lanes) = &state.fault.lanes {
+        if !lanes.contains(&lane) {
+            return false;
+        }
+    }
+    if let Some(at) = state.fault.at_iter {
+        if iter != at {
+            return false;
+        }
+    }
+    if let Some(max) = state.fault.max_hits {
+        if state.hits >= max {
+            return false;
+        }
+    }
+    state.hits += 1;
+    true
+}
+
+/// Stall-style query: the armed delay in milliseconds, if the site fires.
+pub fn stall_ms(site: &str) -> Option<u64> {
+    let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
+    let state = reg.get_mut(site)?;
+    if let Some(max) = state.fault.max_hits {
+        if state.hits >= max {
+            return None;
+        }
+    }
+    state.hits += 1;
+    Some(state.fault.delay_ms)
+}
+
+/// Panic-style query: panics with a recognizable message when the site
+/// fires for `work` (used by the assembly tile loop; the panic unwinds to
+/// the coordinator's per-chunk `catch_unwind`).
+pub fn maybe_panic(site: &str, work: usize) {
+    if fire(site, work, work) {
+        panic!("fault-inject: {site} fired at work item {work}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_filters_and_hit_caps() {
+        let _g = exclusive();
+        reset();
+        assert!(!fire(CG_BREAKDOWN, 0, 1), "unarmed site must not fire");
+
+        arm(CG_BREAKDOWN, Fault::always().on_lanes(&[2]).at(5).hits(1));
+        assert!(!fire(CG_BREAKDOWN, 0, 5), "wrong lane");
+        assert!(!fire(CG_BREAKDOWN, 2, 4), "wrong iteration");
+        assert!(fire(CG_BREAKDOWN, 2, 5), "match fires");
+        assert!(!fire(CG_BREAKDOWN, 2, 5), "hit cap disarms");
+
+        arm(SERVER_STALL, Fault::always().delay(7));
+        assert_eq!(stall_ms(SERVER_STALL), Some(7));
+        disarm(SERVER_STALL);
+        assert_eq!(stall_ms(SERVER_STALL), None);
+        reset();
+        assert!(!fire(CG_BREAKDOWN, 2, 5));
+    }
+}

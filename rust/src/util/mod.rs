@@ -6,6 +6,8 @@
 
 pub mod bench;
 pub mod cli;
+#[cfg(feature = "fault-inject")]
+pub mod faults;
 pub mod json;
 pub mod log;
 pub mod rng;

@@ -1,0 +1,205 @@
+//! Deterministic fault-injection suite (runs only with
+//! `--features fault-inject`): armed failpoints force Krylov breakdowns,
+//! NaN-poisoned residuals, V-cycle poison, assembly-tile panics, and
+//! drain-cycle stalls at exact (lane, iteration) coordinates, and the
+//! tests assert the containment story end to end — poisoned lanes fail
+//! alone with healthy neighbors bitwise untouched, the escalation ladder
+//! rescues injected failures, and the serving worker survives panics and
+//! answers stalled deadlines with typed expiries.
+//!
+//! Every test serializes on [`faults::exclusive`] and clears the global
+//! registry on entry and exit so concurrently compiled-in clean tests
+//! never observe a stray failpoint.
+#![cfg(feature = "fault-inject")]
+
+use std::time::{Duration, Instant};
+
+use tensor_galerkin::coordinator::{BatchServer, BatchSolver, SolveError, SolveRequest};
+use tensor_galerkin::mesh::structured::unit_square_tri;
+use tensor_galerkin::session::MeshSession;
+use tensor_galerkin::solver::{
+    EscalationPolicy, EscalationStage, FailureKind, PrecondKind, SolverConfig,
+};
+use tensor_galerkin::util::faults::{self, Fault};
+use tensor_galerkin::util::rng::Rng;
+
+fn load(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+}
+
+/// Instance-major batch of reduced loads on the session system.
+fn reduced_batch(session: &MeshSession, s_n: usize, seed: u64) -> Vec<f64> {
+    let mut rhs = Vec::with_capacity(s_n * session.n_free());
+    for s in 0..s_n {
+        rhs.extend(session.restrict(&load(session.n_full(), seed + s as u64)));
+    }
+    rhs
+}
+
+/// The satellite lane-isolation contract on the Jacobi lockstep path:
+/// with one lane NaN-poisoned and one lane forced into a Krylov
+/// breakdown, the other 14 of S = 16 lanes are bitwise identical to the
+/// all-clean run — iterate values and iteration counts.
+#[test]
+fn batch_lane_isolation_under_poison_and_breakdown() {
+    let _g = faults::exclusive();
+    faults::reset();
+    let mesh = unit_square_tri(12);
+    let session = MeshSession::poisson(&mesh, SolverConfig::default());
+    let nf = session.n_free();
+    let s_n = 16;
+    let rhs = reduced_batch(&session, s_n, 400);
+    let (u_clean, st_clean) = session.solve_load_batch(&rhs);
+    assert!(st_clean.iter().all(|s| s.converged));
+
+    faults::arm(faults::CG_POISON, Fault::always().on_lanes(&[3]).at(2));
+    faults::arm(faults::CG_BREAKDOWN, Fault::always().on_lanes(&[7]).at(1));
+    let (u_bad, st_bad) = session.solve_load_batch(&rhs);
+    faults::reset();
+
+    assert_eq!(st_bad[3].failure, FailureKind::NonFinite, "{:?}", st_bad[3]);
+    assert_eq!(st_bad[3].iterations, 2, "poison lands at the armed iteration");
+    assert_eq!(st_bad[7].failure, FailureKind::Breakdown, "{:?}", st_bad[7]);
+    assert_eq!(st_bad[7].iterations, 1, "breakdown lands at the armed iteration");
+    for s in (0..s_n).filter(|&s| s != 3 && s != 7) {
+        assert!(st_bad[s].converged, "healthy lane {s} must converge");
+        assert_eq!(st_bad[s].iterations, st_clean[s].iterations, "lane {s} iterations drifted");
+        assert_eq!(
+            &u_bad[s * nf..(s + 1) * nf],
+            &u_clean[s * nf..(s + 1) * nf],
+            "healthy lane {s} must be bitwise the clean run"
+        );
+    }
+}
+
+/// The same contract on the AMG lockstep path: a lane whose V-cycle
+/// output is poisoned every application is repaired by the cycle's
+/// non-finite guard (identity fallback), so it still converges — slower
+/// — while every other lane stays bitwise identical to the clean run.
+#[test]
+fn amg_batch_lane_isolation_under_vcycle_poison() {
+    let _g = faults::exclusive();
+    faults::reset();
+    let mesh = unit_square_tri(12);
+    let cfg = SolverConfig { precond: PrecondKind::amg(), ..SolverConfig::default() };
+    let session = MeshSession::poisson(&mesh, cfg);
+    let nf = session.n_free();
+    let s_n = 8;
+    let rhs = reduced_batch(&session, s_n, 700);
+    let (u_clean, st_clean) = session.solve_load_batch(&rhs);
+    assert!(st_clean.iter().all(|s| s.converged));
+
+    faults::arm(faults::AMG_POISON, Fault::always().on_lanes(&[5]));
+    let (u_bad, st_bad) = session.solve_load_batch(&rhs);
+    faults::reset();
+
+    assert!(st_bad[5].converged, "the guard must keep the poisoned lane solvable: {:?}", st_bad[5]);
+    assert!(
+        st_bad[5].iterations > st_clean[5].iterations,
+        "identity fallback must cost iterations (clean {}, poisoned {})",
+        st_clean[5].iterations,
+        st_bad[5].iterations
+    );
+    for s in (0..s_n).filter(|&s| s != 5) {
+        assert!(st_bad[s].converged, "healthy lane {s} must converge");
+        assert_eq!(st_bad[s].iterations, st_clean[s].iterations, "lane {s} iterations drifted");
+        assert_eq!(
+            &u_bad[s * nf..(s + 1) * nf],
+            &u_clean[s * nf..(s + 1) * nf],
+            "healthy lane {s} must be bitwise the clean run"
+        );
+    }
+}
+
+/// An injected one-shot Krylov breakdown on a scalar solve is classified
+/// and then rescued by the ladder's preconditioner-escalation stage (the
+/// cold-restart rung is gated off — the failed attempt was already
+/// cold).
+#[test]
+fn ladder_rescues_injected_breakdown() {
+    let _g = faults::exclusive();
+    faults::reset();
+    let mesh = unit_square_tri(12);
+    let cfg = SolverConfig { escalation: EscalationPolicy::ladder(), ..SolverConfig::default() };
+    let session = MeshSession::poisson(&mesh, cfg);
+    let f = load(session.n_full(), 21);
+
+    faults::arm(faults::CG_BREAKDOWN, Fault::always().on_lanes(&[0]).at(1).hits(1));
+    let (u, stats, rep) = session.solve_with_load_resilient(&f);
+    faults::reset();
+
+    assert!(stats.converged, "the ladder must rescue the injected breakdown: {stats:?}");
+    let rep = rep.expect("report");
+    assert_eq!(rep.first.unwrap().failure, FailureKind::Breakdown);
+    assert_eq!(rep.attempts[0].stage, EscalationStage::PrecondEscalation);
+    assert_eq!(rep.resolved_by, Some(EscalationStage::PrecondEscalation));
+    assert!(u.iter().all(|v| v.is_finite()));
+}
+
+/// A panic inside the fused assembly tile loop while serving a batched
+/// chunk fails exactly that chunk's requests — typed per-request errors
+/// naming the panic — and the worker survives to serve later traffic.
+#[test]
+fn tile_panic_is_contained_and_worker_survives() {
+    let _g = faults::exclusive();
+    faults::reset();
+    let mesh = unit_square_tri(6);
+    let oracle = BatchSolver::new(&mesh, SolverConfig::default());
+    let n = oracle.n_dofs();
+    let server = BatchServer::start(mesh, SolverConfig::default(), 8);
+
+    // Build the mesh state with a clean request FIRST: a panic during
+    // state construction would be memoized as a failed build.
+    server.submit(SolveRequest::new(1, load(n, 61))).recv().unwrap().expect("warm-up");
+
+    faults::arm(faults::ASSEMBLY_TILE_PANIC, Fault::always().hits(1));
+    let burst: Vec<_> = (0..3).map(|i| SolveRequest::new(10 + i, load(n, 70 + i))).collect();
+    let results: Vec<_> =
+        server.submit_many(burst).into_iter().map(|rx| rx.recv().unwrap()).collect();
+    faults::reset();
+
+    for res in &results {
+        let err = res.as_ref().expect_err("the panicked chunk must fail every request");
+        assert!(
+            format!("{err:#}").contains("solve panicked"),
+            "error should name the recovered panic: {err:#}"
+        );
+    }
+    let resp = server
+        .submit(SolveRequest::new(99, load(n, 80)))
+        .recv()
+        .unwrap()
+        .expect("the worker must survive the panic");
+    assert_eq!(resp.id, 99);
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.failed_requests, 3);
+}
+
+/// A stalled drain cycle makes a short deadline expire deterministically:
+/// the stalled request is answered with a typed `Expired` instead of a
+/// solve, and the expiry is counted.
+#[test]
+fn server_stall_makes_deadline_expire() {
+    let _g = faults::exclusive();
+    faults::reset();
+    let mesh = unit_square_tri(6);
+    let oracle = BatchSolver::new(&mesh, SolverConfig::default());
+    let n = oracle.n_dofs();
+    let server = BatchServer::start(mesh, SolverConfig::default(), 8);
+
+    // No traffic between arming and the submission below: any drained
+    // message batch (even a stats query) would consume the single stall.
+    faults::arm(faults::SERVER_STALL, Fault::always().delay(50).hits(1));
+    let req =
+        SolveRequest::new(1, load(n, 91)).with_deadline(Instant::now() + Duration::from_millis(10));
+    let err = server.submit(req).recv().unwrap().unwrap_err();
+    faults::reset();
+
+    assert!(
+        matches!(err.downcast_ref::<SolveError>(), Some(SolveError::Expired { id: 1 })),
+        "expected SolveError::Expired, got {err:#}"
+    );
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.expired_requests, 1);
+}

@@ -215,6 +215,7 @@ fn simp_solver_cfg(precond: PrecondKind) -> SolverConfig {
         abs_tol: 1e-12,
         max_iter: 50_000,
         precond,
+        ..SolverConfig::default()
     }
 }
 
