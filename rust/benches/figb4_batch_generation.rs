@@ -8,10 +8,14 @@
 //! coordinator's perf trajectory, recorded to `BENCH_coordinator.json` at
 //! the repo root.
 
-use std::time::Instant;
+use std::collections::VecDeque;
+use std::sync::mpsc::TryRecvError;
+use std::time::{Duration, Instant};
 
 use tensor_galerkin::coordinator::batcher::{solve_unbatched, BatchSolver};
-use tensor_galerkin::coordinator::{BatchServer, SolveRequest, VarCoeffRequest};
+use tensor_galerkin::coordinator::{
+    BatchServer, SolveError, SolveRequest, SolveResponse, VarCoeffRequest,
+};
 use tensor_galerkin::mesh::structured::unit_cube_tet;
 use tensor_galerkin::solver::SolverConfig;
 use tensor_galerkin::util::bench::Bench;
@@ -177,6 +181,103 @@ fn main() {
         stats.expired_requests,
         stats.rejected_requests
     );
+
+    // --- Open-loop sustained load: fixed-rate arrivals on a deterministic
+    // schedule (request i is due at t0 + i/rate, independent of responses).
+    // The closed-loop arms above can never observe queueing collapse —
+    // the client waits, so offered load adapts to capacity; an open-loop
+    // client keeps offering, so a saturated server must shed or expire.
+    // Every request carries a deadline and the admission queue is bounded;
+    // responses are classified served (latency sample, drained without
+    // blocking the schedule), shed (Overloaded/Unhealthy — never queued)
+    // or expired. Loss counters and the served-latency distribution ride
+    // in the BENCH_coordinator.json meta.
+    let n_open = args.get_usize("open", 96);
+    let rate_hz = args.get_usize("rate", 400);
+    let open_deadline_ms = args.get_usize("open_deadline_ms", 250);
+    fn classify(res: &anyhow::Result<SolveResponse>) -> (u64, u64, u64, u64) {
+        match res {
+            Ok(_) => (1, 0, 0, 0),
+            Err(e) => match e.downcast_ref::<SolveError>() {
+                Some(SolveError::Overloaded { .. } | SolveError::Unhealthy { .. }) => (0, 1, 0, 0),
+                Some(SolveError::Expired { .. }) => (0, 0, 1, 0),
+                _ => (0, 0, 0, 1),
+            },
+        }
+    }
+    server.set_max_queue(4 * s_served);
+    let period = Duration::from_secs_f64(1.0 / rate_hz.max(1) as f64);
+    let deadline = Duration::from_millis(open_deadline_ms as u64);
+    let mut inflight = VecDeque::new();
+    let mut open_lat: Vec<f64> = Vec::with_capacity(n_open);
+    let (mut shed, mut expired, mut lost) = (0u64, 0u64, 0u64);
+    let t0 = Instant::now();
+    for i in 0..n_open {
+        let due = t0 + period * i as u32;
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let sent = Instant::now();
+        let rx = server.submit(
+            SolveRequest::new(
+                9500 + i as u64,
+                (0..mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            )
+            .with_deadline(sent + deadline),
+        );
+        inflight.push_back((sent, rx));
+        // Drain whatever already answered; never block the arrival schedule.
+        while let Some((sent, rx)) = inflight.pop_front() {
+            match rx.try_recv() {
+                Ok(res) => {
+                    let (ok, s, e, l) = classify(&res);
+                    if ok == 1 {
+                        open_lat.push(sent.elapsed().as_secs_f64() * 1e3);
+                    }
+                    shed += s;
+                    expired += e;
+                    lost += l;
+                }
+                Err(TryRecvError::Empty) => {
+                    inflight.push_front((sent, rx));
+                    break;
+                }
+                Err(TryRecvError::Disconnected) => lost += 1,
+            }
+        }
+    }
+    for (sent, rx) in inflight {
+        match rx.recv() {
+            Ok(res) => {
+                let (ok, s, e, l) = classify(&res);
+                if ok == 1 {
+                    open_lat.push(sent.elapsed().as_secs_f64() * 1e3);
+                }
+                shed += s;
+                expired += e;
+                lost += l;
+            }
+            Err(_) => lost += 1,
+        }
+    }
+    server.set_max_queue(0);
+    open_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let opct = |p: f64| {
+        if open_lat.is_empty() {
+            0.0
+        } else {
+            open_lat[((open_lat.len() - 1) as f64 * p).round() as usize]
+        }
+    };
+    let (open_p50, open_p99) = (opct(0.5), opct(0.99));
+    println!(
+        "open-loop {n_open} req @ {rate_hz} Hz (deadline {open_deadline_ms} ms): \
+         {} served (p50 {open_p50:.2} ms, p99 {open_p99:.2} ms), \
+         {shed} shed, {expired} expired, {lost} lost",
+        open_lat.len()
+    );
+
     if let Some(speedup) = bench.write_speedup_json(
         "BENCH_coordinator.json",
         &format!("served_sequential/b{s_served}"),
@@ -188,6 +289,12 @@ fn main() {
             ("latency_p99_ms", lat_p99),
             ("expired_requests", stats.expired_requests as f64),
             ("rejected_requests", stats.rejected_requests as f64),
+            ("openloop_requests", n_open as f64),
+            ("openloop_rate_hz", rate_hz as f64),
+            ("openloop_p50_ms", open_p50),
+            ("openloop_p99_ms", open_p99),
+            ("openloop_shed", shed as f64),
+            ("openloop_expired", expired as f64),
         ],
     ) {
         println!("served burst vs sequential client speedup: {speedup:.2}×");

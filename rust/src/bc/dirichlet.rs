@@ -273,6 +273,10 @@ impl CondensePlan {
         for &(rnew, p, g) in &self.lifts {
             sys.rhs[rnew] -= values[p] * g;
         }
+        #[cfg(feature = "fault-inject")]
+        if crate::util::faults::fire(crate::util::faults::CONDENSE_POISON, 0, 0) {
+            sys.k.data[0] = f64::NAN;
+        }
     }
 
     /// Apply the plan to `S` value instances and their loads. `f` is either

@@ -10,8 +10,8 @@
 //! Failed requests are answered with a typed [`SolveError`] (wrapped in
 //! `anyhow`; downcast with `err.downcast_ref::<SolveError>()`) so clients
 //! can branch on the failure class — invalid input, expired deadline,
-//! admission rejection, or a classified solver failure with its
-//! escalation accounting.
+//! admission rejection, a circuit-breaker shed on an unhealthy mesh, or
+//! a classified solver failure with its escalation accounting.
 
 use std::time::Instant;
 
@@ -30,9 +30,12 @@ pub struct SolveRequest {
     pub mesh_id: u64,
     /// Nodal source values, interpolated to quadrature by the solver.
     pub f_nodal: Vec<f64>,
-    /// Optional serving deadline: a request still queued past this
-    /// instant is answered with [`SolveError::Expired`] instead of
-    /// solving (checked at dispatch, before any assembly work).
+    /// Optional serving deadline: a deadline already passed at submit is
+    /// answered with [`SolveError::Expired`] synchronously (no queue
+    /// slot); one that expires while queued is answered `Expired` at
+    /// dispatch, before any assembly work. While queued-but-live, the
+    /// time left also budgets the escalation ladder (unaffordable rungs
+    /// are skipped).
     pub deadline: Option<Instant>,
 }
 
@@ -144,6 +147,15 @@ pub enum SolveError {
         queue_depth: usize,
         max_queue: usize,
     },
+    /// The target mesh's circuit breaker is Open (chronic failures):
+    /// the request was shed synchronously without entering the queue.
+    /// Retry after roughly `retry_after_ms` — the breaker will admit a
+    /// probe then.
+    Unhealthy {
+        id: u64,
+        mesh_id: u64,
+        retry_after_ms: u64,
+    },
     /// The solve failed with the given classification; `escalation`
     /// records the recovery ladder when it ran (and was exhausted).
     Solver {
@@ -161,6 +173,7 @@ impl SolveError {
             SolveError::Invalid { id, .. }
             | SolveError::Expired { id }
             | SolveError::Overloaded { id, .. }
+            | SolveError::Unhealthy { id, .. }
             | SolveError::Solver { id, .. } => *id,
         }
     }
@@ -176,6 +189,10 @@ impl std::fmt::Display for SolveError {
             SolveError::Overloaded { id, queue_depth, max_queue } => write!(
                 f,
                 "request {id}: admission queue full ({queue_depth}/{max_queue}), not enqueued"
+            ),
+            SolveError::Unhealthy { id, mesh_id, retry_after_ms } => write!(
+                f,
+                "request {id}: mesh {mesh_id} circuit breaker open, shed; retry in ~{retry_after_ms} ms"
             ),
             SolveError::Solver { id, kind, stats, escalation } => {
                 write!(
@@ -240,4 +257,24 @@ pub struct CoordinatorStats {
     /// High-water mark of the admission-queue depth (requests submitted
     /// but not yet drained) since server start.
     pub queue_high_water: u64,
+    /// Requests shed synchronously ([`SolveError::Unhealthy`]) because
+    /// their mesh's circuit breaker was Open.
+    pub shed_requests: u64,
+    /// Circuit-breaker trips: Closed → Open plus failed-probe
+    /// HalfOpen → Open transitions.
+    pub breaker_opens: u64,
+    /// Open → HalfOpen probe admissions.
+    pub breaker_half_opens: u64,
+    /// HalfOpen → Closed recoveries (successful probes).
+    pub breaker_closes: u64,
+    /// Escalation-ladder rungs skipped by budget-aware escalation
+    /// because their cost estimate exceeded the deadline budget.
+    pub skipped_rungs: u64,
+    /// Episodes in which adaptive shedding tightened the admission bound
+    /// (sick traffic dominated recent outcomes).
+    pub queue_tightenings: u64,
+    /// The admission bound currently in force: the configured
+    /// `set_max_queue` value, or its tightened fraction while adaptive
+    /// shedding is active (`0` = unbounded).
+    pub effective_max_queue: u64,
 }

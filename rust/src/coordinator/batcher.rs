@@ -23,6 +23,9 @@
 //! the same batched dispatch still get answers. Failures carry a typed
 //! [`SolveError`] (downcast from the `anyhow` error) with the classified
 //! [`crate::solver::FailureKind`] and the escalation ladder's accounting.
+//! A live request deadline also *budgets* the ladder: the milliseconds
+//! left at dispatch gate which rescue rungs may run, and unaffordable
+//! rungs are skipped and recorded in the report (see [`crate::session`]).
 //! The legacy `Result<Vec<_>>` wrappers keep the old abort-on-first-error
 //! contract for callers that want it.
 
@@ -67,6 +70,8 @@ pub struct BatchSolver {
     retried_lanes: AtomicU64,
     /// Escalated lanes a ladder stage recovered.
     rescued_lanes: AtomicU64,
+    /// Ladder rungs skipped as unaffordable by budget-aware escalation.
+    skipped_rungs: AtomicU64,
 }
 
 impl BatchSolver {
@@ -79,6 +84,7 @@ impl BatchSolver {
             scalar_solves: AtomicU64::new(0),
             retried_lanes: AtomicU64::new(0),
             rescued_lanes: AtomicU64::new(0),
+            skipped_rungs: AtomicU64::new(0),
         }
     }
 
@@ -117,12 +123,20 @@ impl BatchSolver {
         self.rescued_lanes.load(Ordering::Relaxed)
     }
 
-    /// Count an escalation report toward the retry/rescue counters.
+    /// Ladder rungs skipped as unaffordable so far.
+    pub fn n_skipped_rungs(&self) -> u64 {
+        self.skipped_rungs.load(Ordering::Relaxed)
+    }
+
+    /// Count an escalation report toward the retry/rescue/skip counters.
     fn track_escalation(&self, rep: &Option<EscalationReport>) {
         if let Some(rep) = rep {
             self.retried_lanes.fetch_add(1, Ordering::Relaxed);
             if rep.resolved() {
                 self.rescued_lanes.fetch_add(1, Ordering::Relaxed);
+            }
+            if !rep.skipped.is_empty() {
+                self.skipped_rungs.fetch_add(rep.skipped.len() as u64, Ordering::Relaxed);
             }
         }
     }
@@ -201,7 +215,8 @@ impl BatchSolver {
         let f = ctx.assemble_vector(&LinearForm::Source {
             f: ctx.coeff_nodal(&req.f_nodal),
         });
-        let (u, stats, rep) = self.session.solve_with_load_resilient(&f);
+        let (u, stats, rep) =
+            self.session.solve_with_load_resilient_budgeted(&f, budget_ms(req.deadline));
         self.track_escalation(&rep);
         respond(req.id, u, stats, rep)
     }
@@ -219,7 +234,8 @@ impl BatchSolver {
         let f = ctx.assemble_vector(&LinearForm::Source {
             f: ctx.coeff_nodal(&req.f_nodal),
         });
-        let (u, stats, rep) = self.session.solve_foreign_resilient(&k, &f);
+        let (u, stats, rep) =
+            self.session.solve_foreign_resilient_budgeted(&k, &f, budget_ms(req.deadline));
         self.track_escalation(&rep);
         respond(req.id, u, stats, rep)
     }
@@ -255,7 +271,10 @@ impl BatchSolver {
         for s in 0..valid.len() {
             rhs.extend(self.session.restrict(&fbatch[s * n..(s + 1) * n]));
         }
-        let (u, stats, reps) = self.session.solve_load_batch_resilient(&rhs);
+        let budgets: Vec<Option<f64>> =
+            valid.iter().map(|&i| budget_ms(reqs[i].deadline)).collect();
+        let (u, stats, reps) =
+            self.session.solve_load_batch_resilient_budgeted(&rhs, Some(&budgets));
         seal_lanes(out, &valid, |s, i| {
             self.track_escalation(&reps[s]);
             respond(
@@ -328,7 +347,10 @@ impl BatchSolver {
         // lockstep CG uses per-lane Jacobi under the default config
         // (bitwise) or ONE shared-mesh AMG hierarchy applied to all lanes
         // per iteration.
-        let (red, u, stats, reps) = self.session.solve_varcoeff_batch_resilient(&kbatch, &fbatch);
+        let budgets: Vec<Option<f64>> =
+            valid.iter().map(|&i| budget_ms(reqs[i].deadline)).collect();
+        let (red, u, stats, reps) =
+            self.session.solve_varcoeff_batch_resilient_budgeted(&kbatch, &fbatch, Some(&budgets));
         let nf = red.n_free();
         seal_lanes(out, &valid, |s, i| {
             self.track_escalation(&reps[s]);
@@ -360,6 +382,14 @@ impl BatchSolver {
     pub fn n_dofs(&self) -> usize {
         self.session.ctx().n_dofs()
     }
+}
+
+/// Milliseconds left until a request deadline — the budget handed to the
+/// session's escalation ladder (`None` = no deadline = unbounded).
+/// Validation already rejected expired deadlines, so this is positive
+/// for requests that reach a solve.
+fn budget_ms(deadline: Option<Instant>) -> Option<f64> {
+    deadline.map(|d| d.saturating_duration_since(Instant::now()).as_secs_f64() * 1e3)
 }
 
 /// Seal one lane's outcome: a converged solve becomes a [`SolveResponse`]

@@ -47,6 +47,9 @@
 //! * [`SolveError::Overloaded`] — the bounded admission queue
 //!   ([`BatchServer::set_max_queue`]) was full at submission; the request
 //!   never reached the worker. Back off and resubmit.
+//! * [`SolveError::Unhealthy`] — the target mesh's circuit breaker was
+//!   Open; the request was shed synchronously with a `retry_after_ms`
+//!   hint and never occupied a queue slot.
 //! * [`SolveError::Solver`] — the solve failed with a classified
 //!   [`crate::solver::FailureKind`] (max-iterations, stagnation,
 //!   breakdown, non-finite), including the escalation ladder's per-stage
@@ -59,11 +62,30 @@
 //! request answers normally with the [`SolveResponse::escalation`] report
 //! attached. Expired/rejected/retried/rescued counts and the
 //! admission-queue high-water mark are surfaced in [`CoordinatorStats`].
+//!
+//! # Health tracking and the circuit breaker
+//!
+//! [`BatchServer::set_health_config`] (off by default — the disabled
+//! default keeps every serving path bitwise identical to the tracker-free
+//! stack) turns each served outcome into per-mesh failure history
+//! ([`crate::session::health`]): outcome EWMAs, consecutive-failure
+//! streaks and per-rung ladder statistics drive a Closed → Open →
+//! HalfOpen circuit breaker per mesh. A chronically failing mesh is shed
+//! *synchronously* at submission ([`SolveError::Unhealthy`]) without
+//! occupying queue slots or the drain budget of healthy meshes; after the
+//! open window one probe group tests recovery. A request deadline doubles
+//! as an escalation-ladder budget (rungs whose cost estimate does not fit
+//! the time remaining are skipped and recorded), and a globally sick
+//! request mix adaptively tightens the admission bound. Breaker
+//! transitions, sheds, skipped rungs and the effective bound are
+//! surfaced in [`CoordinatorStats`]; per-mesh [`HealthSnapshot`]s via
+//! [`BatchServer::health`].
 
 pub mod api;
 pub mod batcher;
 pub mod server;
 
+pub use crate::session::health::{BreakerState, HealthConfig, HealthSnapshot};
 pub use api::{
     CoordinatorStats, SolveError, SolveRequest, SolveResponse, VarCoeffRequest, DEFAULT_MESH,
 };

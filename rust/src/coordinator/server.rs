@@ -38,22 +38,45 @@
 //! that would push the depth past the bound is rejected at submission
 //! with a per-request [`super::api::SolveError::Overloaded`] — it never
 //! reaches the worker, so an overloaded server sheds load in O(1) instead
-//! of queueing unboundedly. Requests carrying a deadline that expires
-//! while queued are answered with `SolveError::Expired` at dispatch,
-//! before any assembly work. Both outcomes, plus the queue-depth
-//! high-water mark and the escalation ladder's retried/rescued lane
-//! counts, are surfaced through [`CoordinatorStats`].
+//! of queueing unboundedly. A request whose deadline has *already* passed
+//! at submission is answered `SolveError::Expired` synchronously, without
+//! occupying a queue slot; one that expires while queued is answered
+//! `Expired` at dispatch, before any assembly work. Both outcomes, plus
+//! the queue-depth high-water mark and the escalation ladder's
+//! retried/rescued lane counts, are surfaced through [`CoordinatorStats`].
+//!
+//! Health tracking and the circuit breaker
+//! ([`BatchServer::set_health_config`], off by default — every serving
+//! path is bitwise the tracker-free stack until enabled): the worker
+//! feeds each served outcome into a per-mesh
+//! [`crate::session::health::HealthRegistry`]. A chronically failing
+//! mesh trips its breaker Open, and submission then sheds that mesh's
+//! requests *synchronously* with [`super::api::SolveError::Unhealthy`]
+//! (carrying a `retry_after_ms` hint) — they never occupy queue slots or
+//! the drain budget of healthy meshes. After the open window the next
+//! burst for that mesh is admitted as ONE probe group (HalfOpen); a
+//! successful probe closes the breaker, a failed one re-opens it. When
+//! rescued/exhausted lanes dominate recent traffic across all meshes,
+//! the effective admission bound tightens to
+//! `max_queue / tighten_divisor` and relaxes again on recovery. Breaker
+//! transitions, shed counts, skipped ladder rungs and the effective
+//! bound are surfaced through [`CoordinatorStats`]; per-mesh snapshots
+//! through [`BatchServer::health`].
 
 use std::collections::{HashMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, SendError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::mesh::Mesh;
+use crate::session::health::{
+    AdmitDecision, BreakerState, HealthConfig, HealthRegistry, HealthSnapshot, LaneOutcome,
+};
 use crate::solver::SolverConfig;
 
 use super::api::{
@@ -74,6 +97,20 @@ impl Req {
         match self {
             Req::Fixed(r) => r.id,
             Req::Var(r) => r.id,
+        }
+    }
+
+    fn mesh_id(&self) -> u64 {
+        match self {
+            Req::Fixed(r) => r.mesh_id,
+            Req::Var(r) => r.mesh_id,
+        }
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        match self {
+            Req::Fixed(r) => r.deadline,
+            Req::Var(r) => r.deadline,
         }
     }
 }
@@ -98,12 +135,45 @@ enum Msg {
 struct Admission {
     /// Requests submitted but not yet drained by the worker.
     depth: AtomicUsize,
-    /// Depth bound (0 = unbounded, the default).
+    /// Depth bound currently in force (0 = unbounded, the default).
+    /// Adaptive shedding may hold this at a tightened fraction of
+    /// `base_max_queue` while sick traffic dominates.
     max_queue: AtomicUsize,
+    /// The caller-configured bound ([`BatchServer::set_max_queue`]) that
+    /// the tightened bound is derived from and relaxes back to.
+    base_max_queue: AtomicUsize,
     /// Bursts rejected at admission, counted per request.
     rejected: AtomicU64,
     /// High-water mark of `depth` since server start.
     high_water: AtomicU64,
+    /// Requests whose deadline had already passed at submission —
+    /// answered [`SolveError::Expired`] synchronously, never enqueued.
+    /// Folded into both `expired_requests` and `failed_requests`.
+    expired_at_submit: AtomicU64,
+}
+
+/// Health state shared between the submitting side (synchronous breaker
+/// sheds) and the worker (outcome observation, adaptive retuning). The
+/// `enabled` flag is read lock-free on every submit so the disabled
+/// default costs one relaxed atomic load and nothing else.
+struct HealthShared {
+    enabled: AtomicBool,
+    registry: Mutex<HealthRegistry>,
+}
+
+impl HealthShared {
+    fn new() -> HealthShared {
+        HealthShared {
+            enabled: AtomicBool::new(false),
+            registry: Mutex::new(HealthRegistry::new(HealthConfig::disabled())),
+        }
+    }
+
+    /// Lock the registry, surviving a poisoned mutex (a panic while a
+    /// health call was in flight must not take the serving path down).
+    fn lock(&self) -> std::sync::MutexGuard<'_, HealthRegistry> {
+        self.registry.lock().unwrap_or_else(|e| e.into_inner())
+    }
 }
 
 /// Handle to the running server.
@@ -112,6 +182,7 @@ pub struct BatchServer {
     worker: Option<JoinHandle<()>>,
     max_batch: usize,
     admission: Arc<Admission>,
+    health: Arc<HealthShared>,
 }
 
 /// A registry slot: the built (or failed) per-mesh state plus its
@@ -163,6 +234,8 @@ struct Worker {
     /// Escalation-ladder counters of evicted solvers (same fold).
     retired_retried: u64,
     retired_rescued: u64,
+    /// Budget-skipped ladder rungs of evicted solvers (same fold).
+    retired_skipped: u64,
     failed: u64,
     /// Requests answered with [`SolveError::Expired`] — deadline passed
     /// while queued, answered without solving.
@@ -181,6 +254,9 @@ struct Worker {
     /// AFTER the cycle's dispatch, so a snapshot reflects every request
     /// that was enqueued ahead of it (FIFO through the queue).
     stats_waiters: Vec<Sender<CoordinatorStats>>,
+    /// Shared health state: the worker observes served outcomes into it
+    /// and retunes the adaptive admission bound after each drain cycle.
+    health: Arc<HealthShared>,
 }
 
 /// Bucket mesh-homogeneous items by mesh key, preserving arrival order
@@ -254,6 +330,7 @@ impl Worker {
         self.retired_scalar += solver.n_scalar_solves();
         self.retired_retried += solver.n_retried_lanes();
         self.retired_rescued += solver.n_rescued_lanes();
+        self.retired_skipped += solver.n_skipped_rungs();
     }
 
     /// Answer the stats queries collected this cycle (post-dispatch).
@@ -268,8 +345,13 @@ impl Worker {
     }
 
     fn stats(&self) -> CoordinatorStats {
+        // Submit-time expiries never reached the worker; fold them into
+        // both the expired and failed totals so "an expiry is a failed
+        // request" holds regardless of where it was detected.
+        let expired_at_submit =
+            self.admission.expired_at_submit.load(Ordering::Relaxed);
         let mut s = CoordinatorStats {
-            failed_requests: self.failed,
+            failed_requests: self.failed + expired_at_submit,
             evicted_states: self.evictions,
             state_rebuilds: self.rebuilds,
             batched_solves: self.retired_batched,
@@ -277,11 +359,13 @@ impl Worker {
             queued_requests: self.queued_requests,
             drain_cycles: self.drain_cycles,
             dispatch_groups: self.dispatch_groups,
-            expired_requests: self.expired,
+            expired_requests: self.expired + expired_at_submit,
             rejected_requests: self.admission.rejected.load(Ordering::Relaxed),
             retried_lanes: self.retired_retried,
             rescued_lanes: self.retired_rescued,
             queue_high_water: self.admission.high_water.load(Ordering::Relaxed),
+            skipped_rungs: self.retired_skipped,
+            effective_max_queue: self.admission.max_queue.load(Ordering::Relaxed) as u64,
             ..CoordinatorStats::default()
         };
         for entry in self.states.values() {
@@ -291,7 +375,16 @@ impl Worker {
                 s.scalar_solves += solver.n_scalar_solves();
                 s.retried_lanes += solver.n_retried_lanes();
                 s.rescued_lanes += solver.n_rescued_lanes();
+                s.skipped_rungs += solver.n_skipped_rungs();
             }
+        }
+        {
+            let reg = self.health.lock();
+            s.shed_requests = reg.shed();
+            s.breaker_opens = reg.opens();
+            s.breaker_half_opens = reg.half_opens();
+            s.breaker_closes = reg.closes();
+            s.queue_tightenings = reg.tightenings();
         }
         s
     }
@@ -390,6 +483,62 @@ impl Worker {
                 break;
             }
         }
+        self.retune_admission();
+    }
+
+    /// After a drain cycle, retune the effective admission bound from the
+    /// global sick-traffic signal: while rescued/exhausted lanes dominate
+    /// recent outcomes the bound tightens to `base / tighten_divisor`
+    /// (floor 1), relaxing back to the configured base on recovery. A
+    /// no-op while health tracking is disabled or the base bound is 0
+    /// (unbounded).
+    fn retune_admission(&mut self) {
+        if !self.health.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let base = self.admission.base_max_queue.load(Ordering::Relaxed);
+        let mut reg = self.health.lock();
+        let tight = reg.update_tightened();
+        let cfg = reg.config();
+        let effective = if tight && base > 0 {
+            (base / cfg.tighten_divisor.max(1)).max(1)
+        } else {
+            base
+        };
+        self.admission.max_queue.store(effective, Ordering::Relaxed);
+    }
+
+    /// Feed one served outcome into the health registry: a clean solve is
+    /// `Ok`, a ladder-recovered one `Rescued`, a classified solver failure
+    /// (or an unclassifiable panic / state-build failure) `Exhausted`.
+    /// Validation and expiry answers say nothing about mesh health and
+    /// are not observed. A no-op while health tracking is disabled.
+    fn observe_health(&mut self, mesh_id: u64, res: &Result<SolveResponse>) {
+        if !self.health.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let (outcome, report) = match res {
+            Ok(resp) => match &resp.escalation {
+                Some(rep) => (LaneOutcome::Rescued, Some(rep)),
+                None => (LaneOutcome::Ok, None),
+            },
+            Err(e) => match e.downcast_ref::<SolveError>() {
+                Some(SolveError::Solver { escalation, .. }) => {
+                    (LaneOutcome::Exhausted, escalation.as_ref())
+                }
+                Some(
+                    SolveError::Invalid { .. }
+                    | SolveError::Expired { .. }
+                    | SolveError::Overloaded { .. }
+                    | SolveError::Unhealthy { .. },
+                ) => return,
+                // No typed error: a recovered panic or a failed state
+                // build — the mesh is not serving, count it against its
+                // health.
+                None => (LaneOutcome::Exhausted, None),
+            },
+        };
+        self.health.lock().observe(mesh_id, outcome, report);
     }
 
     /// One fairness round: take at most one `max_batch`-sized chunk from
@@ -433,8 +582,17 @@ impl Worker {
         match self.solver_for(mesh_id) {
             Err(msg) => {
                 failed = chunk.len() as u64;
+                // A failed state build for a *registered* mesh counts
+                // against its health (it cannot serve); unregistered keys
+                // are caller errors, not mesh sickness, and must not grow
+                // the health registry.
+                let registered = self.meshes.contains_key(&mesh_id);
                 for (req, reply) in chunk {
-                    let _ = reply.send(Err(anyhow!("request {}: {msg}", req_id(&req))));
+                    let res = Err(anyhow!("request {}: {msg}", req_id(&req)));
+                    if registered {
+                        self.observe_health(mesh_id, &res);
+                    }
+                    let _ = reply.send(res);
                 }
             }
             Ok(solver) => {
@@ -465,6 +623,7 @@ impl Worker {
                             self.expired += 1;
                         }
                     }
+                    self.observe_health(mesh_id, &res);
                     let _ = reply.send(res);
                 }
             }
@@ -496,6 +655,8 @@ impl BatchServer {
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
         let admission = Arc::new(Admission::default());
         let worker_admission = Arc::clone(&admission);
+        let health = Arc::new(HealthShared::new());
+        let worker_health = Arc::clone(&health);
         let worker = std::thread::spawn(move || {
             let mut w = Worker {
                 meshes: meshes.into_iter().collect(),
@@ -511,6 +672,7 @@ impl BatchServer {
                 retired_scalar: 0,
                 retired_retried: 0,
                 retired_rescued: 0,
+                retired_skipped: 0,
                 failed: 0,
                 expired: 0,
                 admission: worker_admission,
@@ -518,6 +680,7 @@ impl BatchServer {
                 drain_cycles: 0,
                 dispatch_groups: 0,
                 stats_waiters: Vec::new(),
+                health: worker_health,
             };
             let mut pending: Vec<(Req, Reply)> = Vec::new();
             loop {
@@ -552,6 +715,7 @@ impl BatchServer {
             worker: Some(worker),
             max_batch,
             admission,
+            health,
         }
     }
 
@@ -565,9 +729,37 @@ impl BatchServer {
     /// Bound the admission queue: a burst that would push the in-flight
     /// depth (submitted but not yet drained) past `n` is rejected at
     /// submission with [`SolveError::Overloaded`] per request — it never
-    /// reaches the worker. `0` removes the bound (the default).
+    /// reaches the worker. `0` removes the bound (the default). Setting
+    /// the bound also resets any adaptive tightening: `n` becomes both
+    /// the base and the effective bound until the next worker retune.
     pub fn set_max_queue(&self, n: usize) {
+        self.admission.base_max_queue.store(n, Ordering::Relaxed);
         self.admission.max_queue.store(n, Ordering::Relaxed);
+    }
+
+    /// Enable (or reconfigure) health tracking and the per-mesh circuit
+    /// breaker; `HealthConfig::disabled()` switches it back off. Resets
+    /// all tracked health state. While disabled (the default) every
+    /// serving path is bitwise identical to the tracker-free stack.
+    pub fn set_health_config(&self, cfg: HealthConfig) {
+        let enabled = cfg.enabled;
+        self.health.lock().reconfigure(cfg);
+        self.health.enabled.store(enabled, Ordering::Relaxed);
+    }
+
+    /// Per-mesh health snapshot: `None` while tracking is disabled or
+    /// before the first observed/shed request for `mesh_id`.
+    pub fn health(&self, mesh_id: u64) -> Option<HealthSnapshot> {
+        if !self.health.enabled.load(Ordering::Relaxed) {
+            return None;
+        }
+        self.health.lock().snapshot(mesh_id)
+    }
+
+    /// Advance the injected manual clock (tests; requires
+    /// `HealthConfig::manual_clock`). A no-op on the wall clock.
+    pub fn advance_health_clock(&self, ms: u64) {
+        self.health.lock().advance_clock(ms);
     }
 
     /// Register (or replace) a mesh topology on the running server.
@@ -610,48 +802,119 @@ impl BatchServer {
     }
 
     fn submit_burst(&self, reqs: Vec<Req>) -> Vec<Receiver<Result<SolveResponse>>> {
-        let k = reqs.len();
         let adm = &self.admission;
-        let prev = adm.depth.fetch_add(k, Ordering::Relaxed);
-        let max = adm.max_queue.load(Ordering::Relaxed);
-        if max > 0 && prev + k > max {
-            // Bounded admission: shed the whole burst without enqueueing
-            // (the worker never sees it), answering each request with a
-            // typed rejection the caller can back off on.
-            adm.depth.fetch_sub(k, Ordering::Relaxed);
-            adm.rejected.fetch_add(k as u64, Ordering::Relaxed);
-            return reqs
-                .into_iter()
-                .map(|req| {
-                    let (reply_tx, reply_rx) = channel();
-                    let err = SolveError::Overloaded {
-                        id: req.id(),
-                        queue_depth: prev,
-                        max_queue: max,
-                    };
-                    let _ = reply_tx.send(Err(err.into()));
-                    reply_rx
-                })
-                .collect();
+        let n = reqs.len();
+        // Synchronously decidable requests never take a queue slot. First:
+        // a deadline already passed at submission is an immediate Expired
+        // (the clock is read at most once, and only when a deadline is
+        // present at all).
+        let mut decisions: Vec<Option<SolveError>> = Vec::with_capacity(n);
+        let mut now: Option<Instant> = None;
+        for req in &reqs {
+            let expired = req
+                .deadline()
+                .is_some_and(|d| *now.get_or_insert_with(Instant::now) >= d);
+            if expired {
+                adm.expired_at_submit.fetch_add(1, Ordering::Relaxed);
+                decisions.push(Some(SolveError::Expired { id: req.id() }));
+            } else {
+                decisions.push(None);
+            }
         }
-        adm.high_water.fetch_max((prev + k) as u64, Ordering::Relaxed);
-        let mut items = Vec::with_capacity(reqs.len());
-        let mut receivers = Vec::with_capacity(reqs.len());
-        for req in reqs {
+        // Second: circuit-breaker sheds. ONE admit decision per mesh per
+        // burst, so a HalfOpen mesh admits this burst's whole group as
+        // its single probe (one probe *group*, not one probe request).
+        let mut probe_meshes: Vec<u64> = Vec::new();
+        if self.health.enabled.load(Ordering::Relaxed) {
+            let mut reg = self.health.lock();
+            let mut memo: HashMap<u64, AdmitDecision> = HashMap::new();
+            let mut shed = 0u64;
+            for (req, slot) in reqs.iter().zip(decisions.iter_mut()) {
+                if slot.is_some() {
+                    continue;
+                }
+                let mesh_id = req.mesh_id();
+                let decision = *memo.entry(mesh_id).or_insert_with(|| {
+                    let d = reg.admit(mesh_id);
+                    let probing = d == AdmitDecision::Admit
+                        && reg
+                            .snapshot(mesh_id)
+                            .is_some_and(|s| s.state == BreakerState::HalfOpen);
+                    if probing {
+                        probe_meshes.push(mesh_id);
+                    }
+                    d
+                });
+                if let AdmitDecision::Shed { retry_after_ms } = decision {
+                    shed += 1;
+                    *slot = Some(SolveError::Unhealthy {
+                        id: req.id(),
+                        mesh_id,
+                        retry_after_ms,
+                    });
+                }
+            }
+            if shed > 0 {
+                reg.note_shed(shed);
+            }
+        }
+        // Bounded admission for the undecided remainder.
+        let k = decisions.iter().filter(|d| d.is_none()).count();
+        let mut overloaded: Option<(usize, usize)> = None;
+        if k > 0 {
+            let prev = adm.depth.fetch_add(k, Ordering::Relaxed);
+            let max = adm.max_queue.load(Ordering::Relaxed);
+            if max > 0 && prev + k > max {
+                // Shed the remainder without enqueueing (the worker never
+                // sees it), answering each request with a typed rejection
+                // the caller can back off on.
+                adm.depth.fetch_sub(k, Ordering::Relaxed);
+                adm.rejected.fetch_add(k as u64, Ordering::Relaxed);
+                // This burst carried these meshes' HalfOpen probes but
+                // got rejected at admission: free the probe slot so the
+                // next burst can probe instead of waiting out the
+                // timeout.
+                if !probe_meshes.is_empty() {
+                    let mut reg = self.health.lock();
+                    for &m in &probe_meshes {
+                        reg.cancel_probe(m);
+                    }
+                }
+                overloaded = Some((prev, max));
+            } else {
+                adm.high_water.fetch_max((prev + k) as u64, Ordering::Relaxed);
+            }
+        }
+        let mut items = Vec::with_capacity(k);
+        let mut receivers = Vec::with_capacity(n);
+        for (req, decision) in reqs.into_iter().zip(decisions) {
             let (reply_tx, reply_rx) = channel();
-            items.push((req, reply_tx));
+            if let Some(err) = decision {
+                let _ = reply_tx.send(Err(err.into()));
+            } else if let Some((prev, max)) = overloaded {
+                let err = SolveError::Overloaded {
+                    id: req.id(),
+                    queue_depth: prev,
+                    max_queue: max,
+                };
+                let _ = reply_tx.send(Err(err.into()));
+            } else {
+                items.push((req, reply_tx));
+            }
             receivers.push(reply_rx);
         }
-        if let Err(SendError(msg)) = self.tx.send(Msg::Many(items)) {
-            // The worker is gone (shutdown or died): answer immediately
-            // instead of leaving callers parked on `recv` forever.
-            adm.depth.fetch_sub(k, Ordering::Relaxed);
-            if let Msg::Many(items) = msg {
-                for (req, reply) in items {
-                    let _ = reply.send(Err(anyhow!(
-                        "batch server worker is gone; request {} was not accepted",
-                        req.id()
-                    )));
+        if !items.is_empty() {
+            if let Err(SendError(msg)) = self.tx.send(Msg::Many(items)) {
+                // The worker is gone (shutdown or died): answer immediately
+                // instead of leaving callers parked on `recv` forever.
+                adm.depth.fetch_sub(k, Ordering::Relaxed);
+                if let Msg::Many(items) = msg {
+                    for (req, reply) in items {
+                        let _ = reply.send(Err(anyhow!(
+                            "batch server worker is gone; request {} was not accepted",
+                            req.id()
+                        )));
+                    }
                 }
             }
         }

@@ -1,0 +1,666 @@
+//! Per-mesh health tracking and the serving circuit breaker.
+//!
+//! The escalation ladder in [`MeshSession`](crate::session::MeshSession)
+//! is memoryless: every request on a chronically failing mesh burns the
+//! full ladder again. This module makes failure *history* a first-class
+//! serving input. A [`MeshHealth`] tracker per registry entry folds each
+//! observed lane outcome (ok / rescued-by-ladder / exhausted) into EWMAs,
+//! a consecutive-failure streak, and per-rung attempt/rescue counts, and
+//! drives a three-state circuit breaker:
+//!
+//! - **Closed** — normal serving. A failure observation that pushes the
+//!   exhausted-EWMA past `open_failure_rate` (after `min_observations`)
+//!   or the streak past `open_streak` trips the breaker Open. Only a
+//!   *failure* can trip it: a success with a still-hot EWMA never
+//!   re-opens a freshly closed breaker.
+//! - **Open** — requests are shed synchronously (the caller answers
+//!   `SolveError::Unhealthy` with a `retry_after_ms` hint) without
+//!   touching the drain budget of healthy meshes. After `open_ms` the
+//!   next admission becomes a probe.
+//! - **HalfOpen** — exactly one probe group is admitted; everything else
+//!   sheds until the probe settles. A successful probe closes the
+//!   breaker; a failed one re-opens it. A probe that is never observed
+//!   (lost, expired, rejected) times out after `open_ms` and a fresh
+//!   probe is allowed.
+//!
+//! Time comes from an injectable [`ClockSource`]: wall time in
+//! production, a manually advanced millisecond counter under test, so
+//! `fault-inject` breaker tests are deterministic.
+//!
+//! The [`HealthRegistry`] aggregates per-mesh trackers plus a *global*
+//! sick-traffic EWMA used for adaptive load shedding: when rescued or
+//! exhausted lanes dominate recent traffic the coordinator tightens its
+//! admission bound (`max_queue / tighten_divisor`) and relaxes it again
+//! on recovery (hysteresis via [`HealthRegistry::update_tightened`]).
+//!
+//! Everything here is inert unless [`HealthConfig::enabled`] is set; the
+//! default config keeps every serving path bitwise identical to the
+//! tracker-free stack.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::solver::{EscalationReport, EscalationStage};
+
+/// Circuit-breaker state of one mesh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Normal serving; failures are being counted.
+    Closed,
+    /// Chronically failing; requests are shed until the open window ends.
+    Open,
+    /// One probe group is admitted to test recovery.
+    HalfOpen,
+}
+
+/// Health classification of one served lane outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LaneOutcome {
+    /// Converged on the first attempt.
+    Ok,
+    /// Converged, but only after the escalation ladder intervened.
+    Rescued,
+    /// Failed even after (or without) the ladder.
+    Exhausted,
+}
+
+/// Admission verdict for a request group on one mesh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitDecision {
+    /// Serve it.
+    Admit,
+    /// Breaker is open (or a probe is already in flight): answer
+    /// `Unhealthy` synchronously and retry after the hinted delay.
+    Shed {
+        /// Milliseconds until the breaker will consider a probe.
+        retry_after_ms: u64,
+    },
+}
+
+/// Tuning knobs for health tracking, the breaker, and adaptive shedding.
+///
+/// The `Default` (== [`HealthConfig::disabled`]) turns the whole
+/// subsystem off; [`HealthConfig::breaker`] is the enabled preset.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HealthConfig {
+    /// Master switch; `false` makes every tracker call a no-op.
+    pub enabled: bool,
+    /// EWMA smoothing factor in `(0, 1]` for all health averages.
+    pub alpha: f64,
+    /// Observations required before EWMA thresholds may trip anything.
+    pub min_observations: u64,
+    /// Exhausted-EWMA level at which a failure observation trips Open.
+    pub open_failure_rate: f64,
+    /// Consecutive exhausted outcomes that trip Open regardless of EWMA
+    /// (0 disables the streak trigger).
+    pub open_streak: u32,
+    /// Milliseconds a breaker stays Open before admitting a probe; also
+    /// the timeout after which an unobserved probe is retried.
+    pub open_ms: u64,
+    /// Global sick-traffic EWMA level that tightens the admission bound.
+    pub tighten_threshold: f64,
+    /// Divisor applied to the base `max_queue` while tightened.
+    pub tighten_divisor: usize,
+    /// Use a manually advanced clock instead of wall time (tests).
+    pub manual_clock: bool,
+}
+
+impl HealthConfig {
+    /// Health tracking off — the default; serving is bitwise identical
+    /// to the tracker-free stack.
+    pub fn disabled() -> Self {
+        HealthConfig {
+            enabled: false,
+            alpha: 0.2,
+            min_observations: 8,
+            open_failure_rate: 0.6,
+            open_streak: 4,
+            open_ms: 250,
+            tighten_threshold: 0.5,
+            tighten_divisor: 4,
+            manual_clock: false,
+        }
+    }
+
+    /// The enabled preset with the same tuning as [`disabled`].
+    ///
+    /// [`disabled`]: HealthConfig::disabled
+    pub fn breaker() -> Self {
+        HealthConfig { enabled: true, ..HealthConfig::disabled() }
+    }
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig::disabled()
+    }
+}
+
+/// Injectable time source: wall time in production, a manually advanced
+/// counter under test.
+#[derive(Clone, Copy, Debug)]
+enum ClockSource {
+    /// Milliseconds elapsed since the registry was created.
+    Wall(Instant),
+    /// Milliseconds advanced explicitly via `advance`.
+    Manual(u64),
+}
+
+impl ClockSource {
+    fn now_ms(&self) -> u64 {
+        match self {
+            ClockSource::Wall(origin) => origin.elapsed().as_millis() as u64,
+            ClockSource::Manual(ms) => *ms,
+        }
+    }
+}
+
+/// Breaker transition produced by one admit/observe call (registry-level
+/// counters are bumped from these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Transition {
+    None,
+    Opened,
+    HalfOpened,
+    Closed,
+}
+
+/// Health history of one mesh: outcome EWMAs, the failure streak,
+/// rung-level ladder statistics, and the breaker state machine.
+#[derive(Clone, Debug)]
+pub struct MeshHealth {
+    state: BreakerState,
+    ewma_failed: f64,
+    ewma_rescued: f64,
+    ewma_exhausted: f64,
+    streak: u32,
+    observations: u64,
+    opened_at_ms: u64,
+    probe_at_ms: u64,
+    probe_inflight: bool,
+    rung_attempts: [u64; EscalationStage::COUNT],
+    rung_rescues: [u64; EscalationStage::COUNT],
+    rungs_skipped: u64,
+}
+
+impl Default for MeshHealth {
+    fn default() -> Self {
+        MeshHealth {
+            state: BreakerState::Closed,
+            ewma_failed: 0.0,
+            ewma_rescued: 0.0,
+            ewma_exhausted: 0.0,
+            streak: 0,
+            observations: 0,
+            opened_at_ms: 0,
+            probe_at_ms: 0,
+            probe_inflight: false,
+            rung_attempts: [0; EscalationStage::COUNT],
+            rung_rescues: [0; EscalationStage::COUNT],
+            rungs_skipped: 0,
+        }
+    }
+}
+
+impl MeshHealth {
+    /// Admission decision for a request group arriving now.
+    fn admit(&mut self, now_ms: u64, cfg: &HealthConfig) -> (AdmitDecision, Transition) {
+        match self.state {
+            BreakerState::Closed => (AdmitDecision::Admit, Transition::None),
+            BreakerState::Open => {
+                let due = self.opened_at_ms.saturating_add(cfg.open_ms);
+                if now_ms >= due {
+                    self.state = BreakerState::HalfOpen;
+                    self.probe_inflight = true;
+                    self.probe_at_ms = now_ms;
+                    (AdmitDecision::Admit, Transition::HalfOpened)
+                } else {
+                    (AdmitDecision::Shed { retry_after_ms: due - now_ms }, Transition::None)
+                }
+            }
+            BreakerState::HalfOpen => {
+                let timeout = self.probe_at_ms.saturating_add(cfg.open_ms);
+                if self.probe_inflight && now_ms < timeout {
+                    // One probe at a time: everything else sheds until
+                    // the in-flight probe settles or times out.
+                    let wait = timeout.saturating_sub(now_ms).max(1);
+                    (AdmitDecision::Shed { retry_after_ms: wait }, Transition::None)
+                } else {
+                    // The previous probe was lost (expired, rejected,
+                    // never observed) or timed out: admit a fresh one.
+                    self.probe_inflight = true;
+                    self.probe_at_ms = now_ms;
+                    (AdmitDecision::Admit, Transition::None)
+                }
+            }
+        }
+    }
+
+    /// Fold one observed outcome (plus its ladder report, if any) into
+    /// the history and run the breaker transitions.
+    fn observe(
+        &mut self,
+        outcome: LaneOutcome,
+        report: Option<&EscalationReport>,
+        now_ms: u64,
+        cfg: &HealthConfig,
+    ) -> Transition {
+        self.observations += 1;
+        let (failed, rescued, exhausted) = match outcome {
+            LaneOutcome::Ok => (0.0, 0.0, 0.0),
+            LaneOutcome::Rescued => (1.0, 1.0, 0.0),
+            LaneOutcome::Exhausted => (1.0, 0.0, 1.0),
+        };
+        let a = cfg.alpha.clamp(0.0, 1.0);
+        self.ewma_failed += a * (failed - self.ewma_failed);
+        self.ewma_rescued += a * (rescued - self.ewma_rescued);
+        self.ewma_exhausted += a * (exhausted - self.ewma_exhausted);
+        if outcome == LaneOutcome::Exhausted {
+            self.streak = self.streak.saturating_add(1);
+        } else {
+            self.streak = 0;
+        }
+        if let Some(rep) = report {
+            for att in &rep.attempts {
+                self.rung_attempts[att.stage.index()] += 1;
+            }
+            if let Some(stage) = rep.resolved_by {
+                self.rung_rescues[stage.index()] += 1;
+            }
+            self.rungs_skipped += rep.skipped.len() as u64;
+        }
+        match self.state {
+            BreakerState::Closed => {
+                let chronic = self.observations >= cfg.min_observations
+                    && self.ewma_exhausted >= cfg.open_failure_rate;
+                let streaky = cfg.open_streak > 0 && self.streak >= cfg.open_streak;
+                // Trip only on a failure observation: a success while
+                // the EWMA is still hot must not re-open the breaker.
+                if outcome == LaneOutcome::Exhausted && (chronic || streaky) {
+                    self.state = BreakerState::Open;
+                    self.opened_at_ms = now_ms;
+                    return Transition::Opened;
+                }
+            }
+            BreakerState::HalfOpen => {
+                self.probe_inflight = false;
+                if outcome == LaneOutcome::Exhausted {
+                    self.state = BreakerState::Open;
+                    self.opened_at_ms = now_ms;
+                    return Transition::Opened;
+                }
+                self.state = BreakerState::Closed;
+                // A closing probe resets the streak; the EWMAs keep
+                // their memory so renewed failures re-open quickly.
+                self.streak = 0;
+                return Transition::Closed;
+            }
+            BreakerState::Open => {}
+        }
+        Transition::None
+    }
+
+    /// The admitted probe never made it to a solve (overload-rejected
+    /// alongside its group): allow the next admission to probe afresh.
+    fn cancel_probe(&mut self) {
+        self.probe_inflight = false;
+    }
+
+    fn snapshot(&self) -> HealthSnapshot {
+        HealthSnapshot {
+            state: self.state,
+            ewma_failed: self.ewma_failed,
+            ewma_rescued: self.ewma_rescued,
+            ewma_exhausted: self.ewma_exhausted,
+            streak: self.streak,
+            observations: self.observations,
+            rung_attempts: self.rung_attempts,
+            rung_rescues: self.rung_rescues,
+            rungs_skipped: self.rungs_skipped,
+        }
+    }
+}
+
+/// Read-only view of one mesh's health, returned by
+/// `BatchServer::health`.
+#[derive(Clone, Debug)]
+pub struct HealthSnapshot {
+    /// Current breaker state.
+    pub state: BreakerState,
+    /// EWMA fraction of lanes that did not converge on the first try.
+    pub ewma_failed: f64,
+    /// EWMA fraction of lanes rescued by the escalation ladder.
+    pub ewma_rescued: f64,
+    /// EWMA fraction of lanes that failed even after the ladder.
+    pub ewma_exhausted: f64,
+    /// Consecutive exhausted outcomes.
+    pub streak: u32,
+    /// Total outcomes folded into this tracker.
+    pub observations: u64,
+    /// Ladder attempts per rung, indexed by `EscalationStage::index`.
+    pub rung_attempts: [u64; EscalationStage::COUNT],
+    /// Ladder rescues per rung, indexed by `EscalationStage::index`.
+    pub rung_rescues: [u64; EscalationStage::COUNT],
+    /// Rungs skipped as unaffordable by budget-aware escalation.
+    pub rungs_skipped: u64,
+}
+
+/// All per-mesh trackers plus the global sick-traffic EWMA that drives
+/// adaptive admission tightening. One lives behind a mutex in the
+/// `BatchServer`; unit tests drive it directly.
+#[derive(Debug)]
+pub struct HealthRegistry {
+    cfg: HealthConfig,
+    clock: ClockSource,
+    meshes: HashMap<u64, MeshHealth>,
+    sick_ewma: f64,
+    sick_obs: u64,
+    opens: u64,
+    half_opens: u64,
+    closes: u64,
+    shed: u64,
+    tightenings: u64,
+    tightened: bool,
+}
+
+impl HealthRegistry {
+    /// Fresh registry (fresh clock, no history) under `cfg`.
+    pub fn new(cfg: HealthConfig) -> Self {
+        let clock = if cfg.manual_clock {
+            ClockSource::Manual(0)
+        } else {
+            ClockSource::Wall(Instant::now())
+        };
+        HealthRegistry {
+            cfg,
+            clock,
+            meshes: HashMap::new(),
+            sick_ewma: 0.0,
+            sick_obs: 0,
+            opens: 0,
+            half_opens: 0,
+            closes: 0,
+            shed: 0,
+            tightenings: 0,
+            tightened: false,
+        }
+    }
+
+    /// Replace the config and drop all history (fresh clock included).
+    pub fn reconfigure(&mut self, cfg: HealthConfig) {
+        *self = HealthRegistry::new(cfg);
+    }
+
+    /// The active config.
+    pub fn config(&self) -> &HealthConfig {
+        &self.cfg
+    }
+
+    /// Advance the manual clock by `ms`; no-op on the wall clock.
+    pub fn advance_clock(&mut self, ms: u64) {
+        if let ClockSource::Manual(t) = &mut self.clock {
+            *t = t.saturating_add(ms);
+        }
+    }
+
+    /// Current clock reading in milliseconds.
+    pub fn now_ms(&self) -> u64 {
+        self.clock.now_ms()
+    }
+
+    /// Admission decision for a request group on `mesh_id`. A Shed
+    /// decision is *not* counted here — the caller sheds once per
+    /// request via [`note_shed`](HealthRegistry::note_shed).
+    pub fn admit(&mut self, mesh_id: u64) -> AdmitDecision {
+        if !self.cfg.enabled {
+            return AdmitDecision::Admit;
+        }
+        let now = self.clock.now_ms();
+        let cfg = self.cfg;
+        let (decision, transition) = self.meshes.entry(mesh_id).or_default().admit(now, &cfg);
+        if transition == Transition::HalfOpened {
+            self.half_opens += 1;
+        }
+        decision
+    }
+
+    /// Count `n` requests shed on an Open breaker.
+    pub fn note_shed(&mut self, n: u64) {
+        self.shed += n;
+    }
+
+    /// Fold one served outcome for `mesh_id` into its tracker and the
+    /// global sick-traffic EWMA.
+    pub fn observe(
+        &mut self,
+        mesh_id: u64,
+        outcome: LaneOutcome,
+        report: Option<&EscalationReport>,
+    ) {
+        if !self.cfg.enabled {
+            return;
+        }
+        let sick = if outcome == LaneOutcome::Ok { 0.0 } else { 1.0 };
+        let a = self.cfg.alpha.clamp(0.0, 1.0);
+        self.sick_ewma += a * (sick - self.sick_ewma);
+        self.sick_obs += 1;
+        let now = self.clock.now_ms();
+        let cfg = self.cfg;
+        match self.meshes.entry(mesh_id).or_default().observe(outcome, report, now, &cfg) {
+            Transition::Opened => self.opens += 1,
+            Transition::Closed => self.closes += 1,
+            Transition::HalfOpened | Transition::None => {}
+        }
+    }
+
+    /// An admitted probe group was dropped before serving (e.g. the
+    /// whole burst was overload-rejected): let the next admission probe.
+    pub fn cancel_probe(&mut self, mesh_id: u64) {
+        if let Some(mh) = self.meshes.get_mut(&mesh_id) {
+            mh.cancel_probe();
+        }
+    }
+
+    /// Health snapshot of `mesh_id`, if it has been tracked.
+    pub fn snapshot(&self, mesh_id: u64) -> Option<HealthSnapshot> {
+        self.meshes.get(&mesh_id).map(MeshHealth::snapshot)
+    }
+
+    /// Re-evaluate adaptive tightening from the global sick-traffic
+    /// EWMA; returns whether the admission bound is currently tightened.
+    /// Entering the tightened state is counted once per episode
+    /// (hysteresis: staying sick does not re-count).
+    pub fn update_tightened(&mut self) -> bool {
+        if !self.cfg.enabled {
+            self.tightened = false;
+            return false;
+        }
+        let sick = self.sick_obs >= self.cfg.min_observations
+            && self.sick_ewma >= self.cfg.tighten_threshold;
+        if sick && !self.tightened {
+            self.tightenings += 1;
+        }
+        self.tightened = sick;
+        self.tightened
+    }
+
+    /// Total requests shed on Open breakers.
+    pub fn shed(&self) -> u64 {
+        self.shed
+    }
+
+    /// Closed → Open and HalfOpen → Open transitions.
+    pub fn opens(&self) -> u64 {
+        self.opens
+    }
+
+    /// Open → HalfOpen probe admissions.
+    pub fn half_opens(&self) -> u64 {
+        self.half_opens
+    }
+
+    /// HalfOpen → Closed recoveries.
+    pub fn closes(&self) -> u64 {
+        self.closes
+    }
+
+    /// Episodes in which the admission bound was tightened.
+    pub fn tightenings(&self) -> u64 {
+        self.tightenings
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manual_cfg() -> HealthConfig {
+        HealthConfig {
+            alpha: 1.0,
+            min_observations: 1,
+            open_failure_rate: 2.0, // unreachable: isolate the streak trigger
+            open_streak: 2,
+            open_ms: 100,
+            manual_clock: true,
+            ..HealthConfig::breaker()
+        }
+    }
+
+    #[test]
+    fn disabled_registry_is_inert() {
+        let mut reg = HealthRegistry::new(HealthConfig::disabled());
+        for _ in 0..20 {
+            reg.observe(7, LaneOutcome::Exhausted, None);
+            assert_eq!(reg.admit(7), AdmitDecision::Admit);
+        }
+        assert!(!reg.update_tightened());
+        assert_eq!(reg.opens(), 0);
+        assert!(reg.snapshot(7).is_none(), "disabled tracking must record nothing");
+    }
+
+    #[test]
+    fn streak_opens_then_probe_closes() {
+        let mut reg = HealthRegistry::new(manual_cfg());
+        reg.observe(1, LaneOutcome::Exhausted, None);
+        assert_eq!(reg.snapshot(1).unwrap().state, BreakerState::Closed);
+        reg.observe(1, LaneOutcome::Exhausted, None);
+        assert_eq!(reg.snapshot(1).unwrap().state, BreakerState::Open);
+        assert_eq!(reg.opens(), 1);
+
+        // Open window: shed with a countdown hint.
+        match reg.admit(1) {
+            AdmitDecision::Shed { retry_after_ms } => assert!(retry_after_ms <= 100),
+            other => panic!("open breaker must shed, got {other:?}"),
+        }
+
+        // After open_ms the next admission is the probe; while it is in
+        // flight every further admission sheds (one-probe semantics).
+        reg.advance_clock(100);
+        assert_eq!(reg.admit(1), AdmitDecision::Admit);
+        assert_eq!(reg.half_opens(), 1);
+        assert!(matches!(reg.admit(1), AdmitDecision::Shed { .. }));
+
+        // Probe succeeds → Closed; streak cleared, so the next single
+        // failure does not instantly re-open.
+        reg.observe(1, LaneOutcome::Ok, None);
+        assert_eq!(reg.snapshot(1).unwrap().state, BreakerState::Closed);
+        assert_eq!(reg.closes(), 1);
+        reg.observe(1, LaneOutcome::Exhausted, None);
+        assert_eq!(reg.snapshot(1).unwrap().state, BreakerState::Closed);
+    }
+
+    #[test]
+    fn failed_probe_reopens() {
+        let mut reg = HealthRegistry::new(manual_cfg());
+        reg.observe(1, LaneOutcome::Exhausted, None);
+        reg.observe(1, LaneOutcome::Exhausted, None);
+        reg.advance_clock(100);
+        assert_eq!(reg.admit(1), AdmitDecision::Admit);
+        reg.observe(1, LaneOutcome::Exhausted, None);
+        assert_eq!(reg.snapshot(1).unwrap().state, BreakerState::Open);
+        assert_eq!(reg.opens(), 2, "a failed probe re-opens");
+        assert!(matches!(reg.admit(1), AdmitDecision::Shed { .. }));
+    }
+
+    #[test]
+    fn lost_probe_times_out_and_cancel_allows_fresh_probe() {
+        let mut reg = HealthRegistry::new(manual_cfg());
+        reg.observe(1, LaneOutcome::Exhausted, None);
+        reg.observe(1, LaneOutcome::Exhausted, None);
+        reg.advance_clock(100);
+        assert_eq!(reg.admit(1), AdmitDecision::Admit);
+        // Probe never observed: after open_ms a fresh probe is allowed.
+        reg.advance_clock(100);
+        assert_eq!(reg.admit(1), AdmitDecision::Admit);
+        assert_eq!(reg.half_opens(), 1, "timeout retry is not a new half-open transition");
+        // An explicitly cancelled probe (overload-rejected group) frees
+        // the slot immediately.
+        reg.cancel_probe(1);
+        assert_eq!(reg.admit(1), AdmitDecision::Admit);
+    }
+
+    #[test]
+    fn success_with_hot_ewma_never_trips() {
+        let cfg = HealthConfig {
+            alpha: 1.0,
+            min_observations: 1,
+            open_failure_rate: 0.5,
+            open_streak: 0, // EWMA trigger only
+            manual_clock: true,
+            ..HealthConfig::breaker()
+        };
+        let mut reg = HealthRegistry::new(cfg);
+        reg.observe(3, LaneOutcome::Exhausted, None);
+        assert_eq!(reg.snapshot(3).unwrap().state, BreakerState::Open);
+        reg.advance_clock(300);
+        assert_eq!(reg.admit(3), AdmitDecision::Admit);
+        reg.observe(3, LaneOutcome::Ok, None);
+        assert_eq!(reg.snapshot(3).unwrap().state, BreakerState::Closed);
+        // Rescued outcome is sick for the EWMA but is not a failure
+        // observation, so the breaker stays Closed.
+        reg.observe(3, LaneOutcome::Rescued, None);
+        assert_eq!(reg.snapshot(3).unwrap().state, BreakerState::Closed);
+        assert!(reg.snapshot(3).unwrap().ewma_failed >= 0.5);
+    }
+
+    #[test]
+    fn tighten_hysteresis_counts_episodes_once() {
+        let mut reg = HealthRegistry::new(manual_cfg());
+        assert!(!reg.update_tightened());
+        reg.observe(9, LaneOutcome::Rescued, None); // alpha = 1 → sick EWMA jumps to 1
+        assert!(reg.update_tightened());
+        assert!(reg.update_tightened(), "staying sick keeps the bound tight");
+        assert_eq!(reg.tightenings(), 1, "one episode, one count");
+        reg.observe(9, LaneOutcome::Ok, None);
+        assert!(!reg.update_tightened(), "recovery relaxes the bound");
+        reg.observe(9, LaneOutcome::Rescued, None);
+        assert!(reg.update_tightened());
+        assert_eq!(reg.tightenings(), 2, "a new episode counts again");
+    }
+
+    #[test]
+    fn rung_counters_fold_from_reports() {
+        use crate::solver::{FailureKind, SkippedRung, SolveStats, StageAttempt};
+        let mut rep = EscalationReport {
+            first: Some(SolveStats::fail(3, 1.0, FailureKind::MaxIterations)),
+            ..EscalationReport::default()
+        };
+        rep.attempts.push(StageAttempt {
+            stage: EscalationStage::DirectLu,
+            stats: SolveStats::ok(0, 0.0),
+        });
+        rep.resolved_by = Some(EscalationStage::DirectLu);
+        rep.skipped.push(SkippedRung {
+            stage: EscalationStage::IterBump,
+            est_ms: 1e4,
+            budget_ms: 5.0,
+        });
+        let mut reg = HealthRegistry::new(manual_cfg());
+        reg.observe(2, LaneOutcome::Rescued, Some(&rep));
+        let snap = reg.snapshot(2).unwrap();
+        assert_eq!(snap.rung_attempts[EscalationStage::DirectLu.index()], 1);
+        assert_eq!(snap.rung_rescues[EscalationStage::DirectLu.index()], 1);
+        assert_eq!(snap.rungs_skipped, 1);
+        assert!(snap.ewma_rescued >= 1.0 - 1e-12);
+    }
+}

@@ -1,16 +1,55 @@
 //! The [`MeshSession`] type: one owner for the per-mesh solve stack.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
+use std::time::Instant;
 
 use crate::assembly::{AssemblyContext, BilinearForm, Coefficient};
 use crate::bc::{condense, CondensePlan, DirichletBc, ReducedBatch, ReducedSystem};
 use crate::mesh::Mesh;
 use crate::solver::{
-    cg, cg_batch, cg_batch_warm, cg_batch_warm_with, rel_residual, AmgBatch, AmgConfig,
-    AmgHierarchy, AmgPrecond, EscalationReport, EscalationStage, FailureKind, JacobiPrecond,
-    LockstepOp, MultiRhs, PrecondEngine, PrecondKind, SolveStats, SolverConfig, StageAttempt,
+    cg, cg_batch, cg_batch_warm, cg_batch_warm_with, rel_residual, rung_cost_ms, AmgBatch,
+    AmgConfig, AmgHierarchy, AmgPrecond, EscalationReport, EscalationStage, FailureKind,
+    JacobiPrecond, LockstepOp, MultiRhs, PrecondEngine, PrecondKind, SkippedRung, SolveStats,
+    SolverConfig, StageAttempt,
 };
 use crate::sparse::{Csr, CsrBatch, Dense};
+
+/// EWMA smoothing for the observed milliseconds-per-iteration samples.
+const COST_ALPHA: f64 = 0.3;
+
+/// Budget left after spending `spent_ms` of an optional deadline budget.
+fn remaining_after(budget_ms: Option<f64>, spent_ms: f64) -> Option<f64> {
+    budget_ms.map(|b| (b - spent_ms).max(0.0))
+}
+
+/// Milliseconds remaining to the escalation ladder (`None` = unbounded).
+struct LadderBudget {
+    remaining: Option<f64>,
+}
+
+impl LadderBudget {
+    fn new(budget_ms: Option<f64>) -> LadderBudget {
+        LadderBudget { remaining: budget_ms.map(|b| b.max(0.0)) }
+    }
+
+    fn fits(&self, est_ms: f64) -> bool {
+        match self.remaining {
+            Some(r) => est_ms <= r,
+            None => true,
+        }
+    }
+
+    fn charge(&mut self, spent_ms: f64) {
+        if let Some(r) = &mut self.remaining {
+            *r = (*r - spent_ms).max(0.0);
+        }
+    }
+
+    fn left(&self) -> f64 {
+        self.remaining.unwrap_or(f64::INFINITY)
+    }
+}
 
 /// The complete per-mesh solve stack, built once per (mesh, BC, form):
 /// Dirichlet condensation plan, persistent reduced system, preconditioner
@@ -43,6 +82,14 @@ pub struct MeshSession {
     /// ladder stage (only used when the engine is Jacobi): built from the
     /// session operator on the first rescue, cached for every later one.
     rescue_amg: OnceLock<AmgHierarchy>,
+    /// Observed EWMA of milliseconds per Krylov iteration (f64 bits in
+    /// an atomic so `&self` solve paths can calibrate). `0.0` means
+    /// uncalibrated, which zeroes every rung cost estimate and leaves
+    /// the budget gate inert.
+    cost_ms_per_iter: AtomicU64,
+    /// Explicit calibration override (tests, external calibrators);
+    /// `0.0` = none, fall back to the observed EWMA.
+    cost_override: AtomicU64,
     config: SolverConfig,
 }
 
@@ -71,6 +118,8 @@ impl MeshSession {
             batch_amg: None,
             warm: None,
             rescue_amg: OnceLock::new(),
+            cost_ms_per_iter: AtomicU64::new(0),
+            cost_override: AtomicU64::new(0),
             config,
         }
     }
@@ -94,6 +143,8 @@ impl MeshSession {
             batch_amg: None,
             warm: None,
             rescue_amg: OnceLock::new(),
+            cost_ms_per_iter: AtomicU64::new(0),
+            cost_override: AtomicU64::new(0),
             config,
         }
     }
@@ -119,6 +170,8 @@ impl MeshSession {
             batch_amg: None,
             warm: None,
             rescue_amg: OnceLock::new(),
+            cost_ms_per_iter: AtomicU64::new(0),
+            cost_override: AtomicU64::new(0),
             config,
         }
     }
@@ -164,6 +217,92 @@ impl MeshSession {
         self.engine
             .as_ref()
             .expect("session engine not built: call sync_engine() after the first refill")
+    }
+
+    /// Pin the ladder's cost model to an explicit milliseconds-per-
+    /// iteration value (tests, external calibrators). Non-positive or
+    /// non-finite values clear the override, reverting to the observed
+    /// EWMA.
+    pub fn set_cost_ms_per_iter(&self, ms: f64) {
+        let v = if ms.is_finite() && ms > 0.0 { ms } else { 0.0 };
+        self.cost_override.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Effective milliseconds-per-iteration of the rung cost model: the
+    /// explicit override when set, otherwise the EWMA recorded from
+    /// converged resilient solves (`0.0` until the first calibration —
+    /// which makes every rung estimate zero, so nothing is skipped).
+    pub fn cost_ms_per_iter(&self) -> f64 {
+        let over = f64::from_bits(self.cost_override.load(Ordering::Relaxed));
+        if over > 0.0 {
+            return over;
+        }
+        f64::from_bits(self.cost_ms_per_iter.load(Ordering::Relaxed))
+    }
+
+    /// Fold one `ms / iteration` sample into the observed EWMA. A racing
+    /// store just loses a sample — this is calibration, not accounting.
+    fn record_cost_sample(&self, ms_per_iter: f64) {
+        if !(ms_per_iter.is_finite() && ms_per_iter > 0.0) {
+            return;
+        }
+        let prev = f64::from_bits(self.cost_ms_per_iter.load(Ordering::Relaxed));
+        let next = if prev > 0.0 { prev + COST_ALPHA * (ms_per_iter - prev) } else { ms_per_iter };
+        self.cost_ms_per_iter.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Run the first (pre-ladder) attempt, timing it only when the
+    /// ladder is enabled: the elapsed milliseconds calibrate the rung
+    /// cost model and are charged against the caller's deadline budget.
+    /// With escalation off (the default) this reads no clocks, keeping
+    /// the default path untouched.
+    fn timed_attempt<T>(&self, run: impl FnOnce() -> (T, SolveStats)) -> (T, SolveStats, f64) {
+        if !self.config.escalation.enabled {
+            let (x, st) = run();
+            return (x, st, 0.0);
+        }
+        let t0 = Instant::now();
+        let (x, st) = run();
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        if st.converged && st.iterations > 0 {
+            self.record_cost_sample(ms / st.iterations as f64);
+        }
+        (x, st, ms)
+    }
+
+    /// Budget gate for one ladder rung: `true` admits it; an
+    /// unaffordable rung is recorded in the report and skipped.
+    fn rung_gate(
+        &self,
+        stage: EscalationStage,
+        k: &Csr,
+        ms_per_iter: f64,
+        budget: &LadderBudget,
+        rep: &mut EscalationReport,
+    ) -> bool {
+        let est = rung_cost_ms(stage, k.nrows, k.data.len(), &self.config, ms_per_iter);
+        if budget.fits(est) {
+            return true;
+        }
+        rep.skipped.push(SkippedRung { stage, est_ms: est, budget_ms: budget.left() });
+        false
+    }
+
+    /// Run one ladder rung, charging its actual elapsed time against the
+    /// budget and folding converged rungs into the cost calibration.
+    fn timed_rung<T>(
+        &self,
+        budget: &mut LadderBudget,
+        run: impl FnOnce() -> (T, SolveStats),
+    ) -> (T, SolveStats) {
+        let t0 = Instant::now();
+        let (x, st) = run();
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        budget.charge(ms);
+        if st.converged && st.iterations > 0 {
+            self.record_cost_sample(ms / st.iterations as f64);
+        }
+        (x, st)
     }
 
     /// Scalar PCG on the current session system. `warm` (full DoF field)
@@ -230,8 +369,21 @@ impl MeshSession {
         k: &Csr,
         f_full: &[f64],
     ) -> (Vec<f64>, SolveStats, Option<EscalationReport>) {
+        self.solve_foreign_resilient_budgeted(k, f_full, None)
+    }
+
+    /// [`MeshSession::solve_foreign_resilient`] with an optional
+    /// deadline budget in milliseconds: ladder rungs whose cost estimate
+    /// exceeds the remaining budget are skipped and recorded in the
+    /// report. `None` is bitwise the unbudgeted call.
+    pub fn solve_foreign_resilient_budgeted(
+        &self,
+        k: &Csr,
+        f_full: &[f64],
+        budget_ms: Option<f64>,
+    ) -> (Vec<f64>, SolveStats, Option<EscalationReport>) {
         let sys = condense(k, f_full, &self.sys.bc);
-        let (u_free, stats) = match self.engine_ref() {
+        let (u_free, stats, spent) = self.timed_attempt(|| match self.engine_ref() {
             PrecondEngine::Jacobi(_) => {
                 let pc = JacobiPrecond::new(&sys.k);
                 cg(&sys.k, &sys.rhs, &pc, &self.config)
@@ -239,11 +391,12 @@ impl MeshSession {
             PrecondEngine::Amg(h, ws) => {
                 cg(&sys.k, &sys.rhs, &AmgPrecond::with_scratch(h, ws), &self.config)
             }
-        };
+        });
         if stats.converged || !self.config.escalation.enabled {
             return (sys.expand(&u_free), stats, None);
         }
-        let (rescued, rep) = self.escalate_lane(&sys.k, &sys.rhs, stats, false);
+        let (rescued, rep) =
+            self.escalate_lane(&sys.k, &sys.rhs, stats, false, remaining_after(budget_ms, spent));
         match rescued {
             Some(x) => {
                 let st = rep.final_stats().unwrap_or(stats);
@@ -309,27 +462,39 @@ impl MeshSession {
     /// lane's reduced operator and load, `first` the failing stats,
     /// `was_warm` whether the failed attempt was warm-started (gates the
     /// cold-restart stage — a cold failure retried cold is the same
-    /// solve). Returns the rescued free-DoF solution (`None` when every
-    /// configured stage failed) and the per-stage accounting.
+    /// solve). `budget_ms` is the deadline budget left for rescue: rungs
+    /// whose [`rung_cost_ms`] estimate exceeds it are skipped (recorded
+    /// in the report) and every attempted rung charges its actual
+    /// elapsed time. Returns the rescued free-DoF solution (`None` when
+    /// every configured stage failed or was skipped) and the per-stage
+    /// accounting.
     fn escalate_lane(
         &self,
         k: &Csr,
         rhs: &[f64],
         first: SolveStats,
         was_warm: bool,
+        budget_ms: Option<f64>,
     ) -> (Option<Vec<f64>>, EscalationReport) {
         let pol = self.config.escalation;
         let mut rep = EscalationReport {
             first: Some(first),
             attempts: Vec::new(),
+            skipped: Vec::new(),
             resolved_by: None,
         };
+        let mut budget = LadderBudget::new(budget_ms);
+        let c = self.cost_ms_per_iter();
         let engine_amg = matches!(self.engine.as_ref(), Some(PrecondEngine::Amg(..)));
         // Tracks the strongest preconditioner reached so far; later stages
         // keep it rather than regressing to the one that already failed.
         let mut amg = engine_amg;
-        if pol.cold_restart && was_warm {
-            let (x, st) = self.rescue_solve(k, rhs, amg, &self.config);
+        if pol.cold_restart
+            && was_warm
+            && self.rung_gate(EscalationStage::ColdRestart, k, c, &budget, &mut rep)
+        {
+            let (x, st) =
+                self.timed_rung(&mut budget, || self.rescue_solve(k, rhs, amg, &self.config));
             rep.attempts.push(StageAttempt { stage: EscalationStage::ColdRestart, stats: st });
             if st.converged {
                 rep.resolved_by = Some(EscalationStage::ColdRestart);
@@ -338,26 +503,33 @@ impl MeshSession {
         }
         if pol.escalate_precond && !engine_amg {
             amg = true;
-            let (x, st) = self.rescue_solve(k, rhs, true, &self.config);
-            rep.attempts
-                .push(StageAttempt { stage: EscalationStage::PrecondEscalation, stats: st });
-            if st.converged {
-                rep.resolved_by = Some(EscalationStage::PrecondEscalation);
-                return (Some(x), rep);
+            if self.rung_gate(EscalationStage::PrecondEscalation, k, c, &budget, &mut rep) {
+                let (x, st) =
+                    self.timed_rung(&mut budget, || self.rescue_solve(k, rhs, true, &self.config));
+                rep.attempts
+                    .push(StageAttempt { stage: EscalationStage::PrecondEscalation, stats: st });
+                if st.converged {
+                    rep.resolved_by = Some(EscalationStage::PrecondEscalation);
+                    return (Some(x), rep);
+                }
             }
         }
-        if pol.iter_bump > 1 {
+        if pol.iter_bump > 1 && self.rung_gate(EscalationStage::IterBump, k, c, &budget, &mut rep)
+        {
             let mut cfg = self.config;
             cfg.max_iter = cfg.max_iter.saturating_mul(pol.iter_bump);
-            let (x, st) = self.rescue_solve(k, rhs, amg, &cfg);
+            let (x, st) = self.timed_rung(&mut budget, || self.rescue_solve(k, rhs, amg, &cfg));
             rep.attempts.push(StageAttempt { stage: EscalationStage::IterBump, stats: st });
             if st.converged {
                 rep.resolved_by = Some(EscalationStage::IterBump);
                 return (Some(x), rep);
             }
         }
-        if pol.direct_fallback && k.nrows <= pol.direct_max {
-            let (x, st) = self.direct_solve(k, rhs);
+        if pol.direct_fallback
+            && k.nrows <= pol.direct_max
+            && self.rung_gate(EscalationStage::DirectLu, k, c, &budget, &mut rep)
+        {
+            let (x, st) = self.timed_rung(&mut budget, || self.direct_solve(k, rhs));
             rep.attempts.push(StageAttempt { stage: EscalationStage::DirectLu, stats: st });
             if st.converged {
                 rep.resolved_by = Some(EscalationStage::DirectLu);
@@ -375,12 +547,25 @@ impl MeshSession {
         &self,
         f_full: &[f64],
     ) -> (Vec<f64>, SolveStats, Option<EscalationReport>) {
+        self.solve_with_load_resilient_budgeted(f_full, None)
+    }
+
+    /// [`MeshSession::solve_with_load_resilient`] with an optional
+    /// deadline budget in milliseconds for the ladder (skipped rungs are
+    /// recorded in the report). `None` is bitwise the unbudgeted call.
+    pub fn solve_with_load_resilient_budgeted(
+        &self,
+        f_full: &[f64],
+        budget_ms: Option<f64>,
+    ) -> (Vec<f64>, SolveStats, Option<EscalationReport>) {
         let rhs = self.sys.restrict(f_full);
-        let (u_free, stats) = self.engine_ref().cg_warm(&self.sys.k, &rhs, None, &self.config);
+        let (u_free, stats, spent) =
+            self.timed_attempt(|| self.engine_ref().cg_warm(&self.sys.k, &rhs, None, &self.config));
         if stats.converged || !self.config.escalation.enabled {
             return (self.sys.expand(&u_free), stats, None);
         }
-        let (rescued, rep) = self.escalate_lane(&self.sys.k, &rhs, stats, false);
+        let (rescued, rep) =
+            self.escalate_lane(&self.sys.k, &rhs, stats, false, remaining_after(budget_ms, spent));
         match rescued {
             Some(x) => {
                 let st = rep.final_stats().unwrap_or(stats);
@@ -392,17 +577,19 @@ impl MeshSession {
 
     /// [`MeshSession::solve_reduced`] plus the escalation ladder on
     /// failure (`x0.is_some()` arms the cold-restart stage). Bitwise
-    /// `solve_reduced` when converged or with the policy off.
+    /// `solve_reduced` when converged or with the policy off. Always
+    /// unbudgeted: time steppers own their step budget, not the ladder.
     pub fn solve_reduced_resilient(
         &self,
         rhs: &[f64],
         x0: Option<&[f64]>,
     ) -> (Vec<f64>, SolveStats, Option<EscalationReport>) {
-        let (x, stats) = self.engine_ref().cg_warm(&self.sys.k, rhs, x0, &self.config);
+        let (x, stats, _spent) =
+            self.timed_attempt(|| self.engine_ref().cg_warm(&self.sys.k, rhs, x0, &self.config));
         if stats.converged || !self.config.escalation.enabled {
             return (x, stats, None);
         }
-        let (rescued, rep) = self.escalate_lane(&self.sys.k, rhs, stats, x0.is_some());
+        let (rescued, rep) = self.escalate_lane(&self.sys.k, rhs, stats, x0.is_some(), None);
         match rescued {
             Some(xr) => {
                 let st = rep.final_stats().unwrap_or(stats);
@@ -421,17 +608,44 @@ impl MeshSession {
         &self,
         rhs: &[f64],
     ) -> (Vec<f64>, Vec<SolveStats>, Vec<Option<EscalationReport>>) {
+        self.solve_load_batch_resilient_budgeted(rhs, None)
+    }
+
+    /// [`MeshSession::solve_load_batch_resilient`] with optional
+    /// per-lane deadline budgets in milliseconds (one slot per lane;
+    /// `None` slots are unbounded). The lockstep first attempt is
+    /// charged against every lane's budget; skipped rungs land in that
+    /// lane's report. `budgets: None` is bitwise the unbudgeted call.
+    pub fn solve_load_batch_resilient_budgeted(
+        &self,
+        rhs: &[f64],
+        budgets: Option<&[Option<f64>]>,
+    ) -> (Vec<f64>, Vec<SolveStats>, Vec<Option<EscalationReport>>) {
+        let ladder = self.config.escalation.enabled;
+        let t0 = if ladder { Some(Instant::now()) } else { None };
         let (mut u, mut stats) = self.solve_load_batch(rhs);
         let mut reports = vec![None; stats.len()];
-        if self.config.escalation.enabled {
+        if ladder {
+            let spent = t0.map_or(0.0, |t| t.elapsed().as_secs_f64() * 1e3);
+            // Lockstep advances every lane together, so one scalar lane
+            // iteration costs about batch_ms / (max iterations × lanes).
+            let lanes = stats.len();
+            let max_it = stats.iter().map(|s| s.iterations).max().unwrap_or(0);
+            if lanes > 0 && max_it > 0 {
+                self.record_cost_sample(spent / (max_it * lanes) as f64);
+            }
+            if let Some(b) = budgets {
+                assert_eq!(b.len(), stats.len(), "one budget slot per lane");
+            }
             let nf = self.n_free();
             for s in 0..stats.len() {
                 if stats[s].converged {
                     continue;
                 }
                 let lane = s * nf..(s + 1) * nf;
+                let left = remaining_after(budgets.and_then(|b| b[s]), spent);
                 let (rescued, rep) =
-                    self.escalate_lane(&self.sys.k, &rhs[lane.clone()], stats[s], false);
+                    self.escalate_lane(&self.sys.k, &rhs[lane.clone()], stats[s], false, left);
                 if let Some(x) = rescued {
                     stats[s] = rep.final_stats().unwrap_or(stats[s]);
                     u[lane].copy_from_slice(&x);
@@ -452,16 +666,42 @@ impl MeshSession {
         kbatch: &CsrBatch,
         f: &[f64],
     ) -> (ReducedBatch, Vec<f64>, Vec<SolveStats>, Vec<Option<EscalationReport>>) {
+        self.solve_varcoeff_batch_resilient_budgeted(kbatch, f, None)
+    }
+
+    /// [`MeshSession::solve_varcoeff_batch_resilient`] with optional
+    /// per-lane deadline budgets in milliseconds (one slot per lane;
+    /// `None` slots are unbounded). `budgets: None` is bitwise the
+    /// unbudgeted call.
+    pub fn solve_varcoeff_batch_resilient_budgeted(
+        &self,
+        kbatch: &CsrBatch,
+        f: &[f64],
+        budgets: Option<&[Option<f64>]>,
+    ) -> (ReducedBatch, Vec<f64>, Vec<SolveStats>, Vec<Option<EscalationReport>>) {
+        let ladder = self.config.escalation.enabled;
+        let t0 = if ladder { Some(Instant::now()) } else { None };
         let (red, mut u, mut stats) = self.solve_varcoeff_batch(kbatch, f);
         let mut reports = vec![None; stats.len()];
-        if self.config.escalation.enabled {
+        if ladder {
+            let spent = t0.map_or(0.0, |t| t.elapsed().as_secs_f64() * 1e3);
+            let lanes = stats.len();
+            let max_it = stats.iter().map(|s| s.iterations).max().unwrap_or(0);
+            if lanes > 0 && max_it > 0 {
+                self.record_cost_sample(spent / (max_it * lanes) as f64);
+            }
+            if let Some(b) = budgets {
+                assert_eq!(b.len(), stats.len(), "one budget slot per lane");
+            }
             let nf = red.n_free();
             for s in 0..stats.len() {
                 if stats[s].converged {
                     continue;
                 }
                 let ks = red.k.instance(s);
-                let (rescued, rep) = self.escalate_lane(&ks, red.rhs_of(s), stats[s], false);
+                let left = remaining_after(budgets.and_then(|b| b[s]), spent);
+                let (rescued, rep) =
+                    self.escalate_lane(&ks, red.rhs_of(s), stats[s], false, left);
                 if let Some(x) = rescued {
                     stats[s] = rep.final_stats().unwrap_or(stats[s]);
                     u[s * nf..(s + 1) * nf].copy_from_slice(&x);

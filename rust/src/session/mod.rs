@@ -74,7 +74,31 @@
 //! instance-major slice. With the policy off (the default) the resilient
 //! methods are bitwise their plain counterparts, so serving paths call
 //! them unconditionally.
+//!
+//! # Budget-aware escalation
+//!
+//! Each resilient entry point has a `*_budgeted` variant that accepts an
+//! optional milliseconds budget (derived by the coordinator from the
+//! request deadline). Every ladder rung carries a cost estimate from
+//! [`crate::solver::rung_cost_ms`], scaled by the session's calibrated
+//! milliseconds-per-iteration (an EWMA recorded from converged resilient
+//! solves, overridable via [`MeshSession::set_cost_ms_per_iter`]). Rungs
+//! whose estimate exceeds the remaining budget are skipped — recorded as
+//! [`crate::solver::SkippedRung`]s in the report — so a
+//! deadline-constrained request jumps straight to the cheapest viable
+//! rescue instead of burning its deadline on a hopeless one. With no
+//! budget (or an uncalibrated session, where every estimate is zero) the
+//! ladder runs exactly as before.
+//!
+//! # Health tracking
+//!
+//! The [`health`] submodule turns the ladder's *outcomes* into serving
+//! inputs: per-mesh EWMAs, failure streaks and rung statistics drive a
+//! three-state circuit breaker plus adaptive admission tightening in the
+//! coordinator. See [`health`] for the state machine; the session layer
+//! itself stays stateless about health.
 
 mod mesh_session;
+pub mod health;
 
 pub use mesh_session::MeshSession;

@@ -529,6 +529,20 @@ impl AmgHierarchy {
         assert_eq!(values.len(), fine.data.len(), "refill value length");
         fine.data.copy_from_slice(values);
         self.renumeric();
+        #[cfg(feature = "fault-inject")]
+        if crate::util::faults::fire(crate::util::faults::AMG_REFILL_POISON, 0, 0) {
+            // Corrupt one smoother entry AFTER renumeric (which would
+            // otherwise recompute it away); coarse-only hierarchies poison
+            // the coarse smoother and drop the exact LU so the corruption
+            // is actually exercised.
+            match self.levels.first_mut() {
+                Some(lev) => lev.inv_diag[0] = f64::NAN,
+                None => {
+                    self.coarse_inv_diag[0] = f64::NAN;
+                    self.lu = None;
+                }
+            }
+        }
     }
 
     /// The shared numeric pass of [`AmgHierarchy::build`] and

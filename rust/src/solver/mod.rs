@@ -253,6 +253,21 @@ pub enum EscalationStage {
     DirectLu,
 }
 
+impl EscalationStage {
+    /// Number of ladder rungs (array dimension for per-rung counters).
+    pub const COUNT: usize = 4;
+
+    /// Dense index in ladder order, for per-rung counter arrays.
+    pub fn index(self) -> usize {
+        match self {
+            EscalationStage::ColdRestart => 0,
+            EscalationStage::PrecondEscalation => 1,
+            EscalationStage::IterBump => 2,
+            EscalationStage::DirectLu => 3,
+        }
+    }
+}
+
 impl std::fmt::Display for EscalationStage {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let s = match self {
@@ -265,6 +280,43 @@ impl std::fmt::Display for EscalationStage {
     }
 }
 
+/// Iteration-equivalent charge for building the rescue AMG hierarchy in
+/// the preconditioner-escalation rung's cost estimate.
+const AMG_SETUP_ITER_EQUIV: f64 = 50.0;
+
+/// Worst-case cost estimate, in milliseconds, of running one escalation
+/// rung on an `n × n` reduced operator with `nnz` stored entries, given
+/// a calibrated per-Krylov-iteration cost `ms_per_iter` (the session's
+/// observed EWMA). Used by budget-aware escalation to skip rungs that
+/// cannot fit the remaining deadline; with an uncalibrated session
+/// (`ms_per_iter == 0`) every estimate is zero and nothing is skipped.
+///
+/// The Krylov rungs charge their full iteration budget (they are only
+/// ever reached after a failure, so the optimistic case is not the one
+/// that matters); the dense-LU rung converts its `n³/3` factorization
+/// flops into iteration equivalents via the `2·nnz` flops of the SpMV
+/// that dominates one calibrated iteration.
+pub fn rung_cost_ms(
+    stage: EscalationStage,
+    n: usize,
+    nnz: usize,
+    config: &SolverConfig,
+    ms_per_iter: f64,
+) -> f64 {
+    let iters = config.max_iter as f64;
+    match stage {
+        EscalationStage::ColdRestart => iters * ms_per_iter,
+        EscalationStage::PrecondEscalation => (AMG_SETUP_ITER_EQUIV + iters) * ms_per_iter,
+        EscalationStage::IterBump => {
+            iters * config.escalation.iter_bump.max(1) as f64 * ms_per_iter
+        }
+        EscalationStage::DirectLu => {
+            let n = n as f64;
+            n * n * n / (3.0 * nnz.max(1) as f64) * ms_per_iter
+        }
+    }
+}
+
 /// Outcome of one attempted ladder stage.
 #[derive(Clone, Copy, Debug)]
 pub struct StageAttempt {
@@ -272,14 +324,29 @@ pub struct StageAttempt {
     pub stats: SolveStats,
 }
 
+/// A ladder rung skipped by budget-aware escalation because its cost
+/// estimate did not fit the remaining deadline budget.
+#[derive(Clone, Copy, Debug)]
+pub struct SkippedRung {
+    /// The rung that was skipped.
+    pub stage: EscalationStage,
+    /// Its estimated cost (see [`rung_cost_ms`]) in milliseconds.
+    pub est_ms: f64,
+    /// Budget that was left when the skip decision was made.
+    pub budget_ms: f64,
+}
+
 /// Per-lane accounting of an escalation run: the original failure, every
-/// stage attempted, and which stage (if any) resolved the lane.
+/// stage attempted, rungs skipped as unaffordable, and which stage (if
+/// any) resolved the lane.
 #[derive(Clone, Debug, Default)]
 pub struct EscalationReport {
     /// Stats of the original (failed) solve that triggered escalation.
     pub first: Option<SolveStats>,
     /// Stages attempted, in ladder order.
     pub attempts: Vec<StageAttempt>,
+    /// Rungs skipped because their cost estimate exceeded the budget.
+    pub skipped: Vec<SkippedRung>,
     /// The stage whose solve succeeded, or `None` if the ladder was
     /// exhausted without recovering the lane.
     pub resolved_by: Option<EscalationStage>,

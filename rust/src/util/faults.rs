@@ -23,6 +23,12 @@
 //!   (lane = linear tile work index).
 //! * [`SERVER_STALL`] — sleep at the top of a coordinator drain cycle
 //!   ([`Fault::delay_ms`]) to make deadline expiry deterministic.
+//! * [`CONDENSE_POISON`] — corrupt the condensed operator during a
+//!   [`CondensePlan::reapply_into`](crate::bc::CondensePlan::reapply_into)
+//!   refill (the chronic-failure driver for circuit-breaker tests).
+//! * [`AMG_REFILL_POISON`] — corrupt one smoother entry during an AMG
+//!   hierarchy refill (the V-cycle's non-finite guard must degrade
+//!   gracefully; a clean refill heals it).
 //!
 //! The registry is process-global; tests that arm faults serialize
 //! themselves with [`exclusive`] and disarm via [`reset`] (or rely on
@@ -44,6 +50,11 @@ pub const AMG_POISON: &str = "amg.poison_sweep";
 pub const ASSEMBLY_TILE_PANIC: &str = "assembly.tile_panic";
 /// Failpoint: stall a coordinator drain cycle for [`Fault::delay_ms`].
 pub const SERVER_STALL: &str = "server.stall_drain";
+/// Failpoint: corrupt the condensed operator during a `reapply_into`
+/// refill (NaN in the reduced matrix).
+pub const CONDENSE_POISON: &str = "condense.poison_refill";
+/// Failpoint: corrupt one smoother entry during an AMG hierarchy refill.
+pub const AMG_REFILL_POISON: &str = "amg.poison_refill";
 
 /// When an armed failpoint fires. Every field is a filter; `None`/`0`
 /// means "any". Defaults (via [`Fault::default`]) fire on every query.

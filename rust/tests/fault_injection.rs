@@ -14,6 +14,8 @@
 
 use std::time::{Duration, Instant};
 
+use tensor_galerkin::assembly::{AssemblyContext, BilinearForm, Coefficient};
+use tensor_galerkin::bc::DirichletBc;
 use tensor_galerkin::coordinator::{BatchServer, BatchSolver, SolveError, SolveRequest};
 use tensor_galerkin::mesh::structured::unit_square_tri;
 use tensor_galerkin::session::MeshSession;
@@ -202,4 +204,81 @@ fn server_stall_makes_deadline_expire() {
     );
     let stats = server.stats().expect("worker alive");
     assert_eq!(stats.expired_requests, 1);
+}
+
+/// A poisoned condensation refill corrupts exactly one refill epoch: the
+/// next solve fails classified (`NonFinite`), and a clean refill on the
+/// same plan restores the solution bitwise — the plan itself carries no
+/// state the corruption could stick to.
+#[test]
+fn condense_poison_corrupts_refill_and_recovers() {
+    let _g = faults::exclusive();
+    faults::reset();
+    let mesh = unit_square_tri(8);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    let k = ctx.assemble_matrix(&BilinearForm::Diffusion { rho: Coefficient::Const(1.0) });
+    let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
+    let f = load(ctx.n_dofs(), 501);
+    let mut session = MeshSession::from_matrix(&k, &f, &bc, SolverConfig::default());
+    let (u_clean, st_clean) = session.solve_current(None);
+    assert!(st_clean.converged, "{st_clean:?}");
+
+    faults::arm(faults::CONDENSE_POISON, Fault::always().hits(1));
+    session.refill(&k.data, &f);
+    session.sync_engine();
+    faults::reset();
+    let (_, st_bad) = session.solve_current(None);
+    assert_eq!(st_bad.failure, FailureKind::NonFinite, "{st_bad:?}");
+
+    session.refill(&k.data, &f);
+    session.sync_engine();
+    let (u_healed, st_healed) = session.solve_current(None);
+    assert!(st_healed.converged, "{st_healed:?}");
+    assert_eq!(st_healed.iterations, st_clean.iterations);
+    assert_eq!(u_healed, u_clean, "clean refill must restore the solve bitwise");
+}
+
+/// A poisoned AMG hierarchy refill corrupts one smoother entry; the
+/// V-cycle's per-lane non-finite guard degrades that application to the
+/// identity, so the solve still converges — slower — and a clean refill
+/// restores preconditioned iteration counts and the solution bitwise.
+#[test]
+fn amg_refill_poison_is_repaired_by_the_vcycle_guard() {
+    let _g = faults::exclusive();
+    faults::reset();
+    // Large enough that the default AMG config builds at least one real
+    // level above the coarse solve (361 free > coarse_max).
+    let mesh = unit_square_tri(20);
+    let ctx = AssemblyContext::new(&mesh, 1);
+    let k = ctx.assemble_matrix(&BilinearForm::Diffusion { rho: Coefficient::Const(1.0) });
+    let bc = DirichletBc::homogeneous(mesh.boundary_nodes());
+    let f = load(ctx.n_dofs(), 502);
+    let cfg = SolverConfig { precond: PrecondKind::amg(), ..SolverConfig::default() };
+    let mut session = MeshSession::from_matrix(&k, &f, &bc, cfg);
+    let (u_clean, st_clean) = session.solve_current(None);
+    assert!(st_clean.converged, "{st_clean:?}");
+
+    faults::arm(faults::AMG_REFILL_POISON, Fault::always().hits(1));
+    session.refill(&k.data, &f);
+    session.sync_engine();
+    faults::reset();
+    let (u_guarded, st_guarded) = session.solve_current(None);
+    assert!(
+        st_guarded.converged,
+        "the V-cycle guard must keep the poisoned hierarchy solvable: {st_guarded:?}"
+    );
+    assert!(
+        st_guarded.iterations > st_clean.iterations,
+        "identity fallback must cost iterations (clean {}, poisoned {})",
+        st_clean.iterations,
+        st_guarded.iterations
+    );
+    assert!(u_guarded.iter().all(|v| v.is_finite()));
+
+    session.refill(&k.data, &f);
+    session.sync_engine();
+    let (u_healed, st_healed) = session.solve_current(None);
+    assert!(st_healed.converged, "{st_healed:?}");
+    assert_eq!(st_healed.iterations, st_clean.iterations);
+    assert_eq!(u_healed, u_clean, "clean refill must restore the solve bitwise");
 }

@@ -1,0 +1,479 @@
+//! Integration suite for mesh health tracking: the per-mesh circuit
+//! breaker (Closed → Open → HalfOpen), synchronous `Unhealthy` sheds
+//! that leave healthy meshes bitwise untouched, budget-aware escalation
+//! driven by request deadlines, adaptive admission tightening, and the
+//! default-off guarantee (no health config → the serving stack is
+//! bitwise the tracker-free one).
+//!
+//! Chronic failure is modeled deterministically: a starved iteration
+//! budget (`max_iter = 2`) fails every nonzero load the same way on
+//! every run, while a zero load converges at iteration 0 — the recovery
+//! probe. The breaker clock is the injected manual clock, advanced
+//! explicitly, so open windows and probes are wall-time independent.
+
+use std::time::{Duration, Instant};
+
+use tensor_galerkin::coordinator::{
+    BatchServer, BatchSolver, BreakerState, HealthConfig, SolveError, SolveRequest, DEFAULT_MESH,
+};
+use tensor_galerkin::mesh::structured::unit_square_tri;
+use tensor_galerkin::session::MeshSession;
+use tensor_galerkin::solver::{EscalationPolicy, EscalationStage, FailureKind, SolverConfig};
+use tensor_galerkin::util::rng::Rng;
+
+fn load(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+}
+
+/// Serialize against the global fault registry when this binary is built
+/// with `fault-inject`: a concurrently armed failpoint in another test
+/// of this binary must never leak into a clean run.
+#[cfg(feature = "fault-inject")]
+fn fault_guard() -> std::sync::MutexGuard<'static, ()> {
+    let g = tensor_galerkin::util::faults::exclusive();
+    tensor_galerkin::util::faults::reset();
+    g
+}
+
+/// A starved solver config: `max_iter = 2` deterministically fails every
+/// nonzero load while zero loads still converge at iteration 0.
+fn starved() -> SolverConfig {
+    SolverConfig { max_iter: 2, ..SolverConfig::default() }
+}
+
+/// The manual-clock breaker tuning used across these tests: first-failure
+/// EWMA response, streak trigger at 2, EWMA/tighten triggers parked out
+/// of reach unless a test opts in.
+fn breaker_cfg() -> HealthConfig {
+    HealthConfig {
+        alpha: 1.0,
+        min_observations: 1,
+        open_failure_rate: 2.0, // unreachable: isolate the streak trigger
+        open_streak: 2,
+        open_ms: 100,
+        tighten_threshold: 2.0, // unreachable: no adaptive tightening
+        manual_clock: true,
+        ..HealthConfig::breaker()
+    }
+}
+
+/// The full breaker lifecycle over the serving stack: chronic failures
+/// trip Open, an Open breaker sheds synchronously with a retry hint,
+/// and after the open window ONE probe group (a whole burst) is
+/// admitted; its success closes the breaker.
+#[test]
+fn breaker_opens_sheds_and_probe_group_closes() {
+    #[cfg(feature = "fault-inject")]
+    let _g = fault_guard();
+    let mesh = unit_square_tri(8);
+    let n = mesh.n_nodes();
+    let server = BatchServer::start(mesh, starved(), 8);
+    server.set_health_config(breaker_cfg());
+
+    for id in 0..2u64 {
+        let err = server
+            .submit(SolveRequest::new(id, load(n, 40 + id)))
+            .recv()
+            .unwrap()
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<SolveError>(),
+                Some(SolveError::Solver { kind: FailureKind::MaxIters, .. })
+            ),
+            "starved solve must fail classified: {err:#}"
+        );
+    }
+    assert_eq!(server.health(DEFAULT_MESH).unwrap().state, BreakerState::Open);
+
+    // Open: shed synchronously with a countdown hint, no queue slot.
+    let err = server.submit(SolveRequest::new(5, load(n, 45))).recv().unwrap().unwrap_err();
+    match err.downcast_ref::<SolveError>() {
+        Some(SolveError::Unhealthy { mesh_id, retry_after_ms, .. }) => {
+            assert_eq!(*mesh_id, DEFAULT_MESH);
+            assert!(*retry_after_ms <= 100, "hint within the open window");
+        }
+        other => panic!("open breaker must shed Unhealthy, got {other:?}"),
+    }
+
+    // After the open window a whole burst is admitted as ONE probe
+    // group; zero loads converge at iteration 0 and close the breaker.
+    server.advance_health_clock(100);
+    let outs: Vec<_> = server
+        .submit_many(vec![
+            SolveRequest::new(10, vec![0.0; n]),
+            SolveRequest::new(11, vec![0.0; n]),
+        ])
+        .into_iter()
+        .map(|rx| rx.recv().unwrap())
+        .collect();
+    for res in &outs {
+        assert!(res.is_ok(), "probe group must be admitted and served: {res:?}");
+    }
+    assert_eq!(server.health(DEFAULT_MESH).unwrap().state, BreakerState::Closed);
+
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.breaker_opens, 1, "{stats:?}");
+    assert_eq!(stats.breaker_half_opens, 1, "one probe admission: {stats:?}");
+    assert_eq!(stats.breaker_closes, 1, "{stats:?}");
+    assert_eq!(stats.shed_requests, 1, "{stats:?}");
+    assert_eq!(stats.failed_requests, 2, "sheds are not failures: {stats:?}");
+}
+
+/// Chronic *injected* failure (every CG solve breaks down) trips the
+/// breaker under the default solver config; once the fault is gone the
+/// post-window probe heals and closes it.
+#[cfg(feature = "fault-inject")]
+#[test]
+fn chronic_breakdown_trips_breaker_and_healed_probe_closes_it() {
+    use tensor_galerkin::util::faults::{self, Fault};
+    let _g = fault_guard();
+    let mesh = unit_square_tri(8);
+    let n = mesh.n_nodes();
+    let server = BatchServer::start(mesh, SolverConfig::default(), 8);
+    server.set_health_config(breaker_cfg());
+
+    faults::arm(faults::CG_BREAKDOWN, Fault::always().on_lanes(&[0]).at(1));
+    for id in 0..2u64 {
+        let err = server
+            .submit(SolveRequest::new(id, load(n, 70 + id)))
+            .recv()
+            .unwrap()
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<SolveError>(),
+                Some(SolveError::Solver { kind: FailureKind::Breakdown, .. })
+            ),
+            "injected breakdown must be classified: {err:#}"
+        );
+    }
+    faults::reset();
+    assert_eq!(server.health(DEFAULT_MESH).unwrap().state, BreakerState::Open);
+
+    // Still shedding even though the underlying fault is gone — the
+    // breaker only re-learns through a probe.
+    let err = server.submit(SolveRequest::new(5, load(n, 75))).recv().unwrap().unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<SolveError>(), Some(SolveError::Unhealthy { .. })),
+        "{err:#}"
+    );
+
+    server.advance_health_clock(100);
+    server.submit(SolveRequest::new(6, load(n, 76))).recv().unwrap().expect("healed probe");
+    assert_eq!(server.health(DEFAULT_MESH).unwrap().state, BreakerState::Closed);
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.breaker_opens, 1, "{stats:?}");
+    assert_eq!(stats.breaker_half_opens, 1, "{stats:?}");
+    assert_eq!(stats.breaker_closes, 1, "{stats:?}");
+    assert_eq!(stats.shed_requests, 1, "{stats:?}");
+}
+
+/// A sick mesh tripping its breaker must not perturb a healthy mesh
+/// served by the same worker: the healthy mesh's answers stay bitwise
+/// identical to a solo oracle, before, during and after the trip.
+#[test]
+fn healthy_mesh_is_bitwise_isolated_from_a_sick_neighbor() {
+    #[cfg(feature = "fault-inject")]
+    let _g = fault_guard();
+    let (small, big) = (unit_square_tri(6), unit_square_tri(16));
+    let f_s = load(small.n_nodes(), 11);
+    let f_b = load(big.n_nodes(), 12);
+    // Calibrate an iteration budget between the two meshes' needs: the
+    // small mesh converges, the big one is chronically starved.
+    let it_small = BatchSolver::new(&small, SolverConfig::default())
+        .solve_one(&SolveRequest::new(0, f_s.clone()))
+        .unwrap()
+        .iterations;
+    let it_big = BatchSolver::new(&big, SolverConfig::default())
+        .solve_one(&SolveRequest::new(0, f_b.clone()))
+        .unwrap()
+        .iterations;
+    assert!(it_big > it_small + 1, "meshes must need different budgets ({it_small} vs {it_big})");
+    let cfg = SolverConfig { max_iter: it_small + 1, ..SolverConfig::default() };
+
+    let server = BatchServer::start_multi(vec![(1, small.clone()), (2, big)], cfg, 8, 0);
+    server.set_health_config(breaker_cfg());
+    let oracle = BatchSolver::new(&small, cfg);
+
+    let mut small_answers = Vec::new();
+    for round in 0..2u64 {
+        let err = server
+            .submit(SolveRequest::on_mesh(100 + round, 2, f_b.clone()))
+            .recv()
+            .unwrap()
+            .unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<SolveError>(), Some(SolveError::Solver { .. })),
+            "{err:#}"
+        );
+        let resp = server
+            .submit(SolveRequest::on_mesh(round, 1, f_s.clone()))
+            .recv()
+            .unwrap()
+            .expect("healthy mesh must keep serving");
+        small_answers.push(resp);
+    }
+    assert_eq!(server.health(2).unwrap().state, BreakerState::Open);
+    assert_eq!(server.health(1).unwrap().state, BreakerState::Closed);
+
+    // The sick mesh sheds; the healthy one still serves, bitwise.
+    let err =
+        server.submit(SolveRequest::on_mesh(200, 2, f_b.clone())).recv().unwrap().unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<SolveError>(), Some(SolveError::Unhealthy { mesh_id: 2, .. })),
+        "{err:#}"
+    );
+    small_answers.push(
+        server
+            .submit(SolveRequest::on_mesh(2, 1, f_s.clone()))
+            .recv()
+            .unwrap()
+            .expect("healthy mesh unaffected by the neighbor's open breaker"),
+    );
+    let want = oracle.solve_one(&SolveRequest::new(0, f_s.clone())).unwrap();
+    for resp in &small_answers {
+        assert_eq!(resp.u, want.u, "healthy-mesh answer drifted (id {})", resp.id);
+        assert_eq!(resp.iterations, want.iterations);
+    }
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.shed_requests, 1, "only the sick mesh sheds: {stats:?}");
+    assert_eq!(stats.breaker_opens, 1, "{stats:?}");
+    assert_eq!(stats.failed_requests, 2, "{stats:?}");
+}
+
+/// Budget-aware escalation at the session level: with a calibrated cost
+/// model, a rung whose estimate exceeds the deadline budget is skipped
+/// (and recorded), the ladder jumps to an affordable rung, an exhausted
+/// budget skips everything, and no budget attempts the full ladder.
+#[test]
+fn budget_skips_unaffordable_rungs() {
+    #[cfg(feature = "fault-inject")]
+    let _g = fault_guard();
+    let mesh = unit_square_tri(8);
+    let pol = EscalationPolicy {
+        enabled: true,
+        cold_restart: false,
+        escalate_precond: false,
+        iter_bump: 10_000, // estimate: 2 × 10,000 × 1 ms — never affordable here
+        direct_fallback: true,
+        direct_max: 10_000,
+    };
+    let cfg = SolverConfig { max_iter: 2, escalation: pol, ..SolverConfig::default() };
+    let session = MeshSession::poisson(&mesh, cfg);
+    session.set_cost_ms_per_iter(1.0);
+    let f = load(session.n_full(), 31);
+
+    // 2,000 ms budget: IterBump (est 20,000 ms) is skipped, the dense
+    // fallback (est n³/3nnz ≈ 10² ms) fits and rescues.
+    let (_, st, rep) = session.solve_with_load_resilient_budgeted(&f, Some(2_000.0));
+    let rep = rep.expect("starved first attempt must produce a report");
+    assert!(st.converged, "{st:?}");
+    assert_eq!(rep.resolved_by, Some(EscalationStage::DirectLu));
+    assert_eq!(rep.skipped.len(), 1, "{:?}", rep.skipped);
+    assert_eq!(rep.skipped[0].stage, EscalationStage::IterBump);
+    assert!(rep.skipped[0].est_ms > rep.skipped[0].budget_ms, "{:?}", rep.skipped[0]);
+    assert!(rep.attempts.iter().all(|a| a.stage == EscalationStage::DirectLu));
+
+    // Exhausted budget: every rung is skipped, nothing is attempted.
+    let (_, st0, rep0) = session.solve_with_load_resilient_budgeted(&f, Some(0.0));
+    let rep0 = rep0.expect("report");
+    assert!(!st0.converged);
+    assert_eq!(rep0.resolved_by, None);
+    assert!(rep0.attempts.is_empty(), "{:?}", rep0.attempts);
+    assert_eq!(rep0.skipped.len(), 2, "{:?}", rep0.skipped);
+
+    // No budget: nothing is skipped; the bumped iteration budget
+    // resolves before the direct fallback is reached.
+    let (_, st_inf, rep_inf) = session.solve_with_load_resilient_budgeted(&f, None);
+    let rep_inf = rep_inf.expect("report");
+    assert!(st_inf.converged, "{st_inf:?}");
+    assert_eq!(rep_inf.resolved_by, Some(EscalationStage::IterBump));
+    assert!(rep_inf.skipped.is_empty(), "{:?}", rep_inf.skipped);
+}
+
+/// The same budget gate through the serving path: a request deadline
+/// becomes the ladder budget, the skip lands in the response's report,
+/// and the solver's skipped-rung counter feeds the coordinator stats.
+#[test]
+fn deadline_budgets_the_ladder_through_the_serving_path() {
+    #[cfg(feature = "fault-inject")]
+    let _g = fault_guard();
+    let mesh = unit_square_tri(8);
+    let pol = EscalationPolicy {
+        enabled: true,
+        cold_restart: false,
+        escalate_precond: false,
+        iter_bump: 10_000,
+        direct_fallback: true,
+        direct_max: 10_000,
+    };
+    let cfg = SolverConfig { max_iter: 2, escalation: pol, ..SolverConfig::default() };
+    let solver = BatchSolver::new(&mesh, cfg);
+    solver.session().set_cost_ms_per_iter(1.0);
+
+    // A 10 s deadline affords the dense fallback but not the 20,000 ms
+    // IterBump estimate (and leaves plenty of slack for CI jitter).
+    let req = SolveRequest::new(1, load(solver.n_dofs(), 32))
+        .with_deadline(Instant::now() + Duration::from_secs(10));
+    let resp = solver.solve_one(&req).expect("the affordable rung must rescue");
+    let rep = resp.escalation.expect("rescued response carries the report");
+    assert_eq!(rep.resolved_by, Some(EscalationStage::DirectLu));
+    assert!(
+        rep.skipped.iter().any(|s| s.stage == EscalationStage::IterBump),
+        "IterBump must be skipped as unaffordable: {:?}",
+        rep.skipped
+    );
+    assert_eq!(solver.n_skipped_rungs(), rep.skipped.len() as u64);
+}
+
+/// Adaptive load shedding: when sick traffic dominates, the effective
+/// admission bound tightens to `base / tighten_divisor`; recovery
+/// relaxes it back. Hysteresis counts the episode once.
+#[test]
+fn adaptive_shedding_tightens_and_relaxes_the_queue() {
+    #[cfg(feature = "fault-inject")]
+    let _g = fault_guard();
+    let mesh = unit_square_tri(8);
+    let n = mesh.n_nodes();
+    let server = BatchServer::start(mesh, starved(), 8);
+    server.set_max_queue(8);
+    server.set_health_config(HealthConfig {
+        alpha: 1.0,
+        min_observations: 1,
+        open_failure_rate: 2.0,
+        open_streak: 0, // breaker never opens: isolate adaptive shedding
+        tighten_threshold: 0.5,
+        tighten_divisor: 4,
+        manual_clock: true,
+        ..HealthConfig::breaker()
+    });
+
+    // Chronic failures drive the global sick-traffic EWMA to 1.
+    for id in 0..2u64 {
+        let err = server
+            .submit(SolveRequest::new(id, load(n, 80 + id)))
+            .recv()
+            .unwrap()
+            .unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<SolveError>(), Some(SolveError::Solver { .. })),
+            "{err:#}"
+        );
+    }
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.queue_tightenings, 1, "{stats:?}");
+    assert_eq!(stats.effective_max_queue, 2, "8 / divisor 4: {stats:?}");
+
+    // A 3-request burst no longer fits the tightened bound.
+    let outs: Vec<_> = server
+        .submit_many((0..3).map(|i| SolveRequest::new(10 + i, vec![0.0; n])).collect())
+        .into_iter()
+        .map(|rx| rx.recv().unwrap())
+        .collect();
+    for res in &outs {
+        let err = res.as_ref().expect_err("tightened bound must reject the burst");
+        assert!(
+            matches!(
+                err.downcast_ref::<SolveError>(),
+                Some(SolveError::Overloaded { max_queue: 2, .. })
+            ),
+            "{err:#}"
+        );
+    }
+
+    // One healthy outcome clears the sick EWMA; the bound relaxes and
+    // the same burst is admitted.
+    server
+        .submit(SolveRequest::new(20, vec![0.0; n]))
+        .recv()
+        .unwrap()
+        .expect("zero load converges");
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.effective_max_queue, 8, "{stats:?}");
+    assert_eq!(stats.queue_tightenings, 1, "one episode, one count: {stats:?}");
+    let out = server
+        .solve_all((0..3).map(|i| SolveRequest::new(30 + i, vec![0.0; n])).collect::<Vec<_>>())
+        .expect("relaxed bound admits the burst");
+    assert_eq!(out.len(), 3);
+}
+
+/// Default-off guard: a server that never saw a health config exposes no
+/// snapshots, zero health counters, and answers bitwise identical to a
+/// standalone `BatchSolver` oracle.
+#[test]
+fn disabled_health_is_inert_and_bitwise() {
+    #[cfg(feature = "fault-inject")]
+    let _g = fault_guard();
+    let mesh = unit_square_tri(8);
+    let oracle = BatchSolver::new(&mesh, SolverConfig::default());
+    let n = oracle.n_dofs();
+    let server = BatchServer::start(mesh, SolverConfig::default(), 8);
+    assert!(server.health(DEFAULT_MESH).is_none(), "no tracking without a config");
+
+    let reqs: Vec<_> = (0..4u64).map(|i| SolveRequest::new(i, load(n, 50 + i))).collect();
+    let out = server.solve_all(reqs.clone()).unwrap();
+    for (resp, req) in out.iter().zip(&reqs) {
+        let want = oracle.solve_one(req).unwrap();
+        assert_eq!(resp.u, want.u, "request {} drifted with health disabled", req.id);
+    }
+    assert!(server.health(DEFAULT_MESH).is_none());
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.shed_requests, 0, "{stats:?}");
+    assert_eq!(stats.breaker_opens, 0, "{stats:?}");
+    assert_eq!(stats.breaker_half_opens, 0, "{stats:?}");
+    assert_eq!(stats.breaker_closes, 0, "{stats:?}");
+    assert_eq!(stats.queue_tightenings, 0, "{stats:?}");
+    assert_eq!(stats.skipped_rungs, 0, "{stats:?}");
+    assert_eq!(stats.effective_max_queue, 0, "unbounded default: {stats:?}");
+}
+
+/// A deadline already passed at submission is answered synchronously:
+/// counted as expired AND failed, never drained, and — under a one-slot
+/// bound — not occupying the slot a live request needs.
+#[test]
+fn expired_at_submit_never_takes_a_queue_slot() {
+    #[cfg(feature = "fault-inject")]
+    let _g = fault_guard();
+    let mesh = unit_square_tri(8);
+    let n = mesh.n_nodes();
+    let server = BatchServer::start(mesh, SolverConfig::default(), 8);
+
+    let err = server
+        .submit(SolveRequest::new(1, load(n, 60)).with_deadline(Instant::now()))
+        .recv()
+        .unwrap()
+        .unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<SolveError>(), Some(SolveError::Expired { id: 1 })),
+        "{err:#}"
+    );
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.expired_requests, 1, "{stats:?}");
+    assert_eq!(stats.failed_requests, 1, "an expiry is a failed request: {stats:?}");
+    assert_eq!(stats.queued_requests, 0, "synchronous expiry never reaches the worker: {stats:?}");
+    assert_eq!(stats.queue_high_water, 0, "{stats:?}");
+
+    // Mixed burst under a one-slot bound: the expired request does not
+    // consume the slot, so the live one is admitted and served.
+    server.set_max_queue(1);
+    let outs: Vec<_> = server
+        .submit_many(vec![
+            SolveRequest::new(2, load(n, 61)).with_deadline(Instant::now()),
+            SolveRequest::new(3, load(n, 62)),
+        ])
+        .into_iter()
+        .map(|rx| rx.recv().unwrap())
+        .collect();
+    assert!(
+        matches!(
+            outs[0].as_ref().unwrap_err().downcast_ref::<SolveError>(),
+            Some(SolveError::Expired { id: 2 })
+        ),
+        "{:?}",
+        outs[0]
+    );
+    let resp = outs[1].as_ref().expect("live request must be admitted and served");
+    assert_eq!(resp.id, 3);
+}
