@@ -14,7 +14,7 @@ use std::time::{Duration, Instant};
 
 use tensor_galerkin::coordinator::batcher::{solve_unbatched, BatchSolver};
 use tensor_galerkin::coordinator::{
-    BatchServer, SolveError, SolveRequest, SolveResponse, VarCoeffRequest,
+    BatchServer, ShardConfig, SolveError, SolveRequest, SolveResponse, VarCoeffRequest,
 };
 use tensor_galerkin::mesh::structured::unit_cube_tet;
 use tensor_galerkin::solver::SolverConfig;
@@ -120,6 +120,73 @@ fn main() {
                 .count()
         },
     );
+    // --- Sharded serving arms: the same closed-loop burst regime over
+    // num_shards = 1/2/4 with stealing on, four meshes whose ids spread
+    // over every shard at s=4 under the stable-hash routing. Throughput
+    // scaling and per-request p50/p99 ride in the BENCH_coordinator.json
+    // meta below (closed-loop here, open-loop sustained load further down).
+    let shard_counts = args.get_usize_list("shards", &[1, 2, 4]);
+    let sh_n = args.get_usize("shard_n", (n / 2).max(4));
+    let sharded_mesh = unit_cube_tet(sh_n);
+    const SHARD_MESH_IDS: [u64; 4] = [6, 1, 2, 0];
+    let mut sharded_servers: Vec<(usize, BatchServer)> = Vec::new();
+    let mut sharded_meta: Vec<(String, f64)> = Vec::new();
+    for &s in &shard_counts {
+        let sh_server = BatchServer::start_sharded(
+            SHARD_MESH_IDS.iter().map(|&id| (id, sharded_mesh.clone())).collect(),
+            cfg,
+            s_served,
+            0,
+            ShardConfig { num_shards: s, steal: true },
+        );
+        // Warm every per-mesh state so the arms measure steady-state serving.
+        for &id in &SHARD_MESH_IDS {
+            let f = (0..sharded_mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            sh_server
+                .submit(SolveRequest::on_mesh(8000 + id, id, f))
+                .recv()
+                .expect("sharded server alive")
+                .expect("sharded warmup solve");
+        }
+        let sh_burst: Vec<SolveRequest> = (0..4 * s_served)
+            .map(|i| {
+                SolveRequest::on_mesh(
+                    i as u64,
+                    SHARD_MESH_IDS[i % 4],
+                    (0..sharded_mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+                )
+            })
+            .collect();
+        bench.bench(
+            &format!("sharded_burst/s{s}"),
+            &[
+                ("shards", s as f64),
+                ("batch", sh_burst.len() as f64),
+                ("n_dofs", sharded_mesh.n_nodes() as f64),
+            ],
+            || sh_server.solve_all(sh_burst.clone()).unwrap().len(),
+        );
+        // One timed pass for absolute throughput plus a closed-loop
+        // per-request latency distribution.
+        let t0 = Instant::now();
+        let mut sh_lat: Vec<f64> = Vec::with_capacity(sh_burst.len());
+        for rx in sh_server.submit_many(sh_burst.clone()) {
+            rx.recv().expect("sharded server alive").expect("sharded latency probe");
+            sh_lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let reqps = sh_lat.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        sh_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let spct = |p: f64| sh_lat[((sh_lat.len() - 1) as f64 * p).round() as usize];
+        println!(
+            "sharded s={s}: {reqps:.0} req/s closed-loop, p50 {:.2} ms, p99 {:.2} ms",
+            spct(0.5),
+            spct(0.99)
+        );
+        sharded_meta.push((format!("sharded_s{s}_reqps"), reqps));
+        sharded_meta.push((format!("sharded_s{s}_p50_ms"), spct(0.5)));
+        sharded_meta.push((format!("sharded_s{s}_p99_ms"), spct(0.99)));
+        sharded_servers.push((s, sh_server));
+    }
     bench.finish();
 
     // --- Serving SLO smoke: per-request latency distribution under the
@@ -278,24 +345,107 @@ fn main() {
         open_lat.len()
     );
 
+    // --- Open-loop sustained load over the sharded servers: the same
+    // fixed-rate deterministic schedule, arrivals round-robin over the
+    // four meshes so every shard sees traffic. Records served p50/p99 and
+    // loss counters per shard count.
+    for (s, sh_server) in sharded_servers {
+        sh_server.set_max_queue(4 * s_served);
+        let mut inflight = VecDeque::new();
+        let mut olat: Vec<f64> = Vec::with_capacity(n_open);
+        let (mut oshed, mut oexpired, mut olost) = (0u64, 0u64, 0u64);
+        let t0 = Instant::now();
+        for i in 0..n_open {
+            let due = t0 + period * i as u32;
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+            let sent = Instant::now();
+            let rx = sh_server.submit(
+                SolveRequest::on_mesh(
+                    9800 + i as u64,
+                    SHARD_MESH_IDS[i % 4],
+                    (0..sharded_mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+                )
+                .with_deadline(sent + deadline),
+            );
+            inflight.push_back((sent, rx));
+            while let Some((sent, rx)) = inflight.pop_front() {
+                match rx.try_recv() {
+                    Ok(res) => {
+                        let (ok, sh, e, l) = classify(&res);
+                        if ok == 1 {
+                            olat.push(sent.elapsed().as_secs_f64() * 1e3);
+                        }
+                        oshed += sh;
+                        oexpired += e;
+                        olost += l;
+                    }
+                    Err(TryRecvError::Empty) => {
+                        inflight.push_front((sent, rx));
+                        break;
+                    }
+                    Err(TryRecvError::Disconnected) => olost += 1,
+                }
+            }
+        }
+        for (sent, rx) in inflight {
+            match rx.recv() {
+                Ok(res) => {
+                    let (ok, sh, e, l) = classify(&res);
+                    if ok == 1 {
+                        olat.push(sent.elapsed().as_secs_f64() * 1e3);
+                    }
+                    oshed += sh;
+                    oexpired += e;
+                    olost += l;
+                }
+                Err(_) => olost += 1,
+            }
+        }
+        olat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let sopct = |p: f64| {
+            if olat.is_empty() {
+                0.0
+            } else {
+                olat[((olat.len() - 1) as f64 * p).round() as usize]
+            }
+        };
+        println!(
+            "sharded open-loop s={s}: {} served (p50 {:.2} ms, p99 {:.2} ms), \
+             {oshed} shed, {oexpired} expired, {olost} lost",
+            olat.len(),
+            sopct(0.5),
+            sopct(0.99)
+        );
+        sharded_meta.push((format!("sharded_open_s{s}_p50_ms"), sopct(0.5)));
+        sharded_meta.push((format!("sharded_open_s{s}_p99_ms"), sopct(0.99)));
+        sharded_meta.push((format!("sharded_open_s{s}_shed"), oshed as f64));
+        sharded_meta.push((format!("sharded_open_s{s}_expired"), oexpired as f64));
+    }
+
+    let mut meta: Vec<(String, f64)> = vec![
+        ("batch".to_string(), s_served as f64),
+        ("n_dofs".to_string(), mesh.n_nodes() as f64),
+        ("latency_p50_ms".to_string(), lat_p50),
+        ("latency_p99_ms".to_string(), lat_p99),
+        ("expired_requests".to_string(), stats.expired_requests as f64),
+        ("rejected_requests".to_string(), stats.rejected_requests as f64),
+        ("openloop_requests".to_string(), n_open as f64),
+        ("openloop_rate_hz".to_string(), rate_hz as f64),
+        ("openloop_p50_ms".to_string(), open_p50),
+        ("openloop_p99_ms".to_string(), open_p99),
+        ("openloop_shed".to_string(), shed as f64),
+        ("openloop_expired".to_string(), expired as f64),
+    ];
+    meta.extend(sharded_meta);
+    let meta_refs: Vec<(&str, f64)> = meta.iter().map(|(k, v)| (k.as_str(), *v)).collect();
     if let Some(speedup) = bench.write_speedup_json(
         "BENCH_coordinator.json",
         &format!("served_sequential/b{s_served}"),
         &format!("served_burst/b{s_served}"),
-        &[
-            ("batch", s_served as f64),
-            ("n_dofs", mesh.n_nodes() as f64),
-            ("latency_p50_ms", lat_p50),
-            ("latency_p99_ms", lat_p99),
-            ("expired_requests", stats.expired_requests as f64),
-            ("rejected_requests", stats.rejected_requests as f64),
-            ("openloop_requests", n_open as f64),
-            ("openloop_rate_hz", rate_hz as f64),
-            ("openloop_p50_ms", open_p50),
-            ("openloop_p99_ms", open_p99),
-            ("openloop_shed", shed as f64),
-            ("openloop_expired", expired as f64),
-        ],
+        &meta_refs,
     ) {
         println!("served burst vs sequential client speedup: {speedup:.2}×");
     }

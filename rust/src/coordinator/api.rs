@@ -1,9 +1,10 @@
 //! Request/response types of the batch-solve service.
 //!
 //! Every request is tagged with the `mesh_id` of the topology it targets:
-//! one [`super::server::BatchServer`] instance serves many registered
-//! meshes, grouping drained requests by mesh key before dispatching each
-//! group as one batched solve. Single-mesh callers can ignore the tag —
+//! one [`super::router::BatchServer`] instance serves many registered
+//! meshes, routing each request to the shard that owns its mesh and
+//! grouping drained requests by mesh key before dispatching each group as
+//! one batched solve. Single-mesh callers can ignore the tag —
 //! [`DEFAULT_MESH`] is what `BatchServer::start` registers its mesh under
 //! and what the convenience constructors fill in.
 //!
@@ -211,10 +212,78 @@ impl std::fmt::Display for SolveError {
 
 impl std::error::Error for SolveError {}
 
-/// Aggregate serving counters of a [`super::server::BatchServer`] worker,
-/// summed over every per-mesh [`super::batcher::BatchSolver`] it has built
-/// (observability + the regression hook proving drained bursts really go
-/// through the batched pipelines).
+/// Sharding configuration of a [`super::router::BatchServer`]: how many
+/// shard workers drain the queue and whether idle shards may steal whole
+/// `(mesh_id, kind)` groups from busy siblings.
+///
+/// The default ([`ShardConfig::from_env`]) reads `TG_SHARDS` (worker
+/// count, default 1) and `TG_STEAL` (`0` disables stealing, default on),
+/// so CI can cross the whole test suite over shard counts without code
+/// changes. With `num_shards = 1` stealing is inert (there is no sibling
+/// to steal from) and every serving path is bitwise identical to the
+/// single-worker server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardConfig {
+    /// Shard worker count; clamped to `1..=MAX_SHARDS` at server start.
+    /// Shard workers submit into the one global `TG_THREADS` pool (they
+    /// never spawn solve threads of their own), so raising this does not
+    /// oversubscribe cores — see `util::threadpool`.
+    pub num_shards: usize,
+    /// Allow idle shards to steal whole `(mesh_id, kind)` groups from a
+    /// sibling's queue. Group granularity preserves batched dispatch and
+    /// per-request bitwise answers.
+    pub steal: bool,
+}
+
+impl ShardConfig {
+    /// One shard, no stealing — the single-worker server.
+    pub fn single() -> ShardConfig {
+        ShardConfig { num_shards: 1, steal: false }
+    }
+
+    /// Read `TG_SHARDS` / `TG_STEAL` from the environment (defaults:
+    /// 1 shard, stealing enabled once there are siblings).
+    pub fn from_env() -> ShardConfig {
+        let num_shards = std::env::var("TG_SHARDS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or(1);
+        let steal = std::env::var("TG_STEAL").map(|v| v.trim() != "0").unwrap_or(true);
+        ShardConfig { num_shards, steal }
+    }
+}
+
+impl Default for ShardConfig {
+    fn default() -> ShardConfig {
+        ShardConfig::from_env()
+    }
+}
+
+/// Instantaneous per-shard counters ([`super::router::BatchServer::per_shard`]):
+/// read directly from the shard handles without a queue round-trip, so
+/// depths are a live sample, not a post-drain snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Shard index in `0..num_shards`.
+    pub shard: usize,
+    /// Requests currently admitted to this shard but not yet drained.
+    pub queue_depth: u64,
+    /// High-water mark of this shard's queue depth since server start.
+    pub queue_high_water: u64,
+    /// Whole `(mesh_id, kind)` groups this shard stole from siblings.
+    pub stolen_groups: u64,
+    /// Requests for meshes homed on this shard that were shed by the
+    /// circuit breaker (at submit or at drain).
+    pub shed_requests: u64,
+}
+
+/// Aggregate serving counters of a [`super::router::BatchServer`], folded
+/// across its shard workers (monotone counters are summed; the queue
+/// high-water mark is the max over shards) and summed over every per-mesh
+/// [`super::batcher::BatchSolver`] each shard has built (observability +
+/// the regression hook proving drained bursts really go through the
+/// batched pipelines).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CoordinatorStats {
     /// Batched dispatches (one `solve_batch`/`solve_varcoeff_batch` call,
@@ -255,7 +324,9 @@ pub struct CoordinatorStats {
     /// Escalated lanes a ladder stage successfully recovered.
     pub rescued_lanes: u64,
     /// High-water mark of the admission-queue depth (requests submitted
-    /// but not yet drained) since server start.
+    /// but not yet drained) since server start. With multiple shards this
+    /// is the MAX over per-shard high-water marks — a depth, not a
+    /// throughput counter, so summing shards would overstate it.
     pub queue_high_water: u64,
     /// Requests shed synchronously ([`SolveError::Unhealthy`]) because
     /// their mesh's circuit breaker was Open.
@@ -273,6 +344,10 @@ pub struct CoordinatorStats {
     /// Episodes in which adaptive shedding tightened the admission bound
     /// (sick traffic dominated recent outcomes).
     pub queue_tightenings: u64,
+    /// Whole `(mesh_id, kind)` groups stolen by idle shards from busy
+    /// siblings, summed over shards. Always 0 with stealing off or
+    /// `num_shards = 1`.
+    pub stolen_groups: u64,
     /// The admission bound currently in force: the configured
     /// `set_max_queue` value, or its tightened fraction while adaptive
     /// shedding is active (`0` = unbounded).

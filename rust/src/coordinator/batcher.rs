@@ -16,7 +16,12 @@
 //! [`MeshSession`] (one owner for plan + engine + reduced system — see
 //! [`crate::session`]); `BatchSolver` is the thin serving adapter that
 //! adds request validation, batched load assembly, dispatch counters and
-//! per-request fault isolation on top. The `*_each` entry points return
+//! per-request fault isolation on top. In the sharded server each shard
+//! worker owns its own `mesh_id → Arc<BatchSolver>` registry slice
+//! (meshes are homed on one shard by the router's stable hash); the
+//! `Arc` is what lets an idle shard steal a hot mesh's group and serve
+//! it against a clone of the victim's built solver instead of
+//! rebuilding it. The `*_each` entry points return
 //! one `Result` per request — a malformed request (shape mismatch,
 //! non-positive coefficient, NaN load), an expired deadline, or an
 //! unconverged lane fails *that request only*; its healthy neighbors in

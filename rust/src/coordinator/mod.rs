@@ -2,25 +2,54 @@
 //! (batched dataset generation, Fig B.4; uncertainty quantification;
 //! operator-learning data pipelines).
 //!
-//! Architecture (vLLM-router-style continuous batching, multi-mesh):
-//! callers submit mesh-tagged [`SolveRequest`]s / [`VarCoeffRequest`]s to a
-//! [`BatchServer`]; a worker thread drains the queue, groups pending
-//! requests by `(mesh_id, request kind)`, and serves the groups
-//! round-robin in `max_batch`-sized chunks — each chunk ONE batched
-//! assembly + lockstep-CG call through the per-mesh [`BatchSolver`], with
-//! the scalar `solve_one` path reserved for singleton groups — so a large
-//! group cannot starve requests for other meshes within a drain cycle.
+//! Architecture (vLLM-router-style continuous batching, multi-mesh,
+//! sharded): callers submit mesh-tagged [`SolveRequest`]s /
+//! [`VarCoeffRequest`]s to a [`BatchServer`], which is split into a
+//! routing front-end ([`router`]) and N per-shard workers ([`shard`],
+//! `TG_SHARDS` / [`ShardConfig`]):
+//!
+//! * **Routing rule.** Every request is homed on
+//!   `shard = splitmix64(mesh_id) % num_shards` — a stable hash, so a
+//!   mesh's queue slot, solver state and LRU accounting always live on
+//!   one shard (mesh affinity), and a burst lands as at most one queue
+//!   entry per shard. All submit-time decisions (deadline expiry,
+//!   circuit-breaker sheds, bounded per-shard admission) are made by the
+//!   router before a request reaches any queue.
+//! * **Per-shard drain.** Each shard worker drains its own queue exactly
+//!   like the original single worker: pending requests are grouped by
+//!   `(mesh_id, request kind)` and the groups served round-robin in
+//!   `max_batch`-sized chunks — each chunk ONE batched assembly +
+//!   lockstep-CG call through the per-mesh [`BatchSolver`], with the
+//!   scalar `solve_one` path reserved for singleton groups — so a large
+//!   group cannot starve other meshes within a drain cycle.
+//! * **Steal granularity.** With stealing on (`TG_STEAL`, default), an
+//!   idle shard steals the hottest whole `(mesh_id, kind)` group from a
+//!   busy sibling's queue — never a partial group — so batched dispatch
+//!   and the bitwise lockstep semantics survive stealing unchanged; the
+//!   stolen mesh's built `Arc<BatchSolver>` is cloned from the victim's
+//!   registry, never rebuilt. With `num_shards = 1` and stealing off
+//!   ([`ShardConfig::single`]) every path is bitwise identical to the
+//!   single-worker server (pinned by `tests/sharded_server.rs`).
+//! * **Stats semantics.** [`CoordinatorStats`] stays the aggregate view:
+//!   per-shard partials are folded with monotone counters SUMMED and the
+//!   queue high-water mark MAXED over shards (a depth, not a flow);
+//!   [`BatchServer::per_shard`] exposes the live per-shard breakdown
+//!   ([`ShardStats`]: depth, high-water, steals, sheds) without a queue
+//!   round-trip.
+//!
 //! The per-mesh amortized state is a [`BatchSolver`]: a thin adapter over
 //! one [`crate::session::MeshSession`] (assembly context, condensation
 //! plan, preconditioner engine — Jacobi or AMG hierarchy — and persistent
 //! reduced-system scratch) plus the lazily built separable
-//! batched-assembly plan. Solvers live in a registry
+//! batched-assembly plan. Solvers live in shard-local registries
 //! `mesh_id → Arc<BatchSolver>`, built lazily on the first request for
-//! each registered topology and LRU-capped by `max_mesh_states`, so one
-//! server instance serves many mesh topologies with bounded resident
-//! state; the `Arc` is the seam for sharded multi-worker serving. New
-//! topologies can be registered over the running server
-//! ([`BatchServer::register_mesh`]) — the AMR-as-served-workload path.
+//! each registered topology and LRU-capped by `max_mesh_states` per
+//! shard, so one server instance serves many mesh topologies with
+//! bounded resident state. New topologies can be registered over the
+//! running server ([`BatchServer::register_mesh`]) — the
+//! AMR-as-served-workload path. Shard workers do not oversubscribe the
+//! element-parallel pool: all shards pipeline into the one global
+//! `TG_THREADS` pool (see [`crate::util::threadpool`]).
 //!
 //! Fault isolation: requests are shape-validated before they can reach the
 //! assembly kernels, an unconverged lane fails only its own reply
@@ -49,7 +78,9 @@
 //!   never reached the worker. Back off and resubmit.
 //! * [`SolveError::Unhealthy`] — the target mesh's circuit breaker was
 //!   Open; the request was shed synchronously with a `retry_after_ms`
-//!   hint and never occupied a queue slot.
+//!   hint and never occupied a queue slot — or it was already queued
+//!   when the breaker opened and was shed at drain time instead of
+//!   occupying a dispatch slot.
 //! * [`SolveError::Solver`] — the solve failed with a classified
 //!   [`crate::solver::FailureKind`] (max-iterations, stagnation,
 //!   breakdown, non-finite), including the escalation ladder's per-stage
@@ -72,8 +103,12 @@
 //! streaks and per-rung ladder statistics drive a Closed → Open →
 //! HalfOpen circuit breaker per mesh. A chronically failing mesh is shed
 //! *synchronously* at submission ([`SolveError::Unhealthy`]) without
-//! occupying queue slots or the drain budget of healthy meshes; after the
-//! open window one probe group tests recovery. A request deadline doubles
+//! occupying queue slots or the drain budget of healthy meshes, and
+//! stragglers already queued when the breaker opened are shed at drain
+//! time; after the open window one probe group tests recovery. The
+//! health registry is GLOBAL — shared by the router and every shard —
+//! so the one-probe-group-per-mesh invariant holds no matter how a
+//! mesh's traffic is spread across shards. A request deadline doubles
 //! as an escalation-ladder budget (rungs whose cost estimate does not fit
 //! the time remaining are skipped and recorded), and a globally sick
 //! request mix adaptively tightens the admission bound. Breaker
@@ -83,11 +118,13 @@
 
 pub mod api;
 pub mod batcher;
-pub mod server;
+pub mod router;
+mod shard;
 
 pub use crate::session::health::{BreakerState, HealthConfig, HealthSnapshot};
 pub use api::{
-    CoordinatorStats, SolveError, SolveRequest, SolveResponse, VarCoeffRequest, DEFAULT_MESH,
+    CoordinatorStats, ShardConfig, ShardStats, SolveError, SolveRequest, SolveResponse,
+    VarCoeffRequest, DEFAULT_MESH,
 };
 pub use batcher::BatchSolver;
-pub use server::BatchServer;
+pub use router::BatchServer;

@@ -1,0 +1,875 @@
+//! The routing front-end of the sharded multi-mesh batch server.
+//!
+//! [`BatchServer`] owns N shard workers ([`super::shard`]), each draining
+//! its own queue with the continuous-batching semantics of the original
+//! single-worker server. The router makes every submit-time decision —
+//! deadline expiry, circuit-breaker sheds, bounded admission — and then
+//! routes each surviving request to the shard that owns its mesh:
+//! `shard = splitmix64(mesh_id) % num_shards`, a stable hash, so a mesh's
+//! requests, registry state and LRU accounting always live on one shard
+//! (mesh affinity). A burst is split into at most one queue entry per
+//! shard, so each shard's slice of the burst still lands in a single
+//! drain cycle.
+//!
+//! Admission is bounded PER SHARD: the configured `max_queue` applies to
+//! each shard's in-flight depth, and a burst's per-shard slice is
+//! rejected all-or-nothing (the single-shard case is exactly the
+//! whole-burst semantics of the previous server). Health tracking is
+//! GLOBAL: one `HealthRegistry` serves router-side admission, drain-time
+//! straggler sheds and outcome observation on every shard, which makes
+//! the one-probe-group-per-mesh invariant hold across shards for free.
+//!
+//! Stats: [`BatchServer::stats`] broadcasts to every shard, folds the
+//! per-shard partials (monotone counters summed, queue high-water maxed
+//! — see [`fold_stats`]) and adds the router-owned globals; per-shard
+//! live counters are available without a round-trip via
+//! [`BatchServer::per_shard`]. With `num_shards = 1` and stealing off
+//! (`ShardConfig::single`) every path — submission, drain order,
+//! dispatch grouping, counters — is bitwise identical to the
+//! single-worker server, pinned by `tests/sharded_server.rs`.
+
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::mesh::Mesh;
+use crate::session::health::{AdmitDecision, BreakerState, HealthConfig, HealthSnapshot};
+use crate::solver::SolverConfig;
+
+use super::api::{
+    CoordinatorStats, ShardConfig, ShardStats, SolveError, SolveRequest, SolveResponse,
+    VarCoeffRequest, DEFAULT_MESH,
+};
+use super::shard::{Admission, HealthShared, Msg, Req, ShardHandle, ShardWorker};
+
+/// Hard cap on the shard worker count: shard workers are cheap (they
+/// pipeline into the one global solve pool rather than spawning threads),
+/// but an absurd `TG_SHARDS` must not spawn thousands of OS threads.
+pub const MAX_SHARDS: usize = 64;
+
+/// SplitMix64 finalizer: a stable, well-mixed `mesh_id → u64` hash, so
+/// shard assignment is reproducible across runs/processes (no RandomState)
+/// and sequential mesh ids spread evenly over shards.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Handle to the running sharded server.
+pub struct BatchServer {
+    shards: Arc<Vec<ShardHandle>>,
+    workers: Vec<JoinHandle<()>>,
+    max_batch: usize,
+    num_shards: usize,
+    steal: bool,
+    admission: Arc<Admission>,
+    health: Arc<HealthShared>,
+}
+
+/// Fold per-shard PARTIAL stats into one aggregate: every monotone
+/// counter is summed; `queue_high_water` — a depth, not a flow — is the
+/// MAX over shards (summing would report a depth no single queue ever
+/// reached). Router-owned fields (`effective_max_queue`, the health
+/// counters, submit-time expiry) are zero in the partials and filled in
+/// by the caller afterwards.
+pub(super) fn fold_stats(parts: &[CoordinatorStats]) -> CoordinatorStats {
+    let mut s = CoordinatorStats::default();
+    for p in parts {
+        s.batched_solves += p.batched_solves;
+        s.scalar_solves += p.scalar_solves;
+        s.failed_requests += p.failed_requests;
+        s.meshes_built += p.meshes_built;
+        s.evicted_states += p.evicted_states;
+        s.state_rebuilds += p.state_rebuilds;
+        s.queued_requests += p.queued_requests;
+        s.drain_cycles += p.drain_cycles;
+        s.dispatch_groups += p.dispatch_groups;
+        s.expired_requests += p.expired_requests;
+        s.rejected_requests += p.rejected_requests;
+        s.retried_lanes += p.retried_lanes;
+        s.rescued_lanes += p.rescued_lanes;
+        s.shed_requests += p.shed_requests;
+        s.breaker_opens += p.breaker_opens;
+        s.breaker_half_opens += p.breaker_half_opens;
+        s.breaker_closes += p.breaker_closes;
+        s.skipped_rungs += p.skipped_rungs;
+        s.queue_tightenings += p.queue_tightenings;
+        s.stolen_groups += p.stolen_groups;
+        s.queue_high_water = s.queue_high_water.max(p.queue_high_water);
+    }
+    s
+}
+
+impl BatchServer {
+    /// Spawn a single-mesh server (the mesh is registered under
+    /// [`DEFAULT_MESH`]); `max_batch` bounds the batched dispatch size.
+    /// Shard count and stealing come from the environment
+    /// ([`ShardConfig::from_env`]: `TG_SHARDS` / `TG_STEAL`).
+    pub fn start(mesh: Mesh, config: SolverConfig, max_batch: usize) -> BatchServer {
+        BatchServer::start_multi(vec![(DEFAULT_MESH, mesh)], config, max_batch, 0)
+    }
+
+    /// Spawn a server over many registered mesh topologies. Per-mesh
+    /// solver state is built lazily on the first request tagged with each
+    /// `mesh_id`; `max_mesh_states` caps how many built states stay
+    /// resident PER SHARD (LRU eviction; 0 = unbounded). Shard count and
+    /// stealing come from the environment ([`ShardConfig::from_env`]).
+    pub fn start_multi(
+        meshes: Vec<(u64, Mesh)>,
+        config: SolverConfig,
+        max_batch: usize,
+        max_mesh_states: usize,
+    ) -> BatchServer {
+        BatchServer::start_sharded(meshes, config, max_batch, max_mesh_states, ShardConfig::from_env())
+    }
+
+    /// Spawn a server with an explicit [`ShardConfig`]. Each registered
+    /// mesh is homed on `splitmix64(mesh_id) % num_shards`; with
+    /// `num_shards = 1` and stealing off this is bitwise the
+    /// single-worker server.
+    pub fn start_sharded(
+        meshes: Vec<(u64, Mesh)>,
+        config: SolverConfig,
+        max_batch: usize,
+        max_mesh_states: usize,
+        shard_cfg: ShardConfig,
+    ) -> BatchServer {
+        let num_shards = shard_cfg.num_shards.clamp(1, MAX_SHARDS);
+        // One shard has no sibling to steal from; keep the flag honest.
+        let steal = shard_cfg.steal && num_shards > 1;
+        let shards: Arc<Vec<ShardHandle>> = Arc::new(
+            (0..num_shards).map(|_| ShardHandle::new(config, max_mesh_states)).collect(),
+        );
+        let admission = Arc::new(Admission::default());
+        let health = Arc::new(HealthShared::new());
+        for (mesh_id, mesh) in meshes {
+            let si = shard_of_n(mesh_id, num_shards);
+            shards[si].registry().register(mesh_id, mesh);
+        }
+        let workers = (0..num_shards)
+            .map(|idx| {
+                let w = ShardWorker::new(
+                    idx,
+                    Arc::clone(&shards),
+                    max_batch,
+                    steal,
+                    Arc::clone(&admission),
+                    Arc::clone(&health),
+                );
+                std::thread::Builder::new()
+                    .name(format!("tg-shard-{idx}"))
+                    .spawn(move || w.run())
+                    .expect("spawn shard worker")
+            })
+            .collect();
+        BatchServer {
+            shards,
+            workers,
+            max_batch,
+            num_shards,
+            steal,
+            admission,
+            health,
+        }
+    }
+
+    /// Max requests per batched dispatch (larger groups are served in
+    /// `max_batch`-sized chunks, bounding lockstep memory). Fixed at
+    /// start — the shard workers snapshot it.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Number of shard workers draining the server.
+    pub fn num_shards(&self) -> usize {
+        self.num_shards
+    }
+
+    /// Whether idle shards may steal groups from busy siblings.
+    pub fn steal_enabled(&self) -> bool {
+        self.steal
+    }
+
+    /// The shard that owns `mesh_id` (stable hash): its requests queue
+    /// there, its registry state lives there. Exposed so tests and
+    /// benchmarks can construct colliding or spread-out mesh id sets.
+    pub fn shard_of(&self, mesh_id: u64) -> usize {
+        shard_of_n(mesh_id, self.num_shards)
+    }
+
+    /// Bound the admission queue: a burst slice that would push a shard's
+    /// in-flight depth (submitted but not yet drained) past `n` is
+    /// rejected at submission with [`SolveError::Overloaded`] per request
+    /// — it never reaches the shard. The bound applies PER SHARD (with
+    /// one shard this is exactly the old whole-queue bound). `0` removes
+    /// the bound (the default). Setting the bound also resets any
+    /// adaptive tightening: `n` becomes both the base and the effective
+    /// bound until the next retune.
+    pub fn set_max_queue(&self, n: usize) {
+        self.admission.base_max_queue.store(n, Ordering::Relaxed);
+        self.admission.max_queue.store(n, Ordering::Relaxed);
+    }
+
+    /// Enable (or reconfigure) health tracking and the per-mesh circuit
+    /// breaker; `HealthConfig::disabled()` switches it back off. Resets
+    /// all tracked health state. While disabled (the default) every
+    /// serving path is bitwise identical to the tracker-free stack. The
+    /// registry is global — one breaker and one probe group per mesh, no
+    /// matter how many shards serve its traffic.
+    pub fn set_health_config(&self, cfg: HealthConfig) {
+        let enabled = cfg.enabled;
+        self.health.lock().reconfigure(cfg);
+        self.health.enabled.store(enabled, Ordering::Relaxed);
+    }
+
+    /// Per-mesh health snapshot: `None` while tracking is disabled or
+    /// before the first observed/shed request for `mesh_id`.
+    pub fn health(&self, mesh_id: u64) -> Option<HealthSnapshot> {
+        if !self.health.enabled.load(Ordering::Relaxed) {
+            return None;
+        }
+        self.health.lock().snapshot(mesh_id)
+    }
+
+    /// Advance the injected manual clock (tests; requires
+    /// `HealthConfig::manual_clock`). A no-op on the wall clock.
+    pub fn advance_health_clock(&self, ms: u64) {
+        self.health.lock().advance_clock(ms);
+    }
+
+    /// Register (or replace) a mesh topology on the running server — it
+    /// is homed on its hash shard. Synchronous: returns once the owning
+    /// shard has installed the mesh, so a subsequent request tagged with
+    /// `mesh_id` is guaranteed to find it. Replacing an id retires any
+    /// built solver state for the old topology (counted as an eviction).
+    pub fn register_mesh(&self, mesh_id: u64, mesh: Mesh) -> Result<()> {
+        let (tx, rx) = channel();
+        let si = self.shard_of(mesh_id);
+        self.shards[si]
+            .queue
+            .push(Msg::Register(mesh_id, Box::new(mesh), tx))
+            .map_err(|_| anyhow!("batch server worker is gone; mesh {mesh_id} not registered"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("batch server worker died before registering mesh {mesh_id}"))
+    }
+
+    /// Submit a fixed-operator request; returns the response receiver.
+    pub fn submit(&self, req: SolveRequest) -> Receiver<Result<SolveResponse>> {
+        self.submit_burst(vec![Req::Fixed(req)]).remove(0)
+    }
+
+    /// Submit a varcoeff (own-operator) request.
+    pub fn submit_varcoeff(&self, req: VarCoeffRequest) -> Receiver<Result<SolveResponse>> {
+        self.submit_burst(vec![Req::Var(req)]).remove(0)
+    }
+
+    /// Submit a burst as ONE queue entry per shard: each shard's slice of
+    /// the burst lands in a single drain cycle, so same-mesh bursts are
+    /// guaranteed to be served by batched dispatches (in
+    /// `max_batch`-sized chunks).
+    pub fn submit_many(&self, reqs: Vec<SolveRequest>) -> Vec<Receiver<Result<SolveResponse>>> {
+        self.submit_burst(reqs.into_iter().map(Req::Fixed).collect())
+    }
+
+    /// Varcoeff counterpart of [`BatchServer::submit_many`].
+    pub fn submit_many_varcoeff(
+        &self,
+        reqs: Vec<VarCoeffRequest>,
+    ) -> Vec<Receiver<Result<SolveResponse>>> {
+        self.submit_burst(reqs.into_iter().map(Req::Var).collect())
+    }
+
+    fn submit_burst(&self, reqs: Vec<Req>) -> Vec<Receiver<Result<SolveResponse>>> {
+        let adm = &self.admission;
+        let n = reqs.len();
+        // Synchronously decidable requests never take a queue slot. First:
+        // a deadline already passed at submission is an immediate Expired
+        // (the clock is read at most once, and only when a deadline is
+        // present at all).
+        let mut decisions: Vec<Option<SolveError>> = Vec::with_capacity(n);
+        let mut now: Option<Instant> = None;
+        for req in &reqs {
+            let expired = req
+                .deadline()
+                .is_some_and(|d| *now.get_or_insert_with(Instant::now) >= d);
+            if expired {
+                adm.expired_at_submit.fetch_add(1, Ordering::Relaxed);
+                decisions.push(Some(SolveError::Expired { id: req.id() }));
+            } else {
+                decisions.push(None);
+            }
+        }
+        // Second: circuit-breaker sheds. ONE admit decision per mesh per
+        // burst, so a HalfOpen mesh admits this burst's whole group as
+        // its single probe (one probe *group*, not one probe request) —
+        // the registry is global, so this holds across shards too.
+        let mut probe_meshes: Vec<u64> = Vec::new();
+        if self.health.enabled.load(Ordering::Relaxed) {
+            let mut reg = self.health.lock();
+            let mut memo: HashMap<u64, AdmitDecision> = HashMap::new();
+            let mut shed = 0u64;
+            for (req, slot) in reqs.iter().zip(decisions.iter_mut()) {
+                if slot.is_some() {
+                    continue;
+                }
+                let mesh_id = req.mesh_id();
+                let decision = *memo.entry(mesh_id).or_insert_with(|| {
+                    let d = reg.admit(mesh_id);
+                    let probing = d == AdmitDecision::Admit
+                        && reg
+                            .snapshot(mesh_id)
+                            .is_some_and(|s| s.state == BreakerState::HalfOpen);
+                    if probing {
+                        probe_meshes.push(mesh_id);
+                    }
+                    d
+                });
+                if let AdmitDecision::Shed { retry_after_ms } = decision {
+                    shed += 1;
+                    self.shards[self.shard_of(mesh_id)].shed.fetch_add(1, Ordering::Relaxed);
+                    *slot = Some(SolveError::Unhealthy {
+                        id: req.id(),
+                        mesh_id,
+                        retry_after_ms,
+                    });
+                }
+            }
+            if shed > 0 {
+                reg.note_shed(shed);
+            }
+        }
+        // Bounded admission, per home shard, for the undecided remainder:
+        // each shard's slice is admitted or rejected all-or-nothing (one
+        // shard ⇒ exactly the old whole-burst semantics).
+        let mut shard_k = vec![0usize; self.num_shards];
+        for (req, slot) in reqs.iter().zip(decisions.iter()) {
+            if slot.is_none() {
+                shard_k[self.shard_of(req.mesh_id())] += 1;
+            }
+        }
+        let max = adm.max_queue.load(Ordering::Relaxed);
+        let mut overloaded: Vec<Option<(usize, usize)>> = vec![None; self.num_shards];
+        let mut any_overloaded = false;
+        for (si, &k) in shard_k.iter().enumerate() {
+            if k == 0 {
+                continue;
+            }
+            let h = &self.shards[si];
+            let prev = h.depth.fetch_add(k, Ordering::Relaxed);
+            if max > 0 && prev + k > max {
+                // Shed this shard's slice without enqueueing (the worker
+                // never sees it), answering each request with a typed
+                // rejection the caller can back off on.
+                h.depth.fetch_sub(k, Ordering::Relaxed);
+                h.rejected.fetch_add(k as u64, Ordering::Relaxed);
+                overloaded[si] = Some((prev, max));
+                any_overloaded = true;
+            } else {
+                h.high_water.fetch_max((prev + k) as u64, Ordering::Relaxed);
+            }
+        }
+        // A rejected slice may have carried some meshes' HalfOpen probes:
+        // free the probe slot so the next burst can probe instead of
+        // waiting out the timeout.
+        if any_overloaded && !probe_meshes.is_empty() {
+            let mut reg = self.health.lock();
+            for &m in &probe_meshes {
+                if overloaded[self.shard_of(m)].is_some() {
+                    reg.cancel_probe(m);
+                }
+            }
+        }
+        let mut items: Vec<Vec<(Req, super::shard::Reply)>> =
+            (0..self.num_shards).map(|_| Vec::new()).collect();
+        let mut receivers = Vec::with_capacity(n);
+        for (req, decision) in reqs.into_iter().zip(decisions) {
+            let (reply_tx, reply_rx) = channel();
+            if let Some(err) = decision {
+                let _ = reply_tx.send(Err(err.into()));
+            } else {
+                let si = self.shard_of(req.mesh_id());
+                if let Some((prev, max)) = overloaded[si] {
+                    let err = SolveError::Overloaded {
+                        id: req.id(),
+                        queue_depth: prev,
+                        max_queue: max,
+                    };
+                    let _ = reply_tx.send(Err(err.into()));
+                } else {
+                    items[si].push((req, reply_tx));
+                }
+            }
+            receivers.push(reply_rx);
+        }
+        for (si, batch) in items.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let k = batch.len();
+            if let Err(Msg::Many(batch)) = self.shards[si].queue.push(Msg::Many(batch)) {
+                // The worker is gone (shutdown): answer immediately
+                // instead of leaving callers parked on `recv` forever.
+                self.shards[si].depth.fetch_sub(k, Ordering::Relaxed);
+                for (req, reply) in batch {
+                    let _ = reply.send(Err(anyhow!(
+                        "batch server worker is gone; request {} was not accepted",
+                        req.id()
+                    )));
+                }
+            }
+        }
+        receivers
+    }
+
+    /// Submit many and wait for all; any failed request fails the call.
+    pub fn solve_all(&self, reqs: Vec<SolveRequest>) -> Result<Vec<SolveResponse>> {
+        self.solve_all_each(reqs).into_iter().collect()
+    }
+
+    /// Submit many and wait for all, keeping per-request outcomes.
+    pub fn solve_all_each(&self, reqs: Vec<SolveRequest>) -> Vec<Result<SolveResponse>> {
+        Self::collect(self.submit_many(reqs))
+    }
+
+    /// Varcoeff counterpart of [`BatchServer::solve_all_each`].
+    pub fn solve_all_varcoeff_each(
+        &self,
+        reqs: Vec<VarCoeffRequest>,
+    ) -> Vec<Result<SolveResponse>> {
+        Self::collect(self.submit_many_varcoeff(reqs))
+    }
+
+    fn collect(receivers: Vec<Receiver<Result<SolveResponse>>>) -> Vec<Result<SolveResponse>> {
+        receivers
+            .into_iter()
+            .map(|rx| {
+                rx.recv()
+                    .unwrap_or_else(|_| Err(anyhow!("batch server dropped the reply channel")))
+            })
+            .collect()
+    }
+
+    /// Snapshot of the aggregate serving counters — a synchronous
+    /// round-trip through every shard's queue, answered only after each
+    /// shard has dispatched every request enqueued on it ahead of the
+    /// query (FIFO per shard), so a `submit_many` + `stats` sequence
+    /// observes the burst's dispatch. Per-shard partials are folded with
+    /// [`fold_stats`] (sums; high-water maxed), then the router adds the
+    /// globals it owns (submit-time expiry, rejection/steal counters,
+    /// health counters, the effective bound). `None` when a worker is
+    /// gone (shut down) — NOT the same as a fresh idle server's all-zero
+    /// counters.
+    pub fn stats(&self) -> Option<CoordinatorStats> {
+        let mut rxs = Vec::with_capacity(self.num_shards);
+        for h in self.shards.iter() {
+            let (tx, rx) = channel();
+            h.queue.push(Msg::Stats(tx)).ok()?;
+            rxs.push(rx);
+        }
+        let mut parts = Vec::with_capacity(self.num_shards);
+        for (si, rx) in rxs.into_iter().enumerate() {
+            let mut p = rx.recv().ok()?;
+            let h = &self.shards[si];
+            p.rejected_requests = h.rejected.load(Ordering::Relaxed);
+            p.queue_high_water = h.high_water.load(Ordering::Relaxed);
+            p.stolen_groups = h.stolen.load(Ordering::Relaxed);
+            parts.push(p);
+        }
+        let mut s = fold_stats(&parts);
+        // Submit-time expiries never reached a worker; fold them into
+        // both the expired and failed totals so "an expiry is a failed
+        // request" holds regardless of where it was detected.
+        let expired_at_submit = self.admission.expired_at_submit.load(Ordering::Relaxed);
+        s.failed_requests += expired_at_submit;
+        s.expired_requests += expired_at_submit;
+        s.effective_max_queue = self.admission.max_queue.load(Ordering::Relaxed) as u64;
+        {
+            let reg = self.health.lock();
+            s.shed_requests = reg.shed();
+            s.breaker_opens = reg.opens();
+            s.breaker_half_opens = reg.half_opens();
+            s.breaker_closes = reg.closes();
+            s.queue_tightenings = reg.tightenings();
+        }
+        Some(s)
+    }
+
+    /// Live per-shard counters (depth, high-water, steals, sheds) read
+    /// straight from the shard handles — no queue round-trip, so depths
+    /// are an instantaneous sample.
+    pub fn per_shard(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, h)| ShardStats {
+                shard: i,
+                queue_depth: h.depth.load(Ordering::Relaxed) as u64,
+                queue_high_water: h.high_water.load(Ordering::Relaxed),
+                stolen_groups: h.stolen.load(Ordering::Relaxed),
+                shed_requests: h.shed.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Stop all shard workers, flushing (batched) any pending requests.
+    /// Idempotent; also run by `Drop`.
+    pub fn shutdown(&mut self) {
+        for h in self.shards.iter() {
+            h.queue.close_and_shutdown();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // A submission racing the close may have landed behind the
+        // Shutdown message: answer those requests instead of leaving
+        // their callers parked on `recv` forever.
+        for h in self.shards.iter() {
+            for msg in h.queue.drain() {
+                if let Msg::Many(batch) = msg {
+                    h.depth.fetch_sub(batch.len(), Ordering::Relaxed);
+                    for (req, reply) in batch {
+                        let _ = reply.send(Err(anyhow!(
+                            "batch server worker is gone; request {} was not accepted",
+                            req.id()
+                        )));
+                    }
+                }
+                // Register acks and Stats senders are simply dropped:
+                // their receivers see a disconnect, not a hang.
+            }
+        }
+    }
+}
+
+/// `mesh_id → shard` for a given shard count (the routing rule).
+fn shard_of_n(mesh_id: u64, num_shards: usize) -> usize {
+    if num_shards <= 1 {
+        0
+    } else {
+        (splitmix64(mesh_id) % num_shards as u64) as usize
+    }
+}
+
+impl Drop for BatchServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::BatchSolver;
+    use crate::mesh::structured::unit_cube_tet;
+    use crate::util::rng::Rng;
+
+    /// Single shard, no stealing: the configuration whose scheduling
+    /// (drain cycles, LRU churn, chunk interleaving) the counter-pinning
+    /// tests below depend on.
+    fn single(
+        meshes: Vec<(u64, crate::mesh::Mesh)>,
+        max_batch: usize,
+        max_states: usize,
+    ) -> BatchServer {
+        BatchServer::start_sharded(
+            meshes,
+            SolverConfig::default(),
+            max_batch,
+            max_states,
+            ShardConfig::single(),
+        )
+    }
+
+    #[test]
+    fn fold_sums_monotone_counters_and_maxes_high_water() {
+        let a = CoordinatorStats {
+            batched_solves: 1,
+            scalar_solves: 2,
+            failed_requests: 3,
+            meshes_built: 4,
+            evicted_states: 5,
+            state_rebuilds: 6,
+            queued_requests: 7,
+            drain_cycles: 8,
+            dispatch_groups: 9,
+            expired_requests: 10,
+            rejected_requests: 11,
+            retried_lanes: 12,
+            rescued_lanes: 13,
+            queue_high_water: 40,
+            shed_requests: 14,
+            breaker_opens: 15,
+            breaker_half_opens: 16,
+            breaker_closes: 17,
+            skipped_rungs: 18,
+            queue_tightenings: 19,
+            stolen_groups: 20,
+            effective_max_queue: 0,
+        };
+        let b = CoordinatorStats {
+            batched_solves: 100,
+            scalar_solves: 100,
+            failed_requests: 100,
+            meshes_built: 100,
+            evicted_states: 100,
+            state_rebuilds: 100,
+            queued_requests: 100,
+            drain_cycles: 100,
+            dispatch_groups: 100,
+            expired_requests: 100,
+            rejected_requests: 100,
+            retried_lanes: 100,
+            rescued_lanes: 100,
+            queue_high_water: 25,
+            shed_requests: 100,
+            breaker_opens: 100,
+            breaker_half_opens: 100,
+            breaker_closes: 100,
+            skipped_rungs: 100,
+            queue_tightenings: 100,
+            stolen_groups: 100,
+            effective_max_queue: 0,
+        };
+        let s = fold_stats(&[a, b]);
+        assert_eq!(s.batched_solves, 101);
+        assert_eq!(s.scalar_solves, 102);
+        assert_eq!(s.failed_requests, 103);
+        assert_eq!(s.meshes_built, 104);
+        assert_eq!(s.evicted_states, 105);
+        assert_eq!(s.state_rebuilds, 106);
+        assert_eq!(s.queued_requests, 107);
+        assert_eq!(s.drain_cycles, 108);
+        assert_eq!(s.dispatch_groups, 109);
+        assert_eq!(s.expired_requests, 110);
+        assert_eq!(s.rejected_requests, 111);
+        assert_eq!(s.retried_lanes, 112);
+        assert_eq!(s.rescued_lanes, 113);
+        assert_eq!(s.shed_requests, 114);
+        assert_eq!(s.breaker_opens, 115);
+        assert_eq!(s.breaker_half_opens, 116);
+        assert_eq!(s.breaker_closes, 117);
+        assert_eq!(s.skipped_rungs, 118);
+        assert_eq!(s.queue_tightenings, 119);
+        assert_eq!(s.stolen_groups, 120);
+        // The one non-sum: a depth high-water mark folds as max.
+        assert_eq!(s.queue_high_water, 40, "high-water must be max, not sum");
+        // Router-owned: untouched by the fold.
+        assert_eq!(s.effective_max_queue, 0);
+    }
+
+    #[test]
+    fn routing_is_stable_and_in_range() {
+        let mesh = unit_cube_tet(2);
+        let server = BatchServer::start_sharded(
+            vec![(DEFAULT_MESH, mesh)],
+            SolverConfig::default(),
+            4,
+            0,
+            ShardConfig { num_shards: 4, steal: true },
+        );
+        assert_eq!(server.num_shards(), 4);
+        assert_eq!(server.per_shard().len(), 4);
+        let mut seen = [false; 4];
+        for id in 0..64u64 {
+            let s = server.shard_of(id);
+            assert!(s < 4);
+            assert_eq!(s, server.shard_of(id), "routing must be deterministic");
+            seen[s] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "64 sequential ids must hit every shard");
+    }
+
+    #[test]
+    fn server_answers_all_requests() {
+        let mesh = unit_cube_tet(3);
+        let n = mesh.n_nodes();
+        let server = BatchServer::start(mesh, SolverConfig::default(), 8);
+        let mut rng = Rng::new(2);
+        let reqs: Vec<_> = (0..10)
+            .map(|id| {
+                SolveRequest::new(id, (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect())
+            })
+            .collect();
+        let out = server.solve_all(reqs).unwrap();
+        assert_eq!(out.len(), 10);
+        let mut ids: Vec<u64> = out.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        assert!(out.iter().all(|r| r.rel_residual < 1e-8));
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let mesh = unit_cube_tet(2);
+        let n = mesh.n_nodes();
+        let server = BatchServer::start(mesh, SolverConfig::default(), 4);
+        let rx = server.submit(SolveRequest::new(7, vec![1.0; n]));
+        drop(server); // shutdown must still answer
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, 7);
+    }
+
+    #[test]
+    fn submit_after_shutdown_surfaces_error() {
+        let mesh = unit_cube_tet(2);
+        let n = mesh.n_nodes();
+        let mut server = BatchServer::start(mesh, SolverConfig::default(), 4);
+        server.shutdown();
+        let rx = server.submit(SolveRequest::new(3, vec![1.0; n]));
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("worker is gone"), "{err}");
+        // Burst submission surfaces the same condition per request.
+        let outs = server.solve_all_each(vec![SolveRequest::new(4, vec![1.0; n])]);
+        assert!(outs[0].is_err());
+        // Registration over a dead worker errors instead of hanging.
+        assert!(server.register_mesh(9, unit_cube_tet(2)).is_err());
+        // Stats over a dead worker is None, not a hang.
+        assert!(server.stats().is_none());
+    }
+
+    #[test]
+    fn lru_cap_evicts_and_rebuilds_states() {
+        // Two meshes, a one-state cap: alternating traffic must evict and
+        // rebuild, with every request still answered correctly. Pinned to
+        // one shard: the cap is per shard, so the two meshes must share a
+        // registry slice for the churn signature to be deterministic.
+        let (a, b) = (unit_cube_tet(2), unit_cube_tet(3));
+        let (na, nb) = (a.n_nodes(), b.n_nodes());
+        let server = single(vec![(1, a), (2, b)], 4, 1);
+        let mut answers = Vec::new();
+        for (round, (mesh_id, n)) in [(1u64, na), (2, nb), (1, na), (2, nb)].iter().enumerate() {
+            let rx = server.submit(SolveRequest::on_mesh(round as u64, *mesh_id, vec![1.0; *n]));
+            answers.push(rx.recv().unwrap().unwrap());
+        }
+        // Round-trip answers are mesh-consistent (u length = mesh DoFs).
+        assert_eq!(answers[0].u.len(), na);
+        assert_eq!(answers[1].u.len(), nb);
+        // Re-serving an evicted mesh gives the same solution bitwise (the
+        // rebuilt state is a pure function of mesh + config).
+        assert_eq!(answers[0].u, answers[2].u);
+        assert_eq!(answers[1].u, answers[3].u);
+        let stats = server.stats().expect("worker alive");
+        assert!(stats.evicted_states >= 2, "stats: {stats:?}");
+        assert!(stats.state_rebuilds >= 2, "stats: {stats:?}");
+        // One resident state at most, but dispatch counters stay monotone
+        // (retired counts folded in).
+        assert!(stats.meshes_built <= 1, "stats: {stats:?}");
+        assert_eq!(stats.scalar_solves, 4, "stats: {stats:?}");
+    }
+
+    #[test]
+    fn uncapped_registry_never_evicts() {
+        let (a, b) = (unit_cube_tet(2), unit_cube_tet(2));
+        let n = a.n_nodes();
+        let server =
+            BatchServer::start_multi(vec![(1, a), (2, b)], SolverConfig::default(), 4, 0);
+        for (i, mesh_id) in [1u64, 2, 1, 2].iter().enumerate() {
+            let rx = server.submit(SolveRequest::on_mesh(i as u64, *mesh_id, vec![1.0; n]));
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let stats = server.stats().expect("worker alive");
+        assert_eq!(stats.evicted_states, 0);
+        assert_eq!(stats.state_rebuilds, 0);
+        assert_eq!(stats.meshes_built, 2);
+    }
+
+    #[test]
+    fn unknown_mesh_id_is_answered_not_hung() {
+        let mesh = unit_cube_tet(2);
+        let n = mesh.n_nodes();
+        let server = BatchServer::start(mesh, SolverConfig::default(), 4);
+        let rx = server.submit(SolveRequest::on_mesh(1, 42, vec![1.0; n]));
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("no mesh registered"), "{err}");
+        // The worker is still alive and serving.
+        let ok = server.submit(SolveRequest::new(2, vec![1.0; n]));
+        assert!(ok.recv().unwrap().is_ok());
+        assert_eq!(server.stats().expect("worker alive").failed_requests, 1);
+    }
+
+    /// Starvation regression: a 12-request group and a singleton for a
+    /// second mesh land in one drain cycle with `max_batch = 4` and a
+    /// one-state registry cap. Round-robin chunking serves the singleton
+    /// after the large group's FIRST chunk, which is observable through
+    /// the LRU churn: the interleaving m1(4), m2(1), m1(4), m1(4) forces
+    /// an eviction of each state and a REBUILD of mesh 1's
+    /// (`state_rebuilds ≥ 1`); the old serve-each-group-fully order
+    /// (m1×3 chunks, then m2) never rebuilds anything. Pinned to one
+    /// shard with stealing off: the signature requires both meshes in
+    /// the same drain cycle of the same worker.
+    #[test]
+    fn large_group_cannot_starve_singleton() {
+        let (a, b) = (unit_cube_tet(3), unit_cube_tet(2));
+        let (na, nb) = (a.n_nodes(), b.n_nodes());
+        let server = single(vec![(1, a), (2, b)], 4, 1);
+        let mut rng = Rng::new(61);
+        let mut reqs: Vec<SolveRequest> = (0..12)
+            .map(|id| {
+                SolveRequest::on_mesh(
+                    id,
+                    1,
+                    (0..na).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+                )
+            })
+            .collect();
+        reqs.push(SolveRequest::on_mesh(100, 2, vec![1.0; nb]));
+        // One burst → one drain cycle; the server regroups by mesh.
+        let out = server.solve_all(reqs.clone()).unwrap();
+        assert_eq!(out.len(), 13);
+        assert_eq!(out[12].u.len(), nb, "singleton answered on its own mesh");
+        // Lane parity survives the mid-group rebuild: the rebuilt state is
+        // a pure function of mesh + config.
+        let oracle = BatchSolver::new(&unit_cube_tet(3), SolverConfig::default());
+        for (resp, req) in out[..12].iter().zip(&reqs[..12]) {
+            let want = oracle.solve_one(req).unwrap();
+            assert_eq!(resp.u, want.u, "request {} not bitwise", req.id);
+        }
+        let stats = server.stats().expect("worker alive");
+        // The fairness signature: the singleton ran between mesh-1 chunks.
+        assert!(stats.state_rebuilds >= 1, "singleton starved: {stats:?}");
+        assert!(stats.evicted_states >= 2, "stats: {stats:?}");
+        // 12 requests in 4-sized chunks (batched) + 1 singleton (scalar).
+        assert_eq!(stats.batched_solves, 3, "stats: {stats:?}");
+        assert_eq!(stats.scalar_solves, 1, "stats: {stats:?}");
+        // Drain telemetry: one non-empty cycle, 13 drained requests, two
+        // (mesh, kind) groups.
+        assert_eq!(stats.drain_cycles, 1, "stats: {stats:?}");
+        assert_eq!(stats.queued_requests, 13, "stats: {stats:?}");
+        assert_eq!(stats.dispatch_groups, 2, "stats: {stats:?}");
+    }
+
+    /// Dynamic registration: an unknown mesh id errors, then
+    /// `register_mesh` installs the topology over the running server and
+    /// the same request succeeds — matching a statically registered
+    /// oracle bitwise.
+    #[test]
+    fn unknown_mesh_then_register_then_solve() {
+        let a = unit_cube_tet(2);
+        let b = unit_cube_tet(3);
+        let nb = b.n_nodes();
+        let server = BatchServer::start_multi(vec![(1, a)], SolverConfig::default(), 4, 0);
+        let mut rng = Rng::new(67);
+        let req = SolveRequest::on_mesh(
+            5,
+            7,
+            (0..nb).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+        );
+        let err = server.submit(req.clone()).recv().unwrap().unwrap_err();
+        assert!(err.to_string().contains("no mesh registered"), "{err}");
+        server.register_mesh(7, b.clone()).unwrap();
+        let resp = server.submit(req.clone()).recv().unwrap().unwrap();
+        let oracle = BatchSolver::new(&b, SolverConfig::default());
+        let want = oracle.solve_one(&req).unwrap();
+        assert_eq!(resp.u, want.u, "registered-mesh solve not bitwise");
+        let stats = server.stats().expect("worker alive");
+        assert_eq!(stats.failed_requests, 1, "stats: {stats:?}");
+        assert_eq!(stats.meshes_built, 2, "stats: {stats:?}");
+    }
+}

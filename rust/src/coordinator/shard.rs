@@ -1,0 +1,1001 @@
+//! The per-shard worker of the sharded batch server.
+//!
+//! Each shard owns its slice of the `mesh_id → Arc<BatchSolver>` registry
+//! (meshes are homed on exactly one shard by the router's stable hash)
+//! and its own bounded queue, and drains it with the same continuous-
+//! batching semantics as the single-worker server: block for the first
+//! message, opportunistically drain up to `max_batch` more without
+//! blocking, group the drained requests by `(mesh_id, kind)`, and serve
+//! the groups round-robin in `max_batch`-sized chunks.
+//!
+//! Work stealing: when stealing is enabled an *idle* shard (own queue
+//! empty after a short park) scans its siblings' queues and steals the
+//! hottest still-queued `(mesh_id, kind)` group — always the WHOLE group,
+//! never a split, so a stolen burst is still served by batched dispatch
+//! and every lane stays bitwise identical to the scalar oracle. The thief
+//! serves the group against the victim's registry slice (the victim's
+//! `Arc<BatchSolver>` is cloned, not rebuilt), so per-mesh state —
+//! sessions, LRU accounting, dispatch counters — stays homed on one
+//! shard. Queue and registry locks are never held together across
+//! shards, and each serve path locks exactly one registry at a time, so
+//! there is no lock-order cycle.
+//!
+//! Threading: shard workers do not solve on threads of their own — every
+//! assembly/solve they dispatch lands in the one global `TG_THREADS`
+//! pool (`util::threadpool`), whose submission gate serializes
+//! concurrent top-level submitters. N shards therefore never
+//! oversubscribe the configured core budget; they overlap their
+//! per-request bookkeeping and queueing, and pipeline into the pool.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::mesh::Mesh;
+use crate::session::health::{HealthConfig, HealthRegistry, LaneOutcome};
+use crate::solver::SolverConfig;
+
+use super::api::{CoordinatorStats, SolveError, SolveRequest, SolveResponse, VarCoeffRequest};
+use super::batcher::BatchSolver;
+
+pub(super) type Reply = Sender<Result<SolveResponse>>;
+
+/// A queued request of either kind.
+pub(super) enum Req {
+    Fixed(SolveRequest),
+    Var(VarCoeffRequest),
+}
+
+/// Request kind discriminant: groups are homogeneous in `(mesh_id, kind)`
+/// and stealing moves whole groups, so the kind is part of the group key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub(super) enum ReqKind {
+    Fixed,
+    Var,
+}
+
+impl Req {
+    pub(super) fn id(&self) -> u64 {
+        match self {
+            Req::Fixed(r) => r.id,
+            Req::Var(r) => r.id,
+        }
+    }
+
+    pub(super) fn mesh_id(&self) -> u64 {
+        match self {
+            Req::Fixed(r) => r.mesh_id,
+            Req::Var(r) => r.mesh_id,
+        }
+    }
+
+    pub(super) fn deadline(&self) -> Option<Instant> {
+        match self {
+            Req::Fixed(r) => r.deadline,
+            Req::Var(r) => r.deadline,
+        }
+    }
+
+    fn kind(&self) -> ReqKind {
+        match self {
+            Req::Fixed(_) => ReqKind::Fixed,
+            Req::Var(_) => ReqKind::Var,
+        }
+    }
+}
+
+pub(super) enum Msg {
+    /// One or more requests submitted together: a burst for one shard
+    /// arrives as one queue entry, so the whole per-shard burst is
+    /// guaranteed to land in a single drain cycle.
+    Many(Vec<(Req, Reply)>),
+    /// Register (or replace) a mesh topology on this shard's registry
+    /// slice; acknowledged once the worker has installed it.
+    Register(u64, Box<Mesh>, Sender<()>),
+    /// Ask this shard for its PARTIAL stats (worker-local + registry
+    /// counters); the router folds the partials and adds the globals.
+    Stats(Sender<CoordinatorStats>),
+    Shutdown,
+}
+
+/// Admission bookkeeping shared between the router and all shards. The
+/// per-shard queue depth lives on each [`ShardHandle`]; only the bound
+/// itself (and submit-time expiry, which never reaches a shard) is
+/// global: the bound applies to EACH shard's depth, so `num_shards = 1`
+/// keeps the exact single-queue semantics.
+#[derive(Default)]
+pub(super) struct Admission {
+    /// Depth bound currently in force per shard (0 = unbounded, the
+    /// default). Adaptive shedding may hold this at a tightened fraction
+    /// of `base_max_queue` while sick traffic dominates.
+    pub(super) max_queue: AtomicUsize,
+    /// The caller-configured bound (`BatchServer::set_max_queue`) that
+    /// the tightened bound is derived from and relaxes back to.
+    pub(super) base_max_queue: AtomicUsize,
+    /// Requests whose deadline had already passed at submission —
+    /// answered `SolveError::Expired` synchronously, never enqueued.
+    /// Folded into both `expired_requests` and `failed_requests`.
+    pub(super) expired_at_submit: AtomicU64,
+}
+
+/// Health state shared between the router (synchronous breaker sheds)
+/// and every shard worker (outcome observation, drain-time sheds,
+/// adaptive retuning). ONE registry for the whole server — probe-group
+/// bookkeeping is per mesh, not per shard, so the one-probe-group
+/// invariant holds even when a sick mesh's traffic is served by a thief.
+pub(super) struct HealthShared {
+    pub(super) enabled: AtomicBool,
+    registry: Mutex<HealthRegistry>,
+}
+
+impl HealthShared {
+    pub(super) fn new() -> HealthShared {
+        HealthShared {
+            enabled: AtomicBool::new(false),
+            registry: Mutex::new(HealthRegistry::new(HealthConfig::disabled())),
+        }
+    }
+
+    /// Lock the registry, surviving a poisoned mutex (a panic while a
+    /// health call was in flight must not take the serving path down).
+    pub(super) fn lock(&self) -> MutexGuard<'_, HealthRegistry> {
+        self.registry.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// One shard's queue: a mutex-guarded deque + condvar instead of mpsc so
+/// that sibling shards can scan and extract whole groups (stealing needs
+/// multi-consumer access mpsc cannot give).
+pub(super) struct ShardQueue {
+    inner: Mutex<VecDeque<Msg>>,
+    ready: Condvar,
+    /// Set by shutdown: further submissions are refused (the caller
+    /// answers "worker is gone") while the internal Shutdown message
+    /// still goes through.
+    closed: AtomicBool,
+}
+
+impl ShardQueue {
+    fn new() -> ShardQueue {
+        ShardQueue {
+            inner: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, VecDeque<Msg>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Enqueue a message; `Err(msg)` once the queue is closed (shutdown
+    /// begun) so the submitter can answer instead of parking clients.
+    pub(super) fn push(&self, msg: Msg) -> std::result::Result<(), Msg> {
+        if self.closed.load(Ordering::Acquire) {
+            return Err(msg);
+        }
+        self.lock().push_back(msg);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Close the queue and enqueue the worker's Shutdown (bypassing the
+    /// closed check). Messages racing past the closed check may land
+    /// behind the Shutdown; the router drains and answers them after
+    /// joining the worker.
+    pub(super) fn close_and_shutdown(&self) {
+        self.closed.store(true, Ordering::Release);
+        self.lock().push_back(Msg::Shutdown);
+        self.ready.notify_one();
+    }
+
+    /// Drain everything still queued (post-join leftover cleanup).
+    pub(super) fn drain(&self) -> Vec<Msg> {
+        self.lock().drain(..).collect()
+    }
+}
+
+/// Shared per-shard state: the queue, live admission/steal counters read
+/// by `per_shard()` without a round-trip, and the shard's registry slice
+/// (behind a mutex so a thief can borrow a victim's built solvers).
+pub(super) struct ShardHandle {
+    pub(super) queue: ShardQueue,
+    /// Requests admitted to this shard but not yet drained.
+    pub(super) depth: AtomicUsize,
+    /// High-water mark of `depth` since server start.
+    pub(super) high_water: AtomicU64,
+    /// Requests overload-rejected at submission for this shard.
+    pub(super) rejected: AtomicU64,
+    /// Breaker sheds attributed to meshes homed on this shard (submit-
+    /// time and drain-time).
+    pub(super) shed: AtomicU64,
+    /// Whole groups THIS shard stole from siblings.
+    pub(super) stolen: AtomicU64,
+    registry: Mutex<Registry>,
+}
+
+impl ShardHandle {
+    pub(super) fn new(config: SolverConfig, max_states: usize) -> ShardHandle {
+        ShardHandle {
+            queue: ShardQueue::new(),
+            depth: AtomicUsize::new(0),
+            high_water: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            stolen: AtomicU64::new(0),
+            registry: Mutex::new(Registry::new(config, max_states)),
+        }
+    }
+
+    pub(super) fn registry(&self) -> MutexGuard<'_, Registry> {
+        self.registry.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// A registry slot: the built (or failed) per-mesh state plus its
+/// last-touch tick for LRU eviction. Built states sit behind an `Arc` so
+/// a thief shard can hold a group's solver across a serve without
+/// blocking registry mutation.
+struct RegistryEntry {
+    /// A failed build (panicking setup of a *registered* mesh) is memoized
+    /// too, so sustained traffic for a bad mesh pays the setup attempt
+    /// once, not per drain cycle (until the slot is evicted). Unregistered
+    /// keys never get a slot at all.
+    state: std::result::Result<Arc<BatchSolver>, String>,
+    last_used: u64,
+}
+
+/// One shard's slice of the mesh/solver registry: the meshes homed on
+/// this shard and their lazily built per-mesh states, LRU-capped at
+/// `max_states` (0 = unbounded; the cap is PER SHARD). Lives behind the
+/// shard handle's mutex so that work stealing can clone a victim's
+/// `Arc<BatchSolver>` instead of rebuilding it.
+pub(super) struct Registry {
+    meshes: HashMap<u64, Mesh>,
+    /// Lazily built per-mesh state.
+    states: HashMap<u64, RegistryEntry>,
+    config: SolverConfig,
+    max_states: usize,
+    /// Monotone access clock driving the LRU order.
+    tick: u64,
+    evictions: u64,
+    rebuilds: u64,
+    /// Keys that were evicted at least once — a rebuild of one of these
+    /// counts as registry churn (`state_rebuilds`).
+    evicted_keys: HashSet<u64>,
+    /// Dispatch counters of evicted solvers, folded in so the aggregate
+    /// stats stay monotone across evictions.
+    retired_batched: u64,
+    retired_scalar: u64,
+    /// Escalation-ladder counters of evicted solvers (same fold).
+    retired_retried: u64,
+    retired_rescued: u64,
+    /// Budget-skipped ladder rungs of evicted solvers (same fold).
+    retired_skipped: u64,
+}
+
+impl Registry {
+    fn new(config: SolverConfig, max_states: usize) -> Registry {
+        Registry {
+            meshes: HashMap::new(),
+            states: HashMap::new(),
+            config,
+            max_states,
+            tick: 0,
+            evictions: 0,
+            rebuilds: 0,
+            evicted_keys: HashSet::new(),
+            retired_batched: 0,
+            retired_scalar: 0,
+            retired_retried: 0,
+            retired_rescued: 0,
+            retired_skipped: 0,
+        }
+    }
+
+    /// Install (or replace) a mesh topology. Replacing a registered id
+    /// retires any built state for the old topology — counted as an
+    /// eviction, dispatch counters folded into the retired totals — so
+    /// the next request builds against the new mesh (the AMR
+    /// re-registration path).
+    pub(super) fn register(&mut self, mesh_id: u64, mesh: Mesh) {
+        if let Some(entry) = self.states.remove(&mesh_id) {
+            self.evictions += 1;
+            self.evicted_keys.insert(mesh_id);
+            if let Ok(solver) = entry.state {
+                self.retire(&solver);
+            }
+        }
+        self.meshes.insert(mesh_id, mesh);
+    }
+
+    /// Whether `mesh_id` is registered on this shard (independent of
+    /// whether its state is built).
+    fn contains_mesh(&self, mesh_id: u64) -> bool {
+        self.meshes.contains_key(&mesh_id)
+    }
+
+    /// Fold an evicted solver's counters into the retired totals so the
+    /// aggregate stats stay monotone across evictions.
+    fn retire(&mut self, solver: &BatchSolver) {
+        self.retired_batched += solver.n_batched_solves();
+        self.retired_scalar += solver.n_scalar_solves();
+        self.retired_retried += solver.n_retried_lanes();
+        self.retired_rescued += solver.n_rescued_lanes();
+        self.retired_skipped += solver.n_skipped_rungs();
+    }
+
+    /// Look up (or lazily build, memoizing success AND failure) the
+    /// amortized state for a mesh key, touching its LRU clock. When the
+    /// registry is at its cap, the least-recently-used slot is evicted
+    /// before the new build (its dispatch counters fold into the retired
+    /// totals so aggregate stats stay monotone).
+    fn solver_for(&mut self, mesh_id: u64) -> std::result::Result<Arc<BatchSolver>, String> {
+        self.tick += 1;
+        let tick = self.tick;
+        if !self.states.contains_key(&mesh_id) {
+            // Unregistered keys never occupy a registry slot: a hostile
+            // stream of bogus mesh_ids must not evict built states or grow
+            // the eviction bookkeeping (the error string is cheap to
+            // rebuild per request).
+            if !self.meshes.contains_key(&mesh_id) {
+                return Err(format!("no mesh registered under mesh_id {mesh_id}"));
+            }
+            if self.max_states > 0 && self.states.len() >= self.max_states {
+                // LRU victim: stalest tick, smallest key on (never-occurring
+                // within one shard) ties — fully deterministic.
+                if let Some((&victim, _)) =
+                    self.states.iter().min_by_key(|&(k, e)| (e.last_used, *k))
+                {
+                    if let Some(entry) = self.states.remove(&victim) {
+                        self.evictions += 1;
+                        self.evicted_keys.insert(victim);
+                        if let Ok(solver) = entry.state {
+                            self.retire(&solver);
+                        }
+                    }
+                }
+            }
+            if self.evicted_keys.contains(&mesh_id) {
+                self.rebuilds += 1;
+            }
+            let config = self.config;
+            let mesh = self.meshes.get(&mesh_id).expect("registration checked above");
+            let built =
+                catch_unwind(AssertUnwindSafe(|| Arc::new(BatchSolver::new(mesh, config))))
+                    .map_err(|p| {
+                        format!(
+                            "building state for mesh_id {mesh_id} panicked: {}",
+                            panic_msg(&*p)
+                        )
+                    });
+            self.states.insert(mesh_id, RegistryEntry { state: built, last_used: tick });
+        }
+        let entry = self.states.get_mut(&mesh_id).expect("slot just ensured");
+        entry.last_used = tick;
+        entry.state.as_ref().map(Arc::clone).map_err(|e| e.clone())
+    }
+
+    /// Fold this slice's registry counters into a (partial) stats value.
+    fn stats_into(&self, s: &mut CoordinatorStats) {
+        s.evicted_states += self.evictions;
+        s.state_rebuilds += self.rebuilds;
+        s.batched_solves += self.retired_batched;
+        s.scalar_solves += self.retired_scalar;
+        s.retried_lanes += self.retired_retried;
+        s.rescued_lanes += self.retired_rescued;
+        s.skipped_rungs += self.retired_skipped;
+        for entry in self.states.values() {
+            if let Ok(solver) = &entry.state {
+                s.meshes_built += 1;
+                s.batched_solves += solver.n_batched_solves();
+                s.scalar_solves += solver.n_scalar_solves();
+                s.retried_lanes += solver.n_retried_lanes();
+                s.rescued_lanes += solver.n_rescued_lanes();
+                s.skipped_rungs += solver.n_skipped_rungs();
+            }
+        }
+    }
+}
+
+/// One `(mesh_id, kind)` group's still-unserved requests within a drain
+/// cycle, consumed chunk by chunk by the round-robin scheduler.
+struct GroupQueue<R> {
+    mesh_id: u64,
+    items: Vec<(R, Reply)>,
+    /// Whether the group *arrived* as a singleton (scalar dispatch); a
+    /// trailing chunk of 1 carved from a larger group still dispatches
+    /// batched, keeping the batched/scalar counters an exact regression
+    /// signal.
+    singleton: bool,
+}
+
+/// A whole `(mesh_id, kind)` group extracted from a sibling's queue.
+struct Stolen {
+    /// The shard the group was stolen from — its registry slice homes the
+    /// mesh, so the thief serves against it.
+    victim: usize,
+    mesh_id: u64,
+    kind: ReqKind,
+    items: Vec<(Req, Reply)>,
+}
+
+/// Bucket mesh-homogeneous items by mesh key, preserving arrival order
+/// within each bucket (first-seen key order across buckets).
+fn group_by_mesh<R>(items: Vec<(R, Reply)>, mesh_id: fn(&R) -> u64) -> Vec<GroupQueue<R>> {
+    let mut groups: Vec<GroupQueue<R>> = Vec::new();
+    let mut index: HashMap<u64, usize> = HashMap::new();
+    for (req, reply) in items {
+        let key = mesh_id(&req);
+        let gi = *index.entry(key).or_insert_with(|| {
+            groups.push(GroupQueue {
+                mesh_id: key,
+                items: Vec::new(),
+                singleton: false,
+            });
+            groups.len() - 1
+        });
+        groups[gi].items.push((req, reply));
+    }
+    for g in &mut groups {
+        g.singleton = g.items.len() == 1;
+    }
+    groups
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+/// How long an idle steal-enabled shard parks on its own condvar before
+/// scanning siblings. Short enough that a hot mesh's backlog is picked up
+/// within a drain cycle; long enough that idle shards cost ~nothing.
+const STEAL_PARK: Duration = Duration::from_millis(1);
+
+/// The worker loop state of one shard.
+pub(super) struct ShardWorker {
+    pub(super) idx: usize,
+    pub(super) shards: Arc<Vec<ShardHandle>>,
+    pub(super) max_batch: usize,
+    pub(super) steal: bool,
+    pub(super) failed: u64,
+    /// Requests answered with `SolveError::Expired` — deadline passed
+    /// while queued, answered without solving.
+    pub(super) expired: u64,
+    /// Requests drained, summed over drain cycles (the queue-depth
+    /// integral: `queued_requests / drain_cycles` is the mean drained
+    /// batch size under load).
+    pub(super) queued_requests: u64,
+    /// Non-empty drain cycles (own + stolen) completed.
+    pub(super) drain_cycles: u64,
+    /// `(mesh_id, kind)` groups formed across all drain cycles.
+    pub(super) dispatch_groups: u64,
+    /// Stats queries seen in the current drain cycle — answered only
+    /// AFTER the cycle's dispatch, so a snapshot reflects every request
+    /// that was enqueued on THIS shard ahead of it (FIFO per shard).
+    pub(super) stats_waiters: Vec<Sender<CoordinatorStats>>,
+    pub(super) admission: Arc<Admission>,
+    pub(super) health: Arc<HealthShared>,
+}
+
+enum Popped {
+    Msg(Msg),
+    /// A stolen group was served inside the wait; loop again.
+    ServedStolen,
+}
+
+impl ShardWorker {
+    pub(super) fn new(
+        idx: usize,
+        shards: Arc<Vec<ShardHandle>>,
+        max_batch: usize,
+        steal: bool,
+        admission: Arc<Admission>,
+        health: Arc<HealthShared>,
+    ) -> ShardWorker {
+        ShardWorker {
+            idx,
+            shards,
+            max_batch,
+            steal,
+            failed: 0,
+            expired: 0,
+            queued_requests: 0,
+            drain_cycles: 0,
+            dispatch_groups: 0,
+            stats_waiters: Vec::new(),
+            admission,
+            health,
+        }
+    }
+
+    fn my(&self) -> &ShardHandle {
+        &self.shards[self.idx]
+    }
+
+    /// The drain loop: block for the first message (or steal while
+    /// idle), opportunistically drain more without blocking, dispatch.
+    pub(super) fn run(mut self) {
+        let mut pending: Vec<(Req, Reply)> = Vec::new();
+        loop {
+            let msg = match self.next_msg() {
+                Popped::Msg(m) => m,
+                Popped::ServedStolen => continue,
+            };
+            if !self.accept(msg, &mut pending) {
+                self.dispatch(std::mem::take(&mut pending));
+                self.flush_stats();
+                return;
+            }
+            while pending.len() < self.max_batch.max(1) {
+                let next = self.my().queue.lock().pop_front();
+                match next {
+                    Some(m) => {
+                        if !self.accept(m, &mut pending) {
+                            self.dispatch(std::mem::take(&mut pending));
+                            self.flush_stats();
+                            return;
+                        }
+                    }
+                    None => break,
+                }
+            }
+            self.dispatch(std::mem::take(&mut pending));
+            self.flush_stats();
+        }
+    }
+
+    /// Pop the next message from the own queue, blocking while empty.
+    /// With stealing enabled the block is a short park: each timeout the
+    /// shard scans its siblings and serves a stolen group in place.
+    fn next_msg(&mut self) -> Popped {
+        loop {
+            let mut q = self.my().queue.lock();
+            if let Some(m) = q.pop_front() {
+                return Popped::Msg(m);
+            }
+            if !self.steal {
+                while q.is_empty() {
+                    q = self
+                        .my()
+                        .queue
+                        .ready
+                        .wait(q)
+                        .unwrap_or_else(|e| e.into_inner());
+                }
+                continue;
+            }
+            let (guard, _) = self
+                .my()
+                .queue
+                .ready
+                .wait_timeout(q, STEAL_PARK)
+                .unwrap_or_else(|e| e.into_inner());
+            if !guard.is_empty() {
+                continue;
+            }
+            drop(guard);
+            if let Some(stolen) = self.try_steal() {
+                self.serve_stolen(stolen);
+                return Popped::ServedStolen;
+            }
+        }
+    }
+
+    /// Scan sibling queues (rotating from the next index for fairness)
+    /// and extract the hottest still-queued `(mesh_id, kind)` group —
+    /// the WHOLE group, merged across queued bursts, exactly what the
+    /// victim would have regrouped in one drain cycle. Control messages
+    /// (Register/Stats/Shutdown) are never touched or reordered.
+    fn try_steal(&self) -> Option<Stolen> {
+        let n = self.shards.len();
+        for off in 1..n {
+            let v = (self.idx + off) % n;
+            let mut q = self.shards[v].queue.lock();
+            // Tally queued groups in first-seen order.
+            let mut counts: Vec<((u64, ReqKind), usize)> = Vec::new();
+            for msg in q.iter() {
+                if let Msg::Many(items) = msg {
+                    for (req, _) in items {
+                        let key = (req.mesh_id(), req.kind());
+                        match counts.iter_mut().find(|(k, _)| *k == key) {
+                            Some((_, c)) => *c += 1,
+                            None => counts.push((key, 1)),
+                        }
+                    }
+                }
+            }
+            // Hottest group; first-seen wins ties (deterministic).
+            let mut best: Option<((u64, ReqKind), usize)> = None;
+            for &(key, c) in &counts {
+                let hotter = match best {
+                    Some((_, bc)) => c > bc,
+                    None => true,
+                };
+                if hotter {
+                    best = Some((key, c));
+                }
+            }
+            let Some(((mesh_id, kind), _)) = best else {
+                continue;
+            };
+            let mut items = Vec::new();
+            for msg in q.iter_mut() {
+                if let Msg::Many(list) = msg {
+                    let mut keep = Vec::with_capacity(list.len());
+                    for it in list.drain(..) {
+                        if it.0.mesh_id() == mesh_id && it.0.kind() == kind {
+                            items.push(it);
+                        } else {
+                            keep.push(it);
+                        }
+                    }
+                    *list = keep;
+                }
+            }
+            q.retain(|m| !matches!(m, Msg::Many(v) if v.is_empty()));
+            drop(q);
+            self.shards[v].depth.fetch_sub(items.len(), Ordering::Relaxed);
+            return Some(Stolen { victim: v, mesh_id, kind, items });
+        }
+        None
+    }
+
+    /// Serve a stolen group whole (in `max_batch`-sized chunks) against
+    /// the VICTIM's registry slice — the stolen mesh's solver is cloned
+    /// out of the victim's registry, never rebuilt on the thief.
+    fn serve_stolen(&mut self, s: Stolen) {
+        if s.items.is_empty() {
+            return;
+        }
+        self.my().stolen.fetch_add(1, Ordering::Relaxed);
+        self.drain_cycles += 1;
+        self.queued_requests += s.items.len() as u64;
+        self.dispatch_groups += 1;
+        let singleton = s.items.len() == 1;
+        match s.kind {
+            ReqKind::Fixed => {
+                let items: Vec<(SolveRequest, Reply)> = s
+                    .items
+                    .into_iter()
+                    .map(|(req, reply)| match req {
+                        Req::Fixed(r) => (r, reply),
+                        Req::Var(_) => unreachable!("kind-homogeneous group"),
+                    })
+                    .collect();
+                self.serve_group(
+                    s.victim,
+                    s.mesh_id,
+                    items,
+                    singleton,
+                    |r: &SolveRequest| r.id,
+                    BatchSolver::solve_one,
+                    BatchSolver::solve_batch_each,
+                );
+            }
+            ReqKind::Var => {
+                let items: Vec<(VarCoeffRequest, Reply)> = s
+                    .items
+                    .into_iter()
+                    .map(|(req, reply)| match req {
+                        Req::Var(r) => (r, reply),
+                        Req::Fixed(_) => unreachable!("kind-homogeneous group"),
+                    })
+                    .collect();
+                self.serve_group(
+                    s.victim,
+                    s.mesh_id,
+                    items,
+                    singleton,
+                    |r: &VarCoeffRequest| r.id,
+                    BatchSolver::solve_varcoeff_one,
+                    BatchSolver::solve_varcoeff_batch_each,
+                );
+            }
+        }
+        self.retune_admission();
+    }
+
+    /// Serve one whole group in `max_batch`-sized chunks (what the
+    /// round-robin scheduler does when it is the only non-empty group).
+    #[allow(clippy::too_many_arguments)]
+    fn serve_group<R>(
+        &mut self,
+        home: usize,
+        mesh_id: u64,
+        mut items: Vec<(R, Reply)>,
+        singleton: bool,
+        req_id: fn(&R) -> u64,
+        solve_single: fn(&BatchSolver, &R) -> Result<SolveResponse>,
+        solve_batch: fn(&BatchSolver, &[R]) -> Vec<Result<SolveResponse>>,
+    ) {
+        let max_batch = self.max_batch.max(1);
+        while !items.is_empty() {
+            let take = items.len().min(max_batch);
+            let rest = items.split_off(take);
+            let chunk = std::mem::replace(&mut items, rest);
+            self.serve_chunk(home, mesh_id, chunk, singleton, req_id, solve_single, solve_batch);
+        }
+    }
+
+    /// Returns `false` on shutdown.
+    fn accept(&mut self, msg: Msg, pending: &mut Vec<(Req, Reply)>) -> bool {
+        match msg {
+            Msg::Many(items) => pending.extend(items),
+            Msg::Register(mesh_id, mesh, ack) => {
+                self.my().registry().register(mesh_id, *mesh);
+                let _ = ack.send(());
+            }
+            Msg::Stats(tx) => self.stats_waiters.push(tx),
+            Msg::Shutdown => return false,
+        }
+        true
+    }
+
+    /// Answer the stats queries collected this cycle (post-dispatch)
+    /// with this shard's PARTIAL counters; the router folds partials
+    /// across shards and adds the router-owned globals (admission,
+    /// health, per-shard handle counters).
+    fn flush_stats(&mut self) {
+        if self.stats_waiters.is_empty() {
+            return;
+        }
+        let snapshot = self.stats();
+        for tx in self.stats_waiters.drain(..) {
+            let _ = tx.send(snapshot);
+        }
+    }
+
+    fn stats(&self) -> CoordinatorStats {
+        let mut s = CoordinatorStats {
+            failed_requests: self.failed,
+            queued_requests: self.queued_requests,
+            drain_cycles: self.drain_cycles,
+            dispatch_groups: self.dispatch_groups,
+            expired_requests: self.expired,
+            ..CoordinatorStats::default()
+        };
+        self.my().registry().stats_into(&mut s);
+        s
+    }
+
+    /// Group the drained queue by `(mesh_id, kind)` — arrival order is
+    /// preserved within each group — and serve the groups round-robin in
+    /// `max_batch`-sized chunks until all are drained: every group gets
+    /// one chunk per round, so a large group cannot starve the others
+    /// past its first chunk.
+    fn dispatch(&mut self, pending: Vec<(Req, Reply)>) {
+        #[cfg(feature = "fault-inject")]
+        if let Some(ms) = crate::util::faults::stall_ms(crate::util::faults::SERVER_STALL) {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+        self.my().depth.fetch_sub(pending.len(), Ordering::Relaxed);
+        if pending.is_empty() {
+            return;
+        }
+        self.drain_cycles += 1;
+        self.queued_requests += pending.len() as u64;
+        let mut fixed_items = Vec::new();
+        let mut var_items = Vec::new();
+        for (req, reply) in pending {
+            match req {
+                Req::Fixed(q) => fixed_items.push((q, reply)),
+                Req::Var(q) => var_items.push((q, reply)),
+            }
+        }
+        let mut fixed = group_by_mesh(fixed_items, |r| r.mesh_id);
+        let mut var = group_by_mesh(var_items, |r| r.mesh_id);
+        self.dispatch_groups += (fixed.len() + var.len()) as u64;
+        loop {
+            let served_fixed = self.serve_round(
+                &mut fixed,
+                |r: &SolveRequest| r.id,
+                BatchSolver::solve_one,
+                BatchSolver::solve_batch_each,
+            );
+            let served_var = self.serve_round(
+                &mut var,
+                |r: &VarCoeffRequest| r.id,
+                BatchSolver::solve_varcoeff_one,
+                BatchSolver::solve_varcoeff_batch_each,
+            );
+            if !served_fixed && !served_var {
+                break;
+            }
+        }
+        self.retune_admission();
+    }
+
+    /// After a drain cycle, retune the effective admission bound from the
+    /// global sick-traffic signal: while rescued/exhausted lanes dominate
+    /// recent outcomes the bound tightens to `base / tighten_divisor`
+    /// (floor 1), relaxing back to the configured base on recovery. A
+    /// no-op while health tracking is disabled or the base bound is 0
+    /// (unbounded). Signal, registry and bound are all global, so any
+    /// shard retuning is idempotent across shards.
+    fn retune_admission(&mut self) {
+        if !self.health.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let base = self.admission.base_max_queue.load(Ordering::Relaxed);
+        let mut reg = self.health.lock();
+        let tight = reg.update_tightened();
+        let cfg = reg.config();
+        let effective = if tight && base > 0 {
+            (base / cfg.tighten_divisor.max(1)).max(1)
+        } else {
+            base
+        };
+        self.admission.max_queue.store(effective, Ordering::Relaxed);
+    }
+
+    /// Feed one served outcome into the health registry: a clean solve is
+    /// `Ok`, a ladder-recovered one `Rescued`, a classified solver failure
+    /// (or an unclassifiable panic / state-build failure) `Exhausted`.
+    /// Validation and expiry answers say nothing about mesh health and
+    /// are not observed. A no-op while health tracking is disabled.
+    fn observe_health(&mut self, mesh_id: u64, res: &Result<SolveResponse>) {
+        if !self.health.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let (outcome, report) = match res {
+            Ok(resp) => match &resp.escalation {
+                Some(rep) => (LaneOutcome::Rescued, Some(rep)),
+                None => (LaneOutcome::Ok, None),
+            },
+            Err(e) => match e.downcast_ref::<SolveError>() {
+                Some(SolveError::Solver { escalation, .. }) => {
+                    (LaneOutcome::Exhausted, escalation.as_ref())
+                }
+                Some(
+                    SolveError::Invalid { .. }
+                    | SolveError::Expired { .. }
+                    | SolveError::Overloaded { .. }
+                    | SolveError::Unhealthy { .. },
+                ) => return,
+                // No typed error: a recovered panic or a failed state
+                // build — the mesh is not serving, count it against its
+                // health.
+                None => (LaneOutcome::Exhausted, None),
+            },
+        };
+        self.health.lock().observe(mesh_id, outcome, report);
+    }
+
+    /// One fairness round over this shard's own drained groups: take at
+    /// most one `max_batch`-sized chunk from every non-empty group, in
+    /// first-seen group order. Returns whether any work was served.
+    fn serve_round<R>(
+        &mut self,
+        groups: &mut [GroupQueue<R>],
+        req_id: fn(&R) -> u64,
+        solve_single: fn(&BatchSolver, &R) -> Result<SolveResponse>,
+        solve_batch: fn(&BatchSolver, &[R]) -> Vec<Result<SolveResponse>>,
+    ) -> bool {
+        let max_batch = self.max_batch.max(1);
+        let mut any = false;
+        let home = self.idx;
+        for g in groups.iter_mut() {
+            if g.items.is_empty() {
+                continue;
+            }
+            any = true;
+            let take = g.items.len().min(max_batch);
+            let chunk: Vec<(R, Reply)> = g.items.drain(..take).collect();
+            self.serve_chunk(home, g.mesh_id, chunk, g.singleton, req_id, solve_single, solve_batch);
+        }
+        any
+    }
+
+    /// Serve one chunk of a homogeneous `(mesh_id, kind)` group against
+    /// the registry slice of shard `home` (own dispatch: `home == idx`;
+    /// stolen group: the victim). The scalar path runs only for a true
+    /// singleton group; everything else goes through the batched
+    /// dispatch. A panic while solving answers the chunk's requests with
+    /// errors and keeps the worker alive.
+    ///
+    /// Drain-time breaker check: a chunk whose mesh breaker is (still)
+    /// Open — stragglers queued before the trip — is answered `Unhealthy`
+    /// here instead of occupying a dispatch slot, counted under the shed
+    /// counter like a submit-time shed (not a failure, not observed).
+    #[allow(clippy::too_many_arguments)]
+    fn serve_chunk<R>(
+        &mut self,
+        home: usize,
+        mesh_id: u64,
+        chunk: Vec<(R, Reply)>,
+        singleton: bool,
+        req_id: fn(&R) -> u64,
+        solve_single: fn(&BatchSolver, &R) -> Result<SolveResponse>,
+        solve_batch: fn(&BatchSolver, &[R]) -> Vec<Result<SolveResponse>>,
+    ) {
+        if self.health.enabled.load(Ordering::Relaxed) {
+            let retry = {
+                let mut reg = self.health.lock();
+                let retry = reg.shed_at_drain(mesh_id);
+                if retry.is_some() {
+                    reg.note_shed(chunk.len() as u64);
+                }
+                retry
+            };
+            if let Some(retry_after_ms) = retry {
+                self.shards[home].shed.fetch_add(chunk.len() as u64, Ordering::Relaxed);
+                for (req, reply) in chunk {
+                    let err = SolveError::Unhealthy {
+                        id: req_id(&req),
+                        mesh_id,
+                        retry_after_ms,
+                    };
+                    let _ = reply.send(Err(err.into()));
+                }
+                return;
+            }
+        }
+        let mut failed = 0u64;
+        let looked_up = {
+            let mut reg = self.shards[home].registry();
+            let registered = reg.contains_mesh(mesh_id);
+            (reg.solver_for(mesh_id), registered)
+        };
+        match looked_up {
+            (Err(msg), registered) => {
+                failed = chunk.len() as u64;
+                // A failed state build for a *registered* mesh counts
+                // against its health (it cannot serve); unregistered keys
+                // are caller errors, not mesh sickness, and must not grow
+                // the health registry.
+                for (req, reply) in chunk {
+                    let res = Err(anyhow!("request {}: {msg}", req_id(&req)));
+                    if registered {
+                        self.observe_health(mesh_id, &res);
+                    }
+                    let _ = reply.send(res);
+                }
+            }
+            (Ok(solver), _) => {
+                let solver = &*solver;
+                let (reqs, replies): (Vec<R>, Vec<Reply>) = chunk.into_iter().unzip();
+                let results = catch_unwind(AssertUnwindSafe(|| {
+                    if singleton {
+                        vec![solve_single(solver, &reqs[0])]
+                    } else {
+                        solve_batch(solver, &reqs)
+                    }
+                }))
+                .unwrap_or_else(|p| {
+                    let m = panic_msg(&*p);
+                    reqs.iter()
+                        .map(|r| {
+                            Err(anyhow!("solve panicked serving request {}: {m}", req_id(r)))
+                        })
+                        .collect()
+                });
+                for (res, reply) in results.into_iter().zip(replies) {
+                    if let Err(e) = &res {
+                        failed += 1;
+                        if matches!(
+                            e.downcast_ref::<SolveError>(),
+                            Some(SolveError::Expired { .. })
+                        ) {
+                            self.expired += 1;
+                        }
+                    }
+                    self.observe_health(mesh_id, &res);
+                    let _ = reply.send(res);
+                }
+            }
+        }
+        self.failed += failed;
+    }
+}

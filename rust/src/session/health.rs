@@ -15,8 +15,11 @@
 //!   re-opens a freshly closed breaker.
 //! - **Open** — requests are shed synchronously (the caller answers
 //!   `SolveError::Unhealthy` with a `retry_after_ms` hint) without
-//!   touching the drain budget of healthy meshes. After `open_ms` the
-//!   next admission becomes a probe.
+//!   touching the drain budget of healthy meshes, and stragglers that
+//!   were already queued when the breaker tripped are answered the same
+//!   way at drain ([`HealthRegistry::shed_at_drain`]) instead of
+//!   occupying dispatch slots. After `open_ms` the next admission
+//!   becomes a probe.
 //! - **HalfOpen** — exactly one probe group is admitted; everything else
 //!   sheds until the probe settles. A successful probe closes the
 //!   breaker; a failed one re-opens it. A probe that is never observed
@@ -306,6 +309,22 @@ impl MeshHealth {
         self.probe_inflight = false;
     }
 
+    /// Drain-time shed check: `Some(retry_after_ms)` while the breaker
+    /// is Open and the open window has not elapsed. No transition: an
+    /// Open-but-due mesh serves normally (its observations make no
+    /// transition in the Open state, and the next *submission* becomes
+    /// the probe), and a HalfOpen probe group is never drain-shed.
+    fn shed_at_drain(&self, now_ms: u64, cfg: &HealthConfig) -> Option<u64> {
+        if self.state != BreakerState::Open {
+            return None;
+        }
+        let due = self.opened_at_ms.saturating_add(cfg.open_ms);
+        if now_ms >= due {
+            return None;
+        }
+        Some(due - now_ms)
+    }
+
     fn snapshot(&self) -> HealthSnapshot {
         HealthSnapshot {
             state: self.state,
@@ -451,6 +470,23 @@ impl HealthRegistry {
             Transition::Closed => self.closes += 1,
             Transition::HalfOpened | Transition::None => {}
         }
+    }
+
+    /// Drain-time breaker check for stragglers already queued when the
+    /// breaker tripped: `Some(retry_after_ms)` when `mesh_id`'s breaker
+    /// is (still) Open with its open window not yet elapsed — the caller
+    /// answers the chunk `Unhealthy` without dispatching it, counting
+    /// the sheds via [`note_shed`](HealthRegistry::note_shed). Makes no
+    /// state transition, so HalfOpen probe groups always drain normally
+    /// and an Open-but-due mesh's stragglers are served (their
+    /// observations cannot transition an Open breaker; the next
+    /// submission becomes the probe).
+    pub fn shed_at_drain(&self, mesh_id: u64) -> Option<u64> {
+        if !self.cfg.enabled {
+            return None;
+        }
+        let mh = self.meshes.get(&mesh_id)?;
+        mh.shed_at_drain(self.clock.now_ms(), &self.cfg)
     }
 
     /// An admitted probe group was dropped before serving (e.g. the
@@ -642,7 +678,7 @@ mod tests {
     fn rung_counters_fold_from_reports() {
         use crate::solver::{FailureKind, SkippedRung, SolveStats, StageAttempt};
         let mut rep = EscalationReport {
-            first: Some(SolveStats::fail(3, 1.0, FailureKind::MaxIterations)),
+            first: Some(SolveStats::fail(3, 1.0, FailureKind::MaxIters)),
             ..EscalationReport::default()
         };
         rep.attempts.push(StageAttempt {

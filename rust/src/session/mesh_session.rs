@@ -8,10 +8,10 @@ use crate::assembly::{AssemblyContext, BilinearForm, Coefficient};
 use crate::bc::{condense, CondensePlan, DirichletBc, ReducedBatch, ReducedSystem};
 use crate::mesh::Mesh;
 use crate::solver::{
-    cg, cg_batch, cg_batch_warm, cg_batch_warm_with, rel_residual, rung_cost_ms, AmgBatch,
-    AmgConfig, AmgHierarchy, AmgPrecond, EscalationReport, EscalationStage, FailureKind,
+    cg, cg_batch, cg_batch_warm, cg_batch_warm_with, lu_cost_units, rel_residual, rung_cost_ms,
+    AmgBatch, AmgConfig, AmgHierarchy, AmgPrecond, EscalationReport, EscalationStage, FailureKind,
     JacobiPrecond, LockstepOp, MultiRhs, PrecondEngine, PrecondKind, SkippedRung, SolveStats,
-    SolverConfig, StageAttempt,
+    SolverConfig, StageAttempt, AMG_SETUP_ITER_EQUIV,
 };
 use crate::sparse::{Csr, CsrBatch, Dense};
 
@@ -87,8 +87,18 @@ pub struct MeshSession {
     /// uncalibrated, which zeroes every rung cost estimate and leaves
     /// the budget gate inert.
     cost_ms_per_iter: AtomicU64,
+    /// Per-rung observed rates (f64 bits), indexed by
+    /// [`EscalationStage::index`]; each rung's EWMA is in THAT rung's
+    /// work units (`ms/iteration` for the plain-CG rungs,
+    /// `ms/(setup-equivalent + iteration)` for the AMG rescue,
+    /// `ms/LU-unit` for dense LU — see [`lu_cost_units`]), so the
+    /// dense-LU and AMG-rescue gates stop inheriting the CG rate. `0.0`
+    /// slots are uncalibrated: their rung estimates stay zero and the
+    /// gate stays inert for them.
+    rung_rates: [AtomicU64; EscalationStage::COUNT],
     /// Explicit calibration override (tests, external calibrators);
-    /// `0.0` = none, fall back to the observed EWMA.
+    /// `0.0` = none, fall back to the observed EWMAs. A set override
+    /// pins EVERY rung's rate.
     cost_override: AtomicU64,
     config: SolverConfig,
 }
@@ -119,6 +129,7 @@ impl MeshSession {
             warm: None,
             rescue_amg: OnceLock::new(),
             cost_ms_per_iter: AtomicU64::new(0),
+            rung_rates: Default::default(),
             cost_override: AtomicU64::new(0),
             config,
         }
@@ -144,6 +155,7 @@ impl MeshSession {
             warm: None,
             rescue_amg: OnceLock::new(),
             cost_ms_per_iter: AtomicU64::new(0),
+            rung_rates: Default::default(),
             cost_override: AtomicU64::new(0),
             config,
         }
@@ -171,6 +183,7 @@ impl MeshSession {
             warm: None,
             rescue_amg: OnceLock::new(),
             cost_ms_per_iter: AtomicU64::new(0),
+            rung_rates: Default::default(),
             cost_override: AtomicU64::new(0),
             config,
         }
@@ -220,18 +233,20 @@ impl MeshSession {
     }
 
     /// Pin the ladder's cost model to an explicit milliseconds-per-
-    /// iteration value (tests, external calibrators). Non-positive or
+    /// work-unit value (tests, external calibrators) — the override pins
+    /// the base Krylov rate AND every per-rung rate. Non-positive or
     /// non-finite values clear the override, reverting to the observed
-    /// EWMA.
+    /// EWMAs.
     pub fn set_cost_ms_per_iter(&self, ms: f64) {
         let v = if ms.is_finite() && ms > 0.0 { ms } else { 0.0 };
         self.cost_override.store(v.to_bits(), Ordering::Relaxed);
     }
 
-    /// Effective milliseconds-per-iteration of the rung cost model: the
-    /// explicit override when set, otherwise the EWMA recorded from
-    /// converged resilient solves (`0.0` until the first calibration —
-    /// which makes every rung estimate zero, so nothing is skipped).
+    /// Effective milliseconds-per-iteration of the BASE Krylov cost
+    /// model: the explicit override when set, otherwise the EWMA
+    /// recorded from converged solves (`0.0` until the first calibration
+    /// — which makes every rung estimate zero, so nothing is skipped).
+    /// Rung gates use the stage-specific [`MeshSession::rung_rate`].
     pub fn cost_ms_per_iter(&self) -> f64 {
         let over = f64::from_bits(self.cost_override.load(Ordering::Relaxed));
         if over > 0.0 {
@@ -240,15 +255,51 @@ impl MeshSession {
         f64::from_bits(self.cost_ms_per_iter.load(Ordering::Relaxed))
     }
 
-    /// Fold one `ms / iteration` sample into the observed EWMA. A racing
-    /// store just loses a sample — this is calibration, not accounting.
+    /// Effective per-work-unit rate for one ladder rung: the explicit
+    /// override when set, otherwise that rung's own observed EWMA. The
+    /// plain-CG rungs (cold restart, iteration bump) are pre-calibrated
+    /// by ordinary converged solves; the AMG-rescue and dense-LU rungs
+    /// calibrate only from their own completed rescues and stay at the
+    /// inert `0.0` (estimate zero, never skipped) until then.
+    pub fn rung_rate(&self, stage: EscalationStage) -> f64 {
+        let over = f64::from_bits(self.cost_override.load(Ordering::Relaxed));
+        if over > 0.0 {
+            return over;
+        }
+        f64::from_bits(self.rung_rates[stage.index()].load(Ordering::Relaxed))
+    }
+
+    /// Fold one sample into an EWMA slot. A racing store just loses a
+    /// sample — this is calibration, not accounting.
+    fn ewma_update(slot: &AtomicU64, sample: f64) {
+        let prev = f64::from_bits(slot.load(Ordering::Relaxed));
+        let next = if prev > 0.0 { prev + COST_ALPHA * (sample - prev) } else { sample };
+        slot.store(next.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Record one `ms / iteration` sample from an ordinary converged
+    /// Krylov solve: it calibrates the base rate and, because the
+    /// cold-restart and iteration-bump rungs are plain CG at that same
+    /// rate, those two rung slots — arming their gates before any rescue
+    /// has ever run. The AMG-rescue and dense-LU rungs are NOT fed here:
+    /// their cost structure differs, which is the point of per-rung
+    /// calibration.
     fn record_cost_sample(&self, ms_per_iter: f64) {
         if !(ms_per_iter.is_finite() && ms_per_iter > 0.0) {
             return;
         }
-        let prev = f64::from_bits(self.cost_ms_per_iter.load(Ordering::Relaxed));
-        let next = if prev > 0.0 { prev + COST_ALPHA * (ms_per_iter - prev) } else { ms_per_iter };
-        self.cost_ms_per_iter.store(next.to_bits(), Ordering::Relaxed);
+        Self::ewma_update(&self.cost_ms_per_iter, ms_per_iter);
+        Self::ewma_update(&self.rung_rates[EscalationStage::ColdRestart.index()], ms_per_iter);
+        Self::ewma_update(&self.rung_rates[EscalationStage::IterBump.index()], ms_per_iter);
+    }
+
+    /// Record one per-work-unit sample from a completed ladder rung into
+    /// that rung's own EWMA slot.
+    fn record_rung_sample(&self, stage: EscalationStage, rate: f64) {
+        if !(rate.is_finite() && rate > 0.0) {
+            return;
+        }
+        Self::ewma_update(&self.rung_rates[stage.index()], rate);
     }
 
     /// Run the first (pre-ladder) attempt, timing it only when the
@@ -289,9 +340,15 @@ impl MeshSession {
     }
 
     /// Run one ladder rung, charging its actual elapsed time against the
-    /// budget and folding converged rungs into the cost calibration.
+    /// budget and folding a converged rung into ITS OWN rate EWMA, in
+    /// the same work units its cost estimate is computed in: iterations
+    /// for the plain-CG rungs, setup-equivalent + iterations for the AMG
+    /// rescue, LU units ([`lu_cost_units`] — dense LU reports
+    /// `iterations == 0`) for the direct fallback.
     fn timed_rung<T>(
         &self,
+        stage: EscalationStage,
+        k: &Csr,
         budget: &mut LadderBudget,
         run: impl FnOnce() -> (T, SolveStats),
     ) -> (T, SolveStats) {
@@ -299,8 +356,17 @@ impl MeshSession {
         let (x, st) = run();
         let ms = t0.elapsed().as_secs_f64() * 1e3;
         budget.charge(ms);
-        if st.converged && st.iterations > 0 {
-            self.record_cost_sample(ms / st.iterations as f64);
+        if st.converged {
+            let units = match stage {
+                EscalationStage::ColdRestart | EscalationStage::IterBump => st.iterations as f64,
+                EscalationStage::PrecondEscalation => {
+                    AMG_SETUP_ITER_EQUIV + st.iterations as f64
+                }
+                EscalationStage::DirectLu => lu_cost_units(k.nrows, k.data.len()),
+            };
+            if units > 0.0 {
+                self.record_rung_sample(stage, ms / units);
+            }
         }
         (x, st)
     }
@@ -484,17 +550,26 @@ impl MeshSession {
             resolved_by: None,
         };
         let mut budget = LadderBudget::new(budget_ms);
-        let c = self.cost_ms_per_iter();
         let engine_amg = matches!(self.engine.as_ref(), Some(PrecondEngine::Amg(..)));
         // Tracks the strongest preconditioner reached so far; later stages
         // keep it rather than regressing to the one that already failed.
         let mut amg = engine_amg;
+        // Each gate runs at its rung's own calibrated rate (the plain-CG
+        // rungs share the base Krylov rate; AMG rescue and dense LU use
+        // their own observed EWMAs, inert zero until first calibrated).
         if pol.cold_restart
             && was_warm
-            && self.rung_gate(EscalationStage::ColdRestart, k, c, &budget, &mut rep)
+            && self.rung_gate(
+                EscalationStage::ColdRestart,
+                k,
+                self.rung_rate(EscalationStage::ColdRestart),
+                &budget,
+                &mut rep,
+            )
         {
-            let (x, st) =
-                self.timed_rung(&mut budget, || self.rescue_solve(k, rhs, amg, &self.config));
+            let (x, st) = self.timed_rung(EscalationStage::ColdRestart, k, &mut budget, || {
+                self.rescue_solve(k, rhs, amg, &self.config)
+            });
             rep.attempts.push(StageAttempt { stage: EscalationStage::ColdRestart, stats: st });
             if st.converged {
                 rep.resolved_by = Some(EscalationStage::ColdRestart);
@@ -503,9 +578,17 @@ impl MeshSession {
         }
         if pol.escalate_precond && !engine_amg {
             amg = true;
-            if self.rung_gate(EscalationStage::PrecondEscalation, k, c, &budget, &mut rep) {
+            if self.rung_gate(
+                EscalationStage::PrecondEscalation,
+                k,
+                self.rung_rate(EscalationStage::PrecondEscalation),
+                &budget,
+                &mut rep,
+            ) {
                 let (x, st) =
-                    self.timed_rung(&mut budget, || self.rescue_solve(k, rhs, true, &self.config));
+                    self.timed_rung(EscalationStage::PrecondEscalation, k, &mut budget, || {
+                        self.rescue_solve(k, rhs, true, &self.config)
+                    });
                 rep.attempts
                     .push(StageAttempt { stage: EscalationStage::PrecondEscalation, stats: st });
                 if st.converged {
@@ -514,11 +597,20 @@ impl MeshSession {
                 }
             }
         }
-        if pol.iter_bump > 1 && self.rung_gate(EscalationStage::IterBump, k, c, &budget, &mut rep)
+        if pol.iter_bump > 1
+            && self.rung_gate(
+                EscalationStage::IterBump,
+                k,
+                self.rung_rate(EscalationStage::IterBump),
+                &budget,
+                &mut rep,
+            )
         {
             let mut cfg = self.config;
             cfg.max_iter = cfg.max_iter.saturating_mul(pol.iter_bump);
-            let (x, st) = self.timed_rung(&mut budget, || self.rescue_solve(k, rhs, amg, &cfg));
+            let (x, st) = self.timed_rung(EscalationStage::IterBump, k, &mut budget, || {
+                self.rescue_solve(k, rhs, amg, &cfg)
+            });
             rep.attempts.push(StageAttempt { stage: EscalationStage::IterBump, stats: st });
             if st.converged {
                 rep.resolved_by = Some(EscalationStage::IterBump);
@@ -527,9 +619,17 @@ impl MeshSession {
         }
         if pol.direct_fallback
             && k.nrows <= pol.direct_max
-            && self.rung_gate(EscalationStage::DirectLu, k, c, &budget, &mut rep)
+            && self.rung_gate(
+                EscalationStage::DirectLu,
+                k,
+                self.rung_rate(EscalationStage::DirectLu),
+                &budget,
+                &mut rep,
+            )
         {
-            let (x, st) = self.timed_rung(&mut budget, || self.direct_solve(k, rhs));
+            let (x, st) = self.timed_rung(EscalationStage::DirectLu, k, &mut budget, || {
+                self.direct_solve(k, rhs)
+            });
             rep.attempts.push(StageAttempt { stage: EscalationStage::DirectLu, stats: st });
             if st.converged {
                 rep.resolved_by = Some(EscalationStage::DirectLu);

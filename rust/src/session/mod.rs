@@ -80,15 +80,20 @@
 //! Each resilient entry point has a `*_budgeted` variant that accepts an
 //! optional milliseconds budget (derived by the coordinator from the
 //! request deadline). Every ladder rung carries a cost estimate from
-//! [`crate::solver::rung_cost_ms`], scaled by the session's calibrated
-//! milliseconds-per-iteration (an EWMA recorded from converged resilient
-//! solves, overridable via [`MeshSession::set_cost_ms_per_iter`]). Rungs
-//! whose estimate exceeds the remaining budget are skipped — recorded as
+//! [`crate::solver::rung_cost_ms`], scaled by that rung's OWN calibrated
+//! rate ([`MeshSession::rung_rate`]): the plain-CG rungs (cold restart,
+//! iteration bump) are pre-calibrated at the base Krylov rate by every
+//! converged solve, while the AMG-rescue and dense-LU rungs calibrate
+//! only from their own completed rescues — in their own work units
+//! (setup-equivalent iterations, LU units) — so they no longer inherit
+//! the CG rate. An explicit [`MeshSession::set_cost_ms_per_iter`]
+//! override pins every rung's rate. Rungs whose estimate exceeds the
+//! remaining budget are skipped — recorded as
 //! [`crate::solver::SkippedRung`]s in the report — so a
 //! deadline-constrained request jumps straight to the cheapest viable
 //! rescue instead of burning its deadline on a hopeless one. With no
-//! budget (or an uncalibrated session, where every estimate is zero) the
-//! ladder runs exactly as before.
+//! budget the ladder runs exactly as before, and an uncalibrated rung
+//! (rate zero, estimate zero) is never skipped.
 //!
 //! # Health tracking
 //!

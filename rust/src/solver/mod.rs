@@ -281,21 +281,35 @@ impl std::fmt::Display for EscalationStage {
 }
 
 /// Iteration-equivalent charge for building the rescue AMG hierarchy in
-/// the preconditioner-escalation rung's cost estimate.
-const AMG_SETUP_ITER_EQUIV: f64 = 50.0;
+/// the preconditioner-escalation rung's cost estimate (and the unit the
+/// session's per-rung calibration divides an observed AMG rescue by).
+pub const AMG_SETUP_ITER_EQUIV: f64 = 50.0;
+
+/// Iteration-equivalent work units of the dense-LU rung on an `n × n`
+/// reduced operator with `nnz` stored entries: the `n³/3` factorization
+/// flops expressed in units of the `2·nnz`-flop SpMV that dominates one
+/// Krylov iteration. Both the cost estimate ([`rung_cost_ms`]) and the
+/// session's per-rung calibration (observed LU milliseconds divided by
+/// these units) use the same conversion, so a calibrated dense-LU rate
+/// predicts LU cost in LU's own units, not CG's.
+pub fn lu_cost_units(n: usize, nnz: usize) -> f64 {
+    let n = n as f64;
+    n * n * n / (3.0 * nnz.max(1) as f64)
+}
 
 /// Worst-case cost estimate, in milliseconds, of running one escalation
 /// rung on an `n × n` reduced operator with `nnz` stored entries, given
-/// a calibrated per-Krylov-iteration cost `ms_per_iter` (the session's
-/// observed EWMA). Used by budget-aware escalation to skip rungs that
-/// cannot fit the remaining deadline; with an uncalibrated session
-/// (`ms_per_iter == 0`) every estimate is zero and nothing is skipped.
+/// a calibrated per-work-unit rate `ms_per_iter` for THAT rung (the
+/// session's per-rung observed EWMA, `MeshSession::rung_rate` — plain-CG
+/// rungs run at the base Krylov rate, the AMG-rescue and dense-LU rungs
+/// at their own observed rates). Used by budget-aware escalation to skip
+/// rungs that cannot fit the remaining deadline; an uncalibrated rung
+/// (`ms_per_iter == 0`) estimates zero and is never skipped.
 ///
 /// The Krylov rungs charge their full iteration budget (they are only
 /// ever reached after a failure, so the optimistic case is not the one
 /// that matters); the dense-LU rung converts its `n³/3` factorization
-/// flops into iteration equivalents via the `2·nnz` flops of the SpMV
-/// that dominates one calibrated iteration.
+/// flops into iteration equivalents via [`lu_cost_units`].
 pub fn rung_cost_ms(
     stage: EscalationStage,
     n: usize,
@@ -310,10 +324,7 @@ pub fn rung_cost_ms(
         EscalationStage::IterBump => {
             iters * config.escalation.iter_bump.max(1) as f64 * ms_per_iter
         }
-        EscalationStage::DirectLu => {
-            let n = n as f64;
-            n * n * n / (3.0 * nnz.max(1) as f64) * ms_per_iter
-        }
+        EscalationStage::DirectLu => lu_cost_units(n, nnz) * ms_per_iter,
     }
 }
 

@@ -19,6 +19,18 @@
 //! broadcast. On a single-core image (or `TG_THREADS=1`) no workers are
 //! spawned and every entry point degrades to the identical sequential code
 //! path.
+//!
+//! # Interplay with the sharded coordinator
+//!
+//! The coordinator's shard workers (`TG_SHARDS` of them) are queue
+//! drainers, not compute threads: every assembly/solve they dispatch
+//! lands in THIS one process-wide pool, and the `SUBMIT` gate below
+//! admits one top-level job at a time, serializing concurrent shard
+//! submitters at the pool boundary. Raising `TG_SHARDS` therefore never
+//! oversubscribes the `TG_THREADS` core budget — shards overlap their
+//! queueing/bookkeeping and pipeline their solves through the pool —
+//! and per-job chunking (hence numerics) stays independent of how many
+//! shards are submitting.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};

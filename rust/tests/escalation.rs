@@ -354,3 +354,72 @@ fn bounded_admission_queue_rejects_overload() {
     assert!(stats.queue_high_water >= 3, "high-water must see the admitted burst: {stats:?}");
     assert_eq!(stats.failed_requests, 0, "rejected requests never reach the worker");
 }
+
+/// Per-rung cost calibration: ordinary converged solves calibrate the
+/// plain-CG rungs (cold restart, iteration bump) at the base Krylov
+/// rate while the AMG-rescue and dense-LU rungs stay at the inert zero;
+/// a completed LU rescue calibrates exactly its own rung (in LU work
+/// units); and the explicit override pins every rung at once, reverting
+/// to the per-rung EWMAs when cleared.
+#[test]
+fn rung_rates_calibrate_per_rung() {
+    // A converged first attempt calibrates the base rate and the two
+    // plain-CG rungs — and nothing else.
+    let mesh = unit_square_tri(12);
+    let cfg = SolverConfig { escalation: EscalationPolicy::ladder(), ..SolverConfig::default() };
+    let session = MeshSession::poisson(&mesh, cfg);
+    let f = load(session.n_full(), 77);
+    let (_, st, rep) = session.solve_with_load_resilient(&f);
+    assert!(st.converged && rep.is_none());
+    assert!(session.cost_ms_per_iter() > 0.0, "base rate must calibrate");
+    assert!(session.rung_rate(EscalationStage::ColdRestart) > 0.0);
+    assert!(session.rung_rate(EscalationStage::IterBump) > 0.0);
+    assert_eq!(
+        session.rung_rate(EscalationStage::PrecondEscalation),
+        0.0,
+        "the AMG rung must not inherit the CG rate"
+    );
+    assert_eq!(
+        session.rung_rate(EscalationStage::DirectLu),
+        0.0,
+        "the LU rung must not inherit the CG rate"
+    );
+
+    // A dense-LU rescue calibrates exactly the LU rung: the starved
+    // first attempt never converged, so no base sample lands either.
+    let mesh = unit_square_tri(8);
+    let cfg = SolverConfig {
+        max_iter: 2,
+        escalation: stage_only(false, false, 0, true),
+        ..SolverConfig::default()
+    };
+    let session = MeshSession::poisson(&mesh, cfg);
+    let f = load(session.n_full(), 78);
+    let (_, st, rep) = session.solve_with_load_resilient(&f);
+    assert!(st.converged, "{st:?}");
+    assert_eq!(rep.expect("report").resolved_by, Some(EscalationStage::DirectLu));
+    assert!(
+        session.rung_rate(EscalationStage::DirectLu) > 0.0,
+        "a completed LU rescue calibrates its own rung"
+    );
+    assert_eq!(session.rung_rate(EscalationStage::ColdRestart), 0.0);
+    assert_eq!(session.rung_rate(EscalationStage::IterBump), 0.0);
+    assert_eq!(session.cost_ms_per_iter(), 0.0, "no converged Krylov attempt, no base sample");
+
+    // The override pins EVERY rung; clearing it reverts to the EWMAs.
+    session.set_cost_ms_per_iter(1.0);
+    for stage in [
+        EscalationStage::ColdRestart,
+        EscalationStage::PrecondEscalation,
+        EscalationStage::IterBump,
+        EscalationStage::DirectLu,
+    ] {
+        assert_eq!(session.rung_rate(stage), 1.0, "{stage:?} must be pinned by the override");
+    }
+    session.set_cost_ms_per_iter(0.0);
+    assert_eq!(session.rung_rate(EscalationStage::PrecondEscalation), 0.0);
+    assert!(
+        session.rung_rate(EscalationStage::DirectLu) > 0.0,
+        "clearing the override reverts to the per-rung EWMA"
+    );
+}

@@ -429,6 +429,62 @@ fn disabled_health_is_inert_and_bitwise() {
     assert_eq!(stats.effective_max_queue, 0, "unbounded default: {stats:?}");
 }
 
+/// Drain-time breaker check: a burst admitted while the breaker was
+/// still Closed trips it MID-DRAIN, and the stragglers of the same burst
+/// — already queued, already holding dispatch slots — are answered
+/// `Unhealthy` at drain instead of burning solves on an Open mesh. They
+/// count as sheds, not failures, and are not observed (no double
+/// penalty).
+#[test]
+fn open_breaker_sheds_queued_stragglers_at_drain() {
+    #[cfg(feature = "fault-inject")]
+    let _g = fault_guard();
+    let mesh = unit_square_tri(8);
+    let n = mesh.n_nodes();
+    // max_batch = 2: a 6-request burst drains as one group in three
+    // 2-sized chunks. Chunk one's two starved failures reach the streak
+    // trigger and trip the breaker; chunks two and three are stragglers.
+    let server = BatchServer::start(mesh, starved(), 2);
+    server.set_health_config(breaker_cfg());
+
+    let outs: Vec<_> = server
+        .submit_many((0..6u64).map(|id| SolveRequest::new(id, load(n, 90 + id))).collect())
+        .into_iter()
+        .map(|rx| rx.recv().unwrap())
+        .collect();
+    for res in &outs[..2] {
+        let err = res.as_ref().expect_err("starved chunk must fail");
+        assert!(
+            matches!(err.downcast_ref::<SolveError>(), Some(SolveError::Solver { .. })),
+            "pre-trip chunk fails classified: {err:#}"
+        );
+    }
+    for res in &outs[2..] {
+        let err = res.as_ref().expect_err("straggler must be shed, not solved");
+        match err.downcast_ref::<SolveError>() {
+            Some(SolveError::Unhealthy { mesh_id, retry_after_ms, .. }) => {
+                assert_eq!(*mesh_id, DEFAULT_MESH);
+                assert!(*retry_after_ms <= 100, "hint within the open window");
+            }
+            other => panic!("drain-time shed must be Unhealthy, got {other:?}"),
+        }
+    }
+    assert_eq!(server.health(DEFAULT_MESH).unwrap().state, BreakerState::Open);
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.breaker_opens, 1, "{stats:?}");
+    assert_eq!(stats.failed_requests, 2, "only the tripping chunk fails: {stats:?}");
+    assert_eq!(stats.shed_requests, 4, "stragglers count as sheds: {stats:?}");
+    // The whole burst was drained (it occupied the queue), in one cycle.
+    assert_eq!(stats.queued_requests, 6, "{stats:?}");
+    assert_eq!(stats.drain_cycles, 1, "{stats:?}");
+
+    // The shed told the truth: after the open window a probe is admitted
+    // and a healthy (zero-load) probe closes the breaker again.
+    server.advance_health_clock(100);
+    server.submit(SolveRequest::new(10, vec![0.0; n])).recv().unwrap().expect("probe");
+    assert_eq!(server.health(DEFAULT_MESH).unwrap().state, BreakerState::Closed);
+}
+
 /// A deadline already passed at submission is answered synchronously:
 /// counted as expired AND failed, never drained, and — under a one-slot
 /// bound — not occupying the slot a live request needs.

@@ -1,0 +1,431 @@
+//! Integration suite for the sharded serving layer: with one shard and
+//! stealing off the server must be bitwise (answers AND counters) the
+//! single-worker server it replaced; with many shards every response
+//! still bitwise-matches the per-mesh scalar oracle and the folded
+//! aggregate counters stay exact; an idle shard steals a hot mesh's
+//! whole group (never splitting it) with bitwise-identical answers; and
+//! the circuit breaker's one-probe-group-per-mesh invariant holds across
+//! shards because the health registry is global.
+
+use tensor_galerkin::coordinator::{
+    BatchServer, BatchSolver, BreakerState, CoordinatorStats, HealthConfig, ShardConfig,
+    SolveError, SolveRequest, VarCoeffRequest,
+};
+use tensor_galerkin::mesh::structured::{unit_cube_tet, unit_square_tri};
+use tensor_galerkin::mesh::Mesh;
+use tensor_galerkin::solver::{FailureKind, SolverConfig};
+use tensor_galerkin::util::rng::Rng;
+
+fn load(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+}
+
+/// Serialize against the global fault registry when this binary is built
+/// with `fault-inject`: a concurrently armed failpoint in another test
+/// of this binary must never leak into a clean run.
+#[cfg(feature = "fault-inject")]
+fn fault_guard() -> std::sync::MutexGuard<'static, ()> {
+    let g = tensor_galerkin::util::faults::exclusive();
+    tensor_galerkin::util::faults::reset();
+    g
+}
+
+fn fixed_reqs(mesh_id: u64, n_nodes: usize, count: usize, rng: &mut Rng) -> Vec<SolveRequest> {
+    (0..count)
+        .map(|id| {
+            SolveRequest::on_mesh(
+                mesh_id * 1000 + id as u64,
+                mesh_id,
+                (0..n_nodes).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            )
+        })
+        .collect()
+}
+
+fn var_reqs(mesh_id: u64, n_nodes: usize, count: usize, rng: &mut Rng) -> Vec<VarCoeffRequest> {
+    (0..count)
+        .map(|id| {
+            VarCoeffRequest::on_mesh(
+                mesh_id * 1000 + id as u64,
+                mesh_id,
+                (0..n_nodes).map(|_| rng.uniform_in(0.5, 2.0)).collect(),
+                (0..n_nodes).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+            )
+        })
+        .collect()
+}
+
+const TRI: u64 = 1;
+const TET: u64 = 2;
+
+/// Drive one fixed burst and one varcoeff burst of interleaved 2D-tri +
+/// 3D-tet traffic through a server with the given shard layout, assert
+/// every response bitwise against the single-mesh scalar oracles, and
+/// return the server plus its aggregate stats.
+fn mixed_traffic_bitwise(shard_cfg: ShardConfig) -> (BatchServer, CoordinatorStats) {
+    let tri: Mesh = unit_square_tri(6);
+    let tet: Mesh = unit_cube_tet(3);
+    let cfg = SolverConfig::default();
+    let oracle_tri = BatchSolver::new(&tri, cfg);
+    let oracle_tet = BatchSolver::new(&tet, cfg);
+    let server = BatchServer::start_sharded(vec![(TRI, tri), (TET, tet)], cfg, 32, 0, shard_cfg);
+
+    let mut rng = Rng::new(29);
+    let tri_fixed = fixed_reqs(TRI, oracle_tri.n_dofs(), 3, &mut rng);
+    let tet_fixed = fixed_reqs(TET, oracle_tet.n_dofs(), 3, &mut rng);
+    let mixed: Vec<SolveRequest> = tri_fixed
+        .iter()
+        .zip(&tet_fixed)
+        .flat_map(|(a, b)| [a.clone(), b.clone()])
+        .collect();
+    let out = server.solve_all(mixed.clone()).unwrap();
+    for (resp, req) in out.iter().zip(&mixed) {
+        let oracle = if req.mesh_id == TRI { &oracle_tri } else { &oracle_tet };
+        let want = oracle.solve_one(req).unwrap();
+        assert_eq!(resp.id, want.id);
+        assert_eq!(resp.u, want.u, "mesh {} request {} not bitwise", req.mesh_id, req.id);
+        assert_eq!(resp.iterations, want.iterations);
+    }
+
+    let tri_var = var_reqs(TRI, oracle_tri.n_dofs(), 3, &mut rng);
+    let tet_var = var_reqs(TET, oracle_tet.n_dofs(), 3, &mut rng);
+    let vmixed: Vec<VarCoeffRequest> = tri_var
+        .iter()
+        .zip(&tet_var)
+        .flat_map(|(a, b)| [a.clone(), b.clone()])
+        .collect();
+    let vout: Vec<_> = server
+        .solve_all_varcoeff_each(vmixed.clone())
+        .into_iter()
+        .map(|r| r.unwrap())
+        .collect();
+    for (resp, req) in vout.iter().zip(&vmixed) {
+        let oracle = if req.mesh_id == TRI { &oracle_tri } else { &oracle_tet };
+        let want = oracle.solve_varcoeff_one(req).unwrap();
+        assert_eq!(resp.u, want.u, "mesh {} request {} not bitwise", req.mesh_id, req.id);
+        assert_eq!(resp.iterations, want.iterations);
+    }
+
+    let stats = server.stats().expect("workers alive");
+    (server, stats)
+}
+
+/// The parity pin the whole refactor hangs on: with `num_shards = 1` and
+/// stealing off, the sharded server IS the single-worker server — every
+/// answer bitwise, and the full counter signature (drain cycles, queued
+/// integral, dispatch grouping, high-water) exactly the PR 8 values.
+#[test]
+fn shards1_steal_off_is_bitwise_the_single_worker_server() {
+    #[cfg(feature = "fault-inject")]
+    let _g = fault_guard();
+    let (server, stats) = mixed_traffic_bitwise(ShardConfig::single());
+    assert_eq!(server.num_shards(), 1);
+    assert!(!server.steal_enabled());
+    assert_eq!(server.per_shard().len(), 1);
+    assert_eq!(server.shard_of(TRI), 0);
+    assert_eq!(server.shard_of(TET), 0);
+
+    assert_eq!(stats.meshes_built, 2, "{stats:?}");
+    assert_eq!(stats.batched_solves, 4, "one dispatch per (mesh, kind) group: {stats:?}");
+    assert_eq!(stats.scalar_solves, 0, "{stats:?}");
+    assert_eq!(stats.failed_requests, 0, "{stats:?}");
+    assert_eq!(stats.queued_requests, 12, "{stats:?}");
+    // One worker, one queue: each 6-request burst is one drain cycle and
+    // peaks the queue depth at 6.
+    assert_eq!(stats.drain_cycles, 2, "{stats:?}");
+    assert_eq!(stats.dispatch_groups, 4, "{stats:?}");
+    assert_eq!(stats.queue_high_water, 6, "{stats:?}");
+    assert_eq!(stats.stolen_groups, 0, "stealing must be off: {stats:?}");
+    assert_eq!(stats.rejected_requests, 0, "{stats:?}");
+    assert_eq!(stats.shed_requests, 0, "{stats:?}");
+    assert_eq!(stats.expired_requests, 0, "{stats:?}");
+}
+
+/// Four shards, stealing on: the two meshes home on different shards, so
+/// each burst splits into per-shard slices — every answer must still be
+/// bitwise the scalar oracle (mesh affinity keeps each group whole, and
+/// a steal only relocates a whole group), and the folded counters stay
+/// exact: requests and groups counted once wherever they were served,
+/// high-water maxed over shards (each shard only ever held its own
+/// 3-request slice).
+#[test]
+fn sharded_serving_is_bitwise_across_shards() {
+    #[cfg(feature = "fault-inject")]
+    let _g = fault_guard();
+    let (server, stats) =
+        mixed_traffic_bitwise(ShardConfig { num_shards: 4, steal: true });
+    assert_eq!(server.num_shards(), 4);
+    assert!(server.steal_enabled());
+    assert_ne!(
+        server.shard_of(TRI),
+        server.shard_of(TET),
+        "test premise: the two meshes must home on different shards"
+    );
+
+    assert_eq!(stats.meshes_built, 2, "{stats:?}");
+    assert_eq!(stats.batched_solves, 4, "{stats:?}");
+    assert_eq!(stats.scalar_solves, 0, "{stats:?}");
+    assert_eq!(stats.failed_requests, 0, "{stats:?}");
+    assert_eq!(stats.queued_requests, 12, "{stats:?}");
+    // Two shards per burst, each slice one drain cycle (own or stolen).
+    assert_eq!(stats.drain_cycles, 4, "{stats:?}");
+    assert_eq!(stats.dispatch_groups, 4, "{stats:?}");
+    // The max-fold: no single shard ever held more than its 3-slice.
+    assert_eq!(stats.queue_high_water, 3, "{stats:?}");
+
+    // Per-shard breakdown is consistent with the fold.
+    let per = server.per_shard();
+    assert_eq!(per.len(), 4);
+    assert_eq!(per.iter().map(|s| s.queue_high_water).max().unwrap(), 3);
+    assert_eq!(per[server.shard_of(TRI)].queue_high_water, 3);
+    assert_eq!(per[server.shard_of(TET)].queue_high_water, 3);
+    let stolen_sum: u64 = per.iter().map(|s| s.stolen_groups).sum();
+    assert_eq!(stolen_sum, stats.stolen_groups);
+}
+
+/// Work stealing, pinned deterministically: two meshes homed on the SAME
+/// shard; a stall failpoint freezes the home worker mid-dispatch while a
+/// hot burst for the second mesh queues behind it, so the idle sibling
+/// shard steals the burst — the WHOLE group, served by one batched
+/// dispatch against the victim's registry (`Arc` clone, no rebuild) —
+/// and every answer is bitwise the scalar oracle.
+#[cfg(feature = "fault-inject")]
+#[test]
+fn idle_shard_steals_hot_group_whole_and_bitwise() {
+    use std::time::Duration;
+    use tensor_galerkin::util::faults::{self, Fault};
+
+    let _g = fault_guard();
+    const W: u64 = 0; // the mesh whose dispatch stalls
+    const H: u64 = 1; // the hot mesh stolen by the idle shard
+    let mesh_w: Mesh = unit_square_tri(6);
+    let mesh_h: Mesh = unit_square_tri(8);
+    let cfg = SolverConfig::default();
+    let oracle_w = BatchSolver::new(&mesh_w, cfg);
+    let oracle_h = BatchSolver::new(&mesh_h, cfg);
+    let server = BatchServer::start_sharded(
+        vec![(W, mesh_w), (H, mesh_h)],
+        cfg,
+        8,
+        0,
+        ShardConfig { num_shards: 2, steal: true },
+    );
+    assert_eq!(
+        server.shard_of(W),
+        server.shard_of(H),
+        "test premise: both meshes must home on the same shard"
+    );
+
+    // Build both mesh states with clean warm-up traffic BEFORE arming,
+    // so the stall is consumed by the victim's dispatch below.
+    let warm_w = SolveRequest::on_mesh(900, W, load(oracle_w.n_dofs(), 31));
+    let warm_h = SolveRequest::on_mesh(901, H, load(oracle_h.n_dofs(), 32));
+    server.submit(warm_w).recv().unwrap().expect("warm-up W");
+    server.submit(warm_h).recv().unwrap().expect("warm-up H");
+    let base = server.stats().expect("workers alive");
+
+    faults::arm(faults::SERVER_STALL, Fault::always().delay(400).hits(1));
+    // The victim picks this singleton up and stalls inside dispatch.
+    let req_w = SolveRequest::on_mesh(100, W, load(oracle_w.n_dofs(), 41));
+    let rx_w = server.submit(req_w.clone());
+    std::thread::sleep(Duration::from_millis(30));
+    // The hot burst queues behind the stalled worker; the idle shard
+    // (parked on its empty queue) steals it within its ~1ms park.
+    let mut rng = Rng::new(43);
+    let hot = fixed_reqs(H, oracle_h.n_dofs(), 6, &mut rng);
+    let hot_out: Vec<_> = server
+        .submit_many(hot.clone())
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().expect("stolen group must be served"))
+        .collect();
+    let w_out = rx_w.recv().unwrap().expect("stalled request must still be served");
+    faults::reset();
+
+    for (resp, req) in hot_out.iter().zip(&hot) {
+        let want = oracle_h.solve_one(req).unwrap();
+        assert_eq!(resp.u, want.u, "stolen-group request {} not bitwise", req.id);
+        assert_eq!(resp.iterations, want.iterations);
+    }
+    let want_w = oracle_w.solve_one(&req_w).unwrap();
+    assert_eq!(w_out.u, want_w.u, "the stalled singleton must stay bitwise");
+
+    let stats = server.stats().expect("workers alive");
+    assert!(
+        stats.stolen_groups > base.stolen_groups,
+        "the idle shard must have stolen the hot group: {stats:?}"
+    );
+    // Never split: the 6-request group cost exactly ONE batched dispatch
+    // wherever it was served; the stalled singleton ran scalar.
+    assert_eq!(stats.batched_solves - base.batched_solves, 1, "{stats:?} vs {base:?}");
+    assert_eq!(stats.scalar_solves - base.scalar_solves, 1, "{stats:?} vs {base:?}");
+    assert_eq!(stats.failed_requests, 0, "{stats:?}");
+    let stolen_sum: u64 = server.per_shard().iter().map(|s| s.stolen_groups).sum();
+    assert_eq!(stolen_sum, stats.stolen_groups);
+}
+
+/// The health registry is GLOBAL: one breaker and one probe group per
+/// mesh no matter how many shards serve its traffic. A sick mesh on one
+/// shard trips Open while healthy meshes homed on two OTHER shards keep
+/// serving bitwise; after the open window exactly one probe group is
+/// admitted (a second burst sheds `Unhealthy` while it is in flight), a
+/// failed probe re-opens, and a later clean probe closes — with the
+/// breaker counters folding to exact values across all four shards.
+#[test]
+fn probe_group_is_global_across_shards() {
+    #[cfg(feature = "fault-inject")]
+    let _g = fault_guard();
+    // ids chosen to home on three distinct shards of four (stable hash).
+    const SICK: u64 = 1;
+    const H1: u64 = 6;
+    const H2: u64 = 2;
+    let small = unit_square_tri(6);
+    let big = unit_square_tri(16);
+    let f_s = load(small.n_nodes(), 11);
+    let f_b = load(big.n_nodes(), 12);
+    // Calibrate an iteration budget between the two meshes' needs: the
+    // small (healthy) meshes converge, the big one is chronically starved.
+    let it_small = BatchSolver::new(&small, SolverConfig::default())
+        .solve_one(&SolveRequest::new(0, f_s.clone()))
+        .unwrap()
+        .iterations;
+    let it_big = BatchSolver::new(&big, SolverConfig::default())
+        .solve_one(&SolveRequest::new(0, f_b.clone()))
+        .unwrap()
+        .iterations;
+    assert!(it_big > it_small + 1, "meshes must need different budgets ({it_small} vs {it_big})");
+    let cfg = SolverConfig { max_iter: it_small + 1, ..SolverConfig::default() };
+
+    let server = BatchServer::start_sharded(
+        vec![(SICK, big), (H1, small.clone()), (H2, small.clone())],
+        cfg,
+        8,
+        0,
+        ShardConfig { num_shards: 4, steal: true },
+    );
+    let (ss, s1, s2) = (server.shard_of(SICK), server.shard_of(H1), server.shard_of(H2));
+    assert!(
+        ss != s1 && ss != s2 && s1 != s2,
+        "test premise: three distinct home shards ({ss}, {s1}, {s2})"
+    );
+    server.set_health_config(HealthConfig {
+        alpha: 1.0,
+        min_observations: 1,
+        open_failure_rate: 2.0, // unreachable: isolate the streak trigger
+        open_streak: 2,
+        open_ms: 100,
+        tighten_threshold: 2.0, // unreachable: no adaptive tightening
+        manual_clock: true,
+        ..HealthConfig::breaker()
+    });
+    let oracle = BatchSolver::new(&small, cfg);
+    let want = oracle.solve_one(&SolveRequest::new(0, f_s.clone())).unwrap();
+    let mut healthy = Vec::new();
+
+    // Trip the sick mesh; healthy meshes on the other shards keep serving.
+    for round in 0..2u64 {
+        let err = server
+            .submit(SolveRequest::on_mesh(100 + round, SICK, f_b.clone()))
+            .recv()
+            .unwrap()
+            .unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<SolveError>(),
+                Some(SolveError::Solver { kind: FailureKind::MaxIters, .. })
+            ),
+            "starved solve must fail classified: {err:#}"
+        );
+        for (id, mesh_id) in [(round, H1), (10 + round, H2)] {
+            healthy.push(
+                server
+                    .submit(SolveRequest::on_mesh(id, mesh_id, f_s.clone()))
+                    .recv()
+                    .unwrap()
+                    .expect("healthy shard must keep serving"),
+            );
+        }
+    }
+    assert_eq!(server.health(SICK).unwrap().state, BreakerState::Open);
+    assert_eq!(server.health(H1).unwrap().state, BreakerState::Closed);
+    assert_eq!(server.health(H2).unwrap().state, BreakerState::Closed);
+
+    // Open: sheds synchronously with a countdown hint.
+    let err =
+        server.submit(SolveRequest::on_mesh(120, SICK, f_b.clone())).recv().unwrap().unwrap_err();
+    match err.downcast_ref::<SolveError>() {
+        Some(SolveError::Unhealthy { mesh_id, retry_after_ms, .. }) => {
+            assert_eq!(*mesh_id, SICK);
+            assert!(*retry_after_ms <= 100, "hint within the open window");
+        }
+        other => panic!("open breaker must shed Unhealthy, got {other:?}"),
+    }
+
+    // After the window ONE probe group (this whole burst) is admitted;
+    // it fails (nonzero loads, starved budget) and re-opens the breaker.
+    server.advance_health_clock(100);
+    let probe_rxs = server.submit_many(vec![
+        SolveRequest::on_mesh(300, SICK, f_b.clone()),
+        SolveRequest::on_mesh(301, SICK, f_b.clone()),
+    ]);
+    // While that probe is in flight (or already failed back to Open),
+    // further sick-mesh traffic sheds — NEVER a second concurrent probe,
+    // because the registry making the call is global across shards.
+    for res in server.solve_all_each(vec![
+        SolveRequest::on_mesh(310, SICK, f_b.clone()),
+        SolveRequest::on_mesh(311, SICK, f_b.clone()),
+    ]) {
+        let err = res.unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<SolveError>(), Some(SolveError::Unhealthy { .. })),
+            "one probe group at a time: {err:#}"
+        );
+    }
+    for rx in probe_rxs {
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<SolveError>(),
+                Some(SolveError::Solver { kind: FailureKind::MaxIters, .. })
+            ),
+            "probe group must be served (and fail starved): {err:#}"
+        );
+    }
+    assert_eq!(server.health(SICK).unwrap().state, BreakerState::Open);
+    // Healthy shards untouched by the sick mesh's probe cycle.
+    for (id, mesh_id) in [(400u64, H1), (401, H2)] {
+        healthy.push(
+            server
+                .submit(SolveRequest::on_mesh(id, mesh_id, f_s.clone()))
+                .recv()
+                .unwrap()
+                .expect("healthy shard unaffected by the probe cycle"),
+        );
+    }
+
+    // A clean probe group (zero loads converge at iteration 0) closes.
+    server.advance_health_clock(100);
+    let outs = server.solve_all_each(vec![
+        SolveRequest::on_mesh(320, SICK, vec![0.0; big.n_nodes()]),
+        SolveRequest::on_mesh(321, SICK, vec![0.0; big.n_nodes()]),
+    ]);
+    for res in &outs {
+        assert!(res.is_ok(), "clean probe group must be admitted and served: {res:?}");
+    }
+    assert_eq!(server.health(SICK).unwrap().state, BreakerState::Closed);
+
+    for resp in &healthy {
+        assert_eq!(resp.u, want.u, "healthy-mesh answer drifted (id {})", resp.id);
+    }
+
+    let stats = server.stats().expect("workers alive");
+    assert_eq!(stats.breaker_opens, 2, "trip + failed probe: {stats:?}");
+    assert_eq!(stats.breaker_half_opens, 2, "exactly two probe admissions: {stats:?}");
+    assert_eq!(stats.breaker_closes, 1, "{stats:?}");
+    assert_eq!(stats.shed_requests, 3, "open shed + blocked second burst: {stats:?}");
+    assert_eq!(stats.failed_requests, 4, "2 trip failures + 2 probe failures: {stats:?}");
+    // Sheds are attributed to the sick mesh's home shard.
+    let per = server.per_shard();
+    assert_eq!(per[ss].shed_requests, 3, "{per:?}");
+    assert_eq!(per.iter().map(|s| s.shed_requests).sum::<u64>(), stats.shed_requests);
+}
