@@ -425,6 +425,79 @@ fn main() {
         sharded_meta.push((format!("sharded_open_s{s}_expired"), oexpired as f64));
     }
 
+    // --- Crash-tolerance arm (fault-inject builds only): a supervised
+    // 4-shard server takes the closed-loop burst while SHARD_PANIC kills
+    // one shard worker mid-run. The supervisor respawns the worker and
+    // requeues the salvaged slice, so every request is still answered;
+    // served p50/p99 through the crash plus the requeued/lost/respawn
+    // counters ride in the BENCH_coordinator.json meta.
+    #[cfg(feature = "fault-inject")]
+    {
+        use tensor_galerkin::coordinator::SupervisionConfig;
+        use tensor_galerkin::util::faults::{self, Fault};
+        let crash_server = BatchServer::start_sharded(
+            SHARD_MESH_IDS.iter().map(|&id| (id, sharded_mesh.clone())).collect(),
+            cfg,
+            s_served,
+            0,
+            ShardConfig { num_shards: 4, steal: false },
+        );
+        crash_server.set_supervision_config(SupervisionConfig::supervised());
+        for &id in &SHARD_MESH_IDS {
+            let f = (0..sharded_mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+            crash_server
+                .submit(SolveRequest::on_mesh(9900 + id, id, f))
+                .recv()
+                .expect("crash-arm server alive")
+                .expect("crash-arm warmup solve");
+        }
+        let crash_burst: Vec<SolveRequest> = (0..4 * s_served)
+            .map(|i| {
+                SolveRequest::on_mesh(
+                    10_000 + i as u64,
+                    SHARD_MESH_IDS[i % 4],
+                    (0..sharded_mesh.n_nodes()).map(|_| rng.uniform_in(-1.0, 1.0)).collect(),
+                )
+            })
+            .collect();
+        let victim = crash_server.shard_of(SHARD_MESH_IDS[0]);
+        faults::reset();
+        faults::arm(faults::SHARD_PANIC, Fault::always().on_lanes(&[victim]).hits(1));
+        let t0 = Instant::now();
+        let mut clat: Vec<f64> = Vec::with_capacity(4 * s_served);
+        let mut clost = 0u64;
+        for rx in crash_server.submit_many(crash_burst) {
+            match rx.recv().expect("supervised server answers every request") {
+                Ok(_) => clat.push(t0.elapsed().as_secs_f64() * 1e3),
+                Err(_) => clost += 1,
+            }
+        }
+        faults::reset();
+        clat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let cpct = |p: f64| {
+            if clat.is_empty() {
+                0.0
+            } else {
+                clat[((clat.len() - 1) as f64 * p).round() as usize]
+            }
+        };
+        let cstats = crash_server.stats().expect("respawned workers answer stats");
+        println!(
+            "crash arm (shard {victim} killed mid-run): {} served (p50 {:.2} ms, p99 {:.2} ms), \
+             {} requeued, {clost} lost, {} respawns",
+            clat.len(),
+            cpct(0.5),
+            cpct(0.99),
+            cstats.requeued_requests,
+            cstats.worker_respawns
+        );
+        sharded_meta.push(("crash_served_p50_ms".to_string(), cpct(0.5)));
+        sharded_meta.push(("crash_served_p99_ms".to_string(), cpct(0.99)));
+        sharded_meta.push(("crash_requeued".to_string(), cstats.requeued_requests as f64));
+        sharded_meta.push(("crash_lost".to_string(), cstats.lost_requests as f64));
+        sharded_meta.push(("crash_respawns".to_string(), cstats.worker_respawns as f64));
+    }
+
     let mut meta: Vec<(String, f64)> = vec![
         ("batch".to_string(), s_served as f64),
         ("n_dofs".to_string(), mesh.n_nodes() as f64),

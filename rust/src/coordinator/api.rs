@@ -165,6 +165,22 @@ pub enum SolveError {
         stats: SolveStats,
         escalation: Option<EscalationReport>,
     },
+    /// The shard worker holding this request died (a panic escaped the
+    /// per-chunk isolation) and the supervisor's per-request retry budget
+    /// was exhausted, so the request was not requeued. The input was never
+    /// at fault: `retryable: true` means an identical resubmission is
+    /// expected to succeed on the respawned worker.
+    WorkerLost {
+        id: u64,
+        /// Index of the shard whose worker died holding the request.
+        shard: usize,
+        /// Whether resubmitting the identical request is reasonable.
+        retryable: bool,
+    },
+    /// The server was asked to shut down with a drain deadline
+    /// ([`super::router::BatchServer::shutdown_within`]) and the deadline
+    /// passed before this request was served.
+    Shutdown { id: u64 },
 }
 
 impl SolveError {
@@ -175,7 +191,9 @@ impl SolveError {
             | SolveError::Expired { id }
             | SolveError::Overloaded { id, .. }
             | SolveError::Unhealthy { id, .. }
-            | SolveError::Solver { id, .. } => *id,
+            | SolveError::Solver { id, .. }
+            | SolveError::WorkerLost { id, .. }
+            | SolveError::Shutdown { id } => *id,
         }
     }
 }
@@ -205,6 +223,14 @@ impl std::fmt::Display for SolveError {
                     write!(f, "; escalation ladder exhausted after {} stages", rep.attempts.len())?;
                 }
                 Ok(())
+            }
+            SolveError::WorkerLost { id, shard, retryable } => write!(
+                f,
+                "request {id}: shard {shard} worker died holding the request; \
+                 retry budget exhausted (retryable: {retryable})"
+            ),
+            SolveError::Shutdown { id } => {
+                write!(f, "request {id}: server shut down before the request was served")
             }
         }
     }
@@ -257,6 +283,66 @@ impl ShardConfig {
 impl Default for ShardConfig {
     fn default() -> ShardConfig {
         ShardConfig::from_env()
+    }
+}
+
+/// Supervision policy of a [`super::router::BatchServer`]: whether a
+/// router-side supervisor thread watches the shard workers and what it
+/// does when one dies.
+///
+/// Default-off, like every robustness layer in this crate: without
+/// [`super::router::BatchServer::set_supervision_config`] no supervisor
+/// thread exists, workers are never parked-for and never respawned, and
+/// every serving path is bitwise identical to the unsupervised server
+/// (pinned by `crash_recovery.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SupervisionConfig {
+    /// Spawn the supervisor thread and park in-flight batches so a dead
+    /// worker's requests are salvageable.
+    pub enabled: bool,
+    /// Per-request retry budget: how many times one request may be
+    /// requeued after losing its worker before it is answered with a
+    /// typed [`SolveError::WorkerLost`]. `0` = never requeue (every
+    /// salvaged request is answered `WorkerLost { retryable: true }`).
+    pub max_requeues: u32,
+    /// Supervisor poll period in milliseconds (liveness checks + respawn
+    /// latency; also the granularity of wedge detection).
+    pub poll_ms: u64,
+    /// Declare a live worker *wedged* when its heartbeat has not advanced
+    /// for this long while its queue is non-empty. Detection only — a
+    /// wedged thread cannot be killed, so the supervisor counts the
+    /// episode ([`CoordinatorStats::wedged_detections`]) for operators
+    /// instead of respawning. `0` disables wedge detection.
+    pub wedged_after_ms: u64,
+}
+
+impl SupervisionConfig {
+    /// No supervision (the default): no supervisor thread, no parking,
+    /// bitwise-identical serving to the unsupervised server.
+    pub fn disabled() -> SupervisionConfig {
+        SupervisionConfig {
+            enabled: false,
+            max_requeues: 0,
+            poll_ms: 2,
+            wedged_after_ms: 0,
+        }
+    }
+
+    /// Supervision with one requeue attempt per request — the
+    /// production-shaped default for crash tolerance.
+    pub fn supervised() -> SupervisionConfig {
+        SupervisionConfig {
+            enabled: true,
+            max_requeues: 1,
+            poll_ms: 2,
+            wedged_after_ms: 0,
+        }
+    }
+}
+
+impl Default for SupervisionConfig {
+    fn default() -> SupervisionConfig {
+        SupervisionConfig::disabled()
     }
 }
 
@@ -348,8 +434,30 @@ pub struct CoordinatorStats {
     /// siblings, summed over shards. Always 0 with stealing off or
     /// `num_shards = 1`.
     pub stolen_groups: u64,
+    /// Steal candidates an idle shard skipped because the group's mesh
+    /// breaker was Open (shedding belongs on the home shard) or HalfOpen
+    /// (the probe group must not migrate), summed over shards.
+    pub steals_skipped: u64,
     /// The admission bound currently in force: the configured
     /// `set_max_queue` value, or its tightened fraction while adaptive
     /// shedding is active (`0` = unbounded).
     pub effective_max_queue: u64,
+    /// Shard workers respawned by the supervisor after dying (a panic
+    /// escaping the per-chunk isolation). Router-owned: 0 in per-shard
+    /// partial stats, set once on the folded total.
+    pub worker_respawns: u64,
+    /// Salvaged in-flight requests the supervisor requeued onto a live
+    /// worker after their shard died (each within its retry budget).
+    /// Router-owned.
+    pub requeued_requests: u64,
+    /// Salvaged in-flight requests answered with a typed
+    /// [`SolveError::WorkerLost`] because their retry budget was
+    /// exhausted. Router-owned.
+    pub lost_requests: u64,
+    /// Requests answered with a typed [`SolveError::Shutdown`] because
+    /// the drain deadline of `shutdown_within` passed first. Router-owned.
+    pub shutdown_answered: u64,
+    /// Wedge episodes detected: a live worker whose heartbeat stalled
+    /// past `wedged_after_ms` with work queued. Router-owned.
+    pub wedged_detections: u64,
 }

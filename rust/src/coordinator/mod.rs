@@ -13,8 +13,14 @@
 //!   mesh's queue slot, solver state and LRU accounting always live on
 //!   one shard (mesh affinity), and a burst lands as at most one queue
 //!   entry per shard. All submit-time decisions (deadline expiry,
-//!   circuit-breaker sheds, bounded per-shard admission) are made by the
-//!   router before a request reaches any queue.
+//!   circuit-breaker sheds, bounded admission) are made by the router
+//!   before a request reaches any queue.
+//! * **Global admission.** The bound set by [`BatchServer::set_max_queue`]
+//!   is enforced against ONE server-wide in-flight depth, admitted or
+//!   rejected all-or-nothing per burst — so [`SolveError::Overloaded`]
+//!   semantics are identical at `TG_SHARDS=1` and `TG_SHARDS=8` (pinned
+//!   by `tests/crash_recovery.rs`). Per-shard depths remain as live
+//!   observability ([`BatchServer::per_shard`]), not as the gate.
 //! * **Per-shard drain.** Each shard worker drains its own queue exactly
 //!   like the original single worker: pending requests are grouped by
 //!   `(mesh_id, request kind)` and the groups served round-robin in
@@ -23,13 +29,17 @@
 //!   scalar `solve_one` path reserved for singleton groups — so a large
 //!   group cannot starve other meshes within a drain cycle.
 //! * **Steal granularity.** With stealing on (`TG_STEAL`, default), an
-//!   idle shard steals the hottest whole `(mesh_id, kind)` group from a
-//!   busy sibling's queue — never a partial group — so batched dispatch
-//!   and the bitwise lockstep semantics survive stealing unchanged; the
+//!   idle shard steals a whole `(mesh_id, kind)` group from a busy
+//!   sibling's queue — never a partial group — so batched dispatch and
+//!   the bitwise lockstep semantics survive stealing unchanged; the
 //!   stolen mesh's built `Arc<BatchSolver>` is cloned from the victim's
-//!   registry, never rebuilt. With `num_shards = 1` and stealing off
-//!   ([`ShardConfig::single`]) every path is bitwise identical to the
-//!   single-worker server (pinned by `tests/sharded_server.rs`).
+//!   registry, never rebuilt. Candidates are breaker-gated (an Open
+//!   mesh's backlog and a HalfOpen mesh's probe group never migrate;
+//!   skips are counted in [`CoordinatorStats::steals_skipped`]) and
+//!   ranked by hotness × estimated per-iteration cost × queue age. With
+//!   `num_shards = 1` and stealing off ([`ShardConfig::single`]) every
+//!   path is bitwise identical to the single-worker server (pinned by
+//!   `tests/sharded_server.rs`).
 //! * **Stats semantics.** [`CoordinatorStats`] stays the aggregate view:
 //!   per-shard partials are folded with monotone counters SUMMED and the
 //!   queue high-water mark MAXED over shards (a depth, not a flow);
@@ -85,6 +95,13 @@
 //!   [`crate::solver::FailureKind`] (max-iterations, stagnation,
 //!   breakdown, non-finite), including the escalation ladder's per-stage
 //!   accounting when the session policy ran it and it was exhausted.
+//! * [`SolveError::WorkerLost`] — the shard worker died holding the
+//!   request (a panic escaped the per-chunk isolation) and the
+//!   supervision retry budget was exhausted (or supervision was off at
+//!   shutdown); `retryable` says whether an identical resubmission is
+//!   expected to succeed.
+//! * [`SolveError::Shutdown`] — [`BatchServer::shutdown_within`]'s drain
+//!   deadline passed before the request was served.
 //!
 //! When [`crate::solver::EscalationPolicy`] is enabled on the server's
 //! `SolverConfig`, failed lanes are retried through the session ladder
@@ -115,6 +132,43 @@
 //! transitions, sheds, skipped rungs and the effective bound are
 //! surfaced in [`CoordinatorStats`]; per-mesh [`HealthSnapshot`]s via
 //! [`BatchServer::health`].
+//!
+//! # Supervision: crash tolerance and the answer guarantee
+//!
+//! [`BatchServer::set_supervision_config`] (off by default — disabled
+//! supervision keeps every serving path bitwise identical to the
+//! unsupervised server, pinned by `tests/crash_recovery.rs`) makes the
+//! serving contract *every submitted request gets exactly one typed
+//! answer, even across worker crashes*. The lifecycle:
+//!
+//! 1. **Liveness.** A router-side supervisor thread polls each shard:
+//!    a `JoinHandle` watchdog detects a dead worker (a panic that escaped
+//!    the per-chunk isolation — e.g. a registry state build blowing up),
+//!    and a heartbeat epoch bumped each drain iteration detects a *wedged*
+//!    one (alive but stuck with work queued; counted in
+//!    [`CoordinatorStats::wedged_detections`], not killed).
+//! 2. **Respawn.** A dead worker is replaced immediately. Workers are
+//!    disposable: the registry (the retained mesh topology store plus
+//!    built states), the queue and the monotone serving counters all live
+//!    on the shard handle, so the respawned worker rebuilds any lost
+//!    per-mesh solver state lazily and the folded stats never reset.
+//! 3. **Salvage.** Before serving, a supervised worker parks clones of
+//!    its in-flight batch on the handle, each sharing an answered flag
+//!    with the live reply. After a crash the supervisor requeues the
+//!    unanswered remainder to each request's home shard — bounded by the
+//!    per-request retry budget ([`SupervisionConfig::max_requeues`]) —
+//!    and answers the rest with a typed [`SolveError::WorkerLost`]. A
+//!    HalfOpen probe group that died with its worker has its probe slot
+//!    canceled, so a breaker cannot wedge in HalfOpen forever.
+//! 4. **Shutdown.** [`BatchServer::shutdown`] still drains everything;
+//!    [`BatchServer::shutdown_within`] bounds the wait and answers the
+//!    undrained remainder with a typed [`SolveError::Shutdown`] instead
+//!    of dropped channels.
+//!
+//! Respawns, requeues, losses, deadline-shutdown answers and wedge
+//! detections are surfaced in [`CoordinatorStats`]; the crash drivers are
+//! the `SHARD_PANIC` / `SESSION_BUILD_PANIC` failpoints under the
+//! `fault-inject` feature (`util::faults`).
 
 pub mod api;
 pub mod batcher;
@@ -124,7 +178,7 @@ mod shard;
 pub use crate::session::health::{BreakerState, HealthConfig, HealthSnapshot};
 pub use api::{
     CoordinatorStats, ShardConfig, ShardStats, SolveError, SolveRequest, SolveResponse,
-    VarCoeffRequest, DEFAULT_MESH,
+    SupervisionConfig, VarCoeffRequest, DEFAULT_MESH,
 };
 pub use batcher::BatchSolver;
 pub use router::BatchServer;

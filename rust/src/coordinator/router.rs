@@ -11,13 +11,28 @@
 //! shard, so each shard's slice of the burst still lands in a single
 //! drain cycle.
 //!
-//! Admission is bounded PER SHARD: the configured `max_queue` applies to
-//! each shard's in-flight depth, and a burst's per-shard slice is
-//! rejected all-or-nothing (the single-shard case is exactly the
-//! whole-burst semantics of the previous server). Health tracking is
+//! Admission is bounded GLOBALLY: the configured `max_queue` applies to
+//! one server-wide in-flight depth ([`super::shard::Admission::depth`]),
+//! and a burst is admitted or rejected all-or-nothing against it — so
+//! `Overloaded` behavior is identical at `TG_SHARDS=1` and `TG_SHARDS=8`
+//! (a single shard was already whole-burst). Health tracking is
 //! GLOBAL: one `HealthRegistry` serves router-side admission, drain-time
 //! straggler sheds and outcome observation on every shard, which makes
 //! the one-probe-group-per-mesh invariant hold across shards for free.
+//!
+//! Supervision (default-off, [`BatchServer::set_supervision_config`]):
+//! a router-side supervisor thread polls per-shard liveness — a
+//! `JoinHandle` watchdog for dead workers, a heartbeat epoch for wedged
+//! ones — and on a crash respawns the worker (the registry and counters
+//! live on the [`ShardHandle`], which outlives the thread), then salvages
+//! the parked in-flight batch: unanswered requests are requeued to their
+//! mesh's home shard within a per-request retry budget, the rest are
+//! answered with a typed [`SolveError::WorkerLost`]; a HalfOpen probe
+//! group that died with its worker has its probe slot canceled. Every
+//! submitted request gets exactly ONE typed answer, crash or not.
+//! [`BatchServer::shutdown_within`] bounds shutdown: queued requests
+//! that do not drain before the deadline are answered with a typed
+//! [`SolveError::Shutdown`] instead of a dropped channel.
 //!
 //! Stats: [`BatchServer::stats`] broadcasts to every shard, folds the
 //! per-shard partials (monotone counters summed, queue high-water maxed
@@ -29,11 +44,11 @@
 //! single-worker server, pinned by `tests/sharded_server.rs`.
 
 use std::collections::HashMap;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -43,9 +58,11 @@ use crate::solver::SolverConfig;
 
 use super::api::{
     CoordinatorStats, ShardConfig, ShardStats, SolveError, SolveRequest, SolveResponse,
-    VarCoeffRequest, DEFAULT_MESH,
+    SupervisionConfig, VarCoeffRequest, DEFAULT_MESH,
 };
-use super::shard::{Admission, HealthShared, Msg, Req, ShardHandle, ShardWorker};
+use super::shard::{
+    Admission, HealthShared, Msg, Reply, Req, ShardHandle, ShardWorker, SupervisionShared,
+};
 
 /// Hard cap on the shard worker count: shard workers are cheap (they
 /// pipeline into the one global solve pool rather than spawning threads),
@@ -65,12 +82,22 @@ fn splitmix64(mut x: u64) -> u64 {
 /// Handle to the running sharded server.
 pub struct BatchServer {
     shards: Arc<Vec<ShardHandle>>,
-    workers: Vec<JoinHandle<()>>,
+    /// Worker join handles, slot-per-shard; shared with the supervisor so
+    /// it can watch, join and replace a dead shard's handle in place.
+    workers: Arc<Mutex<Vec<Option<JoinHandle<()>>>>>,
     max_batch: usize,
     num_shards: usize,
     steal: bool,
     admission: Arc<Admission>,
     health: Arc<HealthShared>,
+    sup: Arc<SupervisionShared>,
+    supervisor: Mutex<Option<Supervisor>>,
+}
+
+/// The running supervisor thread and its stop flag.
+struct Supervisor {
+    stop: Arc<AtomicBool>,
+    thread: JoinHandle<()>,
 }
 
 /// Fold per-shard PARTIAL stats into one aggregate: every monotone
@@ -102,9 +129,38 @@ pub(super) fn fold_stats(parts: &[CoordinatorStats]) -> CoordinatorStats {
         s.skipped_rungs += p.skipped_rungs;
         s.queue_tightenings += p.queue_tightenings;
         s.stolen_groups += p.stolen_groups;
+        s.steals_skipped += p.steals_skipped;
         s.queue_high_water = s.queue_high_water.max(p.queue_high_water);
     }
     s
+}
+
+/// Spawn one shard worker thread over the shared handles. Used both at
+/// startup and by the supervisor when it resurrects a crashed shard: the
+/// worker carries no state of its own (registry, queue and counters all
+/// live on the [`ShardHandle`]), so a respawn is exactly a restart.
+fn spawn_shard_worker(
+    idx: usize,
+    shards: &Arc<Vec<ShardHandle>>,
+    max_batch: usize,
+    steal: bool,
+    admission: &Arc<Admission>,
+    health: &Arc<HealthShared>,
+    sup: &Arc<SupervisionShared>,
+) -> JoinHandle<()> {
+    let w = ShardWorker::new(
+        idx,
+        Arc::clone(shards),
+        max_batch,
+        steal,
+        Arc::clone(admission),
+        Arc::clone(health),
+        Arc::clone(sup),
+    );
+    std::thread::Builder::new()
+        .name(format!("tg-shard-{idx}"))
+        .spawn(move || w.run())
+        .expect("spawn shard worker")
 }
 
 impl BatchServer {
@@ -149,26 +205,26 @@ impl BatchServer {
         );
         let admission = Arc::new(Admission::default());
         let health = Arc::new(HealthShared::new());
+        let sup = Arc::new(SupervisionShared::new());
         for (mesh_id, mesh) in meshes {
             let si = shard_of_n(mesh_id, num_shards);
             shards[si].registry().register(mesh_id, mesh);
         }
-        let workers = (0..num_shards)
-            .map(|idx| {
-                let w = ShardWorker::new(
-                    idx,
-                    Arc::clone(&shards),
-                    max_batch,
-                    steal,
-                    Arc::clone(&admission),
-                    Arc::clone(&health),
-                );
-                std::thread::Builder::new()
-                    .name(format!("tg-shard-{idx}"))
-                    .spawn(move || w.run())
-                    .expect("spawn shard worker")
-            })
-            .collect();
+        let workers = Arc::new(Mutex::new(
+            (0..num_shards)
+                .map(|idx| {
+                    Some(spawn_shard_worker(
+                        idx,
+                        &shards,
+                        max_batch,
+                        steal,
+                        &admission,
+                        &health,
+                        &sup,
+                    ))
+                })
+                .collect::<Vec<_>>(),
+        ));
         BatchServer {
             shards,
             workers,
@@ -177,6 +233,8 @@ impl BatchServer {
             steal,
             admission,
             health,
+            sup,
+            supervisor: Mutex::new(None),
         }
     }
 
@@ -204,14 +262,14 @@ impl BatchServer {
         shard_of_n(mesh_id, self.num_shards)
     }
 
-    /// Bound the admission queue: a burst slice that would push a shard's
-    /// in-flight depth (submitted but not yet drained) past `n` is
-    /// rejected at submission with [`SolveError::Overloaded`] per request
-    /// — it never reaches the shard. The bound applies PER SHARD (with
-    /// one shard this is exactly the old whole-queue bound). `0` removes
-    /// the bound (the default). Setting the bound also resets any
-    /// adaptive tightening: `n` becomes both the base and the effective
-    /// bound until the next retune.
+    /// Bound the admission queue: a burst that would push the GLOBAL
+    /// in-flight depth (submitted but not yet drained, summed over all
+    /// shards) past `n` is rejected at submission with
+    /// [`SolveError::Overloaded`] per request — it never reaches a shard,
+    /// and the decision is all-or-nothing per burst, so it is independent
+    /// of the shard count. `0` removes the bound (the default). Setting
+    /// the bound also resets any adaptive tightening: `n` becomes both
+    /// the base and the effective bound until the next retune.
     pub fn set_max_queue(&self, n: usize) {
         self.admission.base_max_queue.store(n, Ordering::Relaxed);
         self.admission.max_queue.store(n, Ordering::Relaxed);
@@ -242,6 +300,55 @@ impl BatchServer {
     /// `HealthConfig::manual_clock`). A no-op on the wall clock.
     pub fn advance_health_clock(&self, ms: u64) {
         self.health.lock().advance_clock(ms);
+    }
+
+    /// Enable (or reconfigure) the supervision layer.
+    /// [`SupervisionConfig::supervised`] starts a router-side supervisor
+    /// thread that watches per-shard liveness and resurrects crashed
+    /// workers, salvaging their parked in-flight batches (see the module
+    /// docs for the answer guarantees); [`SupervisionConfig::disabled`]
+    /// stops it. While disabled (the default) every serving path is
+    /// bitwise identical to the unsupervised stack — workers skip the
+    /// in-flight parking entirely.
+    pub fn set_supervision_config(&self, cfg: SupervisionConfig) {
+        self.stop_supervisor();
+        self.sup.max_requeues.store(cfg.max_requeues as u64, Ordering::Relaxed);
+        self.sup.enabled.store(cfg.enabled, Ordering::Relaxed);
+        if !cfg.enabled {
+            return;
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let ctx = SupervisorCtx {
+            shards: Arc::clone(&self.shards),
+            workers: Arc::clone(&self.workers),
+            sup: Arc::clone(&self.sup),
+            admission: Arc::clone(&self.admission),
+            health: Arc::clone(&self.health),
+            max_batch: self.max_batch,
+            steal: self.steal,
+            poll: Duration::from_millis(cfg.poll_ms.max(1)),
+            wedged_after: (cfg.wedged_after_ms > 0)
+                .then(|| Duration::from_millis(cfg.wedged_after_ms)),
+            stop: Arc::clone(&stop),
+        };
+        let thread = std::thread::Builder::new()
+            .name("tg-supervisor".into())
+            .spawn(move || ctx.run())
+            .expect("spawn supervisor");
+        *self.lock_supervisor() = Some(Supervisor { stop, thread });
+    }
+
+    fn lock_supervisor(&self) -> MutexGuard<'_, Option<Supervisor>> {
+        self.supervisor.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Stop the supervisor thread if one is running (idempotent).
+    fn stop_supervisor(&self) {
+        let running = self.lock_supervisor().take();
+        if let Some(s) = running {
+            s.stop.store(true, Ordering::Relaxed);
+            let _ = s.thread.join();
+        }
     }
 
     /// Register (or replace) a mesh topology on the running server — it
@@ -345,66 +452,78 @@ impl BatchServer {
                 reg.note_shed(shed);
             }
         }
-        // Bounded admission, per home shard, for the undecided remainder:
-        // each shard's slice is admitted or rejected all-or-nothing (one
-        // shard ⇒ exactly the old whole-burst semantics).
+        // Bounded admission for the undecided remainder, against ONE
+        // global in-flight depth: the whole burst is admitted or rejected
+        // all-or-nothing, so the `Overloaded` decision is independent of
+        // how the burst happens to split across shards — identical at
+        // `TG_SHARDS=1` and `TG_SHARDS=8` (a single shard was already
+        // whole-burst, so this is also bitwise the old one-shard check).
         let mut shard_k = vec![0usize; self.num_shards];
+        let mut k_total = 0usize;
         for (req, slot) in reqs.iter().zip(decisions.iter()) {
             if slot.is_none() {
                 shard_k[self.shard_of(req.mesh_id())] += 1;
+                k_total += 1;
             }
         }
         let max = adm.max_queue.load(Ordering::Relaxed);
-        let mut overloaded: Vec<Option<(usize, usize)>> = vec![None; self.num_shards];
-        let mut any_overloaded = false;
-        for (si, &k) in shard_k.iter().enumerate() {
-            if k == 0 {
-                continue;
-            }
-            let h = &self.shards[si];
-            let prev = h.depth.fetch_add(k, Ordering::Relaxed);
-            if max > 0 && prev + k > max {
-                // Shed this shard's slice without enqueueing (the worker
-                // never sees it), answering each request with a typed
-                // rejection the caller can back off on.
-                h.depth.fetch_sub(k, Ordering::Relaxed);
-                h.rejected.fetch_add(k as u64, Ordering::Relaxed);
-                overloaded[si] = Some((prev, max));
-                any_overloaded = true;
+        let mut overloaded: Option<(usize, usize)> = None;
+        if k_total > 0 {
+            let prev = adm.depth.fetch_add(k_total, Ordering::Relaxed);
+            if max > 0 && prev + k_total > max {
+                // Shed the whole burst without enqueueing (no worker ever
+                // sees it), answering each request with a typed rejection
+                // the caller can back off on. Rejections are attributed
+                // to each request's home shard for observability.
+                adm.depth.fetch_sub(k_total, Ordering::Relaxed);
+                for (si, &k) in shard_k.iter().enumerate() {
+                    if k > 0 {
+                        self.shards[si].rejected.fetch_add(k as u64, Ordering::Relaxed);
+                    }
+                }
+                overloaded = Some((prev, max));
             } else {
-                h.high_water.fetch_max((prev + k) as u64, Ordering::Relaxed);
-            }
-        }
-        // A rejected slice may have carried some meshes' HalfOpen probes:
-        // free the probe slot so the next burst can probe instead of
-        // waiting out the timeout.
-        if any_overloaded && !probe_meshes.is_empty() {
-            let mut reg = self.health.lock();
-            for &m in &probe_meshes {
-                if overloaded[self.shard_of(m)].is_some() {
-                    reg.cancel_probe(m);
+                // Per-shard depth/high-water stay maintained as live
+                // observability (`per_shard`), not as admission authority.
+                for (si, &k) in shard_k.iter().enumerate() {
+                    if k > 0 {
+                        let h = &self.shards[si];
+                        let p = h.depth.fetch_add(k, Ordering::Relaxed);
+                        h.high_water.fetch_max((p + k) as u64, Ordering::Relaxed);
+                    }
                 }
             }
         }
-        let mut items: Vec<Vec<(Req, super::shard::Reply)>> =
+        // A rejected burst may have carried some meshes' HalfOpen probes:
+        // free the probe slot so the next burst can probe instead of
+        // waiting out the timeout.
+        if overloaded.is_some() && !probe_meshes.is_empty() {
+            let mut reg = self.health.lock();
+            for &m in &probe_meshes {
+                reg.cancel_probe(m);
+            }
+        }
+        let mut items: Vec<Vec<(Req, Reply)>> =
             (0..self.num_shards).map(|_| Vec::new()).collect();
         let mut receivers = Vec::with_capacity(n);
         for (req, decision) in reqs.into_iter().zip(decisions) {
             let (reply_tx, reply_rx) = channel();
             if let Some(err) = decision {
                 let _ = reply_tx.send(Err(err.into()));
+            } else if let Some((prev, max)) = overloaded {
+                let err = SolveError::Overloaded {
+                    id: req.id(),
+                    queue_depth: prev,
+                    max_queue: max,
+                };
+                let _ = reply_tx.send(Err(err.into()));
             } else {
                 let si = self.shard_of(req.mesh_id());
-                if let Some((prev, max)) = overloaded[si] {
-                    let err = SolveError::Overloaded {
-                        id: req.id(),
-                        queue_depth: prev,
-                        max_queue: max,
-                    };
-                    let _ = reply_tx.send(Err(err.into()));
-                } else {
-                    items[si].push((req, reply_tx));
-                }
+                let mut reply = Reply::new(reply_tx);
+                // Tag the probe group's members: if the worker serving
+                // them crashes, salvage must free the probe slot.
+                reply.probe = probe_meshes.contains(&req.mesh_id());
+                items[si].push((req, reply));
             }
             receivers.push(reply_rx);
         }
@@ -417,8 +536,9 @@ impl BatchServer {
                 // The worker is gone (shutdown): answer immediately
                 // instead of leaving callers parked on `recv` forever.
                 self.shards[si].depth.fetch_sub(k, Ordering::Relaxed);
+                self.admission.depth.fetch_sub(k, Ordering::Relaxed);
                 for (req, reply) in batch {
-                    let _ = reply.send(Err(anyhow!(
+                    reply.send(Err(anyhow!(
                         "batch server worker is gone; request {} was not accepted",
                         req.id()
                     )));
@@ -480,6 +600,7 @@ impl BatchServer {
             p.rejected_requests = h.rejected.load(Ordering::Relaxed);
             p.queue_high_water = h.high_water.load(Ordering::Relaxed);
             p.stolen_groups = h.stolen.load(Ordering::Relaxed);
+            p.steals_skipped = h.steals_skipped.load(Ordering::Relaxed);
             parts.push(p);
         }
         let mut s = fold_stats(&parts);
@@ -498,6 +619,11 @@ impl BatchServer {
             s.breaker_closes = reg.closes();
             s.queue_tightenings = reg.tightenings();
         }
+        s.worker_respawns = self.sup.respawns.load(Ordering::Relaxed);
+        s.requeued_requests = self.sup.requeued.load(Ordering::Relaxed);
+        s.lost_requests = self.sup.lost.load(Ordering::Relaxed);
+        s.shutdown_answered = self.sup.shutdown_answered.load(Ordering::Relaxed);
+        s.wedged_detections = self.sup.wedged.load(Ordering::Relaxed);
         Some(s)
     }
 
@@ -521,28 +647,277 @@ impl BatchServer {
     /// Stop all shard workers, flushing (batched) any pending requests.
     /// Idempotent; also run by `Drop`.
     pub fn shutdown(&mut self) {
+        self.sup.shutting_down.store(true, Ordering::Relaxed);
+        self.stop_supervisor();
         for h in self.shards.iter() {
             h.queue.close_and_shutdown();
         }
-        for w in self.workers.drain(..) {
+        self.join_workers();
+        self.flush_leftovers(false);
+    }
+
+    /// Graceful shutdown with a drain deadline: stop accepting, let the
+    /// workers drain for at most `ms` milliseconds, then answer every
+    /// request still queued (or parked on a dead worker) with a typed
+    /// [`SolveError::Shutdown`] instead of a dropped channel. A request
+    /// already mid-dispatch still completes — the deadline bounds how
+    /// long we WAIT for the queues, not an in-progress solve — so the
+    /// final join can outlast the deadline by one dispatch.
+    pub fn shutdown_within(&mut self, ms: u64) {
+        self.sup.shutting_down.store(true, Ordering::Relaxed);
+        self.stop_supervisor();
+        for h in self.shards.iter() {
+            h.queue.close_and_shutdown();
+        }
+        let deadline = Instant::now() + Duration::from_millis(ms);
+        loop {
+            let all_done = {
+                let ws = self.lock_workers();
+                ws.iter().all(|w| w.as_ref().is_none_or(|w| w.is_finished()))
+            };
+            if all_done || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Deadline passed with work still queued: pull the remaining
+        // batches out from under the (still draining) workers and answer
+        // them typed. The Shutdown sentinel stays queued, so each worker
+        // still exits after its current dispatch.
+        for h in self.shards.iter() {
+            for batch in h.queue.extract_many() {
+                h.depth.fetch_sub(batch.len(), Ordering::Relaxed);
+                self.admission.depth.fetch_sub(batch.len(), Ordering::Relaxed);
+                for (req, reply) in batch {
+                    self.sup.shutdown_answered.fetch_add(1, Ordering::Relaxed);
+                    reply.send(Err(SolveError::Shutdown { id: req.id() }.into()));
+                }
+            }
+        }
+        self.join_workers();
+        self.flush_leftovers(true);
+    }
+
+    fn lock_workers(&self) -> MutexGuard<'_, Vec<Option<JoinHandle<()>>>> {
+        self.workers.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Blocking-join every worker (slots already reaped are `None`).
+    fn join_workers(&self) {
+        let handles: Vec<JoinHandle<()>> = {
+            let mut ws = self.lock_workers();
+            ws.iter_mut().filter_map(|w| w.take()).collect()
+        };
+        for w in handles {
             let _ = w.join();
         }
-        // A submission racing the close may have landed behind the
-        // Shutdown message: answer those requests instead of leaving
-        // their callers parked on `recv` forever.
-        for h in self.shards.iter() {
+    }
+
+    /// Answer whatever is still sitting in the queues (a submission that
+    /// raced the close) or parked on a dead worker's handle, so no caller
+    /// stays parked on `recv` forever. `typed` selects the deadline
+    /// shutdown's [`SolveError::Shutdown`] over the legacy message.
+    fn flush_leftovers(&self, typed: bool) {
+        for (si, h) in self.shards.iter().enumerate() {
             for msg in h.queue.drain() {
                 if let Msg::Many(batch) = msg {
                     h.depth.fetch_sub(batch.len(), Ordering::Relaxed);
+                    self.admission.depth.fetch_sub(batch.len(), Ordering::Relaxed);
                     for (req, reply) in batch {
-                        let _ = reply.send(Err(anyhow!(
-                            "batch server worker is gone; request {} was not accepted",
-                            req.id()
-                        )));
+                        if typed {
+                            self.sup.shutdown_answered.fetch_add(1, Ordering::Relaxed);
+                            reply.send(Err(SolveError::Shutdown { id: req.id() }.into()));
+                        } else {
+                            reply.send(Err(anyhow!(
+                                "batch server worker is gone; request {} was not accepted",
+                                req.id()
+                            )));
+                        }
                     }
                 }
                 // Register acks and Stats senders are simply dropped:
                 // their receivers see a disconnect, not a hang.
+            }
+            // A worker that died holding a parked batch, with the
+            // supervisor already stopped, leaves it on the handle: answer
+            // the unanswered remainder (not retryable — the server is
+            // gone). Dispatch already removed these from depth.
+            let parked = std::mem::take(&mut *h.inflight());
+            for (req, reply) in parked {
+                if reply.answered.as_ref().is_some_and(|f| f.load(Ordering::Acquire)) {
+                    continue;
+                }
+                self.sup.lost.fetch_add(1, Ordering::Relaxed);
+                let err = SolveError::WorkerLost { id: req.id(), shard: si, retryable: false };
+                reply.send(Err(err.into()));
+            }
+        }
+    }
+}
+
+/// Everything the supervisor thread needs, cloned out of the server so
+/// the thread borrows nothing and survives the `BatchServer` handle
+/// moving across threads.
+struct SupervisorCtx {
+    shards: Arc<Vec<ShardHandle>>,
+    workers: Arc<Mutex<Vec<Option<JoinHandle<()>>>>>,
+    sup: Arc<SupervisionShared>,
+    admission: Arc<Admission>,
+    health: Arc<HealthShared>,
+    max_batch: usize,
+    steal: bool,
+    poll: Duration,
+    wedged_after: Option<Duration>,
+    stop: Arc<AtomicBool>,
+}
+
+impl SupervisorCtx {
+    fn run(&self) {
+        // Per-shard wedge tracking: last observed heartbeat epoch, when
+        // it last advanced, and whether this stall was already counted.
+        let mut seen: Vec<(u64, Instant, bool)> = self
+            .shards
+            .iter()
+            .map(|h| (h.heartbeat.load(Ordering::Relaxed), Instant::now(), false))
+            .collect();
+        while !self.stop.load(Ordering::Relaxed)
+            && !self.sup.shutting_down.load(Ordering::Relaxed)
+        {
+            for idx in 0..self.shards.len() {
+                let finished = {
+                    let ws = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+                    ws[idx].as_ref().is_none_or(|w| w.is_finished())
+                };
+                if finished {
+                    // Re-check shutdown: a worker exiting because the
+                    // server is draining must not be "resurrected".
+                    if self.sup.shutting_down.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    self.resurrect(idx);
+                    seen[idx] = (
+                        self.shards[idx].heartbeat.load(Ordering::Relaxed),
+                        Instant::now(),
+                        false,
+                    );
+                    continue;
+                }
+                let hb = self.shards[idx].heartbeat.load(Ordering::Relaxed);
+                let (last_hb, since, counted) = &mut seen[idx];
+                if hb != *last_hb {
+                    (*last_hb, *since, *counted) = (hb, Instant::now(), false);
+                } else if let Some(window) = self.wedged_after {
+                    // Alive thread, stale heartbeat, work queued: wedged.
+                    // Counted for observability but NOT killed — the
+                    // thread may hold solver locks, and a std thread
+                    // cannot be safely terminated from outside.
+                    let depth = self.shards[idx].depth.load(Ordering::Relaxed);
+                    if !*counted && depth > 0 && since.elapsed() >= window {
+                        self.sup.wedged.fetch_add(1, Ordering::Relaxed);
+                        *counted = true;
+                    }
+                }
+            }
+            std::thread::sleep(self.poll);
+        }
+    }
+
+    /// Replace a dead shard worker, then answer or requeue whatever it
+    /// parked. Respawn happens FIRST so requeued groups land on a live
+    /// worker's queue; the new worker rebuilds any lost per-mesh solver
+    /// state lazily from the retained topology store on the handle.
+    fn resurrect(&self, idx: usize) {
+        {
+            let mut ws = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(corpse) = ws[idx].take() {
+                // Reap the dead thread (it already exited; join is
+                // immediate and swallows its panic payload).
+                let _ = corpse.join();
+            }
+            ws[idx] = Some(spawn_shard_worker(
+                idx,
+                &self.shards,
+                self.max_batch,
+                self.steal,
+                &self.admission,
+                &self.health,
+                &self.sup,
+            ));
+        }
+        self.sup.respawns.fetch_add(1, Ordering::Relaxed);
+        self.salvage(idx);
+    }
+
+    /// Answer-or-requeue the in-flight batch a dead worker left parked
+    /// on its handle: an unanswered request with retry budget left goes
+    /// back to its home shard's queue (re-entering depth accounting);
+    /// the rest get a typed [`SolveError::WorkerLost`]. A probe-tagged
+    /// request ANSWERED here also frees its mesh's HalfOpen probe slot,
+    /// so a breaker cannot wedge in HalfOpen because its probe died with
+    /// the worker (a REQUEUED probe keeps the slot — it will still be
+    /// served and observed).
+    fn salvage(&self, idx: usize) {
+        let parked = std::mem::take(&mut *self.shards[idx].inflight());
+        if parked.is_empty() {
+            return;
+        }
+        let n = self.shards.len();
+        let max_requeues = self.sup.max_requeues.load(Ordering::Relaxed);
+        let mut requeue: Vec<Vec<(Req, Reply)>> = (0..n).map(|_| Vec::new()).collect();
+        let mut dead_probe_meshes: Vec<u64> = Vec::new();
+        for (req, mut reply) in parked {
+            if reply.answered.as_ref().is_some_and(|f| f.load(Ordering::Acquire)) {
+                continue; // the worker answered this one before dying
+            }
+            if (reply.attempts as u64) < max_requeues {
+                reply.attempts += 1;
+                // The requeued copy is re-parked (with a fresh answered
+                // flag) by whichever worker dequeues it.
+                reply.answered = None;
+                requeue[shard_of_n(req.mesh_id(), n)].push((req, reply));
+            } else {
+                self.sup.lost.fetch_add(1, Ordering::Relaxed);
+                if reply.probe && !dead_probe_meshes.contains(&req.mesh_id()) {
+                    dead_probe_meshes.push(req.mesh_id());
+                }
+                let err =
+                    SolveError::WorkerLost { id: req.id(), shard: idx, retryable: true };
+                reply.send(Err(err.into()));
+            }
+        }
+        for (si, batch) in requeue.into_iter().enumerate() {
+            if batch.is_empty() {
+                continue;
+            }
+            let k = batch.len();
+            // Depth re-enters BEFORE the push: the worker decrements at
+            // dispatch, and must never observe the batch first.
+            self.shards[si].depth.fetch_add(k, Ordering::Relaxed);
+            self.admission.depth.fetch_add(k, Ordering::Relaxed);
+            match self.shards[si].queue.push(Msg::Many(batch)) {
+                Ok(()) => {
+                    self.sup.requeued.fetch_add(k as u64, Ordering::Relaxed);
+                }
+                Err(Msg::Many(batch)) => {
+                    // The requeue raced shutdown: answer typed instead of
+                    // dropping the channels.
+                    self.shards[si].depth.fetch_sub(k, Ordering::Relaxed);
+                    self.admission.depth.fetch_sub(k, Ordering::Relaxed);
+                    for (req, reply) in batch {
+                        self.sup.shutdown_answered.fetch_add(1, Ordering::Relaxed);
+                        if reply.probe && !dead_probe_meshes.contains(&req.mesh_id()) {
+                            dead_probe_meshes.push(req.mesh_id());
+                        }
+                        reply.send(Err(SolveError::Shutdown { id: req.id() }.into()));
+                    }
+                }
+                Err(_) => unreachable!("push returns the rejected message unchanged"),
+            }
+        }
+        if !dead_probe_meshes.is_empty() && self.health.enabled.load(Ordering::Relaxed) {
+            let mut reg = self.health.lock();
+            for &m in &dead_probe_meshes {
+                reg.cancel_probe(m);
             }
         }
     }
@@ -611,7 +986,13 @@ mod tests {
             skipped_rungs: 18,
             queue_tightenings: 19,
             stolen_groups: 20,
+            steals_skipped: 21,
             effective_max_queue: 0,
+            worker_respawns: 0,
+            requeued_requests: 0,
+            lost_requests: 0,
+            shutdown_answered: 0,
+            wedged_detections: 0,
         };
         let b = CoordinatorStats {
             batched_solves: 100,
@@ -635,7 +1016,13 @@ mod tests {
             skipped_rungs: 100,
             queue_tightenings: 100,
             stolen_groups: 100,
+            steals_skipped: 100,
             effective_max_queue: 0,
+            worker_respawns: 0,
+            requeued_requests: 0,
+            lost_requests: 0,
+            shutdown_answered: 0,
+            wedged_detections: 0,
         };
         let s = fold_stats(&[a, b]);
         assert_eq!(s.batched_solves, 101);
@@ -658,10 +1045,17 @@ mod tests {
         assert_eq!(s.skipped_rungs, 118);
         assert_eq!(s.queue_tightenings, 119);
         assert_eq!(s.stolen_groups, 120);
+        assert_eq!(s.steals_skipped, 121);
         // The one non-sum: a depth high-water mark folds as max.
         assert_eq!(s.queue_high_water, 40, "high-water must be max, not sum");
-        // Router-owned: untouched by the fold.
+        // Router-owned: untouched by the fold (the router fills these in
+        // from its own atomics AFTER folding — summing would double).
         assert_eq!(s.effective_max_queue, 0);
+        assert_eq!(s.worker_respawns, 0);
+        assert_eq!(s.requeued_requests, 0);
+        assert_eq!(s.lost_requests, 0);
+        assert_eq!(s.shutdown_answered, 0);
+        assert_eq!(s.wedged_detections, 0);
     }
 
     #[test]

@@ -10,15 +10,25 @@
 //!
 //! Work stealing: when stealing is enabled an *idle* shard (own queue
 //! empty after a short park) scans its siblings' queues and steals the
-//! hottest still-queued `(mesh_id, kind)` group — always the WHOLE group,
+//! best still-queued `(mesh_id, kind)` group — always the WHOLE group,
 //! never a split, so a stolen burst is still served by batched dispatch
-//! and every lane stays bitwise identical to the scalar oracle. The thief
-//! serves the group against the victim's registry slice (the victim's
-//! `Arc<BatchSolver>` is cloned, not rebuilt), so per-mesh state —
-//! sessions, LRU accounting, dispatch counters — stays homed on one
-//! shard. Queue and registry locks are never held together across
-//! shards, and each serve path locks exactly one registry at a time, so
-//! there is no lock-order cycle.
+//! and every lane stays bitwise identical to the scalar oracle. Victim
+//! groups are breaker-gated (Open/HalfOpen meshes are never stolen) and
+//! ranked by hotness × estimated group cost × queue age; see
+//! [`ShardWorker::try_steal`]. The thief serves the group against the
+//! victim's registry slice (the victim's `Arc<BatchSolver>` is cloned,
+//! not rebuilt), so per-mesh state — sessions, LRU accounting, dispatch
+//! counters — stays homed on one shard. The only compound lock hold is
+//! the steal scan's queue → health → registry order; every other path
+//! locks one of them at a time, so there is no lock-order cycle.
+//!
+//! Supervision (default-off): with a [`SupervisionShared`] enabled, the
+//! worker parks clones of each batch it is about to serve on its
+//! [`ShardHandle`] — the handle outlives the worker thread, so the
+//! router's supervisor can salvage the unanswered remainder of a crashed
+//! worker's batch, respawn the worker, and requeue or answer the
+//! casualties. Serving counters live on the handle for the same reason:
+//! a respawn must not reset the folded stats.
 //!
 //! Threading: shard workers do not solve on threads of their own — every
 //! assembly/solve they dispatch lands in the one global `TG_THREADS`
@@ -37,15 +47,52 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::mesh::Mesh;
-use crate::session::health::{HealthConfig, HealthRegistry, LaneOutcome};
+use crate::session::health::{BreakerState, HealthConfig, HealthRegistry, LaneOutcome};
 use crate::solver::SolverConfig;
 
 use super::api::{CoordinatorStats, SolveError, SolveRequest, SolveResponse, VarCoeffRequest};
 use super::batcher::BatchSolver;
 
-pub(super) type Reply = Sender<Result<SolveResponse>>;
+/// A request's answer channel plus the supervision bookkeeping that makes
+/// exactly-once answers provable across worker crashes. Without
+/// supervision every field but `tx` stays at its `new` default and
+/// [`Reply::send`] degenerates to a bare channel send.
+#[derive(Clone)]
+pub(super) struct Reply {
+    pub(super) tx: Sender<Result<SolveResponse>>,
+    /// Shared answered flag, present only while supervision has parked a
+    /// clone of this request: stored (Release) immediately before the
+    /// answer goes out so the supervisor's salvage pass (Acquire) never
+    /// requeues or re-answers an already-answered request.
+    pub(super) answered: Option<Arc<AtomicBool>>,
+    /// How many times this request has already been requeued after losing
+    /// its worker (checked against the supervision retry budget).
+    pub(super) attempts: u32,
+    /// Whether this request entered as part of its mesh's HalfOpen probe
+    /// group: salvage `cancel_probe`s the mesh for probe-tagged
+    /// casualties so a breaker cannot wedge in HalfOpen forever.
+    pub(super) probe: bool,
+}
 
-/// A queued request of either kind.
+impl Reply {
+    pub(super) fn new(tx: Sender<Result<SolveResponse>>) -> Reply {
+        Reply { tx, answered: None, attempts: 0, probe: false }
+    }
+
+    /// Answer the request, marking the shared answered flag (when parked)
+    /// BEFORE the send so a concurrent salvage pass observes it.
+    pub(super) fn send(&self, res: Result<SolveResponse>) {
+        if let Some(flag) = &self.answered {
+            flag.store(true, Ordering::Release);
+        }
+        let _ = self.tx.send(res);
+    }
+}
+
+/// A queued request of either kind. `Clone` exists for supervision
+/// parking: the worker parks a clone of its in-flight batch so the
+/// supervisor can requeue it if the worker dies mid-serve.
+#[derive(Clone)]
 pub(super) enum Req {
     Fixed(SolveRequest),
     Var(VarCoeffRequest),
@@ -104,16 +151,20 @@ pub(super) enum Msg {
 }
 
 /// Admission bookkeeping shared between the router and all shards. The
-/// per-shard queue depth lives on each [`ShardHandle`]; only the bound
-/// itself (and submit-time expiry, which never reaches a shard) is
-/// global: the bound applies to EACH shard's depth, so `num_shards = 1`
-/// keeps the exact single-queue semantics.
+/// bound is enforced against ONE global in-flight depth (`depth`), so
+/// `Overloaded` semantics are identical at any shard count; the per-shard
+/// depths on each [`ShardHandle`] remain observability (live `per_shard`
+/// samples and the per-shard high-water marks), not the admission gate.
 #[derive(Default)]
 pub(super) struct Admission {
-    /// Depth bound currently in force per shard (0 = unbounded, the
-    /// default). Adaptive shedding may hold this at a tightened fraction
+    /// Depth bound currently in force (0 = unbounded, the default).
+    /// Adaptive shedding may hold this at a tightened fraction
     /// of `base_max_queue` while sick traffic dominates.
     pub(super) max_queue: AtomicUsize,
+    /// Requests admitted (to ANY shard) but not yet drained — the single
+    /// depth the bound compares against. Submit adds, drain/steal
+    /// subtracts, supervision requeues re-add.
+    pub(super) depth: AtomicUsize,
     /// The caller-configured bound (`BatchServer::set_max_queue`) that
     /// the tightened bound is derived from and relaxes back to.
     pub(super) base_max_queue: AtomicUsize,
@@ -121,6 +172,46 @@ pub(super) struct Admission {
     /// answered `SolveError::Expired` synchronously, never enqueued.
     /// Folded into both `expired_requests` and `failed_requests`.
     pub(super) expired_at_submit: AtomicU64,
+}
+
+/// Supervision state shared between the router's supervisor thread and
+/// every shard worker. Counters are router-owned in the stats fold (the
+/// supervisor is the only writer of respawns/requeued/lost/wedged);
+/// `enabled` gates the workers' parking so the default path does no
+/// supervision work at all.
+pub(super) struct SupervisionShared {
+    /// Workers park in-flight clones and the supervisor thread runs.
+    pub(super) enabled: AtomicBool,
+    /// Per-request retry budget ([`super::api::SupervisionConfig`]).
+    pub(super) max_requeues: AtomicU64,
+    /// Set at the start of every shutdown path: the supervisor must stop
+    /// respawning (a worker exiting on `Msg::Shutdown` is not a crash).
+    pub(super) shutting_down: AtomicBool,
+    /// Workers respawned after dying.
+    pub(super) respawns: AtomicU64,
+    /// Salvaged requests requeued onto a live worker.
+    pub(super) requeued: AtomicU64,
+    /// Salvaged requests answered `WorkerLost` (budget exhausted).
+    pub(super) lost: AtomicU64,
+    /// Requests answered with a typed `Shutdown` at the drain deadline.
+    pub(super) shutdown_answered: AtomicU64,
+    /// Wedge episodes detected (stale heartbeat with work queued).
+    pub(super) wedged: AtomicU64,
+}
+
+impl SupervisionShared {
+    pub(super) fn new() -> SupervisionShared {
+        SupervisionShared {
+            enabled: AtomicBool::new(false),
+            max_requeues: AtomicU64::new(0),
+            shutting_down: AtomicBool::new(false),
+            respawns: AtomicU64::new(0),
+            requeued: AtomicU64::new(0),
+            lost: AtomicU64::new(0),
+            shutdown_answered: AtomicU64::new(0),
+            wedged: AtomicU64::new(0),
+        }
+    }
 }
 
 /// Health state shared between the router (synchronous breaker sheds)
@@ -198,14 +289,37 @@ impl ShardQueue {
     pub(super) fn drain(&self) -> Vec<Msg> {
         self.lock().drain(..).collect()
     }
+
+    /// Pull every queued request out of the queue, leaving control
+    /// messages (Register/Stats/Shutdown) in place so a still-running
+    /// worker exits normally — the drain-deadline path of
+    /// `shutdown_within` answers the extracted requests `Shutdown`.
+    pub(super) fn extract_many(&self) -> Vec<(Req, Reply)> {
+        let mut q = self.lock();
+        let mut out = Vec::new();
+        for msg in q.iter_mut() {
+            if let Msg::Many(list) = msg {
+                out.append(list);
+            }
+        }
+        q.retain(|m| !matches!(m, Msg::Many(v) if v.is_empty()));
+        out
+    }
 }
 
 /// Shared per-shard state: the queue, live admission/steal counters read
 /// by `per_shard()` without a round-trip, and the shard's registry slice
 /// (behind a mutex so a thief can borrow a victim's built solvers).
+///
+/// Everything a respawned worker needs outlives the worker thread here:
+/// the registry (meshes + built states — the retained topology store),
+/// the monotone serving counters, and the supervision parking slot with
+/// the batch a dead worker was serving.
 pub(super) struct ShardHandle {
     pub(super) queue: ShardQueue,
-    /// Requests admitted to this shard but not yet drained.
+    /// Requests admitted to this shard but not yet drained. Observability
+    /// (live `per_shard` depths, high-water) — the admission BOUND is
+    /// enforced against the global [`Admission::depth`].
     pub(super) depth: AtomicUsize,
     /// High-water mark of `depth` since server start.
     pub(super) high_water: AtomicU64,
@@ -216,6 +330,25 @@ pub(super) struct ShardHandle {
     pub(super) shed: AtomicU64,
     /// Whole groups THIS shard stole from siblings.
     pub(super) stolen: AtomicU64,
+    /// Steal candidates this shard skipped because the group's mesh
+    /// breaker was Open or HalfOpen (the probe group must not migrate).
+    pub(super) steals_skipped: AtomicU64,
+    /// Liveness epoch: the worker bumps this once per loop iteration, so
+    /// a heartbeat that stops advancing while `depth > 0` marks a wedged
+    /// (live but stuck) worker to the supervisor.
+    pub(super) heartbeat: AtomicU64,
+    /// Worker serving counters, kept on the handle — not the worker —
+    /// so they survive a respawn (the folded stats stay monotone across
+    /// crashes; pinned by `crash_recovery.rs`).
+    pub(super) failed: AtomicU64,
+    pub(super) expired: AtomicU64,
+    pub(super) queued: AtomicU64,
+    pub(super) cycles: AtomicU64,
+    pub(super) groups: AtomicU64,
+    /// Supervision parking slot: clones of the batch the worker is
+    /// currently serving, sharing answered flags with the live replies.
+    /// Empty whenever no serve is in flight (or supervision is off).
+    inflight: Mutex<Vec<(Req, Reply)>>,
     registry: Mutex<Registry>,
 }
 
@@ -228,12 +361,27 @@ impl ShardHandle {
             rejected: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             stolen: AtomicU64::new(0),
+            steals_skipped: AtomicU64::new(0),
+            heartbeat: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            queued: AtomicU64::new(0),
+            cycles: AtomicU64::new(0),
+            groups: AtomicU64::new(0),
+            inflight: Mutex::new(Vec::new()),
             registry: Mutex::new(Registry::new(config, max_states)),
         }
     }
 
     pub(super) fn registry(&self) -> MutexGuard<'_, Registry> {
         self.registry.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Lock the parking slot, surviving the poison a crashed worker
+    /// leaves behind (the slot contents stay consistent: parking writes
+    /// it whole before any serve begins).
+    pub(super) fn inflight(&self) -> MutexGuard<'_, Vec<(Req, Reply)>> {
+        self.inflight.lock().unwrap_or_else(|e| e.into_inner())
     }
 }
 
@@ -366,6 +514,14 @@ impl Registry {
             }
             let config = self.config;
             let mesh = self.meshes.get(&mesh_id).expect("registration checked above");
+            // Deliberately OUTSIDE the catch_unwind: this failpoint models
+            // a registry build taking the whole worker down (the crash the
+            // supervision layer exists for), not a memoized failed build.
+            #[cfg(feature = "fault-inject")]
+            crate::util::faults::maybe_panic(
+                crate::util::faults::SESSION_BUILD_PANIC,
+                mesh_id as usize,
+            );
             let built =
                 catch_unwind(AssertUnwindSafe(|| Arc::new(BatchSolver::new(mesh, config))))
                     .map_err(|p| {
@@ -379,6 +535,17 @@ impl Registry {
         let entry = self.states.get_mut(&mesh_id).expect("slot just ensured");
         entry.last_used = tick;
         entry.state.as_ref().map(Arc::clone).map_err(|e| e.clone())
+    }
+
+    /// Estimated per-iteration solve cost (ms) for `mesh_id`, from the
+    /// per-rung EWMAs of its built session — `None` while the state is
+    /// unbuilt, failed, or not yet calibrated by served traffic. Read-only:
+    /// does not touch the LRU clock (a steal *scan* must not pin slots).
+    pub(super) fn cost_estimate(&self, mesh_id: u64) -> Option<f64> {
+        let entry = self.states.get(&mesh_id)?;
+        let solver = entry.state.as_ref().ok()?;
+        let ms = solver.session().cost_ms_per_iter();
+        (ms > 0.0).then_some(ms)
     }
 
     /// Fold this slice's registry counters into a (partial) stats value.
@@ -463,30 +630,21 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
 /// within a drain cycle; long enough that idle shards cost ~nothing.
 const STEAL_PARK: Duration = Duration::from_millis(1);
 
-/// The worker loop state of one shard.
+/// The worker loop state of one shard. The serving counters live on the
+/// shard's [`ShardHandle`] (not here) so a respawned worker continues
+/// them instead of resetting — the worker itself is disposable.
 pub(super) struct ShardWorker {
     pub(super) idx: usize,
     pub(super) shards: Arc<Vec<ShardHandle>>,
     pub(super) max_batch: usize,
     pub(super) steal: bool,
-    pub(super) failed: u64,
-    /// Requests answered with `SolveError::Expired` — deadline passed
-    /// while queued, answered without solving.
-    pub(super) expired: u64,
-    /// Requests drained, summed over drain cycles (the queue-depth
-    /// integral: `queued_requests / drain_cycles` is the mean drained
-    /// batch size under load).
-    pub(super) queued_requests: u64,
-    /// Non-empty drain cycles (own + stolen) completed.
-    pub(super) drain_cycles: u64,
-    /// `(mesh_id, kind)` groups formed across all drain cycles.
-    pub(super) dispatch_groups: u64,
     /// Stats queries seen in the current drain cycle — answered only
     /// AFTER the cycle's dispatch, so a snapshot reflects every request
     /// that was enqueued on THIS shard ahead of it (FIFO per shard).
     pub(super) stats_waiters: Vec<Sender<CoordinatorStats>>,
     pub(super) admission: Arc<Admission>,
     pub(super) health: Arc<HealthShared>,
+    pub(super) sup: Arc<SupervisionShared>,
 }
 
 enum Popped {
@@ -503,20 +661,17 @@ impl ShardWorker {
         steal: bool,
         admission: Arc<Admission>,
         health: Arc<HealthShared>,
+        sup: Arc<SupervisionShared>,
     ) -> ShardWorker {
         ShardWorker {
             idx,
             shards,
             max_batch,
             steal,
-            failed: 0,
-            expired: 0,
-            queued_requests: 0,
-            drain_cycles: 0,
-            dispatch_groups: 0,
             stats_waiters: Vec::new(),
             admission,
             health,
+            sup,
         }
     }
 
@@ -524,11 +679,48 @@ impl ShardWorker {
         &self.shards[self.idx]
     }
 
+    /// Park clones of the batch this worker is about to serve in the
+    /// handle's in-flight slot, wiring a fresh shared answered flag into
+    /// each live reply, so the supervisor can salvage exactly the
+    /// unanswered remainder if the worker dies mid-serve. A no-op while
+    /// supervision is disabled (the default path clones nothing).
+    fn park(&self, pending: &mut [(Req, Reply)]) {
+        if !self.sup.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let mut slot = self.my().inflight();
+        slot.clear();
+        slot.reserve(pending.len());
+        for (req, reply) in pending.iter_mut() {
+            let flag = Arc::new(AtomicBool::new(false));
+            reply.answered = Some(Arc::clone(&flag));
+            slot.push((
+                req.clone(),
+                Reply {
+                    tx: reply.tx.clone(),
+                    answered: Some(flag),
+                    attempts: reply.attempts,
+                    probe: reply.probe,
+                },
+            ));
+        }
+    }
+
+    /// Clear the parking slot after a serve completed: every parked
+    /// request has been answered, there is nothing left to salvage.
+    fn unpark(&self) {
+        if self.sup.enabled.load(Ordering::Relaxed) {
+            self.my().inflight().clear();
+        }
+    }
+
     /// The drain loop: block for the first message (or steal while
     /// idle), opportunistically drain more without blocking, dispatch.
     pub(super) fn run(mut self) {
         let mut pending: Vec<(Req, Reply)> = Vec::new();
         loop {
+            // Liveness epoch for the supervisor's wedge detection.
+            self.my().heartbeat.fetch_add(1, Ordering::Relaxed);
             let msg = match self.next_msg() {
                 Popped::Msg(m) => m,
                 Popped::ServedStolen => continue,
@@ -594,10 +786,26 @@ impl ShardWorker {
     }
 
     /// Scan sibling queues (rotating from the next index for fairness)
-    /// and extract the hottest still-queued `(mesh_id, kind)` group —
-    /// the WHOLE group, merged across queued bursts, exactly what the
-    /// victim would have regrouped in one drain cycle. Control messages
+    /// and extract the best still-queued `(mesh_id, kind)` group — the
+    /// WHOLE group, merged across queued bursts, exactly what the victim
+    /// would have regrouped in one drain cycle. Control messages
     /// (Register/Stats/Shutdown) are never touched or reordered.
+    ///
+    /// Candidates whose mesh breaker is Open (shedding belongs on the
+    /// home shard's drain) or HalfOpen (the queued group IS the probe and
+    /// must not migrate) are skipped and counted. The survivors are
+    /// ranked by hotness × estimated per-iteration cost (the victim
+    /// session's per-rung EWMAs; 1.0 while unbuilt or uncalibrated) ×
+    /// queue age (first-seen position — earlier ⇒ queued longer), strict
+    /// `>` so exact ties keep the first-seen candidate: deterministic,
+    /// and degrades to the old hottest-first rule when all groups are
+    /// equally aged and uncalibrated. Whichever group wins, answers stay
+    /// bitwise — ranking only reorders whole-group serving.
+    ///
+    /// Lock order: victim queue → health registry → victim registry. No
+    /// path acquires these in reverse (serving drops the registry guard
+    /// before touching any queue; health calls never take a queue), so
+    /// there is no cycle.
     fn try_steal(&self) -> Option<Stolen> {
         let n = self.shards.len();
         for off in 1..n {
@@ -616,17 +824,43 @@ impl ShardWorker {
                     }
                 }
             }
-            // Hottest group; first-seen wins ties (deterministic).
-            let mut best: Option<((u64, ReqKind), usize)> = None;
-            for &(key, c) in &counts {
-                let hotter = match best {
-                    Some((_, bc)) => c > bc,
-                    None => true,
+            // Breaker gate: drop Open/HalfOpen meshes from the candidates.
+            let gated: Vec<((u64, ReqKind), usize)> =
+                if self.health.enabled.load(Ordering::Relaxed) && !counts.is_empty() {
+                    let reg = self.health.lock();
+                    let mut keep = Vec::with_capacity(counts.len());
+                    for &(key, c) in &counts {
+                        let blocked = reg.snapshot(key.0).is_some_and(|s| {
+                            matches!(s.state, BreakerState::Open | BreakerState::HalfOpen)
+                        });
+                        if blocked {
+                            self.my().steals_skipped.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            keep.push((key, c));
+                        }
+                    }
+                    keep
+                } else {
+                    counts
                 };
-                if hotter {
-                    best = Some((key, c));
+            // Rank the survivors: count × cost estimate × age weight.
+            let best = {
+                let vreg = self.shards[v].registry();
+                let g = gated.len();
+                let mut best: Option<((u64, ReqKind), f64)> = None;
+                for (i, &(key, c)) in gated.iter().enumerate() {
+                    let est = vreg.cost_estimate(key.0).unwrap_or(1.0);
+                    let score = c as f64 * est * (g - i) as f64;
+                    let better = match best {
+                        Some((_, bs)) => score > bs,
+                        None => true,
+                    };
+                    if better {
+                        best = Some((key, score));
+                    }
                 }
-            }
+                best
+            };
             let Some(((mesh_id, kind), _)) = best else {
                 continue;
             };
@@ -647,6 +881,9 @@ impl ShardWorker {
             q.retain(|m| !matches!(m, Msg::Many(v) if v.is_empty()));
             drop(q);
             self.shards[v].depth.fetch_sub(items.len(), Ordering::Relaxed);
+            // The stolen items never pass the victim's dispatch, so the
+            // global admission depth is released here instead.
+            self.admission.depth.fetch_sub(items.len(), Ordering::Relaxed);
             return Some(Stolen { victim: v, mesh_id, kind, items });
         }
         None
@@ -655,14 +892,17 @@ impl ShardWorker {
     /// Serve a stolen group whole (in `max_batch`-sized chunks) against
     /// the VICTIM's registry slice — the stolen mesh's solver is cloned
     /// out of the victim's registry, never rebuilt on the thief.
-    fn serve_stolen(&mut self, s: Stolen) {
+    fn serve_stolen(&mut self, mut s: Stolen) {
         if s.items.is_empty() {
             return;
         }
+        // Park on the THIEF's slot: it is the thief that would die
+        // mid-serve; salvage routes the requests back by mesh home.
+        self.park(&mut s.items);
         self.my().stolen.fetch_add(1, Ordering::Relaxed);
-        self.drain_cycles += 1;
-        self.queued_requests += s.items.len() as u64;
-        self.dispatch_groups += 1;
+        self.my().cycles.fetch_add(1, Ordering::Relaxed);
+        self.my().queued.fetch_add(s.items.len() as u64, Ordering::Relaxed);
+        self.my().groups.fetch_add(1, Ordering::Relaxed);
         let singleton = s.items.len() == 1;
         match s.kind {
             ReqKind::Fixed => {
@@ -704,6 +944,7 @@ impl ShardWorker {
                 );
             }
         }
+        self.unpark();
         self.retune_admission();
     }
 
@@ -758,15 +999,16 @@ impl ShardWorker {
     }
 
     fn stats(&self) -> CoordinatorStats {
+        let h = self.my();
         let mut s = CoordinatorStats {
-            failed_requests: self.failed,
-            queued_requests: self.queued_requests,
-            drain_cycles: self.drain_cycles,
-            dispatch_groups: self.dispatch_groups,
-            expired_requests: self.expired,
+            failed_requests: h.failed.load(Ordering::Relaxed),
+            queued_requests: h.queued.load(Ordering::Relaxed),
+            drain_cycles: h.cycles.load(Ordering::Relaxed),
+            dispatch_groups: h.groups.load(Ordering::Relaxed),
+            expired_requests: h.expired.load(Ordering::Relaxed),
             ..CoordinatorStats::default()
         };
-        self.my().registry().stats_into(&mut s);
+        h.registry().stats_into(&mut s);
         s
     }
 
@@ -775,17 +1017,30 @@ impl ShardWorker {
     /// `max_batch`-sized chunks until all are drained: every group gets
     /// one chunk per round, so a large group cannot starve the others
     /// past its first chunk.
-    fn dispatch(&mut self, pending: Vec<(Req, Reply)>) {
+    fn dispatch(&mut self, mut pending: Vec<(Req, Reply)>) {
         #[cfg(feature = "fault-inject")]
         if let Some(ms) = crate::util::faults::stall_ms(crate::util::faults::SERVER_STALL) {
             std::thread::sleep(std::time::Duration::from_millis(ms));
         }
         self.my().depth.fetch_sub(pending.len(), Ordering::Relaxed);
+        self.admission.depth.fetch_sub(pending.len(), Ordering::Relaxed);
         if pending.is_empty() {
             return;
         }
-        self.drain_cycles += 1;
-        self.queued_requests += pending.len() as u64;
+        self.park(&mut pending);
+        // AFTER parking, so an injected crash leaves every request of the
+        // cycle salvageable — exactly what a real drain-loop panic does
+        // (parking precedes all fallible serving work).
+        #[cfg(feature = "fault-inject")]
+        if crate::util::faults::fire(
+            crate::util::faults::SHARD_PANIC,
+            self.idx,
+            self.my().cycles.load(Ordering::Relaxed) as usize,
+        ) {
+            panic!("fault-inject: shard.panic_drain fired on shard {}", self.idx);
+        }
+        self.my().cycles.fetch_add(1, Ordering::Relaxed);
+        self.my().queued.fetch_add(pending.len() as u64, Ordering::Relaxed);
         let mut fixed_items = Vec::new();
         let mut var_items = Vec::new();
         for (req, reply) in pending {
@@ -796,7 +1051,7 @@ impl ShardWorker {
         }
         let mut fixed = group_by_mesh(fixed_items, |r| r.mesh_id);
         let mut var = group_by_mesh(var_items, |r| r.mesh_id);
-        self.dispatch_groups += (fixed.len() + var.len()) as u64;
+        self.my().groups.fetch_add((fixed.len() + var.len()) as u64, Ordering::Relaxed);
         loop {
             let served_fixed = self.serve_round(
                 &mut fixed,
@@ -814,6 +1069,7 @@ impl ShardWorker {
                 break;
             }
         }
+        self.unpark();
         self.retune_admission();
     }
 
@@ -862,7 +1118,9 @@ impl ShardWorker {
                     SolveError::Invalid { .. }
                     | SolveError::Expired { .. }
                     | SolveError::Overloaded { .. }
-                    | SolveError::Unhealthy { .. },
+                    | SolveError::Unhealthy { .. }
+                    | SolveError::WorkerLost { .. }
+                    | SolveError::Shutdown { .. },
                 ) => return,
                 // No typed error: a recovered panic or a failed state
                 // build — the mesh is not serving, count it against its
@@ -937,7 +1195,7 @@ impl ShardWorker {
                         mesh_id,
                         retry_after_ms,
                     };
-                    let _ = reply.send(Err(err.into()));
+                    reply.send(Err(err.into()));
                 }
                 return;
             }
@@ -960,7 +1218,7 @@ impl ShardWorker {
                     if registered {
                         self.observe_health(mesh_id, &res);
                     }
-                    let _ = reply.send(res);
+                    reply.send(res);
                 }
             }
             (Ok(solver), _) => {
@@ -988,14 +1246,105 @@ impl ShardWorker {
                             e.downcast_ref::<SolveError>(),
                             Some(SolveError::Expired { .. })
                         ) {
-                            self.expired += 1;
+                            self.my().expired.fetch_add(1, Ordering::Relaxed);
                         }
                     }
                     self.observe_health(mesh_id, &res);
-                    let _ = reply.send(res);
+                    reply.send(res);
                 }
             }
         }
-        self.failed += failed;
+        self.my().failed.fetch_add(failed, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn test_worker(shards: Arc<Vec<ShardHandle>>) -> ShardWorker {
+        ShardWorker::new(
+            0,
+            shards,
+            8,
+            true,
+            Arc::new(Admission::default()),
+            Arc::new(HealthShared::new()),
+            Arc::new(SupervisionShared::new()),
+        )
+    }
+
+    fn queued(mesh_id: u64, n: usize) -> Vec<(Req, Reply)> {
+        (0..n)
+            .map(|i| {
+                let (tx, _rx) = mpsc::channel();
+                // The receiver is dropped: these requests are only ever
+                // scanned/extracted, never answered.
+                std::mem::forget(_rx);
+                (
+                    Req::Fixed(SolveRequest::on_mesh(i as u64, mesh_id, vec![0.0])),
+                    Reply::new(tx),
+                )
+            })
+            .collect()
+    }
+
+    /// The steal ranking weighs queue age (first-seen position) against
+    /// hotness: an older group beats a slightly hotter younger one, where
+    /// the pre-ranking rule (hottest-first) picked the younger.
+    #[test]
+    fn steal_ranking_weighs_age_against_hotness() {
+        let shards = Arc::new(vec![
+            ShardHandle::new(SolverConfig::default(), 0),
+            ShardHandle::new(SolverConfig::default(), 0),
+        ]);
+        let w = test_worker(Arc::clone(&shards));
+        w.admission.depth.store(100, Ordering::Relaxed);
+        shards[1].depth.store(5, Ordering::Relaxed);
+        // Mesh 10 queued first (older), 2 requests; mesh 20 second, 3
+        // requests. Uncalibrated costs (no built states) default to 1.0,
+        // so scores are 2·1·2 = 4 (mesh 10) vs 3·1·1 = 3 (mesh 20):
+        // age wins. Hottest-first would have stolen mesh 20.
+        let mut burst = queued(10, 2);
+        burst.extend(queued(20, 3));
+        shards[1].queue.push(Msg::Many(burst)).unwrap();
+        let stolen = w.try_steal().expect("a queued group must be stolen");
+        assert_eq!(stolen.mesh_id, 10, "older group must win the ranking");
+        assert_eq!(stolen.items.len(), 2, "the WHOLE group, never a split");
+        assert_eq!(stolen.victim, 1);
+        assert_eq!(w.admission.depth.load(Ordering::Relaxed), 98);
+        assert_eq!(shards[1].depth.load(Ordering::Relaxed), 3);
+    }
+
+    /// Calibrated per-rung cost estimates dominate the ranking: a colder
+    /// but much more expensive group is stolen first (moving it relieves
+    /// the victim of more work per request).
+    #[test]
+    fn steal_ranking_weighs_estimated_group_cost() {
+        let mesh = crate::mesh::structured::unit_square_tri(3);
+        let shards = Arc::new(vec![
+            ShardHandle::new(SolverConfig::default(), 0),
+            ShardHandle::new(SolverConfig::default(), 0),
+        ]);
+        let w = test_worker(Arc::clone(&shards));
+        w.admission.depth.store(100, Ordering::Relaxed);
+        shards[1].depth.store(5, Ordering::Relaxed);
+        {
+            let mut reg = shards[1].registry();
+            reg.register(10, mesh.clone());
+            reg.register(20, mesh);
+            // Build both states and calibrate: mesh 20 is 10× the cost.
+            reg.solver_for(10).unwrap().session().set_cost_ms_per_iter(1.0);
+            reg.solver_for(20).unwrap().session().set_cost_ms_per_iter(10.0);
+        }
+        // Mesh 10: older AND hotter (3 vs 2), scores 3·1·2 = 6 — but
+        // mesh 20's cost estimate lifts it to 2·10·1 = 20.
+        let mut burst = queued(10, 3);
+        burst.extend(queued(20, 2));
+        shards[1].queue.push(Msg::Many(burst)).unwrap();
+        let stolen = w.try_steal().expect("a queued group must be stolen");
+        assert_eq!(stolen.mesh_id, 20, "cost estimate must dominate");
+        assert_eq!(stolen.items.len(), 2);
     }
 }

@@ -489,8 +489,12 @@ impl HealthRegistry {
         mh.shed_at_drain(self.clock.now_ms(), &self.cfg)
     }
 
-    /// An admitted probe group was dropped before serving (e.g. the
-    /// whole burst was overload-rejected): let the next admission probe.
+    /// An admitted probe group was dropped before serving — the whole
+    /// burst was overload-rejected, or the shard worker holding the probe
+    /// crashed and the salvaged probe requests were answered instead of
+    /// requeued: let the next admission probe. Without this a breaker
+    /// whose probe died with its worker would wedge in HalfOpen until
+    /// the probe timeout. No-op for untracked meshes.
     pub fn cancel_probe(&mut self, mesh_id: u64) {
         if let Some(mh) = self.meshes.get_mut(&mesh_id) {
             mh.cancel_probe();

@@ -29,6 +29,14 @@
 //! * [`AMG_REFILL_POISON`] — corrupt one smoother entry during an AMG
 //!   hierarchy refill (the V-cycle's non-finite guard must degrade
 //!   gracefully; a clean refill heals it).
+//! * [`SHARD_PANIC`] — panic a shard worker's drain cycle *after* it has
+//!   parked its in-flight batch (lane = shard index, iter = drain-cycle
+//!   count): the panic escapes the per-chunk `catch_unwind` and kills the
+//!   worker thread, the crash driver for the supervision layer.
+//! * [`SESSION_BUILD_PANIC`] — panic inside the registry's per-mesh state
+//!   build (keyed by mesh id via [`maybe_panic`]), *outside* the build
+//!   memoization guard, so the panic kills the worker rather than being
+//!   recorded as a failed build.
 //!
 //! The registry is process-global; tests that arm faults serialize
 //! themselves with [`exclusive`] and disarm via [`reset`] (or rely on
@@ -55,6 +63,11 @@ pub const SERVER_STALL: &str = "server.stall_drain";
 pub const CONDENSE_POISON: &str = "condense.poison_refill";
 /// Failpoint: corrupt one smoother entry during an AMG hierarchy refill.
 pub const AMG_REFILL_POISON: &str = "amg.poison_refill";
+/// Failpoint: panic a shard worker mid-drain, after parking in-flight
+/// requests (lane = shard index, iter = drain-cycle count).
+pub const SHARD_PANIC: &str = "shard.panic_drain";
+/// Failpoint: panic during a registry mesh-state build (keyed by mesh id).
+pub const SESSION_BUILD_PANIC: &str = "session.build_panic";
 
 /// When an armed failpoint fires. Every field is a filter; `None`/`0`
 /// means "any". Defaults (via [`Fault::default`]) fire on every query.
@@ -180,8 +193,9 @@ pub fn stall_ms(site: &str) -> Option<u64> {
 }
 
 /// Panic-style query: panics with a recognizable message when the site
-/// fires for `work` (used by the assembly tile loop; the panic unwinds to
-/// the coordinator's per-chunk `catch_unwind`).
+/// fires for `work` (the assembly tile loop unwinds to the coordinator's
+/// per-chunk `catch_unwind`; [`SESSION_BUILD_PANIC`] deliberately escapes
+/// it and kills the shard worker).
 pub fn maybe_panic(site: &str, work: usize) {
     if fire(site, work, work) {
         panic!("fault-inject: {site} fired at work item {work}");

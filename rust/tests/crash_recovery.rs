@@ -1,0 +1,383 @@
+//! Crash-recovery integration suite for the supervision layer: worker
+//! resurrection with salvaged in-flight batches (requeue within the
+//! retry budget, typed `WorkerLost` beyond it), the exactly-once answer
+//! guarantee across a shard crash, global admission parity across shard
+//! counts, deadline-bounded shutdown, and the default-off pin (no
+//! supervision config → serving bitwise identical to the unsupervised
+//! server).
+//!
+//! Crash drivers are the deterministic `SHARD_PANIC` (keyed by shard
+//! index and drain cycle) and `SESSION_BUILD_PANIC` (keyed by mesh id)
+//! failpoints under the `fault-inject` feature, so every "crash" lands
+//! at a chosen instruction boundary. The suite is wall-time independent:
+//! clients block on `recv()`, and the supervisor's poll period only
+//! bounds recovery latency, never correctness. CI crosses the suite over
+//! `TG_SHARDS={1,4} × TG_THREADS={1,4}`.
+
+use tensor_galerkin::coordinator::{BatchServer, BatchSolver, ShardConfig, SolveError, SolveRequest};
+#[cfg(feature = "fault-inject")]
+use tensor_galerkin::coordinator::{SupervisionConfig, DEFAULT_MESH};
+use tensor_galerkin::mesh::structured::unit_square_tri;
+use tensor_galerkin::solver::SolverConfig;
+use tensor_galerkin::util::rng::Rng;
+
+fn load(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+}
+
+/// Serialize against the global fault registry: a concurrently armed
+/// failpoint in another test of this binary must never leak into a run.
+#[cfg(feature = "fault-inject")]
+fn fault_guard() -> std::sync::MutexGuard<'static, ()> {
+    let g = tensor_galerkin::util::faults::exclusive();
+    tensor_galerkin::util::faults::reset();
+    g
+}
+
+/// A supervised single-mesh server over [`DEFAULT_MESH`] at the
+/// environment's shard count (stealing off, so the crashed group cannot
+/// migrate mid-test), plus its bitwise oracle and the DOF count.
+#[cfg(feature = "fault-inject")]
+fn supervised_server(sup: SupervisionConfig) -> (BatchServer, BatchSolver, usize) {
+    let mesh = unit_square_tri(6);
+    let oracle = BatchSolver::new(&mesh, SolverConfig::default());
+    let shards = ShardConfig { num_shards: ShardConfig::from_env().num_shards, steal: false };
+    let server = BatchServer::start_sharded(
+        vec![(DEFAULT_MESH, mesh)],
+        SolverConfig::default(),
+        8,
+        0,
+        shards,
+    );
+    server.set_supervision_config(sup);
+    let n = oracle.n_dofs();
+    (server, oracle, n)
+}
+
+/// Acceptance (a): a worker killed mid-drain while holding a whole burst
+/// loses nothing — the supervisor respawns it and requeues the salvaged
+/// batch, every request is answered exactly once, and the answers are
+/// bitwise identical to an uncrashed oracle. The registry (and its built
+/// state) survives the worker: no rebuild.
+#[cfg(feature = "fault-inject")]
+#[test]
+fn crashed_shard_requeues_and_answers_exactly_once_bitwise() {
+    use tensor_galerkin::util::faults::{self, Fault};
+    let _g = fault_guard();
+    let (server, oracle, n) = supervised_server(SupervisionConfig::supervised());
+
+    // Warm-up builds the mesh state and retires a clean drain cycle
+    // BEFORE the failpoint is armed.
+    server.submit(SolveRequest::new(100, load(n, 1))).recv().unwrap().expect("warm-up");
+
+    let home = server.shard_of(DEFAULT_MESH);
+    faults::arm(faults::SHARD_PANIC, Fault::always().on_lanes(&[home]).hits(1));
+
+    let reqs: Vec<_> = (0..5u64).map(|i| SolveRequest::new(i, load(n, 10 + i))).collect();
+    let rxs = server.submit_many(reqs.clone());
+    for (rx, req) in rxs.iter().zip(&reqs) {
+        let resp = rx
+            .recv()
+            .expect("every channel must be answered")
+            .expect("requeued request must be served");
+        let want = oracle.solve_one(req).unwrap();
+        assert_eq!(resp.u, want.u, "request {} drifted across the crash", req.id);
+        assert_eq!(resp.iterations, want.iterations, "request {}", req.id);
+        // Exactly once: nothing else may ever arrive on this channel.
+        assert!(rx.try_recv().is_err(), "request {} answered twice", req.id);
+    }
+    faults::reset();
+
+    let stats = server.stats().expect("respawned worker must answer stats");
+    assert_eq!(stats.worker_respawns, 1, "{stats:?}");
+    assert_eq!(stats.requeued_requests, 5, "{stats:?}");
+    assert_eq!(stats.lost_requests, 0, "{stats:?}");
+    assert_eq!(stats.failed_requests, 0, "a crash is not a request failure: {stats:?}");
+    assert_eq!(stats.meshes_built, 1, "registry survives the worker: {stats:?}");
+    assert_eq!(stats.state_rebuilds, 0, "built state is retained, not rebuilt: {stats:?}");
+}
+
+/// An exhausted retry budget (`max_requeues: 0`) answers every salvaged
+/// request with a typed retryable [`SolveError::WorkerLost`] naming the
+/// dead shard — and acceptance (b): the respawned worker then serves
+/// fresh traffic bitwise identically to a never-crashed server.
+#[cfg(feature = "fault-inject")]
+#[test]
+fn exhausted_budget_answers_worker_lost_and_respawn_serves_bitwise() {
+    use tensor_galerkin::util::faults::{self, Fault};
+    let _g = fault_guard();
+    let sup = SupervisionConfig { max_requeues: 0, ..SupervisionConfig::supervised() };
+    let (server, oracle, n) = supervised_server(sup);
+    server.submit(SolveRequest::new(100, load(n, 2))).recv().unwrap().expect("warm-up");
+
+    let home = server.shard_of(DEFAULT_MESH);
+    faults::arm(faults::SHARD_PANIC, Fault::always().on_lanes(&[home]).hits(1));
+    let reqs: Vec<_> = (0..3u64).map(|i| SolveRequest::new(i, load(n, 20 + i))).collect();
+    let rxs = server.submit_many(reqs);
+    for (rx, id) in rxs.iter().zip(0u64..) {
+        let err = rx.recv().unwrap().expect_err("zero budget must answer WorkerLost");
+        match err.downcast_ref::<SolveError>() {
+            Some(SolveError::WorkerLost { id: got, shard, retryable }) => {
+                assert_eq!(*got, id);
+                assert_eq!(*shard, home, "the error names the dead shard");
+                assert!(*retryable, "the input was never at fault");
+            }
+            other => panic!("want typed WorkerLost, got {other:?}"),
+        }
+        assert!(rx.try_recv().is_err(), "request {id} answered twice");
+    }
+    faults::reset();
+
+    let stats = server.stats().expect("respawned worker");
+    assert_eq!(stats.worker_respawns, 1, "{stats:?}");
+    assert_eq!(stats.lost_requests, 3, "{stats:?}");
+    assert_eq!(stats.requeued_requests, 0, "{stats:?}");
+
+    // (b) Fresh traffic on the respawned worker is bitwise the oracle.
+    let reqs: Vec<_> = (10..14u64).map(|i| SolveRequest::new(i, load(n, 30 + i))).collect();
+    let outs = server.solve_all(reqs.clone()).expect("respawned worker serves");
+    for (resp, req) in outs.iter().zip(&reqs) {
+        let want = oracle.solve_one(req).unwrap();
+        assert_eq!(resp.u, want.u, "post-respawn request {} drifted", req.id);
+        assert_eq!(resp.iterations, want.iterations);
+    }
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.failed_requests, 0, "{stats:?}");
+}
+
+/// A registry state build blowing up ([`SESSION_BUILD_PANIC`] escapes the
+/// per-chunk isolation by design) takes the whole worker down; the
+/// supervisor respawns it, the requeued request rebuilds the state on the
+/// replacement and is served bitwise.
+#[cfg(feature = "fault-inject")]
+#[test]
+fn state_build_panic_kills_worker_and_requeue_rebuilds() {
+    use tensor_galerkin::util::faults::{self, Fault};
+    let _g = fault_guard();
+    let (server, oracle, n) = supervised_server(SupervisionConfig::supervised());
+
+    // No warm-up: the first request must trigger the (panicking) build.
+    faults::arm(
+        faults::SESSION_BUILD_PANIC,
+        Fault::always().on_lanes(&[DEFAULT_MESH as usize]).hits(1),
+    );
+    let req = SolveRequest::new(7, load(n, 21));
+    let resp = server
+        .submit(req.clone())
+        .recv()
+        .unwrap()
+        .expect("requeued request must be served after the build crash");
+    faults::reset();
+    let want = oracle.solve_one(&req).unwrap();
+    assert_eq!(resp.u, want.u, "answer drifted across the build crash");
+
+    let stats = server.stats().expect("respawned worker");
+    assert_eq!(stats.worker_respawns, 1, "{stats:?}");
+    assert_eq!(stats.requeued_requests, 1, "{stats:?}");
+    assert_eq!(stats.meshes_built, 1, "the retry built the state: {stats:?}");
+    assert_eq!(stats.failed_requests, 0, "{stats:?}");
+}
+
+/// Folded stats stay monotone across a respawn: the serving counters and
+/// the registry live on the shard handle, not the worker thread, so a
+/// crash resets nothing — the crashed cycle is simply never counted, the
+/// requeued serve is counted once, and the high-water mark stays a max.
+#[cfg(feature = "fault-inject")]
+#[test]
+fn stats_fold_monotone_across_respawn() {
+    use tensor_galerkin::util::faults::{self, Fault};
+    let _g = fault_guard();
+    let (server, _oracle, n) = supervised_server(SupervisionConfig::supervised());
+
+    // Base traffic: one 3-burst (high-water 3) plus two singles.
+    let burst: Vec<_> = (0..3u64).map(|i| SolveRequest::new(i, load(n, 50 + i))).collect();
+    server.solve_all(burst).expect("base burst");
+    for i in 3..5u64 {
+        server.submit(SolveRequest::new(i, load(n, 50 + i))).recv().unwrap().expect("single");
+    }
+    let base = server.stats().expect("worker alive");
+    assert_eq!(base.queued_requests, 5, "{base:?}");
+    assert_eq!(base.drain_cycles, 3, "{base:?}");
+    assert_eq!(base.queue_high_water, 3, "{base:?}");
+
+    let home = server.shard_of(DEFAULT_MESH);
+    faults::arm(faults::SHARD_PANIC, Fault::always().on_lanes(&[home]).hits(1));
+    let rxs = server.submit_many((10..12u64).map(|i| SolveRequest::new(i, load(n, i))).collect());
+    for rx in &rxs {
+        rx.recv().unwrap().expect("requeued request served");
+    }
+    faults::reset();
+
+    let after = server.stats().expect("respawned worker");
+    assert_eq!(after.worker_respawns, 1, "{after:?}");
+    assert_eq!(after.requeued_requests, 2, "{after:?}");
+    // The crashed cycle died before its counters: no double counting.
+    assert_eq!(after.queued_requests, base.queued_requests + 2, "{after:?}");
+    assert_eq!(after.drain_cycles, base.drain_cycles + 1, "{after:?}");
+    assert_eq!(after.dispatch_groups, base.dispatch_groups + 1, "{after:?}");
+    assert_eq!(after.batched_solves, base.batched_solves + 1, "{after:?}");
+    assert_eq!(after.scalar_solves, base.scalar_solves, "{after:?}");
+    // A depth, not a flow: the respawn must not reset the max.
+    assert_eq!(after.queue_high_water, 3, "{after:?}");
+    assert_eq!(after.meshes_built, 1, "{after:?}");
+    assert_eq!(after.state_rebuilds, 0, "{after:?}");
+    assert_eq!(after.failed_requests, 0, "{after:?}");
+}
+
+/// [`BatchServer::shutdown_within`]: a request already out of the queue
+/// finishes its dispatch and answers normally, while the remainder still
+/// queued at the drain deadline is answered with a typed
+/// [`SolveError::Shutdown`] instead of a dropped channel — no client
+/// hangs, nothing is answered twice.
+#[cfg(feature = "fault-inject")]
+#[test]
+fn shutdown_deadline_answers_queued_remainder_typed() {
+    use tensor_galerkin::util::faults::{self, Fault};
+    let _g = fault_guard();
+    let mesh = unit_square_tri(6);
+    let n = mesh.n_nodes();
+    let mut server = BatchServer::start_sharded(
+        vec![(DEFAULT_MESH, mesh)],
+        SolverConfig::default(),
+        8,
+        0,
+        ShardConfig::single(),
+    );
+    server.submit(SolveRequest::new(0, load(n, 3))).recv().unwrap().expect("warm-up");
+
+    // Stall the worker's next dispatch past the drain deadline, then
+    // pile a burst up behind it.
+    faults::arm(faults::SERVER_STALL, Fault::always().delay(300).hits(1));
+    let stalled_rx = server.submit(SolveRequest::new(1, load(n, 4)));
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    let rxs = server.submit_many((10..14u64).map(|i| SolveRequest::new(i, load(n, i))).collect());
+
+    server.shutdown_within(50);
+    faults::reset();
+
+    let resp = stalled_rx.recv().unwrap().expect("in-dispatch request is still served");
+    assert_eq!(resp.id, 1);
+    assert!(stalled_rx.try_recv().is_err(), "request 1 answered twice");
+    for (rx, id) in rxs.iter().zip(10u64..) {
+        let err = rx.recv().unwrap().expect_err("queued remainder must be refused");
+        match err.downcast_ref::<SolveError>() {
+            Some(SolveError::Shutdown { id: got }) => assert_eq!(*got, id),
+            other => panic!("want typed Shutdown, got {other:?}"),
+        }
+        assert!(rx.try_recv().is_err(), "request {id} answered twice");
+    }
+}
+
+/// Acceptance (c): `Overloaded` is decided against ONE global in-flight
+/// depth, all-or-nothing per burst, so the same multi-mesh burst against
+/// the same bound is rejected identically at 1 and 4 shards — even
+/// though the per-shard slices alone would each fit the bound.
+#[test]
+fn overloaded_rejections_identical_across_shard_counts() {
+    #[cfg(feature = "fault-inject")]
+    let _g = fault_guard();
+    let (m_a, m_b) = (unit_square_tri(6), unit_square_tri(5));
+    const A: u64 = 6;
+    const B: u64 = 1;
+    let mut rejected = Vec::new();
+    for shards in [1usize, 4] {
+        let server = BatchServer::start_sharded(
+            vec![(A, m_a.clone()), (B, m_b.clone())],
+            SolverConfig::default(),
+            8,
+            0,
+            ShardConfig { num_shards: shards, steal: false },
+        );
+        if shards == 4 {
+            assert_ne!(server.shard_of(A), server.shard_of(B), "meshes must spread over shards");
+        }
+        server.set_max_queue(6);
+
+        // 4 + 4 requests across the two meshes: each per-shard slice fits
+        // the bound, the global depth (8 > 6) does not.
+        let reqs: Vec<_> = (0..8u64)
+            .map(|i| {
+                let (m, mid) = if i % 2 == 0 { (&m_a, A) } else { (&m_b, B) };
+                SolveRequest::on_mesh(i, mid, load(m.n_nodes(), 30 + i))
+            })
+            .collect();
+        let outs: Vec<_> =
+            server.submit_many(reqs).into_iter().map(|rx| rx.recv().unwrap()).collect();
+        for (i, res) in outs.iter().enumerate() {
+            let err = res.as_ref().expect_err("the whole burst must be rejected");
+            match err.downcast_ref::<SolveError>() {
+                Some(SolveError::Overloaded { id, queue_depth: 0, max_queue: 6 }) => {
+                    assert_eq!(*id, i as u64);
+                }
+                other => panic!("want Overloaded against the idle global depth, got {other:?}"),
+            }
+        }
+        let stats = server.stats().expect("workers alive");
+        assert_eq!(stats.rejected_requests, 8, "at {shards} shard(s): {stats:?}");
+        assert_eq!(stats.queued_requests, 0, "nothing reached a worker: {stats:?}");
+        rejected.push(stats.rejected_requests);
+
+        // A burst that fits the global bound is admitted whole.
+        let ok: Vec<_> = (20..26u64)
+            .map(|i| {
+                let (m, mid) = if i % 2 == 0 { (&m_a, A) } else { (&m_b, B) };
+                SolveRequest::on_mesh(i, mid, load(m.n_nodes(), i))
+            })
+            .collect();
+        let served = server.solve_all(ok).expect("a 6-burst fits the bound of 6");
+        assert_eq!(served.len(), 6);
+    }
+    assert_eq!(rejected[0], rejected[1], "Overloaded semantics must be shard-count independent");
+}
+
+/// Acceptance (d): with NO supervision config ever set, the serving path
+/// is bitwise identical to the unsupervised server — same answers as the
+/// standalone oracles, the same pinned dispatch counters as the
+/// pre-supervision server, and every supervision counter identically
+/// zero (no supervisor thread, no parking, no respawns).
+#[test]
+fn no_supervision_config_is_bitwise_unsupervised() {
+    #[cfg(feature = "fault-inject")]
+    let _g = fault_guard();
+    let (m_a, m_b) = (unit_square_tri(6), unit_square_tri(5));
+    const A: u64 = 1;
+    const B: u64 = 2;
+    let cfg = SolverConfig::default();
+    let (oracle_a, oracle_b) = (BatchSolver::new(&m_a, cfg), BatchSolver::new(&m_b, cfg));
+    let server =
+        BatchServer::start_sharded(vec![(A, m_a), (B, m_b)], cfg, 32, 0, ShardConfig::single());
+
+    for round in 0..2u64 {
+        let reqs: Vec<_> = (0..6u64)
+            .map(|i| {
+                let (mid, n) = if i < 3 { (A, oracle_a.n_dofs()) } else { (B, oracle_b.n_dofs()) };
+                SolveRequest::on_mesh(round * 10 + i, mid, load(n, 60 + round * 10 + i))
+            })
+            .collect();
+        let outs = server.solve_all(reqs.clone()).expect("clean traffic");
+        for (resp, req) in outs.iter().zip(&reqs) {
+            let oracle = if req.mesh_id == A { &oracle_a } else { &oracle_b };
+            let want = oracle.solve_one(req).unwrap();
+            assert_eq!(resp.u, want.u, "request {} drifted without supervision", req.id);
+            assert_eq!(resp.iterations, want.iterations);
+        }
+    }
+
+    let stats = server.stats().expect("worker alive");
+    assert_eq!(stats.meshes_built, 2, "{stats:?}");
+    assert_eq!(stats.batched_solves, 4, "{stats:?}");
+    assert_eq!(stats.scalar_solves, 0, "{stats:?}");
+    assert_eq!(stats.queued_requests, 12, "{stats:?}");
+    assert_eq!(stats.drain_cycles, 2, "{stats:?}");
+    assert_eq!(stats.dispatch_groups, 4, "{stats:?}");
+    assert_eq!(stats.queue_high_water, 6, "{stats:?}");
+    assert_eq!(stats.failed_requests, 0, "{stats:?}");
+    assert_eq!(stats.stolen_groups, 0, "{stats:?}");
+    assert_eq!(stats.steals_skipped, 0, "{stats:?}");
+    assert_eq!(stats.worker_respawns, 0, "no supervisor ever ran: {stats:?}");
+    assert_eq!(stats.requeued_requests, 0, "{stats:?}");
+    assert_eq!(stats.lost_requests, 0, "{stats:?}");
+    assert_eq!(stats.shutdown_answered, 0, "{stats:?}");
+    assert_eq!(stats.wedged_detections, 0, "{stats:?}");
+}

@@ -485,6 +485,81 @@ fn open_breaker_sheds_queued_stragglers_at_drain() {
     assert_eq!(server.health(DEFAULT_MESH).unwrap().state, BreakerState::Closed);
 }
 
+/// Supervision × breaker interaction: a HalfOpen probe that dies with a
+/// crashed shard worker must FREE the probe slot (`cancel_probe` runs
+/// when the salvaged probe is answered instead of requeued), so the next
+/// admission probes afresh instead of the breaker wedging in HalfOpen
+/// until the probe timeout.
+#[cfg(feature = "fault-inject")]
+#[test]
+fn probe_lost_to_a_crashed_shard_frees_the_probe_slot() {
+    use tensor_galerkin::coordinator::{ShardConfig, SupervisionConfig};
+    use tensor_galerkin::util::faults::{self, Fault};
+    let _g = fault_guard();
+    let mesh = unit_square_tri(8);
+    let n = mesh.n_nodes();
+    let server = BatchServer::start_sharded(
+        vec![(DEFAULT_MESH, mesh)],
+        starved(),
+        8,
+        0,
+        ShardConfig::single(),
+    );
+    server.set_health_config(breaker_cfg());
+    // Zero retry budget: a crashed worker's in-flight requests are
+    // answered `WorkerLost` instead of requeued — the probe among them
+    // must release its slot on the way out.
+    server.set_supervision_config(SupervisionConfig {
+        max_requeues: 0,
+        ..SupervisionConfig::supervised()
+    });
+
+    // Two starved failures trip the breaker Open.
+    for id in 0..2u64 {
+        let err = server
+            .submit(SolveRequest::new(id, load(n, 20 + id)))
+            .recv()
+            .unwrap()
+            .unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<SolveError>(), Some(SolveError::Solver { .. })),
+            "{err:#}"
+        );
+    }
+    assert_eq!(server.health(DEFAULT_MESH).unwrap().state, BreakerState::Open);
+
+    // After the open window the next request is admitted as THE probe —
+    // and its worker dies holding it.
+    server.advance_health_clock(100);
+    faults::arm(faults::SHARD_PANIC, Fault::always().on_lanes(&[0]).hits(1));
+    let err = server.submit(SolveRequest::new(10, vec![0.0; n])).recv().unwrap().unwrap_err();
+    faults::reset();
+    assert!(
+        matches!(
+            err.downcast_ref::<SolveError>(),
+            Some(SolveError::WorkerLost { retryable: true, .. })
+        ),
+        "the probe dies with its worker: {err:#}"
+    );
+
+    // The lost probe released its slot: WITHOUT advancing the clock any
+    // further (the probe timeout is nowhere near), the next request is
+    // admitted as a fresh probe on the respawned worker and closes the
+    // breaker, instead of being shed by a wedged HalfOpen.
+    let resp = server.submit(SolveRequest::new(11, vec![0.0; n])).recv().unwrap();
+    resp.expect("fresh probe must be admitted and served");
+    assert_eq!(server.health(DEFAULT_MESH).unwrap().state, BreakerState::Closed);
+
+    let stats = server.stats().expect("respawned worker answers stats");
+    assert_eq!(stats.worker_respawns, 1, "{stats:?}");
+    assert_eq!(stats.lost_requests, 1, "{stats:?}");
+    assert_eq!(stats.breaker_opens, 1, "{stats:?}");
+    assert_eq!(stats.breaker_half_opens, 1, "one Open → HalfOpen transition: {stats:?}");
+    assert_eq!(stats.breaker_closes, 1, "{stats:?}");
+    assert_eq!(stats.shed_requests, 0, "the freed slot means nothing is shed: {stats:?}");
+    assert_eq!(stats.failed_requests, 2, "a crash is not a request failure: {stats:?}");
+}
+
 /// A deadline already passed at submission is answered synchronously:
 /// counted as expired AND failed, never drained, and — under a one-slot
 /// bound — not occupying the slot a live request needs.
